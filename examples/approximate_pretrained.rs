@@ -1,0 +1,76 @@
+//! Table-4-style demo: pretrain a classifier with FULL attention, then
+//! serve it with clustered-25 / i-clustered-25 attention *without any
+//! retraining* — the checkpoint transfers because all variants share the
+//! flat parameter layout.
+//!
+//!     cargo run --release --example approximate_pretrained -- [task] [steps]
+//!
+//! task ∈ {sst2, mrpc, qnli, rte, squad}
+
+use anyhow::Result;
+use clustered_transformers::benchlib::Table;
+use clustered_transformers::config::{find_repo_root, init_logging,
+                                     RunConfig};
+use clustered_transformers::coordinator::{trainer, DataFeed, TrainOptions};
+use clustered_transformers::data::Split;
+use clustered_transformers::runtime::checkpoint::Checkpoint;
+use clustered_transformers::runtime::Runtime;
+
+fn main() -> Result<()> {
+    init_logging(true);
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let task = args.first().cloned().unwrap_or_else(|| "qnli".to_string());
+    let steps: u64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(400);
+
+    let rt = Runtime::open(find_repo_root().join("artifacts"))?;
+    let model = format!("glue-{task}-full");
+    let cfg = RunConfig::default();
+    cfg.ensure_dirs()?;
+    let ckpt_path = cfg.checkpoint_path(&model);
+
+    // 1. pretrain with full attention (or reuse an existing checkpoint)
+    let ckpt = if ckpt_path.exists() {
+        println!("reusing checkpoint {}", ckpt_path.display());
+        Checkpoint::load(&ckpt_path)?
+    } else {
+        println!("== pretraining {model} with full attention ==");
+        let opts = TrainOptions {
+            steps,
+            eval_every: (steps / 6).max(25),
+            patience: 0,
+            eval_batches: 2,
+            seed: 0,
+            verbose: true,
+        };
+        let (ckpt, result) = trainer::train_model(&rt, &model, &opts)?;
+        println!("pretrained in {:.1}s (best val {:.4})",
+                 result.wall_seconds, result.best_val_loss);
+        ckpt.save(&ckpt_path)?;
+        ckpt
+    };
+
+    // 2. evaluate the SAME weights under each attention variant
+    println!("\n== swapping attention at inference (no retraining) ==");
+    let mut table = Table::new(
+        &format!("glue-analog {task}: pretrained-full served with variant"),
+        &["evaluate with", "metric", "value"],
+    );
+    for variant in ["full", "clustered-25", "i-clustered-25"] {
+        let fwd = format!("glue-{task}-{variant}.forward");
+        if rt.program(&fwd).is_err() {
+            eprintln!("  (skip {fwd}: not lowered)");
+            continue;
+        }
+        let prog = rt.program(&fwd)?.clone();
+        let feed = DataFeed::for_program(&prog, 0)?;
+        let evals = trainer::forward_eval(&rt, &fwd, &ckpt.params, &feed,
+                                          Split::Test, 8, 0)?;
+        let score = trainer::score(&prog, &feed, &evals)?;
+        table.row(vec![variant.to_string(), score.metric.to_string(),
+                       format!("{:.4}", score.value)]);
+    }
+    table.emit();
+    println!("expected shape (paper Table 4): i-clustered-25 ≈ full; plain \
+              clustered-25 degrades on sparse-attention tasks.");
+    Ok(())
+}

@@ -1,0 +1,124 @@
+//! Serving demo: batched ASR inference through the coordinator, reporting
+//! latency percentiles, throughput and batch occupancy — the serving-side
+//! claim of the paper (faster inference at equal quality) measured on
+//! this testbed.
+//!
+//!     cargo run --release --example serve_asr -- [n_requests] [variant]
+//!
+//! variant ∈ {full, clustered-25, i-clustered-25} (default: both full and
+//! i-clustered-25, for the head-to-head table).
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+use clustered_transformers::benchlib::Table;
+use clustered_transformers::config::{find_repo_root, init_logging};
+use clustered_transformers::coordinator::{
+    BatchPolicy, InferenceEngine, ServeOptions,
+};
+use clustered_transformers::data::asr::{AsrCorpus, AsrSpec};
+use clustered_transformers::data::Split;
+use clustered_transformers::runtime::{HostTensor, Runtime};
+
+const D_FEAT: usize = 40;
+
+fn serve_variant(rt: &Runtime, variant: &str, utts: &[(Vec<f32>, usize)])
+                 -> Result<Vec<String>> {
+    let model = format!("wsj-l6-{variant}");
+    let fwd = format!("{model}.forward");
+    let init = rt.load(&format!("{model}.init"))?;
+    let params = init
+        .run(&[HostTensor::scalar_i32(0)])?
+        .remove(0)
+        .into_f32()?;
+    let engine = Arc::new(InferenceEngine::start(
+        rt,
+        &[fwd],
+        params,
+        ServeOptions {
+            policy: BatchPolicy { max_batch: 4,
+                                  max_wait: Duration::from_millis(10) },
+            queue_capacity: 64,
+            params_seed: 0,
+        },
+    )?);
+
+    let t0 = Instant::now();
+    let rxs: Vec<_> = utts
+        .iter()
+        .map(|(frames, len)| {
+            engine.submit_blocking(frames.clone(), *len, D_FEAT).unwrap()
+        })
+        .collect();
+    for rx in rxs {
+        rx.recv_timeout(Duration::from_secs(600))?;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    let m = &engine.metrics;
+    let lat = m.latency.lock().unwrap();
+    let row = vec![
+        variant.to_string(),
+        format!("{:.2}", utts.len() as f64 / wall),
+        format!("{:.0}", lat.mean_us() / 1000.0),
+        format!("{:.0}", lat.percentile_us(50.0) / 1000.0),
+        format!("{:.0}", lat.percentile_us(95.0) / 1000.0),
+        format!("{:.2}", m.occupancy()),
+    ];
+    drop(lat);
+    let engine = Arc::try_unwrap(engine).ok();
+    if let Some(e) = engine {
+        e.shutdown();
+    }
+    Ok(row)
+}
+
+fn main() -> Result<()> {
+    init_logging(false);
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let n_requests: usize =
+        args.first().and_then(|s| s.parse().ok()).unwrap_or(24);
+    let variants: Vec<String> = match args.get(1) {
+        Some(v) => vec![v.clone()],
+        None => vec!["full".into(), "clustered-25".into(),
+                     "i-clustered-25".into()],
+    };
+
+    let rt = Runtime::open(find_repo_root().join("artifacts"))?;
+    let corpus = AsrCorpus::new(AsrSpec::wsj(0));
+    // pre-draw the workload so every variant sees identical requests
+    let mut utts = Vec::new();
+    let mut idx = 0u64;
+    while utts.len() < n_requests {
+        let b = corpus.batch(Split::Test, idx, 4);
+        for s in 0..4 {
+            if utts.len() >= n_requests {
+                break;
+            }
+            let t = b.xlen[s] as usize;
+            utts.push((
+                b.x[s * 256 * D_FEAT..s * 256 * D_FEAT + t * D_FEAT]
+                    .to_vec(),
+                t,
+            ));
+        }
+        idx += 1;
+    }
+
+    println!("== serving {} ASR requests per variant ==", utts.len());
+    let mut table = Table::new(
+        "serving head-to-head (WSJ-analog, 6 layers)",
+        &["variant", "req/s", "mean ms", "p50 ms", "p95 ms", "occupancy"],
+    );
+    for v in &variants {
+        match serve_variant(&rt, v, &utts) {
+            Ok(row) => table.row(row),
+            Err(e) => eprintln!("variant {v}: {e:#}"),
+        }
+    }
+    table.emit();
+    println!("(throughput ratio clustered/full mirrors the paper's \
+              inference-speed claim)");
+    Ok(())
+}

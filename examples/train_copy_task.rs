@@ -1,0 +1,74 @@
+//! End-to-end training driver (the repo's E2E validation run).
+//!
+//! Trains the masked-copy-task transformer with i-clustered attention for
+//! a few hundred steps *through the compiled HLO train step* (Python never
+//! runs), logs the loss curve, evaluates masked-token accuracy with the
+//! forward artifact, and saves a checkpoint.  Results are recorded in
+//! EXPERIMENTS.md §E2E.
+//!
+//!     cargo run --release --example train_copy_task -- [steps] [model]
+
+use anyhow::Result;
+use clustered_transformers::benchlib::Table;
+use clustered_transformers::config::{find_repo_root, init_logging,
+                                     RunConfig};
+use clustered_transformers::coordinator::{trainer, DataFeed, TrainOptions};
+use clustered_transformers::data::Split;
+use clustered_transformers::runtime::Runtime;
+
+fn main() -> Result<()> {
+    init_logging(true);
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let steps: u64 = args.first().and_then(|s| s.parse().ok()).unwrap_or(300);
+    let model = args
+        .get(1)
+        .cloned()
+        .unwrap_or_else(|| "copy-n64-i-clustered-8".to_string());
+
+    let rt = Runtime::open(find_repo_root().join("artifacts"))?;
+    println!("== end-to-end training: {model} for {steps} steps ==");
+
+    let opts = TrainOptions {
+        steps,
+        eval_every: (steps / 8).max(25),
+        patience: 0,
+        eval_batches: 2,
+        seed: 0,
+        verbose: true,
+    };
+    let (ckpt, result) = trainer::train_model(&rt, &model, &opts)?;
+
+    // loss curve
+    let mut curve = Table::new(&format!("{model} loss curve"),
+                               &["step", "train loss"]);
+    let stride = (result.losses.len() / 12).max(1);
+    for (s, l) in result.losses.iter().step_by(stride) {
+        curve.row(vec![format!("{s}"), format!("{l:.4}")]);
+    }
+    curve.emit();
+
+    // accuracy with the matching forward program
+    let fwd = format!("{model}.forward");
+    let prog = rt.program(&fwd)?.clone();
+    let feed = DataFeed::for_program(&prog, 0)?;
+    let evals = trainer::forward_eval(&rt, &fwd, &ckpt.params, &feed,
+                                      Split::Test, 8, 0)?;
+    let score = trainer::score(&prog, &feed, &evals)?;
+
+    println!(
+        "\nsummary: {} steps in {:.1}s ({:.3}s/step) | final train loss \
+         {:.4} | best val loss {:.4} | test {score}",
+        result.steps_run, result.wall_seconds, result.seconds_per_step,
+        result.final_loss, result.best_val_loss
+    );
+
+    let cfg = RunConfig::default();
+    cfg.ensure_dirs()?;
+    let path = cfg.checkpoint_path(&model);
+    ckpt.save(&path)?;
+    println!("checkpoint saved to {}", path.display());
+
+    anyhow::ensure!(result.final_loss < result.losses[0].1,
+                    "training failed to reduce the loss");
+    Ok(())
+}

@@ -1,0 +1,157 @@
+"""AOT lowering: registry programs → ``artifacts/*.hlo.txt`` + manifest.
+
+Interchange is HLO **text**, not serialized HloModuleProto: jax ≥ 0.5
+emits protos with 64-bit instruction ids that xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly.  Lowered with ``return_tuple=True``; the Rust side unwraps with
+``to_tupleN``.
+
+Usage (from ``python/``):
+    python -m compile.aot --out-dir ../artifacts [--only REGEX] [-j N]
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import multiprocessing as mp
+import os
+import re
+import sys
+import time
+
+import jax
+
+from . import model, programs
+from .configs import ModelConfig
+from .registry import build_registry
+
+
+def to_hlo_text(lowered) -> str:
+    from jax._src.lib import xla_client as xc
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def build_program(kind: str, cfg: ModelConfig, extra: dict):
+    if kind == "init":
+        return programs.make_init(cfg)
+    if kind == "train":
+        return programs.make_train_step(cfg)
+    if kind == "forward":
+        return programs.make_forward(cfg)
+    if kind == "eval_loss":
+        return programs.make_eval_loss(cfg)
+    if kind == "attention_maps":
+        return programs.make_attention_maps(cfg, extra["layer"],
+                                            extra["head"])
+    if kind == "attn_check":
+        return programs.make_attn_check(extra["n"], extra["dk"],
+                                        extra["dv"], extra["clusters"],
+                                        extra["topk"])
+    raise ValueError(kind)
+
+
+def lower_one(job):
+    """Worker: lower one registry entry to HLO text.  Returns manifest row."""
+    name, kind, cfg, extra, out_dir = job
+    t0 = time.time()
+    fn, specs, in_names, out_names = build_program(kind, cfg, extra)
+    lowered = jax.jit(fn, keep_unused=True).lower(*specs)
+    text = to_hlo_text(lowered)
+    fname = name.replace("/", "_") + ".hlo.txt"
+    path = os.path.join(out_dir, fname)
+    with open(path, "w") as f:
+        f.write(text)
+    entry = {
+        "name": name,
+        "kind": kind,
+        "file": fname,
+        "inputs": [{"name": n, "shape": list(s.shape), "dtype": str(s.dtype)}
+                   for n, s in zip(in_names, specs)],
+        "outputs": out_names,
+        "config": cfg.to_json_dict(),
+        "param_count": model.param_count(cfg),
+        "hlo_bytes": len(text),
+        "lower_seconds": round(time.time() - t0, 2),
+    }
+    sys.stderr.write(f"  lowered {name} ({len(text)//1024} KiB, "
+                     f"{entry['lower_seconds']}s)\n")
+    return entry
+
+
+def source_fingerprint() -> str:
+    """Hash of the compile package — lets `make artifacts` skip cleanly."""
+    here = os.path.dirname(__file__)
+    h = hashlib.sha256()
+    for root, _, files in sorted(os.walk(here)):
+        for f in sorted(files):
+            if f.endswith(".py"):
+                h.update(open(os.path.join(root, f), "rb").read())
+    return h.hexdigest()
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None,
+                    help="regex filter on program names")
+    ap.add_argument("-j", type=int, default=max(1, (os.cpu_count() or 2) - 1))
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest_path = os.path.join(args.out_dir, "manifest.json")
+    fp = source_fingerprint()
+
+    if not args.force and not args.only and os.path.exists(manifest_path):
+        try:
+            old = json.load(open(manifest_path))
+            if old.get("fingerprint") == fp:
+                print("artifacts up to date (fingerprint match)")
+                return
+        except Exception:
+            pass
+
+    reg = build_registry()
+    jobs = []
+    for name, (kind, cfg, extra) in sorted(reg.items()):
+        if args.only and not re.search(args.only, name):
+            continue
+        jobs.append((name, kind, cfg, extra, args.out_dir))
+
+    print(f"lowering {len(jobs)} programs with {args.j} workers ...")
+    t0 = time.time()
+    if args.j > 1:
+        with mp.get_context("spawn").Pool(args.j) as pool:
+            entries = pool.map(lower_one, jobs)
+    else:
+        entries = [lower_one(j) for j in jobs]
+
+    # merge with existing manifest when --only is used
+    merged = {}
+    if args.only and os.path.exists(manifest_path):
+        try:
+            for e in json.load(open(manifest_path))["programs"]:
+                merged[e["name"]] = e
+        except Exception:
+            pass
+    for e in entries:
+        merged[e["name"]] = e
+
+    manifest = {
+        "fingerprint": fp if not args.only else "partial",
+        "generated_at": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "programs": sorted(merged.values(), key=lambda e: e["name"]),
+    }
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(merged)} programs to {manifest_path} "
+          f"in {time.time()-t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,91 @@
+"""Model / attention configuration dataclasses shared by L2 and aot.py.
+
+A config fully determines HLO artifact shapes, the flat parameter layout
+and the training hyper-parameters, and is serialised into
+``artifacts/manifest.json`` so the Rust coordinator can reason about it.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field, asdict
+
+
+@dataclass(frozen=True)
+class AttentionConfig:
+    """Which attention variant a model uses (paper §3 + baselines §4).
+
+    kind:
+      - ``full``        vanilla softmax attention (eq. 1–2)
+      - ``shared-full`` vanilla with Q == K (Reformer-comparable baseline)
+      - ``clustered``   §3.2  (LSH → Hamming K-Means → centroid attention)
+      - ``i-clustered`` §3.3  (clustered + exact top-k refinement)
+      - ``lsh``         Reformer-style chunked LSH attention
+      - ``oracle-top``  exact per-query top-k (upper-bound baseline, §4.1)
+    """
+    kind: str = "full"
+    clusters: int = 100       # C
+    topk: int = 32            # k  (i-clustered / oracle-top)
+    bits: int = 31            # B  LSH bits (paper: 63)
+    lloyd_iters: int = 10     # L  K-Means iterations (paper: 10)
+    rounds: int = 1           # X  Reformer hashing rounds
+    chunk: int = 32           # Reformer chunk size (paper: 32)
+    use_pallas: bool = False  # route hot loops through the Pallas kernels
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """A transformer encoder + task head."""
+    name: str = "model"
+    task: str = "tok"         # tok | ctc | cls | span
+    attention: AttentionConfig = field(default_factory=AttentionConfig)
+    n_layers: int = 4
+    n_heads: int = 4
+    d_head: int = 16
+    d_ff: int = 128
+    n_symbols: int = 16       # output vocabulary (CTC adds blank internally)
+    vocab_in: int = 0         # input token vocab (>0 → embedding input)
+    d_in: int = 0             # input feature dim (>0 → linear input)
+    seq_len: int = 128        # N (static)
+    batch_size: int = 16      # B (static)
+    max_labels: int = 32      # CTC label budget per sample
+    lr: float = 2e-4          # R-Adam-ish Adam step size (paper: 2e-4)
+    weight_decay: float = 0.01
+    grad_clip: float = 10.0   # paper: max grad norm 10
+
+    @property
+    def d_model(self) -> int:
+        return self.n_heads * self.d_head
+
+    @property
+    def out_dim(self) -> int:
+        if self.task == "ctc":
+            return self.n_symbols + 1      # + blank (id 0)
+        if self.task == "span":
+            return 2                        # start / end logits
+        return self.n_symbols
+
+    def to_json_dict(self) -> dict:
+        d = asdict(self)
+        d["d_model"] = self.d_model
+        d["out_dim"] = self.out_dim
+        return d
+
+
+def attn_variant_name(a: AttentionConfig) -> str:
+    """Short name matching the paper's notation (clustered-100, lsh-4, ...).
+
+    A ``-pallas`` suffix marks the L1-kernel build of a variant so its
+    artifacts never collide with the jnp-ref build of the same config.
+    """
+    suffix = "-pallas" if a.use_pallas else ""
+    if a.kind in ("full", "shared-full"):
+        return a.kind + suffix
+    if a.kind == "clustered":
+        return f"clustered-{a.clusters}{suffix}"
+    if a.kind == "i-clustered":
+        return f"i-clustered-{a.clusters}{suffix}"
+    if a.kind == "lsh":
+        return f"lsh-{a.rounds}"
+    if a.kind == "oracle-top":
+        return f"oracle-top-{a.topk}"
+    raise ValueError(a.kind)

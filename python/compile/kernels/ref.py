@@ -1,0 +1,322 @@
+"""Pure-jnp reference implementations (the correctness oracle).
+
+Every attention variant of the paper exists here in its simplest correct
+form.  The Pallas kernels (siblings in this package) are tested against
+these functions, and the Rust reference implementation
+(``rust/src/attention/``) is tested against HLO lowered from this module.
+
+All functions operate on a *single head*: ``q, k`` are ``(N, Dk)``, ``v``
+is ``(N, Dv)``.  Batch/head dimensions are added by ``model.py`` via
+``jax.vmap``.
+
+Notation follows the paper (NeurIPS 2020, Vyas et al.):
+  - ``groups``  : ``S`` of eq. (3), as an int vector of cluster ids.
+  - ``A^c``     : clustered attention matrix, eq. (4).
+  - ``A^t``     : improved (top-k refined) attention matrix, eq. (10).
+
+Compatibility note: ``lax.top_k`` lowers to an HLO ``topk`` op whose text
+form the pinned xla_extension 0.5.1 parser rejects (``largest=true``), so
+top-k is implemented with a two-operand ``lax.sort`` throughout.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+NEG_INF = -1e9
+
+
+# ---------------------------------------------------------------------------
+# small numerics helpers
+# ---------------------------------------------------------------------------
+
+def sort_topk(x: jnp.ndarray, k: int):
+    """Descending top-k along the last axis via two-operand sort.
+
+    Returns ``(values, indices)`` exactly like ``lax.top_k`` but lowers to
+    an HLO ``sort`` the 0.5.1 text parser accepts.
+    """
+    iota = lax.broadcasted_iota(jnp.int32, x.shape, x.ndim - 1)
+    neg, idx = lax.sort((-x, iota), dimension=-1, num_keys=1)
+    return -neg[..., :k], idx[..., :k]
+
+
+def masked_softmax(logits: jnp.ndarray, key_mask: jnp.ndarray | None):
+    """Row softmax with optional key mask (1 = valid, 0 = padding)."""
+    if key_mask is not None:
+        logits = jnp.where(key_mask.astype(bool), logits, NEG_INF)
+    return jax.nn.softmax(logits, axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# vanilla attention (the `full` baseline, §3.1)
+# ---------------------------------------------------------------------------
+
+def full_attention_matrix(q, k, key_mask=None):
+    """``A = softmax(Q K^T / sqrt(Dk))`` — eq. (1)."""
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], q.dtype))
+    return masked_softmax(q @ k.T * scale, key_mask)
+
+
+def full_attention(q, k, v, key_mask=None):
+    """``V̂ = A V`` — eq. (2).  O(N^2 Dk + N^2 Dv)."""
+    return full_attention_matrix(q, k, key_mask) @ v
+
+
+def oracle_top_attention(q, k, v, topk: int, key_mask=None):
+    """The paper's `oracle-top` baseline (§4.1).
+
+    For every query keep only the ``topk`` keys with the highest exact
+    attention and renormalise (softmax over just those keys).
+    """
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], q.dtype))
+    logits = q @ k.T * scale
+    if key_mask is not None:
+        logits = jnp.where(key_mask.astype(bool), logits, NEG_INF)
+    vals, idx = sort_topk(logits, topk)          # (N, topk)
+    w = jax.nn.softmax(vals, axis=-1)
+    vg = v[idx]                                  # (N, topk, Dv)
+    return jnp.einsum("nk,nkd->nd", w, vg)
+
+
+# ---------------------------------------------------------------------------
+# LSH + Hamming-space K-Means (§3.2.2)
+# ---------------------------------------------------------------------------
+
+def lsh_codes(q, projections):
+    """Sign-of-random-projection codes as ±1 floats.
+
+    ``projections`` is ``(Dk, B)``.  ±1 (instead of packed bits) makes the
+    Hamming distance an MXU-friendly dot product:
+    ``hamming(a, b) = (B - a·b) / 2`` — see DESIGN.md §3.
+    """
+    return jnp.where(q @ projections >= 0, 1.0, -1.0).astype(q.dtype)
+
+
+def init_centroid_codes(codes, n_clusters: int):
+    """Deterministic strided init: every (N/C)-th code is a seed centroid."""
+    n = codes.shape[0]
+    idx = (jnp.arange(n_clusters) * n) // n_clusters
+    return codes[idx]
+
+
+def hamming_kmeans(codes, n_clusters: int, iters: int, point_mask=None):
+    """Lloyd iterations in Hamming space over ±1 codes.
+
+    Returns integer cluster ids ``(N,)``.  Assignment minimises the Hamming
+    distance, i.e. maximises the dot product with the ±1 centroid.  The
+    centroid update is the *sign of the member mean* (majority vote per
+    bit), which is the Hamming-space centroid.  Empty clusters keep their
+    previous centroid (``sign(0) -> previous``).
+    """
+    cent = init_centroid_codes(codes, n_clusters)
+    if point_mask is not None:
+        pm = point_mask.astype(codes.dtype)[:, None]   # (N, 1)
+    else:
+        pm = jnp.ones((codes.shape[0], 1), codes.dtype)
+
+    def step(cent, _):
+        # assignment: maximise dot == minimise hamming
+        sim = codes @ cent.T                            # (N, C)
+        groups = jnp.argmax(sim, axis=-1)
+        one_hot = jax.nn.one_hot(groups, n_clusters, dtype=codes.dtype)
+        one_hot = one_hot * pm                          # padding points vote 0
+        bit_sum = one_hot.T @ codes                     # (C, B)
+        new_cent = jnp.where(bit_sum > 0, 1.0,
+                             jnp.where(bit_sum < 0, -1.0, cent))
+        return new_cent.astype(codes.dtype), None
+
+    cent, _ = lax.scan(step, cent, None, length=iters)
+    groups = jnp.argmax(codes @ cent.T, axis=-1)
+    return groups
+
+
+def cluster_queries(q, n_clusters: int, bits: int, iters: int, key,
+                    point_mask=None):
+    """Full grouping pipeline of §3.2.2: LSH codes → Hamming K-Means.
+
+    The assignment is not differentiable; gradients flow through the
+    centroid *values* (means of member queries), so we stop the gradient
+    on the ids only.
+    """
+    proj = jax.random.normal(key, (q.shape[-1], bits), dtype=q.dtype)
+    codes = lsh_codes(lax.stop_gradient(q), proj)
+    groups = hamming_kmeans(codes, n_clusters, iters, point_mask=point_mask)
+    return lax.stop_gradient(groups)
+
+
+# ---------------------------------------------------------------------------
+# clustered attention (§3.2)
+# ---------------------------------------------------------------------------
+
+def cluster_centroids(q, groups, n_clusters: int, point_mask=None):
+    """Eq. (3): per-cluster means of the member queries.
+
+    Returns ``(centroids (C, Dk), counts (C,))``.  Padding queries (mask 0)
+    contribute nothing.
+    """
+    one_hot = jax.nn.one_hot(groups, n_clusters, dtype=q.dtype)  # (N, C)
+    if point_mask is not None:
+        one_hot = one_hot * point_mask.astype(q.dtype)[:, None]
+    counts = one_hot.sum(axis=0)                                 # (C,)
+    sums = one_hot.T @ q                                         # (C, Dk)
+    cent = sums / jnp.maximum(counts, 1.0)[:, None]
+    return cent, counts
+
+
+def clustered_attention_matrix(q, k, groups, n_clusters: int,
+                               key_mask=None, point_mask=None):
+    """``A^c`` of eq. (4) — (C, N)."""
+    cent, _ = cluster_centroids(q, groups, n_clusters, point_mask)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], q.dtype))
+    return masked_softmax(cent @ k.T * scale, key_mask)
+
+
+def clustered_attention(q, k, v, groups, n_clusters: int,
+                        key_mask=None, point_mask=None):
+    """Eqs. (4)–(6): centroid attention + broadcast.  O(N·C·D)."""
+    a_c = clustered_attention_matrix(q, k, groups, n_clusters,
+                                     key_mask, point_mask)
+    v_c = a_c @ v                                                # (C, Dv)
+    return v_c[groups]                                           # broadcast
+
+
+# ---------------------------------------------------------------------------
+# improved clustered attention (§3.3)
+# ---------------------------------------------------------------------------
+
+def improved_clustered_attention(q, k, v, groups, n_clusters: int, topk: int,
+                                 key_mask=None, point_mask=None):
+    """Eqs. (9)–(11) via the decomposition of suppl. eqs. (15)–(17).
+
+    ``V̂_i = V̂^t_i + V̂^b_i`` where the top-k part uses exact per-query dot
+    products rescaled by the cluster's captured mass ``m̂_j`` and the bottom
+    part is the clustered attention with the top-k columns zeroed.
+    """
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], q.dtype))
+    a_c = clustered_attention_matrix(q, k, groups, n_clusters,
+                                     key_mask, point_mask)       # (C, N)
+
+    # The *selection* of the top-k keys is discrete: gradients do not flow
+    # through which keys are picked (also avoids differentiating lax.sort,
+    # whose transpose rule needs batched gathers this XLA lacks).  The
+    # captured mass m̂ (eq. 9) is recovered differentiably via the mask.
+    _, top_idx = sort_topk(lax.stop_gradient(a_c), topk)         # (C, topk)
+    t_mask = lax.stop_gradient(
+        jax.nn.one_hot(top_idx, a_c.shape[-1], dtype=a_c.dtype).sum(1))
+    mhat = (a_c * t_mask).sum(axis=-1)                           # (C,) eq. (9)
+
+    # --- V̂^t: exact dots on the top-k keys of the query's cluster ---------
+    kg = k[top_idx]                                              # (C, topk, Dk)
+    vg = v[top_idx]                                              # (C, topk, Dv)
+    kg_q = kg[groups]                                            # (N, topk, Dk)
+    vg_q = vg[groups]                                            # (N, topk, Dv)
+    dots = jnp.einsum("nd,nkd->nk", q, kg_q) * scale             # (N, topk)
+    if key_mask is not None:
+        valid = key_mask.astype(bool)[top_idx][groups]           # (N, topk)
+        dots = jnp.where(valid, dots, NEG_INF)
+    w = jax.nn.softmax(dots, axis=-1) * mhat[groups][:, None]    # eq. (10)
+    v_t = jnp.einsum("nk,nkd->nd", w, vg_q)                      # eq. (16)
+
+    # --- V̂^b: clustered attention on the complement -----------------------
+    a_b = a_c * (1.0 - t_mask)
+    v_b = (a_b @ v)[groups]                                      # eq. (17)
+    return v_t + v_b
+
+
+def improved_clustered_attention_matrix(q, k, groups, n_clusters: int,
+                                        topk: int, key_mask=None,
+                                        point_mask=None):
+    """Dense ``A^t`` of eq. (10) — (N, N).  For analysis/fig. 8 only."""
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], q.dtype))
+    a_c = clustered_attention_matrix(q, k, groups, n_clusters,
+                                     key_mask, point_mask)
+    top_vals, top_idx = sort_topk(a_c, topk)
+    mhat = top_vals.sum(axis=-1)
+    t_mask = jnp.zeros_like(a_c).at[
+        jnp.arange(a_c.shape[0])[:, None], top_idx].set(1.0)     # (C, N)
+
+    logits = q @ k.T * scale                                     # (N, N)
+    if key_mask is not None:
+        logits = jnp.where(key_mask.astype(bool), logits, NEG_INF)
+    tq = t_mask[groups]                                          # (N, N)
+    exp = jnp.exp(logits - logits.max(axis=-1, keepdims=True)) * tq
+    denom = jnp.maximum(exp.sum(axis=-1, keepdims=True), 1e-30)
+    a_top = exp / denom * mhat[groups][:, None]
+    return jnp.where(tq > 0, a_top, a_c[groups])
+
+
+# ---------------------------------------------------------------------------
+# Reformer-style LSH attention (the `lsh-X` baseline, §2.3 / [13])
+# ---------------------------------------------------------------------------
+
+def _lsh_buckets(x, n_buckets: int, key):
+    """Angular LSH of the Reformer: argmax over [xR; -xR] rotations."""
+    rot = jax.random.normal(key, (x.shape[-1], n_buckets // 2), dtype=x.dtype)
+    h = x @ rot
+    return jnp.argmax(jnp.concatenate([h, -h], axis=-1), axis=-1)
+
+
+def reformer_attention(x, v, rounds: int, chunk: int, key,
+                       key_mask=None, n_buckets: int = 16):
+    """Shared-QK chunked LSH attention, averaged over hashing rounds.
+
+    Faithful to Kitaev et al. at the level the paper benchmarks it:
+      - queries == keys (shared projection), self-attention penalises self
+        so it is used only as a fallback;
+      - positions are sorted by bucket, attention runs within each chunk
+        and its predecessor, masked to same-bucket pairs;
+      - rounds are combined with logsumexp weights.
+
+    O(rounds · N · (2·chunk) · D).
+    """
+    n, d = x.shape
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, x.dtype))
+    n_chunks = n // chunk
+    assert n % chunk == 0, "sequence length must be divisible by chunk"
+
+    def one_round(rkey):
+        buckets = _lsh_buckets(x, n_buckets, rkey)               # (N,)
+        if key_mask is not None:
+            # push padding to the very end of the sort order
+            buckets = jnp.where(key_mask.astype(bool), buckets, n_buckets + 1)
+        # stable sort positions by bucket
+        order = lax.sort((buckets.astype(jnp.int32),
+                          jnp.arange(n, dtype=jnp.int32)),
+                         dimension=0, num_keys=1)[1]              # (N,)
+        xs = x[order]                                            # sorted qk
+        vs = v[order]
+        bs = buckets[order]
+
+        xs_c = xs.reshape(n_chunks, chunk, d)
+        vs_c = vs.reshape(n_chunks, chunk, -1)
+        bs_c = bs.reshape(n_chunks, chunk)
+        # each chunk attends to [previous chunk, itself]
+        prev = lambda a: jnp.roll(a, 1, axis=0)
+        kk = jnp.concatenate([prev(xs_c), xs_c], axis=1)          # (nc, 2c, d)
+        vv = jnp.concatenate([prev(vs_c), vs_c], axis=1)
+        bb = jnp.concatenate([prev(bs_c), bs_c], axis=1)          # (nc, 2c)
+
+        logits = jnp.einsum("cqd,ckd->cqk", xs_c, kk) * scale
+        same_bucket = bs_c[:, :, None] == bb[:, None, :]
+        logits = jnp.where(same_bucket, logits, NEG_INF)
+        # penalise self-attention (used only when nothing else matches)
+        qpos = order.reshape(n_chunks, chunk)
+        kpos = jnp.concatenate([prev(qpos), qpos], axis=1)
+        is_self = qpos[:, :, None] == kpos[:, None, :]
+        logits = jnp.where(is_self, NEG_INF / 2, logits)
+
+        lse = jax.nn.logsumexp(logits, axis=-1)                   # (nc, c)
+        out_s = jnp.einsum("cqk,ckd->cqd", jax.nn.softmax(logits, -1), vv)
+        # unsort
+        inv = jnp.zeros(n, jnp.int32).at[order].set(
+            jnp.arange(n, dtype=jnp.int32))
+        out = out_s.reshape(n, -1)[inv]
+        return out, lse.reshape(n)[inv]
+
+    keys = jax.random.split(key, rounds)
+    outs, lses = jax.vmap(one_round)(keys)                        # (R, N, Dv)
+    w = jax.nn.softmax(lses, axis=0)                              # (R, N)
+    return (outs * w[:, :, None]).sum(axis=0)

@@ -1,0 +1,106 @@
+"""Task losses: CTC (forward algorithm), cross-entropy, span loss.
+
+CTC is implemented from scratch (Graves et al. 2006) in log space with a
+``lax.scan`` over time so the whole train step lowers into one HLO module.
+Blank id is 0; labels are 1-based.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+LOG_EPS = -1e9
+
+
+def log_softmax(x, axis=-1):
+    return x - jax.nn.logsumexp(x, axis=axis, keepdims=True)
+
+
+def ctc_loss_single(logits, input_len, labels, label_len):
+    """Negative log likelihood of ``labels`` under CTC.
+
+    logits     : (T, V) raw scores, blank = class 0
+    input_len  : () int32, number of valid frames (<= T)
+    labels     : (L,) int32 padded label sequence (values in 1..V-1)
+    label_len  : () int32, number of valid labels (<= L)
+    """
+    t_max, _ = logits.shape
+    l_max = labels.shape[0]
+    u = 2 * l_max + 1
+    logp = log_softmax(logits)
+
+    # extended label sequence: blank, l1, blank, l2, ..., blank
+    ext = jnp.zeros((u,), jnp.int32)
+    ext = ext.at[1::2].set(labels)
+    # skip transition allowed when z[u] != blank and z[u] != z[u-2]
+    ext_prev2 = jnp.concatenate([jnp.full((2,), -1, jnp.int32), ext[:-2]])
+    can_skip = (ext != 0) & (ext != ext_prev2)
+
+    pos = jnp.arange(u)
+    valid_u = pos < (2 * label_len + 1)
+
+    alpha0 = jnp.full((u,), LOG_EPS)
+    alpha0 = alpha0.at[0].set(logp[0, 0])
+    alpha0 = alpha0.at[1].set(jnp.where(label_len > 0, logp[0, ext[1]],
+                                        LOG_EPS))
+
+    def shift1(a):
+        return jnp.concatenate([jnp.array([LOG_EPS]), a[:-1]])
+
+    def shift2(a):
+        return jnp.concatenate([jnp.array([LOG_EPS, LOG_EPS]), a[:-2]])
+
+    def step(alpha, t):
+        stay = alpha
+        diag = shift1(alpha)
+        skip = jnp.where(can_skip, shift2(alpha), LOG_EPS)
+        merged = jnp.logaddexp(jnp.logaddexp(stay, diag), skip)
+        new = merged + logp[t, ext]
+        new = jnp.where(valid_u, new, LOG_EPS)
+        # frames beyond input_len leave alpha untouched
+        new = jnp.where(t < input_len, new, alpha)
+        return new, None
+
+    alpha, _ = lax.scan(step, alpha0, jnp.arange(1, t_max))
+    end = 2 * label_len           # final blank
+    end_prev = jnp.maximum(end - 1, 0)  # final label
+    ll = jnp.logaddexp(alpha[end], alpha[end_prev])
+    return -ll
+
+
+def ctc_loss(logits, input_lens, labels, label_lens):
+    """Batched mean CTC loss, normalised by label length (Kaldi-style)."""
+    per = jax.vmap(ctc_loss_single)(logits, input_lens, labels, label_lens)
+    return (per / jnp.maximum(label_lens.astype(jnp.float32), 1.0)).mean()
+
+
+def token_ce_loss(logits, targets, weight_mask):
+    """Per-position CE averaged over weighted positions (copy task)."""
+    lp = log_softmax(logits)
+    ll = jnp.take_along_axis(lp, targets[..., None].astype(jnp.int32),
+                             axis=-1)[..., 0]
+    w = weight_mask.astype(jnp.float32)
+    return -(ll * w).sum() / jnp.maximum(w.sum(), 1.0)
+
+
+def cls_ce_loss(logits, targets):
+    """Sequence classification CE (GLUE-analog tasks)."""
+    lp = log_softmax(logits)
+    ll = jnp.take_along_axis(lp, targets[:, None].astype(jnp.int32),
+                             axis=-1)[:, 0]
+    return -ll.mean()
+
+
+def span_loss(logits, starts, ends, key_mask):
+    """SQuAD-analog: CE over start positions + CE over end positions.
+
+    logits: (B, N, 2); invalid positions are masked out of the softmax.
+    """
+    masked = jnp.where(key_mask[..., None] > 0, logits, LOG_EPS)
+    ls = log_softmax(masked[..., 0], axis=-1)
+    le = log_softmax(masked[..., 1], axis=-1)
+    pick = lambda lp, idx: jnp.take_along_axis(
+        lp, idx[:, None].astype(jnp.int32), axis=-1)[:, 0]
+    return -(pick(ls, starts) + pick(le, ends)).mean() / 2.0

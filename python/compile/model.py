@@ -1,0 +1,236 @@
+"""Layer-2: the transformer encoder with pluggable attention.
+
+Parameters live in ONE flat f32 vector; :func:`param_spec` defines the
+canonical layout (also exported to ``manifest.json`` so the Rust runtime
+can checkpoint/inspect).  All attention variants share the same layout,
+which is what makes the paper's §4 "train with X, evaluate with Y"
+experiments (Table 1, Table 4) a pure artifact swap on the Rust side.
+
+The per-head attention math is delegated to ``kernels.ref`` (oracle) or
+``kernels.pallas_kernels`` (L1 kernels) depending on
+``AttentionConfig.use_pallas``.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .configs import AttentionConfig, ModelConfig
+from .kernels import ref
+from .kernels import pallas_kernels as pk
+
+
+# ---------------------------------------------------------------------------
+# flat parameter layout
+# ---------------------------------------------------------------------------
+
+def param_spec(cfg: ModelConfig):
+    """Canonical (name, shape) list; flat offsets follow this order."""
+    d = cfg.d_model
+    spec = []
+    if cfg.vocab_in > 0:
+        spec.append(("embed", (cfg.vocab_in, d)))
+    else:
+        spec.append(("in_proj/w", (cfg.d_in, d)))
+        spec.append(("in_proj/b", (d,)))
+    # learned positional embeddings, initialised to the sinusoidal table
+    # (static N per artifact, so a table is exact; learnable because the
+    # copy/span tasks need sharp position-matching heads)
+    spec.append(("pos_embed", (cfg.seq_len, d)))
+    for i in range(cfg.n_layers):
+        p = f"layer{i}/"
+        spec += [
+            (p + "ln1/g", (d,)), (p + "ln1/b", (d,)),
+            (p + "attn/wq", (d, d)), (p + "attn/wk", (d, d)),
+            (p + "attn/wv", (d, d)), (p + "attn/wo", (d, d)),
+            (p + "attn/bo", (d,)),
+            (p + "ln2/g", (d,)), (p + "ln2/b", (d,)),
+            (p + "ff1/w", (d, cfg.d_ff)), (p + "ff1/b", (cfg.d_ff,)),
+            (p + "ff2/w", (cfg.d_ff, d)), (p + "ff2/b", (d,)),
+        ]
+    spec += [
+        ("ln_f/g", (d,)), ("ln_f/b", (d,)),
+        ("head/w", (d, cfg.out_dim)), ("head/b", (cfg.out_dim,)),
+    ]
+    return spec
+
+
+def param_count(cfg: ModelConfig) -> int:
+    return sum(int(math.prod(s)) for _, s in param_spec(cfg))
+
+
+def unpack_params(cfg: ModelConfig, flat: jnp.ndarray) -> dict:
+    """Static-offset slicing of the flat vector into named arrays."""
+    out, off = {}, 0
+    for name, shape in param_spec(cfg):
+        size = int(math.prod(shape))
+        out[name] = lax.dynamic_slice(flat, (off,), (size,)).reshape(shape)
+        off += size
+    return out
+
+
+def init_params(cfg: ModelConfig, seed) -> jnp.ndarray:
+    """Deterministic init of the flat vector (traced-seed friendly)."""
+    key = jax.random.PRNGKey(seed)
+    chunks = []
+    for idx, (name, shape) in enumerate(param_spec(cfg)):
+        k = jax.random.fold_in(key, idx)
+        size = int(math.prod(shape))
+        if name == "pos_embed":
+            pe = sinusoidal_pe(shape[0], shape[1])
+            chunks.append(pe.reshape(-1))
+        elif name.endswith("/b") or name.endswith("/bo"):
+            chunks.append(jnp.zeros((size,), jnp.float32))
+        elif "ln" in name and name.endswith("/g"):
+            chunks.append(jnp.ones((size,), jnp.float32))
+        elif "ln" in name:
+            chunks.append(jnp.zeros((size,), jnp.float32))
+        else:
+            fan_in = shape[0] if len(shape) == 2 else size
+            scale = 1.0 / math.sqrt(max(fan_in, 1))
+            chunks.append(scale * jax.random.normal(k, (size,), jnp.float32))
+    return jnp.concatenate(chunks)
+
+
+# ---------------------------------------------------------------------------
+# building blocks
+# ---------------------------------------------------------------------------
+
+def layer_norm(x, g, b, eps=1e-5):
+    mu = x.mean(axis=-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(axis=-1, keepdims=True)
+    return (x - mu) * lax.rsqrt(var + eps) * g + b
+
+
+def sinusoidal_pe(n, d, dtype=jnp.float32):
+    pos = jnp.arange(n, dtype=dtype)[:, None]
+    i = jnp.arange(d // 2, dtype=dtype)[None, :]
+    ang = pos / jnp.power(10000.0, 2.0 * i / d)
+    pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+    return pe[:, :d]
+
+
+def head_attention(a: AttentionConfig, q, k, v, key_mask, rng):
+    """Dispatch a single head's (N, dh) attention to the right variant."""
+    if a.kind == "full" or a.kind == "shared-full":
+        fn = pk.flash_attention if a.use_pallas else ref.full_attention
+        return fn(q, k, v, key_mask)
+    if a.kind == "clustered":
+        groups = ref.cluster_queries(q, a.clusters, a.bits, a.lloyd_iters,
+                                     rng, point_mask=key_mask)
+        fn = (pk.clustered_attention_pallas if a.use_pallas
+              else ref.clustered_attention)
+        return fn(q, k, v, groups, a.clusters,
+                  key_mask=key_mask, point_mask=key_mask)
+    if a.kind == "i-clustered":
+        groups = ref.cluster_queries(q, a.clusters, a.bits, a.lloyd_iters,
+                                     rng, point_mask=key_mask)
+        fn = (pk.improved_clustered_attention_pallas if a.use_pallas
+              else ref.improved_clustered_attention)
+        return fn(q, k, v, groups, a.clusters, a.topk,
+                  key_mask=key_mask, point_mask=key_mask)
+    if a.kind == "lsh":
+        return ref.reformer_attention(q, v, a.rounds, a.chunk, rng,
+                                      key_mask=key_mask)
+    if a.kind == "oracle-top":
+        return ref.oracle_top_attention(q, k, v, a.topk, key_mask=key_mask)
+    raise ValueError(f"unknown attention kind {a.kind!r}")
+
+
+def multi_head_attention(cfg: ModelConfig, p: dict, prefix: str, x, key_mask,
+                         rng):
+    """(N, D) → (N, D) self-attention with H independent heads."""
+    a = cfg.attention
+    h, dh = cfg.n_heads, cfg.d_head
+    wq, wk = p[prefix + "attn/wq"], p[prefix + "attn/wk"]
+    wv, wo = p[prefix + "attn/wv"], p[prefix + "attn/wo"]
+    q = (x @ wq).reshape(-1, h, dh).transpose(1, 0, 2)      # (H, N, dh)
+    if a.kind in ("shared-full", "lsh"):
+        # shared-QK variants reuse the query projection (Reformer [13])
+        k = q
+    else:
+        k = (x @ wk).reshape(-1, h, dh).transpose(1, 0, 2)
+    v = (x @ wv).reshape(-1, h, dh).transpose(1, 0, 2)
+
+    rngs = jax.random.split(rng, h)
+    out = jax.vmap(
+        lambda qi, ki, vi, ri: head_attention(a, qi, ki, vi, key_mask, ri)
+    )(q, k, v, rngs)                                        # (H, N, dh)
+    out = out.transpose(1, 0, 2).reshape(-1, h * dh)
+    return out @ wo + p[prefix + "attn/bo"]
+
+
+def encoder_layer(cfg: ModelConfig, p: dict, i: int, x, key_mask, rng):
+    """Pre-LN transformer layer (stable to train without warmup)."""
+    prefix = f"layer{i}/"
+    h = layer_norm(x, p[prefix + "ln1/g"], p[prefix + "ln1/b"])
+    x = x + multi_head_attention(cfg, p, prefix, h, key_mask, rng)
+    h = layer_norm(x, p[prefix + "ln2/g"], p[prefix + "ln2/b"])
+    h = jax.nn.gelu(h @ p[prefix + "ff1/w"] + p[prefix + "ff1/b"])
+    return x + h @ p[prefix + "ff2/w"] + p[prefix + "ff2/b"]
+
+
+def forward_single(cfg: ModelConfig, flat_params, x, key_mask, rng):
+    """One sample: x is (N,) int tokens or (N, d_in) features."""
+    p = unpack_params(cfg, flat_params)
+    if cfg.vocab_in > 0:
+        hdim = p["embed"][x.astype(jnp.int32)]              # (N, D)
+    else:
+        hdim = x @ p["in_proj/w"] + p["in_proj/b"]
+    hdim = hdim * math.sqrt(cfg.d_model)
+    hdim = hdim + p["pos_embed"]
+    for i in range(cfg.n_layers):
+        hdim = encoder_layer(cfg, p, i, hdim, key_mask,
+                             jax.random.fold_in(rng, i))
+    hdim = layer_norm(hdim, p["ln_f/g"], p["ln_f/b"])
+    logits = hdim @ p["head/w"] + p["head/b"]               # (N, out)
+    if cfg.task == "cls":
+        denom = jnp.maximum(key_mask.sum(), 1.0)
+        pooled = (logits * key_mask[:, None]).sum(0) / denom
+        return pooled                                       # (out,)
+    return logits
+
+
+def forward(cfg: ModelConfig, flat_params, x, key_mask, seed):
+    """Batched forward.  ``seed`` is a traced int32 scalar (clustering +
+    reformer randomness); per-sample keys are folded from it."""
+    base = jax.random.PRNGKey(seed)
+    rngs = jax.random.split(base, x.shape[0])
+    return jax.vmap(
+        lambda xi, mi, ri: forward_single(cfg, flat_params, xi, mi, ri)
+    )(x, key_mask, rngs)
+
+
+def attention_maps(cfg: ModelConfig, flat_params, x, key_mask, seed,
+                   layer: int, head: int):
+    """Fig. 8 support: dense A (full), A^c-broadcast and A^t for one
+    sample/layer/head, computed from the same activations."""
+    p = unpack_params(cfg, flat_params)
+    if cfg.vocab_in > 0:
+        hdim = p["embed"][x.astype(jnp.int32)]
+    else:
+        hdim = x @ p["in_proj/w"] + p["in_proj/b"]
+    hdim = hdim * math.sqrt(cfg.d_model) + p["pos_embed"]
+    rng = jax.random.PRNGKey(seed)
+    for i in range(layer):
+        hdim = encoder_layer(cfg, p, i, hdim, key_mask,
+                             jax.random.fold_in(rng, i))
+    prefix = f"layer{layer}/"
+    hn = layer_norm(hdim, p[prefix + "ln1/g"], p[prefix + "ln1/b"])
+    h, dh = cfg.n_heads, cfg.d_head
+    q = (hn @ p[prefix + "attn/wq"]).reshape(-1, h, dh)[:, head, :]
+    k = (hn @ p[prefix + "attn/wk"]).reshape(-1, h, dh)[:, head, :]
+    a = cfg.attention
+    groups = ref.cluster_queries(q, a.clusters, a.bits, a.lloyd_iters,
+                                 jax.random.fold_in(rng, layer),
+                                 point_mask=key_mask)
+    a_full = ref.full_attention_matrix(q, k, key_mask)
+    a_c = ref.clustered_attention_matrix(q, k, groups, a.clusters,
+                                         key_mask, key_mask)[groups]
+    a_t = ref.improved_clustered_attention_matrix(
+        q, k, groups, a.clusters, a.topk, key_mask, key_mask)
+    return a_full, a_c, a_t

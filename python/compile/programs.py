@@ -1,0 +1,192 @@
+"""AOT program definitions: init / train_step / forward / attention_maps.
+
+Each builder returns ``(fn, arg_specs, arg_names, out_names)`` where
+``arg_specs`` are ``jax.ShapeDtypeStruct``s.  ``aot.py`` lowers these to
+HLO text; the names/shapes go into ``manifest.json`` so the Rust runtime
+can construct inputs without ever importing Python.
+
+Batch layouts per task
+  tok  : x (B,N) i32 tokens, y (B,N) i32 targets, w (B,N) f32 loss weights
+  ctc  : x (B,N,Din) f32, xlen (B,) i32, y (B,Lmax) i32, ylen (B,) i32
+  cls  : x (B,N) i32, mask (B,N) f32, y (B,) i32
+  span : x (B,N) i32, mask (B,N) f32, ystart (B,) i32, yend (B,) i32
+Every program also takes ``seed`` (i32 scalar) feeding the in-graph
+randomness (LSH projections, Reformer rotations).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import losses, model, optim
+from .configs import ModelConfig
+
+f32, i32 = jnp.float32, jnp.int32
+
+
+def _spec(shape, dtype=f32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_specs(cfg: ModelConfig):
+    """(specs, names) of the task's batch tensors, in canonical order."""
+    b, n = cfg.batch_size, cfg.seq_len
+    if cfg.task == "tok":
+        return ([_spec((b, n), i32), _spec((b, n), i32), _spec((b, n), f32)],
+                ["x", "y", "w"])
+    if cfg.task == "ctc":
+        return ([_spec((b, n, cfg.d_in), f32), _spec((b,), i32),
+                 _spec((b, cfg.max_labels), i32), _spec((b,), i32)],
+                ["x", "xlen", "y", "ylen"])
+    if cfg.task == "cls":
+        return ([_spec((b, n), i32), _spec((b, n), f32), _spec((b,), i32)],
+                ["x", "mask", "y"])
+    if cfg.task == "span":
+        return ([_spec((b, n), i32), _spec((b, n), f32),
+                 _spec((b,), i32), _spec((b,), i32)],
+                ["x", "mask", "ystart", "yend"])
+    raise ValueError(cfg.task)
+
+
+def _key_mask(cfg: ModelConfig, batch):
+    n = cfg.seq_len
+    if cfg.task == "tok":
+        return jnp.ones(batch[0].shape, f32)
+    if cfg.task == "ctc":
+        xlen = batch[1]
+        return (jnp.arange(n)[None, :] < xlen[:, None]).astype(f32)
+    return batch[1]  # cls / span carry an explicit mask
+
+
+def batch_loss(cfg: ModelConfig, params, batch, seed):
+    mask = _key_mask(cfg, batch)
+    if cfg.task == "tok":
+        x, y, w = batch
+        logits = model.forward(cfg, params, x, mask, seed)
+        return losses.token_ce_loss(logits, y, w)
+    if cfg.task == "ctc":
+        x, xlen, y, ylen = batch
+        logits = model.forward(cfg, params, x, mask, seed)
+        return losses.ctc_loss(logits, xlen, y, ylen)
+    if cfg.task == "cls":
+        x, _, y = batch
+        logits = model.forward(cfg, params, x, mask, seed)
+        return losses.cls_ce_loss(logits, y)
+    if cfg.task == "span":
+        x, _, ys, ye = batch
+        logits = model.forward(cfg, params, x, mask, seed)
+        return losses.span_loss(logits, ys, ye, mask)
+    raise ValueError(cfg.task)
+
+
+# ---------------------------------------------------------------------------
+# program builders
+# ---------------------------------------------------------------------------
+
+def make_init(cfg: ModelConfig):
+    def fn(seed):
+        p = model.init_params(cfg, seed)
+        z = jnp.zeros_like(p)
+        return p, z, z, jnp.zeros((), i32)
+
+    return (fn, [_spec((), i32)], ["seed"],
+            ["params", "adam_m", "adam_v", "step"])
+
+
+def make_train_step(cfg: ModelConfig):
+    npar = model.param_count(cfg)
+    bspecs, bnames = batch_specs(cfg)
+
+    def fn(params, m, v, step, seed, *batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: batch_loss(cfg, p, batch, seed))(params)
+        params, m, v, step = optim.adam_step(
+            params, m, v, step, grads, lr=cfg.lr,
+            weight_decay=cfg.weight_decay, grad_clip=cfg.grad_clip)
+        return params, m, v, step, loss
+
+    specs = [_spec((npar,)), _spec((npar,)), _spec((npar,)),
+             _spec((), i32), _spec((), i32)] + bspecs
+    names = ["params", "adam_m", "adam_v", "step", "seed"] + bnames
+    return fn, specs, names, ["params", "adam_m", "adam_v", "step", "loss"]
+
+
+def make_forward(cfg: ModelConfig):
+    """Inference program: logits (+ loss-independent).  The serving path."""
+    npar = model.param_count(cfg)
+    b, n = cfg.batch_size, cfg.seq_len
+
+    if cfg.task == "ctc":
+        xspec = [_spec((b, n, cfg.d_in), f32), _spec((b,), i32)]
+        xnames = ["x", "xlen"]
+
+        def fn(params, x, xlen, seed):
+            mask = (jnp.arange(n)[None, :] < xlen[:, None]).astype(f32)
+            return (model.forward(cfg, params, x, mask, seed),)
+    elif cfg.task == "tok":
+        xspec = [_spec((b, n), i32)]
+        xnames = ["x"]
+
+        def fn(params, x, seed):
+            return (model.forward(cfg, params, x, jnp.ones((b, n), f32),
+                                  seed),)
+    else:  # cls / span
+        xspec = [_spec((b, n), i32), _spec((b, n), f32)]
+        xnames = ["x", "mask"]
+
+        def fn(params, x, mask, seed):
+            return (model.forward(cfg, params, x, mask, seed),)
+
+    specs = [_spec((npar,))] + xspec + [_spec((), i32)]
+    names = ["params"] + xnames + ["seed"]
+    return fn, specs, names, ["logits"]
+
+
+def make_eval_loss(cfg: ModelConfig):
+    """Validation loss program (no gradient) — convergence tracking."""
+    npar = model.param_count(cfg)
+    bspecs, bnames = batch_specs(cfg)
+
+    def fn(params, seed, *batch):
+        return (batch_loss(cfg, params, batch, seed),)
+
+    specs = [_spec((npar,)), _spec((), i32)] + bspecs
+    names = ["params", "seed"] + bnames
+    return fn, specs, names, ["loss"]
+
+
+def make_attn_check(n: int, dk: int, dv: int, clusters: int, topk: int):
+    """Cross-implementation golden check: given identical (q, k, v, groups),
+    emit full / clustered / i-clustered outputs from the jnp oracle.  The
+    Rust integration test feeds the same tensors to its native
+    implementation and asserts allclose — proving the three codebases
+    (jnp, Pallas, Rust) agree."""
+    from .kernels import ref
+
+    def fn(q, k, v, groups):
+        return (
+            ref.full_attention(q, k, v),
+            ref.clustered_attention(q, k, v, groups, clusters),
+            ref.improved_clustered_attention(q, k, v, groups, clusters,
+                                             topk),
+        )
+
+    specs = [_spec((n, dk)), _spec((n, dk)), _spec((n, dv)),
+             _spec((n,), i32)]
+    return fn, specs, ["q", "k", "v", "groups"], \
+        ["full", "clustered", "improved"]
+
+
+def make_attention_maps(cfg: ModelConfig, layer: int, head: int):
+    """Fig. 8 program: A (full), A^c broadcast, A^t for one sample."""
+    npar = model.param_count(cfg)
+    n = cfg.seq_len
+
+    def fn(params, x, mask, seed):
+        return model.attention_maps(cfg, params, x, mask, seed, layer, head)
+
+    specs = [_spec((npar,)), _spec((n,), i32), _spec((n,), f32),
+             _spec((), i32)]
+    return fn, specs, ["params", "x", "mask", "seed"], \
+        ["a_full", "a_clustered", "a_improved"]

@@ -1,0 +1,178 @@
+"""The experiment registry: every HLO program the benches need.
+
+This is the single source of truth for experiment configurations, shared
+between ``aot.py`` (which lowers programs) and the Rust benches (which
+read the emitted ``manifest.json``).  Scales are shrunk from the paper's
+GPU testbed to CPU-feasible sizes while preserving the N ≫ C regime —
+see DESIGN.md §7 for the mapping.
+"""
+
+from __future__ import annotations
+
+from .configs import AttentionConfig, ModelConfig, attn_variant_name
+
+A = AttentionConfig
+
+
+# ---------------------------------------------------------------------------
+# base architectures
+# ---------------------------------------------------------------------------
+
+def copy_cfg(n: int, attn: AttentionConfig, layers: int = 4) -> ModelConfig:
+    """Masked copy task (§C.2): input 0w0w with masked symbols.
+
+    vocab_in: 0 = separator, 1..10 symbols, 11 = MASK.  Outputs 0..10.
+    """
+    return ModelConfig(
+        name=f"copy-n{n}-{attn_variant_name(attn)}", task="tok",
+        attention=attn, n_layers=layers, n_heads=4, d_head=16, d_ff=128,
+        n_symbols=11, vocab_in=12, seq_len=n, batch_size=16, lr=2e-3)
+
+
+def wsj_cfg(attn: AttentionConfig, layers: int) -> ModelConfig:
+    """WSJ-analog synthetic ASR: 40-d filterbank-like frames, phoneme CTC.
+
+    Paper: N̄=780, 9 layers, C∈{100..300}; here N=256, ≤6 layers,
+    C∈{25..75} (same N/C ratios).
+    """
+    return ModelConfig(
+        name=f"wsj-l{layers}-{attn_variant_name(attn)}", task="ctc",
+        attention=attn, n_layers=layers, n_heads=6, d_head=16, d_ff=192,
+        n_symbols=20, d_in=40, seq_len=256, batch_size=4, max_labels=48,
+        lr=5e-4)
+
+
+def swb_cfg(attn: AttentionConfig, layers: int) -> ModelConfig:
+    """Switchboard-analog: longer/noisier synthetic ASR (paper: N̄=534,
+    max 3850, 12 layers).  CTC replaces LF-MMI (DESIGN.md §2)."""
+    return ModelConfig(
+        name=f"swb-l{layers}-{attn_variant_name(attn)}", task="ctc",
+        attention=attn, n_layers=layers, n_heads=6, d_head=16, d_ff=192,
+        n_symbols=40, d_in=40, seq_len=384, batch_size=2, max_labels=64,
+        lr=5e-4)
+
+
+GLUE_TASKS = {
+    # name -> (task head, n classes) — synthetic analogs, DESIGN.md §2
+    "sst2": ("cls", 2),    # majority sentiment of ± tokens
+    "mrpc": ("cls", 2),    # are the two halves permutations of each other
+    "qnli": ("cls", 2),    # does the context contain the query pattern
+    "rte": ("cls", 2),     # second-half vocabulary ⊆ first-half vocabulary
+    "squad": ("span", 2),  # find the answer span for the question pattern
+}
+
+
+def glue_cfg(task_name: str, attn: AttentionConfig) -> ModelConfig:
+    head, ncls = GLUE_TASKS[task_name]
+    n = 192 if task_name == "squad" else 128
+    return ModelConfig(
+        name=f"glue-{task_name}-{attn_variant_name(attn)}", task=head,
+        attention=attn, n_layers=4, n_heads=4, d_head=16, d_ff=128,
+        n_symbols=ncls, vocab_in=32, seq_len=n, batch_size=8, lr=1e-3)
+
+
+def layer_cfg(n: int, attn: AttentionConfig) -> ModelConfig:
+    """Single attention layer for the fig. 4 scaling microbench."""
+    return ModelConfig(
+        name=f"layer-n{n}-{attn_variant_name(attn)}", task="tok",
+        attention=attn, n_layers=1, n_heads=6, d_head=16, d_ff=96,
+        n_symbols=8, vocab_in=16, seq_len=n, batch_size=1)
+
+
+# ---------------------------------------------------------------------------
+# attention variant palettes
+# ---------------------------------------------------------------------------
+
+def clustered(c, pallas=False):
+    return A(kind="clustered", clusters=c, bits=31, lloyd_iters=10,
+             use_pallas=pallas)
+
+
+def iclustered(c, topk=16, pallas=False):
+    return A(kind="i-clustered", clusters=c, topk=topk, bits=31,
+             lloyd_iters=10, use_pallas=pallas)
+
+
+def lsh(rounds, chunk=16):
+    return A(kind="lsh", rounds=rounds, chunk=chunk)
+
+
+FULL = A(kind="full")
+SHARED = A(kind="shared-full")
+ORACLE = A(kind="oracle-top", topk=16)
+
+
+# ---------------------------------------------------------------------------
+# program sets  (name -> (kind, ModelConfig[, extra]))
+# ---------------------------------------------------------------------------
+
+def build_registry():
+    """Returns {program_name: (program_kind, cfg, extra_dict)}."""
+    progs = {}
+
+    def add(kind, cfg, extra=None):
+        name = f"{cfg.name}.{kind}"
+        progs[name] = (kind, cfg, extra or {})
+
+    def add_model(cfg, train=True, fwd=True):
+        if train:
+            add("init", cfg)
+            add("train", cfg)
+        if fwd:
+            add("forward", cfg)
+
+    # --- fig5 / copy-task heatmap -------------------------------------
+    copy_variants = ([FULL] + [clustered(c) for c in (8, 15, 30)]
+                     + [iclustered(c, topk=8) for c in (8, 15, 30)]
+                     + [lsh(r) for r in (1, 4, 8)])
+    for n in (32, 64, 128):
+        for attn in copy_variants:
+            add_model(copy_cfg(n, attn))
+
+    # pallas-twin of the copy forward (kernel path composes end-to-end)
+    add("forward", copy_cfg(64, iclustered(8, topk=8, pallas=True)))
+    add("forward", copy_cfg(64, clustered(8, pallas=True)))
+
+    # --- WSJ-analog: fig1a + table1 + table2 --------------------------
+    for layers in (2, 4, 6):
+        add_model(wsj_cfg(FULL, layers))
+    add_model(wsj_cfg(SHARED, 6))
+    for c in (25, 50, 75):
+        add_model(wsj_cfg(clustered(c), 6))
+    for c in (25, 50):
+        add_model(wsj_cfg(iclustered(c), 6))
+        add_model(wsj_cfg(iclustered(c), 4))
+    for r in (1, 4):
+        add_model(wsj_cfg(lsh(r, chunk=32), 6))
+    # eval-only variants for the table-1 cross matrix (checkpoint reuse)
+    add("forward", wsj_cfg(ORACLE, 6))
+
+    # --- SWB-analog: fig1b + table3 ------------------------------------
+    for layers in (2, 4, 6):
+        add_model(swb_cfg(FULL, layers) if layers == 6
+                  else swb_cfg(FULL, layers), train=True, fwd=True)
+    add_model(swb_cfg(clustered(25), 6))
+    add_model(swb_cfg(iclustered(25), 6))
+    add_model(swb_cfg(iclustered(50), 6))
+
+    # --- GLUE/SQuAD-analog: table4 + fig8 ------------------------------
+    for t in GLUE_TASKS:
+        add_model(glue_cfg(t, FULL))                      # pretrain full
+        add("forward", glue_cfg(t, clustered(25)))        # approx eval
+        add("forward", glue_cfg(t, iclustered(25, topk=16)))
+    add("attention_maps", glue_cfg("squad", iclustered(25, topk=16)),
+        {"layer": 3, "head": 0})
+
+    # --- cross-implementation golden check (Rust vs jnp oracle) --------
+    progs["attncheck-n64.check"] = (
+        "attn_check",
+        copy_cfg(64, FULL),  # carrier config (shapes come from extra)
+        {"n": 64, "dk": 16, "dv": 16, "clusters": 8, "topk": 8})
+
+    # --- fig4 scaling (single layer, forward only) ---------------------
+    for n in (256, 512, 1024):
+        for attn in (FULL, clustered(25), iclustered(25), lsh(1, chunk=32),
+                     lsh(4, chunk=32)):
+            add("forward", layer_cfg(n, attn))
+
+    return progs

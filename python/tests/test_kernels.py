@@ -1,0 +1,296 @@
+"""Pallas kernels vs. the pure-jnp oracle (the core L1 correctness signal).
+
+Shape/dtype sweeps are hypothesis-style: parametrised over a grid of
+sequence lengths (including non-multiples of the block sizes), head dims,
+cluster counts and seeds, asserting allclose against ``ref.py``.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import ref
+from compile.kernels import pallas_kernels as pk
+
+jax.config.update("jax_enable_x64", False)
+
+
+def rand(key, *shape):
+    return jax.random.normal(key, shape, dtype=jnp.float32)
+
+
+def make_qkv(seed, n, dk, dv):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    return rand(ks[0], n, dk), rand(ks[1], n, dk), rand(ks[2], n, dv)
+
+
+def make_mask(seed, n, frac_valid=0.8):
+    m = jnp.arange(n) < max(1, int(n * frac_valid))
+    return m.astype(jnp.float32)
+
+
+SHAPES = [  # (N, Dk, Dv) — includes non-block-multiples
+    (16, 8, 8),
+    (64, 32, 32),
+    (100, 16, 24),
+    (130, 32, 16),
+    (256, 64, 64),
+]
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,dk,dv", SHAPES)
+@pytest.mark.parametrize("seed", [0, 1])
+def test_flash_attention_matches_ref(n, dk, dv, seed):
+    q, k, v = make_qkv(seed, n, dk, dv)
+    got = pk.flash_attention(q, k, v, block_q=32, block_k=32)
+    want = ref.full_attention(q, k, v)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("n,dk,dv", [(64, 16, 16), (130, 32, 16)])
+def test_flash_attention_with_mask(n, dk, dv):
+    q, k, v = make_qkv(3, n, dk, dv)
+    mask = make_mask(0, n)
+    got = pk.flash_attention(q, k, v, key_mask=mask, block_q=32, block_k=32)
+    want = ref.full_attention(q, k, v, key_mask=mask)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_rows_sum_to_one_property():
+    # With V = I slices, attention output recovers the attention weights:
+    # each row of A is a distribution.
+    n, dk = 32, 8
+    q, k, _ = make_qkv(7, n, dk, n)
+    v = jnp.eye(n, dtype=jnp.float32)
+    a = pk.flash_attention(q, k, v, block_q=16, block_k=16)
+    np.testing.assert_allclose(a.sum(-1), np.ones(n), rtol=1e-5, atol=1e-5)
+    assert (np.asarray(a) >= -1e-6).all()
+
+
+# ---------------------------------------------------------------------------
+# centroid sums (eq. 3)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,c", [(16, 3), (100, 10), (130, 7), (256, 25)])
+def test_centroid_sums_matches_ref(n, c):
+    q = rand(jax.random.PRNGKey(0), n, 16)
+    groups = jax.random.randint(jax.random.PRNGKey(1), (n,), 0, c)
+    sums, counts = pk.centroid_sums(q, groups, c, block_n=32)
+    cent, want_counts = ref.cluster_centroids(q, groups, c)
+    np.testing.assert_allclose(counts, want_counts, rtol=1e-6)
+    got_cent = sums / np.maximum(np.asarray(counts), 1.0)[:, None]
+    np.testing.assert_allclose(got_cent, cent, rtol=2e-5, atol=2e-5)
+
+
+def test_centroid_sums_total_mass_property():
+    # Sum of per-cluster sums == sum of all (unmasked) queries.
+    n, c = 100, 9
+    q = rand(jax.random.PRNGKey(2), n, 8)
+    groups = jax.random.randint(jax.random.PRNGKey(3), (n,), 0, c)
+    pm = make_mask(0, n, 0.7)
+    sums, counts = pk.centroid_sums(q, groups, c, point_mask=pm, block_n=32)
+    np.testing.assert_allclose(np.asarray(sums).sum(0),
+                               np.asarray(q * pm[:, None]).sum(0),
+                               rtol=1e-4, atol=1e-4)
+    assert float(np.asarray(counts).sum()) == pytest.approx(float(pm.sum()))
+
+
+# ---------------------------------------------------------------------------
+# centroid attention (eqs. 4–5)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,c,dk,dv", [(64, 8, 16, 16), (100, 25, 32, 24),
+                                       (130, 10, 16, 16)])
+def test_centroid_attention_matches_ref(n, c, dk, dv):
+    q, k, v = make_qkv(5, n, dk, dv)
+    groups = jax.random.randint(jax.random.PRNGKey(6), (n,), 0, c)
+    cent, _ = ref.cluster_centroids(q, groups, c)
+    a_c, v_c = pk.centroid_attention(cent, k, v, block_c=8)
+    scale = 1.0 / np.sqrt(dk)
+    want_a = jax.nn.softmax(cent @ k.T * scale, axis=-1)
+    np.testing.assert_allclose(a_c, want_a, rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(v_c, want_a @ v, rtol=2e-5, atol=2e-5)
+
+
+def test_centroid_attention_masked_columns_are_zero():
+    n, c, dk, dv = 64, 8, 16, 16
+    q, k, v = make_qkv(8, n, dk, dv)
+    groups = jax.random.randint(jax.random.PRNGKey(9), (n,), 0, c)
+    cent, _ = ref.cluster_centroids(q, groups, c)
+    mask = make_mask(0, n, 0.5)
+    a_c, _ = pk.centroid_attention(cent, k, v, key_mask=mask, block_c=8)
+    a = np.asarray(a_c)
+    assert np.abs(a[:, np.asarray(mask) == 0]).max() < 1e-8
+    np.testing.assert_allclose(a.sum(-1), np.ones(c), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end clustered attention (pallas pipeline vs ref)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,c,dk,dv", [(64, 8, 16, 16), (100, 25, 32, 24),
+                                       (130, 10, 16, 16), (256, 25, 32, 32)])
+@pytest.mark.parametrize("seed", [0, 4])
+def test_clustered_attention_pallas_matches_ref(n, c, dk, dv, seed):
+    q, k, v = make_qkv(seed, n, dk, dv)
+    groups = jax.random.randint(jax.random.PRNGKey(seed + 1), (n,), 0, c)
+    got = pk.clustered_attention_pallas(q, k, v, groups, c)
+    want = ref.clustered_attention(q, k, v, groups, c)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("n,c,dk,dv,t", [(64, 8, 16, 16, 8),
+                                         (100, 25, 32, 24, 16),
+                                         (130, 10, 16, 16, 32)])
+@pytest.mark.parametrize("seed", [0, 4])
+def test_improved_clustered_pallas_matches_ref(n, c, dk, dv, t, seed):
+    q, k, v = make_qkv(seed, n, dk, dv)
+    groups = jax.random.randint(jax.random.PRNGKey(seed + 2), (n,), 0, c)
+    got = pk.improved_clustered_attention_pallas(q, k, v, groups, c, t)
+    want = ref.improved_clustered_attention(q, k, v, groups, c, t)
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+
+
+def test_clustered_attention_masked():
+    n, c, dk, dv = 100, 10, 16, 16
+    q, k, v = make_qkv(11, n, dk, dv)
+    groups = jax.random.randint(jax.random.PRNGKey(12), (n,), 0, c)
+    km = make_mask(0, n, 0.6)
+    got = pk.clustered_attention_pallas(q, k, v, groups, c,
+                                        key_mask=km, point_mask=km)
+    want = ref.clustered_attention(q, k, v, groups, c,
+                                   key_mask=km, point_mask=km)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_improved_clustered_masked():
+    n, c, dk, dv, t = 100, 10, 16, 16, 8
+    q, k, v = make_qkv(13, n, dk, dv)
+    groups = jax.random.randint(jax.random.PRNGKey(14), (n,), 0, c)
+    km = make_mask(0, n, 0.6)
+    got = pk.improved_clustered_attention_pallas(q, k, v, groups, c, t,
+                                                 key_mask=km, point_mask=km)
+    want = ref.improved_clustered_attention(q, k, v, groups, c, t,
+                                            key_mask=km, point_mask=km)
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+
+
+# ---------------------------------------------------------------------------
+# hamming k-means
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,bits,c", [(64, 16, 4), (200, 32, 10),
+                                      (130, 63, 7)])
+def test_hamming_assign_matches_argmax(n, bits, c):
+    codes = jnp.sign(rand(jax.random.PRNGKey(0), n, bits)) + 0.0
+    codes = jnp.where(codes == 0, 1.0, codes)
+    cent = jnp.sign(rand(jax.random.PRNGKey(1), c, bits))
+    got = pk.hamming_assign(codes, cent, block_n=32)
+    want = jnp.argmax(codes @ cent.T, axis=-1)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_hamming_assign_is_nearest_property():
+    # Property: chosen centroid has minimal true Hamming distance.
+    n, bits, c = 100, 32, 8
+    codes = np.sign(np.random.RandomState(0).randn(n, bits)).astype(np.float32)
+    cent = np.sign(np.random.RandomState(1).randn(c, bits)).astype(np.float32)
+    g = np.asarray(pk.hamming_assign(jnp.asarray(codes), jnp.asarray(cent)))
+    ham = ((codes[:, None, :] != cent[None, :, :]).sum(-1))  # (n, c)
+    assert (ham[np.arange(n), g] == ham.min(axis=1)).all()
+
+
+@pytest.mark.parametrize("n,bits,c,iters", [(128, 32, 8, 5), (200, 63, 10, 10)])
+def test_hamming_kmeans_pallas_matches_ref(n, bits, c, iters):
+    codes = jnp.where(rand(jax.random.PRNGKey(3), n, bits) >= 0, 1.0, -1.0)
+    got = pk.hamming_kmeans_pallas(codes, c, iters)
+    want = ref.hamming_kmeans(codes, c, iters)
+    np.testing.assert_array_equal(got, want)
+
+
+# ---------------------------------------------------------------------------
+# paper propositions on the reference implementation
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", range(5))
+def test_prop2_improved_never_worse_than_clustered(seed):
+    """Proposition 2: ||A^t_i - A_i||_1 <= ||A^c_i - A_i||_1 for every i."""
+    n, c, dk, t = 48, 6, 16, 8
+    q, k, _ = make_qkv(seed, n, dk, dk)
+    groups = jax.random.randint(jax.random.PRNGKey(seed + 40), (n,), 0, c)
+    a = np.asarray(ref.full_attention_matrix(q, k))
+    a_c = np.asarray(ref.clustered_attention_matrix(q, k, groups, c))[
+        np.asarray(groups)]
+    a_t = np.asarray(ref.improved_clustered_attention_matrix(
+        q, k, groups, c, t))
+    err_c = np.abs(a_c - a).sum(-1)
+    err_t = np.abs(a_t - a).sum(-1)
+    assert (err_t <= err_c + 1e-5).all()
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_prop1_attention_lipschitz_bound(seed):
+    """Proposition 1: ||sm(QiK^T)-sm(QjK^T)||_2 <= ||Qi-Qj||_2 ||K||_2."""
+    n, dk = 32, 16
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    k = rand(k1, n, dk)
+    qi = rand(k2, dk)
+    qj = qi + 0.1 * rand(k3, dk)
+    # note: the bound is for unscaled logits as stated in the paper
+    ai = jax.nn.softmax(k @ qi)
+    aj = jax.nn.softmax(k @ qj)
+    lhs = float(jnp.linalg.norm(ai - aj))
+    knorm = float(jnp.linalg.norm(k, ord=2))
+    eps = float(jnp.linalg.norm(qi - qj))
+    assert lhs <= eps * knorm + 1e-5
+
+
+def test_improved_matrix_rows_are_distributions():
+    n, c, dk, t = 64, 8, 16, 8
+    q, k, _ = make_qkv(21, n, dk, dk)
+    groups = jax.random.randint(jax.random.PRNGKey(22), (n,), 0, c)
+    a_t = np.asarray(ref.improved_clustered_attention_matrix(
+        q, k, groups, c, t))
+    assert (a_t >= -1e-7).all()
+    np.testing.assert_allclose(a_t.sum(-1), np.ones(n), rtol=1e-4, atol=1e-4)
+
+
+def test_clustered_exact_when_clusters_equal_queries():
+    """C == N and singleton clusters ⇒ clustered attention is exact."""
+    n, dk = 24, 8
+    q, k, v = make_qkv(30, n, dk, dk)
+    groups = jnp.arange(n)
+    got = ref.clustered_attention(q, k, v, groups, n)
+    want = ref.full_attention(q, k, v)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_oracle_top_full_k_equals_full():
+    n, dk = 32, 8
+    q, k, v = make_qkv(31, n, dk, dk)
+    got = ref.oracle_top_attention(q, k, v, topk=n)
+    want = ref.full_attention(q, k, v)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_reformer_runs_and_is_distribution_weighted():
+    n, dk = 64, 16
+    x, _, v = make_qkv(33, n, dk, dk)
+    out = ref.reformer_attention(x, v, rounds=2, chunk=16,
+                                 key=jax.random.PRNGKey(0))
+    assert out.shape == (n, dk)
+    assert np.isfinite(np.asarray(out)).all()
+
+
+def test_kmeans_groups_in_range_and_deterministic():
+    codes = jnp.where(rand(jax.random.PRNGKey(50), 200, 32) >= 0, 1.0, -1.0)
+    g1 = ref.hamming_kmeans(codes, 16, 10)
+    g2 = ref.hamming_kmeans(codes, 16, 10)
+    np.testing.assert_array_equal(g1, g2)
+    assert int(jnp.min(g1)) >= 0 and int(jnp.max(g1)) < 16

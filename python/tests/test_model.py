@@ -1,0 +1,274 @@
+"""L2 tests: flat-param layout, forward shapes for every attention variant
+and task head, losses (CTC vs. brute force), optimizer, and a tiny
+overfit run proving gradients flow through clustered attention."""
+
+import itertools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import losses, model, optim, programs
+from compile.configs import AttentionConfig, ModelConfig
+
+
+def tiny_cfg(kind="full", task="tok", **kw):
+    a = AttentionConfig(kind=kind, clusters=4, topk=4, bits=15,
+                        lloyd_iters=3, rounds=2, chunk=8)
+    defaults = dict(name="tiny", task=task, attention=a, n_layers=2,
+                    n_heads=2, d_head=8, d_ff=32, n_symbols=8, vocab_in=12,
+                    seq_len=32, batch_size=2, max_labels=6)
+    defaults.update(kw)
+    return ModelConfig(**defaults)
+
+
+# ---------------------------------------------------------------------------
+# parameter layout
+# ---------------------------------------------------------------------------
+
+def test_param_spec_offsets_cover_vector_exactly():
+    cfg = tiny_cfg()
+    spec = model.param_spec(cfg)
+    total = sum(int(math.prod(s)) for _, s in spec)
+    assert total == model.param_count(cfg)
+    flat = model.init_params(cfg, 0)
+    assert flat.shape == (total,)
+
+
+def test_unpack_params_roundtrip():
+    cfg = tiny_cfg()
+    flat = jnp.arange(model.param_count(cfg), dtype=jnp.float32)
+    p = model.unpack_params(cfg, flat)
+    # Re-concatenate in spec order and compare
+    rebuilt = jnp.concatenate([p[n].reshape(-1)
+                               for n, _ in model.param_spec(cfg)])
+    np.testing.assert_array_equal(rebuilt, flat)
+
+
+def test_param_layout_identical_across_variants():
+    """Table 1 / Table 4 rely on checkpoint transfer between variants."""
+    specs = [model.param_spec(tiny_cfg(kind=k))
+             for k in ("full", "clustered", "i-clustered", "lsh")]
+    assert all(s == specs[0] for s in specs)
+
+
+def test_init_deterministic():
+    cfg = tiny_cfg()
+    np.testing.assert_array_equal(model.init_params(cfg, 7),
+                                  model.init_params(cfg, 7))
+    assert not np.array_equal(model.init_params(cfg, 7),
+                              model.init_params(cfg, 8))
+
+
+# ---------------------------------------------------------------------------
+# forward shapes: every (variant, task) combination
+# ---------------------------------------------------------------------------
+
+VARIANTS = ["full", "shared-full", "clustered", "i-clustered", "lsh",
+            "oracle-top"]
+
+
+@pytest.mark.parametrize("kind", VARIANTS)
+def test_forward_tok_shapes(kind):
+    cfg = tiny_cfg(kind=kind)
+    params = model.init_params(cfg, 0)
+    x = jnp.zeros((cfg.batch_size, cfg.seq_len), jnp.int32)
+    mask = jnp.ones((cfg.batch_size, cfg.seq_len), jnp.float32)
+    out = model.forward(cfg, params, x, mask, 0)
+    assert out.shape == (cfg.batch_size, cfg.seq_len, cfg.n_symbols)
+    assert np.isfinite(np.asarray(out)).all()
+
+
+@pytest.mark.parametrize("task,kind", [("ctc", "full"), ("ctc", "i-clustered"),
+                                       ("cls", "clustered"), ("span", "lsh")])
+def test_forward_other_tasks(task, kind):
+    kw = {}
+    if task == "ctc":
+        kw = dict(vocab_in=0, d_in=8)
+    cfg = tiny_cfg(kind=kind, task=task, **kw)
+    params = model.init_params(cfg, 0)
+    b, n = cfg.batch_size, cfg.seq_len
+    if task == "ctc":
+        x = jax.random.normal(jax.random.PRNGKey(0), (b, n, 8))
+    else:
+        x = jnp.zeros((b, n), jnp.int32)
+    mask = jnp.ones((b, n), jnp.float32)
+    out = model.forward(cfg, params, x, mask, 0)
+    if task == "cls":
+        assert out.shape == (b, cfg.n_symbols)
+    elif task == "span":
+        assert out.shape == (b, n, 2)
+    else:
+        assert out.shape == (b, n, cfg.n_symbols + 1)
+    assert np.isfinite(np.asarray(out)).all()
+
+
+def test_forward_pallas_path_matches_ref_path():
+    cfg_ref = tiny_cfg(kind="i-clustered")
+    cfg_pal = tiny_cfg(kind="i-clustered")
+    cfg_pal = ModelConfig(**{**cfg_pal.to_json_dict_clean(),
+                             "attention": AttentionConfig(
+                                 kind="i-clustered", clusters=4, topk=4,
+                                 bits=15, lloyd_iters=3, use_pallas=True)}) \
+        if hasattr(cfg_pal, "to_json_dict_clean") else None
+    # simpler: construct directly
+    a = AttentionConfig(kind="i-clustered", clusters=4, topk=4, bits=15,
+                        lloyd_iters=3, use_pallas=True)
+    cfg_pal = ModelConfig(name="tiny", task="tok", attention=a, n_layers=2,
+                          n_heads=2, d_head=8, d_ff=32, n_symbols=8,
+                          vocab_in=12, seq_len=32, batch_size=2)
+    params = model.init_params(cfg_ref, 0)
+    x = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0, 12)
+    mask = jnp.ones((2, 32), jnp.float32)
+    out_ref = model.forward(cfg_ref, params, x, mask, 5)
+    out_pal = model.forward(cfg_pal, params, x, mask, 5)
+    np.testing.assert_allclose(out_ref, out_pal, rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# CTC loss
+# ---------------------------------------------------------------------------
+
+def brute_force_ctc(logp, labels):
+    """Enumerate all alignments (tiny T only)."""
+    t_len, vocab = logp.shape
+
+    def collapse(path):
+        out, prev = [], -1
+        for s in path:
+            if s != prev and s != 0:
+                out.append(s)
+            prev = s
+        return tuple(out)
+
+    total = -np.inf
+    for path in itertools.product(range(vocab), repeat=t_len):
+        if collapse(path) == tuple(labels):
+            ll = sum(logp[t, s] for t, s in enumerate(path))
+            total = np.logaddexp(total, ll)
+    return -total
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_ctc_matches_brute_force(seed):
+    t_len, vocab = 5, 4
+    rng = np.random.RandomState(seed)
+    logits = rng.randn(t_len, vocab).astype(np.float32)
+    logp = np.asarray(losses.log_softmax(jnp.asarray(logits)))
+    labels = np.array([1, 2], np.int32)
+    want = brute_force_ctc(logp, labels)
+    got = losses.ctc_loss_single(jnp.asarray(logits),
+                                 jnp.asarray(t_len, jnp.int32),
+                                 jnp.asarray(np.pad(labels, (0, 2))),
+                                 jnp.asarray(2, jnp.int32))
+    assert float(got) == pytest.approx(want, rel=1e-4)
+
+
+def test_ctc_respects_input_len():
+    """Padding frames beyond input_len must not change the loss."""
+    t_len, vocab = 6, 4
+    rng = np.random.RandomState(0)
+    logits = rng.randn(t_len, vocab).astype(np.float32)
+    labels = jnp.asarray([1, 3, 0, 0], jnp.int32)
+    base = losses.ctc_loss_single(jnp.asarray(logits),
+                                  jnp.asarray(4, jnp.int32), labels,
+                                  jnp.asarray(2, jnp.int32))
+    logits2 = logits.copy()
+    logits2[4:] = 123.0  # garbage in padding
+    got = losses.ctc_loss_single(jnp.asarray(logits2),
+                                 jnp.asarray(4, jnp.int32), labels,
+                                 jnp.asarray(2, jnp.int32))
+    assert float(got) == pytest.approx(float(base), rel=1e-5)
+
+
+def test_ctc_impossible_label_longer_than_input():
+    logits = jnp.zeros((2, 4))
+    loss = losses.ctc_loss_single(logits, jnp.asarray(2, jnp.int32),
+                                  jnp.asarray([1, 1, 1], jnp.int32),
+                                  jnp.asarray(3, jnp.int32))
+    assert float(loss) > 1e6  # -LOG_EPS scale ⇒ effectively impossible
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+
+def test_adam_step_matches_manual():
+    p = jnp.asarray([1.0, -2.0])
+    g = jnp.asarray([0.5, 0.1])
+    m = jnp.zeros(2)
+    v = jnp.zeros(2)
+    p2, m2, v2, s2 = optim.adam_step(p, m, v, jnp.asarray(0, jnp.int32), g,
+                                     lr=0.1)
+    mm = 0.1 * np.asarray(g)
+    vv = 0.001 * np.asarray(g) ** 2
+    mhat = mm / (1 - 0.9)
+    vhat = vv / (1 - 0.999)
+    want = np.asarray(p) - 0.1 * mhat / (np.sqrt(vhat) + 1e-8)
+    np.testing.assert_allclose(p2, want, rtol=1e-6)
+    assert int(s2) == 1
+
+
+def test_grad_clip():
+    g = jnp.asarray([30.0, 40.0])  # norm 50
+    clipped = optim.clip_by_global_norm(g, 10.0)
+    np.testing.assert_allclose(np.asarray(clipped), [6.0, 8.0], rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end train steps (gradients flow through every variant)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ["full", "clustered", "i-clustered", "lsh"])
+def test_train_step_decreases_loss(kind):
+    cfg = tiny_cfg(kind=kind, lr=3e-3)
+    fn, specs, names, outs = programs.make_train_step(cfg)
+    fn = jax.jit(fn)
+    key = jax.random.PRNGKey(0)
+    x = jax.random.randint(key, (cfg.batch_size, cfg.seq_len), 0, 12)
+    y = jnp.asarray(x % cfg.n_symbols, jnp.int32)  # learnable identity-ish
+    w = jnp.ones_like(x, jnp.float32)
+    params = model.init_params(cfg, 0)
+    m = jnp.zeros_like(params)
+    v = jnp.zeros_like(params)
+    step = jnp.asarray(0, jnp.int32)
+    first = None
+    for i in range(12):
+        params, m, v, step, loss = fn(params, m, v, step,
+                                      jnp.asarray(i, jnp.int32), x, y, w)
+        if first is None:
+            first = float(loss)
+    assert np.isfinite(float(loss))
+    assert float(loss) < first * 0.8, (first, float(loss))
+
+
+def test_eval_loss_program_runs():
+    cfg = tiny_cfg(kind="clustered")
+    fn, specs, names, outs = programs.make_eval_loss(cfg)
+    args = [jnp.zeros(s.shape, s.dtype) if s.dtype == jnp.int32
+            else jnp.ones(s.shape, s.dtype) for s in specs]
+    args[0] = model.init_params(cfg, 0)
+    (loss,) = jax.jit(fn)(*args)
+    assert np.isfinite(float(loss))
+
+
+def test_attention_maps_program():
+    cfg = tiny_cfg(kind="i-clustered")
+    fn, specs, names, outs = programs.make_attention_maps(cfg, layer=1,
+                                                          head=0)
+    params = model.init_params(cfg, 0)
+    x = jax.random.randint(jax.random.PRNGKey(0), (cfg.seq_len,), 0, 12)
+    mask = jnp.ones((cfg.seq_len,), jnp.float32)
+    a, ac, at = jax.jit(fn)(params, x, mask, jnp.asarray(0, jnp.int32))
+    n = cfg.seq_len
+    assert a.shape == (n, n) and ac.shape == (n, n) and at.shape == (n, n)
+    # all three are row-stochastic
+    for mat in (a, ac, at):
+        np.testing.assert_allclose(np.asarray(mat).sum(-1), np.ones(n),
+                                   rtol=1e-3, atol=1e-3)
+    # Prop 2 on real activations: i-clustered at least as close to full
+    ea = np.abs(np.asarray(ac) - np.asarray(a)).sum(-1)
+    et = np.abs(np.asarray(at) - np.asarray(a)).sum(-1)
+    assert (et <= ea + 1e-4).all()

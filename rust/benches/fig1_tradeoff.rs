@@ -1,0 +1,70 @@
+//! Figure 1: speed–accuracy trade-off under an equalized computational
+//! budget (WSJ-analog 1a and Switchboard-analog 1b).
+//!
+//! Each point = one trained model: x = forward-pass wall time of its
+//! compiled artifact, y = PER on held-out data.  Training effort is
+//! CT_STEPS (default 60; the paper trained to convergence for days —
+//! EXPERIMENTS.md records the scaling caveat).  CT_FULL=1 expands to the
+//! full variant grid.
+
+use clustered_transformers::benchlib::traincache::{
+    env_usize, eval_score, forward_time, full_grid, train_or_load,
+};
+use clustered_transformers::benchlib::Table;
+use clustered_transformers::config::{find_repo_root, init_logging};
+use clustered_transformers::runtime::Runtime;
+
+fn main() {
+    init_logging(false);
+    let dir = find_repo_root().join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("no artifacts; run `make artifacts`");
+        return;
+    }
+    let rt = Runtime::open(dir).unwrap();
+    let steps = env_usize("CT_STEPS", 60) as u64;
+
+    let mut wsj: Vec<&str> = vec![
+        "wsj-l2-full", "wsj-l4-full", "wsj-l6-full",
+        "wsj-l6-clustered-25", "wsj-l6-i-clustered-25", "wsj-l6-lsh-1",
+    ];
+    if full_grid() {
+        wsj.extend(["wsj-l6-clustered-50", "wsj-l6-clustered-75",
+                    "wsj-l6-i-clustered-50", "wsj-l4-i-clustered-25",
+                    "wsj-l4-i-clustered-50", "wsj-l6-lsh-4"]);
+    }
+    let mut swb: Vec<&str> = vec![
+        "swb-l2-full", "swb-l6-full", "swb-l6-clustered-25",
+        "swb-l6-i-clustered-25",
+    ];
+    if full_grid() {
+        swb.extend(["swb-l4-full", "swb-l6-i-clustered-50"]);
+    }
+
+    for (fig, models) in [("fig1a: WSJ-analog speed-accuracy", &wsj),
+                          ("fig1b: SWB-analog speed-accuracy", &swb)] {
+        let mut tbl = Table::new(
+            fig, &["model", "fwd ms/batch", "PER%", "train s/step"]);
+        for model in models.iter() {
+            match run_point(&rt, model, steps) {
+                Ok(row) => tbl.row(row),
+                Err(e) => eprintln!("  {model}: {e:#}"),
+            }
+        }
+        tbl.emit();
+    }
+    println!("expected shape (paper fig. 1): i-clustered dominates the \
+              budget frontier;\nclustered is fastest-but-coarser; full \
+              needs more layers (time) for the same PER.");
+}
+
+fn run_point(rt: &Runtime, model: &str, steps: u64)
+             -> anyhow::Result<Vec<String>> {
+    let ckpt = train_or_load(rt, model, steps)?;
+    let fwd = format!("{model}.forward");
+    let t = forward_time(rt, &fwd, &ckpt.params, 3)?;
+    let score = eval_score(rt, &fwd, &ckpt.params, 4)?;
+    let sps = ckpt.meta.get("seconds_per_step").as_f64().unwrap_or(0.0);
+    Ok(vec![model.to_string(), format!("{:.1}", t * 1e3),
+            format!("{:.1}", score.value), format!("{sps:.2}")])
+}

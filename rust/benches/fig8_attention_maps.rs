@@ -1,0 +1,114 @@
+//! Figure 8 (suppl. §C.4): qualitative attention-map comparison on the
+//! SQuAD-analog task — full vs clustered vs i-clustered from the SAME
+//! pretrained weights, via the `attention_maps` artifact.
+//!
+//! Prints per-row L1 approximation errors (the quantitative core of the
+//! figure), an agreement statistic on each query's argmax key, and an
+//! ASCII sparkline of one query's attention row.
+
+use clustered_transformers::benchlib::traincache::{env_usize,
+                                                   train_or_load};
+use clustered_transformers::benchlib::Table;
+use clustered_transformers::config::{find_repo_root, init_logging};
+use clustered_transformers::data::{glue, Split};
+use clustered_transformers::runtime::{HostTensor, Runtime};
+
+fn main() {
+    init_logging(false);
+    let dir = find_repo_root().join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("no artifacts; run `make artifacts`");
+        return;
+    }
+    let rt = Runtime::open(dir).unwrap();
+    let steps = env_usize("CT_STEPS_GLUE", 150) as u64;
+
+    let ckpt = match train_or_load(&rt, "glue-squad-full", steps) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("pretrain failed: {e:#}");
+            return;
+        }
+    };
+    let exe = rt
+        .load("glue-squad-i-clustered-25.attention_maps")
+        .expect("attention_maps artifact");
+
+    // one real SQuAD-analog sample
+    let batch = glue::span_batch(0, Split::Test, 0, 1);
+    let n = batch.seq_len;
+    let outputs = exe
+        .run(&[
+            HostTensor::F32(ckpt.params.clone()),
+            HostTensor::I32(batch.x[..n].to_vec()),
+            HostTensor::F32(batch.mask[..n].to_vec()),
+            HostTensor::scalar_i32(0),
+        ])
+        .unwrap();
+    let a_full = outputs[0].as_f32().unwrap();
+    let a_clus = outputs[1].as_f32().unwrap();
+    let a_impr = outputs[2].as_f32().unwrap();
+
+    let l1 = |approx: &[f32]| -> (f64, f64) {
+        let mut total = 0f64;
+        let mut worst = 0f64;
+        for i in 0..n {
+            let row: f64 = (0..n)
+                .map(|j| (approx[i * n + j] - a_full[i * n + j]).abs()
+                     as f64)
+                .sum();
+            total += row;
+            worst = worst.max(row);
+        }
+        (total / n as f64, worst)
+    };
+    let argmax_agree = |approx: &[f32]| -> f64 {
+        let mut agree = 0usize;
+        for i in 0..n {
+            let am = |m: &[f32]| (0..n)
+                .max_by(|&a, &b| m[i * n + a].partial_cmp(&m[i * n + b])
+                        .unwrap())
+                .unwrap();
+            if am(approx) == am(a_full) {
+                agree += 1;
+            }
+        }
+        agree as f64 / n as f64
+    };
+
+    let (mc, wc) = l1(a_clus);
+    let (mi, wi) = l1(a_impr);
+    let mut tbl = Table::new(
+        "fig8: attention-map approximation vs full (SQuAD-analog, layer 3)",
+        &["variant", "mean row L1", "worst row L1", "argmax agreement"],
+    );
+    tbl.row(vec!["clustered-25".into(), format!("{mc:.3}"),
+                 format!("{wc:.3}"), format!("{:.2}", argmax_agree(a_clus))]);
+    tbl.row(vec!["i-clustered-25".into(), format!("{mi:.3}"),
+                 format!("{wi:.3}"), format!("{:.2}", argmax_agree(a_impr))]);
+    tbl.emit();
+
+    // sparkline of a question-token row (query 1 = first needle token)
+    let q = 1usize;
+    println!("attention row of question token {q} (▁=0 … █=max):");
+    for (name, m) in [("full", a_full), ("clustered", a_clus),
+                      ("i-clustered", a_impr)] {
+        let row = &m[q * n..(q + 1) * n];
+        let max = row.iter().cloned().fold(0f32, f32::max).max(1e-9);
+        let chars = "▁▂▃▄▅▆▇█";
+        let line: String = row
+            .iter()
+            .step_by(2)
+            .map(|&v| {
+                let idx = ((v / max) * 7.0).round() as usize;
+                chars.chars().nth(idx.min(7)).unwrap()
+            })
+            .collect();
+        println!("{name:>12}: {line}");
+    }
+    assert!(mi <= mc + 1e-6,
+            "prop 2 violated on real activations: {mi} > {mc}");
+    println!("\nexpected shape (paper fig. 8): i-clustered reproduces \
+              full's sparse pointer patterns; clustered smears them \
+              (higher L1, lower argmax agreement).");
+}

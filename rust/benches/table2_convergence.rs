@@ -1,0 +1,79 @@
+//! Table 2: WSJ-analog convergence economics — test PER, time per epoch
+//! and wall-clock time to (early-stop) convergence for the 6-layer
+//! variants.  An "epoch" here is a fixed 50-step pass (synthetic corpus =
+//! infinite sampler), matching relative comparisons, not absolute hours.
+
+use clustered_transformers::benchlib::traincache::{env_usize, eval_score,
+                                                   full_grid,
+                                                   train_or_load};
+use clustered_transformers::benchlib::Table;
+use clustered_transformers::config::{find_repo_root, init_logging};
+use clustered_transformers::runtime::Runtime;
+
+const STEPS_PER_EPOCH: f64 = 50.0;
+
+fn main() {
+    init_logging(false);
+    let dir = find_repo_root().join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("no artifacts; run `make artifacts`");
+        return;
+    }
+    let rt = Runtime::open(dir).unwrap();
+    let steps = env_usize("CT_STEPS", 60) as u64;
+
+    let mut variants: Vec<&str> =
+        vec!["full", "lsh-1", "clustered-25", "i-clustered-25"];
+    if full_grid() {
+        variants.push("lsh-4");
+    }
+
+    let mut tbl = Table::new(
+        "table2: WSJ-analog convergence (6 layers)",
+        &["variant", "test PER%", "s/epoch (50 steps)",
+          "best-val wall s", "total wall s"],
+    );
+    for v in &variants {
+        let model = format!("wsj-l6-{v}");
+        match train_or_load(&rt, &model, steps) {
+            Ok(ckpt) => {
+                let sps = ckpt.meta.get("seconds_per_step").as_f64()
+                    .unwrap_or(0.0);
+                let wall = ckpt.meta.get("wall_seconds").as_f64()
+                    .unwrap_or(0.0);
+                // wall time until the best validation loss was reached
+                let best_step = best_val_step(&ckpt.meta);
+                let best_wall = sps * best_step;
+                let per = eval_score(&rt, &format!("{model}.forward"),
+                                     &ckpt.params, 3)
+                    .map(|s| format!("{:.1}", s.value))
+                    .unwrap_or_else(|_| "-".into());
+                tbl.row(vec![v.to_string(), per,
+                             format!("{:.1}", sps * STEPS_PER_EPOCH),
+                             format!("{best_wall:.1}"),
+                             format!("{wall:.1}")]);
+            }
+            Err(e) => eprintln!("  {model}: {e:#}"),
+        }
+    }
+    tbl.emit();
+    println!("expected shape (paper table 2): clustered ≈ 3× faster/epoch \
+              than full, i-clustered ≈ 2×;\ni-clustered alone beats full \
+              on total wall-clock to a given quality.");
+}
+
+fn best_val_step(meta: &clustered_transformers::jsonio::Value) -> f64 {
+    let mut best = (f64::INFINITY, 0.0);
+    if let Some(arr) = meta.get("val_curve").as_arr() {
+        for pair in arr {
+            if let Some(p) = pair.as_arr() {
+                let (s, l) = (p[0].as_f64().unwrap_or(0.0),
+                              p[1].as_f64().unwrap_or(f64::INFINITY));
+                if l < best.0 {
+                    best = (l, s);
+                }
+            }
+        }
+    }
+    best.1
+}

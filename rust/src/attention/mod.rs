@@ -1,0 +1,502 @@
+//! Pure-Rust reference attention (all paper variants, single head).
+//!
+//! Three roles:
+//!  1. second correctness oracle — integration tests compare these against
+//!     HLO lowered from `python/compile/kernels/ref.py` on golden inputs;
+//!  2. the fig. 4 scaling benchmark substrate (runs to N = 2^15 quickly,
+//!     which interpret-mode Pallas cannot);
+//!  3. the analytic cost model (flops/bytes) used for the memory column
+//!     of fig. 4 and the §Perf roofline estimates.
+
+use crate::clustering::{self, Clustering};
+use crate::prng::Xoshiro256;
+use crate::tensor::{axpy, dot, softmax_inplace, topk_indices, Matrix};
+
+/// Which attention variant to run — mirrors `AttentionConfig` in L2.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Variant {
+    Full,
+    SharedFull,
+    Clustered { clusters: usize, bits: usize, iters: usize },
+    ImprovedClustered { clusters: usize, bits: usize, iters: usize,
+                        topk: usize },
+    OracleTop { topk: usize },
+    Lsh { rounds: usize, chunk: usize },
+}
+
+impl Variant {
+    pub fn name(&self) -> String {
+        match self {
+            Variant::Full => "full".into(),
+            Variant::SharedFull => "shared-full".into(),
+            Variant::Clustered { clusters, .. } => {
+                format!("clustered-{clusters}")
+            }
+            Variant::ImprovedClustered { clusters, .. } => {
+                format!("i-clustered-{clusters}")
+            }
+            Variant::OracleTop { topk } => format!("oracle-top-{topk}"),
+            Variant::Lsh { rounds, .. } => format!("lsh-{rounds}"),
+        }
+    }
+}
+
+/// Dispatch a variant.  `q`,`k`: (N×Dk), `v`: (N×Dv) → (N×Dv).
+pub fn run(variant: &Variant, q: &Matrix, k: &Matrix, v: &Matrix,
+           rng: &mut Xoshiro256) -> Matrix {
+    match variant {
+        Variant::Full => full_attention(q, k, v),
+        Variant::SharedFull => full_attention(q, q, v),
+        Variant::Clustered { clusters, bits, iters } => {
+            let cl = clustering::cluster_queries(q, *clusters, *bits,
+                                                 *iters, rng);
+            clustered_attention(q, k, v, &cl)
+        }
+        Variant::ImprovedClustered { clusters, bits, iters, topk } => {
+            let cl = clustering::cluster_queries(q, *clusters, *bits,
+                                                 *iters, rng);
+            improved_clustered_attention(q, k, v, &cl, *topk)
+        }
+        Variant::OracleTop { topk } => oracle_top_attention(q, k, v, *topk),
+        Variant::Lsh { rounds, chunk } => {
+            reformer_attention(q, v, *rounds, *chunk, rng)
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// full attention (eq. 1–2)
+// ---------------------------------------------------------------------------
+
+pub fn full_attention(q: &Matrix, k: &Matrix, v: &Matrix) -> Matrix {
+    let scale = 1.0 / (q.cols as f32).sqrt();
+    let mut logits = q.matmul_nt(k); // (N, N)
+    logits.scale(scale);
+    logits.softmax_rows();
+    logits.matmul(v)
+}
+
+/// Dense attention matrix (fig. 8 dumps).
+pub fn full_attention_matrix(q: &Matrix, k: &Matrix) -> Matrix {
+    let scale = 1.0 / (q.cols as f32).sqrt();
+    let mut logits = q.matmul_nt(k);
+    logits.scale(scale);
+    logits.softmax_rows();
+    logits
+}
+
+// ---------------------------------------------------------------------------
+// clustered attention (eqs. 3–6)
+// ---------------------------------------------------------------------------
+
+/// Eq. (3): centroids of the member queries.
+pub fn centroids(q: &Matrix, cl: &Clustering) -> Matrix {
+    let mut cent = Matrix::zeros(cl.n_clusters, q.cols);
+    for i in 0..q.rows {
+        axpy(cent.row_mut(cl.groups[i] as usize), 1.0, q.row(i));
+    }
+    for c in 0..cl.n_clusters {
+        if cl.counts[c] > 0 {
+            let inv = 1.0 / cl.counts[c] as f32;
+            for val in cent.row_mut(c) {
+                *val *= inv;
+            }
+        }
+    }
+    cent
+}
+
+/// Eq. (4): A^c = softmax(Q^c K^T / sqrt(Dk)) — (C × N).
+pub fn clustered_attention_matrix(q: &Matrix, k: &Matrix, cl: &Clustering)
+                                  -> Matrix {
+    let cent = centroids(q, cl);
+    let scale = 1.0 / (q.cols as f32).sqrt();
+    let mut a_c = cent.matmul_nt(k);
+    a_c.scale(scale);
+    a_c.softmax_rows();
+    a_c
+}
+
+/// Eqs. (4)–(6): O(N·C·D).
+pub fn clustered_attention(q: &Matrix, k: &Matrix, v: &Matrix,
+                           cl: &Clustering) -> Matrix {
+    let a_c = clustered_attention_matrix(q, k, cl);
+    let v_c = a_c.matmul(v); // (C, Dv)
+    let mut out = Matrix::zeros(q.rows, v.cols);
+    for i in 0..q.rows {
+        out.row_mut(i).copy_from_slice(v_c.row(cl.groups[i] as usize));
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// improved clustered attention (eqs. 9–11 / suppl. 15–17)
+// ---------------------------------------------------------------------------
+
+pub fn improved_clustered_attention(q: &Matrix, k: &Matrix, v: &Matrix,
+                                    cl: &Clustering, topk: usize) -> Matrix {
+    let n = q.rows;
+    let c = cl.n_clusters;
+    let scale = 1.0 / (q.cols as f32).sqrt();
+    let a_c = clustered_attention_matrix(q, k, cl); // (C, N)
+
+    // per-cluster top-k keys, captured mass m̂ (eq. 9) and V̂^b basis
+    let mut top: Vec<Vec<usize>> = Vec::with_capacity(c);
+    let mut mhat = vec![0f32; c];
+    let mut v_b = Matrix::zeros(c, v.cols); // complement average per cluster
+    for j in 0..c {
+        let idx = topk_indices(a_c.row(j), topk);
+        mhat[j] = idx.iter().map(|&i| a_c.at(j, i)).sum();
+        // V̂^b row: clustered attention with top-k columns zeroed (eq. 17)
+        let row = a_c.row(j);
+        let mut acc = vec![0f32; v.cols];
+        for (key_idx, &w) in row.iter().enumerate() {
+            if w != 0.0 && !idx.contains(&key_idx) {
+                axpy(&mut acc, w, v.row(key_idx));
+            }
+        }
+        v_b.row_mut(j).copy_from_slice(&acc);
+        top.push(idx);
+    }
+
+    // V̂ = V̂^t + V̂^b (eqs. 15–16)
+    let mut out = Matrix::zeros(n, v.cols);
+    let mut dots = vec![0f32; topk];
+    for i in 0..n {
+        let j = cl.groups[i] as usize;
+        let idx = &top[j];
+        let t = idx.len();
+        for (slot, &key_idx) in idx.iter().enumerate() {
+            dots[slot] = dot(q.row(i), k.row(key_idx)) * scale;
+        }
+        softmax_inplace(&mut dots[..t]);
+        let orow = out.row_mut(i);
+        orow.copy_from_slice(v_b.row(j));
+        for (slot, &key_idx) in idx.iter().enumerate() {
+            axpy(orow, dots[slot] * mhat[j], v.row(key_idx));
+        }
+    }
+    out
+}
+
+/// Dense A^t (eq. 10) for fig. 8.
+pub fn improved_clustered_attention_matrix(q: &Matrix, k: &Matrix,
+                                           cl: &Clustering, topk: usize)
+                                           -> Matrix {
+    let n = q.rows;
+    let scale = 1.0 / (q.cols as f32).sqrt();
+    let a_c = clustered_attention_matrix(q, k, cl);
+    let mut out = Matrix::zeros(n, n);
+    let mut dots = vec![0f32; topk];
+    for i in 0..n {
+        let j = cl.groups[i] as usize;
+        let idx = topk_indices(a_c.row(j), topk);
+        let mhat: f32 = idx.iter().map(|&l| a_c.at(j, l)).sum();
+        out.row_mut(i).copy_from_slice(a_c.row(j));
+        for (slot, &l) in idx.iter().enumerate() {
+            dots[slot] = dot(q.row(i), k.row(l)) * scale;
+        }
+        softmax_inplace(&mut dots[..idx.len()]);
+        for (slot, &l) in idx.iter().enumerate() {
+            out.set(i, l, dots[slot] * mhat);
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// oracle-top baseline (§4.1)
+// ---------------------------------------------------------------------------
+
+pub fn oracle_top_attention(q: &Matrix, k: &Matrix, v: &Matrix, topk: usize)
+                            -> Matrix {
+    let scale = 1.0 / (q.cols as f32).sqrt();
+    let mut out = Matrix::zeros(q.rows, v.cols);
+    let mut logits = vec![0f32; k.rows];
+    for i in 0..q.rows {
+        for j in 0..k.rows {
+            logits[j] = dot(q.row(i), k.row(j)) * scale;
+        }
+        let idx = topk_indices(&logits, topk);
+        let mut w: Vec<f32> = idx.iter().map(|&j| logits[j]).collect();
+        softmax_inplace(&mut w);
+        let orow = out.row_mut(i);
+        for (slot, &j) in idx.iter().enumerate() {
+            axpy(orow, w[slot], v.row(j));
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Reformer-style LSH attention baseline
+// ---------------------------------------------------------------------------
+
+/// Shared-QK chunked LSH attention; rounds combined with logsumexp weights.
+pub fn reformer_attention(x: &Matrix, v: &Matrix, rounds: usize,
+                          chunk: usize, rng: &mut Xoshiro256) -> Matrix {
+    let n = x.rows;
+    assert_eq!(n % chunk, 0, "N must be divisible by chunk");
+    let n_buckets = 16usize;
+    let scale = 1.0 / (x.cols as f32).sqrt();
+
+    let mut outs: Vec<Matrix> = Vec::with_capacity(rounds);
+    let mut lses: Vec<Vec<f32>> = Vec::with_capacity(rounds);
+
+    for _ in 0..rounds {
+        // angular LSH: argmax over [xR; -xR]
+        let rot = Matrix::randn(n_buckets / 2, x.cols, rng);
+        let mut buckets = vec![0usize; n];
+        for i in 0..n {
+            let (mut best_v, mut best_b) = (f32::NEG_INFINITY, 0usize);
+            for b in 0..n_buckets / 2 {
+                let h = dot(x.row(i), rot.row(b));
+                if h > best_v {
+                    best_v = h;
+                    best_b = b;
+                }
+                if -h > best_v {
+                    best_v = -h;
+                    best_b = b + n_buckets / 2;
+                }
+            }
+            buckets[i] = best_b;
+        }
+        // stable sort by bucket
+        let mut order: Vec<usize> = (0..n).collect();
+        order.sort_by_key(|&i| (buckets[i], i));
+
+        let mut out = Matrix::zeros(n, v.cols);
+        let mut lse = vec![f32::NEG_INFINITY; n];
+        let n_chunks = n / chunk;
+        for cidx in 0..n_chunks {
+            let prev = (cidx + n_chunks - 1) % n_chunks;
+            // candidate keys: previous chunk ++ own chunk
+            let cand: Vec<usize> = order[prev * chunk..(prev + 1) * chunk]
+                .iter()
+                .chain(&order[cidx * chunk..(cidx + 1) * chunk])
+                .copied()
+                .collect();
+            for &qi in &order[cidx * chunk..(cidx + 1) * chunk] {
+                let mut logits = Vec::with_capacity(cand.len());
+                for &kj in &cand {
+                    let l = if buckets[kj] != buckets[qi] {
+                        f32::NEG_INFINITY
+                    } else if kj == qi {
+                        -5e8 // self only as a fallback
+                    } else {
+                        dot(x.row(qi), x.row(kj)) * scale
+                    };
+                    logits.push(l);
+                }
+                let m = logits.iter().copied().fold(f32::NEG_INFINITY,
+                                                    f32::max);
+                let mut sum = 0f32;
+                for l in &mut logits {
+                    *l = (*l - m).exp();
+                    sum += *l;
+                }
+                lse[qi] = m + sum.max(1e-30).ln();
+                let inv = 1.0 / sum.max(1e-30);
+                let orow = out.row_mut(qi);
+                for (slot, &kj) in cand.iter().enumerate() {
+                    if logits[slot] > 0.0 {
+                        axpy(orow, logits[slot] * inv, v.row(kj));
+                    }
+                }
+            }
+        }
+        outs.push(out);
+        lses.push(lse);
+    }
+
+    // combine rounds: softmax over per-position lse
+    let mut combined = Matrix::zeros(n, v.cols);
+    for i in 0..n {
+        let m = (0..rounds)
+            .map(|r| lses[r][i])
+            .fold(f32::NEG_INFINITY, f32::max);
+        let ws: Vec<f32> = (0..rounds).map(|r| (lses[r][i] - m).exp())
+            .collect();
+        let tot: f32 = ws.iter().sum();
+        let orow = combined.row_mut(i);
+        for r in 0..rounds {
+            axpy(orow, ws[r] / tot.max(1e-30), outs[r].row(i));
+        }
+    }
+    combined
+}
+
+// ---------------------------------------------------------------------------
+// analytic cost model (fig. 4 memory column + §Perf rooflines)
+// ---------------------------------------------------------------------------
+
+/// Estimated cost of one attention call.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Cost {
+    /// multiply-accumulate operations
+    pub flops: u64,
+    /// peak extra bytes beyond inputs/outputs (f32)
+    pub bytes: u64,
+}
+
+/// Closed-form cost of each variant (matches §3 complexity claims).
+pub fn cost_model(variant: &Variant, n: usize, dk: usize, dv: usize)
+                  -> Cost {
+    let (n64, dk64, dv64) = (n as u64, dk as u64, dv as u64);
+    match variant {
+        Variant::Full | Variant::SharedFull => Cost {
+            flops: n64 * n64 * (dk64 + dv64),
+            bytes: 4 * n64 * n64,
+        },
+        Variant::Clustered { clusters, bits, iters } => {
+            let (c, b, l) = (*clusters as u64, *bits as u64, *iters as u64);
+            Cost {
+                // LSH + Lloyd (O(NCL + ND_kB)) + centroid attention
+                flops: n64 * dk64 * b + n64 * c * l
+                    + c * n64 * (dk64 + dv64),
+                bytes: 4 * c * n64 + n64 * b / 8,
+            }
+        }
+        Variant::ImprovedClustered { clusters, bits, iters, topk } => {
+            let base = cost_model(
+                &Variant::Clustered { clusters: *clusters, bits: *bits,
+                                      iters: *iters }, n, dk, dv);
+            Cost {
+                flops: base.flops
+                    + n64 * (*topk as u64) * (dk64 + dv64),
+                bytes: base.bytes + 4 * n64 * (*topk as u64),
+            }
+        }
+        Variant::OracleTop { topk } => Cost {
+            flops: n64 * n64 * dk64 + n64 * (*topk as u64) * dv64,
+            bytes: 4 * n64 * n64,
+        },
+        Variant::Lsh { rounds, chunk } => {
+            let (r, c) = (*rounds as u64, *chunk as u64);
+            Cost {
+                flops: r * n64 * 2 * c * (dk64 + dv64)
+                    + r * n64 * dk64 * 8,
+                bytes: 4 * r * n64 * 2 * c,
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn qkv(n: usize, dk: usize, dv: usize, seed: u64)
+           -> (Matrix, Matrix, Matrix, Xoshiro256) {
+        let mut rng = Xoshiro256::new(seed);
+        let q = Matrix::randn(n, dk, &mut rng);
+        let k = Matrix::randn(n, dk, &mut rng);
+        let v = Matrix::randn(n, dv, &mut rng);
+        (q, k, v, rng)
+    }
+
+    #[test]
+    fn full_attention_rows_are_convex_combinations() {
+        let (q, k, v, _) = qkv(24, 8, 8, 1);
+        let a = full_attention_matrix(&q, &k);
+        for r in 0..24 {
+            let s: f32 = a.row(r).iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+        }
+        let out = full_attention(&q, &k, &v);
+        assert_eq!((out.rows, out.cols), (24, 8));
+    }
+
+    #[test]
+    fn clustered_with_singleton_clusters_is_exact() {
+        let (q, k, v, _) = qkv(16, 8, 8, 2);
+        let cl = Clustering {
+            n_clusters: 16,
+            groups: (0..16u32).collect(),
+            counts: vec![1; 16],
+            cost: 0,
+        };
+        let got = clustered_attention(&q, &k, &v, &cl);
+        let want = full_attention(&q, &k, &v);
+        assert!(got.max_abs_diff(&want) < 1e-5);
+    }
+
+    #[test]
+    fn improved_is_never_worse_than_clustered_prop2() {
+        let (q, k, _, mut rng) = qkv(48, 16, 16, 3);
+        let cl = clustering::cluster_queries(&q, 6, 31, 5, &mut rng);
+        let a = full_attention_matrix(&q, &k);
+        let a_c = clustered_attention_matrix(&q, &k, &cl);
+        let a_t = improved_clustered_attention_matrix(&q, &k, &cl, 8);
+        for i in 0..48 {
+            let j = cl.groups[i] as usize;
+            let ec: f32 = (0..48)
+                .map(|l| (a_c.at(j, l) - a.at(i, l)).abs())
+                .sum();
+            let et: f32 = (0..48)
+                .map(|l| (a_t.at(i, l) - a.at(i, l)).abs())
+                .sum();
+            assert!(et <= ec + 1e-4, "row {i}: {et} > {ec}");
+        }
+    }
+
+    #[test]
+    fn improved_matrix_rows_are_distributions() {
+        let (q, k, _, mut rng) = qkv(32, 8, 8, 4);
+        let cl = clustering::cluster_queries(&q, 4, 31, 5, &mut rng);
+        let a_t = improved_clustered_attention_matrix(&q, &k, &cl, 8);
+        for i in 0..32 {
+            let s: f32 = a_t.row(i).iter().sum();
+            assert!((s - 1.0).abs() < 1e-4, "row {i} sums to {s}");
+            assert!(a_t.row(i).iter().all(|&w| w >= -1e-6));
+        }
+    }
+
+    #[test]
+    fn improved_attention_output_matches_matrix_times_v() {
+        let (q, k, v, mut rng) = qkv(32, 8, 8, 5);
+        let cl = clustering::cluster_queries(&q, 4, 31, 5, &mut rng);
+        let fast = improved_clustered_attention(&q, &k, &v, &cl, 8);
+        let a_t = improved_clustered_attention_matrix(&q, &k, &cl, 8);
+        let dense = a_t.matmul(&v);
+        assert!(fast.max_abs_diff(&dense) < 1e-4);
+    }
+
+    #[test]
+    fn oracle_top_with_full_k_is_exact() {
+        let (q, k, v, _) = qkv(20, 8, 8, 6);
+        let got = oracle_top_attention(&q, &k, &v, 20);
+        let want = full_attention(&q, &k, &v);
+        assert!(got.max_abs_diff(&want) < 1e-5);
+    }
+
+    #[test]
+    fn reformer_output_is_finite_and_right_shape() {
+        let (q, _, v, mut rng) = qkv(64, 16, 16, 7);
+        let out = reformer_attention(&q, &v, 2, 16, &mut rng);
+        assert_eq!((out.rows, out.cols), (64, 16));
+        assert!(out.data.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn cost_model_full_is_quadratic_clustered_linear() {
+        let full_1k = cost_model(&Variant::Full, 1024, 64, 64);
+        let full_2k = cost_model(&Variant::Full, 2048, 64, 64);
+        assert_eq!(full_2k.flops, full_1k.flops * 4);
+        let cl = Variant::Clustered { clusters: 100, bits: 63, iters: 10 };
+        let cl_1k = cost_model(&cl, 1024, 64, 64);
+        let cl_2k = cost_model(&cl, 2048, 64, 64);
+        assert_eq!(cl_2k.flops, cl_1k.flops * 2);
+    }
+
+    #[test]
+    fn variant_names_match_paper_notation() {
+        assert_eq!(Variant::Full.name(), "full");
+        assert_eq!(
+            Variant::Clustered { clusters: 100, bits: 63, iters: 10 }.name(),
+            "clustered-100"
+        );
+        assert_eq!(Variant::Lsh { rounds: 4, chunk: 32 }.name(), "lsh-4");
+    }
+}

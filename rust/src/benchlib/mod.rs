@@ -1,0 +1,191 @@
+//! Micro-benchmark harness (criterion is unavailable offline — DESIGN.md §5).
+//!
+//! `cargo bench` targets are `harness = false` binaries built on this
+//! module: warmup, adaptive iteration counts, robust statistics and
+//! aligned table output matching the paper's table/figure rows.
+
+use std::time::{Duration, Instant};
+
+/// Timing statistics over repeated runs.
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub iters: usize,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+}
+
+impl Stats {
+    pub fn from_samples(samples: &[f64]) -> Self {
+        let n = samples.len().max(1) as f64;
+        let mean = samples.iter().sum::<f64>() / n;
+        let var = samples
+            .iter()
+            .map(|s| (s - mean) * (s - mean))
+            .sum::<f64>()
+            / n;
+        Stats {
+            iters: samples.len(),
+            mean_s: mean,
+            std_s: var.sqrt(),
+            min_s: samples.iter().copied().fold(f64::INFINITY, f64::min),
+            max_s: samples.iter().copied().fold(0.0, f64::max),
+        }
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_s * 1e3
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        self.mean_s * 1e6
+    }
+}
+
+/// Benchmark a closure: `warmup` untimed runs, then timed runs until both
+/// `min_iters` and `min_time` are satisfied (capped at `max_iters`).
+pub fn bench<F: FnMut()>(mut f: F, warmup: usize, min_iters: usize,
+                         min_time: Duration, max_iters: usize) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::new();
+    let start = Instant::now();
+    while (samples.len() < min_iters || start.elapsed() < min_time)
+        && samples.len() < max_iters
+    {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    Stats::from_samples(&samples)
+}
+
+/// Quick preset: 1 warmup, >=3 iters or 1s.
+pub fn quick<F: FnMut()>(f: F) -> Stats {
+    bench(f, 1, 3, Duration::from_secs(1), 50)
+}
+
+/// Aligned plain-text table writer (also emits machine-readable TSV).
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "column count mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> =
+            self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = format!("\n== {} ==\n", self.title);
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:>w$}"))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out += &fmt_row(&self.headers, &widths);
+        out.push('\n');
+        out += &"-".repeat(widths.iter().sum::<usize>() + 2 * widths.len());
+        out.push('\n');
+        for row in &self.rows {
+            out += &fmt_row(row, &widths);
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Print the table and append a TSV copy under `target/bench-results/`.
+    pub fn emit(&self) {
+        println!("{}", self.render());
+        let dir = std::path::Path::new("target/bench-results");
+        let _ = std::fs::create_dir_all(dir);
+        let slug: String = self
+            .title
+            .chars()
+            .map(|c| if c.is_alphanumeric() { c } else { '_' })
+            .collect();
+        let mut tsv = self.headers.join("\t") + "\n";
+        for row in &self.rows {
+            tsv += &(row.join("\t") + "\n");
+        }
+        let _ = std::fs::write(dir.join(format!("{slug}.tsv")), tsv);
+    }
+}
+
+/// Format seconds adaptively (ns/µs/ms/s).
+pub fn fmt_time(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.0}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.1}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.2}s", s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_over_known_samples() {
+        let s = Stats::from_samples(&[1.0, 2.0, 3.0]);
+        assert_eq!(s.iters, 3);
+        assert!((s.mean_s - 2.0).abs() < 1e-12);
+        assert!((s.std_s - (2.0f64 / 3.0).sqrt()).abs() < 1e-12);
+        assert_eq!(s.min_s, 1.0);
+        assert_eq!(s.max_s, 3.0);
+    }
+
+    #[test]
+    fn bench_runs_at_least_min_iters() {
+        let mut count = 0;
+        let st = bench(|| count += 1, 2, 5,
+                       Duration::from_millis(0), 100);
+        assert!(st.iters >= 5);
+        assert_eq!(count, st.iters + 2);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("demo", &["name", "val"]);
+        t.row(vec!["a".into(), "1.5".into()]);
+        t.row(vec!["longer".into(), "2".into()]);
+        let r = t.render();
+        assert!(r.contains("demo"));
+        assert!(r.contains("longer"));
+    }
+
+    #[test]
+    fn fmt_time_ranges() {
+        assert!(fmt_time(2.5e-9).ends_with("ns"));
+        assert!(fmt_time(2.5e-5).ends_with("µs"));
+        assert!(fmt_time(2.5e-2).ends_with("ms"));
+        assert!(fmt_time(2.5).ends_with('s'));
+    }
+}
+pub mod traincache;

@@ -1,0 +1,126 @@
+//! Shared train-or-load cache for the benches.
+//!
+//! Several benches need the same trained checkpoints (fig. 1 ↔ tables 1/2,
+//! fig. 7).  `train_or_load` trains through the HLO driver once, stashes
+//! the checkpoint (with its loss curve and timing in `meta`) under
+//! `target/checkpoints/`, and reuses it afterwards.
+//!
+//! Effort is controlled by environment variables so `cargo bench` stays
+//! bounded by default while full-scale paper runs remain one env var away:
+//!   CT_STEPS        ASR training steps per model   (default 60)
+//!   CT_STEPS_COPY   copy-task steps per model      (default 150)
+//!   CT_STEPS_GLUE   GLUE-analog steps per model    (default 150)
+//!   CT_FULL=1       expand benches to the paper's full variant grids
+
+use anyhow::Result;
+
+use crate::config::RunConfig;
+use crate::coordinator::trainer::{train_model, TrainOptions, TrainResult};
+use crate::jsonio::{obj, Value};
+use crate::runtime::checkpoint::Checkpoint;
+use crate::runtime::Runtime;
+
+pub fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key)
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+}
+
+pub fn full_grid() -> bool {
+    std::env::var("CT_FULL").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Train `model` for `steps` (or load the cached checkpoint trained with
+/// >= steps).  Returns the checkpoint; its `meta` carries
+/// `{steps, wall_seconds, seconds_per_step, curve: [[step, loss]...],
+///   val_curve: [[step, val_loss]...]}`.
+pub fn train_or_load(rt: &Runtime, model: &str, steps: u64)
+                     -> Result<Checkpoint> {
+    let cfg = RunConfig::default();
+    cfg.ensure_dirs()?;
+    let path = cfg.checkpoint_path(model);
+    if let Ok(ckpt) = Checkpoint::load(&path) {
+        let cached_steps =
+            ckpt.meta.get("steps").as_i64().unwrap_or(0) as u64;
+        if cached_steps >= steps {
+            eprintln!("  [cache] {model} ({cached_steps} steps)");
+            return Ok(ckpt);
+        }
+    }
+    eprintln!("  [train] {model} for {steps} steps ...");
+    let opts = TrainOptions {
+        steps,
+        eval_every: (steps / 5).max(20),
+        patience: 0,
+        eval_batches: 2,
+        seed: 0,
+        verbose: false,
+    };
+    let (mut ckpt, result) = train_model(rt, model, &opts)?;
+    ckpt.meta = result_meta(steps, &result);
+    ckpt.save(&path)?;
+    Ok(ckpt)
+}
+
+fn result_meta(steps: u64, r: &TrainResult) -> Value {
+    let curve = Value::Arr(
+        r.losses
+            .iter()
+            .map(|(s, l)| Value::Arr(vec![Value::Num(*s as f64),
+                                          Value::Num(*l as f64)]))
+            .collect(),
+    );
+    let val_curve = Value::Arr(
+        r.val_losses
+            .iter()
+            .map(|(s, l)| Value::Arr(vec![Value::Num(*s as f64),
+                                          Value::Num(*l as f64)]))
+            .collect(),
+    );
+    obj(vec![
+        ("steps", (steps as i64).into()),
+        ("wall_seconds", r.wall_seconds.into()),
+        ("seconds_per_step", r.seconds_per_step.into()),
+        ("final_loss", (r.final_loss as f64).into()),
+        ("best_val_loss", (r.best_val_loss as f64).into()),
+        ("curve", curve),
+        ("val_curve", val_curve),
+    ])
+}
+
+/// Mean forward-pass wall time of a compiled program (the paper's fig. 1
+/// x-axis), measured over `iters` executions with a real batch.
+pub fn forward_time(rt: &Runtime, forward_prog: &str, params: &[f32],
+                    iters: usize) -> Result<f64> {
+    use crate::coordinator::DataFeed;
+    use crate::data::Split;
+    use crate::runtime::HostTensor;
+    let exe = rt.load(forward_prog)?;
+    let p = exe.program.clone();
+    let feed = DataFeed::for_program(&p, 0)?;
+    let mut inputs = vec![HostTensor::F32(params.to_vec())];
+    inputs.extend(feed.forward_inputs(Split::Valid, 0, p.batch_size()));
+    inputs.push(HostTensor::scalar_i32(1));
+    // warmup (compilation already cached by load)
+    exe.run(&inputs)?;
+    let t0 = std::time::Instant::now();
+    for _ in 0..iters {
+        exe.run(&inputs)?;
+    }
+    Ok(t0.elapsed().as_secs_f64() / iters as f64)
+}
+
+/// Evaluate a checkpoint through `forward_prog` and return the task score.
+pub fn eval_score(rt: &Runtime, forward_prog: &str, params: &[f32],
+                  batches: u64)
+                  -> Result<crate::coordinator::trainer::Score> {
+    use crate::coordinator::trainer::{forward_eval, score};
+    use crate::coordinator::DataFeed;
+    use crate::data::Split;
+    let prog = rt.program(forward_prog)?.clone();
+    let feed = DataFeed::for_program(&prog, 0)?;
+    let evals = forward_eval(rt, forward_prog, params, &feed, Split::Test,
+                             batches, 0)?;
+    score(&prog, &feed, &evals)
+}

@@ -1,0 +1,187 @@
+//! Declarative CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args,
+//! with typed getters, defaults and a generated usage string.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// Declared option.
+#[derive(Debug, Clone)]
+pub struct Opt {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_flag: bool,
+}
+
+/// Parsed arguments for one (sub)command.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| anyhow!("--{key} expects an integer, got {s:?}")),
+        }
+    }
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| anyhow!("--{key} expects an integer, got {s:?}")),
+        }
+    }
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| anyhow!("--{key} expects a number, got {s:?}")),
+        }
+    }
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+}
+
+/// A command spec: parses argv against declared options.
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub opts: Vec<Opt>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Self { name, about, opts: Vec::new() }
+    }
+    pub fn opt(mut self, name: &'static str, default: Option<&'static str>,
+               help: &'static str) -> Self {
+        self.opts.push(Opt { name, help, default, is_flag: false });
+        self
+    }
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(Opt { name, help, default: None, is_flag: true });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n  options:\n", self.name, self.about);
+        for o in &self.opts {
+            let kind = if o.is_flag { "" } else { " <value>" };
+            let def = o
+                .default
+                .map(|d| format!(" (default {d})"))
+                .unwrap_or_default();
+            s += &format!("    --{}{kind}  {}{def}\n", o.name, o.help);
+        }
+        s
+    }
+
+    pub fn parse(&self, argv: &[String]) -> Result<Args> {
+        let mut args = Args::default();
+        for o in &self.opts {
+            if let Some(d) = o.default {
+                args.values.insert(o.name.to_string(), d.to_string());
+            }
+        }
+        let mut it = argv.iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(stripped) = a.strip_prefix("--") {
+                let (key, inline_val) = match stripped.split_once('=') {
+                    Some((k, v)) => (k, Some(v.to_string())),
+                    None => (stripped, None),
+                };
+                let opt = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == key)
+                    .ok_or_else(|| anyhow!("unknown option --{key}\n{}",
+                                           self.usage()))?;
+                if opt.is_flag {
+                    if inline_val.is_some() {
+                        bail!("--{key} is a flag and takes no value");
+                    }
+                    args.flags.push(key.to_string());
+                } else {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| anyhow!("--{key} needs a value"))?
+                            .clone(),
+                    };
+                    args.values.insert(key.to_string(), val);
+                }
+            } else {
+                args.positional.push(a.clone());
+            }
+        }
+        Ok(args)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cmd() -> Command {
+        Command::new("train", "train a model")
+            .opt("steps", Some("100"), "optimizer steps")
+            .opt("model", None, "manifest model name")
+            .flag("verbose", "chatty output")
+    }
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_key_value_and_flags() {
+        let a = cmd()
+            .parse(&sv(&["--model", "wsj", "--steps=250", "--verbose",
+                         "pos1"]))
+            .unwrap();
+        assert_eq!(a.get("model"), Some("wsj"));
+        assert_eq!(a.get_usize("steps", 0).unwrap(), 250);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = cmd().parse(&sv(&[])).unwrap();
+        assert_eq!(a.get_usize("steps", 0).unwrap(), 100);
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn unknown_option_is_an_error() {
+        assert!(cmd().parse(&sv(&["--nope"])).is_err());
+        assert!(cmd().parse(&sv(&["--steps"])).is_err());
+        assert!(cmd().parse(&sv(&["--verbose=1"])).is_err());
+    }
+
+    #[test]
+    fn bad_int_reports_key() {
+        let a = cmd().parse(&sv(&["--steps", "abc"])).unwrap();
+        let err = a.get_usize("steps", 0).unwrap_err().to_string();
+        assert!(err.contains("steps"));
+    }
+}

@@ -1,0 +1,154 @@
+//! Launcher configuration: JSON config files merged with CLI overrides,
+//! plus a tiny stderr logger (the `log` facade's backend).
+
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+
+use crate::jsonio::parse;
+
+/// Global run configuration shared by the `ct` subcommands.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub artifacts_dir: String,
+    pub checkpoints_dir: String,
+    pub results_dir: String,
+    pub seed: u64,
+    pub threads: usize,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        Self {
+            artifacts_dir: "artifacts".into(),
+            checkpoints_dir: "target/checkpoints".into(),
+            results_dir: "target/bench-results".into(),
+            seed: 0,
+            threads: std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(4),
+        }
+    }
+}
+
+impl RunConfig {
+    /// Load from a JSON file; unknown keys are rejected (typo safety).
+    pub fn from_file<P: AsRef<Path>>(path: P) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())?;
+        let v = parse(&text).map_err(|e| anyhow!("config: {e}"))?;
+        let mut cfg = Self::default();
+        let obj = v
+            .as_obj()
+            .ok_or_else(|| anyhow!("config root must be an object"))?;
+        for (k, val) in obj {
+            match k.as_str() {
+                "artifacts_dir" => {
+                    cfg.artifacts_dir =
+                        val.as_str().unwrap_or(&cfg.artifacts_dir).into()
+                }
+                "checkpoints_dir" => {
+                    cfg.checkpoints_dir =
+                        val.as_str().unwrap_or(&cfg.checkpoints_dir).into()
+                }
+                "results_dir" => {
+                    cfg.results_dir =
+                        val.as_str().unwrap_or(&cfg.results_dir).into()
+                }
+                "seed" => cfg.seed = val.as_i64().unwrap_or(0) as u64,
+                "threads" => {
+                    cfg.threads = val.as_usize().unwrap_or(cfg.threads)
+                }
+                other => return Err(anyhow!("unknown config key {other:?}")),
+            }
+        }
+        Ok(cfg)
+    }
+
+    pub fn ensure_dirs(&self) -> Result<()> {
+        std::fs::create_dir_all(&self.checkpoints_dir)?;
+        std::fs::create_dir_all(&self.results_dir)?;
+        Ok(())
+    }
+
+    pub fn checkpoint_path(&self, model: &str) -> std::path::PathBuf {
+        Path::new(&self.checkpoints_dir).join(format!("{model}.ckpt"))
+    }
+}
+
+/// `log` backend printing `level target: message` to stderr.
+struct StderrLogger;
+
+static LOGGER: StderrLogger = StderrLogger;
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, metadata: &log::Metadata) -> bool {
+        metadata.level() <= log::max_level()
+    }
+    fn log(&self, record: &log::Record) {
+        if self.enabled(record.metadata()) {
+            eprintln!("[{:>5}] {}", record.level(), record.args());
+        }
+    }
+    fn flush(&self) {}
+}
+
+/// Install the logger once (idempotent).
+pub fn init_logging(verbose: bool) {
+    let _ = log::set_logger(&LOGGER);
+    log::set_max_level(if verbose {
+        log::LevelFilter::Debug
+    } else {
+        log::LevelFilter::Info
+    });
+}
+
+/// Find the repo root by walking up from cwd until `artifacts/` or
+/// `Cargo.toml` is found — lets benches run from any directory.
+pub fn find_repo_root() -> std::path::PathBuf {
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    for _ in 0..5 {
+        if dir.join("Cargo.toml").exists() || dir.join("artifacts").exists() {
+            return dir;
+        }
+        if !dir.pop() {
+            break;
+        }
+    }
+    ".".into()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_is_sane() {
+        let c = RunConfig::default();
+        assert!(c.threads >= 1);
+        assert_eq!(c.artifacts_dir, "artifacts");
+    }
+
+    #[test]
+    fn config_file_roundtrip() {
+        let dir = std::env::temp_dir().join("ct-config-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("c.json");
+        std::fs::write(&p, r#"{"seed": 7, "threads": 2,
+                               "artifacts_dir": "art"}"#).unwrap();
+        let c = RunConfig::from_file(&p).unwrap();
+        assert_eq!(c.seed, 7);
+        assert_eq!(c.threads, 2);
+        assert_eq!(c.artifacts_dir, "art");
+        std::fs::remove_file(p).unwrap();
+    }
+
+    #[test]
+    fn unknown_keys_rejected() {
+        let dir = std::env::temp_dir().join("ct-config-test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.json");
+        std::fs::write(&p, r#"{"sneed": 7}"#).unwrap();
+        assert!(RunConfig::from_file(&p).is_err());
+        std::fs::remove_file(p).unwrap();
+    }
+}

@@ -1,0 +1,141 @@
+//! Deadline-based dynamic batcher.
+//!
+//! Collects requests until either the bucket's batch size is full or the
+//! oldest request has waited `max_wait` — the classic throughput/latency
+//! dial the serving benches sweep.
+
+use std::time::{Duration, Instant};
+
+/// Batching policy knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchPolicy {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        Self { max_batch: 4, max_wait: Duration::from_millis(5) }
+    }
+}
+
+/// Accumulates items into deadline-bounded batches.
+#[derive(Debug)]
+pub struct Batcher<T> {
+    policy: BatchPolicy,
+    pending: Vec<T>,
+    oldest: Option<Instant>,
+}
+
+impl<T> Batcher<T> {
+    pub fn new(policy: BatchPolicy) -> Self {
+        Self { policy, pending: Vec::new(), oldest: None }
+    }
+
+    /// Add an item; returns a full batch if the size trigger fired.
+    pub fn push(&mut self, item: T, now: Instant) -> Option<Vec<T>> {
+        if self.pending.is_empty() {
+            self.oldest = Some(now);
+        }
+        self.pending.push(item);
+        if self.pending.len() >= self.policy.max_batch {
+            self.take()
+        } else {
+            None
+        }
+    }
+
+    /// Returns a (possibly partial) batch if the deadline expired.
+    pub fn poll_deadline(&mut self, now: Instant) -> Option<Vec<T>> {
+        match self.oldest {
+            Some(t0) if !self.pending.is_empty()
+                && now.duration_since(t0) >= self.policy.max_wait =>
+            {
+                self.take()
+            }
+            _ => None,
+        }
+    }
+
+    /// How long until the current deadline fires (None when empty).
+    pub fn time_to_deadline(&self, now: Instant) -> Option<Duration> {
+        self.oldest.map(|t0| {
+            let elapsed = now.duration_since(t0);
+            self.policy.max_wait.saturating_sub(elapsed)
+        })
+    }
+
+    /// Flush whatever is pending.
+    pub fn take(&mut self) -> Option<Vec<T>> {
+        if self.pending.is_empty() {
+            return None;
+        }
+        self.oldest = None;
+        Some(std::mem::take(&mut self.pending))
+    }
+
+    pub fn len(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pending.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn policy(max_batch: usize, wait_ms: u64) -> BatchPolicy {
+        BatchPolicy { max_batch, max_wait: Duration::from_millis(wait_ms) }
+    }
+
+    #[test]
+    fn size_trigger_fires_exactly_at_max_batch() {
+        let mut b = Batcher::new(policy(3, 1000));
+        let now = Instant::now();
+        assert!(b.push(1, now).is_none());
+        assert!(b.push(2, now).is_none());
+        let batch = b.push(3, now).unwrap();
+        assert_eq!(batch, vec![1, 2, 3]);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn deadline_trigger_fires_on_oldest() {
+        let mut b = Batcher::new(policy(10, 5));
+        let t0 = Instant::now();
+        b.push(1, t0);
+        assert!(b.poll_deadline(t0).is_none());
+        assert!(b.poll_deadline(t0 + Duration::from_millis(2)).is_none());
+        let batch = b.poll_deadline(t0 + Duration::from_millis(6)).unwrap();
+        assert_eq!(batch, vec![1]);
+    }
+
+    #[test]
+    fn deadline_resets_after_flush() {
+        let mut b = Batcher::new(policy(10, 5));
+        let t0 = Instant::now();
+        b.push(1, t0);
+        b.take();
+        b.push(2, t0 + Duration::from_millis(10));
+        // new oldest is t0+10ms, so nothing fires at t0+12ms
+        assert!(b
+            .poll_deadline(t0 + Duration::from_millis(12))
+            .is_none());
+        assert!(b
+            .poll_deadline(t0 + Duration::from_millis(16))
+            .is_some());
+    }
+
+    #[test]
+    fn time_to_deadline_counts_down() {
+        let mut b = Batcher::new(policy(10, 8));
+        let t0 = Instant::now();
+        assert!(b.time_to_deadline(t0).is_none());
+        b.push(1, t0);
+        let d = b.time_to_deadline(t0 + Duration::from_millis(3)).unwrap();
+        assert!(d <= Duration::from_millis(5));
+    }
+}

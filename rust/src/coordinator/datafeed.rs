@@ -1,0 +1,150 @@
+//! Bridges the synthetic corpora (`data/`) to AOT program input layouts.
+//!
+//! A [`DataFeed`] produces, for a given (split, batch index), the batch
+//! tensors in the exact order the train/forward programs declare after
+//! the state inputs (`params, adam_m, adam_v, step, seed`).
+
+use anyhow::{bail, Result};
+
+use crate::data::{asr, copy_task, glue, Split};
+use crate::runtime::{HostTensor, Program};
+
+/// Which corpus feeds a model, derived from the model name prefix.
+#[derive(Debug, Clone)]
+pub enum DataFeed {
+    Copy(copy_task::CopyTask),
+    Asr(std::sync::Arc<asr::AsrCorpus>),
+    GlueCls { task: glue::GlueTask, seed: u64 },
+    GlueSpan { seed: u64 },
+}
+
+impl DataFeed {
+    /// Infer the right corpus from a manifest program.
+    pub fn for_program(p: &Program, seed: u64) -> Result<DataFeed> {
+        let name = p.model_name();
+        let n = p.seq_len();
+        if name.starts_with("copy-") || name.starts_with("layer-") {
+            Ok(DataFeed::Copy(copy_task::CopyTask::new(n, seed)))
+        } else if name.starts_with("wsj-") {
+            Ok(DataFeed::Asr(std::sync::Arc::new(asr::AsrCorpus::new(
+                asr::AsrSpec::wsj(seed)))))
+        } else if name.starts_with("swb-") {
+            Ok(DataFeed::Asr(std::sync::Arc::new(asr::AsrCorpus::new(
+                asr::AsrSpec::swb(seed)))))
+        } else if let Some(rest) = name.strip_prefix("glue-") {
+            let task_name = rest.split('-').next().unwrap_or("");
+            let task = glue::GlueTask::from_name(task_name)
+                .ok_or_else(|| anyhow::anyhow!("unknown glue task \
+                                                {task_name}"))?;
+            if task == glue::GlueTask::Squad {
+                Ok(DataFeed::GlueSpan { seed })
+            } else {
+                Ok(DataFeed::GlueCls { task, seed })
+            }
+        } else {
+            bail!("cannot infer datafeed for model {name:?}")
+        }
+    }
+
+    /// Batch tensors in `batch_specs` order (see programs.py docstring).
+    pub fn batch(&self, split: Split, index: u64, batch: usize)
+                 -> Vec<HostTensor> {
+        match self {
+            DataFeed::Copy(task) => {
+                let b = task.batch(split, index, batch);
+                vec![HostTensor::I32(b.x), HostTensor::I32(b.y),
+                     HostTensor::F32(b.w)]
+            }
+            DataFeed::Asr(corpus) => {
+                let b = corpus.batch(split, index, batch);
+                vec![HostTensor::F32(b.x), HostTensor::I32(b.xlen),
+                     HostTensor::I32(b.y), HostTensor::I32(b.ylen)]
+            }
+            DataFeed::GlueCls { task, seed } => {
+                let b = glue::cls_batch(*task, *seed, split, index, batch);
+                vec![HostTensor::I32(b.x), HostTensor::F32(b.mask),
+                     HostTensor::I32(b.y)]
+            }
+            DataFeed::GlueSpan { seed } => {
+                let b = glue::span_batch(*seed, split, index, batch);
+                vec![HostTensor::I32(b.x), HostTensor::F32(b.mask),
+                     HostTensor::I32(b.ystart), HostTensor::I32(b.yend)]
+            }
+        }
+    }
+
+    /// Forward-program inputs (x [+ xlen/mask]) for the same batch, i.e.
+    /// the batch tensors minus the targets.
+    pub fn forward_inputs(&self, split: Split, index: u64, batch: usize)
+                          -> Vec<HostTensor> {
+        let mut b = self.batch(split, index, batch);
+        match self {
+            DataFeed::Copy(_) => b.truncate(1),       // x
+            DataFeed::Asr(_) => b.truncate(2),        // x, xlen
+            DataFeed::GlueCls { .. } => b.truncate(2), // x, mask
+            DataFeed::GlueSpan { .. } => b.truncate(2),
+        }
+        b
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::jsonio;
+    use crate::runtime::{Dtype, TensorSpec};
+
+    fn fake_program(model: &str, n: usize, b: usize) -> Program {
+        Program {
+            name: format!("{model}.train"),
+            kind: "train".into(),
+            file: String::new(),
+            inputs: vec![TensorSpec { name: "params".into(),
+                                      shape: vec![8], dtype: Dtype::F32 }],
+            outputs: vec![],
+            config: jsonio::parse(&format!(
+                r#"{{"name":"{model}","seq_len":{n},"batch_size":{b}}}"#))
+                .unwrap(),
+            param_count: 8,
+        }
+    }
+
+    #[test]
+    fn infers_feed_from_model_name() {
+        let p = fake_program("copy-n64-full", 64, 16);
+        assert!(matches!(DataFeed::for_program(&p, 0).unwrap(),
+                         DataFeed::Copy(_)));
+        let p = fake_program("wsj-l6-full", 256, 4);
+        assert!(matches!(DataFeed::for_program(&p, 0).unwrap(),
+                         DataFeed::Asr(_)));
+        let p = fake_program("glue-squad-full", 192, 8);
+        assert!(matches!(DataFeed::for_program(&p, 0).unwrap(),
+                         DataFeed::GlueSpan { .. }));
+        let p = fake_program("glue-rte-full", 128, 8);
+        assert!(matches!(DataFeed::for_program(&p, 0).unwrap(),
+                         DataFeed::GlueCls { .. }));
+        let p = fake_program("mystery", 16, 1);
+        assert!(DataFeed::for_program(&p, 0).is_err());
+    }
+
+    #[test]
+    fn copy_feed_shapes() {
+        let p = fake_program("copy-n32-full", 32, 4);
+        let feed = DataFeed::for_program(&p, 1).unwrap();
+        let b = feed.batch(Split::Train, 0, 4);
+        assert_eq!(b.len(), 3);
+        assert_eq!(b[0].len(), 4 * 32);
+        let f = feed.forward_inputs(Split::Train, 0, 4);
+        assert_eq!(f.len(), 1);
+    }
+
+    #[test]
+    fn asr_feed_shapes() {
+        let p = fake_program("wsj-l6-full", 256, 2);
+        let feed = DataFeed::for_program(&p, 1).unwrap();
+        let b = feed.batch(Split::Valid, 3, 2);
+        assert_eq!(b.len(), 4);
+        assert_eq!(b[0].len(), 2 * 256 * 40);
+        assert_eq!(b[1].len(), 2);
+    }
+}

@@ -1,0 +1,20 @@
+//! Layer-3 coordinator — the serving/training control plane.
+//!
+//! The paper's contribution is an attention approximation, so L3 is the
+//! machinery that makes it deployable: a training driver that executes
+//! compiled train-step HLO in a loop with convergence tracking, and a
+//! serving engine with length-bucket routing, deadline-based dynamic
+//! batching, a worker pool and backpressure (vLLM-router-shaped, scaled
+//! to one host).
+
+pub mod batcher;
+pub mod datafeed;
+pub mod router;
+pub mod serve;
+pub mod trainer;
+
+pub use batcher::{BatchPolicy, Batcher};
+pub use datafeed::DataFeed;
+pub use router::Router;
+pub use serve::{InferenceEngine, Request, Response, ServeOptions};
+pub use trainer::{train_model, TrainOptions, TrainResult};

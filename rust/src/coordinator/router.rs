@@ -1,0 +1,87 @@
+//! Length-bucket router: HLO executables have static shapes, so requests
+//! are routed to the smallest compiled bucket that fits, then padded.
+
+use anyhow::{bail, Result};
+
+/// One serving bucket: a compiled forward program with static (B, N).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Bucket {
+    pub program: String,
+    pub seq_len: usize,
+    pub batch_size: usize,
+}
+
+/// Routes requests by sequence length.
+#[derive(Debug, Clone, Default)]
+pub struct Router {
+    buckets: Vec<Bucket>, // sorted by seq_len ascending
+}
+
+impl Router {
+    pub fn new(mut buckets: Vec<Bucket>) -> Result<Self> {
+        if buckets.is_empty() {
+            bail!("router needs at least one bucket");
+        }
+        buckets.sort_by_key(|b| b.seq_len);
+        Ok(Self { buckets })
+    }
+
+    pub fn buckets(&self) -> &[Bucket] {
+        &self.buckets
+    }
+
+    /// Smallest bucket with seq_len >= len; None if the request is too
+    /// long for every compiled program (caller rejects with backpressure).
+    pub fn route(&self, len: usize) -> Option<&Bucket> {
+        self.buckets.iter().find(|b| b.seq_len >= len)
+    }
+
+    /// Index variant of [`route`].
+    pub fn route_index(&self, len: usize) -> Option<usize> {
+        self.buckets.iter().position(|b| b.seq_len >= len)
+    }
+
+    /// Padding waste fraction for a request of `len` in its bucket.
+    pub fn padding_waste(&self, len: usize) -> Option<f64> {
+        self.route(len)
+            .map(|b| 1.0 - len as f64 / b.seq_len as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn router() -> Router {
+        Router::new(vec![
+            Bucket { program: "b256".into(), seq_len: 256, batch_size: 4 },
+            Bucket { program: "b64".into(), seq_len: 64, batch_size: 8 },
+            Bucket { program: "b128".into(), seq_len: 128, batch_size: 8 },
+        ])
+        .unwrap()
+    }
+
+    #[test]
+    fn routes_to_smallest_fitting_bucket() {
+        let r = router();
+        assert_eq!(r.route(1).unwrap().seq_len, 64);
+        assert_eq!(r.route(64).unwrap().seq_len, 64);
+        assert_eq!(r.route(65).unwrap().seq_len, 128);
+        assert_eq!(r.route(200).unwrap().seq_len, 256);
+        assert!(r.route(257).is_none());
+    }
+
+    #[test]
+    fn padding_waste_monotone_within_bucket() {
+        let r = router();
+        assert!(r.padding_waste(64).unwrap() < 1e-9);
+        let w65 = r.padding_waste(65).unwrap();
+        let w128 = r.padding_waste(128).unwrap();
+        assert!(w65 > w128);
+    }
+
+    #[test]
+    fn empty_router_rejected() {
+        assert!(Router::new(vec![]).is_err());
+    }
+}

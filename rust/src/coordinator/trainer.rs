@@ -1,0 +1,296 @@
+//! Training driver: executes compiled train-step HLO in a loop with loss
+//! tracking, plateau-based early stopping and checkpointing.  This is the
+//! path every paper experiment trains through — Python never runs here.
+
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::data::Split;
+use crate::runtime::checkpoint::Checkpoint;
+use crate::runtime::{HostTensor, Runtime};
+
+use super::datafeed::DataFeed;
+
+#[derive(Debug, Clone)]
+pub struct TrainOptions {
+    /// total optimizer steps
+    pub steps: u64,
+    /// validation-loss check cadence (steps)
+    pub eval_every: u64,
+    /// stop after this many evals without improvement (0 = never)
+    pub patience: u64,
+    /// number of validation batches averaged per eval
+    pub eval_batches: u64,
+    /// data + in-graph randomness seed
+    pub seed: u64,
+    /// print progress lines
+    pub verbose: bool,
+}
+
+impl Default for TrainOptions {
+    fn default() -> Self {
+        Self { steps: 400, eval_every: 50, patience: 0, eval_batches: 4,
+               seed: 0, verbose: true }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct TrainResult {
+    /// (step, train loss) samples
+    pub losses: Vec<(u64, f32)>,
+    /// (step, validation loss) samples
+    pub val_losses: Vec<(u64, f32)>,
+    pub wall_seconds: f64,
+    pub seconds_per_step: f64,
+    pub steps_run: u64,
+    pub final_loss: f32,
+    pub best_val_loss: f32,
+}
+
+/// Train `<model>` (manifest name without the `.train` suffix) from
+/// scratch; returns the checkpoint at the best validation loss.
+pub fn train_model(rt: &Runtime, model: &str, opts: &TrainOptions)
+                   -> Result<(Checkpoint, TrainResult)> {
+    let init = rt.load(&format!("{model}.init"))?;
+    let step_exe = rt.load(&format!("{model}.train"))?;
+    let feed = DataFeed::for_program(&step_exe.program, opts.seed)?;
+    let batch_size = step_exe.program.batch_size();
+
+    // init: seed -> (params, m, v, step)
+    let mut state = init.run(&[HostTensor::scalar_i32(opts.seed as i32)])?;
+    if state.len() != 4 {
+        bail!("init returned {} outputs, want 4", state.len());
+    }
+
+    let mut result = TrainResult {
+        losses: Vec::new(),
+        val_losses: Vec::new(),
+        wall_seconds: 0.0,
+        seconds_per_step: 0.0,
+        steps_run: 0,
+        final_loss: f32::NAN,
+        best_val_loss: f32::INFINITY,
+    };
+    let mut best_params: Option<(Vec<f32>, Vec<f32>, Vec<f32>, i32)> = None;
+    let mut evals_since_best = 0u64;
+    let t0 = Instant::now();
+
+    for step in 0..opts.steps {
+        let mut inputs: Vec<HostTensor> = Vec::with_capacity(9);
+        // state order: params, m, v, step
+        inputs.extend(state.iter().cloned());
+        inputs.push(HostTensor::scalar_i32(
+            (opts.seed as i32).wrapping_add(step as i32)));
+        inputs.extend(feed.batch(Split::Train, step, batch_size));
+        let mut out = step_exe.run(&inputs)?;
+        let loss = out.pop().unwrap().scalar_f32_value()?;
+        state = out; // params, m, v, step
+        result.losses.push((step, loss));
+        result.final_loss = loss;
+        if !loss.is_finite() {
+            bail!("{model}: loss diverged at step {step}");
+        }
+
+        let is_eval = (step + 1) % opts.eval_every == 0
+            || step + 1 == opts.steps;
+        if is_eval {
+            let val = validation_loss(rt, model, &state[0], &feed,
+                                      opts.eval_batches, opts.seed)?;
+            result.val_losses.push((step, val));
+            if opts.verbose {
+                log::info!(
+                    "{model} step {:>5} train {:8.4} val {:8.4} ({:.2}s)",
+                    step + 1, loss, val, t0.elapsed().as_secs_f64());
+            }
+            if val < result.best_val_loss {
+                result.best_val_loss = val;
+                evals_since_best = 0;
+                best_params = Some((
+                    state[0].as_f32()?.to_vec(),
+                    state[1].as_f32()?.to_vec(),
+                    state[2].as_f32()?.to_vec(),
+                    state[3].as_i32()?[0],
+                ));
+            } else {
+                evals_since_best += 1;
+                if opts.patience > 0 && evals_since_best >= opts.patience {
+                    result.steps_run = step + 1;
+                    break;
+                }
+            }
+        }
+        result.steps_run = step + 1;
+    }
+
+    result.wall_seconds = t0.elapsed().as_secs_f64();
+    result.seconds_per_step =
+        result.wall_seconds / result.steps_run.max(1) as f64;
+
+    let (params, m, v, step) = match best_params {
+        Some(t) => t,
+        None => (
+            state[0].as_f32()?.to_vec(),
+            state[1].as_f32()?.to_vec(),
+            state[2].as_f32()?.to_vec(),
+            state[3].as_i32()?[0],
+        ),
+    };
+    let mut ckpt = Checkpoint::fresh(model, params, m, v);
+    ckpt.step = step;
+    Ok((ckpt, result))
+}
+
+/// Mean train-program loss over held-out batches, via the `.train`
+/// program's loss output?  No — evaluation must not update parameters, so
+/// we run the forward program when a dedicated eval is unavailable.  We
+/// approximate validation loss with the train-step loss computed from a
+/// *throwaway* state copy (parameters are cloned; updates discarded).
+fn validation_loss(rt: &Runtime, model: &str, params: &HostTensor,
+                   feed: &DataFeed, batches: u64, seed: u64) -> Result<f32> {
+    let step_exe = rt.load(&format!("{model}.train"))?;
+    let batch_size = step_exe.program.batch_size();
+    let n = params.len();
+    let zeros = HostTensor::F32(vec![0.0; n]);
+    let mut total = 0f32;
+    for i in 0..batches {
+        let mut inputs: Vec<HostTensor> = Vec::with_capacity(9);
+        inputs.push(params.clone());
+        inputs.push(zeros.clone());
+        inputs.push(zeros.clone());
+        inputs.push(HostTensor::scalar_i32(0));
+        inputs.push(HostTensor::scalar_i32((seed as i32) ^ 0x5eed));
+        inputs.extend(feed.batch(Split::Valid, i, batch_size));
+        let out = step_exe.run(&inputs)?;
+        total += out.last().unwrap().scalar_f32_value()?;
+    }
+    Ok(total / batches.max(1) as f32)
+}
+
+/// Run a forward program over `batches` held-out batches; returns the
+/// concatenated logits and the batches used (for metric computation).
+pub fn forward_eval(rt: &Runtime, forward_prog: &str, params: &[f32],
+                    feed: &DataFeed, split: Split, batches: u64, seed: u64)
+                    -> Result<Vec<(Vec<HostTensor>, Vec<f32>)>> {
+    let exe = rt.load(forward_prog)?;
+    let batch_size = exe.program.batch_size();
+    let mut out = Vec::new();
+    for i in 0..batches {
+        let batch = feed.batch(split, i, batch_size);
+        let mut inputs: Vec<HostTensor> = Vec::new();
+        inputs.push(HostTensor::F32(params.to_vec()));
+        inputs.extend(feed.forward_inputs(split, i, batch_size));
+        inputs.push(HostTensor::scalar_i32((seed as i32) ^ 0x0e7a));
+        let mut res = exe.run(&inputs)?;
+        let logits = res.remove(0).into_f32()?;
+        out.push((batch, logits));
+    }
+    Ok(out)
+}
+
+/// Task metric over `forward_eval` results, matching the paper's
+/// reporting: PER% (ctc), masked accuracy (tok), accuracy (cls), F1
+/// (span).  Returns `(metric_name, value, human_summary)` via [`Score`].
+#[derive(Debug, Clone)]
+pub struct Score {
+    pub metric: &'static str,
+    pub value: f64,
+    /// true when higher is better
+    pub ascending: bool,
+}
+
+impl std::fmt::Display for Score {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{} = {:.4}", self.metric, self.value)
+    }
+}
+
+pub fn score(program: &crate::runtime::Program, _feed: &DataFeed,
+             evals: &[(Vec<HostTensor>, Vec<f32>)]) -> Result<Score> {
+    use crate::data::asr::ctc_greedy_decode;
+    use crate::data::copy_task;
+    use crate::metrics::{span_f1, Accuracy, ErrorRate};
+
+    let n = program.seq_len();
+    let b = program.batch_size();
+    let task = program.config.get("task").as_str().unwrap_or("").to_string();
+    match task.as_str() {
+        "ctc" => {
+            let vocab = program.config.get("out_dim").as_usize().unwrap_or(0);
+            let lmax = program.config.get("max_labels").as_usize()
+                .unwrap_or(0);
+            let mut er = ErrorRate::default();
+            for (batch, logits) in evals {
+                let xlen = batch[1].as_i32()?;
+                let y = batch[2].as_i32()?;
+                let ylen = batch[3].as_i32()?;
+                for s in 0..b {
+                    let rows = &logits[s * n * vocab..(s + 1) * n * vocab];
+                    let hyp = ctc_greedy_decode(rows, xlen[s] as usize,
+                                                vocab);
+                    let gold =
+                        &y[s * lmax..s * lmax + ylen[s] as usize];
+                    er.add(&hyp, gold);
+                }
+            }
+            Ok(Score { metric: "PER%", value: er.percent(),
+                       ascending: false })
+        }
+        "tok" => {
+            let vocab = program.config.get("out_dim").as_usize().unwrap_or(0);
+            let mut acc_sum = 0.0;
+            for (batch, logits) in evals {
+                let cb = copy_task::CopyBatch {
+                    x: batch[0].as_i32()?.to_vec(),
+                    y: batch[1].as_i32()?.to_vec(),
+                    w: batch[2].as_f32()?.to_vec(),
+                    batch: b,
+                    seq_len: n,
+                };
+                acc_sum += copy_task::masked_accuracy(&cb, logits, vocab);
+            }
+            Ok(Score { metric: "accuracy", value: acc_sum
+                       / evals.len().max(1) as f64, ascending: true })
+        }
+        "cls" => {
+            let ncls = program.config.get("out_dim").as_usize().unwrap_or(2);
+            let mut acc = Accuracy::default();
+            for (batch, logits) in evals {
+                let y = batch[2].as_i32()?;
+                for s in 0..b {
+                    let row = &logits[s * ncls..(s + 1) * ncls];
+                    let pred = row.iter().enumerate()
+                        .max_by(|a, c| a.1.partial_cmp(c.1).unwrap())
+                        .unwrap().0 as i32;
+                    acc.add(pred, y[s]);
+                }
+            }
+            Ok(Score { metric: "accuracy", value: acc.value(),
+                       ascending: true })
+        }
+        "span" => {
+            let mut total = 0.0;
+            let mut count = 0usize;
+            for (batch, logits) in evals {
+                let ys = batch[2].as_i32()?;
+                let ye = batch[3].as_i32()?;
+                for s in 0..b {
+                    // logits (B, N, 2): channel 0 start, channel 1 end
+                    let rows = &logits[s * n * 2..(s + 1) * n * 2];
+                    let argmax = |ch: usize| rows
+                        .chunks_exact(2)
+                        .map(|p| p[ch])
+                        .enumerate()
+                        .max_by(|a, c| a.1.partial_cmp(&c.1).unwrap())
+                        .unwrap().0 as i32;
+                    total += span_f1((argmax(0), argmax(1)),
+                                     (ys[s], ye[s]));
+                    count += 1;
+                }
+            }
+            Ok(Score { metric: "F1", value: total / count.max(1) as f64,
+                       ascending: true })
+        }
+        other => bail!("no metric for task {other:?}"),
+    }
+}

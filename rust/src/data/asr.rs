@@ -1,0 +1,261 @@
+//! Synthetic ASR corpus (WSJ / Switchboard analogs — DESIGN.md §2).
+//!
+//! Each phoneme has a fixed Gaussian prototype in feature space; an
+//! utterance renders a random phone string to "filterbank" frames with
+//! per-phone duration jitter, coarticulation smoothing and additive
+//! noise, yielding a CTC-learnable monotonic seq→label problem with the
+//! same shape as the paper's WSJ/SWB pipelines (variable-length inputs
+//! ~10 frames/label, padded to the bucket length).
+
+use super::{batch_rng, Split};
+use crate::prng::Xoshiro256;
+
+/// Corpus hyper-parameters.
+#[derive(Debug, Clone)]
+pub struct AsrSpec {
+    pub n_phones: usize,   // label vocabulary (blank excluded)
+    pub d_feat: usize,     // feature dim (40 = filterbank-analog)
+    pub min_dur: usize,    // min frames per phone
+    pub max_dur: usize,    // max frames per phone
+    pub noise: f32,        // additive feature noise σ
+    pub seq_len: usize,    // padded frame budget N
+    pub max_labels: usize, // padded label budget
+    pub seed: u64,
+}
+
+impl AsrSpec {
+    /// WSJ-analog: 20 phones, mild noise (paper: N̄ = 780, we use 256).
+    pub fn wsj(seed: u64) -> Self {
+        Self { n_phones: 20, d_feat: 40, min_dur: 4, max_dur: 12,
+               noise: 0.3, seq_len: 256, max_labels: 48, seed }
+    }
+
+    /// SWB-analog: more phones, longer and noisier (telephone speech).
+    pub fn swb(seed: u64) -> Self {
+        Self { n_phones: 40, d_feat: 40, min_dur: 3, max_dur: 10,
+               noise: 0.5, seq_len: 384, max_labels: 64, seed }
+    }
+}
+
+/// The rendered corpus: phone prototypes are fixed per corpus seed.
+#[derive(Debug, Clone)]
+pub struct AsrCorpus {
+    pub spec: AsrSpec,
+    /// (n_phones × d_feat) prototype vectors
+    protos: Vec<f32>,
+}
+
+/// Batch in the `ctc` program layout.
+#[derive(Debug, Clone)]
+pub struct AsrBatch {
+    /// (B·N·D) features, padded with zeros
+    pub x: Vec<f32>,
+    /// (B,) valid frame counts
+    pub xlen: Vec<i32>,
+    /// (B·Lmax) labels (1-based), zero-padded
+    pub y: Vec<i32>,
+    /// (B,) label counts
+    pub ylen: Vec<i32>,
+    pub batch: usize,
+}
+
+impl AsrCorpus {
+    pub fn new(spec: AsrSpec) -> Self {
+        let mut rng = Xoshiro256::new(spec.seed).fold_in(0x70726f746f);
+        // well-separated prototypes: unit-norm gaussian directions × gain
+        let mut protos = rng.normal_vec(spec.n_phones * spec.d_feat);
+        for p in 0..spec.n_phones {
+            let row = &mut protos[p * spec.d_feat..(p + 1) * spec.d_feat];
+            let norm = row.iter().map(|v| v * v).sum::<f32>().sqrt();
+            row.iter_mut().for_each(|v| *v *= 2.0 / norm.max(1e-6));
+        }
+        Self { spec, protos }
+    }
+
+    pub fn proto(&self, phone: usize) -> &[f32] {
+        &self.protos[phone * self.spec.d_feat..(phone + 1) * self.spec.d_feat]
+    }
+
+    /// Render one utterance; returns (frames, labels).
+    fn sample_one(&self, rng: &mut Xoshiro256) -> (Vec<f32>, Vec<i32>) {
+        let s = &self.spec;
+        let mut labels = Vec::new();
+        let mut frames: Vec<f32> = Vec::new();
+        // draw phones until the frame budget would overflow
+        loop {
+            let dur = rng.range(s.min_dur as i64, s.max_dur as i64 + 1)
+                as usize;
+            if frames.len() / s.d_feat + dur > s.seq_len
+                || labels.len() + 1 > s.max_labels
+            {
+                break;
+            }
+            let phone = rng.below(s.n_phones);
+            labels.push(phone as i32 + 1); // 1-based, 0 = blank
+            let proto = self.proto(phone);
+            for f in 0..dur {
+                // onset/offset taper emulates coarticulation
+                let env = if f == 0 || f == dur - 1 { 0.6 } else { 1.0 };
+                for d in 0..s.d_feat {
+                    frames.push(env * proto[d] + s.noise * rng.normal_f32());
+                }
+            }
+            if labels.len() >= 3 && rng.coin(0.08) {
+                break; // natural utterance-length variation
+            }
+        }
+        (frames, labels)
+    }
+
+    /// Deterministic batch for (split, index) in the ctc layout.
+    pub fn batch(&self, split: Split, index: u64, batch: usize) -> AsrBatch {
+        let s = &self.spec;
+        let mut rng = batch_rng(s.seed, split, index);
+        let mut out = AsrBatch {
+            x: vec![0.0; batch * s.seq_len * s.d_feat],
+            xlen: vec![0; batch],
+            y: vec![0; batch * s.max_labels],
+            ylen: vec![0; batch],
+            batch,
+        };
+        for b in 0..batch {
+            let (frames, labels) = self.sample_one(&mut rng);
+            let t = frames.len() / s.d_feat;
+            out.xlen[b] = t as i32;
+            out.ylen[b] = labels.len() as i32;
+            let xoff = b * s.seq_len * s.d_feat;
+            out.x[xoff..xoff + frames.len()].copy_from_slice(&frames);
+            let yoff = b * s.max_labels;
+            out.y[yoff..yoff + labels.len()].copy_from_slice(&labels);
+        }
+        out
+    }
+}
+
+/// Greedy CTC decode of one sample's logits (T×V, blank = 0): argmax per
+/// frame, collapse repeats, strip blanks.
+pub fn ctc_greedy_decode(logits: &[f32], t_valid: usize, vocab: usize)
+                         -> Vec<i32> {
+    let mut out = Vec::new();
+    let mut prev = -1i32;
+    for t in 0..t_valid {
+        let row = &logits[t * vocab..(t + 1) * vocab];
+        let arg = row
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0 as i32;
+        if arg != prev && arg != 0 {
+            out.push(arg);
+        }
+        prev = arg;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn corpus_is_deterministic() {
+        let c1 = AsrCorpus::new(AsrSpec::wsj(3));
+        let c2 = AsrCorpus::new(AsrSpec::wsj(3));
+        assert_eq!(c1.protos, c2.protos);
+        let b1 = c1.batch(Split::Train, 7, 2);
+        let b2 = c2.batch(Split::Train, 7, 2);
+        assert_eq!(b1.x, b2.x);
+        assert_eq!(b1.y, b2.y);
+    }
+
+    #[test]
+    fn batch_respects_budgets_and_layout() {
+        let c = AsrCorpus::new(AsrSpec::wsj(1));
+        let b = c.batch(Split::Train, 0, 8);
+        for s in 0..8 {
+            let t = b.xlen[s] as usize;
+            let l = b.ylen[s] as usize;
+            assert!(t <= 256 && l <= 48 && l >= 1);
+            assert!(t >= 4 * l, "t={t} l={l}: need >= min_dur frames/label");
+            // padding beyond xlen is zero
+            let xoff = s * 256 * 40;
+            assert!(b.x[xoff + t * 40..xoff + 256 * 40]
+                .iter()
+                .all(|&v| v == 0.0));
+            // labels are 1-based
+            assert!(b.y[s * 48..s * 48 + l].iter().all(|&p| p >= 1));
+        }
+    }
+
+    #[test]
+    fn prototypes_are_separated() {
+        let c = AsrCorpus::new(AsrSpec::wsj(2));
+        for a in 0..5 {
+            for b in 0..5 {
+                if a == b {
+                    continue;
+                }
+                let d: f32 = c
+                    .proto(a)
+                    .iter()
+                    .zip(c.proto(b))
+                    .map(|(x, y)| (x - y) * (x - y))
+                    .sum();
+                assert!(d.sqrt() > 1.0, "phones {a},{b} too close");
+            }
+        }
+    }
+
+    #[test]
+    fn greedy_decode_collapses_and_strips() {
+        // frames: blank,1,1,blank,2,2,1 -> [1,2,1]
+        let seq = [0, 1, 1, 0, 2, 2, 1];
+        let vocab = 3;
+        let mut logits = vec![0f32; seq.len() * vocab];
+        for (t, &s) in seq.iter().enumerate() {
+            logits[t * vocab + s as usize] = 5.0;
+        }
+        assert_eq!(ctc_greedy_decode(&logits, seq.len(), vocab),
+                   vec![1, 2, 1]);
+    }
+
+    #[test]
+    fn oracle_features_decode_to_labels() {
+        // Sanity: with zero noise the nearest-prototype classifier
+        // recovers the phone string, so the task is learnable.
+        let mut spec = AsrSpec::wsj(5);
+        spec.noise = 0.0;
+        let c = AsrCorpus::new(spec);
+        let b = c.batch(Split::Train, 1, 1);
+        let t = b.xlen[0] as usize;
+        let l = b.ylen[0] as usize;
+        // classify each frame by nearest prototype, collapse repeats
+        let mut decoded = Vec::new();
+        let mut prev = -1i32;
+        for f in 0..t {
+            let frame = &b.x[f * 40..(f + 1) * 40];
+            let (mut best_d, mut best_p) = (f32::INFINITY, 0usize);
+            for p in 0..c.spec.n_phones {
+                let d: f32 = frame
+                    .iter()
+                    .zip(c.proto(p))
+                    .map(|(x, y)| (x - y) * (x - y))
+                    .sum();
+                if d < best_d {
+                    best_d = d;
+                    best_p = p;
+                }
+            }
+            let lab = best_p as i32 + 1;
+            if lab != prev {
+                decoded.push(lab);
+                prev = lab;
+            }
+        }
+        // the taper can duplicate boundaries; dedup again conservatively
+        decoded.dedup();
+        let want: Vec<i32> = b.y[..l].to_vec();
+        assert_eq!(decoded, want);
+    }
+}

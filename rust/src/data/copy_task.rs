@@ -1,0 +1,189 @@
+//! Masked copy task (paper §C.2, fig. 5).
+//!
+//! A random sequence `w ∈ {1..S}^L` is laid out as `0 w 0 w` (0 is the
+//! separator).  A fraction of symbols is replaced by MASK in the first
+//! half and a *different* set in the second half, so the target is always
+//! reconstructible by attending to the twin position.  Token ids:
+//! `0` separator, `1..=S` symbols, `S+1` MASK.
+
+use super::{batch_rng, Split};
+use crate::prng::Xoshiro256;
+
+#[derive(Debug, Clone)]
+pub struct CopyTask {
+    pub seq_len: usize,   // N = 2L + 2
+    pub n_symbols: usize, // S (paper: 10)
+    pub mask_frac: f64,   // paper: 0.2
+    pub seed: u64,
+}
+
+/// One batch in the `tok` program layout.
+#[derive(Debug, Clone)]
+pub struct CopyBatch {
+    /// (B·N) input token ids
+    pub x: Vec<i32>,
+    /// (B·N) target token ids (the un-masked sequence)
+    pub y: Vec<i32>,
+    /// (B·N) loss weights: 1.0 exactly on masked positions
+    pub w: Vec<f32>,
+    pub batch: usize,
+    pub seq_len: usize,
+}
+
+impl CopyTask {
+    pub fn new(seq_len: usize, seed: u64) -> Self {
+        assert!(seq_len >= 4 && seq_len % 2 == 0,
+                "seq_len must be even (0w0w layout)");
+        Self { seq_len, n_symbols: 10, mask_frac: 0.2, seed }
+    }
+
+    pub fn half_len(&self) -> usize {
+        self.seq_len / 2 - 1 // L
+    }
+
+    pub fn mask_token(&self) -> i32 {
+        self.n_symbols as i32 + 1
+    }
+
+    fn sample_one(&self, rng: &mut Xoshiro256, x: &mut [i32], y: &mut [i32],
+                  w: &mut [f32]) {
+        let l = self.half_len();
+        let n = self.seq_len;
+        // target 0 w 0 w
+        y[0] = 0;
+        y[l + 1] = 0;
+        for i in 0..l {
+            let sym = rng.range(1, self.n_symbols as i64 + 1) as i32;
+            y[1 + i] = sym;
+            y[l + 2 + i] = sym;
+        }
+        x.copy_from_slice(y);
+        w.iter_mut().for_each(|v| *v = 0.0);
+        // mask a fraction of the first half and a DIFFERENT set of the
+        // second half so every symbol stays recoverable
+        let n_masked = ((l as f64) * self.mask_frac).ceil() as usize;
+        let n_masked = n_masked.clamp(1, l.saturating_sub(1).max(1));
+        let first = rng.sample_indices(l, n_masked.min(l));
+        let mut remaining: Vec<usize> =
+            (0..l).filter(|i| !first.contains(i)).collect();
+        rng.shuffle(&mut remaining);
+        let second: Vec<usize> =
+            remaining.into_iter().take(n_masked.min(l)).collect();
+        for &i in &first {
+            x[1 + i] = self.mask_token();
+            w[1 + i] = 1.0;
+        }
+        for &i in &second {
+            x[l + 2 + i] = self.mask_token();
+            w[l + 2 + i] = 1.0;
+        }
+        let _ = n;
+    }
+
+    /// Deterministic batch for (split, index).
+    pub fn batch(&self, split: Split, index: u64, batch: usize) -> CopyBatch {
+        let mut rng = batch_rng(self.seed, split, index);
+        let n = self.seq_len;
+        let mut out = CopyBatch {
+            x: vec![0; batch * n],
+            y: vec![0; batch * n],
+            w: vec![0.0; batch * n],
+            batch,
+            seq_len: n,
+        };
+        for b in 0..batch {
+            let (s, e) = (b * n, (b + 1) * n);
+            self.sample_one(&mut rng, &mut out.x[s..e], &mut out.y[s..e],
+                            &mut out.w[s..e]);
+        }
+        out
+    }
+}
+
+/// Masked-position accuracy given logits (B·N·V row-major).
+pub fn masked_accuracy(batch: &CopyBatch, logits: &[f32], vocab: usize)
+                       -> f64 {
+    let n = batch.seq_len;
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    for b in 0..batch.batch {
+        for i in 0..n {
+            let pos = b * n + i;
+            if batch.w[pos] == 0.0 {
+                continue;
+            }
+            let row = &logits[pos * vocab..(pos + 1) * vocab];
+            let argmax = row
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            total += 1;
+            if argmax as i32 == batch.y[pos] {
+                correct += 1;
+            }
+        }
+    }
+    if total == 0 { 1.0 } else { correct as f64 / total as f64 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layout_is_0w0w_and_reconstructible() {
+        let task = CopyTask::new(64, 7);
+        let b = task.batch(Split::Train, 0, 4);
+        let l = task.half_len();
+        for s in 0..4 {
+            let y = &b.y[s * 64..(s + 1) * 64];
+            let x = &b.x[s * 64..(s + 1) * 64];
+            assert_eq!(y[0], 0);
+            assert_eq!(y[l + 1], 0);
+            for i in 0..l {
+                assert_eq!(y[1 + i], y[l + 2 + i], "halves must match");
+                assert!((1..=10).contains(&y[1 + i]));
+                // reconstructible: never masked at BOTH twin positions
+                let m1 = x[1 + i] == task.mask_token();
+                let m2 = x[l + 2 + i] == task.mask_token();
+                assert!(!(m1 && m2), "symbol {i} masked twice");
+            }
+        }
+    }
+
+    #[test]
+    fn weights_mark_exactly_the_masked_positions() {
+        let task = CopyTask::new(32, 9);
+        let b = task.batch(Split::Valid, 3, 8);
+        for pos in 0..b.x.len() {
+            let masked = b.x[pos] == task.mask_token();
+            assert_eq!(b.w[pos] == 1.0, masked, "pos {pos}");
+        }
+        assert!(b.w.iter().sum::<f32>() > 0.0);
+    }
+
+    #[test]
+    fn batches_are_deterministic_and_split_dependent() {
+        let task = CopyTask::new(32, 1);
+        let a = task.batch(Split::Train, 5, 2);
+        let b = task.batch(Split::Train, 5, 2);
+        let c = task.batch(Split::Valid, 5, 2);
+        assert_eq!(a.x, b.x);
+        assert_ne!(a.x, c.x);
+    }
+
+    #[test]
+    fn masked_accuracy_perfect_oracle() {
+        let task = CopyTask::new(16, 2);
+        let b = task.batch(Split::Test, 0, 2);
+        let vocab = 11;
+        // oracle logits: one-hot of the target
+        let mut logits = vec![0f32; b.x.len() * vocab];
+        for pos in 0..b.x.len() {
+            logits[pos * vocab + b.y[pos] as usize] = 10.0;
+        }
+        assert_eq!(masked_accuracy(&b, &logits, vocab), 1.0);
+    }
+}

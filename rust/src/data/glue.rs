@@ -1,0 +1,368 @@
+//! GLUE/SQuAD-analog synthetic tasks (Table 4 substitute — DESIGN.md §2).
+//!
+//! Five task families over a 32-token vocabulary, chosen so that solving
+//! them requires the attention patterns the paper highlights:
+//!
+//!  - `sst2`  : majority sentiment — local, easy (bag-of-words suffices)
+//!  - `mrpc`  : are the two halves permutations of each other — global
+//!  - `qnli`  : does the context contain the 3-gram query pattern
+//!  - `rte`   : is the second half's vocabulary a subset of the first's
+//!  - `squad` : span extraction — *sparse, pointer-like* attention, the
+//!              case where plain clustered attention collapses (Table 4)
+//!
+//! Token map: 0 = PAD/CLS, 1 = SEP, 2 = QMARK (query marker),
+//! 3.. = content tokens.  Sentiment tasks treat even content tokens as
+//! "positive" and odd as "negative".
+
+use super::{batch_rng, Split};
+use crate::prng::Xoshiro256;
+
+pub const VOCAB: usize = 32;
+pub const SEP: i32 = 1;
+pub const QMARK: i32 = 2;
+pub const FIRST_CONTENT: i64 = 3;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GlueTask {
+    Sst2,
+    Mrpc,
+    Qnli,
+    Rte,
+    Squad,
+}
+
+impl GlueTask {
+    pub fn from_name(s: &str) -> Option<Self> {
+        Some(match s {
+            "sst2" => Self::Sst2,
+            "mrpc" => Self::Mrpc,
+            "qnli" => Self::Qnli,
+            "rte" => Self::Rte,
+            "squad" => Self::Squad,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Sst2 => "sst2",
+            Self::Mrpc => "mrpc",
+            Self::Qnli => "qnli",
+            Self::Rte => "rte",
+            Self::Squad => "squad",
+        }
+    }
+
+    pub fn seq_len(&self) -> usize {
+        match self {
+            Self::Squad => 192,
+            _ => 128,
+        }
+    }
+}
+
+/// Classification batch (`cls` layout).
+#[derive(Debug, Clone)]
+pub struct GlueBatch {
+    pub x: Vec<i32>,    // (B·N)
+    pub mask: Vec<f32>, // (B·N)
+    pub y: Vec<i32>,    // (B,)
+    pub batch: usize,
+    pub seq_len: usize,
+}
+
+/// Span batch (`span` layout).
+#[derive(Debug, Clone)]
+pub struct SpanBatch {
+    pub x: Vec<i32>,
+    pub mask: Vec<f32>,
+    pub ystart: Vec<i32>,
+    pub yend: Vec<i32>,
+    pub batch: usize,
+    pub seq_len: usize,
+}
+
+fn content(rng: &mut Xoshiro256) -> i32 {
+    rng.range(FIRST_CONTENT, VOCAB as i64) as i32
+}
+
+fn fill_sample(task: GlueTask, rng: &mut Xoshiro256, x: &mut [i32],
+               mask: &mut [f32]) -> (i32, i32, i32) {
+    // returns (label, start, end) — classification uses label only
+    let n = x.len();
+    x.iter_mut().for_each(|v| *v = 0);
+    let len = rng.range((n as i64) * 3 / 4, n as i64 + 1) as usize;
+    mask.iter_mut().enumerate().for_each(|(i, m)| {
+        *m = if i < len { 1.0 } else { 0.0 }
+    });
+
+    match task {
+        GlueTask::Sst2 => {
+            // label 1 iff strictly more even ("positive") content tokens
+            let mut pos = 0i64;
+            let mut neg = 0i64;
+            for xi in x[..len].iter_mut() {
+                let t = content(rng);
+                *xi = t;
+                if t % 2 == 0 { pos += 1 } else { neg += 1 }
+            }
+            // break ties deterministically by flipping one token
+            if pos == neg {
+                x[0] = if x[0] % 2 == 0 { x[0] + 1 } else { x[0] - 1 };
+                neg += 1;
+                let _ = neg;
+            }
+            let pos2 = x[..len].iter().filter(|t| *t % 2 == 0).count();
+            ((pos2 * 2 > len) as i32, 0, 0)
+        }
+        GlueTask::Mrpc => {
+            let half = (len - 1) / 2;
+            let label = rng.coin(0.5) as i32;
+            let mut a: Vec<i32> = (0..half).map(|_| content(rng)).collect();
+            let mut b = a.clone();
+            rng.shuffle(&mut b);
+            if label == 0 {
+                // corrupt one token: changing one element's value always
+                // changes the multiset, so the halves stop being
+                // permutations.  (A rejection loop "draw until not in a"
+                // can run forever: long premises cover the whole content
+                // vocabulary.)
+                let pos = rng.below(half.max(1));
+                let old = b[pos];
+                let mut t = old + 1;
+                if t >= VOCAB as i32 {
+                    t = FIRST_CONTENT as i32;
+                }
+                b[pos] = t;
+            }
+            x[..half].copy_from_slice(&a);
+            x[half] = SEP;
+            x[half + 1..half + 1 + half].copy_from_slice(&b);
+            let _ = &mut a;
+            (label, 0, 0)
+        }
+        GlueTask::Qnli => {
+            // query = 3-gram after QMARK; label 1 iff it occurs in context
+            let qlen = 3usize;
+            let ctx_start = qlen + 2;
+            let q: Vec<i32> = (0..qlen).map(|_| content(rng)).collect();
+            x[0] = QMARK;
+            x[1..1 + qlen].copy_from_slice(&q);
+            x[1 + qlen] = SEP;
+            for xi in x[ctx_start..len].iter_mut() {
+                *xi = content(rng);
+            }
+            let label = rng.coin(0.5) as i32;
+            if label == 1 {
+                let pos = ctx_start
+                    + rng.below(len - ctx_start - qlen);
+                x[pos..pos + qlen].copy_from_slice(&q);
+                (1, 0, 0)
+            } else {
+                // ensure the q-gram does NOT occur
+                for i in ctx_start..len - qlen + 1 {
+                    if x[i..i + qlen] == q[..] {
+                        x[i] = if x[i] + 1 >= VOCAB as i32 {
+                            FIRST_CONTENT as i32
+                        } else {
+                            x[i] + 1
+                        };
+                    }
+                }
+                (0, 0, 0)
+            }
+        }
+        GlueTask::Rte => {
+            // premise = first half over a random sub-vocabulary;
+            // hypothesis entailed iff its tokens ⊆ premise vocabulary
+            let half = (len - 1) / 2;
+            let sub: Vec<i32> = (0..6).map(|_| content(rng)).collect();
+            for xi in x[..half].iter_mut() {
+                *xi = sub[rng.below(sub.len())];
+            }
+            x[half] = SEP;
+            let label = rng.coin(0.5) as i32;
+            for xi in x[half + 1..half + 1 + half].iter_mut() {
+                *xi = sub[rng.below(sub.len())];
+            }
+            if label == 0 {
+                // inject an out-of-premise token
+                let pos = half + 1 + rng.below(half.max(1));
+                let mut t = content(rng);
+                while sub.contains(&t) {
+                    t = content(rng);
+                }
+                x[pos] = t;
+            }
+            (label, 0, 0)
+        }
+        GlueTask::Squad => {
+            // question: QMARK + 2-gram needle + SEP; answer span = the
+            // needle's (unique) occurrence in the context, plus the token
+            // after it (span length 3)
+            let qlen = 2usize;
+            let ctx_start = qlen + 2;
+            let needle: Vec<i32> = (0..qlen).map(|_| content(rng)).collect();
+            x[0] = QMARK;
+            x[1..1 + qlen].copy_from_slice(&needle);
+            x[1 + qlen] = SEP;
+            for xi in x[ctx_start..len].iter_mut() {
+                *xi = content(rng);
+            }
+            // erase accidental needle matches, then plant one
+            for i in ctx_start..len - qlen + 1 {
+                if x[i..i + qlen] == needle[..] {
+                    x[i] = if x[i] + 1 >= VOCAB as i32 {
+                        FIRST_CONTENT as i32
+                    } else {
+                        x[i] + 1
+                    };
+                }
+            }
+            let pos = ctx_start + rng.below(len - ctx_start - qlen - 1);
+            x[pos..pos + qlen].copy_from_slice(&needle);
+            (0, pos as i32, (pos + qlen) as i32)
+        }
+    }
+}
+
+/// Deterministic classification batch.
+pub fn cls_batch(task: GlueTask, seed: u64, split: Split, index: u64,
+                 batch: usize) -> GlueBatch {
+    assert!(task != GlueTask::Squad);
+    let n = task.seq_len();
+    let mut rng = batch_rng(seed ^ task.name().len() as u64, split, index)
+        .fold_in(task as u64 + 100);
+    let mut out = GlueBatch {
+        x: vec![0; batch * n],
+        mask: vec![0.0; batch * n],
+        y: vec![0; batch],
+        batch,
+        seq_len: n,
+    };
+    for b in 0..batch {
+        let (s, e) = (b * n, (b + 1) * n);
+        let (label, _, _) = fill_sample(task, &mut rng, &mut out.x[s..e],
+                                        &mut out.mask[s..e]);
+        out.y[b] = label;
+    }
+    out
+}
+
+/// Deterministic span batch (squad-analog).
+pub fn span_batch(seed: u64, split: Split, index: u64, batch: usize)
+                  -> SpanBatch {
+    let task = GlueTask::Squad;
+    let n = task.seq_len();
+    let mut rng = batch_rng(seed ^ 5, split, index).fold_in(999);
+    let mut out = SpanBatch {
+        x: vec![0; batch * n],
+        mask: vec![0.0; batch * n],
+        ystart: vec![0; batch],
+        yend: vec![0; batch],
+        batch,
+        seq_len: n,
+    };
+    for b in 0..batch {
+        let (s, e) = (b * n, (b + 1) * n);
+        let (_, st, en) = fill_sample(task, &mut rng, &mut out.x[s..e],
+                                      &mut out.mask[s..e]);
+        out.ystart[b] = st;
+        out.yend[b] = en;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sst2_label_matches_majority() {
+        let b = cls_batch(GlueTask::Sst2, 0, Split::Train, 0, 16);
+        for s in 0..16 {
+            let row = &b.x[s * 128..(s + 1) * 128];
+            let m = &b.mask[s * 128..(s + 1) * 128];
+            let len = m.iter().filter(|&&v| v > 0.0).count();
+            let pos = row[..len].iter().filter(|&&t| t % 2 == 0).count();
+            assert_eq!(b.y[s], (pos * 2 > len) as i32);
+        }
+    }
+
+    #[test]
+    fn mrpc_positive_pairs_are_permutations() {
+        let b = cls_batch(GlueTask::Mrpc, 1, Split::Train, 2, 32);
+        for s in 0..32 {
+            let row = &b.x[s * 128..(s + 1) * 128];
+            let m = &b.mask[s * 128..(s + 1) * 128];
+            let len = m.iter().filter(|&&v| v > 0.0).count();
+            let half = (len - 1) / 2;
+            let mut a: Vec<i32> = row[..half].to_vec();
+            let mut c: Vec<i32> = row[half + 1..half + 1 + half].to_vec();
+            a.sort_unstable();
+            c.sort_unstable();
+            assert_eq!(b.y[s] == 1, a == c, "sample {s}");
+        }
+    }
+
+    #[test]
+    fn qnli_label_matches_substring_presence() {
+        let b = cls_batch(GlueTask::Qnli, 2, Split::Valid, 1, 32);
+        for s in 0..32 {
+            let row = &b.x[s * 128..(s + 1) * 128];
+            let m = &b.mask[s * 128..(s + 1) * 128];
+            let len = m.iter().filter(|&&v| v > 0.0).count();
+            let q = &row[1..4];
+            let ctx = &row[5..len];
+            let found = ctx.windows(3).any(|w| w == q);
+            assert_eq!(b.y[s] == 1, found, "sample {s}");
+        }
+    }
+
+    #[test]
+    fn rte_label_matches_subset_relation() {
+        let b = cls_batch(GlueTask::Rte, 3, Split::Train, 4, 32);
+        for s in 0..32 {
+            let row = &b.x[s * 128..(s + 1) * 128];
+            let m = &b.mask[s * 128..(s + 1) * 128];
+            let len = m.iter().filter(|&&v| v > 0.0).count();
+            let half = (len - 1) / 2;
+            let prem: Vec<i32> = row[..half].to_vec();
+            let subset = row[half + 1..half + 1 + half]
+                .iter()
+                .all(|t| prem.contains(t));
+            assert_eq!(b.y[s] == 1, subset, "sample {s}");
+        }
+    }
+
+    #[test]
+    fn squad_span_contains_the_needle_uniquely() {
+        let b = span_batch(4, Split::Train, 0, 32);
+        let n = 192;
+        for s in 0..32 {
+            let row = &b.x[s * n..(s + 1) * n];
+            let needle = &row[1..3];
+            let st = b.ystart[s] as usize;
+            let en = b.yend[s] as usize;
+            assert_eq!(&row[st..st + 2], needle);
+            assert_eq!(en, st + 2);
+            // unique occurrence in context
+            let m = &b.mask[s * n..(s + 1) * n];
+            let len = m.iter().filter(|&&v| v > 0.0).count();
+            let hits = row[4..len]
+                .windows(2)
+                .filter(|w| *w == needle)
+                .count();
+            assert_eq!(hits, 1, "sample {s}");
+        }
+    }
+
+    #[test]
+    fn labels_are_roughly_balanced() {
+        for task in [GlueTask::Mrpc, GlueTask::Qnli, GlueTask::Rte] {
+            let b = cls_batch(task, 9, Split::Train, 0, 64);
+            let ones: i32 = b.y.iter().sum();
+            assert!((16..=48).contains(&ones), "{task:?}: {ones}/64");
+        }
+    }
+}

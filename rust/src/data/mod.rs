@@ -1,0 +1,39 @@
+//! Synthetic workload generators (the data substrate, DESIGN.md §2).
+//!
+//! All generators are deterministic functions of a seed via
+//! [`crate::prng::Xoshiro256`], so every experiment is exactly
+//! reproducible.  Batches are emitted in the flat layouts the AOT
+//! manifest declares (`programs.py` docstring).
+
+use crate::prng::Xoshiro256;
+
+pub mod asr;
+pub mod copy_task;
+pub mod glue;
+
+pub use asr::{AsrBatch, AsrCorpus, AsrSpec};
+pub use copy_task::{CopyBatch, CopyTask};
+pub use glue::{GlueBatch, GlueTask, SpanBatch};
+
+/// A dataset draws reproducible batches by (split, index).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Split {
+    Train,
+    Valid,
+    Test,
+}
+
+impl Split {
+    pub fn salt(self) -> u64 {
+        match self {
+            Split::Train => 0x7261696e,
+            Split::Valid => 0x76616c69,
+            Split::Test => 0x74657374,
+        }
+    }
+}
+
+/// Stream-id for a (seed, split, batch) triple.
+pub fn batch_rng(seed: u64, split: Split, batch_idx: u64) -> Xoshiro256 {
+    Xoshiro256::new(seed).fold_in(split.salt()).fold_in(batch_idx)
+}

@@ -1,0 +1,288 @@
+//! Concurrency substrate (tokio is unavailable offline — DESIGN.md §5).
+//!
+//! A bounded MPMC channel (mutex + condvars, honest backpressure) and a
+//! small worker pool.  The coordinator's event loop is built on these:
+//! request queues block producers when full, which is the backpressure
+//! signal the serving benches measure.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// Bounded multi-producer multi-consumer channel.
+pub struct Channel<T> {
+    inner: Arc<ChannelInner<T>>,
+}
+
+struct ChannelInner<T> {
+    q: Mutex<ChannelState<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+}
+
+struct ChannelState<T> {
+    buf: VecDeque<T>,
+    cap: usize,
+    closed: bool,
+}
+
+impl<T> Clone for Channel<T> {
+    fn clone(&self) -> Self {
+        Self { inner: self.inner.clone() }
+    }
+}
+
+impl<T> Channel<T> {
+    pub fn bounded(cap: usize) -> Self {
+        assert!(cap > 0);
+        Self {
+            inner: Arc::new(ChannelInner {
+                q: Mutex::new(ChannelState {
+                    buf: VecDeque::new(),
+                    cap,
+                    closed: false,
+                }),
+                not_empty: Condvar::new(),
+                not_full: Condvar::new(),
+            }),
+        }
+    }
+
+    /// Blocking send; returns Err(item) if the channel is closed.
+    pub fn send(&self, item: T) -> Result<(), T> {
+        let mut st = self.inner.q.lock().unwrap();
+        loop {
+            if st.closed {
+                return Err(item);
+            }
+            if st.buf.len() < st.cap {
+                st.buf.push_back(item);
+                self.inner.not_empty.notify_one();
+                return Ok(());
+            }
+            st = self.inner.not_full.wait(st).unwrap();
+        }
+    }
+
+    /// Non-blocking send.
+    pub fn try_send(&self, item: T) -> Result<(), T> {
+        let mut st = self.inner.q.lock().unwrap();
+        if st.closed || st.buf.len() >= st.cap {
+            return Err(item);
+        }
+        st.buf.push_back(item);
+        self.inner.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Blocking receive; None when closed and drained.
+    pub fn recv(&self) -> Option<T> {
+        let mut st = self.inner.q.lock().unwrap();
+        loop {
+            if let Some(item) = st.buf.pop_front() {
+                self.inner.not_full.notify_one();
+                return Some(item);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.inner.not_empty.wait(st).unwrap();
+        }
+    }
+
+    /// Receive with timeout; `Ok(None)` = closed, `Err(())` = timeout.
+    pub fn recv_timeout(&self, dur: std::time::Duration)
+                        -> Result<Option<T>, ()> {
+        let deadline = std::time::Instant::now() + dur;
+        let mut st = self.inner.q.lock().unwrap();
+        loop {
+            if let Some(item) = st.buf.pop_front() {
+                self.inner.not_full.notify_one();
+                return Ok(Some(item));
+            }
+            if st.closed {
+                return Ok(None);
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return Err(());
+            }
+            let (g, res) = self
+                .inner
+                .not_empty
+                .wait_timeout(st, deadline - now)
+                .unwrap();
+            st = g;
+            if res.timed_out() && st.buf.is_empty() && !st.closed {
+                return Err(());
+            }
+        }
+    }
+
+    /// Drain up to `max` items without blocking (batcher fast-path).
+    pub fn drain_up_to(&self, max: usize) -> Vec<T> {
+        let mut st = self.inner.q.lock().unwrap();
+        let take = st.buf.len().min(max);
+        let out: Vec<T> = st.buf.drain(..take).collect();
+        if !out.is_empty() {
+            self.inner.not_full.notify_all();
+        }
+        out
+    }
+
+    pub fn close(&self) {
+        let mut st = self.inner.q.lock().unwrap();
+        st.closed = true;
+        self.inner.not_empty.notify_all();
+        self.inner.not_full.notify_all();
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.q.lock().unwrap().buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Fixed-size worker pool executing boxed jobs.
+pub struct ThreadPool {
+    tx: Channel<Box<dyn FnOnce() + Send>>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    pub fn new(workers: usize, queue_cap: usize) -> Self {
+        let tx: Channel<Box<dyn FnOnce() + Send>> =
+            Channel::bounded(queue_cap.max(1));
+        let handles = (0..workers.max(1))
+            .map(|i| {
+                let rx = tx.clone();
+                std::thread::Builder::new()
+                    .name(format!("ct-worker-{i}"))
+                    .spawn(move || {
+                        while let Some(job) = rx.recv() {
+                            job();
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        Self { tx, handles }
+    }
+
+    pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.tx
+            .send(Box::new(f))
+            .unwrap_or_else(|_| panic!("pool closed"));
+    }
+
+    /// Close the queue and join all workers.
+    pub fn shutdown(self) {
+        self.tx.close();
+        for h in self.handles {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Run `f(i)` for i in 0..n across `workers` scoped threads (simple
+/// data-parallel helper for the benches).
+pub fn parallel_for<F: Fn(usize) + Sync>(n: usize, workers: usize, f: F) {
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for _ in 0..workers.max(1) {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                f(i);
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::time::Duration;
+
+    #[test]
+    fn channel_fifo() {
+        let ch = Channel::bounded(4);
+        ch.send(1).unwrap();
+        ch.send(2).unwrap();
+        assert_eq!(ch.recv(), Some(1));
+        assert_eq!(ch.recv(), Some(2));
+    }
+
+    #[test]
+    fn channel_backpressure_blocks_until_recv() {
+        let ch = Channel::bounded(1);
+        ch.send(1).unwrap();
+        assert!(ch.try_send(2).is_err());
+        let ch2 = ch.clone();
+        let h = std::thread::spawn(move || ch2.send(2).unwrap());
+        std::thread::sleep(Duration::from_millis(20));
+        assert_eq!(ch.recv(), Some(1));
+        h.join().unwrap();
+        assert_eq!(ch.recv(), Some(2));
+    }
+
+    #[test]
+    fn close_unblocks_receivers() {
+        let ch: Channel<i32> = Channel::bounded(1);
+        let ch2 = ch.clone();
+        let h = std::thread::spawn(move || ch2.recv());
+        std::thread::sleep(Duration::from_millis(10));
+        ch.close();
+        assert_eq!(h.join().unwrap(), None);
+    }
+
+    #[test]
+    fn recv_timeout_times_out() {
+        let ch: Channel<i32> = Channel::bounded(1);
+        assert!(ch.recv_timeout(Duration::from_millis(10)).is_err());
+        ch.send(5).unwrap();
+        assert_eq!(ch.recv_timeout(Duration::from_millis(10)),
+                   Ok(Some(5)));
+    }
+
+    #[test]
+    fn drain_up_to_takes_at_most_max() {
+        let ch = Channel::bounded(10);
+        for i in 0..6 {
+            ch.send(i).unwrap();
+        }
+        let got = ch.drain_up_to(4);
+        assert_eq!(got, vec![0, 1, 2, 3]);
+        assert_eq!(ch.len(), 2);
+    }
+
+    #[test]
+    fn pool_executes_all_jobs() {
+        let pool = ThreadPool::new(4, 16);
+        let count = Arc::new(AtomicUsize::new(0));
+        for _ in 0..100 {
+            let c = count.clone();
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.shutdown();
+        assert_eq!(count.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn parallel_for_covers_all_indices() {
+        let hits: Vec<AtomicUsize> =
+            (0..50).map(|_| AtomicUsize::new(0)).collect();
+        parallel_for(50, 4, |i| {
+            hits[i].fetch_add(1, Ordering::SeqCst);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+    }
+}

@@ -1,0 +1,36 @@
+//! # clustered-transformers
+//!
+//! A production-style reproduction of **"Fast Transformers with Clustered
+//! Attention"** (Vyas, Katharopoulos, Fleuret — NeurIPS 2020) as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! - **L1** (`python/compile/kernels/`): Pallas kernels for the attention
+//!   hot-spots, proven against a pure-jnp oracle.
+//! - **L2** (`python/compile/`): the transformer model, losses and Adam,
+//!   AOT-lowered once to HLO text under `artifacts/`.
+//! - **L3** (this crate): the coordinator — PJRT runtime, length-bucketing
+//!   router, dynamic batcher, training driver, serving server, metrics —
+//!   plus every substrate the experiments need (clustering, reference
+//!   attention, synthetic corpora, PRNG, JSON, bench harness).
+//!
+//! Python never runs on the request path: after `make artifacts` the Rust
+//! binary is self-contained.
+//!
+//! See `DESIGN.md` for the system inventory and experiment index and
+//! `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod attention;
+pub mod benchlib;
+pub mod cli;
+pub mod clustering;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod exec;
+pub mod jsonio;
+pub mod metrics;
+pub mod prng;
+pub mod proptest;
+pub mod runtime;
+pub mod server;
+pub mod tensor;

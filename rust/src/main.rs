@@ -1,0 +1,270 @@
+//! `ct` — the clustered-transformers launcher.
+//!
+//! Subcommands:
+//!   list        show manifest programs
+//!   train       train one model via compiled train-step HLO
+//!   eval        evaluate a checkpoint with any attention variant
+//!   serve       run the TCP inference server
+//!   validate    run every *.forward program once (artifact smoke test)
+//!   bench-attn  quick native attention timing (see benches for full runs)
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+use clustered_transformers::cli::Command;
+use clustered_transformers::config::{find_repo_root, init_logging, RunConfig};
+use clustered_transformers::coordinator::{
+    trainer, DataFeed, InferenceEngine, ServeOptions, TrainOptions,
+};
+use clustered_transformers::data::Split;
+use clustered_transformers::runtime::{checkpoint::Checkpoint, HostTensor,
+                                      Runtime};
+use clustered_transformers::{attention, benchlib, prng, tensor};
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(argv: &[String]) -> Result<()> {
+    let sub = argv.first().map(|s| s.as_str()).unwrap_or("help");
+    let rest = if argv.is_empty() { &[][..] } else { &argv[1..] };
+    match sub {
+        "list" => cmd_list(rest),
+        "train" => cmd_train(rest),
+        "eval" => cmd_eval(rest),
+        "serve" => cmd_serve(rest),
+        "validate" => cmd_validate(rest),
+        "bench-attn" => cmd_bench_attn(rest),
+        _ => {
+            println!(
+                "ct — Fast Transformers with Clustered Attention (repro)\n\
+                 subcommands: list | train | eval | serve | validate | \
+                 bench-attn\n\
+                 run `ct <subcommand> --help` conceptually via source; \
+                 common options: --artifacts DIR --steps N --model NAME"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn open_runtime(args: &clustered_transformers::cli::Args) -> Result<Runtime> {
+    let root = find_repo_root();
+    let dir = args.get_or("artifacts",
+                          root.join("artifacts").to_str().unwrap());
+    Runtime::open(dir)
+}
+
+fn cmd_list(rest: &[String]) -> Result<()> {
+    let cmd = Command::new("list", "show manifest programs")
+        .opt("artifacts", None, "artifacts directory")
+        .opt("filter", Some(""), "substring filter");
+    let args = cmd.parse(rest)?;
+    init_logging(false);
+    let rt = open_runtime(&args)?;
+    let filter = args.get_or("filter", "");
+    for name in rt.program_names() {
+        if name.contains(&filter) {
+            let p = rt.program(&name)?;
+            println!("{:60} {:8} N={:<5} B={:<3} params={}", name, p.kind,
+                     p.seq_len(), p.batch_size(), p.param_count);
+        }
+    }
+    Ok(())
+}
+
+fn cmd_train(rest: &[String]) -> Result<()> {
+    let cmd = Command::new("train", "train a model from the manifest")
+        .opt("artifacts", None, "artifacts directory")
+        .opt("model", None, "model name, e.g. copy-n64-full")
+        .opt("steps", Some("400"), "optimizer steps")
+        .opt("eval-every", Some("50"), "validation cadence")
+        .opt("patience", Some("0"), "early-stop patience (0 = off)")
+        .opt("seed", Some("0"), "seed")
+        .opt("out", None, "checkpoint output path");
+    let args = cmd.parse(rest)?;
+    init_logging(true);
+    let model = args
+        .get("model")
+        .ok_or_else(|| anyhow!("--model is required\n{}", cmd.usage()))?
+        .to_string();
+    let rt = open_runtime(&args)?;
+    let opts = TrainOptions {
+        steps: args.get_u64("steps", 400)?,
+        eval_every: args.get_u64("eval-every", 50)?,
+        patience: args.get_u64("patience", 0)?,
+        seed: args.get_u64("seed", 0)?,
+        ..Default::default()
+    };
+    let (ckpt, result) = trainer::train_model(&rt, &model, &opts)?;
+    println!(
+        "trained {model}: {} steps, {:.1}s total ({:.3}s/step), final loss \
+         {:.4}, best val {:.4}",
+        result.steps_run, result.wall_seconds, result.seconds_per_step,
+        result.final_loss, result.best_val_loss
+    );
+    let cfg = RunConfig::default();
+    cfg.ensure_dirs()?;
+    let out = args
+        .get("out")
+        .map(|s| s.into())
+        .unwrap_or_else(|| cfg.checkpoint_path(&model));
+    ckpt.save(&out)?;
+    println!("checkpoint: {}", out.display());
+    Ok(())
+}
+
+fn cmd_eval(rest: &[String]) -> Result<()> {
+    let cmd = Command::new("eval", "evaluate a checkpoint with a variant")
+        .opt("artifacts", None, "artifacts directory")
+        .opt("checkpoint", None, "checkpoint path")
+        .opt("forward", None, "forward program name (the eval variant)")
+        .opt("batches", Some("8"), "validation batches")
+        .opt("seed", Some("0"), "seed");
+    let args = cmd.parse(rest)?;
+    init_logging(true);
+    let rt = open_runtime(&args)?;
+    let ckpt_path = args
+        .get("checkpoint")
+        .ok_or_else(|| anyhow!("--checkpoint required"))?;
+    let fwd = args
+        .get("forward")
+        .ok_or_else(|| anyhow!("--forward required"))?;
+    let ckpt = Checkpoint::load(ckpt_path)?;
+    let prog = rt.program(fwd)?.clone();
+    let feed = DataFeed::for_program(&prog, args.get_u64("seed", 0)?)?;
+    let batches = args.get_u64("batches", 8)?;
+    let evals = trainer::forward_eval(&rt, fwd, &ckpt.params, &feed,
+                                      Split::Test, batches, 0)?;
+    let report = clustered_transformers::coordinator::trainer::score(
+        &prog, &feed, &evals)?;
+    println!("{fwd}: {report}");
+    Ok(())
+}
+
+fn cmd_validate(rest: &[String]) -> Result<()> {
+    let cmd = Command::new("validate", "run every forward program once")
+        .opt("artifacts", None, "artifacts directory")
+        .opt("filter", Some(""), "substring filter");
+    let args = cmd.parse(rest)?;
+    init_logging(true);
+    let rt = open_runtime(&args)?;
+    let filter = args.get_or("filter", "");
+    let mut ran = 0;
+    for name in rt.program_names() {
+        if !name.ends_with(".forward") || !name.contains(&filter) {
+            continue;
+        }
+        let exe = rt.load(&name)?;
+        let p = &exe.program;
+        let inputs: Vec<HostTensor> = p
+            .inputs
+            .iter()
+            .map(|spec| match spec.dtype {
+                clustered_transformers::runtime::Dtype::F32 => {
+                    HostTensor::F32(vec![0.01; spec.elements()])
+                }
+                clustered_transformers::runtime::Dtype::I32 => {
+                    HostTensor::I32(vec![1; spec.elements()])
+                }
+            })
+            .collect();
+        let out = exe.run(&inputs)?;
+        let finite = out.iter().all(|t| match t {
+            HostTensor::F32(v) => v.iter().all(|x| x.is_finite()),
+            HostTensor::I32(_) => true,
+        });
+        println!("ok {name} -> {} outputs (finite: {finite})", out.len());
+        anyhow::ensure!(finite, "{name} produced non-finite outputs");
+        ran += 1;
+    }
+    println!("validated {ran} forward programs");
+    Ok(())
+}
+
+fn cmd_serve(rest: &[String]) -> Result<()> {
+    let cmd = Command::new("serve", "TCP inference server")
+        .opt("artifacts", None, "artifacts directory")
+        .opt("checkpoint", None, "checkpoint path")
+        .opt("forward", None, "comma-separated forward programs (buckets)")
+        .opt("addr", Some("127.0.0.1:7878"), "bind address")
+        .opt("max-wait-ms", Some("5"), "batcher deadline");
+    let args = cmd.parse(rest)?;
+    init_logging(true);
+    let rt = open_runtime(&args)?;
+    let fwd: Vec<String> = args
+        .get("forward")
+        .ok_or_else(|| anyhow!("--forward required"))?
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .collect();
+    let params = match args.get("checkpoint") {
+        Some(p) => Checkpoint::load(p)?.params,
+        None => {
+            // init from the matching init program
+            let model = fwd[0].trim_end_matches(".forward");
+            let init = rt.load(&format!("{model}.init"))?;
+            init.run(&[HostTensor::scalar_i32(0)])?
+                .remove(0)
+                .into_f32()?
+        }
+    };
+    let mut opts = ServeOptions::default();
+    opts.policy.max_wait =
+        std::time::Duration::from_millis(args.get_u64("max-wait-ms", 5)?);
+    let engine = Arc::new(InferenceEngine::start(&rt, &fwd, params, opts)?);
+    let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let addr = args.get_or("addr", "127.0.0.1:7878");
+    println!("serving on {addr} (ctrl-c to stop)");
+    clustered_transformers::server::serve(engine, &addr, stop, |a| {
+        println!("bound {a}");
+    })
+}
+
+fn cmd_bench_attn(rest: &[String]) -> Result<()> {
+    let cmd = Command::new("bench-attn", "native attention quick timing")
+        .opt("n", Some("2048"), "sequence length")
+        .opt("dk", Some("64"), "head dim")
+        .opt("clusters", Some("100"), "C")
+        .opt("topk", Some("32"), "k");
+    let args = cmd.parse(rest)?;
+    let n = args.get_usize("n", 2048)?;
+    let dk = args.get_usize("dk", 64)?;
+    let c = args.get_usize("clusters", 100)?;
+    let k = args.get_usize("topk", 32)?;
+    let mut rng = prng::Xoshiro256::new(0);
+    let q = tensor::Matrix::randn(n, dk, &mut rng);
+    let kk = tensor::Matrix::randn(n, dk, &mut rng);
+    let v = tensor::Matrix::randn(n, dk, &mut rng);
+    let mut table = benchlib::Table::new(
+        &format!("native attention, N={n} Dk={dk}"),
+        &["variant", "mean", "speedup vs full"],
+    );
+    let variants = vec![
+        attention::Variant::Full,
+        attention::Variant::Clustered { clusters: c, bits: 63, iters: 10 },
+        attention::Variant::ImprovedClustered {
+            clusters: c, bits: 63, iters: 10, topk: k },
+        attention::Variant::Lsh { rounds: 1, chunk: 32 },
+        attention::Variant::Lsh { rounds: 4, chunk: 32 },
+    ];
+    let mut full_time = None;
+    for var in &variants {
+        let mut rng2 = prng::Xoshiro256::new(1);
+        let st = benchlib::quick(|| {
+            let _ = attention::run(var, &q, &kk, &v, &mut rng2);
+        });
+        if matches!(var, attention::Variant::Full) {
+            full_time = Some(st.mean_s);
+        }
+        let speedup = full_time.map(|f| f / st.mean_s).unwrap_or(1.0);
+        table.row(vec![var.name(), benchlib::fmt_time(st.mean_s),
+                       format!("{speedup:.2}x")]);
+    }
+    table.emit();
+    Ok(())
+}

@@ -1,0 +1,222 @@
+//! Evaluation metrics: edit distance (PER/WER), accuracy/F1, latency
+//! histograms + percentile summaries for the serving path.
+
+/// Levenshtein distance between two label sequences.
+pub fn edit_distance(a: &[i32], b: &[i32]) -> usize {
+    let (la, lb) = (a.len(), b.len());
+    if la == 0 {
+        return lb;
+    }
+    if lb == 0 {
+        return la;
+    }
+    let mut prev: Vec<usize> = (0..=lb).collect();
+    let mut cur = vec![0usize; lb + 1];
+    for i in 1..=la {
+        cur[0] = i;
+        for j in 1..=lb {
+            let sub = prev[j - 1] + (a[i - 1] != b[j - 1]) as usize;
+            cur[j] = sub.min(prev[j] + 1).min(cur[j - 1] + 1);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[lb]
+}
+
+/// Accumulates token error rate (PER/WER) over utterances.
+#[derive(Debug, Default, Clone)]
+pub struct ErrorRate {
+    pub errors: usize,
+    pub tokens: usize,
+}
+
+impl ErrorRate {
+    pub fn add(&mut self, hyp: &[i32], refr: &[i32]) {
+        self.errors += edit_distance(hyp, refr);
+        self.tokens += refr.len();
+    }
+
+    /// Error rate in percent (the paper's PER/WER convention).
+    pub fn percent(&self) -> f64 {
+        if self.tokens == 0 {
+            0.0
+        } else {
+            100.0 * self.errors as f64 / self.tokens as f64
+        }
+    }
+}
+
+/// Binary/multi-class accuracy accumulator.
+#[derive(Debug, Default, Clone)]
+pub struct Accuracy {
+    pub correct: usize,
+    pub total: usize,
+}
+
+impl Accuracy {
+    pub fn add(&mut self, pred: i32, target: i32) {
+        self.total += 1;
+        self.correct += (pred == target) as usize;
+    }
+
+    pub fn value(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.correct as f64 / self.total as f64
+        }
+    }
+}
+
+/// Span-extraction F1 in the SQuAD style (token-overlap of spans).
+pub fn span_f1(pred: (i32, i32), gold: (i32, i32)) -> f64 {
+    let (ps, pe) = (pred.0.min(pred.1), pred.0.max(pred.1));
+    let (gs, ge) = (gold.0, gold.1);
+    let inter = (pe.min(ge) - ps.max(gs)).max(0) as f64;
+    let plen = (pe - ps).max(0) as f64;
+    let glen = (ge - gs).max(0) as f64;
+    if inter == 0.0 || plen == 0.0 || glen == 0.0 {
+        return if plen == glen && ps == gs { 1.0 } else { 0.0 };
+    }
+    let p = inter / plen;
+    let r = inter / glen;
+    2.0 * p * r / (p + r)
+}
+
+/// Fixed-boundary latency histogram (µs buckets, power-of-√2 spacing).
+#[derive(Debug, Clone)]
+pub struct LatencyHistogram {
+    bounds_us: Vec<f64>,
+    counts: Vec<u64>,
+    samples: Vec<f64>, // exact values for percentile queries (bounded)
+    max_samples: usize,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        let mut bounds = Vec::new();
+        let mut b = 1.0;
+        while b < 60_000_000.0 {
+            bounds.push(b);
+            b *= std::f64::consts::SQRT_2;
+        }
+        let n = bounds.len();
+        Self { bounds_us: bounds, counts: vec![0; n + 1],
+               samples: Vec::new(), max_samples: 100_000 }
+    }
+
+    pub fn record(&mut self, dur: std::time::Duration) {
+        let us = dur.as_secs_f64() * 1e6;
+        let idx = self
+            .bounds_us
+            .partition_point(|&b| b < us);
+        self.counts[idx] += 1;
+        if self.samples.len() < self.max_samples {
+            self.samples.push(us);
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    /// Percentile in microseconds (exact over retained samples).
+    pub fn percentile_us(&self, p: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        let mut s = self.samples.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = ((p / 100.0) * (s.len() - 1) as f64).round() as usize;
+        s[idx.min(s.len() - 1)]
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.samples.is_empty() {
+            0.0
+        } else {
+            self.samples.iter().sum::<f64>() / self.samples.len() as f64
+        }
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "n={} mean={:.0}µs p50={:.0}µs p95={:.0}µs p99={:.0}µs",
+            self.count(),
+            self.mean_us(),
+            self.percentile_us(50.0),
+            self.percentile_us(95.0),
+            self.percentile_us(99.0)
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn edit_distance_known_cases() {
+        assert_eq!(edit_distance(&[1, 2, 3], &[1, 2, 3]), 0);
+        assert_eq!(edit_distance(&[1, 2, 3], &[1, 3]), 1); // deletion
+        assert_eq!(edit_distance(&[1, 2], &[1, 2, 3]), 1); // insertion
+        assert_eq!(edit_distance(&[1, 2, 3], &[1, 9, 3]), 1); // substitution
+        assert_eq!(edit_distance(&[], &[1, 2]), 2);
+        assert_eq!(edit_distance(&[3, 1, 4, 1, 5], &[1, 4, 1]), 2);
+    }
+
+    #[test]
+    fn edit_distance_symmetric_and_triangle() {
+        let a = [1, 5, 2, 7];
+        let b = [5, 2, 9];
+        let c = [5, 9];
+        let ab = edit_distance(&a, &b);
+        assert_eq!(ab, edit_distance(&b, &a));
+        assert!(edit_distance(&a, &c) <= ab + edit_distance(&b, &c));
+    }
+
+    #[test]
+    fn per_percent() {
+        let mut er = ErrorRate::default();
+        er.add(&[1, 2, 3], &[1, 2, 4]); // 1 error / 3
+        er.add(&[1], &[1]); // 0 / 1
+        assert!((er.percent() - 25.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn span_f1_cases() {
+        assert_eq!(span_f1((5, 8), (5, 8)), 1.0);
+        assert_eq!(span_f1((0, 2), (5, 8)), 0.0);
+        let f1 = span_f1((5, 7), (5, 8)); // overlap 2, p=1, r=2/3
+        assert!((f1 - 0.8).abs() < 1e-9);
+    }
+
+    #[test]
+    fn histogram_percentiles() {
+        let mut h = LatencyHistogram::new();
+        for ms in 1..=100u64 {
+            h.record(Duration::from_millis(ms));
+        }
+        assert_eq!(h.count(), 100);
+        let p50 = h.percentile_us(50.0);
+        assert!((45_000.0..56_000.0).contains(&p50), "{p50}");
+        let p99 = h.percentile_us(99.0);
+        assert!(p99 >= 98_000.0, "{p99}");
+    }
+
+    #[test]
+    fn accuracy_accumulates() {
+        let mut a = Accuracy::default();
+        a.add(1, 1);
+        a.add(0, 1);
+        a.add(1, 1);
+        assert!((a.value() - 2.0 / 3.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,77 @@
+//! Mini property-testing harness (the proptest crate is unavailable
+//! offline — DESIGN.md §5).  Seeded case generation with first-failure
+//! shrinking over the case index: on failure the harness reports the seed
+//! and case so the exact input is reproducible.
+
+use crate::prng::Xoshiro256;
+
+/// Run `cases` random checks.  `gen` builds an input from an RNG;
+/// `check` returns an error message on violation.
+pub fn forall<T: std::fmt::Debug, G, C>(name: &str, seed: u64, cases: usize,
+                                        mut gen: G, mut check: C)
+where
+    G: FnMut(&mut Xoshiro256) -> T,
+    C: FnMut(&T) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let mut rng = Xoshiro256::new(seed).fold_in(case as u64);
+        let input = gen(&mut rng);
+        if let Err(msg) = check(&input) {
+            panic!(
+                "property {name:?} failed (seed={seed}, case={case}):\n  \
+                 {msg}\n  input: {input:?}"
+            );
+        }
+    }
+}
+
+/// Common generators.
+pub mod gen {
+    use crate::prng::Xoshiro256;
+
+    pub fn vec_f32(rng: &mut Xoshiro256, min_len: usize, max_len: usize)
+                   -> Vec<f32> {
+        let n = min_len + rng.below(max_len - min_len + 1);
+        rng.normal_vec(n)
+    }
+
+    pub fn vec_i32(rng: &mut Xoshiro256, len: usize, lo: i64, hi: i64)
+                   -> Vec<i32> {
+        (0..len).map(|_| rng.range(lo, hi) as i32).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_valid_property() {
+        forall("abs is nonneg", 1, 100,
+               |rng| rng.normal_f32(),
+               |x| if x.abs() >= 0.0 { Ok(()) }
+                   else { Err("negative abs".into()) });
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn forall_reports_failures() {
+        forall("always fails", 2, 10,
+               |rng| rng.next_f32(),
+               |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn generators_respect_bounds() {
+        forall("vec bounds", 3, 50,
+               |rng| gen::vec_i32(rng, 20, 5, 9),
+               |v| {
+                   if v.len() == 20 && v.iter().all(|&x| (5..9).contains(&x))
+                   {
+                       Ok(())
+                   } else {
+                       Err(format!("out of bounds: {v:?}"))
+                   }
+               });
+    }
+}

@@ -1,0 +1,127 @@
+//! Flat-vector checkpoints: params + Adam state + step, as one little-
+//! endian binary file with a JSON sidecar header.
+//!
+//! The L2 model keeps all parameters in a single f32 vector (see
+//! `python/compile/model.py::param_spec`), so a checkpoint is just three
+//! vectors and a counter — no framework serialization needed.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::jsonio::{obj, parse, Value};
+
+const MAGIC: &[u8; 8] = b"CTCKPT01";
+
+/// Training state for one model.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Checkpoint {
+    pub model_name: String,
+    pub step: i32,
+    pub params: Vec<f32>,
+    pub adam_m: Vec<f32>,
+    pub adam_v: Vec<f32>,
+    /// free-form metrics recorded at save time (loss curve etc.)
+    pub meta: Value,
+}
+
+impl Checkpoint {
+    pub fn fresh(model_name: &str, params: Vec<f32>, adam_m: Vec<f32>,
+                 adam_v: Vec<f32>) -> Self {
+        Self {
+            model_name: model_name.to_string(),
+            step: 0,
+            params,
+            adam_m,
+            adam_v,
+            meta: Value::Null,
+        }
+    }
+
+    pub fn save<P: AsRef<Path>>(&self, path: P) -> Result<()> {
+        let header = obj(vec![
+            ("model", self.model_name.as_str().into()),
+            ("step", (self.step as i64).into()),
+            ("n", self.params.len().into()),
+            ("meta", self.meta.clone()),
+        ])
+        .to_string();
+        let mut f = std::fs::File::create(path.as_ref())
+            .with_context(|| format!("creating {:?}", path.as_ref()))?;
+        f.write_all(MAGIC)?;
+        f.write_all(&(header.len() as u64).to_le_bytes())?;
+        f.write_all(header.as_bytes())?;
+        for vec in [&self.params, &self.adam_m, &self.adam_v] {
+            for v in vec {
+                f.write_all(&v.to_le_bytes())?;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn load<P: AsRef<Path>>(path: P) -> Result<Self> {
+        let mut f = std::fs::File::open(path.as_ref())
+            .with_context(|| format!("opening {:?}", path.as_ref()))?;
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("not a checkpoint file");
+        }
+        let mut len8 = [0u8; 8];
+        f.read_exact(&mut len8)?;
+        let hlen = u64::from_le_bytes(len8) as usize;
+        let mut hbuf = vec![0u8; hlen];
+        f.read_exact(&mut hbuf)?;
+        let header = parse(std::str::from_utf8(&hbuf)?)
+            .map_err(|e| anyhow::anyhow!("checkpoint header: {e}"))?;
+        let n = header.get("n").as_usize().unwrap_or(0);
+        let mut raw = vec![0u8; 3 * n * 4];
+        f.read_exact(&mut raw)?;
+        let read_vec = |off: usize| -> Vec<f32> {
+            raw[off * 4..(off + n) * 4]
+                .chunks_exact(4)
+                .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                .collect()
+        };
+        Ok(Self {
+            model_name: header.get("model").as_str().unwrap_or("").into(),
+            step: header.get("step").as_i64().unwrap_or(0) as i32,
+            params: read_vec(0),
+            adam_m: read_vec(n),
+            adam_v: read_vec(2 * n),
+            meta: header.get("meta").clone(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn save_load_roundtrip() {
+        let dir = std::env::temp_dir().join("ct-ckpt-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("m.ckpt");
+        let mut c = Checkpoint::fresh("wsj-l6-full",
+                                      vec![1.0, -2.5, 3.25],
+                                      vec![0.0; 3], vec![0.5; 3]);
+        c.step = 42;
+        c.meta = obj(vec![("loss", 1.25.into())]);
+        c.save(&path).unwrap();
+        let d = Checkpoint::load(&path).unwrap();
+        assert_eq!(c, d);
+        std::fs::remove_file(path).unwrap();
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let dir = std::env::temp_dir().join("ct-ckpt-test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.ckpt");
+        std::fs::write(&path, b"not a checkpoint").unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        std::fs::remove_file(path).unwrap();
+    }
+}

@@ -1,0 +1,374 @@
+//! PJRT runtime: load AOT artifacts (HLO text), compile once, execute from
+//! the Rust hot path.
+//!
+//! `manifest.json` (written by `python -m compile.aot`) declares every
+//! program's inputs/outputs/config; [`Runtime`] compiles executables
+//! lazily and caches them, so benches and the coordinator share compiled
+//! modules.  Interchange is HLO *text* because the pinned xla_extension
+//! 0.5.1 rejects jax ≥ 0.5 serialized protos (64-bit instruction ids).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::jsonio::{self, Value};
+
+pub mod checkpoint;
+
+/// Tensor dtype as declared in the manifest.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "float32" => Ok(Dtype::F32),
+            "int32" => Ok(Dtype::I32),
+            other => bail!("unsupported dtype {other}"),
+        }
+    }
+}
+
+/// One named input/output tensor of a program.
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Manifest entry for one AOT program.
+#[derive(Debug, Clone)]
+pub struct Program {
+    pub name: String,
+    pub kind: String,
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<String>,
+    pub config: Value,
+    pub param_count: usize,
+}
+
+impl Program {
+    /// Model config accessors (see `ModelConfig.to_json_dict`).
+    pub fn seq_len(&self) -> usize {
+        self.config.get("seq_len").as_usize().unwrap_or(0)
+    }
+    pub fn batch_size(&self) -> usize {
+        self.config.get("batch_size").as_usize().unwrap_or(0)
+    }
+    pub fn model_name(&self) -> &str {
+        self.config.get("name").as_str().unwrap_or("")
+    }
+    pub fn variant(&self) -> String {
+        let a = self.config.get("attention");
+        let kind = a.get("kind").as_str().unwrap_or("full");
+        match kind {
+            "clustered" | "i-clustered" => format!(
+                "{kind}-{}", a.get("clusters").as_usize().unwrap_or(0)),
+            "lsh" => format!("lsh-{}", a.get("rounds").as_usize().unwrap_or(1)),
+            other => other.to_string(),
+        }
+    }
+    pub fn input_index(&self, name: &str) -> Option<usize> {
+        self.inputs.iter().position(|t| t.name == name)
+    }
+}
+
+/// A typed host tensor headed into / out of an executable.
+#[derive(Debug, Clone)]
+pub enum HostTensor {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl HostTensor {
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32(v) => Ok(v),
+            _ => Err(anyhow!("expected f32 tensor")),
+        }
+    }
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            HostTensor::I32(v) => Ok(v),
+            _ => Err(anyhow!("expected i32 tensor")),
+        }
+    }
+    pub fn into_f32(self) -> Result<Vec<f32>> {
+        match self {
+            HostTensor::F32(v) => Ok(v),
+            _ => Err(anyhow!("expected f32 tensor")),
+        }
+    }
+    pub fn len(&self) -> usize {
+        match self {
+            HostTensor::F32(v) => v.len(),
+            HostTensor::I32(v) => v.len(),
+        }
+    }
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+    pub fn scalar_i32(v: i32) -> Self {
+        HostTensor::I32(vec![v])
+    }
+    pub fn scalar_f32_value(&self) -> Result<f32> {
+        Ok(self.as_f32()?[0])
+    }
+}
+
+fn to_literal(spec: &TensorSpec, t: &HostTensor) -> Result<xla::Literal> {
+    if t.len() != spec.elements() {
+        bail!("input {:?}: got {} elements, want {} (shape {:?})",
+              spec.name, t.len(), spec.elements(), spec.shape);
+    }
+    let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+    let lit = match (spec.dtype, t) {
+        (Dtype::F32, HostTensor::F32(v)) => xla::Literal::vec1(v),
+        (Dtype::I32, HostTensor::I32(v)) => xla::Literal::vec1(v),
+        _ => bail!("dtype mismatch for input {:?}", spec.name),
+    };
+    if dims.is_empty() {
+        // scalar: reshape to rank-0
+        Ok(lit.reshape(&[])?)
+    } else {
+        Ok(lit.reshape(&dims)?)
+    }
+}
+
+fn from_literal(lit: &xla::Literal) -> Result<HostTensor> {
+    use xla::ElementType as ET;
+    match lit.ty()? {
+        ET::F32 => Ok(HostTensor::F32(lit.to_vec::<f32>()?)),
+        ET::S32 => Ok(HostTensor::I32(lit.to_vec::<i32>()?)),
+        other => bail!("unsupported output element type {other:?}"),
+    }
+}
+
+/// A compiled program.
+pub struct Executable {
+    pub program: Program,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute with named-order host tensors; returns output tensors in
+    /// manifest order (the lowered module returns one tuple).
+    pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let lits = self.prepare(inputs)?;
+        self.run_literals(&lits)
+    }
+
+    /// Convert host tensors to XLA literals (shape/dtype-checked).
+    /// Serving hot paths prepare loop-invariant inputs (e.g. the model
+    /// parameters) ONCE and reuse them across `run_literals` calls —
+    /// see EXPERIMENTS.md §Perf for the measured effect.
+    pub fn prepare(&self, inputs: &[HostTensor])
+                   -> Result<Vec<xla::Literal>> {
+        if inputs.len() != self.program.inputs.len() {
+            bail!("{}: got {} inputs, want {}", self.program.name,
+                  inputs.len(), self.program.inputs.len());
+        }
+        self.program
+            .inputs
+            .iter()
+            .zip(inputs)
+            .map(|(s, t)| to_literal(s, t))
+            .collect()
+    }
+
+    /// Convert ONE input at its manifest position (for mixed cached /
+    /// per-call input assembly).
+    pub fn prepare_one(&self, index: usize, t: &HostTensor)
+                       -> Result<xla::Literal> {
+        let spec = self
+            .program
+            .inputs
+            .get(index)
+            .ok_or_else(|| anyhow!("input index {index} out of range"))?;
+        to_literal(spec, t)
+    }
+
+    /// Execute with pre-converted literals.
+    pub fn run_literals(&self, lits: &[xla::Literal])
+                        -> Result<Vec<HostTensor>> {
+        let result = self.exe.execute::<xla::Literal>(lits)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        let parts = tuple.to_tuple()?;
+        parts.iter().map(from_literal).collect()
+    }
+
+    /// Execute with borrowed literals — lets hot paths mix long-lived
+    /// cached inputs (params) with per-call tensors without cloning.
+    pub fn run_literals_borrowed(&self, lits: &[&xla::Literal])
+                                 -> Result<Vec<HostTensor>> {
+        let result = self.exe.execute::<&xla::Literal>(lits)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        let parts = tuple.to_tuple()?;
+        parts.iter().map(from_literal).collect()
+    }
+}
+
+/// The runtime: PJRT CPU client + manifest + executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub dir: PathBuf,
+    programs: HashMap<String, Program>,
+    cache: Mutex<HashMap<String, Arc<Executable>>>,
+}
+
+impl Runtime {
+    /// Load `artifacts/manifest.json` and start the PJRT CPU client.
+    pub fn open<P: AsRef<Path>>(artifacts_dir: P) -> Result<Self> {
+        let dir = artifacts_dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {manifest_path:?} — run \
+                                      `make artifacts` first"))?;
+        let root = jsonio::parse(&text)
+            .map_err(|e| anyhow!("manifest parse: {e}"))?;
+        let mut programs = HashMap::new();
+        for entry in root.get("programs").as_arr().unwrap_or(&[]) {
+            let p = parse_program(entry)?;
+            programs.insert(p.name.clone(), p);
+        }
+        let client = xla::PjRtClient::cpu()?;
+        log::info!("runtime: {} programs, platform={}", programs.len(),
+                   client.platform_name());
+        Ok(Self { client, dir, programs, cache: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn program(&self, name: &str) -> Result<&Program> {
+        self.programs
+            .get(name)
+            .ok_or_else(|| anyhow!("program {name:?} not in manifest"))
+    }
+
+    pub fn program_names(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.programs.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    /// Programs whose name matches a substring filter.
+    pub fn find(&self, substr: &str) -> Vec<&Program> {
+        let mut v: Vec<&Program> = self
+            .programs
+            .values()
+            .filter(|p| p.name.contains(substr))
+            .collect();
+        v.sort_by(|a, b| a.name.cmp(&b.name));
+        v
+    }
+
+    /// Compile (or fetch the cached) executable for `name`.
+    pub fn load(&self, name: &str) -> Result<Arc<Executable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let program = self.program(name)?.clone();
+        let path = self.dir.join(&program.file);
+        let t0 = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)
+            .with_context(|| format!("compiling {name}"))?;
+        log::info!("compiled {name} in {:.2}s", t0.elapsed().as_secs_f64());
+        let arc = Arc::new(Executable { program, exe });
+        self.cache.lock().unwrap().insert(name.to_string(), arc.clone());
+        Ok(arc)
+    }
+}
+
+fn parse_program(v: &Value) -> Result<Program> {
+    let tensor = |t: &Value| -> Result<TensorSpec> {
+        Ok(TensorSpec {
+            name: t.get("name").as_str().unwrap_or("").to_string(),
+            shape: t
+                .get("shape")
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .map(|d| d.as_usize().unwrap_or(0))
+                .collect(),
+            dtype: Dtype::parse(t.get("dtype").as_str().unwrap_or(""))?,
+        })
+    };
+    Ok(Program {
+        name: v.get("name").as_str().unwrap_or("").to_string(),
+        kind: v.get("kind").as_str().unwrap_or("").to_string(),
+        file: v.get("file").as_str().unwrap_or("").to_string(),
+        inputs: v
+            .get("inputs")
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .map(tensor)
+            .collect::<Result<_>>()?,
+        outputs: v
+            .get("outputs")
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .map(|s| s.as_str().unwrap_or("").to_string())
+            .collect(),
+        config: v.get("config").clone(),
+        param_count: v.get("param_count").as_usize().unwrap_or(0),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dtype_parse() {
+        assert_eq!(Dtype::parse("float32").unwrap(), Dtype::F32);
+        assert_eq!(Dtype::parse("int32").unwrap(), Dtype::I32);
+        assert!(Dtype::parse("bfloat16").is_err());
+    }
+
+    #[test]
+    fn tensor_spec_elements() {
+        let t = TensorSpec { name: "x".into(), shape: vec![4, 8],
+                             dtype: Dtype::F32 };
+        assert_eq!(t.elements(), 32);
+        let s = TensorSpec { name: "s".into(), shape: vec![],
+                             dtype: Dtype::I32 };
+        assert_eq!(s.elements(), 1);
+    }
+
+    #[test]
+    fn parse_program_from_json() {
+        let v = jsonio::parse(
+            r#"{"name":"m.train","kind":"train","file":"m.hlo.txt",
+                "inputs":[{"name":"params","shape":[10],"dtype":"float32"},
+                           {"name":"seed","shape":[],"dtype":"int32"}],
+                "outputs":["params","loss"],
+                "config":{"seq_len":64,"batch_size":4,
+                           "attention":{"kind":"clustered","clusters":25}},
+                "param_count":10}"#,
+        )
+        .unwrap();
+        let p = parse_program(&v).unwrap();
+        assert_eq!(p.name, "m.train");
+        assert_eq!(p.inputs.len(), 2);
+        assert_eq!(p.inputs[1].shape.len(), 0);
+        assert_eq!(p.seq_len(), 64);
+        assert_eq!(p.variant(), "clustered-25");
+        assert_eq!(p.input_index("seed"), Some(1));
+    }
+}

@@ -1,0 +1,143 @@
+//! JSON-lines-over-TCP inference server + client.
+//!
+//! Protocol: one JSON object per line.
+//!   request : {"id": 1, "frames": [f32...], "len": N, "d_feat": D}
+//!   response: {"id": 1, "labels": [i32...], "latency_us": 1234}
+//!   error   : {"id": 1, "error": "..."}
+//!
+//! The server is a thin shim over [`InferenceEngine`]; decoding (greedy
+//! CTC) happens server-side so clients receive label sequences.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::InferenceEngine;
+use crate::data::asr::ctc_greedy_decode;
+use crate::jsonio::{obj, parse, Value};
+
+/// Serve until `stop` flips; returns the bound address immediately via
+/// the callback (port 0 = ephemeral).
+pub fn serve(engine: Arc<InferenceEngine>, addr: &str,
+             stop: Arc<AtomicBool>,
+             on_bound: impl FnOnce(std::net::SocketAddr)) -> Result<()> {
+    let listener = TcpListener::bind(addr)?;
+    listener.set_nonblocking(true)?;
+    on_bound(listener.local_addr()?);
+    while !stop.load(Ordering::Relaxed) {
+        match listener.accept() {
+            Ok((stream, peer)) => {
+                log::debug!("connection from {peer}");
+                let engine = engine.clone();
+                // detached: a handler exits when its client disconnects,
+                // so shutdown never blocks on open-but-idle connections
+                std::thread::spawn(move || {
+                    if let Err(e) = handle_conn(stream, engine) {
+                        log::debug!("conn ended: {e:#}");
+                    }
+                });
+            }
+            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(std::time::Duration::from_millis(5));
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+    Ok(())
+}
+
+fn handle_conn(stream: TcpStream, engine: Arc<InferenceEngine>)
+               -> Result<()> {
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let reply = match handle_request(&line, &engine) {
+            Ok(v) => v,
+            Err(e) => obj(vec![("error", format!("{e:#}").into())]),
+        };
+        writer.write_all(reply.to_string().as_bytes())?;
+        writer.write_all(b"\n")?;
+    }
+    Ok(())
+}
+
+fn handle_request(line: &str, engine: &InferenceEngine) -> Result<Value> {
+    let req = parse(line).map_err(|e| anyhow!("bad json: {e}"))?;
+    let id = req.get("id").as_i64().unwrap_or(0);
+    let len = req
+        .get("len")
+        .as_usize()
+        .ok_or_else(|| anyhow!("missing len"))?;
+    let d_feat = req
+        .get("d_feat")
+        .as_usize()
+        .ok_or_else(|| anyhow!("missing d_feat"))?;
+    let frames: Vec<f32> = req
+        .get("frames")
+        .as_arr()
+        .ok_or_else(|| anyhow!("missing frames"))?
+        .iter()
+        .map(|v| v.as_f64().unwrap_or(0.0) as f32)
+        .collect();
+    if frames.len() != len * d_feat {
+        return Err(anyhow!("frames len {} != len*d_feat {}", frames.len(),
+                           len * d_feat));
+    }
+    let rx = engine.submit_blocking(frames, len, d_feat)?;
+    let resp = rx
+        .recv()
+        .map_err(|_| anyhow!("engine dropped the request"))?;
+    let labels =
+        ctc_greedy_decode(&resp.logits, resp.valid_len, resp.vocab);
+    Ok(obj(vec![
+        ("id", id.into()),
+        ("labels", Value::Arr(
+            labels.into_iter().map(|l| Value::Num(l as f64)).collect())),
+        ("latency_us",
+         ((resp.total_time.as_micros() as i64)).into()),
+        ("batch_occupancy", (resp.batch_occupancy as i64).into()),
+    ]))
+}
+
+/// Minimal blocking client for tests/examples.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Self> {
+        let stream = TcpStream::connect(addr)?;
+        Ok(Self { reader: BufReader::new(stream.try_clone()?),
+                  writer: stream })
+    }
+
+    /// Send one utterance, wait for its decode.
+    pub fn transcribe(&mut self, id: i64, frames: &[f32], len: usize,
+                      d_feat: usize) -> Result<Value> {
+        let frames_json = Value::Arr(
+            frames.iter().map(|&f| Value::Num(f as f64)).collect());
+        let req = obj(vec![
+            ("id", id.into()),
+            ("frames", frames_json),
+            ("len", len.into()),
+            ("d_feat", d_feat.into()),
+        ]);
+        self.writer.write_all(req.to_string().as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        let v = parse(&line).map_err(|e| anyhow!("bad reply: {e}"))?;
+        if let Some(err) = v.get("error").as_str() {
+            return Err(anyhow!("server error: {err}"));
+        }
+        Ok(v)
+    }
+}

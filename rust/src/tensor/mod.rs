@@ -1,0 +1,259 @@
+//! Row-major f32 matrix substrate for the Rust reference attention and the
+//! benchmark harness.  Deliberately minimal: contiguous `Vec<f32>`, blocked
+//! matmul, row softmax, top-k, argsort — everything `attention/` needs.
+
+use crate::prng::Xoshiro256;
+
+/// Dense row-major matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape mismatch");
+        Self { rows, cols, data }
+    }
+
+    pub fn randn(rows: usize, cols: usize, rng: &mut Xoshiro256) -> Self {
+        Self { rows, cols, data: rng.normal_vec(rows * cols) }
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f32) {
+        self.data[r * self.cols + c] = v;
+    }
+
+    pub fn transpose(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out.data[c * self.rows + r] = self.data[r * self.cols + c];
+            }
+        }
+        out
+    }
+
+    /// `self (m×k) @ other (k×n)` — blocked over k for cache locality.
+    pub fn matmul(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        let mut out = Matrix::zeros(m, n);
+        // i-k-j loop order: streams `other` rows, accumulates into out row.
+        for i in 0..m {
+            let arow = self.row(i);
+            let orow = &mut out.data[i * n..(i + 1) * n];
+            for kk in 0..k {
+                let a = arow[kk];
+                if a == 0.0 {
+                    continue;
+                }
+                let brow = &other.data[kk * n..(kk + 1) * n];
+                for j in 0..n {
+                    orow[j] += a * brow[j];
+                }
+            }
+        }
+        out
+    }
+
+    /// `self @ other^T` — the attention-logits shape, avoids materialising
+    /// the transpose (both operands stream row-major).
+    pub fn matmul_nt(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.cols, "matmul_nt shape mismatch");
+        let (m, k, n) = (self.rows, self.cols, other.rows);
+        let mut out = Matrix::zeros(m, n);
+        for i in 0..m {
+            let arow = self.row(i);
+            let orow = &mut out.data[i * n..(i + 1) * n];
+            for j in 0..n {
+                orow[j] = dot(arow, other.row(j));
+            }
+        }
+        let _ = k;
+        out
+    }
+
+    pub fn scale(&mut self, s: f32) {
+        for v in &mut self.data {
+            *v *= s;
+        }
+    }
+
+    /// In-place numerically-stable softmax over every row.
+    pub fn softmax_rows(&mut self) {
+        for r in 0..self.rows {
+            softmax_inplace(self.row_mut(r));
+        }
+    }
+
+    pub fn max_abs_diff(&self, other: &Matrix) -> f32 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    // 4-way unrolled; autovectorises well in release builds.
+    let mut acc = [0.0f32; 4];
+    let chunks = a.len() / 4;
+    for c in 0..chunks {
+        let i = c * 4;
+        acc[0] += a[i] * b[i];
+        acc[1] += a[i + 1] * b[i + 1];
+        acc[2] += a[i + 2] * b[i + 2];
+        acc[3] += a[i + 3] * b[i + 3];
+    }
+    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
+    for i in chunks * 4..a.len() {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// `out += w * row`.
+#[inline]
+pub fn axpy(out: &mut [f32], w: f32, row: &[f32]) {
+    debug_assert_eq!(out.len(), row.len());
+    for i in 0..out.len() {
+        out[i] += w * row[i];
+    }
+}
+
+/// Numerically stable in-place softmax of one slice.
+pub fn softmax_inplace(xs: &mut [f32]) {
+    let m = xs.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    if !m.is_finite() {
+        let u = 1.0 / xs.len() as f32;
+        for v in xs.iter_mut() {
+            *v = u;
+        }
+        return;
+    }
+    let mut sum = 0.0;
+    for v in xs.iter_mut() {
+        *v = (*v - m).exp();
+        sum += *v;
+    }
+    let inv = 1.0 / sum.max(1e-30);
+    for v in xs.iter_mut() {
+        *v *= inv;
+    }
+}
+
+/// Indices of the `k` largest values (descending), stable on ties.
+pub fn topk_indices(xs: &[f32], k: usize) -> Vec<usize> {
+    let k = k.min(xs.len());
+    let mut idx: Vec<usize> = (0..xs.len()).collect();
+    idx.select_nth_unstable_by(k.saturating_sub(1), |&a, &b| {
+        xs[b].partial_cmp(&xs[a]).unwrap().then(a.cmp(&b))
+    });
+    idx.truncate(k);
+    idx.sort_by(|&a, &b| xs[b].partial_cmp(&xs[a]).unwrap().then(a.cmp(&b)));
+    idx
+}
+
+/// Stable argsort ascending.
+pub fn argsort<T: PartialOrd>(xs: &[T]) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..xs.len()).collect();
+    idx.sort_by(|&a, &b| xs[a].partial_cmp(&xs[b]).unwrap().then(a.cmp(&b)));
+    idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_small_known() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Matrix::from_vec(2, 2, vec![1.0, 1.0, 1.0, 1.0]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_nt_matches_matmul_transpose() {
+        let mut rng = Xoshiro256::new(1);
+        let a = Matrix::randn(5, 7, &mut rng);
+        let b = Matrix::randn(6, 7, &mut rng);
+        let c1 = a.matmul_nt(&b);
+        let c2 = a.matmul(&b.transpose());
+        assert!(c1.max_abs_diff(&c2) < 1e-5);
+    }
+
+    #[test]
+    fn softmax_rows_are_distributions() {
+        let mut rng = Xoshiro256::new(2);
+        let mut m = Matrix::randn(4, 9, &mut rng);
+        m.softmax_rows();
+        for r in 0..4 {
+            let s: f32 = m.row(r).iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+            assert!(m.row(r).iter().all(|&v| v >= 0.0));
+        }
+    }
+
+    #[test]
+    fn softmax_handles_all_neg_inf() {
+        let mut xs = vec![f32::NEG_INFINITY; 4];
+        softmax_inplace(&mut xs);
+        assert!((xs.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn topk_descending_and_correct() {
+        let xs = vec![0.5, 3.0, -1.0, 3.0, 2.0];
+        assert_eq!(topk_indices(&xs, 3), vec![1, 3, 4]);
+        assert_eq!(topk_indices(&xs, 10).len(), 5);
+    }
+
+    #[test]
+    fn argsort_stable() {
+        let xs = vec![2.0, 1.0, 2.0, 0.0];
+        assert_eq!(argsort(&xs), vec![3, 1, 0, 2]);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let mut rng = Xoshiro256::new(3);
+        let a = Matrix::randn(3, 5, &mut rng);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn dot_matches_naive() {
+        let a: Vec<f32> = (0..13).map(|i| i as f32).collect();
+        let b: Vec<f32> = (0..13).map(|i| (i * 2) as f32).collect();
+        let naive: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        assert_eq!(dot(&a, &b), naive);
+    }
+}

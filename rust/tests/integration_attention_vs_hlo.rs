@@ -1,0 +1,123 @@
+//! Cross-implementation golden check: the Rust reference attention must
+//! agree with the jnp oracle *through the full HLO → PJRT path* on
+//! identical inputs (q, k, v, groups).  Together with pytest (Pallas ≡
+//! jnp), this closes the triangle jnp ≡ Pallas ≡ Rust.
+
+use clustered_transformers::attention;
+use clustered_transformers::clustering::Clustering;
+use clustered_transformers::config::find_repo_root;
+use clustered_transformers::prng::Xoshiro256;
+use clustered_transformers::runtime::{HostTensor, Runtime};
+use clustered_transformers::tensor::Matrix;
+
+const N: usize = 64;
+const DK: usize = 16;
+const DV: usize = 16;
+const C: usize = 8;
+const TOPK: usize = 8;
+
+fn max_diff(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0f32, f32::max)
+}
+
+#[test]
+fn rust_attention_matches_jnp_oracle_via_hlo() {
+    let dir = find_repo_root().join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: no artifacts");
+        return;
+    }
+    let rt = Runtime::open(dir).unwrap();
+    let Ok(exe) = rt.load("attncheck-n64.check") else {
+        eprintln!("SKIP: attncheck not lowered");
+        return;
+    };
+
+    let mut rng = Xoshiro256::new(42);
+    let q = Matrix::randn(N, DK, &mut rng);
+    let k = Matrix::randn(N, DK, &mut rng);
+    let v = Matrix::randn(N, DV, &mut rng);
+    // groups from the Rust clustering substrate — then shared with jnp
+    let cl = clustered_transformers::clustering::cluster_queries(
+        &q, C, 31, 5, &mut rng);
+    let groups_i32: Vec<i32> = cl.groups.iter().map(|&g| g as i32).collect();
+
+    let outputs = exe
+        .run(&[
+            HostTensor::F32(q.data.clone()),
+            HostTensor::F32(k.data.clone()),
+            HostTensor::F32(v.data.clone()),
+            HostTensor::I32(groups_i32),
+        ])
+        .unwrap();
+    let hlo_full = outputs[0].as_f32().unwrap();
+    let hlo_clustered = outputs[1].as_f32().unwrap();
+    let hlo_improved = outputs[2].as_f32().unwrap();
+
+    // Rust-native counterparts on the same inputs/groups
+    let rust_full = attention::full_attention(&q, &k, &v);
+    let counts = {
+        let mut c = vec![0u32; C];
+        for &g in &cl.groups {
+            c[g as usize] += 1;
+        }
+        c
+    };
+    let cl_shared = Clustering { n_clusters: C, groups: cl.groups.clone(),
+                                 counts, cost: 0 };
+    let rust_clustered =
+        attention::clustered_attention(&q, &k, &v, &cl_shared);
+    let rust_improved = attention::improved_clustered_attention(
+        &q, &k, &v, &cl_shared, TOPK);
+
+    let d_full = max_diff(&rust_full.data, hlo_full);
+    let d_clus = max_diff(&rust_clustered.data, hlo_clustered);
+    let d_impr = max_diff(&rust_improved.data, hlo_improved);
+    eprintln!("max|Δ| full={d_full:.2e} clustered={d_clus:.2e} \
+               improved={d_impr:.2e}");
+    assert!(d_full < 1e-4, "full attention disagrees: {d_full}");
+    assert!(d_clus < 1e-4, "clustered attention disagrees: {d_clus}");
+    assert!(d_impr < 1e-3, "improved clustered disagrees: {d_impr}");
+}
+
+#[test]
+fn improved_is_closer_to_full_than_clustered_on_hlo_outputs() {
+    // Proposition 2 holds on the actual artifact outputs too.
+    let dir = find_repo_root().join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        return;
+    }
+    let rt = Runtime::open(dir).unwrap();
+    let Ok(exe) = rt.load("attncheck-n64.check") else { return };
+
+    let mut rng = Xoshiro256::new(7);
+    let q = Matrix::randn(N, DK, &mut rng);
+    let k = Matrix::randn(N, DK, &mut rng);
+    let v = Matrix::randn(N, DV, &mut rng);
+    let cl = clustered_transformers::clustering::cluster_queries(
+        &q, C, 31, 5, &mut rng);
+    let groups: Vec<i32> = cl.groups.iter().map(|&g| g as i32).collect();
+    let outputs = exe
+        .run(&[
+            HostTensor::F32(q.data.clone()),
+            HostTensor::F32(k.data.clone()),
+            HostTensor::F32(v.data.clone()),
+            HostTensor::I32(groups),
+        ])
+        .unwrap();
+    let full = outputs[0].as_f32().unwrap();
+    let clustered = outputs[1].as_f32().unwrap();
+    let improved = outputs[2].as_f32().unwrap();
+    // aggregate L2 error of the *values* (a proxy implied by prop. 2)
+    let err = |a: &[f32]| -> f64 {
+        a.iter()
+            .zip(full)
+            .map(|(x, y)| ((x - y) * (x - y)) as f64)
+            .sum::<f64>()
+            .sqrt()
+    };
+    let e_c = err(clustered);
+    let e_i = err(improved);
+    eprintln!("value error clustered={e_c:.4} improved={e_i:.4}");
+    assert!(e_i <= e_c, "improved ({e_i}) worse than clustered ({e_c})");
+}

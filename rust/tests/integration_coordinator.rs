@@ -1,0 +1,124 @@
+//! Integration: the serving coordinator end-to-end — routing, dynamic
+//! batching, execution, metrics — against a real compiled ASR forward
+//! program.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use clustered_transformers::config::find_repo_root;
+use clustered_transformers::coordinator::{
+    BatchPolicy, InferenceEngine, ServeOptions,
+};
+use clustered_transformers::data::asr::{AsrCorpus, AsrSpec};
+use clustered_transformers::data::Split;
+use clustered_transformers::runtime::{HostTensor, Runtime};
+
+const FWD: &str = "wsj-l2-full.forward";
+const MODEL: &str = "wsj-l2-full";
+const D_FEAT: usize = 40;
+
+fn engine_or_skip() -> Option<(Arc<InferenceEngine>, AsrCorpus)> {
+    let dir = find_repo_root().join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: no artifacts");
+        return None;
+    }
+    clustered_transformers::config::init_logging(true);
+    let rt = Runtime::open(dir).ok()?;
+    if rt.program(FWD).is_err() {
+        eprintln!("SKIP: {FWD} not lowered");
+        return None;
+    }
+    let init = rt.load(&format!("{MODEL}.init")).unwrap();
+    let params = init
+        .run(&[HostTensor::scalar_i32(0)])
+        .unwrap()
+        .remove(0)
+        .into_f32()
+        .unwrap();
+    let opts = ServeOptions {
+        policy: BatchPolicy { max_batch: 4,
+                              max_wait: Duration::from_millis(20) },
+        queue_capacity: 32,
+        params_seed: 0,
+    };
+    let engine = Arc::new(
+        InferenceEngine::start(&rt, &[FWD.to_string()], params, opts)
+            .unwrap(),
+    );
+    let corpus = AsrCorpus::new(AsrSpec::wsj(0));
+    Some((engine, corpus))
+}
+
+fn utterances(corpus: &AsrCorpus, n: usize) -> Vec<(Vec<f32>, usize)> {
+    let mut out = Vec::new();
+    let mut idx = 0u64;
+    while out.len() < n {
+        let b = corpus.batch(Split::Test, idx, 4);
+        for s in 0..4 {
+            if out.len() >= n {
+                break;
+            }
+            let t = b.xlen[s] as usize;
+            let frames =
+                b.x[s * 256 * D_FEAT..s * 256 * D_FEAT + t * D_FEAT]
+                    .to_vec();
+            out.push((frames, t));
+        }
+        idx += 1;
+    }
+    out
+}
+
+#[test]
+fn requests_round_trip_with_correct_shapes() {
+    let Some((engine, corpus)) = engine_or_skip() else { return };
+    let utts = utterances(&corpus, 6);
+    let mut rxs = Vec::new();
+    for (frames, len) in utts {
+        rxs.push((len, engine
+            .submit_blocking(frames, len, D_FEAT)
+            .unwrap()));
+    }
+    for (len, rx) in rxs {
+        let resp = rx.recv_timeout(Duration::from_secs(120)).unwrap();
+        assert_eq!(resp.valid_len, len);
+        assert_eq!(resp.vocab, 21); // 20 phones + blank
+        assert_eq!(resp.logits.len(), 256 * 21);
+        assert!(resp.logits.iter().all(|x| x.is_finite()));
+        assert!(resp.batch_occupancy >= 1 && resp.batch_occupancy <= 4);
+    }
+    assert_eq!(engine.metrics.completed
+               .load(std::sync::atomic::Ordering::Relaxed), 6);
+}
+
+#[test]
+fn batcher_coalesces_concurrent_requests() {
+    let Some((engine, corpus)) = engine_or_skip() else { return };
+    let utts = utterances(&corpus, 8);
+    // submit all 8 quickly; with max_batch 4 the engine should form
+    // batches with occupancy > 1 (the first may flush alone on deadline)
+    let rxs: Vec<_> = utts
+        .into_iter()
+        .map(|(frames, len)| engine.submit_blocking(frames, len, D_FEAT)
+             .unwrap())
+        .collect();
+    let mut max_occ = 0;
+    for rx in rxs {
+        let resp = rx.recv_timeout(Duration::from_secs(120)).unwrap();
+        max_occ = max_occ.max(resp.batch_occupancy);
+    }
+    assert!(max_occ >= 2, "no batching observed (max occupancy {max_occ})");
+    assert!(engine.metrics.occupancy() > 1.0);
+}
+
+#[test]
+fn overlong_requests_are_rejected() {
+    let Some((engine, _)) = engine_or_skip() else { return };
+    let too_long = 257; // bucket is N=256
+    let frames = vec![0.0; too_long * D_FEAT];
+    assert!(engine.submit(frames, too_long, D_FEAT).is_err());
+    assert_eq!(
+        engine.metrics.completed
+            .load(std::sync::atomic::Ordering::Relaxed), 0);
+}

@@ -1,0 +1,78 @@
+//! Integration: the TCP JSON-lines server round-trips a transcription
+//! request against a real compiled model.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+use clustered_transformers::config::find_repo_root;
+use clustered_transformers::coordinator::{InferenceEngine, ServeOptions};
+use clustered_transformers::data::asr::{AsrCorpus, AsrSpec};
+use clustered_transformers::data::Split;
+use clustered_transformers::runtime::{HostTensor, Runtime};
+use clustered_transformers::server;
+
+const FWD: &str = "wsj-l2-full.forward";
+
+#[test]
+fn tcp_round_trip_transcribes() {
+    let dir = find_repo_root().join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: no artifacts");
+        return;
+    }
+    clustered_transformers::config::init_logging(true);
+    let rt = Runtime::open(dir).unwrap();
+    if rt.program(FWD).is_err() {
+        eprintln!("SKIP: {FWD} not lowered");
+        return;
+    }
+    let init = rt.load("wsj-l2-full.init").unwrap();
+    let params = init
+        .run(&[HostTensor::scalar_i32(0)])
+        .unwrap()
+        .remove(0)
+        .into_f32()
+        .unwrap();
+    let engine = Arc::new(
+        InferenceEngine::start(&rt, &[FWD.to_string()], params,
+                               ServeOptions::default())
+        .unwrap(),
+    );
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let (addr_tx, addr_rx) = mpsc::channel();
+    let stop2 = stop.clone();
+    let server_thread = std::thread::spawn(move || {
+        server::serve(engine, "127.0.0.1:0", stop2, move |a| {
+            addr_tx.send(a).unwrap();
+        })
+        .unwrap();
+    });
+    let addr = addr_rx.recv_timeout(Duration::from_secs(30)).unwrap();
+
+    // real utterance from the corpus
+    let corpus = AsrCorpus::new(AsrSpec::wsj(0));
+    let b = corpus.batch(Split::Test, 0, 1);
+    let t = b.xlen[0] as usize;
+    let frames = &b.x[..t * 40];
+
+    let mut client = server::Client::connect(&addr.to_string()).unwrap();
+    let reply = client.transcribe(99, frames, t, 40).unwrap();
+    assert_eq!(reply.get("id").as_i64(), Some(99));
+    let labels = reply.get("labels").as_arr().unwrap();
+    // untrained model: decode may be empty or noisy, but must be valid ids
+    for l in labels {
+        let v = l.as_i64().unwrap();
+        assert!((1..=20).contains(&v), "label {v} out of range");
+    }
+    assert!(reply.get("latency_us").as_i64().unwrap() > 0);
+
+    // malformed request surfaces an error object, not a dropped conn
+    let err = client.transcribe(1, &[0.0; 10], 3, 40);
+    assert!(err.is_err());
+
+    drop(client);
+    stop.store(true, Ordering::Relaxed);
+    server_thread.join().unwrap();
+}
