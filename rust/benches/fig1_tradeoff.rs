@@ -7,21 +7,76 @@
 //! EXPERIMENTS.md records the scaling caveat).  CT_FULL=1 expands to the
 //! full variant grid.
 
+use clustered_transformers::attention::{self, Variant};
 use clustered_transformers::benchlib::traincache::{
     env_usize, eval_score, forward_time, full_grid, train_or_load,
 };
-use clustered_transformers::benchlib::Table;
+use clustered_transformers::benchlib::{self, Table};
 use clustered_transformers::config::{find_repo_root, init_logging};
+use clustered_transformers::exec::WorkerPool;
+use clustered_transformers::prng::Xoshiro256;
 use clustered_transformers::runtime::Runtime;
+use clustered_transformers::tensor::batch::BatchMatrix;
+
+/// Native batched multi-head speed-vs-approximation frontier — the fig. 1
+/// trade-off axis measured on the kernel engine itself, so the bench
+/// reports something even before `make artifacts`.
+fn native_frontier() {
+    let (bsz, heads, n, dk) = (2usize, 4usize, 512usize, 64usize);
+    let pool = WorkerPool::auto();
+    let mut rng = Xoshiro256::new(0);
+    let q = BatchMatrix::randn(bsz, heads, n, dk, &mut rng);
+    let k = BatchMatrix::randn(bsz, heads, n, dk, &mut rng);
+    let v = BatchMatrix::randn(bsz, heads, n, dk, &mut rng);
+    let exact = attention::kernel_for(&Variant::Full)
+        .run_batch(&q, &k, &v, 0, &pool);
+    let rows = bsz * heads * n;
+    let mut tbl = Table::new(
+        &format!("fig1c: native batched engine frontier, B={bsz} \
+                  H={heads} N={n} Dk={dk}, pool={} workers",
+                 pool.workers()),
+        &["variant", "ms/batch", "rows/s", "max|Δ| vs full"],
+    );
+    let variants = [
+        Variant::Full,
+        Variant::Clustered { clusters: 100, bits: 63, iters: 10 },
+        Variant::ImprovedClustered { clusters: 100, bits: 63, iters: 10,
+                                     topk: 32 },
+        Variant::Lsh { rounds: 1, chunk: 32 },
+        Variant::Lsh { rounds: 4, chunk: 32 },
+    ];
+    for var in &variants {
+        let kernel = attention::kernel_for(var);
+        let out = kernel.run_batch(&q, &k, &v, 0, &pool);
+        let st = benchlib::bench(
+            || { let _ = kernel.run_batch(&q, &k, &v, 0, &pool); },
+            1, 2, std::time::Duration::from_millis(300), 8);
+        tbl.row(vec![
+            var.name(),
+            format!("{:.1}", st.mean_ms()),
+            format!("{:.0}", benchlib::rows_per_sec(rows, &st)),
+            format!("{:.3}", out.max_abs_diff(&exact)),
+        ]);
+    }
+    tbl.emit();
+}
 
 fn main() {
     init_logging(false);
+    native_frontier();
     let dir = find_repo_root().join("artifacts");
     if !dir.join("manifest.json").exists() {
-        eprintln!("no artifacts; run `make artifacts`");
+        eprintln!("no artifacts; HLO speed-accuracy points skipped (run \
+                   `make artifacts`)");
         return;
     }
-    let rt = Runtime::open(dir).unwrap();
+    let rt = match Runtime::open(dir) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("runtime unavailable, HLO section skipped: {e:#}");
+            return;
+        }
+    };
     let steps = env_usize("CT_STEPS", 60) as u64;
 
     let mut wsj: Vec<&str> = vec![

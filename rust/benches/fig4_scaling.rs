@@ -5,14 +5,17 @@
 //! Here: the Rust-native single-head implementations sweep the same N
 //! range on CPU (the asymptotic *shape* — quadratic vs linear, crossover
 //! location — is hardware-independent), the analytic cost model supplies
-//! the memory column, and compiled single-layer HLO forwards cross-check
-//! the trend at N ∈ {256, 512, 1024}.
+//! the memory column, the batched multi-head engine reports (B, H, N, D)
+//! rows/sec through the exec pool, and compiled single-layer HLO
+//! forwards cross-check the trend at N ∈ {256, 512, 1024}.
 
 use clustered_transformers::attention::{self, Variant};
 use clustered_transformers::benchlib::{self, Table};
 use clustered_transformers::config::{find_repo_root, init_logging};
+use clustered_transformers::exec::WorkerPool;
 use clustered_transformers::prng::Xoshiro256;
 use clustered_transformers::runtime::{HostTensor, Runtime};
+use clustered_transformers::tensor::batch::BatchMatrix;
 use clustered_transformers::tensor::Matrix;
 
 fn variants() -> Vec<Variant> {
@@ -76,12 +79,61 @@ fn main() {
     time_tbl.emit();
     mem_tbl.emit();
 
+    // --- batched multi-head engine: rows/sec through the exec pool ---
+    let (bsz, heads, n_b) = (4usize, 4usize, 512usize);
+    let pool = WorkerPool::auto();
+    let seq = WorkerPool::sequential();
+    let mut batch_tbl = Table::new(
+        &format!(
+            "fig4c: batched multi-head throughput (rows/sec), B={bsz} \
+             H={heads} N={n_b} Dk={dk}, pool={} workers",
+            pool.workers()
+        ),
+        &["variant", "seq ms/batch", "par ms/batch", "seq rows/s",
+          "par rows/s", "pool speedup", "bit-identical"],
+    );
+    let mut brng = Xoshiro256::new(2);
+    let bq = BatchMatrix::randn(bsz, heads, n_b, dk, &mut brng);
+    let bk = BatchMatrix::randn(bsz, heads, n_b, dk, &mut brng);
+    let bv = BatchMatrix::randn(bsz, heads, n_b, dk, &mut brng);
+    let rows = bsz * heads * n_b;
+    for var in variants() {
+        let kernel = attention::kernel_for(&var);
+        let st_seq = benchlib::bench(
+            || { let _ = kernel.run_batch(&bq, &bk, &bv, 0, &seq); },
+            1, 2, std::time::Duration::from_millis(300), 8);
+        let st_par = benchlib::bench(
+            || { let _ = kernel.run_batch(&bq, &bk, &bv, 0, &pool); },
+            1, 2, std::time::Duration::from_millis(300), 8);
+        // determinism contract: pool schedule must not change the bits
+        let identical = kernel
+            .run_batch(&bq, &bk, &bv, 0, &pool)
+            .bit_identical(&attention::run_batch_seq(
+                kernel.as_ref(), &bq, &bk, &bv, 0));
+        batch_tbl.row(vec![
+            var.name(),
+            format!("{:.1}", st_seq.mean_ms()),
+            format!("{:.1}", st_par.mean_ms()),
+            format!("{:.0}", benchlib::rows_per_sec(rows, &st_seq)),
+            format!("{:.0}", benchlib::rows_per_sec(rows, &st_par)),
+            format!("{:.2}x", st_seq.mean_s / st_par.mean_s.max(1e-12)),
+            identical.to_string(),
+        ]);
+    }
+    batch_tbl.emit();
+
     // --- HLO cross-check: compiled single-layer forward --------------
     let dir = find_repo_root().join("artifacts");
     if dir.join("manifest.json").exists() {
-        let rt = Runtime::open(dir).unwrap();
+        let rt = match Runtime::open(dir) {
+            Ok(rt) => rt,
+            Err(e) => {
+                eprintln!("runtime unavailable, HLO section skipped: {e:#}");
+                return;
+            }
+        };
         let mut tbl = Table::new(
-            "fig4c: compiled 1-layer transformer forward (HLO/PJRT), ms",
+            "fig4d: compiled 1-layer transformer forward (HLO/PJRT), ms",
             &["N", "full", "clustered-25", "i-clustered-25", "lsh-1"],
         );
         for n in [256usize, 512, 1024] {

@@ -20,7 +20,13 @@ fn main() {
         eprintln!("no artifacts; run `make artifacts`");
         return;
     }
-    let rt = Runtime::open(dir).unwrap();
+    let rt = match Runtime::open(dir) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("runtime unavailable, HLO section skipped: {e:#}");
+            return;
+        }
+    };
     let steps = env_usize("CT_STEPS_GLUE", 150) as u64;
 
     let ckpt = match train_or_load(&rt, "glue-squad-full", steps) {

@@ -18,7 +18,13 @@ fn main() {
         eprintln!("no artifacts; run `make artifacts`");
         return;
     }
-    let rt = Runtime::open(dir).unwrap();
+    let rt = match Runtime::open(dir) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("runtime unavailable, HLO section skipped: {e:#}");
+            return;
+        }
+    };
     let steps = env_usize("CT_STEPS", 60) as u64;
 
     let mut tbl = Table::new(

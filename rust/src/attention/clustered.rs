@@ -1,0 +1,82 @@
+//! Clustered attention (paper eqs. 3–6): queries are grouped by the LSH +
+//! Hamming-K-Means substrate, each cluster attends once through its
+//! centroid, and members copy the centroid's result — O(N·C·D).
+
+use crate::clustering::{self, Clustering};
+use crate::prng::Xoshiro256;
+use crate::tensor::{axpy, Matrix};
+
+use super::{AttentionKernel, Cost};
+
+/// Eq. (3): centroids of the member queries.
+pub fn centroids(q: &Matrix, cl: &Clustering) -> Matrix {
+    let mut cent = Matrix::zeros(cl.n_clusters, q.cols);
+    for i in 0..q.rows {
+        axpy(cent.row_mut(cl.groups[i] as usize), 1.0, q.row(i));
+    }
+    for c in 0..cl.n_clusters {
+        if cl.counts[c] > 0 {
+            let inv = 1.0 / cl.counts[c] as f32;
+            for val in cent.row_mut(c) {
+                *val *= inv;
+            }
+        }
+    }
+    cent
+}
+
+/// Eq. (4): A^c = softmax(Q^c K^T / sqrt(Dk)) — (C × N).
+pub fn clustered_attention_matrix(q: &Matrix, k: &Matrix, cl: &Clustering)
+                                  -> Matrix {
+    let cent = centroids(q, cl);
+    let scale = 1.0 / (q.cols as f32).sqrt();
+    let mut a_c = cent.matmul_nt(k);
+    a_c.scale(scale);
+    a_c.softmax_rows();
+    a_c
+}
+
+/// Eqs. (4)–(6): O(N·C·D).
+pub fn clustered_attention(q: &Matrix, k: &Matrix, v: &Matrix,
+                           cl: &Clustering) -> Matrix {
+    let a_c = clustered_attention_matrix(q, k, cl);
+    let v_c = a_c.matmul(v); // (C, Dv)
+    let mut out = Matrix::zeros(q.rows, v.cols);
+    for i in 0..q.rows {
+        out.row_mut(i).copy_from_slice(v_c.row(cl.groups[i] as usize));
+    }
+    out
+}
+
+/// Clustered attention kernel: LSH → Hamming K-Means → centroid attention.
+#[derive(Debug, Clone, Copy)]
+pub struct ClusteredAttention {
+    pub clusters: usize,
+    pub bits: usize,
+    pub iters: usize,
+}
+
+impl AttentionKernel for ClusteredAttention {
+    fn name(&self) -> String {
+        format!("clustered-{}", self.clusters)
+    }
+
+    fn run(&self, q: &Matrix, k: &Matrix, v: &Matrix,
+           rng: &mut Xoshiro256) -> Matrix {
+        let cl = clustering::cluster_queries(q, self.clusters, self.bits,
+                                             self.iters, rng);
+        clustered_attention(q, k, v, &cl)
+    }
+
+    fn cost(&self, n: usize, dk: usize, dv: usize) -> Cost {
+        let (n64, dk64, dv64) = (n as u64, dk as u64, dv as u64);
+        let (c, b, l) = (self.clusters as u64, self.bits as u64,
+                         self.iters as u64);
+        Cost {
+            // LSH + Lloyd (O(NCL + ND_kB)) + centroid attention
+            flops: n64 * dk64 * b + n64 * c * l
+                + c * n64 * (dk64 + dv64),
+            bytes: 4 * c * n64 + n64 * b / 8,
+        }
+    }
+}

@@ -1,0 +1,65 @@
+//! Full softmax attention (paper eqs. 1–2) — the exact baseline every
+//! approximation is measured against — plus the shared-QK variant the
+//! Reformer comparison uses.
+
+use crate::prng::Xoshiro256;
+use crate::tensor::Matrix;
+
+use super::{AttentionKernel, Cost};
+
+/// `softmax(QKᵀ/√Dk)·V` — O(N²·D) time, O(N²) memory.
+pub fn full_attention(q: &Matrix, k: &Matrix, v: &Matrix) -> Matrix {
+    let scale = 1.0 / (q.cols as f32).sqrt();
+    let mut logits = q.matmul_nt(k); // (N, N)
+    logits.scale(scale);
+    logits.softmax_rows();
+    logits.matmul(v)
+}
+
+/// Dense attention matrix (fig. 8 dumps).
+pub fn full_attention_matrix(q: &Matrix, k: &Matrix) -> Matrix {
+    let scale = 1.0 / (q.cols as f32).sqrt();
+    let mut logits = q.matmul_nt(k);
+    logits.scale(scale);
+    logits.softmax_rows();
+    logits
+}
+
+/// Exact softmax attention kernel.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FullAttention;
+
+impl AttentionKernel for FullAttention {
+    fn name(&self) -> String {
+        "full".into()
+    }
+
+    fn run(&self, q: &Matrix, k: &Matrix, v: &Matrix,
+           _rng: &mut Xoshiro256) -> Matrix {
+        full_attention(q, k, v)
+    }
+
+    fn cost(&self, n: usize, dk: usize, dv: usize) -> Cost {
+        let (n64, dk64, dv64) = (n as u64, dk as u64, dv as u64);
+        Cost { flops: n64 * n64 * (dk64 + dv64), bytes: 4 * n64 * n64 }
+    }
+}
+
+/// Shared-QK exact attention (K := Q), the Reformer-style tying.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SharedFullAttention;
+
+impl AttentionKernel for SharedFullAttention {
+    fn name(&self) -> String {
+        "shared-full".into()
+    }
+
+    fn run(&self, q: &Matrix, _k: &Matrix, v: &Matrix,
+           _rng: &mut Xoshiro256) -> Matrix {
+        full_attention(q, q, v)
+    }
+
+    fn cost(&self, n: usize, dk: usize, dv: usize) -> Cost {
+        FullAttention.cost(n, dk, dv)
+    }
+}

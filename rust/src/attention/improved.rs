@@ -1,0 +1,130 @@
+//! Improved clustered attention (paper eqs. 9–11 / suppl. 15–17): each
+//! cluster keeps exact attention on its top-k keys and falls back to the
+//! centroid approximation on the complement.
+//!
+//! The complement pass uses a boolean top-k membership mask per cluster,
+//! so each row is a single O(N) sweep — the paper's stated complexity —
+//! instead of the O(N·topk) `contains` rescan the seed shipped with.
+
+use crate::clustering::Clustering;
+use crate::prng::Xoshiro256;
+use crate::tensor::{axpy, dot, softmax_inplace, topk_indices, Matrix};
+
+use super::clustered::{clustered_attention_matrix, ClusteredAttention};
+use super::{AttentionKernel, Cost};
+
+pub fn improved_clustered_attention(q: &Matrix, k: &Matrix, v: &Matrix,
+                                    cl: &Clustering, topk: usize) -> Matrix {
+    let n = q.rows;
+    let c = cl.n_clusters;
+    let scale = 1.0 / (q.cols as f32).sqrt();
+    let a_c = clustered_attention_matrix(q, k, cl); // (C, N)
+
+    // per-cluster top-k keys, captured mass m̂ (eq. 9) and V̂^b basis
+    let mut top: Vec<Vec<usize>> = Vec::with_capacity(c);
+    let mut mhat = vec![0f32; c];
+    let mut v_b = Matrix::zeros(c, v.cols); // complement average per cluster
+    // boolean membership mask, reset between clusters: keeps the
+    // complement pass O(N) total per cluster (eq. 17)
+    let mut in_top = vec![false; k.rows];
+    for j in 0..c {
+        let idx = topk_indices(a_c.row(j), topk);
+        mhat[j] = idx.iter().map(|&i| a_c.at(j, i)).sum();
+        for &key_idx in &idx {
+            in_top[key_idx] = true;
+        }
+        // V̂^b row: clustered attention with top-k columns zeroed (eq. 17)
+        let row = a_c.row(j);
+        let mut acc = vec![0f32; v.cols];
+        for (key_idx, &w) in row.iter().enumerate() {
+            if w != 0.0 && !in_top[key_idx] {
+                axpy(&mut acc, w, v.row(key_idx));
+            }
+        }
+        for &key_idx in &idx {
+            in_top[key_idx] = false;
+        }
+        v_b.row_mut(j).copy_from_slice(&acc);
+        top.push(idx);
+    }
+
+    // V̂ = V̂^t + V̂^b (eqs. 15–16)
+    let mut out = Matrix::zeros(n, v.cols);
+    let mut dots = vec![0f32; topk];
+    for i in 0..n {
+        let j = cl.groups[i] as usize;
+        let idx = &top[j];
+        let t = idx.len();
+        for (slot, &key_idx) in idx.iter().enumerate() {
+            dots[slot] = dot(q.row(i), k.row(key_idx)) * scale;
+        }
+        softmax_inplace(&mut dots[..t]);
+        let orow = out.row_mut(i);
+        orow.copy_from_slice(v_b.row(j));
+        for (slot, &key_idx) in idx.iter().enumerate() {
+            axpy(orow, dots[slot] * mhat[j], v.row(key_idx));
+        }
+    }
+    out
+}
+
+/// Dense A^t (eq. 10) for fig. 8.
+pub fn improved_clustered_attention_matrix(q: &Matrix, k: &Matrix,
+                                           cl: &Clustering, topk: usize)
+                                           -> Matrix {
+    let n = q.rows;
+    let scale = 1.0 / (q.cols as f32).sqrt();
+    let a_c = clustered_attention_matrix(q, k, cl);
+    let mut out = Matrix::zeros(n, n);
+    let mut dots = vec![0f32; topk];
+    for i in 0..n {
+        let j = cl.groups[i] as usize;
+        let idx = topk_indices(a_c.row(j), topk);
+        let mhat: f32 = idx.iter().map(|&l| a_c.at(j, l)).sum();
+        out.row_mut(i).copy_from_slice(a_c.row(j));
+        for (slot, &l) in idx.iter().enumerate() {
+            dots[slot] = dot(q.row(i), k.row(l)) * scale;
+        }
+        softmax_inplace(&mut dots[..idx.len()]);
+        for (slot, &l) in idx.iter().enumerate() {
+            out.set(i, l, dots[slot] * mhat);
+        }
+    }
+    out
+}
+
+/// Improved clustered attention kernel (clustered + exact top-k keys).
+#[derive(Debug, Clone, Copy)]
+pub struct ImprovedClusteredAttention {
+    pub clusters: usize,
+    pub bits: usize,
+    pub iters: usize,
+    pub topk: usize,
+}
+
+impl AttentionKernel for ImprovedClusteredAttention {
+    fn name(&self) -> String {
+        format!("i-clustered-{}", self.clusters)
+    }
+
+    fn run(&self, q: &Matrix, k: &Matrix, v: &Matrix,
+           rng: &mut Xoshiro256) -> Matrix {
+        let cl = crate::clustering::cluster_queries(
+            q, self.clusters, self.bits, self.iters, rng);
+        improved_clustered_attention(q, k, v, &cl, self.topk)
+    }
+
+    fn cost(&self, n: usize, dk: usize, dv: usize) -> Cost {
+        let base = ClusteredAttention {
+            clusters: self.clusters,
+            bits: self.bits,
+            iters: self.iters,
+        }
+        .cost(n, dk, dv);
+        let (n64, dk64, dv64) = (n as u64, dk as u64, dv as u64);
+        Cost {
+            flops: base.flops + n64 * (self.topk as u64) * (dk64 + dv64),
+            bytes: base.bytes + 4 * n64 * (self.topk as u64),
+        }
+    }
+}

@@ -1,0 +1,131 @@
+//! Reformer-style LSH attention baseline: shared-QK, angular LSH
+//! bucketing, chunked local attention, rounds combined with logsumexp
+//! weights.
+
+use crate::prng::Xoshiro256;
+use crate::tensor::{axpy, dot, Matrix};
+
+use super::{AttentionKernel, Cost};
+
+/// Shared-QK chunked LSH attention; rounds combined with logsumexp weights.
+pub fn reformer_attention(x: &Matrix, v: &Matrix, rounds: usize,
+                          chunk: usize, rng: &mut Xoshiro256) -> Matrix {
+    let n = x.rows;
+    assert_eq!(n % chunk, 0, "N must be divisible by chunk");
+    let n_buckets = 16usize;
+    let scale = 1.0 / (x.cols as f32).sqrt();
+
+    let mut outs: Vec<Matrix> = Vec::with_capacity(rounds);
+    let mut lses: Vec<Vec<f32>> = Vec::with_capacity(rounds);
+
+    for _ in 0..rounds {
+        // angular LSH: argmax over [xR; -xR]
+        let rot = Matrix::randn(n_buckets / 2, x.cols, rng);
+        let mut buckets = vec![0usize; n];
+        for i in 0..n {
+            let (mut best_v, mut best_b) = (f32::NEG_INFINITY, 0usize);
+            for b in 0..n_buckets / 2 {
+                let h = dot(x.row(i), rot.row(b));
+                if h > best_v {
+                    best_v = h;
+                    best_b = b;
+                }
+                if -h > best_v {
+                    best_v = -h;
+                    best_b = b + n_buckets / 2;
+                }
+            }
+            buckets[i] = best_b;
+        }
+        // stable sort by bucket
+        let mut order: Vec<usize> = (0..n).collect();
+        order.sort_by_key(|&i| (buckets[i], i));
+
+        let mut out = Matrix::zeros(n, v.cols);
+        let mut lse = vec![f32::NEG_INFINITY; n];
+        let n_chunks = n / chunk;
+        for cidx in 0..n_chunks {
+            let prev = (cidx + n_chunks - 1) % n_chunks;
+            // candidate keys: previous chunk ++ own chunk
+            let cand: Vec<usize> = order[prev * chunk..(prev + 1) * chunk]
+                .iter()
+                .chain(&order[cidx * chunk..(cidx + 1) * chunk])
+                .copied()
+                .collect();
+            for &qi in &order[cidx * chunk..(cidx + 1) * chunk] {
+                let mut logits = Vec::with_capacity(cand.len());
+                for &kj in &cand {
+                    let l = if buckets[kj] != buckets[qi] {
+                        f32::NEG_INFINITY
+                    } else if kj == qi {
+                        -5e8 // self only as a fallback
+                    } else {
+                        dot(x.row(qi), x.row(kj)) * scale
+                    };
+                    logits.push(l);
+                }
+                let m = logits.iter().copied().fold(f32::NEG_INFINITY,
+                                                    f32::max);
+                let mut sum = 0f32;
+                for l in &mut logits {
+                    *l = (*l - m).exp();
+                    sum += *l;
+                }
+                lse[qi] = m + sum.max(1e-30).ln();
+                let inv = 1.0 / sum.max(1e-30);
+                let orow = out.row_mut(qi);
+                for (slot, &kj) in cand.iter().enumerate() {
+                    if logits[slot] > 0.0 {
+                        axpy(orow, logits[slot] * inv, v.row(kj));
+                    }
+                }
+            }
+        }
+        outs.push(out);
+        lses.push(lse);
+    }
+
+    // combine rounds: softmax over per-position lse
+    let mut combined = Matrix::zeros(n, v.cols);
+    for i in 0..n {
+        let m = (0..rounds)
+            .map(|r| lses[r][i])
+            .fold(f32::NEG_INFINITY, f32::max);
+        let ws: Vec<f32> = (0..rounds).map(|r| (lses[r][i] - m).exp())
+            .collect();
+        let tot: f32 = ws.iter().sum();
+        let orow = combined.row_mut(i);
+        for r in 0..rounds {
+            axpy(orow, ws[r] / tot.max(1e-30), outs[r].row(i));
+        }
+    }
+    combined
+}
+
+/// Reformer-style LSH attention kernel (shared QK; `k` input is unused).
+#[derive(Debug, Clone, Copy)]
+pub struct LshAttention {
+    pub rounds: usize,
+    pub chunk: usize,
+}
+
+impl AttentionKernel for LshAttention {
+    fn name(&self) -> String {
+        format!("lsh-{}", self.rounds)
+    }
+
+    fn run(&self, q: &Matrix, _k: &Matrix, v: &Matrix,
+           rng: &mut Xoshiro256) -> Matrix {
+        reformer_attention(q, v, self.rounds, self.chunk, rng)
+    }
+
+    fn cost(&self, n: usize, dk: usize, dv: usize) -> Cost {
+        let (n64, dk64, dv64) = (n as u64, dk as u64, dv as u64);
+        let (r, c) = (self.rounds as u64, self.chunk as u64);
+        Cost {
+            flops: r * n64 * 2 * c * (dk64 + dv64)
+                + r * n64 * dk64 * 8,
+            bytes: 4 * r * n64 * 2 * c,
+        }
+    }
+}

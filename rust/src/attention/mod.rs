@@ -1,16 +1,55 @@
-//! Pure-Rust reference attention (all paper variants, single head).
+//! Pure-Rust reference attention — all paper variants behind one
+//! trait-based, batched, multi-head engine.
 //!
-//! Three roles:
+//! Layout:
+//!  - one file per kernel family ([`full`], [`clustered`], [`improved`],
+//!    [`oracle`], [`lsh`]), each exporting its free functions (the
+//!    historical API, still the substrate of the golden tests) plus an
+//!    [`AttentionKernel`] implementation;
+//!  - this module owns the trait, the name-keyed [`REGISTRY`], the
+//!    [`Variant`] config enum, and the batched entry points.
+//!
+//! Three roles (unchanged from the single-head era):
 //!  1. second correctness oracle — integration tests compare these against
 //!     HLO lowered from `python/compile/kernels/ref.py` on golden inputs;
 //!  2. the fig. 4 scaling benchmark substrate (runs to N = 2^15 quickly,
-//!     which interpret-mode Pallas cannot);
+//!     which interpret-mode Pallas cannot) — now including batched
+//!     multi-head throughput over the exec pool;
 //!  3. the analytic cost model (flops/bytes) used for the memory column
 //!     of fig. 4 and the §Perf roofline estimates.
+//!
+//! **Batched determinism contract:** slice `s = b·H + h` of a
+//! [`run_batch`] call draws randomness only from
+//! `prng::slice_stream(seed, s)`, so parallel execution over the exec
+//! pool is bit-identical to the sequential per-slice loop
+//! ([`run_batch_seq`]) — verified by `proptest/attention_props.rs`.
 
-use crate::clustering::{self, Clustering};
-use crate::prng::Xoshiro256;
-use crate::tensor::{axpy, dot, softmax_inplace, topk_indices, Matrix};
+pub mod clustered;
+pub mod full;
+pub mod improved;
+pub mod lsh;
+pub mod oracle;
+
+pub use clustered::{centroids, clustered_attention,
+                    clustered_attention_matrix, ClusteredAttention};
+pub use full::{full_attention, full_attention_matrix, FullAttention,
+               SharedFullAttention};
+pub use improved::{improved_clustered_attention,
+                   improved_clustered_attention_matrix,
+                   ImprovedClusteredAttention};
+pub use lsh::{reformer_attention, LshAttention};
+pub use oracle::{oracle_top_attention, OracleTopAttention};
+
+use crate::exec::WorkerPool;
+use crate::prng::{slice_stream, Xoshiro256};
+use crate::tensor::batch::BatchMatrix;
+use crate::tensor::Matrix;
+
+/// Default hyper-parameters applied when a kernel is resolved by name.
+pub const DEFAULT_BITS: usize = 63;
+pub const DEFAULT_ITERS: usize = 10;
+pub const DEFAULT_TOPK: usize = 32;
+pub const DEFAULT_CHUNK: usize = 32;
 
 /// Which attention variant to run — mirrors `AttentionConfig` in L2.
 #[derive(Debug, Clone, PartialEq)]
@@ -39,297 +78,13 @@ impl Variant {
             Variant::Lsh { rounds, .. } => format!("lsh-{rounds}"),
         }
     }
-}
 
-/// Dispatch a variant.  `q`,`k`: (N×Dk), `v`: (N×Dv) → (N×Dv).
-pub fn run(variant: &Variant, q: &Matrix, k: &Matrix, v: &Matrix,
-           rng: &mut Xoshiro256) -> Matrix {
-    match variant {
-        Variant::Full => full_attention(q, k, v),
-        Variant::SharedFull => full_attention(q, q, v),
-        Variant::Clustered { clusters, bits, iters } => {
-            let cl = clustering::cluster_queries(q, *clusters, *bits,
-                                                 *iters, rng);
-            clustered_attention(q, k, v, &cl)
-        }
-        Variant::ImprovedClustered { clusters, bits, iters, topk } => {
-            let cl = clustering::cluster_queries(q, *clusters, *bits,
-                                                 *iters, rng);
-            improved_clustered_attention(q, k, v, &cl, *topk)
-        }
-        Variant::OracleTop { topk } => oracle_top_attention(q, k, v, *topk),
-        Variant::Lsh { rounds, chunk } => {
-            reformer_attention(q, v, *rounds, *chunk, rng)
-        }
+    /// Inverse of [`Variant::name`]: resolve a paper-notation name via
+    /// the registry, applying the `DEFAULT_*` hyper-parameters.
+    pub fn parse(name: &str) -> Option<Variant> {
+        REGISTRY.iter().find_map(|f| (f.parse)(name))
     }
 }
-
-// ---------------------------------------------------------------------------
-// full attention (eq. 1–2)
-// ---------------------------------------------------------------------------
-
-pub fn full_attention(q: &Matrix, k: &Matrix, v: &Matrix) -> Matrix {
-    let scale = 1.0 / (q.cols as f32).sqrt();
-    let mut logits = q.matmul_nt(k); // (N, N)
-    logits.scale(scale);
-    logits.softmax_rows();
-    logits.matmul(v)
-}
-
-/// Dense attention matrix (fig. 8 dumps).
-pub fn full_attention_matrix(q: &Matrix, k: &Matrix) -> Matrix {
-    let scale = 1.0 / (q.cols as f32).sqrt();
-    let mut logits = q.matmul_nt(k);
-    logits.scale(scale);
-    logits.softmax_rows();
-    logits
-}
-
-// ---------------------------------------------------------------------------
-// clustered attention (eqs. 3–6)
-// ---------------------------------------------------------------------------
-
-/// Eq. (3): centroids of the member queries.
-pub fn centroids(q: &Matrix, cl: &Clustering) -> Matrix {
-    let mut cent = Matrix::zeros(cl.n_clusters, q.cols);
-    for i in 0..q.rows {
-        axpy(cent.row_mut(cl.groups[i] as usize), 1.0, q.row(i));
-    }
-    for c in 0..cl.n_clusters {
-        if cl.counts[c] > 0 {
-            let inv = 1.0 / cl.counts[c] as f32;
-            for val in cent.row_mut(c) {
-                *val *= inv;
-            }
-        }
-    }
-    cent
-}
-
-/// Eq. (4): A^c = softmax(Q^c K^T / sqrt(Dk)) — (C × N).
-pub fn clustered_attention_matrix(q: &Matrix, k: &Matrix, cl: &Clustering)
-                                  -> Matrix {
-    let cent = centroids(q, cl);
-    let scale = 1.0 / (q.cols as f32).sqrt();
-    let mut a_c = cent.matmul_nt(k);
-    a_c.scale(scale);
-    a_c.softmax_rows();
-    a_c
-}
-
-/// Eqs. (4)–(6): O(N·C·D).
-pub fn clustered_attention(q: &Matrix, k: &Matrix, v: &Matrix,
-                           cl: &Clustering) -> Matrix {
-    let a_c = clustered_attention_matrix(q, k, cl);
-    let v_c = a_c.matmul(v); // (C, Dv)
-    let mut out = Matrix::zeros(q.rows, v.cols);
-    for i in 0..q.rows {
-        out.row_mut(i).copy_from_slice(v_c.row(cl.groups[i] as usize));
-    }
-    out
-}
-
-// ---------------------------------------------------------------------------
-// improved clustered attention (eqs. 9–11 / suppl. 15–17)
-// ---------------------------------------------------------------------------
-
-pub fn improved_clustered_attention(q: &Matrix, k: &Matrix, v: &Matrix,
-                                    cl: &Clustering, topk: usize) -> Matrix {
-    let n = q.rows;
-    let c = cl.n_clusters;
-    let scale = 1.0 / (q.cols as f32).sqrt();
-    let a_c = clustered_attention_matrix(q, k, cl); // (C, N)
-
-    // per-cluster top-k keys, captured mass m̂ (eq. 9) and V̂^b basis
-    let mut top: Vec<Vec<usize>> = Vec::with_capacity(c);
-    let mut mhat = vec![0f32; c];
-    let mut v_b = Matrix::zeros(c, v.cols); // complement average per cluster
-    for j in 0..c {
-        let idx = topk_indices(a_c.row(j), topk);
-        mhat[j] = idx.iter().map(|&i| a_c.at(j, i)).sum();
-        // V̂^b row: clustered attention with top-k columns zeroed (eq. 17)
-        let row = a_c.row(j);
-        let mut acc = vec![0f32; v.cols];
-        for (key_idx, &w) in row.iter().enumerate() {
-            if w != 0.0 && !idx.contains(&key_idx) {
-                axpy(&mut acc, w, v.row(key_idx));
-            }
-        }
-        v_b.row_mut(j).copy_from_slice(&acc);
-        top.push(idx);
-    }
-
-    // V̂ = V̂^t + V̂^b (eqs. 15–16)
-    let mut out = Matrix::zeros(n, v.cols);
-    let mut dots = vec![0f32; topk];
-    for i in 0..n {
-        let j = cl.groups[i] as usize;
-        let idx = &top[j];
-        let t = idx.len();
-        for (slot, &key_idx) in idx.iter().enumerate() {
-            dots[slot] = dot(q.row(i), k.row(key_idx)) * scale;
-        }
-        softmax_inplace(&mut dots[..t]);
-        let orow = out.row_mut(i);
-        orow.copy_from_slice(v_b.row(j));
-        for (slot, &key_idx) in idx.iter().enumerate() {
-            axpy(orow, dots[slot] * mhat[j], v.row(key_idx));
-        }
-    }
-    out
-}
-
-/// Dense A^t (eq. 10) for fig. 8.
-pub fn improved_clustered_attention_matrix(q: &Matrix, k: &Matrix,
-                                           cl: &Clustering, topk: usize)
-                                           -> Matrix {
-    let n = q.rows;
-    let scale = 1.0 / (q.cols as f32).sqrt();
-    let a_c = clustered_attention_matrix(q, k, cl);
-    let mut out = Matrix::zeros(n, n);
-    let mut dots = vec![0f32; topk];
-    for i in 0..n {
-        let j = cl.groups[i] as usize;
-        let idx = topk_indices(a_c.row(j), topk);
-        let mhat: f32 = idx.iter().map(|&l| a_c.at(j, l)).sum();
-        out.row_mut(i).copy_from_slice(a_c.row(j));
-        for (slot, &l) in idx.iter().enumerate() {
-            dots[slot] = dot(q.row(i), k.row(l)) * scale;
-        }
-        softmax_inplace(&mut dots[..idx.len()]);
-        for (slot, &l) in idx.iter().enumerate() {
-            out.set(i, l, dots[slot] * mhat);
-        }
-    }
-    out
-}
-
-// ---------------------------------------------------------------------------
-// oracle-top baseline (§4.1)
-// ---------------------------------------------------------------------------
-
-pub fn oracle_top_attention(q: &Matrix, k: &Matrix, v: &Matrix, topk: usize)
-                            -> Matrix {
-    let scale = 1.0 / (q.cols as f32).sqrt();
-    let mut out = Matrix::zeros(q.rows, v.cols);
-    let mut logits = vec![0f32; k.rows];
-    for i in 0..q.rows {
-        for j in 0..k.rows {
-            logits[j] = dot(q.row(i), k.row(j)) * scale;
-        }
-        let idx = topk_indices(&logits, topk);
-        let mut w: Vec<f32> = idx.iter().map(|&j| logits[j]).collect();
-        softmax_inplace(&mut w);
-        let orow = out.row_mut(i);
-        for (slot, &j) in idx.iter().enumerate() {
-            axpy(orow, w[slot], v.row(j));
-        }
-    }
-    out
-}
-
-// ---------------------------------------------------------------------------
-// Reformer-style LSH attention baseline
-// ---------------------------------------------------------------------------
-
-/// Shared-QK chunked LSH attention; rounds combined with logsumexp weights.
-pub fn reformer_attention(x: &Matrix, v: &Matrix, rounds: usize,
-                          chunk: usize, rng: &mut Xoshiro256) -> Matrix {
-    let n = x.rows;
-    assert_eq!(n % chunk, 0, "N must be divisible by chunk");
-    let n_buckets = 16usize;
-    let scale = 1.0 / (x.cols as f32).sqrt();
-
-    let mut outs: Vec<Matrix> = Vec::with_capacity(rounds);
-    let mut lses: Vec<Vec<f32>> = Vec::with_capacity(rounds);
-
-    for _ in 0..rounds {
-        // angular LSH: argmax over [xR; -xR]
-        let rot = Matrix::randn(n_buckets / 2, x.cols, rng);
-        let mut buckets = vec![0usize; n];
-        for i in 0..n {
-            let (mut best_v, mut best_b) = (f32::NEG_INFINITY, 0usize);
-            for b in 0..n_buckets / 2 {
-                let h = dot(x.row(i), rot.row(b));
-                if h > best_v {
-                    best_v = h;
-                    best_b = b;
-                }
-                if -h > best_v {
-                    best_v = -h;
-                    best_b = b + n_buckets / 2;
-                }
-            }
-            buckets[i] = best_b;
-        }
-        // stable sort by bucket
-        let mut order: Vec<usize> = (0..n).collect();
-        order.sort_by_key(|&i| (buckets[i], i));
-
-        let mut out = Matrix::zeros(n, v.cols);
-        let mut lse = vec![f32::NEG_INFINITY; n];
-        let n_chunks = n / chunk;
-        for cidx in 0..n_chunks {
-            let prev = (cidx + n_chunks - 1) % n_chunks;
-            // candidate keys: previous chunk ++ own chunk
-            let cand: Vec<usize> = order[prev * chunk..(prev + 1) * chunk]
-                .iter()
-                .chain(&order[cidx * chunk..(cidx + 1) * chunk])
-                .copied()
-                .collect();
-            for &qi in &order[cidx * chunk..(cidx + 1) * chunk] {
-                let mut logits = Vec::with_capacity(cand.len());
-                for &kj in &cand {
-                    let l = if buckets[kj] != buckets[qi] {
-                        f32::NEG_INFINITY
-                    } else if kj == qi {
-                        -5e8 // self only as a fallback
-                    } else {
-                        dot(x.row(qi), x.row(kj)) * scale
-                    };
-                    logits.push(l);
-                }
-                let m = logits.iter().copied().fold(f32::NEG_INFINITY,
-                                                    f32::max);
-                let mut sum = 0f32;
-                for l in &mut logits {
-                    *l = (*l - m).exp();
-                    sum += *l;
-                }
-                lse[qi] = m + sum.max(1e-30).ln();
-                let inv = 1.0 / sum.max(1e-30);
-                let orow = out.row_mut(qi);
-                for (slot, &kj) in cand.iter().enumerate() {
-                    if logits[slot] > 0.0 {
-                        axpy(orow, logits[slot] * inv, v.row(kj));
-                    }
-                }
-            }
-        }
-        outs.push(out);
-        lses.push(lse);
-    }
-
-    // combine rounds: softmax over per-position lse
-    let mut combined = Matrix::zeros(n, v.cols);
-    for i in 0..n {
-        let m = (0..rounds)
-            .map(|r| lses[r][i])
-            .fold(f32::NEG_INFINITY, f32::max);
-        let ws: Vec<f32> = (0..rounds).map(|r| (lses[r][i] - m).exp())
-            .collect();
-        let tot: f32 = ws.iter().sum();
-        let orow = combined.row_mut(i);
-        for r in 0..rounds {
-            axpy(orow, ws[r] / tot.max(1e-30), outs[r].row(i));
-        }
-    }
-    combined
-}
-
-// ---------------------------------------------------------------------------
-// analytic cost model (fig. 4 memory column + §Perf rooflines)
-// ---------------------------------------------------------------------------
 
 /// Estimated cost of one attention call.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -340,52 +95,185 @@ pub struct Cost {
     pub bytes: u64,
 }
 
+/// One attention algorithm, usable single-slice or batched multi-head.
+///
+/// `run` computes one (sequence, head) slice; `run_batch` maps it over
+/// every slice of a (B, H, N, D) workload, parallelized by the exec pool
+/// under the per-slice stream contract (see module docs).
+pub trait AttentionKernel: Send + Sync {
+    /// Paper-notation name, e.g. `"i-clustered-100"`.
+    fn name(&self) -> String;
+
+    /// One slice: `q`,`k`: (N×Dk), `v`: (N×Dv) → (N×Dv).
+    fn run(&self, q: &Matrix, k: &Matrix, v: &Matrix,
+           rng: &mut Xoshiro256) -> Matrix;
+
+    /// Closed-form cost of one slice (matches §3 complexity claims).
+    fn cost(&self, n: usize, dk: usize, dv: usize) -> Cost;
+
+    /// Batched multi-head forward over (batch × head) slices.
+    ///
+    /// Output slice `s` is a pure function of `(inputs[s], seed, s)` —
+    /// bit-identical for any pool size, including [`run_batch_seq`].
+    fn run_batch(&self, q: &BatchMatrix, k: &BatchMatrix, v: &BatchMatrix,
+                 seed: u64, pool: &WorkerPool) -> BatchMatrix {
+        check_batch_shapes(q, k, v);
+        let mut out = BatchMatrix::zeros(q.batch, q.heads, q.rows, v.cols);
+        if out.slices() == 0 || out.slice_len() == 0 {
+            return out;
+        }
+        // workers write straight into disjoint output slices — no
+        // per-slice result collection or second copy of the output
+        let chunks = out.slices_mut();
+        pool.for_each_mut(chunks, |s, chunk: &mut [f32]| {
+            let mut rng = slice_stream(seed, s as u64);
+            let o = self.run(&q.slice_matrix(s), &k.slice_matrix(s),
+                             &v.slice_matrix(s), &mut rng);
+            chunk.copy_from_slice(&o.data);
+        });
+        out
+    }
+}
+
+fn check_batch_shapes(q: &BatchMatrix, k: &BatchMatrix, v: &BatchMatrix) {
+    assert_eq!((q.batch, q.heads), (k.batch, k.heads),
+               "q/k batch-head mismatch");
+    assert_eq!((q.batch, q.heads), (v.batch, v.heads),
+               "q/v batch-head mismatch");
+    assert_eq!(q.cols, k.cols, "q/k head-dim mismatch");
+    assert_eq!(q.rows, k.rows, "q/k length mismatch");
+    assert_eq!(k.rows, v.rows, "k/v length mismatch");
+}
+
+/// Explicit sequential single-slice loop — the reference schedule the
+/// parallel `run_batch` must match bit-for-bit.
+pub fn run_batch_seq(kernel: &dyn AttentionKernel, q: &BatchMatrix,
+                     k: &BatchMatrix, v: &BatchMatrix, seed: u64)
+                     -> BatchMatrix {
+    check_batch_shapes(q, k, v);
+    let mut out = BatchMatrix::zeros(q.batch, q.heads, q.rows, v.cols);
+    for s in 0..q.slices() {
+        let mut rng = slice_stream(seed, s as u64);
+        let o = kernel.run(&q.slice_matrix(s), &k.slice_matrix(s),
+                           &v.slice_matrix(s), &mut rng);
+        out.set_slice(s, &o);
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// name-keyed registry
+// ---------------------------------------------------------------------------
+
+/// One kernel family in the registry: its key and its name parser.
+pub struct KernelFamily {
+    /// Family key (the name prefix, exact for parameterless families).
+    pub key: &'static str,
+    /// Parse a full kernel name (e.g. `"clustered-100"`) into a config.
+    pub parse: fn(&str) -> Option<Variant>,
+}
+
+fn parse_full(name: &str) -> Option<Variant> {
+    (name == "full").then_some(Variant::Full)
+}
+
+fn parse_shared_full(name: &str) -> Option<Variant> {
+    (name == "shared-full").then_some(Variant::SharedFull)
+}
+
+fn parse_clustered(name: &str) -> Option<Variant> {
+    let clusters: usize = name.strip_prefix("clustered-")?.parse().ok()?;
+    Some(Variant::Clustered { clusters, bits: DEFAULT_BITS,
+                              iters: DEFAULT_ITERS })
+}
+
+fn parse_improved(name: &str) -> Option<Variant> {
+    let clusters: usize = name.strip_prefix("i-clustered-")?.parse().ok()?;
+    Some(Variant::ImprovedClustered { clusters, bits: DEFAULT_BITS,
+                                      iters: DEFAULT_ITERS,
+                                      topk: DEFAULT_TOPK })
+}
+
+fn parse_oracle(name: &str) -> Option<Variant> {
+    let topk: usize = name.strip_prefix("oracle-top-")?.parse().ok()?;
+    Some(Variant::OracleTop { topk })
+}
+
+fn parse_lsh(name: &str) -> Option<Variant> {
+    let rounds: usize = name.strip_prefix("lsh-")?.parse().ok()?;
+    Some(Variant::Lsh { rounds, chunk: DEFAULT_CHUNK })
+}
+
+/// Every kernel family, keyed by paper-notation name.
+pub static REGISTRY: &[KernelFamily] = &[
+    KernelFamily { key: "i-clustered", parse: parse_improved },
+    KernelFamily { key: "clustered", parse: parse_clustered },
+    KernelFamily { key: "oracle-top", parse: parse_oracle },
+    KernelFamily { key: "lsh", parse: parse_lsh },
+    KernelFamily { key: "shared-full", parse: parse_shared_full },
+    KernelFamily { key: "full", parse: parse_full },
+];
+
+/// Registry family keys, registry order.
+pub fn kernel_families() -> Vec<&'static str> {
+    REGISTRY.iter().map(|f| f.key).collect()
+}
+
+/// Instantiate the kernel for a variant config.
+pub fn kernel_for(variant: &Variant) -> Box<dyn AttentionKernel> {
+    match variant {
+        Variant::Full => Box::new(FullAttention),
+        Variant::SharedFull => Box::new(SharedFullAttention),
+        Variant::Clustered { clusters, bits, iters } => {
+            Box::new(ClusteredAttention { clusters: *clusters, bits: *bits,
+                                          iters: *iters })
+        }
+        Variant::ImprovedClustered { clusters, bits, iters, topk } => {
+            Box::new(ImprovedClusteredAttention {
+                clusters: *clusters, bits: *bits, iters: *iters,
+                topk: *topk })
+        }
+        Variant::OracleTop { topk } => {
+            Box::new(OracleTopAttention { topk: *topk })
+        }
+        Variant::Lsh { rounds, chunk } => {
+            Box::new(LshAttention { rounds: *rounds, chunk: *chunk })
+        }
+    }
+}
+
+/// Resolve a kernel by paper-notation name (`DEFAULT_*` hyper-params).
+pub fn kernel_by_name(name: &str) -> Option<Box<dyn AttentionKernel>> {
+    Variant::parse(name).map(|v| kernel_for(&v))
+}
+
+// ---------------------------------------------------------------------------
+// thin wrappers (the historical call-site API)
+// ---------------------------------------------------------------------------
+
+/// Dispatch a variant.  `q`,`k`: (N×Dk), `v`: (N×Dv) → (N×Dv).
+pub fn run(variant: &Variant, q: &Matrix, k: &Matrix, v: &Matrix,
+           rng: &mut Xoshiro256) -> Matrix {
+    kernel_for(variant).run(q, k, v, rng)
+}
+
+/// Batched dispatch over a (B, H, N, D) workload.
+pub fn run_batch(variant: &Variant, q: &BatchMatrix, k: &BatchMatrix,
+                 v: &BatchMatrix, seed: u64, pool: &WorkerPool)
+                 -> BatchMatrix {
+    kernel_for(variant).run_batch(q, k, v, seed, pool)
+}
+
 /// Closed-form cost of each variant (matches §3 complexity claims).
 pub fn cost_model(variant: &Variant, n: usize, dk: usize, dv: usize)
                   -> Cost {
-    let (n64, dk64, dv64) = (n as u64, dk as u64, dv as u64);
-    match variant {
-        Variant::Full | Variant::SharedFull => Cost {
-            flops: n64 * n64 * (dk64 + dv64),
-            bytes: 4 * n64 * n64,
-        },
-        Variant::Clustered { clusters, bits, iters } => {
-            let (c, b, l) = (*clusters as u64, *bits as u64, *iters as u64);
-            Cost {
-                // LSH + Lloyd (O(NCL + ND_kB)) + centroid attention
-                flops: n64 * dk64 * b + n64 * c * l
-                    + c * n64 * (dk64 + dv64),
-                bytes: 4 * c * n64 + n64 * b / 8,
-            }
-        }
-        Variant::ImprovedClustered { clusters, bits, iters, topk } => {
-            let base = cost_model(
-                &Variant::Clustered { clusters: *clusters, bits: *bits,
-                                      iters: *iters }, n, dk, dv);
-            Cost {
-                flops: base.flops
-                    + n64 * (*topk as u64) * (dk64 + dv64),
-                bytes: base.bytes + 4 * n64 * (*topk as u64),
-            }
-        }
-        Variant::OracleTop { topk } => Cost {
-            flops: n64 * n64 * dk64 + n64 * (*topk as u64) * dv64,
-            bytes: 4 * n64 * n64,
-        },
-        Variant::Lsh { rounds, chunk } => {
-            let (r, c) = (*rounds as u64, *chunk as u64);
-            Cost {
-                flops: r * n64 * 2 * c * (dk64 + dv64)
-                    + r * n64 * dk64 * 8,
-                bytes: 4 * r * n64 * 2 * c,
-            }
-        }
-    }
+    kernel_for(variant).cost(n, dk, dv)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::clustering::{self, Clustering};
 
     fn qkv(n: usize, dk: usize, dv: usize, seed: u64)
            -> (Matrix, Matrix, Matrix, Xoshiro256) {
@@ -498,5 +386,83 @@ mod tests {
             "clustered-100"
         );
         assert_eq!(Variant::Lsh { rounds: 4, chunk: 32 }.name(), "lsh-4");
+    }
+
+    // --- trait / registry / batch ------------------------------------
+
+    fn test_variants() -> Vec<Variant> {
+        vec![
+            Variant::Full,
+            Variant::SharedFull,
+            Variant::Clustered { clusters: 4, bits: 31, iters: 5 },
+            Variant::ImprovedClustered { clusters: 4, bits: 31, iters: 5,
+                                         topk: 8 },
+            Variant::OracleTop { topk: 8 },
+            Variant::Lsh { rounds: 2, chunk: 16 },
+        ]
+    }
+
+    #[test]
+    fn registry_resolves_every_paper_name() {
+        for name in ["full", "shared-full", "clustered-100",
+                     "i-clustered-100", "oracle-top-32", "lsh-4"] {
+            let kernel = kernel_by_name(name)
+                .unwrap_or_else(|| panic!("registry missed {name}"));
+            assert_eq!(kernel.name(), name);
+            assert_eq!(Variant::parse(name).unwrap().name(), name);
+        }
+        for bad in ["", "fullx", "clustered-", "i-clustered-x",
+                    "oracle-top--3", "lshx-1"] {
+            assert!(kernel_by_name(bad).is_none(), "{bad:?} resolved");
+        }
+        assert_eq!(kernel_families().len(), REGISTRY.len());
+    }
+
+    #[test]
+    fn kernel_run_matches_variant_dispatch() {
+        let (q, k, v, _) = qkv(32, 8, 8, 11);
+        for var in test_variants() {
+            let mut r1 = Xoshiro256::new(5);
+            let mut r2 = Xoshiro256::new(5);
+            let a = run(&var, &q, &k, &v, &mut r1);
+            let b = kernel_for(&var).run(&q, &k, &v, &mut r2);
+            assert_eq!(a.data, b.data, "{}", var.name());
+        }
+    }
+
+    #[test]
+    fn run_batch_parallel_is_bit_identical_to_sequential() {
+        let mut rng = Xoshiro256::new(21);
+        let (b, h, n, d) = (2, 2, 64, 16);
+        let q = BatchMatrix::randn(b, h, n, d, &mut rng);
+        let k = BatchMatrix::randn(b, h, n, d, &mut rng);
+        let v = BatchMatrix::randn(b, h, n, d, &mut rng);
+        let pool = WorkerPool::new(4);
+        for var in test_variants() {
+            let kernel = kernel_for(&var);
+            let par = kernel.run_batch(&q, &k, &v, 7, &pool);
+            let seq = run_batch_seq(kernel.as_ref(), &q, &k, &v, 7);
+            assert!(par.bit_identical(&seq), "{} diverged", var.name());
+            assert_eq!((par.batch, par.heads, par.rows, par.cols),
+                       (b, h, n, d));
+        }
+    }
+
+    #[test]
+    fn run_batch_slices_match_single_slice_runs() {
+        let mut rng = Xoshiro256::new(22);
+        let (b, h, n, d) = (2, 3, 32, 8);
+        let q = BatchMatrix::randn(b, h, n, d, &mut rng);
+        let k = BatchMatrix::randn(b, h, n, d, &mut rng);
+        let v = BatchMatrix::randn(b, h, n, d, &mut rng);
+        let var = Variant::Clustered { clusters: 4, bits: 31, iters: 5 };
+        let out = run_batch(&var, &q, &k, &v, 3, &WorkerPool::new(3));
+        let kernel = kernel_for(&var);
+        for s in 0..q.slices() {
+            let mut rng_s = crate::prng::slice_stream(3, s as u64);
+            let want = kernel.run(&q.slice_matrix(s), &k.slice_matrix(s),
+                                  &v.slice_matrix(s), &mut rng_s);
+            assert_eq!(out.slice_matrix(s).data, want.data, "slice {s}");
+        }
     }
 }

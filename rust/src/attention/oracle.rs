@@ -1,0 +1,52 @@
+//! Oracle top-k baseline (paper §4.1): exact logits, keep only the k
+//! largest per query — the upper bound any top-k approximation can reach.
+
+use crate::prng::Xoshiro256;
+use crate::tensor::{axpy, dot, softmax_inplace, topk_indices, Matrix};
+
+use super::{AttentionKernel, Cost};
+
+pub fn oracle_top_attention(q: &Matrix, k: &Matrix, v: &Matrix, topk: usize)
+                            -> Matrix {
+    let scale = 1.0 / (q.cols as f32).sqrt();
+    let mut out = Matrix::zeros(q.rows, v.cols);
+    let mut logits = vec![0f32; k.rows];
+    for i in 0..q.rows {
+        for j in 0..k.rows {
+            logits[j] = dot(q.row(i), k.row(j)) * scale;
+        }
+        let idx = topk_indices(&logits, topk);
+        let mut w: Vec<f32> = idx.iter().map(|&j| logits[j]).collect();
+        softmax_inplace(&mut w);
+        let orow = out.row_mut(i);
+        for (slot, &j) in idx.iter().enumerate() {
+            axpy(orow, w[slot], v.row(j));
+        }
+    }
+    out
+}
+
+/// Oracle top-k kernel.
+#[derive(Debug, Clone, Copy)]
+pub struct OracleTopAttention {
+    pub topk: usize,
+}
+
+impl AttentionKernel for OracleTopAttention {
+    fn name(&self) -> String {
+        format!("oracle-top-{}", self.topk)
+    }
+
+    fn run(&self, q: &Matrix, k: &Matrix, v: &Matrix,
+           _rng: &mut Xoshiro256) -> Matrix {
+        oracle_top_attention(q, k, v, self.topk)
+    }
+
+    fn cost(&self, n: usize, dk: usize, dv: usize) -> Cost {
+        let (n64, dk64, dv64) = (n as u64, dk as u64, dv as u64);
+        Cost {
+            flops: n64 * n64 * dk64 + n64 * (self.topk as u64) * dv64,
+            bytes: 4 * n64 * n64,
+        }
+    }
+}

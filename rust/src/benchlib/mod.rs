@@ -134,6 +134,16 @@ impl Table {
     }
 }
 
+/// Throughput in rows per second given rows processed per timed run.
+/// "Rows" are query positions: a (B, H, N, D) batched attention call
+/// processes `B·H·N` rows — the unit the fig. 4 batched table reports.
+pub fn rows_per_sec(rows_per_run: usize, st: &Stats) -> f64 {
+    if st.mean_s <= 0.0 {
+        return f64::INFINITY;
+    }
+    rows_per_run as f64 / st.mean_s
+}
+
 /// Format seconds adaptively (ns/µs/ms/s).
 pub fn fmt_time(s: f64) -> String {
     if s < 1e-6 {
@@ -178,6 +188,14 @@ mod tests {
         let r = t.render();
         assert!(r.contains("demo"));
         assert!(r.contains("longer"));
+    }
+
+    #[test]
+    fn rows_per_sec_scales_inversely_with_time() {
+        let st = Stats::from_samples(&[0.5]);
+        assert!((rows_per_sec(1000, &st) - 2000.0).abs() < 1e-9);
+        let zero = Stats::from_samples(&[]);
+        assert!(rows_per_sec(1, &zero).is_infinite());
     }
 
     #[test]

@@ -231,6 +231,22 @@ pub fn cluster_queries(q: &Matrix, n_clusters: usize, bits: usize,
     hamming_kmeans(&codes, n_clusters, iters, None)
 }
 
+/// Cluster every (batch × head) slice of a batched query tensor.
+///
+/// Slice `s` draws its LSH projections from `prng::slice_stream(seed, s)`
+/// and nothing else, so the result is bit-identical whether the pool runs
+/// slices in parallel or `cluster_queries` is called per slice in order.
+pub fn cluster_queries_batch(q: &crate::tensor::batch::BatchMatrix,
+                             n_clusters: usize, bits: usize, iters: usize,
+                             seed: u64, pool: &crate::exec::WorkerPool)
+                             -> Vec<Clustering> {
+    pool.map_indexed(q.slices(), |s| {
+        let mut rng = crate::prng::slice_stream(seed, s as u64);
+        cluster_queries(&q.slice_matrix(s), n_clusters, bits, iters,
+                        &mut rng)
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -358,5 +374,25 @@ mod tests {
         let cl = cluster_queries(&q, 8, 31, 5, &mut rng);
         assert_eq!(cl.groups.len(), 128);
         assert_eq!(cl.counts.iter().sum::<u32>(), 128);
+    }
+
+    #[test]
+    fn batched_clustering_matches_per_slice_sequential() {
+        use crate::exec::WorkerPool;
+        use crate::tensor::batch::BatchMatrix;
+
+        let mut rng = Xoshiro256::new(8);
+        let q = BatchMatrix::randn(2, 3, 48, 8, &mut rng);
+        let par = cluster_queries_batch(&q, 4, 31, 5, 9,
+                                        &WorkerPool::new(4));
+        assert_eq!(par.len(), 6);
+        for s in 0..q.slices() {
+            let mut rng_s = crate::prng::slice_stream(9, s as u64);
+            let want = cluster_queries(&q.slice_matrix(s), 4, 31, 5,
+                                       &mut rng_s);
+            assert_eq!(par[s].groups, want.groups, "slice {s}");
+            assert_eq!(par[s].counts, want.counts, "slice {s}");
+            assert_eq!(par[s].cost, want.cost, "slice {s}");
+        }
     }
 }

@@ -102,19 +102,25 @@ pub fn init_logging(verbose: bool) {
     });
 }
 
-/// Find the repo root by walking up from cwd until `artifacts/` or
-/// `Cargo.toml` is found — lets benches run from any directory.
+/// Find the repo root by walking up from cwd — lets benches run from any
+/// directory.  `artifacts/` or `.git/` mark the root; a bare `Cargo.toml`
+/// is only a fallback (cargo sets cwd to `rust/`, which has its own
+/// `Cargo.toml` but is one level below the repo root).
 pub fn find_repo_root() -> std::path::PathBuf {
     let mut dir = std::env::current_dir().unwrap_or_else(|_| ".".into());
-    for _ in 0..5 {
-        if dir.join("Cargo.toml").exists() || dir.join("artifacts").exists() {
+    let mut cargo_fallback: Option<std::path::PathBuf> = None;
+    for _ in 0..6 {
+        if dir.join("artifacts").exists() || dir.join(".git").exists() {
             return dir;
+        }
+        if cargo_fallback.is_none() && dir.join("Cargo.toml").exists() {
+            cargo_fallback = Some(dir.clone());
         }
         if !dir.pop() {
             break;
         }
     }
-    ".".into()
+    cargo_fallback.unwrap_or_else(|| ".".into())
 }
 
 #[cfg(test)]

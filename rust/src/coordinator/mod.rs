@@ -16,5 +16,7 @@ pub mod trainer;
 pub use batcher::{BatchPolicy, Batcher};
 pub use datafeed::DataFeed;
 pub use router::Router;
-pub use serve::{InferenceEngine, Request, Response, ServeOptions};
+pub use serve::{AttnRequest, AttnResponse, AttnShape, InferenceEngine,
+                NativeAttentionEngine, NativeAttnOptions, Request,
+                Response, ServeOptions};
 pub use trainer::{train_model, TrainOptions, TrainResult};

@@ -4,6 +4,12 @@
 //! One dispatcher thread per bucket owns that bucket's batcher and
 //! executable; the shared ingress queue provides backpressure (bounded —
 //! `submit` blocks or fails fast when the system is saturated).
+//!
+//! Two engines share the batcher/metrics machinery:
+//! [`InferenceEngine`] executes compiled HLO through PJRT, and
+//! [`NativeAttentionEngine`] batches multi-head attention requests into
+//! (B, H, N, D) tensors and runs them through an [`AttentionKernel`]
+//! over the exec worker pool — no artifacts or native XLA required.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
@@ -11,9 +17,11 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
-use crate::exec::Channel;
+use crate::attention::AttentionKernel;
+use crate::exec::{Channel, WorkerPool};
 use crate::metrics::LatencyHistogram;
 use crate::runtime::{HostTensor, Runtime};
+use crate::tensor::batch::BatchMatrix;
 
 use super::batcher::{BatchPolicy, Batcher};
 use super::router::{Bucket, Router};
@@ -317,3 +325,331 @@ fn run_batch(exe: &crate::runtime::Executable, bucket: &Bucket,
         }
     }
 }
+
+// ---------------------------------------------------------------------------
+// native batched multi-head attention engine
+// ---------------------------------------------------------------------------
+
+/// Static (H, N, Dk, Dv) shape one native engine serves (its "bucket").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AttnShape {
+    pub heads: usize,
+    pub seq_len: usize,
+    pub dk: usize,
+    pub dv: usize,
+}
+
+impl AttnShape {
+    pub fn qk_len(&self) -> usize {
+        self.heads * self.seq_len * self.dk
+    }
+    pub fn v_len(&self) -> usize {
+        self.heads * self.seq_len * self.dv
+    }
+}
+
+/// One multi-head attention request: `q`/`k` are (H, N, Dk) and `v` is
+/// (H, N, Dv), flattened row-major.
+pub struct AttnRequest {
+    pub id: u64,
+    pub q: Vec<f32>,
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+    pub enqueued: Instant,
+    pub reply: mpsc::Sender<AttnResponse>,
+}
+
+/// Per-request result: the (H, N, Dv) output, flattened row-major.
+#[derive(Debug, Clone)]
+pub struct AttnResponse {
+    pub id: u64,
+    pub out: Vec<f32>,
+    pub queue_time: Duration,
+    pub total_time: Duration,
+    pub batch_occupancy: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct NativeAttnOptions {
+    pub policy: BatchPolicy,
+    pub queue_capacity: usize,
+    /// Exec-pool workers parallelizing over (batch × head) slices.
+    pub workers: usize,
+    /// Base seed of the per-slice PRNG streams (see `prng::slice_stream`).
+    pub seed: u64,
+}
+
+impl Default for NativeAttnOptions {
+    fn default() -> Self {
+        Self {
+            policy: BatchPolicy::default(),
+            queue_capacity: 64,
+            workers: WorkerPool::auto().workers(),
+            seed: 0,
+        }
+    }
+}
+
+/// Serving engine for the Rust-native attention kernels: ingress queue →
+/// deadline batcher → one (B, H, N, D) `run_batch` over the exec pool →
+/// per-request replies.  Shares [`ServeMetrics`] with the HLO engine so
+/// benches report both paths in the same terms.
+pub struct NativeAttentionEngine {
+    shape: AttnShape,
+    ingress: Channel<AttnRequest>,
+    pub metrics: Arc<ServeMetrics>,
+    worker: Option<std::thread::JoinHandle<()>>,
+    next_id: AtomicU64,
+}
+
+impl NativeAttentionEngine {
+    pub fn start(kernel: Box<dyn AttentionKernel>, shape: AttnShape,
+                 opts: NativeAttnOptions) -> Self {
+        let ingress: Channel<AttnRequest> =
+            Channel::bounded(opts.queue_capacity.max(1));
+        let metrics = Arc::new(ServeMetrics::default());
+        let ch = ingress.clone();
+        let m = metrics.clone();
+        let worker = std::thread::Builder::new()
+            .name(format!("ct-native-attn-{}", shape.seq_len))
+            .spawn(move || native_dispatcher(kernel, shape, ch, m, opts))
+            .expect("spawn native attention dispatcher");
+        Self {
+            shape,
+            ingress,
+            metrics,
+            worker: Some(worker),
+            next_id: AtomicU64::new(0),
+        }
+    }
+
+    pub fn shape(&self) -> AttnShape {
+        self.shape
+    }
+
+    fn make_request(&self, q: Vec<f32>, k: Vec<f32>, v: Vec<f32>)
+                    -> Result<(AttnRequest, mpsc::Receiver<AttnResponse>)> {
+        if q.len() != self.shape.qk_len() || k.len() != self.shape.qk_len()
+            || v.len() != self.shape.v_len()
+        {
+            return Err(anyhow!(
+                "attention request shape mismatch: got q={} k={} v={}, \
+                 want q=k={} v={} for {:?}",
+                q.len(), k.len(), v.len(), self.shape.qk_len(),
+                self.shape.v_len(), self.shape));
+        }
+        let (tx, rx) = mpsc::channel();
+        let req = AttnRequest {
+            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            q,
+            k,
+            v,
+            enqueued: Instant::now(),
+            reply: tx,
+        };
+        Ok((req, rx))
+    }
+
+    /// Fail-fast submit (backpressure surfaces as an error).
+    pub fn submit(&self, q: Vec<f32>, k: Vec<f32>, v: Vec<f32>)
+                  -> Result<mpsc::Receiver<AttnResponse>> {
+        let (req, rx) = self.make_request(q, k, v)?;
+        self.ingress.try_send(req).map_err(|_| {
+            self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+            anyhow!("native attention queue full (backpressure)")
+        })?;
+        Ok(rx)
+    }
+
+    /// Blocking submit (waits out backpressure instead of failing).
+    pub fn submit_blocking(&self, q: Vec<f32>, k: Vec<f32>, v: Vec<f32>)
+                           -> Result<mpsc::Receiver<AttnResponse>> {
+        let (req, rx) = self.make_request(q, k, v)?;
+        self.ingress
+            .send(req)
+            .map_err(|_| anyhow!("native attention engine shut down"))?;
+        Ok(rx)
+    }
+
+    pub fn shutdown(mut self) {
+        self.ingress.close();
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+fn native_dispatcher(kernel: Box<dyn AttentionKernel>, shape: AttnShape,
+                     ch: Channel<AttnRequest>, metrics: Arc<ServeMetrics>,
+                     opts: NativeAttnOptions) {
+    let pool = WorkerPool::new(opts.workers);
+    let mut batcher: Batcher<AttnRequest> = Batcher::new(opts.policy);
+    loop {
+        let wait = batcher
+            .time_to_deadline(Instant::now())
+            .unwrap_or(Duration::from_millis(50));
+        let item = ch.recv_timeout(wait.max(Duration::from_micros(100)));
+        let mut ready: Option<Vec<AttnRequest>> = None;
+        match item {
+            Ok(Some(req)) => {
+                ready = batcher.push(req, Instant::now());
+            }
+            Ok(None) => {
+                if let Some(batch) = batcher.take() {
+                    run_native_batch(kernel.as_ref(), shape, batch,
+                                     &metrics, &pool, opts.seed);
+                }
+                return;
+            }
+            Err(()) => {}
+        }
+        if ready.is_none() {
+            ready = batcher.poll_deadline(Instant::now());
+        }
+        if let Some(batch) = ready {
+            run_native_batch(kernel.as_ref(), shape, batch, &metrics,
+                             &pool, opts.seed);
+        }
+    }
+}
+
+fn run_native_batch(kernel: &dyn AttentionKernel, shape: AttnShape,
+                    batch: Vec<AttnRequest>, metrics: &ServeMetrics,
+                    pool: &WorkerPool, seed: u64) {
+    let b = batch.len();
+    let occupancy = b;
+    // assemble (B, H, N, D): request order is batch order, each request
+    // already holds its H stacked slices contiguously
+    let mut qd = Vec::with_capacity(b * shape.qk_len());
+    let mut kd = Vec::with_capacity(b * shape.qk_len());
+    let mut vd = Vec::with_capacity(b * shape.v_len());
+    for req in &batch {
+        qd.extend_from_slice(&req.q);
+        kd.extend_from_slice(&req.k);
+        vd.extend_from_slice(&req.v);
+    }
+    let q = BatchMatrix::from_vec(b, shape.heads, shape.seq_len, shape.dk,
+                                  qd);
+    let k = BatchMatrix::from_vec(b, shape.heads, shape.seq_len, shape.dk,
+                                  kd);
+    let v = BatchMatrix::from_vec(b, shape.heads, shape.seq_len, shape.dv,
+                                  vd);
+    let queue_times: Vec<Duration> =
+        batch.iter().map(|r| r.enqueued.elapsed()).collect();
+
+    let out = kernel.run_batch(&q, &k, &v, seed, pool);
+
+    metrics.batches.fetch_add(1, Ordering::Relaxed);
+    metrics
+        .batched_items
+        .fetch_add(occupancy as u64, Ordering::Relaxed);
+
+    let per_req = shape.v_len();
+    for (slot, req) in batch.into_iter().enumerate() {
+        let rows = out.data[slot * per_req..(slot + 1) * per_req].to_vec();
+        let total = req.enqueued.elapsed();
+        metrics.completed.fetch_add(1, Ordering::Relaxed);
+        metrics.latency.lock().unwrap().record(total);
+        let _ = req.reply.send(AttnResponse {
+            id: req.id,
+            out: rows,
+            queue_time: queue_times[slot],
+            total_time: total,
+            batch_occupancy: occupancy,
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::{kernel_for, run_batch_seq, Variant};
+    use crate::prng::Xoshiro256;
+
+    const SHAPE: AttnShape =
+        AttnShape { heads: 2, seq_len: 32, dk: 8, dv: 8 };
+
+    fn variant() -> Variant {
+        Variant::Clustered { clusters: 4, bits: 31, iters: 5 }
+    }
+
+    fn request_tensors(n_req: usize, seed: u64)
+                       -> (BatchMatrix, BatchMatrix, BatchMatrix) {
+        let mut rng = Xoshiro256::new(seed);
+        let q = BatchMatrix::randn(n_req, SHAPE.heads, SHAPE.seq_len,
+                                   SHAPE.dk, &mut rng);
+        let k = BatchMatrix::randn(n_req, SHAPE.heads, SHAPE.seq_len,
+                                   SHAPE.dk, &mut rng);
+        let v = BatchMatrix::randn(n_req, SHAPE.heads, SHAPE.seq_len,
+                                   SHAPE.dv, &mut rng);
+        (q, k, v)
+    }
+
+    /// (H, N, D) block of request `r` from a (R, H, N, D) tensor.
+    fn req_block(t: &BatchMatrix, r: usize) -> Vec<f32> {
+        let per = t.heads * t.rows * t.cols;
+        t.data[r * per..(r + 1) * per].to_vec()
+    }
+
+    #[test]
+    fn native_engine_matches_sequential_run_batch_bit_for_bit() {
+        let (q, k, v) = request_tensors(2, 31);
+        let engine = NativeAttentionEngine::start(
+            kernel_for(&variant()),
+            SHAPE,
+            NativeAttnOptions {
+                policy: BatchPolicy {
+                    max_batch: 2,
+                    // generous deadline: the batch must form on the size
+                    // trigger even if CI stalls between the two submits
+                    max_wait: Duration::from_secs(10),
+                },
+                queue_capacity: 8,
+                workers: 4,
+                seed: 17,
+            },
+        );
+        let rx0 = engine
+            .submit_blocking(req_block(&q, 0), req_block(&k, 0),
+                             req_block(&v, 0))
+            .unwrap();
+        let rx1 = engine
+            .submit_blocking(req_block(&q, 1), req_block(&k, 1),
+                             req_block(&v, 1))
+            .unwrap();
+        let r0 = rx0.recv_timeout(Duration::from_secs(30)).unwrap();
+        let r1 = rx1.recv_timeout(Duration::from_secs(30)).unwrap();
+        assert_eq!(r0.batch_occupancy, 2, "requests were not co-batched");
+
+        // reference: the explicit sequential loop over the same batch
+        let want = run_batch_seq(kernel_for(&variant()).as_ref(), &q, &k,
+                                 &v, 17);
+        let per = SHAPE.v_len();
+        assert_eq!(r0.out.len(), per);
+        let same = |got: &[f32], want: &[f32]| {
+            got.iter().zip(want)
+                .all(|(a, b)| a.to_bits() == b.to_bits())
+        };
+        assert!(same(&r0.out, &want.data[..per]));
+        assert!(same(&r1.out, &want.data[per..2 * per]));
+
+        assert_eq!(engine.metrics.completed.load(Ordering::Relaxed), 2);
+        assert!((engine.metrics.occupancy() - 2.0).abs() < 1e-9);
+        engine.shutdown();
+    }
+
+    #[test]
+    fn native_engine_rejects_malformed_shapes() {
+        let engine = NativeAttentionEngine::start(
+            kernel_for(&variant()), SHAPE, NativeAttnOptions::default());
+        let err = engine
+            .submit(vec![0.0; 3], vec![0.0; SHAPE.qk_len()],
+                    vec![0.0; SHAPE.v_len()])
+            .err()
+            .expect("short q must be rejected");
+        assert!(format!("{err}").contains("shape mismatch"));
+        assert_eq!(engine.shape(), SHAPE);
+        engine.shutdown();
+    }
+}
+

@@ -9,6 +9,10 @@ use std::collections::VecDeque;
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
+pub mod pool;
+
+pub use pool::WorkerPool;
+
 /// Bounded multi-producer multi-consumer channel.
 pub struct Channel<T> {
     inner: Arc<ChannelInner<T>>,

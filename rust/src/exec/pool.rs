@@ -1,0 +1,191 @@
+//! Scoped data-parallel worker pool for the batched attention engine.
+//!
+//! Std-only (`std::thread::scope`), no queues or long-lived threads: a
+//! [`WorkerPool`] is just a worker-count policy, and each `map_indexed`
+//! call spawns scoped workers that claim slice indices from an atomic
+//! counter.  Results are gathered per worker and scattered back in index
+//! order, so the output `Vec` is **independent of thread scheduling** —
+//! combined with per-slice PRNG streams (`prng::slice_stream`) this makes
+//! parallel kernel output bit-identical to a sequential loop.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Worker-count policy for scoped data-parallel maps.
+#[derive(Debug, Clone, Copy)]
+pub struct WorkerPool {
+    workers: usize,
+}
+
+impl WorkerPool {
+    /// Pool with an explicit worker count (clamped to >= 1).
+    pub fn new(workers: usize) -> Self {
+        Self { workers: workers.max(1) }
+    }
+
+    /// One worker: runs inline on the caller thread.
+    pub fn sequential() -> Self {
+        Self { workers: 1 }
+    }
+
+    /// One worker per available hardware thread.
+    pub fn auto() -> Self {
+        Self::new(
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(4),
+        )
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Compute `f(i)` for `i in 0..n` and return results in index order.
+    ///
+    /// Work is claimed dynamically (atomic counter), results are written
+    /// back by index, so the output is deterministic regardless of how
+    /// the scheduler interleaves workers.
+    pub fn map_indexed<R, F>(&self, n: usize, f: F) -> Vec<R>
+    where
+        R: Send,
+        F: Fn(usize) -> R + Sync,
+    {
+        if self.workers == 1 || n <= 1 {
+            return (0..n).map(f).collect();
+        }
+        let workers = self.workers.min(n);
+        let next = AtomicUsize::new(0);
+        let mut out: Vec<Option<R>> = Vec::with_capacity(n);
+        out.resize_with(n, || None);
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..workers)
+                .map(|_| {
+                    scope.spawn(|| {
+                        let mut local: Vec<(usize, R)> = Vec::new();
+                        loop {
+                            let i = next.fetch_add(1, Ordering::Relaxed);
+                            if i >= n {
+                                break;
+                            }
+                            local.push((i, f(i)));
+                        }
+                        local
+                    })
+                })
+                .collect();
+            for h in handles {
+                for (i, r) in h.join().expect("pool worker panicked") {
+                    out[i] = Some(r);
+                }
+            }
+        });
+        out.into_iter()
+            .map(|r| r.expect("pool missed an index"))
+            .collect()
+    }
+
+    /// Zip `f(i, chunk_i)` over pre-split disjoint mutable chunks (e.g.
+    /// `BatchMatrix::slices_mut`), claiming indices dynamically.
+    pub fn for_each_mut<T, F>(&self, chunks: Vec<&mut T>, f: F)
+    where
+        T: Send + ?Sized,
+        F: Fn(usize, &mut T) + Sync,
+    {
+        if self.workers == 1 || chunks.len() <= 1 {
+            for (i, c) in chunks.into_iter().enumerate() {
+                f(i, c);
+            }
+            return;
+        }
+        let n = chunks.len();
+        let workers = self.workers.min(n);
+        let next = AtomicUsize::new(0);
+        // hand each chunk its own cell so workers can claim arbitrary
+        // indices without aliasing
+        let cells: Vec<std::sync::Mutex<Option<&mut T>>> = chunks
+            .into_iter()
+            .map(|c| std::sync::Mutex::new(Some(c)))
+            .collect();
+        std::thread::scope(|scope| {
+            for _ in 0..workers {
+                scope.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let chunk = cells[i]
+                        .lock()
+                        .unwrap()
+                        .take()
+                        .expect("chunk claimed twice");
+                    f(i, chunk);
+                });
+            }
+        });
+    }
+}
+
+impl Default for WorkerPool {
+    fn default() -> Self {
+        Self::auto()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn map_indexed_returns_results_in_index_order() {
+        let pool = WorkerPool::new(4);
+        let got = pool.map_indexed(100, |i| i * i);
+        let want: Vec<usize> = (0..100).map(|i| i * i).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn map_indexed_matches_sequential_for_any_worker_count() {
+        for w in [1, 2, 3, 8, 64] {
+            let got = WorkerPool::new(w).map_indexed(17, |i| 3 * i + 1);
+            let want = WorkerPool::sequential().map_indexed(17, |i| 3 * i + 1);
+            assert_eq!(got, want, "workers={w}");
+        }
+    }
+
+    #[test]
+    fn map_indexed_runs_each_index_exactly_once() {
+        let hits: Vec<AtomicUsize> =
+            (0..37).map(|_| AtomicUsize::new(0)).collect();
+        WorkerPool::new(5).map_indexed(37, |i| {
+            hits[i].fetch_add(1, Ordering::SeqCst);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+    }
+
+    #[test]
+    fn map_indexed_empty_and_single() {
+        let pool = WorkerPool::new(8);
+        assert_eq!(pool.map_indexed(0, |i| i), Vec::<usize>::new());
+        assert_eq!(pool.map_indexed(1, |i| i + 10), vec![10]);
+    }
+
+    #[test]
+    fn for_each_mut_writes_every_chunk() {
+        let mut data = vec![0f32; 6 * 4];
+        let chunks: Vec<&mut [f32]> = data.chunks_mut(4).collect();
+        WorkerPool::new(3).for_each_mut(chunks, |i, c| {
+            c.fill(i as f32);
+        });
+        for s in 0..6 {
+            assert!(data[s * 4..(s + 1) * 4].iter()
+                    .all(|&x| x == s as f32));
+        }
+    }
+
+    #[test]
+    fn pool_clamps_workers() {
+        assert_eq!(WorkerPool::new(0).workers(), 1);
+        assert!(WorkerPool::auto().workers() >= 1);
+    }
+}

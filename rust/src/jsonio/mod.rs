@@ -112,12 +112,19 @@ pub fn obj(pairs: Vec<(&str, Value)>) -> Value {
 // ---------------------------------------------------------------------------
 
 /// Parse error with byte offset for diagnostics.
-#[derive(Debug, thiserror::Error)]
-#[error("json parse error at byte {at}: {msg}")]
+#[derive(Debug)]
 pub struct ParseError {
     pub at: usize,
     pub msg: String,
 }
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "json parse error at byte {}: {}", self.at, self.msg)
+    }
+}
+
+impl std::error::Error for ParseError {}
 
 struct Parser<'a> {
     b: &'a [u8],

@@ -13,8 +13,33 @@
 //!   plus every substrate the experiments need (clustering, reference
 //!   attention, synthetic corpora, PRNG, JSON, bench harness).
 //!
+//! ## The batched multi-head attention engine
+//!
+//! The Rust reference attention is a **trait-based, batched, multi-head
+//! engine** (see `docs/ARCHITECTURE.md` for the full design):
+//!
+//! - [`attention::AttentionKernel`] — one algorithm (full, clustered,
+//!   improved-clustered, oracle-top, LSH), one file per family under
+//!   `attention/`, resolvable by paper-notation name through the
+//!   name-keyed [`attention::REGISTRY`] (e.g. `"i-clustered-100"`).
+//! - [`tensor::batch::BatchMatrix`] — a (B, H, N, D) tensor stored as
+//!   B·H stacked row-major slices with zero-copy per-slice views; slice
+//!   `s = b·H + h` is the unit of parallelism.
+//! - [`exec::pool::WorkerPool`] — a scoped, std-only worker pool that
+//!   maps kernels over (batch × head) slices.  Each slice draws
+//!   randomness only from [`prng::slice_stream`]`(seed, s)`, so parallel
+//!   output is **bit-identical** to the sequential loop
+//!   ([`attention::run_batch_seq`]) — property-tested in
+//!   `proptest/attention_props.rs`.
+//! - [`coordinator::NativeAttentionEngine`] — the serving path for the
+//!   native kernels: ingress queue → deadline batcher → one batched
+//!   `run_batch` per flush over the pool, with the same backpressure and
+//!   metrics as the compiled-HLO [`coordinator::InferenceEngine`].
+//!
 //! Python never runs on the request path: after `make artifacts` the Rust
-//! binary is self-contained.
+//! binary is self-contained.  Offline builds resolve `anyhow`/`log`/`xla`
+//! to the std-only shims under `vendor/`; swapping `vendor/xla` for the
+//! real xla_extension bindings re-enables PJRT execution unchanged.
 //!
 //! See `DESIGN.md` for the system inventory and experiment index and
 //! `EXPERIMENTS.md` for paper-vs-measured results.

@@ -230,7 +230,10 @@ fn cmd_bench_attn(rest: &[String]) -> Result<()> {
         .opt("n", Some("2048"), "sequence length")
         .opt("dk", Some("64"), "head dim")
         .opt("clusters", Some("100"), "C")
-        .opt("topk", Some("32"), "k");
+        .opt("topk", Some("32"), "k")
+        .opt("variant", None,
+             "bench a single kernel by registry name (e.g. \
+              i-clustered-64); default: the paper's comparison set");
     let args = cmd.parse(rest)?;
     let n = args.get_usize("n", 2048)?;
     let dk = args.get_usize("dk", 64)?;
@@ -244,14 +247,21 @@ fn cmd_bench_attn(rest: &[String]) -> Result<()> {
         &format!("native attention, N={n} Dk={dk}"),
         &["variant", "mean", "speedup vs full"],
     );
-    let variants = vec![
-        attention::Variant::Full,
-        attention::Variant::Clustered { clusters: c, bits: 63, iters: 10 },
-        attention::Variant::ImprovedClustered {
-            clusters: c, bits: 63, iters: 10, topk: k },
-        attention::Variant::Lsh { rounds: 1, chunk: 32 },
-        attention::Variant::Lsh { rounds: 4, chunk: 32 },
-    ];
+    let variants = match args.get("variant") {
+        // name-keyed registry path: resolve paper notation directly
+        Some(name) => vec![attention::Variant::parse(name).ok_or_else(
+            || anyhow!("unknown kernel {name:?}; registered families: {}",
+                       attention::kernel_families().join(", ")))?],
+        None => vec![
+            attention::Variant::Full,
+            attention::Variant::Clustered { clusters: c, bits: 63,
+                                            iters: 10 },
+            attention::Variant::ImprovedClustered {
+                clusters: c, bits: 63, iters: 10, topk: k },
+            attention::Variant::Lsh { rounds: 1, chunk: 32 },
+            attention::Variant::Lsh { rounds: 4, chunk: 32 },
+        ],
+    };
     let mut full_time = None;
     for var in &variants {
         let mut rng2 = prng::Xoshiro256::new(1);

@@ -5,6 +5,17 @@
 //! synthetic dataset in `data/` derives from an explicit seed so that
 //! experiments are exactly reproducible.
 
+/// Independent per-slice stream for batched (batch × head) kernels.
+///
+/// **Determinism contract:** slice `s` of a batched operation draws from
+/// `slice_stream(seed, s)` and nothing else, so the result of a batched
+/// run is a pure function of `(seed, slice index)` — independent of how
+/// many pool workers ran it or in which order slices were claimed.
+/// Sequential and parallel schedules are therefore bit-identical.
+pub fn slice_stream(seed: u64, slice: u64) -> Xoshiro256 {
+    Xoshiro256::new(seed).fold_in(slice)
+}
+
 /// SplitMix64 — tiny, used for seeding and for hash-style key folding.
 #[derive(Debug, Clone)]
 pub struct SplitMix64 {

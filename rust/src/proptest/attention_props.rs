@@ -1,0 +1,111 @@
+//! Properties of the batched multi-head attention engine:
+//!
+//!  1. **Determinism contract** — `run_batch` over any pool size is
+//!     bit-for-bit identical to the sequential per-slice loop
+//!     (`run_batch_seq`) for every registered kernel family.
+//!  2. **Row-stochasticity** — clustered attention matrices (plain and
+//!     improved) stay probability distributions row-wise.
+
+use crate::attention::{clustered_attention_matrix,
+                       improved_clustered_attention_matrix, kernel_for,
+                       run_batch_seq, Variant};
+use crate::clustering::{cluster_queries, Clustering};
+use crate::exec::WorkerPool;
+use crate::proptest::forall;
+use crate::tensor::batch::BatchMatrix;
+use crate::tensor::Matrix;
+
+/// Small-hyperparameter instances of every kernel family (LSH chunk 16
+/// divides the generated Ns).
+fn all_variants() -> Vec<Variant> {
+    vec![
+        Variant::Full,
+        Variant::SharedFull,
+        Variant::Clustered { clusters: 4, bits: 31, iters: 5 },
+        Variant::ImprovedClustered { clusters: 4, bits: 31, iters: 5,
+                                     topk: 8 },
+        Variant::OracleTop { topk: 8 },
+        Variant::Lsh { rounds: 2, chunk: 16 },
+    ]
+}
+
+#[test]
+fn prop_run_batch_is_bit_identical_to_sequential_loop() {
+    forall(
+        "run_batch ≡ per-slice run, all variants",
+        0xBA7C11ED,
+        6,
+        |rng| {
+            let b = 1 + rng.below(2); // 1..=2
+            let h = 1 + rng.below(3); // 1..=3
+            let n = 32 * (1 + rng.below(2)); // 32 | 64
+            let d = 8 * (1 + rng.below(2)); // 8 | 16
+            let q = BatchMatrix::randn(b, h, n, d, rng);
+            let k = BatchMatrix::randn(b, h, n, d, rng);
+            let v = BatchMatrix::randn(b, h, n, d, rng);
+            let workers = 2 + rng.below(4); // 2..=5
+            let seed = rng.next_u64();
+            (q, k, v, workers, seed)
+        },
+        |(q, k, v, workers, seed)| {
+            let pool = WorkerPool::new(*workers);
+            for var in all_variants() {
+                let kernel = kernel_for(&var);
+                let par = kernel.run_batch(q, k, v, *seed, &pool);
+                let seq = run_batch_seq(kernel.as_ref(), q, k, v, *seed);
+                if !par.bit_identical(&seq) {
+                    return Err(format!(
+                        "{} diverged from sequential (B={} H={} N={} \
+                         workers={workers})",
+                        var.name(), q.batch, q.heads, q.rows));
+                }
+                if (par.batch, par.heads, par.rows, par.cols)
+                    != (q.batch, q.heads, q.rows, v.cols)
+                {
+                    return Err(format!("{} bad output shape", var.name()));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_clustered_attention_rows_are_row_stochastic() {
+    forall(
+        "clustered attention rows sum to 1",
+        0xC1D5,
+        12,
+        |rng| {
+            let n = 24 + rng.below(25); // 24..=48
+            let q = Matrix::randn(n, 8, rng);
+            let k = Matrix::randn(n, 8, rng);
+            let clusters = 2 + rng.below(5); // 2..=6
+            let cl = cluster_queries(&q, clusters, 31, 5, rng);
+            (q, k, cl)
+        },
+        |(q, k, cl): &(Matrix, Matrix, Clustering)| {
+            let a_c = clustered_attention_matrix(q, k, cl);
+            for r in 0..a_c.rows {
+                let s: f32 = a_c.row(r).iter().sum();
+                if (s - 1.0).abs() >= 1e-5 {
+                    return Err(format!("A^c row {r} sums to {s}"));
+                }
+                if a_c.row(r).iter().any(|&w| w < 0.0) {
+                    return Err(format!("A^c row {r} has negative mass"));
+                }
+            }
+            let a_t = improved_clustered_attention_matrix(q, k, cl, 8);
+            for r in 0..a_t.rows {
+                let s: f32 = a_t.row(r).iter().sum();
+                if (s - 1.0).abs() >= 1e-4 {
+                    return Err(format!("A^t row {r} sums to {s}"));
+                }
+                if a_t.row(r).iter().any(|&w| w < -1e-6) {
+                    return Err(format!("A^t row {r} has negative mass"));
+                }
+            }
+            Ok(())
+        },
+    );
+}

@@ -5,6 +5,9 @@
 
 use crate::prng::Xoshiro256;
 
+#[cfg(test)]
+mod attention_props;
+
 /// Run `cases` random checks.  `gen` builds an input from an RNG;
 /// `check` returns an error message on violation.
 pub fn forall<T: std::fmt::Debug, G, C>(name: &str, seed: u64, cases: usize,

@@ -1,0 +1,262 @@
+//! Batched (B, H, N, D) tensor layer for the multi-head attention engine.
+//!
+//! A [`BatchMatrix`] stacks `B·H` row-major `(N × D)` slices contiguously
+//! — slice `s = b·H + h` holds head `h` of sequence `b`.  Kernels take
+//! owned per-slice [`Matrix`] copies today ([`BatchMatrix::slice_matrix`];
+//! the single-slice kernel API predates the batch layer), while outputs
+//! are written zero-copy into disjoint chunks from
+//! [`BatchMatrix::slices_mut`].  [`MatrixView`] is the read-side seam for
+//! a future kernel API that borrows slices instead of copying them.
+//!
+//! The flat layout is what the exec pool parallelizes over: slices are
+//! independent, so (batch × head) is an embarrassingly parallel axis, and
+//! the per-slice PRNG stream contract (`prng::slice_stream`) keeps the
+//! parallel schedule bit-identical to the sequential one.
+
+use crate::prng::Xoshiro256;
+use crate::tensor::Matrix;
+
+/// Dense (B, H, N, D) tensor, stored as B·H stacked row-major matrices.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BatchMatrix {
+    /// Batch size B.
+    pub batch: usize,
+    /// Heads per sequence H.
+    pub heads: usize,
+    /// Rows per slice N (sequence length).
+    pub rows: usize,
+    /// Columns per slice D (head dimension).
+    pub cols: usize,
+    /// Contiguous storage, `batch * heads * rows * cols` elements.
+    pub data: Vec<f32>,
+}
+
+impl BatchMatrix {
+    pub fn zeros(batch: usize, heads: usize, rows: usize, cols: usize)
+                 -> Self {
+        Self {
+            batch,
+            heads,
+            rows,
+            cols,
+            data: vec![0.0; batch * heads * rows * cols],
+        }
+    }
+
+    pub fn randn(batch: usize, heads: usize, rows: usize, cols: usize,
+                 rng: &mut Xoshiro256) -> Self {
+        Self {
+            batch,
+            heads,
+            rows,
+            cols,
+            data: rng.normal_vec(batch * heads * rows * cols),
+        }
+    }
+
+    pub fn from_vec(batch: usize, heads: usize, rows: usize, cols: usize,
+                    data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), batch * heads * rows * cols,
+                   "shape mismatch");
+        Self { batch, heads, rows, cols, data }
+    }
+
+    /// Stack owned per-slice matrices (all must share one shape).
+    pub fn from_slices(batch: usize, heads: usize, slices: Vec<Matrix>)
+                       -> Self {
+        assert_eq!(slices.len(), batch * heads, "slice count mismatch");
+        let Some(first) = slices.first() else {
+            return Self { batch, heads, rows: 0, cols: 0,
+                          data: Vec::new() };
+        };
+        let (rows, cols) = (first.rows, first.cols);
+        let mut data = Vec::with_capacity(batch * heads * rows * cols);
+        for m in &slices {
+            assert_eq!((m.rows, m.cols), (rows, cols),
+                       "ragged slices in BatchMatrix::from_slices");
+            data.extend_from_slice(&m.data);
+        }
+        Self { batch, heads, rows, cols, data }
+    }
+
+    /// Number of independent (batch × head) slices.
+    #[inline]
+    pub fn slices(&self) -> usize {
+        self.batch * self.heads
+    }
+
+    /// Elements per slice.
+    #[inline]
+    pub fn slice_len(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    /// Flat slice index for (sequence `b`, head `h`).
+    #[inline]
+    pub fn slice_index(&self, b: usize, h: usize) -> usize {
+        debug_assert!(b < self.batch && h < self.heads);
+        b * self.heads + h
+    }
+
+    /// Zero-copy read view of slice `s`.
+    #[inline]
+    pub fn view(&self, s: usize) -> MatrixView<'_> {
+        let len = self.slice_len();
+        MatrixView {
+            rows: self.rows,
+            cols: self.cols,
+            data: &self.data[s * len..(s + 1) * len],
+        }
+    }
+
+    /// Owned copy of slice `s` (for kernels that need a `Matrix`).
+    pub fn slice_matrix(&self, s: usize) -> Matrix {
+        let len = self.slice_len();
+        Matrix {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data[s * len..(s + 1) * len].to_vec(),
+        }
+    }
+
+    /// Mutable flat storage of slice `s`.
+    #[inline]
+    pub fn slice_mut(&mut self, s: usize) -> &mut [f32] {
+        let len = self.slice_len();
+        &mut self.data[s * len..(s + 1) * len]
+    }
+
+    /// Overwrite slice `s` from a same-shape matrix.
+    pub fn set_slice(&mut self, s: usize, m: &Matrix) {
+        assert_eq!((m.rows, m.cols), (self.rows, self.cols),
+                   "set_slice shape mismatch");
+        self.slice_mut(s).copy_from_slice(&m.data);
+    }
+
+    /// Split the storage into per-slice mutable chunks, slice order.
+    /// This is how parallel writers get disjoint `&mut` access.
+    pub fn slices_mut(&mut self) -> Vec<&mut [f32]> {
+        let len = self.slice_len();
+        if len == 0 {
+            return Vec::new();
+        }
+        self.data.chunks_mut(len).collect()
+    }
+
+    pub fn max_abs_diff(&self, other: &BatchMatrix) -> f32 {
+        assert_eq!(
+            (self.batch, self.heads, self.rows, self.cols),
+            (other.batch, other.heads, other.rows, other.cols)
+        );
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// Exact bitwise equality (the determinism contract's check).
+    pub fn bit_identical(&self, other: &BatchMatrix) -> bool {
+        self.batch == other.batch
+            && self.heads == other.heads
+            && self.rows == other.rows
+            && self.cols == other.cols
+            && self
+                .data
+                .iter()
+                .zip(&other.data)
+                .all(|(a, b)| a.to_bits() == b.to_bits())
+    }
+}
+
+/// Borrowed row-major (N × D) view into one slice of a [`BatchMatrix`].
+#[derive(Debug, Clone, Copy)]
+pub struct MatrixView<'a> {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: &'a [f32],
+}
+
+impl<'a> MatrixView<'a> {
+    #[inline]
+    pub fn row(&self, r: usize) -> &'a [f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.cols + c]
+    }
+
+    /// Owned copy.
+    pub fn to_matrix(&self) -> Matrix {
+        Matrix {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.to_vec(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layout_is_b_major_then_h() {
+        let mut bm = BatchMatrix::zeros(2, 3, 4, 5);
+        assert_eq!(bm.slices(), 6);
+        assert_eq!(bm.slice_len(), 20);
+        assert_eq!(bm.slice_index(1, 2), 5);
+        bm.slice_mut(5)[0] = 9.0;
+        assert_eq!(bm.data[5 * 20], 9.0);
+        assert_eq!(bm.view(5).at(0, 0), 9.0);
+    }
+
+    #[test]
+    fn from_slices_roundtrips_through_slice_matrix() {
+        let mut rng = Xoshiro256::new(1);
+        let ms: Vec<Matrix> =
+            (0..6).map(|_| Matrix::randn(3, 4, &mut rng)).collect();
+        let bm = BatchMatrix::from_slices(2, 3, ms.clone());
+        for (s, m) in ms.iter().enumerate() {
+            assert_eq!(&bm.slice_matrix(s), m);
+            assert_eq!(bm.view(s).to_matrix(), *m);
+        }
+    }
+
+    #[test]
+    fn slices_mut_are_disjoint_and_cover() {
+        let mut bm = BatchMatrix::zeros(2, 2, 2, 2);
+        {
+            let chunks = bm.slices_mut();
+            assert_eq!(chunks.len(), 4);
+            for (i, c) in chunks.into_iter().enumerate() {
+                c.fill(i as f32);
+            }
+        }
+        for s in 0..4 {
+            assert!(bm.view(s).data.iter().all(|&x| x == s as f32));
+        }
+    }
+
+    #[test]
+    fn view_rows_match_matrix_rows() {
+        let mut rng = Xoshiro256::new(2);
+        let bm = BatchMatrix::randn(1, 2, 5, 3, &mut rng);
+        let m = bm.slice_matrix(1);
+        for r in 0..5 {
+            assert_eq!(bm.view(1).row(r), m.row(r));
+        }
+    }
+
+    #[test]
+    fn bit_identical_detects_any_difference() {
+        let mut rng = Xoshiro256::new(3);
+        let a = BatchMatrix::randn(1, 1, 2, 2, &mut rng);
+        let mut b = a.clone();
+        assert!(a.bit_identical(&b));
+        b.data[3] += 1e-7;
+        assert!(!a.bit_identical(&b));
+    }
+}

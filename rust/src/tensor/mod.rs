@@ -1,8 +1,14 @@
 //! Row-major f32 matrix substrate for the Rust reference attention and the
 //! benchmark harness.  Deliberately minimal: contiguous `Vec<f32>`, blocked
 //! matmul, row softmax, top-k, argsort — everything `attention/` needs.
+//! The [`batch`] submodule adds the (B, H, N, D) stacked layout the
+//! batched multi-head engine runs over.
 
 use crate::prng::Xoshiro256;
+
+pub mod batch;
+
+pub use batch::{BatchMatrix, MatrixView};
 
 /// Dense row-major matrix.
 #[derive(Debug, Clone, PartialEq)]

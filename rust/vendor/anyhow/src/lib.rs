@@ -1,0 +1,158 @@
+//! Std-only shim of `anyhow` (the registry is unreachable offline).
+//!
+//! Implements exactly the subset the crate uses: [`Error`] with a context
+//! chain, [`Result`], the [`anyhow!`]/[`bail!`]/[`ensure!`] macros and the
+//! [`Context`] extension trait.  `{:#}` formatting renders the full
+//! outermost-first chain like the real crate.
+
+use std::fmt;
+
+/// `Result<T, anyhow::Error>`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Dynamic error: a chain of messages, outermost context first.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    pub fn msg<M: fmt::Display>(msg: M) -> Self {
+        Self { chain: vec![msg.to_string()] }
+    }
+
+    /// Prepend a context message (what `.context()` does).
+    pub fn context<C: fmt::Display>(mut self, ctx: C) -> Self {
+        self.chain.insert(0, ctx.to_string());
+        self
+    }
+
+    /// The outermost message.
+    pub fn to_string_outer(&self) -> &str {
+        self.chain.first().map(String::as_str).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}` — the full chain, outermost first
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.to_string_outer())
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.join(": "))
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Self { chain }
+    }
+}
+
+/// Extension trait adding `.context()` / `.with_context()` to results.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F)
+                                                       -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| e.into().context(ctx))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F)
+                                                       -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F)
+                                                       -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Build an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails_io() -> Result<()> {
+        let e = std::fs::read_to_string("/nonexistent/x");
+        let _ = e.context("reading config")?;
+        Ok(())
+    }
+
+    #[test]
+    fn context_chain_formats_outermost_first() {
+        let err = fails_io().unwrap_err();
+        let full = format!("{err:#}");
+        assert!(full.starts_with("reading config: "), "{full}");
+        let outer = format!("{err}");
+        assert_eq!(outer, "reading config");
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        let e: Error = anyhow!("bad {}", 7);
+        assert_eq!(format!("{e}"), "bad 7");
+        fn f(x: i32) -> Result<i32> {
+            ensure!(x > 0, "x must be positive, got {x}");
+            if x > 10 {
+                bail!("too big");
+            }
+            Ok(x)
+        }
+        assert!(f(-1).is_err());
+        assert!(f(11).is_err());
+        assert_eq!(f(5).unwrap(), 5);
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<i32> = None;
+        assert!(v.context("missing").is_err());
+        assert_eq!(Some(3).with_context(|| "x").unwrap(), 3);
+    }
+}

@@ -1,0 +1,215 @@
+//! Std-only shim of the `log` facade (the registry is unreachable
+//! offline).  Same shape as the real crate for the subset the repo uses:
+//! the [`Log`] trait, a global logger + max level, and the five leveled
+//! macros.
+
+use std::fmt;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+/// Verbosity of one message.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 1,
+    Warn,
+    Info,
+    Debug,
+    Trace,
+}
+
+impl fmt::Display for Level {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN",
+            Level::Info => "INFO",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        };
+        f.pad(s)
+    }
+}
+
+/// Global verbosity ceiling.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum LevelFilter {
+    Off = 0,
+    Error,
+    Warn,
+    Info,
+    Debug,
+    Trace,
+}
+
+impl PartialEq<LevelFilter> for Level {
+    fn eq(&self, other: &LevelFilter) -> bool {
+        *self as usize == *other as usize
+    }
+}
+
+impl PartialOrd<LevelFilter> for Level {
+    fn partial_cmp(&self, other: &LevelFilter) -> Option<std::cmp::Ordering> {
+        (*self as usize).partial_cmp(&(*other as usize))
+    }
+}
+
+/// Metadata of one log record.
+pub struct Metadata<'a> {
+    level: Level,
+    target: &'a str,
+}
+
+impl<'a> Metadata<'a> {
+    pub fn level(&self) -> Level {
+        self.level
+    }
+    pub fn target(&self) -> &'a str {
+        self.target
+    }
+}
+
+/// One log message.
+pub struct Record<'a> {
+    metadata: Metadata<'a>,
+    args: fmt::Arguments<'a>,
+}
+
+impl<'a> Record<'a> {
+    pub fn level(&self) -> Level {
+        self.metadata.level
+    }
+    pub fn target(&self) -> &'a str {
+        self.metadata.target
+    }
+    pub fn args(&self) -> &fmt::Arguments<'a> {
+        &self.args
+    }
+    pub fn metadata(&self) -> &Metadata<'a> {
+        &self.metadata
+    }
+}
+
+/// Logging backend.
+pub trait Log: Sync + Send {
+    fn enabled(&self, metadata: &Metadata) -> bool;
+    fn log(&self, record: &Record);
+    fn flush(&self);
+}
+
+static LOGGER: OnceLock<&'static dyn Log> = OnceLock::new();
+static MAX_LEVEL: AtomicUsize = AtomicUsize::new(0); // Off
+
+/// Returned when a logger was already installed.
+#[derive(Debug)]
+pub struct SetLoggerError(());
+
+impl fmt::Display for SetLoggerError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "a logger is already installed")
+    }
+}
+
+impl std::error::Error for SetLoggerError {}
+
+/// Install the global logger (first call wins).
+pub fn set_logger(logger: &'static dyn Log) -> Result<(), SetLoggerError> {
+    LOGGER.set(logger).map_err(|_| SetLoggerError(()))
+}
+
+pub fn set_max_level(filter: LevelFilter) {
+    MAX_LEVEL.store(filter as usize, Ordering::Relaxed);
+}
+
+pub fn max_level() -> LevelFilter {
+    match MAX_LEVEL.load(Ordering::Relaxed) {
+        0 => LevelFilter::Off,
+        1 => LevelFilter::Error,
+        2 => LevelFilter::Warn,
+        3 => LevelFilter::Info,
+        4 => LevelFilter::Debug,
+        _ => LevelFilter::Trace,
+    }
+}
+
+/// Macro plumbing — dispatch one record to the installed logger.
+#[doc(hidden)]
+pub fn __log(level: Level, target: &str, args: fmt::Arguments) {
+    if level > max_level() {
+        return;
+    }
+    if let Some(logger) = LOGGER.get() {
+        let record = Record { metadata: Metadata { level, target }, args };
+        if logger.enabled(&record.metadata) {
+            logger.log(&record);
+        }
+    }
+}
+
+#[macro_export]
+macro_rules! log {
+    ($lvl:expr, $($arg:tt)+) => {
+        $crate::__log($lvl, module_path!(), format_args!($($arg)+))
+    };
+}
+
+#[macro_export]
+macro_rules! error {
+    ($($arg:tt)+) => { $crate::log!($crate::Level::Error, $($arg)+) };
+}
+
+#[macro_export]
+macro_rules! warn {
+    ($($arg:tt)+) => { $crate::log!($crate::Level::Warn, $($arg)+) };
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)+) => { $crate::log!($crate::Level::Info, $($arg)+) };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)+) => { $crate::log!($crate::Level::Debug, $($arg)+) };
+}
+
+#[macro_export]
+macro_rules! trace {
+    ($($arg:tt)+) => { $crate::log!($crate::Level::Trace, $($arg)+) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    static HITS: AtomicUsize = AtomicUsize::new(0);
+
+    struct Counter;
+    impl Log for Counter {
+        fn enabled(&self, m: &Metadata) -> bool {
+            m.level() <= max_level()
+        }
+        fn log(&self, _r: &Record) {
+            HITS.fetch_add(1, Ordering::SeqCst);
+        }
+        fn flush(&self) {}
+    }
+
+    #[test]
+    fn levels_compare_against_filters() {
+        assert!(Level::Error <= LevelFilter::Info);
+        assert!(Level::Debug > LevelFilter::Info);
+        assert!(Level::Info <= LevelFilter::Info);
+    }
+
+    #[test]
+    fn macros_respect_max_level() {
+        static COUNTER: Counter = Counter;
+        let _ = set_logger(&COUNTER);
+        set_max_level(LevelFilter::Info);
+        let before = HITS.load(Ordering::SeqCst);
+        info!("hello {}", 1);
+        debug!("filtered {}", 2);
+        assert_eq!(HITS.load(Ordering::SeqCst), before + 1);
+    }
+}

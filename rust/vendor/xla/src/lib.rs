@@ -1,0 +1,275 @@
+//! Offline shim of the `xla` (xla-rs / xla_extension) API subset that
+//! `runtime/` consumes.
+//!
+//! The host-side [`Literal`] type is fully functional (typed storage,
+//! reshape, tuple unpacking) so literal-preparation code paths and their
+//! tests run without the native library.  The PJRT device side
+//! ([`PjRtClient`], [`PjRtLoadedExecutable`]) returns a clear
+//! "unavailable" error — swapping this vendored crate for the real
+//! xla_extension bindings re-enables compiled execution with no source
+//! changes elsewhere.
+
+use std::fmt;
+use std::path::Path;
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Error type mirroring xla-rs (string-backed here).
+#[derive(Debug, Clone)]
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn new<M: Into<String>>(msg: M) -> Self {
+        Self { msg: msg.into() }
+    }
+
+    fn unavailable() -> Self {
+        Self::new(
+            "PJRT backend unavailable: this build uses the offline stub \
+             `vendor/xla` crate; swap it for the real xla_extension \
+             bindings to execute compiled HLO",
+        )
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// XLA element types (subset + a few extras for error paths).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    Pred,
+    S32,
+    S64,
+    F32,
+    F64,
+    Bf16,
+}
+
+#[doc(hidden)]
+#[derive(Debug, Clone, PartialEq)]
+pub enum Storage {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    Tuple(Vec<Literal>),
+}
+
+/// Host types that map onto XLA element types.
+pub trait NativeType: Copy + 'static {
+    fn element_type() -> ElementType;
+    #[doc(hidden)]
+    fn wrap(v: Vec<Self>) -> Storage;
+    #[doc(hidden)]
+    fn unwrap(s: &Storage) -> Option<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    fn element_type() -> ElementType {
+        ElementType::F32
+    }
+    fn wrap(v: Vec<Self>) -> Storage {
+        Storage::F32(v)
+    }
+    fn unwrap(s: &Storage) -> Option<Vec<Self>> {
+        match s {
+            Storage::F32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn element_type() -> ElementType {
+        ElementType::S32
+    }
+    fn wrap(v: Vec<Self>) -> Storage {
+        Storage::I32(v)
+    }
+    fn unwrap(s: &Storage) -> Option<Vec<Self>> {
+        match s {
+            Storage::I32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+/// A typed host tensor (rank-1 on construction, reshaped to any rank).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    dims: Vec<i64>,
+    storage: Storage,
+}
+
+impl Literal {
+    /// Rank-1 literal from a host slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal {
+            dims: vec![data.len() as i64],
+            storage: T::wrap(data.to_vec()),
+        }
+    }
+
+    /// Tuple literal (what lowered modules return).
+    pub fn tuple(parts: Vec<Literal>) -> Literal {
+        Literal { dims: vec![], storage: Storage::Tuple(parts) }
+    }
+
+    pub fn element_count(&self) -> usize {
+        match &self.storage {
+            Storage::F32(v) => v.len(),
+            Storage::I32(v) => v.len(),
+            Storage::Tuple(t) => t.len(),
+        }
+    }
+
+    /// Same data, new dims (element count must match; `&[]` = scalar).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        if matches!(self.storage, Storage::Tuple(_)) {
+            return Err(Error::new("cannot reshape a tuple literal"));
+        }
+        let want: i64 = dims.iter().product();
+        let have = self.element_count() as i64;
+        if want != have && !(dims.is_empty() && have == 1) {
+            return Err(Error::new(format!(
+                "reshape: {have} elements into shape {dims:?}"
+            )));
+        }
+        Ok(Literal { dims: dims.to_vec(), storage: self.storage.clone() })
+    }
+
+    pub fn ty(&self) -> Result<ElementType> {
+        match &self.storage {
+            Storage::F32(_) => Ok(ElementType::F32),
+            Storage::I32(_) => Ok(ElementType::S32),
+            Storage::Tuple(_) => {
+                Err(Error::new("tuple literal has no element type"))
+            }
+        }
+    }
+
+    pub fn shape(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::unwrap(&self.storage).ok_or_else(|| {
+            Error::new(format!(
+                "literal is not of element type {:?}",
+                T::element_type()
+            ))
+        })
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        match &self.storage {
+            Storage::Tuple(parts) => Ok(parts.clone()),
+            _ => Err(Error::new("literal is not a tuple")),
+        }
+    }
+}
+
+/// Parsed HLO module (text is retained verbatim in the stub).
+pub struct HloModuleProto {
+    pub text: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(path: P) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .map_err(|e| Error::new(format!("{e}")))?;
+        Ok(Self { text })
+    }
+}
+
+/// Computation handle built from an HLO proto.
+pub struct XlaComputation {
+    _text: String,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _text: proto.text.clone() }
+    }
+}
+
+/// Device buffer handle (stub: never materialized).
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::unavailable())
+    }
+}
+
+/// Compiled executable handle (stub: execution always errors).
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self, _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::unavailable())
+    }
+}
+
+/// PJRT client (stub: construction reports the missing backend).
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self> {
+        Err(Error::unavailable())
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _c: &XlaComputation)
+                   -> Result<PjRtLoadedExecutable> {
+        Err(Error::unavailable())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        assert_eq!(l.ty().unwrap(), ElementType::F32);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.shape(), &[2, 2]);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(r.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn scalar_reshape_and_tuple() {
+        let s = Literal::vec1(&[7i32]).reshape(&[]).unwrap();
+        assert_eq!(s.shape(), &[] as &[i64]);
+        let t = Literal::tuple(vec![s.clone()]);
+        assert_eq!(t.to_tuple().unwrap().len(), 1);
+        assert!(t.ty().is_err());
+        assert!(Literal::vec1(&[1.0f32, 2.0]).reshape(&[3]).is_err());
+    }
+
+    #[test]
+    fn pjrt_reports_unavailable() {
+        let err = PjRtClient::cpu().err().unwrap();
+        assert!(format!("{err}").contains("unavailable"));
+    }
+}
