@@ -1,0 +1,149 @@
+//! Gateway bench: replay a mixed-length synthetic trace through the
+//! multi-bucket native serving gateway and report per-bucket serving
+//! metrics — p50/p99 latency, rows/sec, batch occupancy, padding-waste
+//! ratio — plus the determinism check (a live gateway co-batch is
+//! bit-identical to the sequential per-slice loop over the same padded
+//! batch).
+//!
+//! This is the serving-side companion of fig. 4: where fig. 4 sweeps raw
+//! kernel throughput, this sweeps the *traffic shape* — log₂-uniform
+//! request lengths against power-of-two buckets, the regime where
+//! clustered attention's linear complexity pays at the tail buckets.
+//! `CT_FULL=1` enlarges the trace.
+
+use std::time::{Duration, Instant};
+
+use clustered_transformers::attention::{kernel_by_name, run_batch_seq};
+use clustered_transformers::benchlib::{self, Table};
+use clustered_transformers::config::init_logging;
+use clustered_transformers::coordinator::{
+    bucket_report, pad_batch, replay_blocking, synthetic_trace,
+    valid_rows, Bucket, GatewayOptions, GatewayShape, ServingGateway,
+    BUCKET_REPORT_HEADERS,
+};
+use clustered_transformers::prng::Xoshiro256;
+
+const SHAPE: GatewayShape = GatewayShape { heads: 4, dk: 32, dv: 32 };
+const BUCKETS: [(usize, usize); 3] = [(64, 8), (128, 8), (256, 4)];
+
+fn gateway(kernel: &str, seed: u64) -> ServingGateway {
+    ServingGateway::start(
+        SHAPE,
+        BUCKETS
+            .iter()
+            .map(|&(n, b)| Bucket::native(kernel, n, b))
+            .collect(),
+        GatewayOptions {
+            max_wait: Duration::from_millis(2),
+            queue_capacity: 64,
+            seed,
+            ..GatewayOptions::default()
+        },
+    )
+    .expect("gateway start")
+}
+
+/// Live-path determinism: one full co-batch of staggered lengths through
+/// a single-bucket gateway must be bit-identical to `run_batch_seq` over
+/// the identically padded batch.
+fn cobatch_bit_identical(kernel: &str, n: usize, b: usize, seed: u64)
+                         -> bool {
+    let mut rng = Xoshiro256::new(seed);
+    let reqs: Vec<(Vec<f32>, Vec<f32>, Vec<f32>, usize)> = (0..b)
+        .map(|i| {
+            let len = ((i + 1) * n / b).max(1); // staggered 1..=n
+            (rng.normal_vec(SHAPE.qk_len(len)),
+             rng.normal_vec(SHAPE.qk_len(len)),
+             rng.normal_vec(SHAPE.v_len(len)),
+             len)
+        })
+        .collect();
+    let gw = ServingGateway::start(
+        SHAPE,
+        vec![Bucket::native(kernel, n, b)],
+        GatewayOptions {
+            max_wait: Duration::from_secs(10), // size trigger forms batch
+            queue_capacity: b + 1,
+            seed,
+            ..GatewayOptions::default()
+        },
+    )
+    .expect("gateway start");
+    let rxs: Vec<_> = reqs
+        .iter()
+        .map(|(q, k, v, len)| {
+            gw.submit_blocking(q.clone(), k.clone(), v.clone(), *len)
+                .expect("submit")
+        })
+        .collect();
+    let responses: Vec<_> = rxs
+        .into_iter()
+        .map(|rx| rx.recv_timeout(Duration::from_secs(60)).expect("reply"))
+        .collect();
+
+    let blocks = |f: fn(&(Vec<f32>, Vec<f32>, Vec<f32>, usize))
+                        -> (&[f32], usize)| {
+        reqs.iter().map(f).collect::<Vec<_>>()
+    };
+    let q = pad_batch(&blocks(|r| (&r.0, r.3)), SHAPE.heads, n, SHAPE.dk);
+    let k = pad_batch(&blocks(|r| (&r.1, r.3)), SHAPE.heads, n, SHAPE.dk);
+    let v = pad_batch(&blocks(|r| (&r.2, r.3)), SHAPE.heads, n, SHAPE.dv);
+    let want = run_batch_seq(kernel_by_name(kernel).unwrap().as_ref(), &q,
+                             &k, &v, seed);
+    let ok = responses.iter().enumerate().all(|(slot, resp)| {
+        if resp.batch_occupancy != b {
+            return false;
+        }
+        let want_rows = valid_rows(&want, slot, reqs[slot].3);
+        resp.out.len() == want_rows.len()
+            && resp.out.iter().zip(&want_rows)
+                .all(|(a, b)| a.to_bits() == b.to_bits())
+    });
+    gw.shutdown();
+    ok
+}
+
+fn main() {
+    init_logging(false);
+    let count = if benchlib::traincache::full_grid() { 512 } else { 96 };
+    let clients = 8;
+    let seed = 0u64;
+    let max_n = BUCKETS.iter().map(|&(n, _)| n).max().unwrap();
+
+    for kernel in ["full", "i-clustered-32"] {
+        let gw = gateway(kernel, seed);
+        let trace = synthetic_trace(SHAPE, 8, max_n, count, seed);
+        let t0 = Instant::now();
+        let responses = replay_blocking(&gw, trace, clients);
+        let wall = t0.elapsed().as_secs_f64();
+
+        let mut headers: Vec<&str> = BUCKET_REPORT_HEADERS.to_vec();
+        headers.push("bit-identical");
+        let mut table = Table::new(
+            &format!(
+                "gateway[{kernel}]: {count} mixed-length requests \
+                 (lens 8..{max_n}, log2-uniform), {clients} clients, \
+                 {:.2}s wall, H={} Dk={}",
+                wall, SHAPE.heads, SHAPE.dk),
+            &headers,
+        );
+        for (row, &(n, b)) in
+            bucket_report(&gw, wall).into_iter().zip(BUCKETS.iter())
+        {
+            let mut row = row;
+            row.push(cobatch_bit_identical(kernel, n, b, seed + n as u64)
+                .to_string());
+            table.row(row);
+        }
+        table.emit();
+        let total_rows: usize = responses.iter().map(|r| r.len).sum();
+        println!("  total: {} requests, {:.0} valid rows/s end-to-end",
+                 responses.len(),
+                 total_rows as f64 / wall.max(1e-9));
+        gw.shutdown();
+    }
+    println!("\nexpected: tail buckets (N=256) dominate latency; \
+              i-clustered keeps p99 flat where full grows with N²; \
+              waste tracks the log2-uniform mix (~30-40%); bit-identical \
+              must read true everywhere (determinism contract).");
+}

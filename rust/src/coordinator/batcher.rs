@@ -65,6 +65,16 @@ impl<T> Batcher<T> {
         })
     }
 
+    /// How long a dispatcher should block waiting for the next ingress
+    /// item: the time to the current deadline (floored at 100µs so a
+    /// nearly-expired deadline still yields the CPU), or a 50ms idle
+    /// poll when nothing is pending.
+    pub fn next_wait(&self, now: Instant) -> Duration {
+        self.time_to_deadline(now)
+            .unwrap_or(Duration::from_millis(50))
+            .max(Duration::from_micros(100))
+    }
+
     /// Flush whatever is pending.
     pub fn take(&mut self) -> Option<Vec<T>> {
         if self.pending.is_empty() {
@@ -127,6 +137,21 @@ mod tests {
         assert!(b
             .poll_deadline(t0 + Duration::from_millis(16))
             .is_some());
+    }
+
+    #[test]
+    fn next_wait_is_deadline_bounded_and_floored() {
+        let mut b = Batcher::new(policy(10, 8));
+        let t0 = Instant::now();
+        // empty: idle poll
+        assert_eq!(b.next_wait(t0), Duration::from_millis(50));
+        b.push(1, t0);
+        // pending: bounded by the remaining deadline
+        let w = b.next_wait(t0 + Duration::from_millis(3));
+        assert!(w <= Duration::from_millis(5));
+        // expired deadline: floored, never zero-spin
+        let w = b.next_wait(t0 + Duration::from_millis(20));
+        assert_eq!(w, Duration::from_micros(100));
     }
 
     #[test]

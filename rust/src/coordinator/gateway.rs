@@ -1,0 +1,806 @@
+//! Multi-bucket native serving gateway.
+//!
+//! [`ServingGateway`] fronts a fleet of per-bucket native attention
+//! engines behind the length [`Router`]: each [`Bucket`] carries its own
+//! kernel, pad-to sequence length and batch size, owns a dispatcher
+//! thread with a deadline [`Batcher`], and all buckets lease workers
+//! from one [`SharedWorkerPool`] budget — live leases never sum above
+//! it, and a flush queues when it is spent, so concurrent buckets can
+//! never oversubscribe the host.  This is the static-shape serving
+//! discipline of the compiled-HLO path ([`super::InferenceEngine`])
+//! applied to the Rust-native kernels: route to the tightest bucket,
+//! pad, batch, execute, return only the valid rows.
+//!
+//! Admission control: `submit` fails fast with backpressure when queues
+//! are full, but first *routes up* — a request that overflows its tight
+//! bucket spills into the next larger bucket, trading padding waste for
+//! acceptance (disable with [`GatewayOptions::route_up`]).  Requests
+//! longer than every bucket are rejected outright.
+//!
+//! Per-bucket [`BucketMetrics`] record latency percentiles, completed /
+//! rejected / routed-up counts, batch occupancy and the padding-waste
+//! ratio ([`crate::metrics::PaddingWaste`]) — the numbers the `gateway`
+//! bench tabulates.
+//!
+//! **Determinism:** a flushed batch runs through the same
+//! `AttentionKernel::run_batch` contract as everything else — output
+//! slice `s` depends only on `(inputs[s], seed, s)` — so gateway output
+//! for a given batch composition is bit-identical to the sequential
+//! per-slice loop over the same padded batch, regardless of pool size
+//! (property-tested in `proptest/attention_props.rs`).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::attention::{kernel_by_name, AttentionKernel};
+use crate::exec::{Channel, SharedWorkerPool};
+use crate::metrics::{LatencyHistogram, PaddingWaste};
+use crate::prng::Xoshiro256;
+use crate::tensor::batch::BatchMatrix;
+
+use super::batcher::{BatchPolicy, Batcher};
+use super::router::{Bucket, Router};
+
+/// The per-request tensor geometry every gateway bucket shares; only the
+/// sequence length varies per bucket.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GatewayShape {
+    pub heads: usize,
+    pub dk: usize,
+    pub dv: usize,
+}
+
+impl GatewayShape {
+    /// Elements in a (H, len, Dk) query/key block.
+    pub fn qk_len(&self, len: usize) -> usize {
+        self.heads * len * self.dk
+    }
+
+    /// Elements in a (H, len, Dv) value block.
+    pub fn v_len(&self, len: usize) -> usize {
+        self.heads * len * self.dv
+    }
+}
+
+/// One variable-length attention request in flight: `q`/`k` are
+/// (H, len, Dk) and `v` is (H, len, Dv), flattened row-major.
+pub struct GatewayRequest {
+    pub id: u64,
+    pub q: Vec<f32>,
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+    pub len: usize,
+    pub enqueued: Instant,
+    pub reply: mpsc::Sender<GatewayResponse>,
+}
+
+/// Per-request result: the (H, len, Dv) valid output rows, flattened
+/// row-major — padding rows never leave the gateway.
+#[derive(Debug, Clone)]
+pub struct GatewayResponse {
+    pub id: u64,
+    pub out: Vec<f32>,
+    /// Valid sequence length (rows per head in `out`).
+    pub len: usize,
+    /// Pad-to length of the bucket that served the request.
+    pub bucket_seq_len: usize,
+    pub queue_time: Duration,
+    pub total_time: Duration,
+    pub batch_occupancy: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct GatewayOptions {
+    /// Deadline of each bucket's batcher (max batch comes from the
+    /// bucket's own `batch_size`).
+    pub max_wait: Duration,
+    /// Ingress queue capacity per bucket.
+    pub queue_capacity: usize,
+    /// Total worker budget shared by all buckets (0 = auto: one worker
+    /// per available hardware thread).
+    pub workers: usize,
+    /// Base seed of the per-slice PRNG streams.
+    pub seed: u64,
+    /// Spill fail-fast submissions into the next larger bucket when the
+    /// tight bucket's queue is full.
+    pub route_up: bool,
+}
+
+impl Default for GatewayOptions {
+    fn default() -> Self {
+        Self {
+            max_wait: Duration::from_millis(5),
+            queue_capacity: 64,
+            workers: 0, // auto
+            seed: 0,
+            route_up: true,
+        }
+    }
+}
+
+/// Serving metrics for one bucket.
+#[derive(Default)]
+pub struct BucketMetrics {
+    pub completed: AtomicU64,
+    /// Fail-fast submissions this bucket (and, with route-up, every
+    /// larger bucket) had no queue room for.
+    pub rejected: AtomicU64,
+    /// Requests accepted here after overflowing a smaller bucket.
+    pub routed_up: AtomicU64,
+    pub batches: AtomicU64,
+    pub batched_items: AtomicU64,
+    /// Valid request rows executed (`Σ len`).
+    pub valid_rows: AtomicU64,
+    /// Rows executed after padding (`Σ seq_len`).
+    pub padded_rows: AtomicU64,
+    pub latency: Mutex<LatencyHistogram>,
+}
+
+impl BucketMetrics {
+    /// Mean requests per executed batch.
+    pub fn occupancy(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed).max(1);
+        self.batched_items.load(Ordering::Relaxed) as f64 / b as f64
+    }
+
+    /// Fraction of executed rows that were padding, in [0, 1].
+    pub fn padding_waste(&self) -> f64 {
+        PaddingWaste {
+            valid: self.valid_rows.load(Ordering::Relaxed),
+            padded: self.padded_rows.load(Ordering::Relaxed),
+        }
+        .ratio()
+    }
+
+    /// Latency percentile in microseconds (p in [0, 100]).
+    pub fn percentile_us(&self, p: f64) -> f64 {
+        self.latency.lock().unwrap().percentile_us(p)
+    }
+}
+
+/// Multi-bucket native attention serving gateway (see module docs).
+pub struct ServingGateway {
+    shape: GatewayShape,
+    router: Router,
+    ingress: Vec<Channel<GatewayRequest>>, // bucket order
+    metrics: Vec<Arc<BucketMetrics>>,      // bucket order
+    /// Requests longer than every bucket (no candidate at all).
+    overlong: AtomicU64,
+    route_up: bool,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    next_id: AtomicU64,
+}
+
+impl ServingGateway {
+    /// Spawn one dispatcher per bucket.  Every bucket must be a native
+    /// bucket (`Bucket::native`) whose kernel resolves in the attention
+    /// registry.
+    pub fn start(shape: GatewayShape, buckets: Vec<Bucket>,
+                 opts: GatewayOptions) -> Result<Self> {
+        if shape.heads == 0 || shape.dk == 0 || shape.dv == 0 {
+            bail!("gateway shape must have heads/dk/dv >= 1, got {shape:?}");
+        }
+        for b in &buckets {
+            if b.seq_len == 0 || b.batch_size == 0 {
+                bail!("bucket needs seq_len/batch_size >= 1, got {b:?}");
+            }
+            if kernel_by_name(&b.kernel).is_none() {
+                bail!("bucket kernel {:?} not in the attention registry \
+                       (native buckets only; see Bucket::native)", b.kernel);
+            }
+        }
+        let router = Router::new(buckets)?;
+        let pool = Arc::new(if opts.workers == 0 {
+            SharedWorkerPool::auto()
+        } else {
+            SharedWorkerPool::new(opts.workers)
+        });
+
+        let mut ingress = Vec::new();
+        let mut metrics = Vec::new();
+        let mut workers = Vec::new();
+        for bucket in router.buckets() {
+            let ch: Channel<GatewayRequest> =
+                Channel::bounded(opts.queue_capacity.max(1));
+            let m = Arc::new(BucketMetrics::default());
+            ingress.push(ch.clone());
+            metrics.push(m.clone());
+            let kernel = kernel_by_name(&bucket.kernel)
+                .expect("validated above");
+            let policy = BatchPolicy {
+                max_batch: bucket.batch_size,
+                max_wait: opts.max_wait,
+            };
+            let (shape, seed, pool) = (shape, opts.seed, pool.clone());
+            let seq_len = bucket.seq_len;
+            let spawned = std::thread::Builder::new()
+                .name(format!("ct-gateway-{seq_len}"))
+                .spawn(move || {
+                    bucket_dispatcher(kernel, shape, seq_len, ch, m, pool,
+                                      policy, seed)
+                });
+            match spawned {
+                Ok(handle) => workers.push(handle),
+                Err(e) => {
+                    // unwind: close the queues so already-spawned
+                    // dispatchers exit instead of idling forever
+                    for ch in &ingress {
+                        ch.close();
+                    }
+                    for w in workers {
+                        let _ = w.join();
+                    }
+                    return Err(e.into());
+                }
+            }
+        }
+        Ok(Self {
+            shape,
+            router,
+            ingress,
+            metrics,
+            overlong: AtomicU64::new(0),
+            route_up: opts.route_up,
+            workers,
+            next_id: AtomicU64::new(0),
+        })
+    }
+
+    pub fn shape(&self) -> GatewayShape {
+        self.shape
+    }
+
+    pub fn router(&self) -> &Router {
+        &self.router
+    }
+
+    /// Per-bucket metrics, bucket (ascending seq_len) order.
+    pub fn bucket_metrics(&self) -> &[Arc<BucketMetrics>] {
+        &self.metrics
+    }
+
+    /// Requests rejected because they exceed every bucket.
+    pub fn overlong_total(&self) -> u64 {
+        self.overlong.load(Ordering::Relaxed)
+    }
+
+    /// Total rejections: overlong plus per-bucket backpressure.
+    pub fn rejected_total(&self) -> u64 {
+        self.overlong_total()
+            + self
+                .metrics
+                .iter()
+                .map(|m| m.rejected.load(Ordering::Relaxed))
+                .sum::<u64>()
+    }
+
+    fn make_request(&self, q: Vec<f32>, k: Vec<f32>, v: Vec<f32>,
+                    len: usize)
+                    -> Result<(GatewayRequest,
+                               mpsc::Receiver<GatewayResponse>)> {
+        if len == 0 {
+            return Err(anyhow!("empty request (len 0)"));
+        }
+        if q.len() != self.shape.qk_len(len)
+            || k.len() != self.shape.qk_len(len)
+            || v.len() != self.shape.v_len(len)
+        {
+            return Err(anyhow!(
+                "gateway request shape mismatch: got q={} k={} v={}, want \
+                 q=k={} v={} for len {len} with {:?}",
+                q.len(), k.len(), v.len(), self.shape.qk_len(len),
+                self.shape.v_len(len), self.shape));
+        }
+        let (tx, rx) = mpsc::channel();
+        let req = GatewayRequest {
+            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            q,
+            k,
+            v,
+            len,
+            enqueued: Instant::now(),
+            reply: tx,
+        };
+        Ok((req, rx))
+    }
+
+    /// Fail-fast submit with route-up admission control: try the
+    /// tightest bucket, spill upward on a full queue, reject with a
+    /// backpressure error when every candidate is full.
+    pub fn submit(&self, q: Vec<f32>, k: Vec<f32>, v: Vec<f32>, len: usize)
+                  -> Result<mpsc::Receiver<GatewayResponse>> {
+        let (req, rx) = self.make_request(q, k, v, len)?;
+        let mut candidates = self.router.route_candidates(len);
+        let Some(tight) = candidates.next() else {
+            self.overlong.fetch_add(1, Ordering::Relaxed);
+            return Err(anyhow!(
+                "request of length {len} exceeds every bucket (max {})",
+                self.router.max_len()));
+        };
+        match offer(&self.ingress, tight, candidates, self.route_up, req) {
+            Ok(idx) => {
+                if idx != tight {
+                    self.metrics[idx]
+                        .routed_up
+                        .fetch_add(1, Ordering::Relaxed);
+                }
+                Ok(rx)
+            }
+            Err(_) => {
+                self.metrics[tight].rejected.fetch_add(1, Ordering::Relaxed);
+                Err(anyhow!(
+                    "bucket N={} queue full (backpressure{})",
+                    self.router.buckets()[tight].seq_len,
+                    if self.route_up { ", route-up exhausted" } else { "" }))
+            }
+        }
+    }
+
+    /// Blocking submit: waits out backpressure on the tightest bucket
+    /// instead of failing or routing up.
+    pub fn submit_blocking(&self, q: Vec<f32>, k: Vec<f32>, v: Vec<f32>,
+                           len: usize)
+                           -> Result<mpsc::Receiver<GatewayResponse>> {
+        let (req, rx) = self.make_request(q, k, v, len)?;
+        let idx = self.router.route_index(len).ok_or_else(|| {
+            self.overlong.fetch_add(1, Ordering::Relaxed);
+            anyhow!("request of length {len} exceeds every bucket (max {})",
+                    self.router.max_len())
+        })?;
+        self.ingress[idx]
+            .send(req)
+            .map_err(|_| anyhow!("gateway shut down"))?;
+        Ok(rx)
+    }
+
+    pub fn shutdown(self) {
+        for ch in &self.ingress {
+            ch.close();
+        }
+        for w in self.workers {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Offer `req` to the tight bucket, then (with route-up) each larger
+/// candidate in order.  Ok(accepting index) or Err(req) when every
+/// tried queue was full.
+fn offer<T>(channels: &[Channel<T>], tight: usize,
+            rest: impl Iterator<Item = usize>, route_up: bool, req: T)
+            -> Result<usize, T> {
+    let mut req = match channels[tight].try_send(req) {
+        Ok(()) => return Ok(tight),
+        Err(back) => back,
+    };
+    if route_up {
+        for idx in rest {
+            match channels[idx].try_send(req) {
+                Ok(()) => return Ok(idx),
+                Err(back) => req = back,
+            }
+        }
+    }
+    Err(req)
+}
+
+/// Pad variable-length `(data, len)` blocks — each `(H, len, D)`
+/// row-major — into one static (B, H, seq_len, D) batch, zero-filling
+/// rows `len..seq_len` of every head.
+///
+/// Slot order is block order, so this is exactly the batch a gateway
+/// dispatcher assembles from a flush — the reference the gateway
+/// determinism property test replays through `run_batch_seq`.
+pub fn pad_batch(blocks: &[(&[f32], usize)], heads: usize, seq_len: usize,
+                 d: usize) -> BatchMatrix {
+    let mut out = BatchMatrix::zeros(blocks.len(), heads, seq_len, d);
+    for (slot, (data, len)) in blocks.iter().enumerate() {
+        assert!(*len <= seq_len,
+                "block of len {len} exceeds bucket seq_len {seq_len}");
+        assert_eq!(data.len(), heads * len * d,
+                   "block data is not (H, len, D)");
+        for h in 0..heads {
+            let dst = out.slice_mut(slot * heads + h);
+            dst[..len * d]
+                .copy_from_slice(&data[h * len * d..(h + 1) * len * d]);
+        }
+    }
+    out
+}
+
+/// The (H, len, Dv) valid rows of batch slot `slot` in a padded
+/// (B, H, seq_len, Dv) kernel output — the inverse of [`pad_batch`] on
+/// the output side.  This is the extraction the gateway applies before
+/// replying; the determinism property test and the `gateway` bench use
+/// it to slice the sequential reference run identically.
+pub fn valid_rows(out: &BatchMatrix, slot: usize, len: usize) -> Vec<f32> {
+    let (n, dv, heads) = (out.rows, out.cols, out.heads);
+    let mut rows = Vec::with_capacity(heads * len * dv);
+    for h in 0..heads {
+        let base = (slot * heads + h) * n * dv;
+        rows.extend_from_slice(&out.data[base..base + len * dv]);
+    }
+    rows
+}
+
+fn bucket_dispatcher(kernel: Box<dyn AttentionKernel>, shape: GatewayShape,
+                     seq_len: usize, ch: Channel<GatewayRequest>,
+                     metrics: Arc<BucketMetrics>,
+                     pool: Arc<SharedWorkerPool>, policy: BatchPolicy,
+                     seed: u64) {
+    let mut batcher: Batcher<GatewayRequest> = Batcher::new(policy);
+    loop {
+        let wait = batcher.next_wait(Instant::now());
+        let item = ch.recv_timeout(wait);
+        let mut ready: Option<Vec<GatewayRequest>> = None;
+        match item {
+            Ok(Some(req)) => {
+                ready = batcher.push(req, Instant::now());
+            }
+            Ok(None) => {
+                if let Some(batch) = batcher.take() {
+                    run_bucket_batch(kernel.as_ref(), shape, seq_len, batch,
+                                     &metrics, &pool, seed);
+                }
+                return;
+            }
+            Err(()) => {}
+        }
+        if ready.is_none() {
+            ready = batcher.poll_deadline(Instant::now());
+        }
+        if let Some(batch) = ready {
+            run_bucket_batch(kernel.as_ref(), shape, seq_len, batch,
+                             &metrics, &pool, seed);
+        }
+    }
+}
+
+fn run_bucket_batch(kernel: &dyn AttentionKernel, shape: GatewayShape,
+                    seq_len: usize, batch: Vec<GatewayRequest>,
+                    metrics: &BucketMetrics, pool: &SharedWorkerPool,
+                    seed: u64) {
+    let occupancy = batch.len();
+    let qb: Vec<(&[f32], usize)> =
+        batch.iter().map(|r| (&r.q[..], r.len)).collect();
+    let kb: Vec<(&[f32], usize)> =
+        batch.iter().map(|r| (&r.k[..], r.len)).collect();
+    let vb: Vec<(&[f32], usize)> =
+        batch.iter().map(|r| (&r.v[..], r.len)).collect();
+    let q = pad_batch(&qb, shape.heads, seq_len, shape.dk);
+    let k = pad_batch(&kb, shape.heads, seq_len, shape.dk);
+    let v = pad_batch(&vb, shape.heads, seq_len, shape.dv);
+    let queue_times: Vec<Duration> =
+        batch.iter().map(|r| r.enqueued.elapsed()).collect();
+
+    // one lease per flush: live leases never sum above the shared
+    // budget (a flush queues here when it is spent)
+    let lease = pool.lease();
+    let out = kernel.run_batch(&q, &k, &v, seed, &lease);
+    drop(lease);
+
+    metrics.batches.fetch_add(1, Ordering::Relaxed);
+    metrics
+        .batched_items
+        .fetch_add(occupancy as u64, Ordering::Relaxed);
+
+    for (slot, req) in batch.into_iter().enumerate() {
+        let rows = valid_rows(&out, slot, req.len);
+        let total = req.enqueued.elapsed();
+        metrics.completed.fetch_add(1, Ordering::Relaxed);
+        metrics.valid_rows.fetch_add(req.len as u64, Ordering::Relaxed);
+        metrics.padded_rows.fetch_add(seq_len as u64, Ordering::Relaxed);
+        metrics.latency.lock().unwrap().record(total);
+        let _ = req.reply.send(GatewayResponse {
+            id: req.id,
+            out: rows,
+            len: req.len,
+            bucket_seq_len: seq_len,
+            queue_time: queue_times[slot],
+            total_time: total,
+            batch_occupancy: occupancy,
+        });
+    }
+}
+
+// ---------------------------------------------------------------------------
+// synthetic traffic (shared by the gateway bench, the CLI and tests)
+// ---------------------------------------------------------------------------
+
+/// One request of a synthetic trace.
+#[derive(Debug, Clone)]
+pub struct TraceItem {
+    pub q: Vec<f32>,
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+    pub len: usize,
+}
+
+/// Mixed-length synthetic trace: lengths are log₂-uniform in
+/// `[min_len, max_len]` (short requests as common as long ones — the
+/// utterance-length mix the ASR workload serves), tensors standard
+/// normal from `seed`.
+pub fn synthetic_trace(shape: GatewayShape, min_len: usize, max_len: usize,
+                       count: usize, seed: u64) -> Vec<TraceItem> {
+    assert!(min_len >= 1 && min_len <= max_len, "bad trace length range");
+    let mut rng = Xoshiro256::new(seed);
+    let (lo, hi) = ((min_len as f64).log2(), (max_len as f64).log2());
+    (0..count)
+        .map(|_| {
+            let len = 2f64
+                .powf(lo + rng.next_f64() * (hi - lo))
+                .round() as usize;
+            let len = len.clamp(min_len, max_len);
+            TraceItem {
+                q: rng.normal_vec(shape.qk_len(len)),
+                k: rng.normal_vec(shape.qk_len(len)),
+                v: rng.normal_vec(shape.v_len(len)),
+                len,
+            }
+        })
+        .collect()
+}
+
+/// Replay a trace through the gateway from `clients` concurrent blocking
+/// submitters (client `c` takes items `c, c+clients, …`); responses come
+/// back in trace order.  Every trace length must fit some bucket.
+pub fn replay_blocking(gw: &ServingGateway, trace: Vec<TraceItem>,
+                       clients: usize) -> Vec<GatewayResponse> {
+    let n = trace.len();
+    let clients = clients.clamp(1, n.max(1));
+    let mut lanes: Vec<Vec<(usize, TraceItem)>> =
+        (0..clients).map(|_| Vec::new()).collect();
+    for (i, item) in trace.into_iter().enumerate() {
+        lanes[i % clients].push((i, item));
+    }
+    let mut out: Vec<Option<GatewayResponse>> = Vec::with_capacity(n);
+    out.resize_with(n, || None);
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = lanes
+            .into_iter()
+            .map(|lane| {
+                scope.spawn(move || {
+                    let mut got = Vec::with_capacity(lane.len());
+                    for (i, item) in lane {
+                        let rx = gw
+                            .submit_blocking(item.q, item.k, item.v,
+                                             item.len)
+                            .expect("trace length exceeds every bucket");
+                        got.push((i, rx.recv().expect("gateway dropped \
+                                                       a trace request")));
+                    }
+                    got
+                })
+            })
+            .collect();
+        for h in handles {
+            for (i, resp) in h.join().expect("replay client panicked") {
+                out[i] = Some(resp);
+            }
+        }
+    });
+    out.into_iter()
+        .map(|r| r.expect("trace response missing"))
+        .collect()
+}
+
+/// Column headers matching [`bucket_report`] rows.
+pub const BUCKET_REPORT_HEADERS: [&str; 10] =
+    ["N", "kernel", "done", "routed-up", "rejected", "occupancy",
+     "p50 ms", "p99 ms", "rows/s", "waste %"];
+
+/// Per-bucket serving report, one row of strings per bucket (ascending
+/// seq_len), ready for a `benchlib::Table` with
+/// [`BUCKET_REPORT_HEADERS`].  `wall_s` is the measurement window used
+/// for rows/sec (valid rows only — padding rows are reported as waste,
+/// not throughput).
+pub fn bucket_report(gw: &ServingGateway, wall_s: f64) -> Vec<Vec<String>> {
+    gw.router()
+        .buckets()
+        .iter()
+        .zip(gw.bucket_metrics())
+        .map(|(b, m)| {
+            let rows = m.valid_rows.load(Ordering::Relaxed);
+            vec![
+                b.seq_len.to_string(),
+                b.kernel.clone(),
+                m.completed.load(Ordering::Relaxed).to_string(),
+                m.routed_up.load(Ordering::Relaxed).to_string(),
+                m.rejected.load(Ordering::Relaxed).to_string(),
+                format!("{:.2}", m.occupancy()),
+                format!("{:.2}", m.percentile_us(50.0) / 1e3),
+                format!("{:.2}", m.percentile_us(99.0) / 1e3),
+                format!("{:.0}",
+                        if wall_s > 0.0 { rows as f64 / wall_s }
+                        else { 0.0 }),
+                format!("{:.1}", 100.0 * m.padding_waste()),
+            ]
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::run_batch_seq;
+
+    const SHAPE: GatewayShape = GatewayShape { heads: 2, dk: 8, dv: 8 };
+
+    fn block(len: usize, d: usize, seed: u64) -> Vec<f32> {
+        Xoshiro256::new(seed).normal_vec(SHAPE.heads * len * d)
+    }
+
+    #[test]
+    fn pad_batch_places_heads_and_zero_fills() {
+        // one block, 2 heads, len 2 -> padded to 3 rows, d=2
+        let data: Vec<f32> = (1..=8).map(|x| x as f32).collect();
+        let out = pad_batch(&[(&data, 2)], 2, 3, 2);
+        assert_eq!((out.batch, out.heads, out.rows, out.cols), (1, 2, 3, 2));
+        // head 0: rows 1,2 then zeros
+        assert_eq!(out.slice_matrix(0).data,
+                   vec![1.0, 2.0, 3.0, 4.0, 0.0, 0.0]);
+        // head 1: rows 3,4 then zeros
+        assert_eq!(out.slice_matrix(1).data,
+                   vec![5.0, 6.0, 7.0, 8.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn offer_routes_up_on_overflow() {
+        let chans: Vec<Channel<u32>> =
+            (0..3).map(|_| Channel::bounded(1)).collect();
+        chans[0].try_send(9).unwrap(); // tight bucket full
+        // route-up spills to the next candidate
+        assert_eq!(offer(&chans, 0, 1..3, true, 1), Ok(1));
+        // with route-up disabled the same state rejects
+        assert_eq!(offer(&chans, 0, 1..3, false, 2), Err(2));
+        // every queue full -> rejected with the request handed back
+        chans[1].try_send(9).unwrap_err(); // already holds the spilled 1
+        chans[2].try_send(9).unwrap();
+        assert_eq!(offer(&chans, 0, 1..3, true, 3), Err(3));
+    }
+
+    #[test]
+    fn gateway_cobatch_matches_sequential_padded_run_bit_for_bit() {
+        let (l0, l1) = (20, 32);
+        let (q0, k0, v0) =
+            (block(l0, 8, 1), block(l0, 8, 2), block(l0, 8, 3));
+        let (q1, k1, v1) =
+            (block(l1, 8, 4), block(l1, 8, 5), block(l1, 8, 6));
+        let gw = ServingGateway::start(
+            SHAPE,
+            vec![Bucket::native("clustered-4", 32, 2)],
+            GatewayOptions {
+                // generous deadline: the batch must form on the size
+                // trigger even if CI stalls between the two submits
+                max_wait: Duration::from_secs(10),
+                queue_capacity: 8,
+                workers: 4,
+                seed: 17,
+                route_up: true,
+            },
+        )
+        .unwrap();
+        let rx0 = gw
+            .submit_blocking(q0.clone(), k0.clone(), v0.clone(), l0)
+            .unwrap();
+        let rx1 = gw
+            .submit_blocking(q1.clone(), k1.clone(), v1.clone(), l1)
+            .unwrap();
+        let r0 = rx0.recv_timeout(Duration::from_secs(30)).unwrap();
+        let r1 = rx1.recv_timeout(Duration::from_secs(30)).unwrap();
+        assert_eq!(r0.batch_occupancy, 2, "requests were not co-batched");
+
+        // reference: sequential per-slice loop over the same padded batch
+        let q = pad_batch(&[(&q0, l0), (&q1, l1)], SHAPE.heads, 32,
+                          SHAPE.dk);
+        let k = pad_batch(&[(&k0, l0), (&k1, l1)], SHAPE.heads, 32,
+                          SHAPE.dk);
+        let v = pad_batch(&[(&v0, l0), (&v1, l1)], SHAPE.heads, 32,
+                          SHAPE.dv);
+        let kernel = kernel_by_name("clustered-4").unwrap();
+        let want = run_batch_seq(kernel.as_ref(), &q, &k, &v, 17);
+        let same = |got: &[f32], want: &[f32]| {
+            got.len() == want.len()
+                && got.iter().zip(want)
+                    .all(|(a, b)| a.to_bits() == b.to_bits())
+        };
+        assert!(same(&r0.out, &valid_rows(&want, 0, l0)));
+        assert!(same(&r1.out, &valid_rows(&want, 1, l1)));
+        gw.shutdown();
+    }
+
+    #[test]
+    fn gateway_serves_mixed_lengths_and_accumulates_bucket_metrics() {
+        let gw = ServingGateway::start(
+            SHAPE,
+            vec![Bucket::native("full", 16, 4),
+                 Bucket::native("full", 32, 4)],
+            GatewayOptions {
+                max_wait: Duration::from_millis(2),
+                ..GatewayOptions::default()
+            },
+        )
+        .unwrap();
+        let trace = synthetic_trace(SHAPE, 4, 32, 12, 7);
+        let responses = replay_blocking(&gw, trace.clone(), 3);
+        assert_eq!(responses.len(), 12);
+        for (item, resp) in trace.iter().zip(&responses) {
+            assert_eq!(resp.len, item.len);
+            assert_eq!(resp.out.len(), SHAPE.v_len(item.len));
+            assert!(resp.out.iter().all(|x| x.is_finite()));
+            // blocking replay never routes up: tightest fit always
+            let want_bucket = if item.len <= 16 { 16 } else { 32 };
+            assert_eq!(resp.bucket_seq_len, want_bucket);
+        }
+        let m = gw.bucket_metrics();
+        let completed: u64 = m.iter()
+            .map(|b| b.completed.load(Ordering::Relaxed))
+            .sum();
+        assert_eq!(completed, 12);
+        for b in m {
+            if b.completed.load(Ordering::Relaxed) == 0 {
+                continue;
+            }
+            assert!(b.occupancy() >= 1.0);
+            let waste = b.padding_waste();
+            assert!((0.0..1.0).contains(&waste), "waste {waste}");
+            assert!(b.percentile_us(99.0) >= b.percentile_us(50.0));
+            assert!(b.valid_rows.load(Ordering::Relaxed) > 0);
+        }
+        assert_eq!(gw.rejected_total(), 0);
+        let report = bucket_report(&gw, 1.0);
+        assert_eq!(report.len(), 2);
+        assert!(report
+            .iter()
+            .all(|r| r.len() == BUCKET_REPORT_HEADERS.len()));
+        gw.shutdown();
+    }
+
+    #[test]
+    fn gateway_rejects_overlong_empty_and_malformed() {
+        let gw = ServingGateway::start(
+            SHAPE,
+            vec![Bucket::native("full", 16, 2)],
+            GatewayOptions::default(),
+        )
+        .unwrap();
+        // over-max: longer than every bucket
+        let err = gw
+            .submit(block(17, 8, 1), block(17, 8, 2), block(17, 8, 3), 17)
+            .unwrap_err();
+        assert!(format!("{err}").contains("exceeds every bucket"));
+        assert_eq!(gw.overlong_total(), 1);
+        assert_eq!(gw.rejected_total(), 1);
+        // len 0
+        assert!(gw.submit(vec![], vec![], vec![], 0).is_err());
+        // shape mismatch
+        let err = gw
+            .submit(vec![0.0; 3], block(4, 8, 1), block(4, 8, 2), 4)
+            .unwrap_err();
+        assert!(format!("{err}").contains("shape mismatch"));
+        gw.shutdown();
+    }
+
+    #[test]
+    fn gateway_validates_buckets_at_start() {
+        let bad_kernel = ServingGateway::start(
+            SHAPE, vec![Bucket::native("no-such-kernel", 16, 2)],
+            GatewayOptions::default());
+        assert!(bad_kernel.is_err());
+        // HLO buckets (empty kernel) don't belong in the gateway
+        let hlo = ServingGateway::start(
+            SHAPE, vec![Bucket::hlo("asr.forward", 16, 2)],
+            GatewayOptions::default());
+        assert!(hlo.is_err());
+        let zero = ServingGateway::start(
+            SHAPE, vec![Bucket::native("full", 0, 2)],
+            GatewayOptions::default());
+        assert!(zero.is_err());
+        let none = ServingGateway::start(SHAPE, vec![],
+                                         GatewayOptions::default());
+        assert!(none.is_err());
+    }
+}

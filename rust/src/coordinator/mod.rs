@@ -2,20 +2,32 @@
 //!
 //! The paper's contribution is an attention approximation, so L3 is the
 //! machinery that makes it deployable: a training driver that executes
-//! compiled train-step HLO in a loop with convergence tracking, and a
-//! serving engine with length-bucket routing, deadline-based dynamic
-//! batching, a worker pool and backpressure (vLLM-router-shaped, scaled
-//! to one host).
+//! compiled train-step HLO in a loop with convergence tracking, and two
+//! serving stacks built on the same length-bucket router, deadline
+//! batcher and backpressure substrate (vLLM-router-shaped, scaled to one
+//! host):
+//!
+//! - [`InferenceEngine`] — compiled-HLO buckets through PJRT;
+//! - [`ServingGateway`] — a fleet of native attention engines, one
+//!   kernel/pad-length/batch-size [`Bucket`] each, sharing one worker
+//!   budget, with route-up admission control and per-bucket
+//!   [`BucketMetrics`] (see `docs/SERVING.md`).
 
 pub mod batcher;
 pub mod datafeed;
+pub mod gateway;
 pub mod router;
 pub mod serve;
 pub mod trainer;
 
 pub use batcher::{BatchPolicy, Batcher};
 pub use datafeed::DataFeed;
-pub use router::Router;
+pub use gateway::{bucket_report, pad_batch, replay_blocking,
+                  synthetic_trace, valid_rows, BucketMetrics,
+                  GatewayOptions, GatewayRequest, GatewayResponse,
+                  GatewayShape, ServingGateway, TraceItem,
+                  BUCKET_REPORT_HEADERS};
+pub use router::{Bucket, Router};
 pub use serve::{AttnRequest, AttnResponse, AttnShape, InferenceEngine,
                 NativeAttentionEngine, NativeAttnOptions, Request,
                 Response, ServeOptions};

@@ -1,17 +1,72 @@
-//! Length-bucket router: HLO executables have static shapes, so requests
-//! are routed to the smallest compiled bucket that fits, then padded.
+//! Length-bucket router: serving programs have static shapes, so requests
+//! are routed to the smallest bucket that fits, then padded.
+//!
+//! A [`Bucket`] describes one static-shape serving unit.  Two flavors
+//! share the struct: compiled-HLO buckets carry a `program` name (the
+//! [`super::InferenceEngine`] path), native buckets carry an attention
+//! `kernel` registry name plus pad-to length and batch size (the
+//! [`super::ServingGateway`] path).  The [`Router`] itself is agnostic —
+//! it only orders buckets by `seq_len` and picks the tightest fit.
 
 use anyhow::{bail, Result};
 
-/// One serving bucket: a compiled forward program with static (B, N).
+/// One serving bucket: a static (B, N) execution shape.
+///
+/// `program` names a compiled forward program (HLO buckets) and `kernel`
+/// names a native attention kernel in the registry (gateway buckets);
+/// exactly one of the two is non-empty in practice.  `seq_len` is the
+/// pad-to length and `batch_size` the maximum co-batched requests.
+///
+/// ```
+/// use clustered_transformers::coordinator::Bucket;
+///
+/// let b = Bucket::native("i-clustered-100", 256, 8);
+/// assert_eq!((b.seq_len, b.batch_size), (256, 8));
+/// assert_eq!(b.kernel, "i-clustered-100");
+/// assert!(b.program.is_empty());
+/// ```
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Bucket {
+    /// Compiled forward program name (empty for native buckets).
     pub program: String,
+    /// Static sequence length requests are padded to.
     pub seq_len: usize,
+    /// Maximum requests co-batched into one execution.
     pub batch_size: usize,
+    /// Native kernel registry name, e.g. `"i-clustered-100"` (empty for
+    /// compiled-HLO buckets).
+    pub kernel: String,
+}
+
+impl Bucket {
+    /// Compiled-HLO bucket (the [`super::InferenceEngine`] path).
+    pub fn hlo(program: impl Into<String>, seq_len: usize,
+               batch_size: usize) -> Self {
+        Self { program: program.into(), seq_len, batch_size,
+               kernel: String::new() }
+    }
+
+    /// Native-kernel bucket (the [`super::ServingGateway`] path).
+    pub fn native(kernel: impl Into<String>, seq_len: usize,
+                  batch_size: usize) -> Self {
+        Self { program: String::new(), seq_len, batch_size,
+               kernel: kernel.into() }
+    }
 }
 
 /// Routes requests by sequence length.
+///
+/// ```
+/// use clustered_transformers::coordinator::{Bucket, Router};
+///
+/// let r = Router::new(vec![
+///     Bucket::native("full", 128, 4),
+///     Bucket::native("full", 64, 8),
+/// ]).unwrap();
+/// assert_eq!(r.route(64).unwrap().seq_len, 64);  // exact fit
+/// assert_eq!(r.route(65).unwrap().seq_len, 128); // next bucket up
+/// assert!(r.route(129).is_none());               // too long: reject
+/// ```
 #[derive(Debug, Clone, Default)]
 pub struct Router {
     buckets: Vec<Bucket>, // sorted by seq_len ascending
@@ -30,15 +85,34 @@ impl Router {
         &self.buckets
     }
 
+    /// Longest request any bucket can hold.
+    pub fn max_len(&self) -> usize {
+        self.buckets.last().map(|b| b.seq_len).unwrap_or(0)
+    }
+
     /// Smallest bucket with seq_len >= len; None if the request is too
     /// long for every compiled program (caller rejects with backpressure).
     pub fn route(&self, len: usize) -> Option<&Bucket> {
         self.buckets.iter().find(|b| b.seq_len >= len)
     }
 
-    /// Index variant of [`route`].
+    /// Index variant of [`Router::route`].
     pub fn route_index(&self, len: usize) -> Option<usize> {
         self.buckets.iter().position(|b| b.seq_len >= len)
+    }
+
+    /// Every bucket index that can hold `len`, tightest fit first.
+    ///
+    /// This is the route-up order: when the tight bucket's queue is full,
+    /// an admission controller can spill the request into the next larger
+    /// bucket (trading padding waste for acceptance).  Empty when `len`
+    /// exceeds every bucket.
+    pub fn route_candidates(&self, len: usize)
+                            -> impl Iterator<Item = usize> + '_ {
+        let start = self
+            .route_index(len)
+            .unwrap_or(self.buckets.len());
+        start..self.buckets.len()
     }
 
     /// Padding waste fraction for a request of `len` in its bucket.
@@ -54,9 +128,9 @@ mod tests {
 
     fn router() -> Router {
         Router::new(vec![
-            Bucket { program: "b256".into(), seq_len: 256, batch_size: 4 },
-            Bucket { program: "b64".into(), seq_len: 64, batch_size: 8 },
-            Bucket { program: "b128".into(), seq_len: 128, batch_size: 8 },
+            Bucket::hlo("b256", 256, 4),
+            Bucket::hlo("b64", 64, 8),
+            Bucket::hlo("b128", 128, 8),
         ])
         .unwrap()
     }
@@ -72,12 +146,57 @@ mod tests {
     }
 
     #[test]
+    fn zero_length_routes_to_smallest_bucket() {
+        let r = router();
+        assert_eq!(r.route(0).unwrap().seq_len, 64);
+        assert_eq!(r.route_index(0), Some(0));
+        assert!((r.padding_waste(0).unwrap() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn exact_match_has_zero_waste() {
+        let r = router();
+        for (len, idx) in [(64, 0), (128, 1), (256, 2)] {
+            assert_eq!(r.route_index(len), Some(idx));
+            assert!(r.padding_waste(len).unwrap() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn over_max_is_rejected_everywhere() {
+        let r = router();
+        assert!(r.route(257).is_none());
+        assert_eq!(r.route_index(257), None);
+        assert_eq!(r.route_candidates(257).count(), 0);
+        assert!(r.padding_waste(257).is_none());
+        assert_eq!(r.max_len(), 256);
+    }
+
+    #[test]
+    fn route_candidates_are_tightest_first_then_up() {
+        let r = router();
+        assert_eq!(r.route_candidates(1).collect::<Vec<_>>(), vec![0, 1, 2]);
+        assert_eq!(r.route_candidates(65).collect::<Vec<_>>(), vec![1, 2]);
+        assert_eq!(r.route_candidates(256).collect::<Vec<_>>(), vec![2]);
+    }
+
+    #[test]
     fn padding_waste_monotone_within_bucket() {
         let r = router();
         assert!(r.padding_waste(64).unwrap() < 1e-9);
         let w65 = r.padding_waste(65).unwrap();
         let w128 = r.padding_waste(128).unwrap();
         assert!(w65 > w128);
+    }
+
+    #[test]
+    fn bucket_constructors_fill_the_right_field() {
+        let h = Bucket::hlo("asr.forward", 128, 4);
+        assert_eq!(h.program, "asr.forward");
+        assert!(h.kernel.is_empty());
+        let n = Bucket::native("clustered-100", 128, 4);
+        assert_eq!(n.kernel, "clustered-100");
+        assert!(n.program.is_empty());
     }
 
     #[test]

@@ -100,11 +100,8 @@ impl InferenceEngine {
         let mut buckets = Vec::new();
         for name in programs {
             let p = rt.program(name)?;
-            buckets.push(Bucket {
-                program: name.clone(),
-                seq_len: p.seq_len(),
-                batch_size: p.batch_size(),
-            });
+            buckets.push(Bucket::hlo(name.clone(), p.seq_len(),
+                                     p.batch_size()));
         }
         let artifacts_dir = rt.dir.clone();
         let router = Router::new(buckets)?;
@@ -235,10 +232,7 @@ fn dispatcher(rt: Runtime, bucket: Bucket, ch: Channel<Request>,
     let mut batcher: Batcher<Request> = Batcher::new(policy);
     loop {
         // Wait bounded by the batcher deadline so partial batches flush.
-        let wait = batcher
-            .time_to_deadline(Instant::now())
-            .unwrap_or(Duration::from_millis(50));
-        let item = ch.recv_timeout(wait.max(Duration::from_micros(100)));
+        let item = ch.recv_timeout(batcher.next_wait(Instant::now()));
         let mut ready: Option<Vec<Request>> = None;
         match item {
             Ok(Some(req)) => {
@@ -394,6 +388,29 @@ impl Default for NativeAttnOptions {
 /// deadline batcher → one (B, H, N, D) `run_batch` over the exec pool →
 /// per-request replies.  Shares [`ServeMetrics`] with the HLO engine so
 /// benches report both paths in the same terms.
+///
+/// One engine serves one static shape; a fleet of them behind the length
+/// router is [`super::ServingGateway`].
+///
+/// ```
+/// use clustered_transformers::attention::kernel_by_name;
+/// use clustered_transformers::coordinator::{
+///     AttnShape, NativeAttentionEngine, NativeAttnOptions,
+/// };
+///
+/// let shape = AttnShape { heads: 1, seq_len: 8, dk: 4, dv: 4 };
+/// let engine = NativeAttentionEngine::start(
+///     kernel_by_name("full").unwrap(), shape,
+///     NativeAttnOptions::default());
+/// let rx = engine
+///     .submit_blocking(vec![0.1; shape.qk_len()],
+///                      vec![0.2; shape.qk_len()],
+///                      vec![0.3; shape.v_len()])
+///     .unwrap();
+/// let resp = rx.recv().unwrap();
+/// assert_eq!(resp.out.len(), shape.v_len());
+/// engine.shutdown();
+/// ```
 pub struct NativeAttentionEngine {
     shape: AttnShape,
     ingress: Channel<AttnRequest>,
@@ -485,10 +502,7 @@ fn native_dispatcher(kernel: Box<dyn AttentionKernel>, shape: AttnShape,
     let pool = WorkerPool::new(opts.workers);
     let mut batcher: Batcher<AttnRequest> = Batcher::new(opts.policy);
     loop {
-        let wait = batcher
-            .time_to_deadline(Instant::now())
-            .unwrap_or(Duration::from_millis(50));
-        let item = ch.recv_timeout(wait.max(Duration::from_micros(100)));
+        let item = ch.recv_timeout(batcher.next_wait(Instant::now()));
         let mut ready: Option<Vec<AttnRequest>> = None;
         match item {
             Ok(Some(req)) => {

@@ -11,7 +11,7 @@ use std::thread::JoinHandle;
 
 pub mod pool;
 
-pub use pool::WorkerPool;
+pub use pool::{PoolLease, SharedWorkerPool, WorkerPool};
 
 /// Bounded multi-producer multi-consumer channel.
 pub struct Channel<T> {

@@ -10,6 +10,112 @@
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 
+/// A worker budget shared by several concurrent batch executors (one per
+/// serving bucket in the gateway).  Each batched call takes a [`lease`]
+/// first; the lease's [`WorkerPool`] is sized from the permits still
+/// available, so the workers held by all live leases **never sum above
+/// the budget**: a lone flush gets every core, a concurrent flush gets
+/// what remains (fair-capped at `total / live leases`), and when the
+/// budget is exhausted `lease` blocks until a lease drops — queueing the
+/// flush instead of oversubscribing the host.
+///
+/// One lease per flush, released (dropped) before the next `lease` call
+/// from the same thread — a thread holding a lease while taking another
+/// can block itself when the budget is spent.
+///
+/// Worker count never changes *results* — the per-slice PRNG stream
+/// contract makes kernel output independent of pool size — so dynamic
+/// sizing is invisible to callers beyond throughput.
+///
+/// [`lease`]: SharedWorkerPool::lease
+#[derive(Debug)]
+pub struct SharedWorkerPool {
+    total: usize,
+    state: std::sync::Mutex<PoolBudget>,
+    freed: std::sync::Condvar,
+}
+
+#[derive(Debug)]
+struct PoolBudget {
+    /// Worker permits not held by any live lease.
+    available: usize,
+    /// Live leases, including ones blocked waiting for permits.
+    active: usize,
+}
+
+impl SharedWorkerPool {
+    /// Budget of `total` workers (clamped to >= 1).
+    pub fn new(total: usize) -> Self {
+        let total = total.max(1);
+        Self {
+            total,
+            state: std::sync::Mutex::new(PoolBudget {
+                available: total,
+                active: 0,
+            }),
+            freed: std::sync::Condvar::new(),
+        }
+    }
+
+    /// One worker per available hardware thread.
+    pub fn auto() -> Self {
+        Self::new(WorkerPool::auto().workers())
+    }
+
+    pub fn total(&self) -> usize {
+        self.total
+    }
+
+    /// Live leases right now (including ones waiting for permits).
+    pub fn active(&self) -> usize {
+        self.state.lock().unwrap().active
+    }
+
+    /// Claim worker permits for one batched call: `min(available,
+    /// max(1, total / live leases))`, blocking while no permit is free.
+    /// The permits return to the budget when the lease drops.
+    pub fn lease(&self) -> PoolLease<'_> {
+        let mut st = self.state.lock().unwrap();
+        st.active += 1;
+        while st.available == 0 {
+            st = self.freed.wait(st).unwrap();
+        }
+        let fair = (self.total / st.active).max(1);
+        let take = fair.min(st.available);
+        st.available -= take;
+        PoolLease {
+            owner: self,
+            pool: WorkerPool::new(take),
+            permits: take,
+        }
+    }
+}
+
+/// RAII share of a [`SharedWorkerPool`]; derefs to a sized [`WorkerPool`].
+#[derive(Debug)]
+pub struct PoolLease<'a> {
+    owner: &'a SharedWorkerPool,
+    pool: WorkerPool,
+    permits: usize,
+}
+
+impl std::ops::Deref for PoolLease<'_> {
+    type Target = WorkerPool;
+
+    fn deref(&self) -> &WorkerPool {
+        &self.pool
+    }
+}
+
+impl Drop for PoolLease<'_> {
+    fn drop(&mut self) {
+        let mut st = self.owner.state.lock().unwrap();
+        st.available += self.permits;
+        st.active -= 1;
+        self.owner.freed.notify_all();
+    }
+}
+
 /// Worker-count policy for scoped data-parallel maps.
 #[derive(Debug, Clone, Copy)]
 pub struct WorkerPool {
@@ -187,5 +293,62 @@ mod tests {
     fn pool_clamps_workers() {
         assert_eq!(WorkerPool::new(0).workers(), 1);
         assert!(WorkerPool::auto().workers() >= 1);
+    }
+
+    #[test]
+    fn shared_pool_lone_lease_gets_and_returns_the_full_budget() {
+        let shared = SharedWorkerPool::new(8);
+        let a = shared.lease();
+        assert_eq!(a.workers(), 8);
+        assert_eq!(shared.active(), 1);
+        drop(a);
+        assert_eq!(shared.active(), 0);
+        // budget restored once the lease drops
+        assert_eq!(shared.lease().workers(), 8);
+    }
+
+    #[test]
+    fn shared_pool_concurrent_leases_never_exceed_the_budget() {
+        use std::sync::Arc;
+        let shared = Arc::new(SharedWorkerPool::new(4));
+        let in_flight = Arc::new(AtomicUsize::new(0));
+        let peak = Arc::new(AtomicUsize::new(0));
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let (shared, in_flight, peak) =
+                    (shared.clone(), in_flight.clone(), peak.clone());
+                std::thread::spawn(move || {
+                    for _ in 0..10 {
+                        let lease = shared.lease();
+                        assert!(lease.workers() >= 1);
+                        let now = in_flight
+                            .fetch_add(lease.workers(), Ordering::SeqCst)
+                            + lease.workers();
+                        peak.fetch_max(now, Ordering::SeqCst);
+                        std::thread::yield_now();
+                        in_flight
+                            .fetch_sub(lease.workers(), Ordering::SeqCst);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        // the no-oversubscription invariant: held workers never sum
+        // above the budget, no matter how leases interleave
+        assert!(peak.load(Ordering::SeqCst) <= 4,
+                "peak {} > budget", peak.load(Ordering::SeqCst));
+        assert_eq!(shared.active(), 0);
+    }
+
+    #[test]
+    fn shared_pool_lease_runs_maps_like_a_plain_pool() {
+        let shared = SharedWorkerPool::new(4);
+        let lease = shared.lease();
+        let got = lease.map_indexed(10, |i| i * 2);
+        assert_eq!(got, (0..10).map(|i| i * 2).collect::<Vec<_>>());
+        assert!(SharedWorkerPool::auto().total() >= 1);
+        assert_eq!(SharedWorkerPool::new(0).total(), 1);
     }
 }

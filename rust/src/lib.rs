@@ -35,14 +35,42 @@
 //!   native kernels: ingress queue → deadline batcher → one batched
 //!   `run_batch` per flush over the pool, with the same backpressure and
 //!   metrics as the compiled-HLO [`coordinator::InferenceEngine`].
+//! - [`coordinator::ServingGateway`] — a fleet of those engines, one per
+//!   sequence-length [`coordinator::Bucket`], behind the length router:
+//!   requests are routed to the tightest bucket, padded, co-batched and
+//!   executed over one shared [`exec::SharedWorkerPool`] budget, with
+//!   route-up admission control and per-bucket latency/padding-waste
+//!   metrics (see `docs/SERVING.md`).
+//!
+//! ## Serving in five lines
+//!
+//! ```
+//! use clustered_transformers::coordinator::{Bucket, GatewayOptions,
+//!                                           GatewayShape, ServingGateway};
+//!
+//! let shape = GatewayShape { heads: 1, dk: 4, dv: 4 };
+//! let gw = ServingGateway::start(
+//!     shape,
+//!     vec![Bucket::native("full", 8, 2), Bucket::native("full", 16, 2)],
+//!     GatewayOptions::default(),
+//! ).unwrap();
+//! // a 5-row request routes to the N=8 bucket and is padded to 8 rows
+//! let (q, k, v) = (vec![0.1; 5 * 4], vec![0.2; 5 * 4], vec![0.3; 5 * 4]);
+//! let rx = gw.submit_blocking(q, k, v, 5).unwrap();
+//! let resp = rx.recv().unwrap();
+//! assert_eq!(resp.bucket_seq_len, 8);
+//! assert_eq!(resp.out.len(), 5 * 4); // only the valid rows come back
+//! gw.shutdown();
+//! ```
 //!
 //! Python never runs on the request path: after `make artifacts` the Rust
 //! binary is self-contained.  Offline builds resolve `anyhow`/`log`/`xla`
 //! to the std-only shims under `vendor/`; swapping `vendor/xla` for the
 //! real xla_extension bindings re-enables PJRT execution unchanged.
 //!
-//! See `DESIGN.md` for the system inventory and experiment index and
-//! `EXPERIMENTS.md` for paper-vs-measured results.
+//! See `README.md` for the quickstart and doc map, `DESIGN.md` for the
+//! system inventory and experiment index and `EXPERIMENTS.md` for
+//! paper-vs-measured results.
 
 pub mod attention;
 pub mod benchlib;

@@ -4,7 +4,9 @@
 //!   list        show manifest programs
 //!   train       train one model via compiled train-step HLO
 //!   eval        evaluate a checkpoint with any attention variant
-//!   serve       run the TCP inference server
+//!   serve       run the TCP inference server (compiled HLO buckets)
+//!   gateway     multi-bucket native attention gateway: replay a
+//!               synthetic mixed-length trace (default) or serve TCP
 //!   validate    run every *.forward program once (artifact smoke test)
 //!   bench-attn  quick native attention timing (see benches for full runs)
 
@@ -14,7 +16,7 @@ use anyhow::{anyhow, Result};
 use clustered_transformers::cli::Command;
 use clustered_transformers::config::{find_repo_root, init_logging, RunConfig};
 use clustered_transformers::coordinator::{
-    trainer, DataFeed, InferenceEngine, ServeOptions, TrainOptions,
+    self, trainer, DataFeed, InferenceEngine, ServeOptions, TrainOptions,
 };
 use clustered_transformers::data::Split;
 use clustered_transformers::runtime::{checkpoint::Checkpoint, HostTensor,
@@ -37,13 +39,14 @@ fn dispatch(argv: &[String]) -> Result<()> {
         "train" => cmd_train(rest),
         "eval" => cmd_eval(rest),
         "serve" => cmd_serve(rest),
+        "gateway" => cmd_gateway(rest),
         "validate" => cmd_validate(rest),
         "bench-attn" => cmd_bench_attn(rest),
         _ => {
             println!(
                 "ct — Fast Transformers with Clustered Attention (repro)\n\
-                 subcommands: list | train | eval | serve | validate | \
-                 bench-attn\n\
+                 subcommands: list | train | eval | serve | gateway | \
+                 validate | bench-attn\n\
                  run `ct <subcommand> --help` conceptually via source; \
                  common options: --artifacts DIR --steps N --model NAME"
             );
@@ -223,6 +226,91 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
     clustered_transformers::server::serve(engine, &addr, stop, |a| {
         println!("bound {a}");
     })
+}
+
+fn cmd_gateway(rest: &[String]) -> Result<()> {
+    let cmd = Command::new("gateway",
+                          "multi-bucket native attention serving gateway")
+        .opt("buckets", Some("64,128,256"), "pad-to lengths, csv")
+        .opt("batch", Some("8"), "max co-batched requests per bucket")
+        .opt("kernel", Some("i-clustered-8"),
+             "attention kernel registry name, every bucket")
+        .opt("heads", Some("4"), "heads per request")
+        .opt("dk", Some("32"), "query/key head dim")
+        .opt("dv", Some("32"), "value head dim")
+        .opt("requests", Some("64"), "synthetic trace length (trace mode)")
+        .opt("clients", Some("4"), "concurrent submitters (trace mode)")
+        .opt("max-wait-ms", Some("2"), "batcher deadline")
+        .opt("queue", Some("64"), "per-bucket ingress queue capacity")
+        .opt("workers", Some("0"), "shared worker budget (0 = auto)")
+        .opt("seed", Some("0"), "trace + clustering seed")
+        .opt("addr", None, "bind address: serve TCP instead of a trace");
+    let args = cmd.parse(rest)?;
+    init_logging(true);
+    let kernel = args.get_or("kernel", "i-clustered-8");
+    if attention::Variant::parse(&kernel).is_none() {
+        return Err(anyhow!(
+            "unknown kernel {kernel:?}; registered families: {}",
+            attention::kernel_families().join(", ")));
+    }
+    let batch = args.get_usize("batch", 8)?;
+    let buckets: Vec<coordinator::Bucket> = args
+        .get_or("buckets", "64,128,256")
+        .split(',')
+        .map(|s| -> Result<coordinator::Bucket> {
+            let n: usize = s.trim().parse().map_err(
+                |_| anyhow!("--buckets expects integers, got {s:?}"))?;
+            Ok(coordinator::Bucket::native(kernel.clone(), n, batch))
+        })
+        .collect::<Result<_>>()?;
+    let shape = coordinator::GatewayShape {
+        heads: args.get_usize("heads", 4)?,
+        dk: args.get_usize("dk", 32)?,
+        dv: args.get_usize("dv", 32)?,
+    };
+    let seed = args.get_u64("seed", 0)?;
+    let opts = coordinator::GatewayOptions {
+        max_wait: std::time::Duration::from_millis(
+            args.get_u64("max-wait-ms", 2)?),
+        queue_capacity: args.get_usize("queue", 64)?,
+        workers: args.get_usize("workers", 0)?, // 0 = auto
+        seed,
+        route_up: true,
+    };
+    let gw = coordinator::ServingGateway::start(shape, buckets, opts)?;
+
+    if let Some(addr) = args.get("addr") {
+        let gw = Arc::new(gw);
+        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        println!("gateway serving on {addr} (ctrl-c to stop)");
+        return clustered_transformers::server::serve_gateway(
+            gw, addr, stop, |a| println!("bound {a}"));
+    }
+
+    // trace mode: replay a mixed-length synthetic trace, report buckets
+    let count = args.get_usize("requests", 64)?;
+    let clients = args.get_usize("clients", 4)?;
+    let max_n = gw.router().max_len();
+    let min_len = (max_n / 16).max(1);
+    let trace =
+        coordinator::synthetic_trace(shape, min_len, max_n, count, seed);
+    let t0 = std::time::Instant::now();
+    let responses = coordinator::replay_blocking(&gw, trace, clients);
+    let wall = t0.elapsed().as_secs_f64();
+    let mut table = benchlib::Table::new(
+        &format!(
+            "gateway: {count} requests, lens {min_len}..{max_n}, \
+             {clients} clients, {:.2}s wall", wall),
+        &coordinator::BUCKET_REPORT_HEADERS,
+    );
+    for row in coordinator::bucket_report(&gw, wall) {
+        table.row(row);
+    }
+    table.emit();
+    println!("completed {} requests; rejected {}", responses.len(),
+             gw.rejected_total());
+    gw.shutdown();
+    Ok(())
 }
 
 fn cmd_bench_attn(rest: &[String]) -> Result<()> {

@@ -83,6 +83,38 @@ pub fn span_f1(pred: (i32, i32), gold: (i32, i32)) -> f64 {
     2.0 * p * r / (p + r)
 }
 
+/// Padding-waste accumulator for static-shape serving.
+///
+/// A length-bucketed engine pads every request of `len` valid rows up to
+/// its bucket's `seq_len`; the waste ratio is the fraction of executed
+/// rows that were padding.  Accumulated per bucket by the serving
+/// gateway and reported next to latency percentiles, because waste is
+/// the price paid for static shapes and bucket sizing is the dial.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct PaddingWaste {
+    /// Valid (request) rows executed.
+    pub valid: u64,
+    /// Total rows executed after padding (`Σ bucket seq_len`).
+    pub padded: u64,
+}
+
+impl PaddingWaste {
+    /// Record one request: `len` valid rows padded to `seq_len`.
+    pub fn add(&mut self, len: usize, seq_len: usize) {
+        self.valid += len as u64;
+        self.padded += seq_len as u64;
+    }
+
+    /// Fraction of executed rows that were padding, in [0, 1].
+    pub fn ratio(&self) -> f64 {
+        if self.padded == 0 {
+            0.0
+        } else {
+            1.0 - self.valid as f64 / self.padded as f64
+        }
+    }
+}
+
 /// Fixed-boundary latency histogram (µs buckets, power-of-√2 spacing).
 #[derive(Debug, Clone)]
 pub struct LatencyHistogram {
@@ -209,6 +241,19 @@ mod tests {
         assert!((45_000.0..56_000.0).contains(&p50), "{p50}");
         let p99 = h.percentile_us(99.0);
         assert!(p99 >= 98_000.0, "{p99}");
+    }
+
+    #[test]
+    fn padding_waste_ratio() {
+        let mut w = PaddingWaste::default();
+        assert_eq!(w.ratio(), 0.0); // empty: no waste, not NaN
+        w.add(64, 64); // exact fit
+        assert!(w.ratio() < 1e-12);
+        w.add(32, 64); // half padding
+        // 96 valid of 128 executed -> 25% waste
+        assert!((w.ratio() - 0.25).abs() < 1e-12);
+        w.add(0, 64); // degenerate empty request is pure waste
+        assert!((w.ratio() - (1.0 - 96.0 / 192.0)).abs() < 1e-12);
     }
 
     #[test]

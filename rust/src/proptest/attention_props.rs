@@ -5,11 +5,19 @@
 //!     (`run_batch_seq`) for every registered kernel family.
 //!  2. **Row-stochasticity** — clustered attention matrices (plain and
 //!     improved) stay probability distributions row-wise.
+//!  3. **Gateway determinism** — a live `ServingGateway` co-batch
+//!     (threaded ingress, deadline batcher, shared pool) returns the
+//!     same bits as the sequential per-slice loop over the same padded
+//!     batch.
+
+use std::time::Duration;
 
 use crate::attention::{clustered_attention_matrix,
-                       improved_clustered_attention_matrix, kernel_for,
-                       run_batch_seq, Variant};
+                       improved_clustered_attention_matrix, kernel_by_name,
+                       kernel_for, run_batch_seq, Variant};
 use crate::clustering::{cluster_queries, Clustering};
+use crate::coordinator::{pad_batch, valid_rows, Bucket, GatewayOptions,
+                         GatewayShape, ServingGateway};
 use crate::exec::WorkerPool;
 use crate::proptest::forall;
 use crate::tensor::batch::BatchMatrix;
@@ -65,6 +73,101 @@ fn prop_run_batch_is_bit_identical_to_sequential_loop() {
                     return Err(format!("{} bad output shape", var.name()));
                 }
             }
+            Ok(())
+        },
+    );
+}
+
+/// One gateway request: (q, k, v) blocks plus the valid length.
+type GatewayReq = (Vec<f32>, Vec<f32>, Vec<f32>, usize);
+
+#[test]
+fn prop_gateway_cobatch_is_bit_identical_to_sequential_padded_run() {
+    const N: usize = 32;
+    forall(
+        "gateway co-batch ≡ run_batch_seq over the padded batch",
+        0x6A7E3A1D,
+        4,
+        |rng| {
+            let kernels = ["full", "clustered-4", "i-clustered-4", "lsh-1"];
+            let kernel = kernels[rng.below(kernels.len())].to_string();
+            let shape =
+                GatewayShape { heads: 1 + rng.below(2), dk: 8, dv: 8 };
+            let n_req = 2 + rng.below(2); // 2..=3
+            let reqs: Vec<GatewayReq> = (0..n_req)
+                .map(|_| {
+                    let len = 1 + rng.below(N); // 1..=N
+                    (rng.normal_vec(shape.qk_len(len)),
+                     rng.normal_vec(shape.qk_len(len)),
+                     rng.normal_vec(shape.v_len(len)),
+                     len)
+                })
+                .collect();
+            let workers = 2 + rng.below(3); // 2..=4
+            let seed = rng.next_u64();
+            (kernel, shape, reqs, workers, seed)
+        },
+        |(kernel, shape, reqs, workers, seed)| {
+            let gw = ServingGateway::start(
+                *shape,
+                vec![Bucket::native(kernel.clone(), N, reqs.len())],
+                GatewayOptions {
+                    // the size trigger must form the batch, not the clock
+                    max_wait: Duration::from_secs(10),
+                    queue_capacity: reqs.len() + 1,
+                    workers: *workers,
+                    seed: *seed,
+                    route_up: false,
+                },
+            )
+            .map_err(|e| format!("gateway start: {e}"))?;
+            let rxs: Vec<_> = reqs
+                .iter()
+                .map(|(q, k, v, len)| {
+                    gw.submit_blocking(q.clone(), k.clone(), v.clone(),
+                                       *len)
+                        .expect("submit")
+                })
+                .collect();
+            let responses: Vec<_> = rxs
+                .into_iter()
+                .map(|rx| rx.recv_timeout(Duration::from_secs(30))
+                            .expect("gateway reply"))
+                .collect();
+
+            // reference: sequential loop over the identically padded batch
+            let blocks = |sel: fn(&GatewayReq) -> (&[f32], usize)| {
+                reqs.iter().map(sel).collect::<Vec<_>>()
+            };
+            let q = pad_batch(&blocks(|r| (&r.0, r.3)), shape.heads, N,
+                              shape.dk);
+            let k = pad_batch(&blocks(|r| (&r.1, r.3)), shape.heads, N,
+                              shape.dk);
+            let v = pad_batch(&blocks(|r| (&r.2, r.3)), shape.heads, N,
+                              shape.dv);
+            let want = run_batch_seq(
+                kernel_by_name(kernel).expect("kernel").as_ref(), &q, &k,
+                &v, *seed);
+
+            for (slot, (resp, (_, _, _, len))) in
+                responses.iter().zip(reqs).enumerate()
+            {
+                if resp.batch_occupancy != reqs.len() {
+                    return Err(format!(
+                        "batch composition changed: occupancy {} != {}",
+                        resp.batch_occupancy, reqs.len()));
+                }
+                let want_rows = valid_rows(&want, slot, *len);
+                let same = resp.out.len() == want_rows.len()
+                    && resp.out.iter().zip(&want_rows)
+                        .all(|(a, b)| a.to_bits() == b.to_bits());
+                if !same {
+                    return Err(format!(
+                        "{kernel}: slot {slot} (len {len}) diverged from \
+                         the sequential padded run"));
+                }
+            }
+            gw.shutdown();
             Ok(())
         },
     );

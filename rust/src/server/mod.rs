@@ -1,12 +1,20 @@
 //! JSON-lines-over-TCP inference server + client.
 //!
-//! Protocol: one JSON object per line.
+//! Protocol: one JSON object per line.  Two endpoints share the framing:
+//!
+//! ASR decode ([`serve`], over [`InferenceEngine`]):
 //!   request : {"id": 1, "frames": [f32...], "len": N, "d_feat": D}
 //!   response: {"id": 1, "labels": [i32...], "latency_us": 1234}
-//!   error   : {"id": 1, "error": "..."}
 //!
-//! The server is a thin shim over [`InferenceEngine`]; decoding (greedy
-//! CTC) happens server-side so clients receive label sequences.
+//! Native attention ([`serve_gateway`], over [`ServingGateway`]):
+//!   request : {"id": 1, "len": N, "q": [f32...], "k": [...], "v": [...]}
+//!   response: {"id": 1, "out": [f32...], "bucket_n": 128,
+//!              "latency_us": 1234, "batch_occupancy": 3}
+//!
+//! Either endpoint replies {"id": ..., "error": "..."} on a bad request
+//! (including backpressure surfaced from the engine; `id` is 0 when the
+//! line was not valid JSON).  Decoding (greedy CTC) happens server-side
+//! on the ASR endpoint so clients receive label sequences.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -15,27 +23,32 @@ use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
 
-use crate::coordinator::InferenceEngine;
+use crate::coordinator::{InferenceEngine, ServingGateway};
 use crate::data::asr::ctc_greedy_decode;
 use crate::jsonio::{obj, parse, Value};
 
-/// Serve until `stop` flips; returns the bound address immediately via
-/// the callback (port 0 = ephemeral).
-pub fn serve(engine: Arc<InferenceEngine>, addr: &str,
-             stop: Arc<AtomicBool>,
-             on_bound: impl FnOnce(std::net::SocketAddr)) -> Result<()> {
+/// Accept connections until `stop` flips, spawning one detached handler
+/// thread per connection; reports the bound address via `on_bound`
+/// (port 0 = ephemeral).
+fn accept_loop<H>(addr: &str, stop: Arc<AtomicBool>,
+                  on_bound: impl FnOnce(std::net::SocketAddr),
+                  handler: H) -> Result<()>
+where
+    H: Fn(TcpStream) -> Result<()> + Send + Sync + 'static,
+{
     let listener = TcpListener::bind(addr)?;
     listener.set_nonblocking(true)?;
     on_bound(listener.local_addr()?);
+    let handler = Arc::new(handler);
     while !stop.load(Ordering::Relaxed) {
         match listener.accept() {
             Ok((stream, peer)) => {
                 log::debug!("connection from {peer}");
-                let engine = engine.clone();
+                let handler = handler.clone();
                 // detached: a handler exits when its client disconnects,
                 // so shutdown never blocks on open-but-idle connections
                 std::thread::spawn(move || {
-                    if let Err(e) = handle_conn(stream, engine) {
+                    if let Err(e) = (handler.as_ref())(stream) {
                         log::debug!("conn ended: {e:#}");
                     }
                 });
@@ -49,8 +62,11 @@ pub fn serve(engine: Arc<InferenceEngine>, addr: &str,
     Ok(())
 }
 
-fn handle_conn(stream: TcpStream, engine: Arc<InferenceEngine>)
-               -> Result<()> {
+/// One request/reply line-loop over `stream`: each line parses to JSON,
+/// goes through `reply_for`, and any failure becomes an `{"id", "error"}`
+/// object keyed to the request it belongs to.
+fn line_loop(stream: TcpStream,
+             reply_for: impl Fn(&Value) -> Result<Value>) -> Result<()> {
     let mut writer = stream.try_clone()?;
     let reader = BufReader::new(stream);
     for line in reader.lines() {
@@ -58,9 +74,21 @@ fn handle_conn(stream: TcpStream, engine: Arc<InferenceEngine>)
         if line.trim().is_empty() {
             continue;
         }
-        let reply = match handle_request(&line, &engine) {
-            Ok(v) => v,
-            Err(e) => obj(vec![("error", format!("{e:#}").into())]),
+        let reply = match parse(&line) {
+            Err(e) => obj(vec![
+                ("id", 0i64.into()),
+                ("error", format!("bad json: {e}").into()),
+            ]),
+            Ok(req) => {
+                let id = req.get("id").as_i64().unwrap_or(0);
+                match reply_for(&req) {
+                    Ok(v) => v,
+                    Err(e) => obj(vec![
+                        ("id", id.into()),
+                        ("error", format!("{e:#}").into()),
+                    ]),
+                }
+            }
         };
         writer.write_all(reply.to_string().as_bytes())?;
         writer.write_all(b"\n")?;
@@ -68,8 +96,38 @@ fn handle_conn(stream: TcpStream, engine: Arc<InferenceEngine>)
     Ok(())
 }
 
-fn handle_request(line: &str, engine: &InferenceEngine) -> Result<Value> {
-    let req = parse(line).map_err(|e| anyhow!("bad json: {e}"))?;
+/// Serve the ASR decode endpoint until `stop` flips.
+pub fn serve(engine: Arc<InferenceEngine>, addr: &str,
+             stop: Arc<AtomicBool>,
+             on_bound: impl FnOnce(std::net::SocketAddr)) -> Result<()> {
+    accept_loop(addr, stop, on_bound, move |stream| {
+        let engine = engine.clone();
+        line_loop(stream, move |req| handle_request(req, &engine))
+    })
+}
+
+/// Serve the native attention gateway endpoint until `stop` flips.
+pub fn serve_gateway(gateway: Arc<ServingGateway>, addr: &str,
+                     stop: Arc<AtomicBool>,
+                     on_bound: impl FnOnce(std::net::SocketAddr))
+                     -> Result<()> {
+    accept_loop(addr, stop, on_bound, move |stream| {
+        let gateway = gateway.clone();
+        line_loop(stream, move |req| handle_attn_request(req, &gateway))
+    })
+}
+
+fn f32_field(req: &Value, key: &str) -> Result<Vec<f32>> {
+    Ok(req
+        .get(key)
+        .as_arr()
+        .ok_or_else(|| anyhow!("missing {key}"))?
+        .iter()
+        .map(|v| v.as_f64().unwrap_or(0.0) as f32)
+        .collect())
+}
+
+fn handle_request(req: &Value, engine: &InferenceEngine) -> Result<Value> {
     let id = req.get("id").as_i64().unwrap_or(0);
     let len = req
         .get("len")
@@ -79,13 +137,7 @@ fn handle_request(line: &str, engine: &InferenceEngine) -> Result<Value> {
         .get("d_feat")
         .as_usize()
         .ok_or_else(|| anyhow!("missing d_feat"))?;
-    let frames: Vec<f32> = req
-        .get("frames")
-        .as_arr()
-        .ok_or_else(|| anyhow!("missing frames"))?
-        .iter()
-        .map(|v| v.as_f64().unwrap_or(0.0) as f32)
-        .collect();
+    let frames = f32_field(req, "frames")?;
     if frames.len() != len * d_feat {
         return Err(anyhow!("frames len {} != len*d_feat {}", frames.len(),
                            len * d_feat));
@@ -106,6 +158,31 @@ fn handle_request(line: &str, engine: &InferenceEngine) -> Result<Value> {
     ]))
 }
 
+fn handle_attn_request(req: &Value, gateway: &ServingGateway)
+                       -> Result<Value> {
+    let id = req.get("id").as_i64().unwrap_or(0);
+    let len = req
+        .get("len")
+        .as_usize()
+        .ok_or_else(|| anyhow!("missing len"))?;
+    let (q, k, v) = (f32_field(req, "q")?, f32_field(req, "k")?,
+                     f32_field(req, "v")?);
+    // blocking: a TCP client rides out backpressure instead of seeing
+    // spurious 429-style errors (fail-fast admission is the bench's job)
+    let rx = gateway.submit_blocking(q, k, v, len)?;
+    let resp = rx
+        .recv()
+        .map_err(|_| anyhow!("gateway dropped the request"))?;
+    Ok(obj(vec![
+        ("id", id.into()),
+        ("out", Value::Arr(
+            resp.out.iter().map(|&x| Value::Num(x as f64)).collect())),
+        ("bucket_n", (resp.bucket_seq_len as i64).into()),
+        ("latency_us", (resp.total_time.as_micros() as i64).into()),
+        ("batch_occupancy", (resp.batch_occupancy as i64).into()),
+    ]))
+}
+
 /// Minimal blocking client for tests/examples.
 pub struct Client {
     reader: BufReader<TcpStream>,
@@ -119,17 +196,7 @@ impl Client {
                   writer: stream })
     }
 
-    /// Send one utterance, wait for its decode.
-    pub fn transcribe(&mut self, id: i64, frames: &[f32], len: usize,
-                      d_feat: usize) -> Result<Value> {
-        let frames_json = Value::Arr(
-            frames.iter().map(|&f| Value::Num(f as f64)).collect());
-        let req = obj(vec![
-            ("id", id.into()),
-            ("frames", frames_json),
-            ("len", len.into()),
-            ("d_feat", d_feat.into()),
-        ]);
+    fn round_trip(&mut self, req: Value) -> Result<Value> {
         self.writer.write_all(req.to_string().as_bytes())?;
         self.writer.write_all(b"\n")?;
         let mut line = String::new();
@@ -139,5 +206,32 @@ impl Client {
             return Err(anyhow!("server error: {err}"));
         }
         Ok(v)
+    }
+
+    /// Send one utterance to the ASR endpoint, wait for its decode.
+    pub fn transcribe(&mut self, id: i64, frames: &[f32], len: usize,
+                      d_feat: usize) -> Result<Value> {
+        let frames_json = Value::Arr(
+            frames.iter().map(|&f| Value::Num(f as f64)).collect());
+        self.round_trip(obj(vec![
+            ("id", id.into()),
+            ("frames", frames_json),
+            ("len", len.into()),
+            ("d_feat", d_feat.into()),
+        ]))
+    }
+
+    /// Send one (H, len, D) attention request to the gateway endpoint.
+    pub fn attend(&mut self, id: i64, q: &[f32], k: &[f32], v: &[f32],
+                  len: usize) -> Result<Value> {
+        let arr = |xs: &[f32]| Value::Arr(
+            xs.iter().map(|&x| Value::Num(x as f64)).collect());
+        self.round_trip(obj(vec![
+            ("id", id.into()),
+            ("len", len.into()),
+            ("q", arr(q)),
+            ("k", arr(k)),
+            ("v", arr(v)),
+        ]))
     }
 }
