@@ -1,0 +1,249 @@
+//! Compute-core bench: the tiled parallel substrate measured head to
+//! head against the paths it replaced.
+//!
+//!  1. **GEMM** — naive i-k-j loop vs blocked panel-packed kernel
+//!    (sequential and row-partitioned over the pool), NN and NT, with a
+//!    bit-identical column (the determinism contract is part of the
+//!    measurement).
+//!  2. **Softmax attention** — materialized O(N²) logits vs the
+//!    streaming online-max path, up to N = 4096, where the dense path
+//!    allocates a 64 MB logits matrix per head and the streaming path
+//!    touches O(N·block).  Peak-RSS is sampled after each stage.
+//!  3. **LSH hashing** — the seed's N·bits scalar dots vs the one-shot
+//!    `(N×D)·(D×bits)` GEMM + sign bit-packing.
+//!
+//! Writes `BENCH_compute_core.json` at the repo root
+//! (`benchlib::write_bench_json` schema).  `CT_SMOKE=1` shrinks every
+//! dimension so CI can compile-and-run the perf path in seconds.
+
+use std::time::Duration;
+
+use clustered_transformers::attention::full::{
+    full_attention_materialized, streaming_softmax_attention,
+};
+use clustered_transformers::benchlib::{self, BenchRecord, Table};
+use clustered_transformers::clustering::Lsh;
+use clustered_transformers::config::init_logging;
+use clustered_transformers::exec::{ExecCtx, WorkerPool};
+use clustered_transformers::prng::Xoshiro256;
+use clustered_transformers::tensor::{dot, gemm, Matrix};
+
+fn smoke() -> bool {
+    std::env::var("CT_SMOKE").map(|v| v == "1").unwrap_or(false)
+}
+
+fn bench_quick<F: FnMut()>(f: F) -> benchlib::Stats {
+    let (min_iters, max_iters, min_time) = if smoke() {
+        (1, 2, Duration::from_millis(0))
+    } else {
+        (3, 12, Duration::from_millis(400))
+    };
+    benchlib::bench(f, 1, min_iters, min_time, max_iters)
+}
+
+fn bits_eq(a: &Matrix, b: &Matrix) -> bool {
+    a.bit_identical(b)
+}
+
+fn gemm_section(ctx: &ExecCtx, records: &mut Vec<BenchRecord>) {
+    let shapes: &[(usize, usize, usize, &str)] = if smoke() {
+        &[(96, 64, 96, "nt"), (96, 96, 64, "nn")]
+    } else {
+        &[
+            (512, 64, 512, "nt"),    // Q·Kᵀ logits shape
+            (1024, 64, 1024, "nt"),  // longer-N logits
+            (1024, 1024, 64, "nn"),  // A·V shape
+            (100, 4096, 64, "nn"),   // centroid A^c·V shape
+        ]
+    };
+    let mut tbl = Table::new(
+        &format!("compute-core GEMM: naive vs blocked vs blocked+pool \
+                  ({} workers)", ctx.workers()),
+        &["shape", "naive ms", "blocked ms", "pool ms", "GFLOP/s pool",
+          "bit-identical"],
+    );
+    let mut rng = Xoshiro256::new(1);
+    for &(m, k, n, kind) in shapes {
+        let a = Matrix::randn(m, k, &mut rng);
+        let (b, naive, blocked): (Matrix, fn(&Matrix, &Matrix) -> Matrix,
+                                  fn(&Matrix, &Matrix, &ExecCtx) -> Matrix) =
+            if kind == "nn" {
+                (Matrix::randn(k, n, &mut rng), gemm::naive_nn,
+                 gemm::matmul_nn)
+            } else {
+                (Matrix::randn(n, k, &mut rng), gemm::naive_nt,
+                 gemm::matmul_nt)
+            };
+        let st_naive = bench_quick(|| { let _ = naive(&a, &b); });
+        let seq = ExecCtx::sequential();
+        let st_blocked = bench_quick(|| { let _ = blocked(&a, &b, &seq); });
+        let st_pool = bench_quick(|| { let _ = blocked(&a, &b, ctx); });
+        let identical = bits_eq(&naive(&a, &b), &blocked(&a, &b, ctx));
+        let gflops =
+            (m as f64 * k as f64 * n as f64) / st_pool.mean_s.max(1e-12)
+                / 1e9;
+        let label = format!("gemm-{kind}-{m}x{k}x{n}");
+        tbl.row(vec![
+            label.clone(),
+            format!("{:.2}", st_naive.mean_ms()),
+            format!("{:.2}", st_blocked.mean_ms()),
+            format!("{:.2}", st_pool.mean_ms()),
+            format!("{gflops:.2}"),
+            identical.to_string(),
+        ]);
+        records.push(
+            BenchRecord::from_stats(&label, m, &st_pool)
+                .with("naive_ms", st_naive.mean_ms())
+                .with("blocked_seq_ms", st_blocked.mean_ms())
+                .with("gflops", gflops)
+                .with("bit_identical", identical as u8 as f64));
+    }
+    tbl.emit();
+}
+
+/// The acceptance demo: long-N full attention through the streaming
+/// path, with its RSS growth measured.  Must run before ANY other
+/// section — VmHWM is a process-wide high-water mark, so dense N×N (or
+/// large GEMM) work beforehand would raise the mark and hide a
+/// streaming memory regression entirely.
+fn streaming_memory_demo(ctx: &ExecCtx, records: &mut Vec<BenchRecord>) {
+    let n = if smoke() { 1024 } else { 4096 };
+    let mut r = Xoshiro256::new(3);
+    let q = Matrix::randn(n, 64, &mut r);
+    let k = Matrix::randn(n, 64, &mut r);
+    let v = Matrix::randn(n, 64, &mut r);
+    let before = benchlib::peak_rss_bytes();
+    let out = streaming_softmax_attention(&q, &k, &v, 0.125, ctx);
+    let grown = benchlib::peak_rss_bytes().saturating_sub(before);
+    println!("streaming full attention N={n}: out {}x{}, peak-RSS grew \
+              {:.1} MB (an N×N f32 matrix alone would be {:.0} MB)",
+             out.rows, out.cols, grown as f64 / (1024.0 * 1024.0),
+             (n * n * 4) as f64 / (1024.0 * 1024.0));
+    records.push(
+        BenchRecord::from_stats(&format!("softmax-stream-demo-n{n}"), n,
+                                &benchlib::Stats::from_samples(&[]))
+            .with("rss_growth_mb", grown as f64 / (1024.0 * 1024.0))
+            .with("dense_logits_mb",
+                  (n * n * 4) as f64 / (1024.0 * 1024.0)));
+}
+
+fn softmax_section(ctx: &ExecCtx, records: &mut Vec<BenchRecord>) {
+    let (ns, d): (&[usize], usize) =
+        if smoke() { (&[256], 32) } else { (&[1024, 2048, 4096], 64) };
+    let mut tbl = Table::new(
+        "compute-core softmax attention: materialized N×N vs streaming \
+         O(N·block)",
+        &["N", "materialized ms", "stream ms", "stream+pool ms",
+          "max|Δ|", "RSS hwm MB"],
+    );
+    let mut rng = Xoshiro256::new(2);
+    for &n in ns {
+        let q = Matrix::randn(n, d, &mut rng);
+        let k = Matrix::randn(n, d, &mut rng);
+        let v = Matrix::randn(n, d, &mut rng);
+        let scale = 1.0 / (d as f32).sqrt();
+        let seq = ExecCtx::sequential();
+        // the dense path past N=2048 exists to show exactly what the
+        // streaming path avoids; one timed run is enough
+        // dense timings come after the demo above on purpose: the
+        // materialized N×N run permanently raises the RSS high-water
+        // mark, so the table's RSS column reads as the process hwm
+        // (monotone), not a per-stage attribution
+        let st_mat = bench_quick(
+            || { let _ = full_attention_materialized(&q, &k, &v); });
+        let st_stream = bench_quick(
+            || { let _ = streaming_softmax_attention(&q, &k, &v, scale,
+                                                     &seq); });
+        let st_pool = bench_quick(
+            || { let _ = streaming_softmax_attention(&q, &k, &v, scale,
+                                                     ctx); });
+        let diff = streaming_softmax_attention(&q, &k, &v, scale, ctx)
+            .max_abs_diff(&full_attention_materialized(&q, &k, &v));
+        let rss_mb = benchlib::peak_rss_bytes() as f64 / (1024.0 * 1024.0);
+        tbl.row(vec![
+            n.to_string(),
+            format!("{:.1}", st_mat.mean_ms()),
+            format!("{:.1}", st_stream.mean_ms()),
+            format!("{:.1}", st_pool.mean_ms()),
+            format!("{diff:.2e}"),
+            format!("{rss_mb:.0}"),
+        ]);
+        records.push(
+            BenchRecord::from_stats(&format!("softmax-stream-n{n}"), n,
+                                    &st_pool)
+                .with("materialized_ms", st_mat.mean_ms())
+                .with("stream_seq_ms", st_stream.mean_ms())
+                .with("max_abs_diff", diff as f64)
+                .with("peak_rss_mb", rss_mb));
+    }
+    tbl.emit();
+}
+
+fn lsh_section(ctx: &ExecCtx, records: &mut Vec<BenchRecord>) {
+    let (n, d, bits) = if smoke() { (2048, 32, 63) } else {
+        (32768, 64, 63)
+    };
+    let mut rng = Xoshiro256::new(4);
+    let lsh = Lsh::new(d, bits, &mut rng);
+    let x = Matrix::randn(n, d, &mut rng);
+    // the seed path: N·bits separate scalar dots
+    let scalar_hash = || {
+        let mut codes =
+            clustered_transformers::clustering::BitCodes::new(n, bits);
+        for i in 0..n {
+            for b in 0..bits {
+                if dot(x.row(i), lsh.proj.row(b)) >= 0.0 {
+                    codes.set_bit(i, b);
+                }
+            }
+        }
+        codes
+    };
+    let st_scalar = bench_quick(|| { let _ = scalar_hash(); });
+    let seq = ExecCtx::sequential();
+    let st_gemm = bench_quick(|| { let _ = lsh.hash_ctx(&x, &seq); });
+    let st_pool = bench_quick(|| { let _ = lsh.hash_ctx(&x, ctx); });
+    // summation order differs between dot() and the GEMM, so a sign can
+    // flip only when a projection lands within float noise of zero
+    let (a, b) = (scalar_hash(), lsh.hash_ctx(&x, ctx));
+    let flipped: u32 = a.words.iter().zip(&b.words)
+        .map(|(x, y)| (x ^ y).count_ones())
+        .sum();
+    let mut tbl = Table::new(
+        &format!("compute-core LSH hash: N={n} D={d} bits={bits}"),
+        &["path", "ms", "Mcodes/s"],
+    );
+    for (name, st) in [("scalar dots", &st_scalar),
+                       ("gemm", &st_gemm), ("gemm+pool", &st_pool)] {
+        tbl.row(vec![
+            name.into(),
+            format!("{:.2}", st.mean_ms()),
+            format!("{:.2}", n as f64 / st.mean_s.max(1e-12) / 1e6),
+        ]);
+    }
+    tbl.emit();
+    println!("  sign flips vs scalar path: {flipped} of {} bits",
+             n * bits);
+    records.push(
+        BenchRecord::from_stats("lsh-hash-gemm-pool", n, &st_pool)
+            .with("scalar_ms", st_scalar.mean_ms())
+            .with("gemm_seq_ms", st_gemm.mean_ms())
+            .with("sign_flips", flipped as f64));
+}
+
+fn main() {
+    init_logging(false);
+    let ctx = ExecCtx::new(WorkerPool::auto());
+    let mut records = Vec::new();
+    // RSS demo first: every later section raises the VmHWM mark
+    streaming_memory_demo(&ctx, &mut records);
+    gemm_section(&ctx, &mut records);
+    softmax_section(&ctx, &mut records);
+    lsh_section(&ctx, &mut records);
+    let _ = benchlib::write_bench_json("compute_core", &records);
+    println!("\nexpected: blocked GEMM beats naive by cache effects alone, \
+              pool adds ~workers× on large shapes;\nstreaming softmax \
+              matches materialized within float noise while its memory \
+              stays flat in N;\nbit-identical must read true everywhere \
+              (partition rows, never split reductions).");
+}

@@ -11,9 +11,9 @@ use clustered_transformers::attention::{self, Variant};
 use clustered_transformers::benchlib::traincache::{
     env_usize, eval_score, forward_time, full_grid, train_or_load,
 };
-use clustered_transformers::benchlib::{self, Table};
+use clustered_transformers::benchlib::{self, BenchRecord, Table};
 use clustered_transformers::config::{find_repo_root, init_logging};
-use clustered_transformers::exec::WorkerPool;
+use clustered_transformers::exec::{ExecCtx, WorkerPool};
 use clustered_transformers::prng::Xoshiro256;
 use clustered_transformers::runtime::Runtime;
 use clustered_transformers::tensor::batch::BatchMatrix;
@@ -23,20 +23,21 @@ use clustered_transformers::tensor::batch::BatchMatrix;
 /// reports something even before `make artifacts`.
 fn native_frontier() {
     let (bsz, heads, n, dk) = (2usize, 4usize, 512usize, 64usize);
-    let pool = WorkerPool::auto();
+    let ctx = ExecCtx::new(WorkerPool::auto());
     let mut rng = Xoshiro256::new(0);
     let q = BatchMatrix::randn(bsz, heads, n, dk, &mut rng);
     let k = BatchMatrix::randn(bsz, heads, n, dk, &mut rng);
     let v = BatchMatrix::randn(bsz, heads, n, dk, &mut rng);
     let exact = attention::kernel_for(&Variant::Full)
-        .run_batch(&q, &k, &v, 0, &pool);
+        .run_batch(&q, &k, &v, 0, &ctx);
     let rows = bsz * heads * n;
     let mut tbl = Table::new(
         &format!("fig1c: native batched engine frontier, B={bsz} \
                   H={heads} N={n} Dk={dk}, pool={} workers",
-                 pool.workers()),
+                 ctx.workers()),
         &["variant", "ms/batch", "rows/s", "max|Δ| vs full"],
     );
+    let mut records = Vec::new();
     let variants = [
         Variant::Full,
         Variant::Clustered { clusters: 100, bits: 63, iters: 10 },
@@ -47,9 +48,9 @@ fn native_frontier() {
     ];
     for var in &variants {
         let kernel = attention::kernel_for(var);
-        let out = kernel.run_batch(&q, &k, &v, 0, &pool);
+        let out = kernel.run_batch(&q, &k, &v, 0, &ctx);
         let st = benchlib::bench(
-            || { let _ = kernel.run_batch(&q, &k, &v, 0, &pool); },
+            || { let _ = kernel.run_batch(&q, &k, &v, 0, &ctx); },
             1, 2, std::time::Duration::from_millis(300), 8);
         tbl.row(vec![
             var.name(),
@@ -57,8 +58,13 @@ fn native_frontier() {
             format!("{:.0}", benchlib::rows_per_sec(rows, &st)),
             format!("{:.3}", out.max_abs_diff(&exact)),
         ]);
+        records.push(
+            BenchRecord::from_stats(&var.name(), rows, &st)
+                .with("max_abs_diff_vs_full",
+                      out.max_abs_diff(&exact) as f64));
     }
     tbl.emit();
+    let _ = benchlib::write_bench_json("fig1_tradeoff", &records);
 }
 
 fn main() {

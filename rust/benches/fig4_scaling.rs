@@ -10,9 +10,9 @@
 //! forwards cross-check the trend at N ∈ {256, 512, 1024}.
 
 use clustered_transformers::attention::{self, Variant};
-use clustered_transformers::benchlib::{self, Table};
+use clustered_transformers::benchlib::{self, BenchRecord, Table};
 use clustered_transformers::config::{find_repo_root, init_logging};
-use clustered_transformers::exec::WorkerPool;
+use clustered_transformers::exec::{ExecCtx, WorkerPool};
 use clustered_transformers::prng::Xoshiro256;
 use clustered_transformers::runtime::{HostTensor, Runtime};
 use clustered_transformers::tensor::batch::BatchMatrix;
@@ -81,8 +81,8 @@ fn main() {
 
     // --- batched multi-head engine: rows/sec through the exec pool ---
     let (bsz, heads, n_b) = (4usize, 4usize, 512usize);
-    let pool = WorkerPool::auto();
-    let seq = WorkerPool::sequential();
+    let pool = ExecCtx::new(WorkerPool::auto());
+    let seq = ExecCtx::sequential();
     let mut batch_tbl = Table::new(
         &format!(
             "fig4c: batched multi-head throughput (rows/sec), B={bsz} \
@@ -92,6 +92,7 @@ fn main() {
         &["variant", "seq ms/batch", "par ms/batch", "seq rows/s",
           "par rows/s", "pool speedup", "bit-identical"],
     );
+    let mut records = Vec::new();
     let mut brng = Xoshiro256::new(2);
     let bq = BatchMatrix::randn(bsz, heads, n_b, dk, &mut brng);
     let bk = BatchMatrix::randn(bsz, heads, n_b, dk, &mut brng);
@@ -119,8 +120,16 @@ fn main() {
             format!("{:.2}x", st_seq.mean_s / st_par.mean_s.max(1e-12)),
             identical.to_string(),
         ]);
+        records.push(
+            BenchRecord::from_stats(&var.name(), rows, &st_par)
+                .with("seq_rows_per_sec",
+                      benchlib::rows_per_sec(rows, &st_seq))
+                .with("pool_speedup",
+                      st_seq.mean_s / st_par.mean_s.max(1e-12))
+                .with("bit_identical", identical as u8 as f64));
     }
     batch_tbl.emit();
+    let _ = benchlib::write_bench_json("fig4_scaling", &records);
 
     // --- HLO cross-check: compiled single-layer forward --------------
     let dir = find_repo_root().join("artifacts");

@@ -14,7 +14,7 @@
 use std::time::{Duration, Instant};
 
 use clustered_transformers::attention::{kernel_by_name, run_batch_seq};
-use clustered_transformers::benchlib::{self, Table};
+use clustered_transformers::benchlib::{self, BenchRecord, Table};
 use clustered_transformers::config::init_logging;
 use clustered_transformers::coordinator::{
     bucket_report, pad_batch, replay_blocking, synthetic_trace,
@@ -109,6 +109,7 @@ fn main() {
     let clients = 8;
     let seed = 0u64;
     let max_n = BUCKETS.iter().map(|&(n, _)| n).max().unwrap();
+    let mut records = Vec::new();
 
     for kernel in ["full", "i-clustered-32"] {
         let gw = gateway(kernel, seed);
@@ -140,8 +141,28 @@ fn main() {
         println!("  total: {} requests, {:.0} valid rows/s end-to-end",
                  responses.len(),
                  total_rows as f64 / wall.max(1e-9));
+        // machine-readable trajectory: one record per (kernel, bucket)
+        for (&(n, _), m) in
+            BUCKETS.iter().zip(gw.bucket_metrics())
+        {
+            use std::sync::atomic::Ordering;
+            let rows = m.valid_rows.load(Ordering::Relaxed);
+            records.push(BenchRecord {
+                name: format!("{kernel}/N={n}"),
+                rows_per_sec: rows as f64 / wall.max(1e-9),
+                mean_us: m.mean_us(),
+                p50_us: m.percentile_us(50.0),
+                p99_us: m.percentile_us(99.0),
+                iters: m.completed.load(Ordering::Relaxed) as usize,
+                extra: vec![
+                    ("occupancy".into(), m.occupancy()),
+                    ("padding_waste".into(), m.padding_waste()),
+                ],
+            });
+        }
         gw.shutdown();
     }
+    let _ = benchlib::write_bench_json("gateway", &records);
     println!("\nexpected: tail buckets (N=256) dominate latency; \
               i-clustered keeps p99 flat where full grows with N²; \
               waste tracks the log2-uniform mix (~30-40%); bit-identical \

@@ -1,11 +1,19 @@
 //! Clustered attention (paper eqs. 3–6): queries are grouped by the LSH +
 //! Hamming-K-Means substrate, each cluster attends once through its
 //! centroid, and members copy the centroid's result — O(N·C·D).
+//!
+//! The centroid pass streams: the (C × N) attention matrix is only
+//! materialised by [`clustered_attention_matrix`] (which the improved
+//! kernel and fig. 8 genuinely need); the value path
+//! [`clustered_attention`] runs the centroids through the streaming
+//! softmax core, so its extra memory is O(N·block) like full attention.
 
 use crate::clustering::{self, Clustering};
+use crate::exec::{par_rows, ExecCtx};
 use crate::prng::Xoshiro256;
-use crate::tensor::{axpy, Matrix};
+use crate::tensor::{axpy, gemm, softmax_inplace, Matrix};
 
+use super::full::streaming_softmax_attention;
 use super::{AttentionKernel, Cost};
 
 /// Eq. (3): centroids of the member queries.
@@ -28,19 +36,47 @@ pub fn centroids(q: &Matrix, cl: &Clustering) -> Matrix {
 /// Eq. (4): A^c = softmax(Q^c K^T / sqrt(Dk)) — (C × N).
 pub fn clustered_attention_matrix(q: &Matrix, k: &Matrix, cl: &Clustering)
                                   -> Matrix {
+    clustered_attention_matrix_ctx(q, k, cl, &ExecCtx::sequential())
+}
+
+/// [`clustered_attention_matrix`] with the logits GEMM and the row
+/// softmax partitioned over the ctx pool (centroid rows only — the
+/// matrix stays O(C·N), which is what the improved kernel needs).
+pub fn clustered_attention_matrix_ctx(q: &Matrix, k: &Matrix,
+                                      cl: &Clustering, ctx: &ExecCtx)
+                                      -> Matrix {
     let cent = centroids(q, cl);
     let scale = 1.0 / (q.cols as f32).sqrt();
-    let mut a_c = cent.matmul_nt(k);
-    a_c.scale(scale);
-    a_c.softmax_rows();
+    let mut a_c = gemm::matmul_nt(&cent, k, ctx);
+    let cols = a_c.cols;
+    par_rows(ctx, &mut a_c.data, cl.n_clusters, cols, |range, chunk| {
+        for off in 0..range.len() {
+            let row = &mut chunk[off * cols..(off + 1) * cols];
+            for x in row.iter_mut() {
+                *x *= scale;
+            }
+            softmax_inplace(row);
+        }
+    });
     a_c
 }
 
-/// Eqs. (4)–(6): O(N·C·D).
+/// Eqs. (4)–(6): O(N·C·D), streaming — the (C × N) matrix is never
+/// materialised on this path.
 pub fn clustered_attention(q: &Matrix, k: &Matrix, v: &Matrix,
                            cl: &Clustering) -> Matrix {
-    let a_c = clustered_attention_matrix(q, k, cl);
-    let v_c = a_c.matmul(v); // (C, Dv)
+    clustered_attention_ctx(q, k, v, cl, &ExecCtx::sequential())
+}
+
+/// [`clustered_attention`] over the ctx pool.
+pub fn clustered_attention_ctx(q: &Matrix, k: &Matrix, v: &Matrix,
+                               cl: &Clustering, ctx: &ExecCtx) -> Matrix {
+    let cent = centroids(q, cl);
+    let scale = 1.0 / (q.cols as f32).sqrt();
+    // centroid rows stream through the online-softmax core: O(N·block)
+    let v_c = streaming_softmax_attention(&cent, k, v, scale, ctx);
+    // member scatter is a pure row memcpy — forking scoped workers
+    // would cost more than the copy, so it stays inline
     let mut out = Matrix::zeros(q.rows, v.cols);
     for i in 0..q.rows {
         out.row_mut(i).copy_from_slice(v_c.row(cl.groups[i] as usize));
@@ -62,10 +98,10 @@ impl AttentionKernel for ClusteredAttention {
     }
 
     fn run(&self, q: &Matrix, k: &Matrix, v: &Matrix,
-           rng: &mut Xoshiro256) -> Matrix {
-        let cl = clustering::cluster_queries(q, self.clusters, self.bits,
-                                             self.iters, rng);
-        clustered_attention(q, k, v, &cl)
+           rng: &mut Xoshiro256, ctx: &ExecCtx) -> Matrix {
+        let cl = clustering::cluster_queries_ctx(
+            q, self.clusters, self.bits, self.iters, rng, ctx);
+        clustered_attention_ctx(q, k, v, &cl, ctx)
     }
 
     fn cost(&self, n: usize, dk: usize, dv: usize) -> Cost {
@@ -73,10 +109,12 @@ impl AttentionKernel for ClusteredAttention {
         let (c, b, l) = (self.clusters as u64, self.bits as u64,
                          self.iters as u64);
         Cost {
-            // LSH + Lloyd (O(NCL + ND_kB)) + centroid attention
+            // LSH + Lloyd (O(NCL + ND_kB)) + streaming centroid attention
             flops: n64 * dk64 * b + n64 * c * l
                 + c * n64 * (dk64 + dv64),
-            bytes: 4 * c * n64 + n64 * b / 8,
+            // packed K + bit codes + the (C × Dv) centroid values; the
+            // (C × N) matrix is no longer materialised on the value path
+            bytes: 4 * (n64 * dk64 + c * dv64) + n64 * b / 8,
         }
     }
 }

@@ -1,14 +1,139 @@
 //! Full softmax attention (paper eqs. 1–2) — the exact baseline every
 //! approximation is measured against — plus the shared-QK variant the
 //! Reformer comparison uses.
+//!
+//! The default path is **streaming**: keys are processed in
+//! [`KEY_BLOCK`]-sized blocks with an online-max softmax, so the N×N
+//! logits matrix is never materialised — peak extra memory drops from
+//! O(N²) to O(N·block) (the packed K panels plus a
+//! `QUERY_TILE × KEY_BLOCK` score tile per worker), and N = 4096+ runs
+//! on the CPU reference where the dense path would allocate tens of MB
+//! per head.  The dense path survives as
+//! [`full_attention_materialized`] (bench comparison) and
+//! [`full_attention_matrix`] (fig. 8 dumps need the matrix itself).
+//!
+//! Parallelism follows the compute-core contract: query rows are
+//! partitioned over the [`ExecCtx`] pool, each row's key sweep runs
+//! left to right in fixed [`KEY_BLOCK`] steps inside one worker, so the
+//! reduction order — and therefore every output bit — is independent of
+//! the worker count.
 
+use crate::exec::{par_rows, ExecCtx};
 use crate::prng::Xoshiro256;
-use crate::tensor::Matrix;
+use crate::tensor::{axpy, gemm, Matrix};
 
 use super::{AttentionKernel, Cost};
 
-/// `softmax(QKᵀ/√Dk)·V` — O(N²·D) time, O(N²) memory.
+/// Keys per streaming block (multiple of `gemm::NR`).
+pub const KEY_BLOCK: usize = 128;
+/// Query rows per score tile (multiple of `gemm::MR`).
+pub const QUERY_TILE: usize = 16;
+
+/// Streaming `softmax(scale · q·kᵀ) · v` — never materialises the
+/// (N_q × N_k) score matrix.
+///
+/// Two-pass per key block with an online max: each block's scores come
+/// from the blocked GEMM tile kernel, the running max `m`, mass `l` and
+/// accumulator rescale exactly as in the standard online-softmax
+/// recurrence, and the final row is `acc / l` with the same
+/// `1/sum.max(1e-30)` guard as the materialised softmax.
+pub fn streaming_softmax_attention(q: &Matrix, k: &Matrix, v: &Matrix,
+                                   scale: f32, ctx: &ExecCtx) -> Matrix {
+    assert_eq!(q.cols, k.cols, "q/k dim mismatch");
+    assert_eq!(k.rows, v.rows, "k/v length mismatch");
+    let (n_q, d, n_k, dv) = (q.rows, q.cols, k.rows, v.cols);
+    let mut out = Matrix::zeros(n_q, dv);
+    if n_q == 0 || dv == 0 {
+        return out;
+    }
+    let bp = gemm::pack_nt(k); // O(N_k · d), reused by every worker
+    par_rows(ctx, &mut out.data, n_q, dv, |range, chunk| {
+        // per-worker scratch: one score tile + per-row online state
+        let mut apack = Vec::new();
+        let mut s = vec![0f32; QUERY_TILE * KEY_BLOCK];
+        let mut mrow = vec![f32::NEG_INFINITY; QUERY_TILE];
+        let mut lrow = vec![0f32; QUERY_TILE];
+        let mut acc = vec![0f32; QUERY_TILE * dv];
+        let mut q0 = range.start;
+        while q0 < range.end {
+            let qt = QUERY_TILE.min(range.end - q0);
+            gemm::pack_a_tile(&q.data, d, q0, qt, d, &mut apack);
+            mrow[..qt].fill(f32::NEG_INFINITY);
+            lrow[..qt].fill(0.0);
+            acc[..qt * dv].fill(0.0);
+            let mut j0 = 0;
+            while j0 < n_k {
+                let kb = KEY_BLOCK.min(n_k - j0);
+                gemm::tile_mul(&apack, qt, &bp, j0, kb, &mut s, KEY_BLOCK);
+                for r in 0..qt {
+                    let srow = &mut s[r * KEY_BLOCK..r * KEY_BLOCK + kb];
+                    let mut bm = f32::NEG_INFINITY;
+                    for x in srow.iter_mut() {
+                        *x *= scale;
+                        bm = bm.max(*x);
+                    }
+                    if bm > mrow[r] {
+                        // online max: rescale what's accumulated so far
+                        let corr = (mrow[r] - bm).exp();
+                        lrow[r] *= corr;
+                        for a in &mut acc[r * dv..(r + 1) * dv] {
+                            *a *= corr;
+                        }
+                        mrow[r] = bm;
+                    }
+                    if mrow[r].is_finite() {
+                        let arow = &mut acc[r * dv..(r + 1) * dv];
+                        for (jj, &sv) in srow.iter().enumerate() {
+                            let w = (sv - mrow[r]).exp();
+                            lrow[r] += w;
+                            axpy(arow, w, v.row(j0 + jj));
+                        }
+                    }
+                }
+                j0 += kb;
+            }
+            for r in 0..qt {
+                let dst = &mut chunk[(q0 - range.start + r) * dv..][..dv];
+                if n_k > 0 && !mrow[r].is_finite() {
+                    // a logit overflowed to ±inf: the accumulator was
+                    // zeroed by the exp(m - inf) rescale, so mirror
+                    // softmax_inplace's non-finite-max guard instead —
+                    // uniform weights over every key
+                    let u = 1.0 / n_k as f32;
+                    dst.fill(0.0);
+                    for j in 0..n_k {
+                        axpy(dst, u, v.row(j));
+                    }
+                    continue;
+                }
+                let inv = 1.0 / lrow[r].max(1e-30);
+                for (o, a) in dst.iter_mut().zip(&acc[r * dv..]) {
+                    *o = a * inv;
+                }
+            }
+            q0 += qt;
+        }
+    });
+    out
+}
+
+/// `softmax(QKᵀ/√Dk)·V` — exact, streaming, O(N·block) extra memory.
 pub fn full_attention(q: &Matrix, k: &Matrix, v: &Matrix) -> Matrix {
+    full_attention_ctx(q, k, v, &ExecCtx::sequential())
+}
+
+/// [`full_attention`] with query rows partitioned over the ctx pool.
+pub fn full_attention_ctx(q: &Matrix, k: &Matrix, v: &Matrix,
+                          ctx: &ExecCtx) -> Matrix {
+    let scale = 1.0 / (q.cols as f32).sqrt();
+    streaming_softmax_attention(q, k, v, scale, ctx)
+}
+
+/// The dense O(N²)-memory path the streaming default replaced: logits →
+/// row softmax → matmul.  Kept for the `compute_core` bench comparison
+/// and as the equivalence oracle for the streaming tests.
+pub fn full_attention_materialized(q: &Matrix, k: &Matrix, v: &Matrix)
+                                   -> Matrix {
     let scale = 1.0 / (q.cols as f32).sqrt();
     let mut logits = q.matmul_nt(k); // (N, N)
     logits.scale(scale);
@@ -16,7 +141,7 @@ pub fn full_attention(q: &Matrix, k: &Matrix, v: &Matrix) -> Matrix {
     logits.matmul(v)
 }
 
-/// Dense attention matrix (fig. 8 dumps).
+/// Dense attention matrix (fig. 8 dumps need the matrix itself).
 pub fn full_attention_matrix(q: &Matrix, k: &Matrix) -> Matrix {
     let scale = 1.0 / (q.cols as f32).sqrt();
     let mut logits = q.matmul_nt(k);
@@ -25,7 +150,7 @@ pub fn full_attention_matrix(q: &Matrix, k: &Matrix) -> Matrix {
     logits
 }
 
-/// Exact softmax attention kernel.
+/// Exact softmax attention kernel (streaming, never O(N²) memory).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct FullAttention;
 
@@ -35,13 +160,20 @@ impl AttentionKernel for FullAttention {
     }
 
     fn run(&self, q: &Matrix, k: &Matrix, v: &Matrix,
-           _rng: &mut Xoshiro256) -> Matrix {
-        full_attention(q, k, v)
+           _rng: &mut Xoshiro256, ctx: &ExecCtx) -> Matrix {
+        full_attention_ctx(q, k, v, ctx)
     }
 
     fn cost(&self, n: usize, dk: usize, dv: usize) -> Cost {
         let (n64, dk64, dv64) = (n as u64, dk as u64, dv as u64);
-        Cost { flops: n64 * n64 * (dk64 + dv64), bytes: 4 * n64 * n64 }
+        Cost {
+            flops: n64 * n64 * (dk64 + dv64),
+            // streaming working set: packed K panels + one score tile +
+            // one accumulator tile per worker — O(N·Dk), not O(N²)
+            bytes: 4 * (n64 * dk64
+                + (QUERY_TILE * KEY_BLOCK) as u64
+                + QUERY_TILE as u64 * dv64),
+        }
     }
 }
 
@@ -55,11 +187,93 @@ impl AttentionKernel for SharedFullAttention {
     }
 
     fn run(&self, q: &Matrix, _k: &Matrix, v: &Matrix,
-           _rng: &mut Xoshiro256) -> Matrix {
-        full_attention(q, q, v)
+           _rng: &mut Xoshiro256, ctx: &ExecCtx) -> Matrix {
+        full_attention_ctx(q, q, v, ctx)
     }
 
     fn cost(&self, n: usize, dk: usize, dv: usize) -> Cost {
         FullAttention.cost(n, dk, dv)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::WorkerPool;
+
+    fn qkv(n: usize, dk: usize, dv: usize, seed: u64)
+           -> (Matrix, Matrix, Matrix) {
+        let mut rng = Xoshiro256::new(seed);
+        (Matrix::randn(n, dk, &mut rng), Matrix::randn(n, dk, &mut rng),
+         Matrix::randn(n, dv, &mut rng))
+    }
+
+    #[test]
+    fn streaming_matches_materialized_within_float_noise() {
+        // ragged N exercises partial key blocks and query tiles
+        for &(n, d) in &[(5, 4), (KEY_BLOCK, 16), (KEY_BLOCK + 37, 8),
+                         (3 * KEY_BLOCK + 1, 16)] {
+            let (q, k, v) = qkv(n, d, d, n as u64);
+            let fast = full_attention(&q, &k, &v);
+            let dense = full_attention_materialized(&q, &k, &v);
+            let diff = fast.max_abs_diff(&dense);
+            assert!(diff < 1e-5, "N={n}: streaming off by {diff}");
+        }
+    }
+
+    #[test]
+    fn streaming_parallel_is_bit_identical_to_sequential() {
+        let (q, k, v) = qkv(200, 16, 16, 9);
+        let seq = full_attention_ctx(&q, &k, &v, &ExecCtx::sequential());
+        for workers in [2, 3, 8] {
+            let ctx = ExecCtx::with_par_rows(WorkerPool::new(workers), 1);
+            let par = full_attention_ctx(&q, &k, &v, &ctx);
+            assert!(par.bit_identical(&seq), "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn long_sequence_runs_through_the_streaming_path() {
+        // N = 4096 with a tiny head dim: the dense path would allocate a
+        // 16M-element logits matrix; streaming touches O(N·block)
+        let (q, k, v) = qkv(4096, 2, 2, 1);
+        let out = full_attention(&q, &k, &v);
+        assert_eq!((out.rows, out.cols), (4096, 2));
+        assert!(out.data.iter().all(|x| x.is_finite()));
+        // rows are convex combinations of V rows: bounded by V's range
+        let vmax = v.data.iter().cloned().fold(f32::MIN, f32::max);
+        let vmin = v.data.iter().cloned().fold(f32::MAX, f32::min);
+        assert!(out.data.iter().all(|&x| x >= vmin - 1e-4
+                                        && x <= vmax + 1e-4));
+    }
+
+    #[test]
+    fn overflowing_logits_fall_back_to_uniform_like_materialized() {
+        // q·kᵀ overflows f32 to +inf (same-sign entries, so no inf−inf
+        // NaN): softmax_inplace's non-finite-max guard yields uniform
+        // weights; streaming must match instead of silently returning
+        // zeros
+        let mut rng = Xoshiro256::new(5);
+        let q = Matrix::from_vec(3, 4, vec![1e20; 12]);
+        let k = Matrix::from_vec(8, 4, vec![1e20; 32]);
+        let v = Matrix::randn(8, 4, &mut rng);
+        let fast = full_attention(&q, &k, &v);
+        let dense = full_attention_materialized(&q, &k, &v);
+        assert!(dense.data.iter().all(|x| x.is_finite()));
+        assert!(fast.max_abs_diff(&dense) < 1e-5,
+                "inf-logit fallback diverged from materialized");
+    }
+
+    #[test]
+    fn empty_keys_yield_zero_rows() {
+        let mut rng = Xoshiro256::new(3);
+        let q = Matrix::randn(4, 8, &mut rng);
+        let k = Matrix::zeros(0, 8);
+        let v = Matrix::zeros(0, 8);
+        let out =
+            streaming_softmax_attention(&q, &k, &v, 1.0,
+                                        &ExecCtx::sequential());
+        assert_eq!((out.rows, out.cols), (4, 8));
+        assert!(out.data.iter().all(|&x| x == 0.0));
     }
 }

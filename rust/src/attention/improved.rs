@@ -2,69 +2,79 @@
 //! cluster keeps exact attention on its top-k keys and falls back to the
 //! centroid approximation on the complement.
 //!
-//! The complement pass uses a boolean top-k membership mask per cluster,
-//! so each row is a single O(N) sweep — the paper's stated complexity —
-//! instead of the O(N·topk) `contains` rescan the seed shipped with.
+//! Compute shape after the tiled-core rewrite:
+//!  - A^c and the full centroid values `A^c·V` come from the blocked
+//!    GEMM core (row-partitioned over the ctx pool);
+//!  - the complement basis V̂^b is `A^c·V` minus the top-k
+//!    contributions — no per-cluster O(N·Dv) rescan and no per-cluster
+//!    scratch allocation (the seed allocated an accumulator per
+//!    cluster);
+//!  - the per-query top-k pass partitions over **output rows**, one
+//!    reused `dots` scratch per worker chunk; the softmax reduction of
+//!    a row never crosses a worker boundary, so parallel output is
+//!    bit-identical to sequential.
 
 use crate::clustering::Clustering;
+use crate::exec::{par_rows, ExecCtx};
 use crate::prng::Xoshiro256;
-use crate::tensor::{axpy, dot, softmax_inplace, topk_indices, Matrix};
+use crate::tensor::{axpy, dot, gemm, softmax_inplace, topk_indices, Matrix};
 
-use super::clustered::{clustered_attention_matrix, ClusteredAttention};
+use super::clustered::clustered_attention_matrix_ctx;
 use super::{AttentionKernel, Cost};
 
 pub fn improved_clustered_attention(q: &Matrix, k: &Matrix, v: &Matrix,
                                     cl: &Clustering, topk: usize) -> Matrix {
+    improved_clustered_attention_ctx(q, k, v, cl, topk,
+                                     &ExecCtx::sequential())
+}
+
+/// [`improved_clustered_attention`] over the ctx pool.
+pub fn improved_clustered_attention_ctx(q: &Matrix, k: &Matrix, v: &Matrix,
+                                        cl: &Clustering, topk: usize,
+                                        ctx: &ExecCtx) -> Matrix {
     let n = q.rows;
     let c = cl.n_clusters;
+    let dv = v.cols;
     let scale = 1.0 / (q.cols as f32).sqrt();
-    let a_c = clustered_attention_matrix(q, k, cl); // (C, N)
+    let a_c = clustered_attention_matrix_ctx(q, k, cl, ctx); // (C, N)
+    let v_full = gemm::matmul_nn(&a_c, v, ctx); // (C, Dv): Σ_all w·V
 
-    // per-cluster top-k keys, captured mass m̂ (eq. 9) and V̂^b basis
-    let mut top: Vec<Vec<usize>> = Vec::with_capacity(c);
+    // per-cluster top-k keys and captured mass m̂ (eq. 9)
+    let top: Vec<Vec<usize>> =
+        ctx.map_indexed(c, |j| topk_indices(a_c.row(j), topk));
+    // V̂^b basis (eq. 17): full centroid values minus the top-k terms —
+    // written straight into the row, no per-cluster accumulator
     let mut mhat = vec![0f32; c];
-    let mut v_b = Matrix::zeros(c, v.cols); // complement average per cluster
-    // boolean membership mask, reset between clusters: keeps the
-    // complement pass O(N) total per cluster (eq. 17)
-    let mut in_top = vec![false; k.rows];
+    let mut v_b = Matrix::zeros(c, dv);
     for j in 0..c {
-        let idx = topk_indices(a_c.row(j), topk);
-        mhat[j] = idx.iter().map(|&i| a_c.at(j, i)).sum();
-        for &key_idx in &idx {
-            in_top[key_idx] = true;
+        let idx = &top[j];
+        mhat[j] = idx.iter().map(|&l| a_c.at(j, l)).sum();
+        let row = v_b.row_mut(j);
+        row.copy_from_slice(v_full.row(j));
+        for &l in idx {
+            axpy(row, -a_c.at(j, l), v.row(l));
         }
-        // V̂^b row: clustered attention with top-k columns zeroed (eq. 17)
-        let row = a_c.row(j);
-        let mut acc = vec![0f32; v.cols];
-        for (key_idx, &w) in row.iter().enumerate() {
-            if w != 0.0 && !in_top[key_idx] {
-                axpy(&mut acc, w, v.row(key_idx));
+    }
+
+    // V̂ = V̂^t + V̂^b (eqs. 15–16), partitioned over output rows
+    let mut out = Matrix::zeros(n, dv);
+    par_rows(ctx, &mut out.data, n, dv, |range, chunk| {
+        let mut dots = vec![0f32; topk]; // one scratch per worker chunk
+        for (off, i) in range.enumerate() {
+            let j = cl.groups[i] as usize;
+            let idx = &top[j];
+            let t = idx.len();
+            for (slot, &key_idx) in idx.iter().enumerate() {
+                dots[slot] = dot(q.row(i), k.row(key_idx)) * scale;
+            }
+            softmax_inplace(&mut dots[..t]);
+            let orow = &mut chunk[off * dv..(off + 1) * dv];
+            orow.copy_from_slice(v_b.row(j));
+            for (slot, &key_idx) in idx.iter().enumerate() {
+                axpy(orow, dots[slot] * mhat[j], v.row(key_idx));
             }
         }
-        for &key_idx in &idx {
-            in_top[key_idx] = false;
-        }
-        v_b.row_mut(j).copy_from_slice(&acc);
-        top.push(idx);
-    }
-
-    // V̂ = V̂^t + V̂^b (eqs. 15–16)
-    let mut out = Matrix::zeros(n, v.cols);
-    let mut dots = vec![0f32; topk];
-    for i in 0..n {
-        let j = cl.groups[i] as usize;
-        let idx = &top[j];
-        let t = idx.len();
-        for (slot, &key_idx) in idx.iter().enumerate() {
-            dots[slot] = dot(q.row(i), k.row(key_idx)) * scale;
-        }
-        softmax_inplace(&mut dots[..t]);
-        let orow = out.row_mut(i);
-        orow.copy_from_slice(v_b.row(j));
-        for (slot, &key_idx) in idx.iter().enumerate() {
-            axpy(orow, dots[slot] * mhat[j], v.row(key_idx));
-        }
-    }
+    });
     out
 }
 
@@ -74,7 +84,8 @@ pub fn improved_clustered_attention_matrix(q: &Matrix, k: &Matrix,
                                            -> Matrix {
     let n = q.rows;
     let scale = 1.0 / (q.cols as f32).sqrt();
-    let a_c = clustered_attention_matrix(q, k, cl);
+    let a_c = clustered_attention_matrix_ctx(q, k, cl,
+                                             &ExecCtx::sequential());
     let mut out = Matrix::zeros(n, n);
     let mut dots = vec![0f32; topk];
     for i in 0..n {
@@ -108,23 +119,25 @@ impl AttentionKernel for ImprovedClusteredAttention {
     }
 
     fn run(&self, q: &Matrix, k: &Matrix, v: &Matrix,
-           rng: &mut Xoshiro256) -> Matrix {
-        let cl = crate::clustering::cluster_queries(
-            q, self.clusters, self.bits, self.iters, rng);
-        improved_clustered_attention(q, k, v, &cl, self.topk)
+           rng: &mut Xoshiro256, ctx: &ExecCtx) -> Matrix {
+        let cl = crate::clustering::cluster_queries_ctx(
+            q, self.clusters, self.bits, self.iters, rng, ctx);
+        improved_clustered_attention_ctx(q, k, v, &cl, self.topk, ctx)
     }
 
     fn cost(&self, n: usize, dk: usize, dv: usize) -> Cost {
-        let base = ClusteredAttention {
-            clusters: self.clusters,
-            bits: self.bits,
-            iters: self.iters,
-        }
-        .cost(n, dk, dv);
         let (n64, dk64, dv64) = (n as u64, dk as u64, dv as u64);
+        let (c, b, l) = (self.clusters as u64, self.bits as u64,
+                         self.iters as u64);
         Cost {
-            flops: base.flops + n64 * (self.topk as u64) * (dk64 + dv64),
-            bytes: base.bytes + 4 * n64 * (self.topk as u64),
+            // clustering + A^c + A^c·V + per-query top-k refinement
+            flops: n64 * dk64 * b + n64 * c * l
+                + c * n64 * (dk64 + dv64)
+                + n64 * (self.topk as u64) * (dk64 + dv64),
+            // this kernel genuinely materialises the (C × N) matrix,
+            // plus codes and the top-k working set
+            bytes: 4 * c * n64 + n64 * b / 8
+                + 4 * n64 * (self.topk as u64),
         }
     }
 }

@@ -2,6 +2,7 @@
 //! bucketing, chunked local attention, rounds combined with logsumexp
 //! weights.
 
+use crate::exec::ExecCtx;
 use crate::prng::Xoshiro256;
 use crate::tensor::{axpy, dot, Matrix};
 
@@ -10,6 +11,17 @@ use super::{AttentionKernel, Cost};
 /// Shared-QK chunked LSH attention; rounds combined with logsumexp weights.
 pub fn reformer_attention(x: &Matrix, v: &Matrix, rounds: usize,
                           chunk: usize, rng: &mut Xoshiro256) -> Matrix {
+    reformer_attention_ctx(x, v, rounds, chunk, rng,
+                           &ExecCtx::sequential())
+}
+
+/// [`reformer_attention`] with the per-position bucketing argmax
+/// partitioned over the ctx pool (each position's bucket is a pure
+/// function of its row and the round's rotation, so the parallel
+/// assignment is bit-identical to the sequential loop).
+pub fn reformer_attention_ctx(x: &Matrix, v: &Matrix, rounds: usize,
+                              chunk: usize, rng: &mut Xoshiro256,
+                              ctx: &ExecCtx) -> Matrix {
     let n = x.rows;
     assert_eq!(n % chunk, 0, "N must be divisible by chunk");
     let n_buckets = 16usize;
@@ -21,8 +33,7 @@ pub fn reformer_attention(x: &Matrix, v: &Matrix, rounds: usize,
     for _ in 0..rounds {
         // angular LSH: argmax over [xR; -xR]
         let rot = Matrix::randn(n_buckets / 2, x.cols, rng);
-        let mut buckets = vec![0usize; n];
-        for i in 0..n {
+        let bucket_of = |i: usize| {
             let (mut best_v, mut best_b) = (f32::NEG_INFINITY, 0usize);
             for b in 0..n_buckets / 2 {
                 let h = dot(x.row(i), rot.row(b));
@@ -35,8 +46,9 @@ pub fn reformer_attention(x: &Matrix, v: &Matrix, rounds: usize,
                     best_b = b + n_buckets / 2;
                 }
             }
-            buckets[i] = best_b;
-        }
+            best_b
+        };
+        let buckets: Vec<usize> = ctx.map_indexed(n, bucket_of);
         // stable sort by bucket
         let mut order: Vec<usize> = (0..n).collect();
         order.sort_by_key(|&i| (buckets[i], i));
@@ -115,8 +127,8 @@ impl AttentionKernel for LshAttention {
     }
 
     fn run(&self, q: &Matrix, _k: &Matrix, v: &Matrix,
-           rng: &mut Xoshiro256) -> Matrix {
-        reformer_attention(q, v, self.rounds, self.chunk, rng)
+           rng: &mut Xoshiro256, ctx: &ExecCtx) -> Matrix {
+        reformer_attention_ctx(q, v, self.rounds, self.chunk, rng, ctx)
     }
 
     fn cost(&self, n: usize, dk: usize, dv: usize) -> Cost {

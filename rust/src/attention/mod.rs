@@ -23,6 +23,12 @@
 //! `prng::slice_stream(seed, s)`, so parallel execution over the exec
 //! pool is bit-identical to the sequential per-slice loop
 //! ([`run_batch_seq`]) — verified by `proptest/attention_props.rs`.
+//! Since the tiled-compute-core rewrite the contract extends *inside*
+//! a slice: every kernel threads an [`ExecCtx`] through its GEMMs,
+//! streaming softmax, clustering and top-k passes, all of which
+//! partition **output rows** and never split a reduction, so
+//! intra-slice parallelism is bit-invisible too (see
+//! `docs/PERF.md`).
 
 pub mod clustered;
 pub mod full;
@@ -32,15 +38,16 @@ pub mod oracle;
 
 pub use clustered::{centroids, clustered_attention,
                     clustered_attention_matrix, ClusteredAttention};
-pub use full::{full_attention, full_attention_matrix, FullAttention,
-               SharedFullAttention};
+pub use full::{full_attention, full_attention_materialized,
+               full_attention_matrix, streaming_softmax_attention,
+               FullAttention, SharedFullAttention};
 pub use improved::{improved_clustered_attention,
                    improved_clustered_attention_matrix,
                    ImprovedClusteredAttention};
 pub use lsh::{reformer_attention, LshAttention};
 pub use oracle::{oracle_top_attention, OracleTopAttention};
 
-use crate::exec::WorkerPool;
+use crate::exec::ExecCtx;
 use crate::prng::{slice_stream, Xoshiro256};
 use crate::tensor::batch::BatchMatrix;
 use crate::tensor::Matrix;
@@ -97,16 +104,23 @@ pub struct Cost {
 
 /// One attention algorithm, usable single-slice or batched multi-head.
 ///
-/// `run` computes one (sequence, head) slice; `run_batch` maps it over
-/// every slice of a (B, H, N, D) workload, parallelized by the exec pool
-/// under the per-slice stream contract (see module docs).
+/// `run` computes one (sequence, head) slice, parallelizing *within*
+/// the slice through the [`ExecCtx`] (blocked GEMM stripes, streaming
+/// softmax rows, clustering assignment — always partitioned over output
+/// rows, never across a reduction, so any worker count produces the
+/// same bits).  `run_batch` maps it over every slice of a (B, H, N, D)
+/// workload, splitting the ctx budget between the slice axis and the
+/// intra-slice ops (see [`ExecCtx::split_batch`]).
 pub trait AttentionKernel: Send + Sync {
     /// Paper-notation name, e.g. `"i-clustered-100"`.
     fn name(&self) -> String;
 
     /// One slice: `q`,`k`: (N×Dk), `v`: (N×Dv) → (N×Dv).
+    ///
+    /// Output bits are independent of `ctx` (worker count and
+    /// threshold) — the intra-slice determinism contract.
     fn run(&self, q: &Matrix, k: &Matrix, v: &Matrix,
-           rng: &mut Xoshiro256) -> Matrix;
+           rng: &mut Xoshiro256, ctx: &ExecCtx) -> Matrix;
 
     /// Closed-form cost of one slice (matches §3 complexity claims).
     fn cost(&self, n: usize, dk: usize, dv: usize) -> Cost;
@@ -114,21 +128,25 @@ pub trait AttentionKernel: Send + Sync {
     /// Batched multi-head forward over (batch × head) slices.
     ///
     /// Output slice `s` is a pure function of `(inputs[s], seed, s)` —
-    /// bit-identical for any pool size, including [`run_batch_seq`].
+    /// bit-identical for any ctx, including [`run_batch_seq`].
     fn run_batch(&self, q: &BatchMatrix, k: &BatchMatrix, v: &BatchMatrix,
-                 seed: u64, pool: &WorkerPool) -> BatchMatrix {
+                 seed: u64, ctx: &ExecCtx) -> BatchMatrix {
         check_batch_shapes(q, k, v);
         let mut out = BatchMatrix::zeros(q.batch, q.heads, q.rows, v.cols);
         if out.slices() == 0 || out.slice_len() == 0 {
             return out;
         }
+        // split the budget: many slices → all workers on the slice
+        // axis; few slices (one long request) → leftover workers move
+        // inside each slice.  Placement never changes output bits.
+        let (outer, inner) = ctx.split_batch(out.slices());
         // workers write straight into disjoint output slices — no
         // per-slice result collection or second copy of the output
         let chunks = out.slices_mut();
-        pool.for_each_mut(chunks, |s, chunk: &mut [f32]| {
+        outer.for_each_mut(chunks, |s, chunk: &mut [f32]| {
             let mut rng = slice_stream(seed, s as u64);
             let o = self.run(&q.slice_matrix(s), &k.slice_matrix(s),
-                             &v.slice_matrix(s), &mut rng);
+                             &v.slice_matrix(s), &mut rng, &inner);
             chunk.copy_from_slice(&o.data);
         });
         out
@@ -152,10 +170,11 @@ pub fn run_batch_seq(kernel: &dyn AttentionKernel, q: &BatchMatrix,
                      -> BatchMatrix {
     check_batch_shapes(q, k, v);
     let mut out = BatchMatrix::zeros(q.batch, q.heads, q.rows, v.cols);
+    let ctx = ExecCtx::sequential();
     for s in 0..q.slices() {
         let mut rng = slice_stream(seed, s as u64);
         let o = kernel.run(&q.slice_matrix(s), &k.slice_matrix(s),
-                           &v.slice_matrix(s), &mut rng);
+                           &v.slice_matrix(s), &mut rng, &ctx);
         out.set_slice(s, &o);
     }
     out
@@ -251,17 +270,24 @@ pub fn kernel_by_name(name: &str) -> Option<Box<dyn AttentionKernel>> {
 // thin wrappers (the historical call-site API)
 // ---------------------------------------------------------------------------
 
-/// Dispatch a variant.  `q`,`k`: (N×Dk), `v`: (N×Dv) → (N×Dv).
+/// Dispatch a variant on one slice, sequentially.  `q`,`k`: (N×Dk),
+/// `v`: (N×Dv) → (N×Dv).
 pub fn run(variant: &Variant, q: &Matrix, k: &Matrix, v: &Matrix,
            rng: &mut Xoshiro256) -> Matrix {
-    kernel_for(variant).run(q, k, v, rng)
+    kernel_for(variant).run(q, k, v, rng, &ExecCtx::sequential())
+}
+
+/// Dispatch a variant on one slice with intra-slice parallelism.
+pub fn run_ctx(variant: &Variant, q: &Matrix, k: &Matrix, v: &Matrix,
+               rng: &mut Xoshiro256, ctx: &ExecCtx) -> Matrix {
+    kernel_for(variant).run(q, k, v, rng, ctx)
 }
 
 /// Batched dispatch over a (B, H, N, D) workload.
 pub fn run_batch(variant: &Variant, q: &BatchMatrix, k: &BatchMatrix,
-                 v: &BatchMatrix, seed: u64, pool: &WorkerPool)
+                 v: &BatchMatrix, seed: u64, ctx: &ExecCtx)
                  -> BatchMatrix {
-    kernel_for(variant).run_batch(q, k, v, seed, pool)
+    kernel_for(variant).run_batch(q, k, v, seed, ctx)
 }
 
 /// Closed-form cost of each variant (matches §3 complexity claims).
@@ -421,26 +447,28 @@ mod tests {
     #[test]
     fn kernel_run_matches_variant_dispatch() {
         let (q, k, v, _) = qkv(32, 8, 8, 11);
+        let ctx = ExecCtx::sequential();
         for var in test_variants() {
             let mut r1 = Xoshiro256::new(5);
             let mut r2 = Xoshiro256::new(5);
             let a = run(&var, &q, &k, &v, &mut r1);
-            let b = kernel_for(&var).run(&q, &k, &v, &mut r2);
+            let b = kernel_for(&var).run(&q, &k, &v, &mut r2, &ctx);
             assert_eq!(a.data, b.data, "{}", var.name());
         }
     }
 
     #[test]
     fn run_batch_parallel_is_bit_identical_to_sequential() {
+        use crate::exec::WorkerPool;
         let mut rng = Xoshiro256::new(21);
         let (b, h, n, d) = (2, 2, 64, 16);
         let q = BatchMatrix::randn(b, h, n, d, &mut rng);
         let k = BatchMatrix::randn(b, h, n, d, &mut rng);
         let v = BatchMatrix::randn(b, h, n, d, &mut rng);
-        let pool = WorkerPool::new(4);
+        let ctx = ExecCtx::new(WorkerPool::new(4));
         for var in test_variants() {
             let kernel = kernel_for(&var);
-            let par = kernel.run_batch(&q, &k, &v, 7, &pool);
+            let par = kernel.run_batch(&q, &k, &v, 7, &ctx);
             let seq = run_batch_seq(kernel.as_ref(), &q, &k, &v, 7);
             assert!(par.bit_identical(&seq), "{} diverged", var.name());
             assert_eq!((par.batch, par.heads, par.rows, par.cols),
@@ -449,19 +477,43 @@ mod tests {
     }
 
     #[test]
+    fn intra_slice_parallelism_never_changes_the_bits() {
+        use crate::exec::WorkerPool;
+        let (q, k, v, _) = qkv(96, 16, 16, 23);
+        for var in test_variants() {
+            let kernel = kernel_for(&var);
+            let mut r_seq = Xoshiro256::new(11);
+            let want = kernel.run(&q, &k, &v, &mut r_seq,
+                                  &ExecCtx::sequential());
+            for workers in [2, 5] {
+                // par_rows = 1 forces every row-partitioned op parallel
+                let ctx =
+                    ExecCtx::with_par_rows(WorkerPool::new(workers), 1);
+                let mut r_par = Xoshiro256::new(11);
+                let got = kernel.run(&q, &k, &v, &mut r_par, &ctx);
+                assert!(got.bit_identical(&want),
+                        "{} diverged at workers={workers}", var.name());
+            }
+        }
+    }
+
+    #[test]
     fn run_batch_slices_match_single_slice_runs() {
+        use crate::exec::WorkerPool;
         let mut rng = Xoshiro256::new(22);
         let (b, h, n, d) = (2, 3, 32, 8);
         let q = BatchMatrix::randn(b, h, n, d, &mut rng);
         let k = BatchMatrix::randn(b, h, n, d, &mut rng);
         let v = BatchMatrix::randn(b, h, n, d, &mut rng);
         let var = Variant::Clustered { clusters: 4, bits: 31, iters: 5 };
-        let out = run_batch(&var, &q, &k, &v, 3, &WorkerPool::new(3));
+        let out = run_batch(&var, &q, &k, &v, 3,
+                            &ExecCtx::new(WorkerPool::new(3)));
         let kernel = kernel_for(&var);
         for s in 0..q.slices() {
             let mut rng_s = crate::prng::slice_stream(3, s as u64);
             let want = kernel.run(&q.slice_matrix(s), &k.slice_matrix(s),
-                                  &v.slice_matrix(s), &mut rng_s);
+                                  &v.slice_matrix(s), &mut rng_s,
+                                  &ExecCtx::sequential());
             assert_eq!(out.slice_matrix(s).data, want.data, "slice {s}");
         }
     }

@@ -14,6 +14,10 @@ pub struct Stats {
     pub std_s: f64,
     pub min_s: f64,
     pub max_s: f64,
+    /// Median sample (nearest-rank), seconds.
+    pub p50_s: f64,
+    /// 99th-percentile sample (nearest-rank), seconds.
+    pub p99_s: f64,
 }
 
 impl Stats {
@@ -25,12 +29,23 @@ impl Stats {
             .map(|s| (s - mean) * (s - mean))
             .sum::<f64>()
             / n;
+        let mut sorted = samples.to_vec();
+        sorted.sort_by(f64::total_cmp);
+        let pct = |p: f64| -> f64 {
+            if sorted.is_empty() {
+                return 0.0;
+            }
+            let rank = (p / 100.0 * (sorted.len() - 1) as f64).round();
+            sorted[rank as usize]
+        };
         Stats {
             iters: samples.len(),
             mean_s: mean,
             std_s: var.sqrt(),
             min_s: samples.iter().copied().fold(f64::INFINITY, f64::min),
             max_s: samples.iter().copied().fold(0.0, f64::max),
+            p50_s: pct(50.0),
+            p99_s: pct(99.0),
         }
     }
 
@@ -144,6 +159,101 @@ pub fn rows_per_sec(rows_per_run: usize, st: &Stats) -> f64 {
     rows_per_run as f64 / st.mean_s
 }
 
+// ---------------------------------------------------------------------------
+// machine-readable perf trajectories (BENCH_<name>.json)
+// ---------------------------------------------------------------------------
+
+/// One measurement row of a `BENCH_<name>.json` perf trajectory.
+#[derive(Debug, Clone)]
+pub struct BenchRecord {
+    /// Row label, e.g. `"gemm-nn-1024"` or `"full/N=4096/streaming"`.
+    pub name: String,
+    pub rows_per_sec: f64,
+    pub mean_us: f64,
+    pub p50_us: f64,
+    pub p99_us: f64,
+    pub iters: usize,
+    /// Extra numeric columns (`("gflops", 12.3)`, `("waste", 0.31)`, …).
+    pub extra: Vec<(String, f64)>,
+}
+
+impl BenchRecord {
+    /// Build a record from a timing run over `rows_per_run` rows.
+    pub fn from_stats(name: &str, rows_per_run: usize, st: &Stats) -> Self {
+        Self {
+            name: name.to_string(),
+            rows_per_sec: rows_per_sec(rows_per_run, st),
+            mean_us: st.mean_us(),
+            p50_us: st.p50_s * 1e6,
+            p99_us: st.p99_s * 1e6,
+            iters: st.iters,
+            extra: Vec::new(),
+        }
+    }
+
+    /// Attach an extra numeric column.
+    pub fn with(mut self, key: &str, value: f64) -> Self {
+        self.extra.push((key.to_string(), value));
+        self
+    }
+}
+
+/// Peak resident set size of this process in bytes (Linux `VmHWM`;
+/// 0 when the platform doesn't expose it).  A high-water mark: it only
+/// grows, so sample it right after the workload whose peak you want.
+pub fn peak_rss_bytes() -> u64 {
+    std::fs::read_to_string("/proc/self/status")
+        .ok()
+        .and_then(|s| {
+            s.lines().find(|l| l.starts_with("VmHWM:")).and_then(|l| {
+                l.split_whitespace().nth(1)?.parse::<u64>().ok()
+            })
+        })
+        .map(|kb| kb * 1024)
+        .unwrap_or(0)
+}
+
+/// Write `BENCH_<bench>.json` at the repo root: the machine-readable
+/// perf trajectory CI and plotting scripts diff across commits.
+///
+/// Schema: `{"bench", "peak_rss_bytes", "records": [{"name",
+/// "rows_per_sec", "mean_us", "p50_us", "p99_us", "iters", ...extra}]}`.
+/// Non-finite values are clamped to 0 so the output is always valid
+/// JSON.  Returns the path written, or `None` on I/O failure (benches
+/// must not fail over a read-only checkout).
+pub fn write_bench_json(bench: &str,
+                        records: &[BenchRecord]) -> Option<std::path::PathBuf> {
+    use crate::jsonio::{obj, Value};
+    let finite = |v: f64| if v.is_finite() { v } else { 0.0 };
+    let rows: Vec<Value> = records
+        .iter()
+        .map(|r| {
+            let mut pairs: Vec<(&str, Value)> = vec![
+                ("name", Value::from(r.name.clone())),
+                ("rows_per_sec", Value::from(finite(r.rows_per_sec))),
+                ("mean_us", Value::from(finite(r.mean_us))),
+                ("p50_us", Value::from(finite(r.p50_us))),
+                ("p99_us", Value::from(finite(r.p99_us))),
+                ("iters", Value::from(r.iters)),
+            ];
+            for (k, v) in &r.extra {
+                pairs.push((k.as_str(), Value::from(finite(*v))));
+            }
+            obj(pairs)
+        })
+        .collect();
+    let doc = obj(vec![
+        ("bench", Value::from(bench)),
+        ("peak_rss_bytes", Value::from(peak_rss_bytes() as f64)),
+        ("records", Value::Arr(rows)),
+    ]);
+    let path = crate::config::find_repo_root()
+        .join(format!("BENCH_{bench}.json"));
+    std::fs::write(&path, crate::jsonio::to_string(&doc) + "\n").ok()?;
+    println!("wrote {}", path.display());
+    Some(path)
+}
+
 /// Format seconds adaptively (ns/µs/ms/s).
 pub fn fmt_time(s: f64) -> String {
     if s < 1e-6 {
@@ -196,6 +306,57 @@ mod tests {
         assert!((rows_per_sec(1000, &st) - 2000.0).abs() < 1e-9);
         let zero = Stats::from_samples(&[]);
         assert!(rows_per_sec(1, &zero).is_infinite());
+    }
+
+    #[test]
+    fn stats_percentiles_nearest_rank() {
+        let s = Stats::from_samples(&[5.0, 1.0, 3.0, 2.0, 4.0]);
+        assert_eq!(s.p50_s, 3.0);
+        assert_eq!(s.p99_s, 5.0);
+        let empty = Stats::from_samples(&[]);
+        assert_eq!(empty.p50_s, 0.0);
+        assert_eq!(empty.p99_s, 0.0);
+        let one = Stats::from_samples(&[7.5]);
+        assert_eq!(one.p50_s, 7.5);
+        assert_eq!(one.p99_s, 7.5);
+    }
+
+    #[test]
+    fn bench_record_carries_stats_and_extras() {
+        let st = Stats::from_samples(&[0.001, 0.003]);
+        let r = BenchRecord::from_stats("demo", 100, &st)
+            .with("gflops", 1.5);
+        assert_eq!(r.name, "demo");
+        assert!((r.rows_per_sec - 100.0 / 0.002).abs() < 1e-6);
+        assert_eq!(r.iters, 2);
+        assert_eq!(r.extra, vec![("gflops".to_string(), 1.5)]);
+    }
+
+    #[test]
+    fn write_bench_json_roundtrips_through_jsonio() {
+        let st = Stats::from_samples(&[0.002]);
+        let recs = vec![
+            BenchRecord::from_stats("a", 10, &st).with("x", 2.0),
+            // non-finite values must be clamped, not break the JSON
+            BenchRecord::from_stats("b", 1, &Stats::from_samples(&[])),
+        ];
+        // the API defines unwritable checkouts as non-fatal (None) —
+        // don't fail the suite over them, just skip the roundtrip
+        let Some(path) = write_bench_json("selftest", &recs) else {
+            eprintln!("SKIP: repo root not writable");
+            return;
+        };
+        let text = std::fs::read_to_string(&path).unwrap();
+        let doc = crate::jsonio::parse(&text).expect("valid JSON");
+        assert_eq!(doc.get("bench").as_str(), Some("selftest"));
+        let rows = doc.get("records").as_arr().unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].get("name").as_str(), Some("a"));
+        assert_eq!(rows[0].get("x").as_f64(), Some(2.0));
+        assert_eq!(rows[1].get("rows_per_sec").as_f64(), Some(0.0));
+        // peak RSS is best-effort but must be a number
+        assert!(doc.get("peak_rss_bytes").as_f64().is_some());
+        let _ = std::fs::remove_file(path);
     }
 
     #[test]

@@ -5,9 +5,17 @@
 //! `__popc` trick of the reference CUDA kernels.  (The TPU/Pallas side
 //! instead uses ±1 matmuls — both designs are tested against each other
 //! via the shared semantics: argmin of Hamming distance.)
+//!
+//! Hashing runs as one `(N×D)·(D×bits)` blocked GEMM followed by sign
+//! bit-packing, and the K-Means assignment passes partition points over
+//! the `ExecCtx` pool — both bit-identical for any worker count (the
+//! compute-core contract, `docs/PERF.md`).
 
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::exec::{par_rows, ExecCtx};
 use crate::prng::Xoshiro256;
-use crate::tensor::Matrix;
+use crate::tensor::{gemm, Matrix};
 
 /// A set of N B-bit codes, packed LSB-first into `words_per_code` u64s.
 #[derive(Debug, Clone)]
@@ -62,17 +70,46 @@ impl Lsh {
         Self { bits, proj: Matrix::randn(bits, dim, rng) }
     }
 
+    /// Hash every row of `x`: one `(N×D)·(D×bits)` GEMM followed by
+    /// sign bit-packing (sequential; see [`Lsh::hash_ctx`]).
     pub fn hash(&self, x: &Matrix) -> BitCodes {
+        self.hash_ctx(x, &ExecCtx::sequential())
+    }
+
+    /// [`Lsh::hash`] with rows partitioned over the ctx pool.
+    ///
+    /// The N·bits separate scalar dots of the seed are one blocked NT
+    /// GEMM against the packed projection panels; each worker scores
+    /// `gemm::MC`-row blocks through one reused `MC × bits` buffer
+    /// (O(block) scratch, not O(N·bits)) and packs the signs into its
+    /// disjoint span of the code words.  GEMM bit-determinism makes the
+    /// codes identical for any worker count and any row blocking.
+    pub fn hash_ctx(&self, x: &Matrix, ctx: &ExecCtx) -> BitCodes {
         assert_eq!(x.cols, self.proj.cols, "dim mismatch");
         let mut codes = BitCodes::new(x.rows, self.bits);
-        for i in 0..x.rows {
-            let row = x.row(i);
-            for b in 0..self.bits {
-                if crate::tensor::dot(row, self.proj.row(b)) >= 0.0 {
-                    codes.set_bit(i, b);
-                }
-            }
+        if x.rows == 0 || self.bits == 0 {
+            return codes;
         }
+        let bp = gemm::pack_nt(&self.proj);
+        let (lda, bits, wpc) = (x.cols, self.bits, codes.words_per_code);
+        par_rows(ctx, &mut codes.words, x.rows, wpc, |range, words| {
+            let mut scores = vec![0f32; gemm::MC * bits];
+            let mut r0 = range.start;
+            while r0 < range.end {
+                let mc = gemm::MC.min(range.end - r0);
+                gemm::gemm_rows(&x.data, lda, &bp,
+                                &mut scores[..mc * bits], r0, r0 + mc);
+                for r in 0..mc {
+                    let woff = (r0 - range.start + r) * wpc;
+                    for b in 0..bits {
+                        if scores[r * bits + b] >= 0.0 {
+                            words[woff + b / 64] |= 1u64 << (b % 64);
+                        }
+                    }
+                }
+                r0 += mc;
+            }
+        });
         codes
     }
 }
@@ -89,6 +126,39 @@ pub struct Clustering {
     pub cost: u64,
 }
 
+/// Assign every code to its nearest centroid (argmin of Hamming
+/// distance, first index on ties) and return the total cost.
+///
+/// The shared assignment pass of `hamming_kmeans` — both the Lloyd
+/// iterations and the final stats pass run exactly this.  Points
+/// partition over the ctx pool (each point's argmin is independent and
+/// the cost reduction is an exact integer sum), so the result is
+/// identical for any worker count.
+pub fn assign_nearest(codes: &BitCodes, cent: &[u64], n_clusters: usize,
+                      groups: &mut [u32], ctx: &ExecCtx) -> u64 {
+    let wpc = codes.words_per_code;
+    debug_assert_eq!(cent.len(), n_clusters * wpc);
+    debug_assert_eq!(groups.len(), codes.n);
+    let total = AtomicU64::new(0);
+    par_rows(ctx, groups, codes.n, 1, |range, chunk| {
+        let mut local = 0u64;
+        for (off, i) in range.enumerate() {
+            let code = codes.code(i);
+            let mut best = (u32::MAX, 0usize);
+            for c in 0..n_clusters {
+                let d = hamming(code, &cent[c * wpc..(c + 1) * wpc]);
+                if d < best.0 {
+                    best = (d, c);
+                }
+            }
+            chunk[off] = best.1 as u32;
+            local += best.0 as u64;
+        }
+        total.fetch_add(local, Ordering::Relaxed);
+    });
+    total.into_inner()
+}
+
 /// K-Means in Hamming space with majority-vote centroid updates.
 ///
 /// Deterministic strided init (matches `ref.init_centroid_codes`).  Empty
@@ -96,6 +166,26 @@ pub struct Clustering {
 /// points are assigned but do not vote (query padding).
 pub fn hamming_kmeans(codes: &BitCodes, n_clusters: usize, iters: usize,
                       point_mask: Option<&[bool]>) -> Clustering {
+    hamming_kmeans_ctx(codes, n_clusters, iters, point_mask,
+                       &ExecCtx::sequential())
+}
+
+/// [`hamming_kmeans`] with the assignment passes partitioned over the
+/// ctx pool.  Two exact optimizations over the seed loop:
+///
+///  - **early exit** — when an assignment pass reproduces the previous
+///    one, the vote update would recompute identical centroids (same
+///    votes; tied and empty-cluster bits keep values they already
+///    have), so every remaining iteration is a no-op and the loop
+///    stops.  The returned clustering is bit-for-bit the same as
+///    running all `iters`.
+///  - **counting-sort member gather** — votes accumulate per cluster
+///    over a contiguous member list (cluster-major) instead of
+///    scattering per point, so the per-cluster bit counters stay
+///    cache-hot.
+pub fn hamming_kmeans_ctx(codes: &BitCodes, n_clusters: usize, iters: usize,
+                          point_mask: Option<&[bool]>, ctx: &ExecCtx)
+                          -> Clustering {
     assert!(n_clusters >= 1 && codes.n >= 1);
     let wpc = codes.words_per_code;
     // strided init
@@ -106,39 +196,64 @@ pub fn hamming_kmeans(codes: &BitCodes, n_clusters: usize, iters: usize,
     }
 
     let mut groups = vec![0u32; codes.n];
-    let mut counts = vec![0u32; n_clusters];
+    // sentinel: a group id that assign_nearest can never produce, so
+    // the fixed-point check cannot fire before the first comparison
+    let mut prev = vec![u32::MAX; codes.n];
+    // set when the loop converges: that assignment ran against the
+    // final centroids, so the post-loop pass would recompute it
+    let mut converged_cost: Option<u64> = None;
     let voting = |i: usize| point_mask.map_or(true, |m| m[i]);
 
+    // reusable gather + vote scratch, hoisted out of the Lloyd loop
+    let mut offs = vec![0usize; n_clusters + 1];
+    let mut members: Vec<u32> = Vec::with_capacity(codes.n);
+    let mut ones = vec![0u32; codes.bits];
+
     for _ in 0..iters {
-        // assignment
-        for i in 0..codes.n {
-            let code = codes.code(i);
-            let mut best = (u32::MAX, 0usize);
-            for c in 0..n_clusters {
-                let d = hamming(code, &cent[c * wpc..(c + 1) * wpc]);
-                if d < best.0 {
-                    best = (d, c);
-                }
-            }
-            groups[i] = best.1 as u32;
+        let cost = assign_nearest(codes, &cent, n_clusters, &mut groups,
+                                  ctx);
+        if prev == groups {
+            // fixed point: the update below would change nothing, and
+            // this assignment already is the final one
+            converged_cost = Some(cost);
+            break;
         }
-        // majority-vote update
-        let mut votes = vec![0i64; n_clusters * codes.bits];
-        counts.iter_mut().for_each(|c| *c = 0);
+        // counting-sort gather: voting members, cluster-major
+        offs.iter_mut().for_each(|o| *o = 0);
         for i in 0..codes.n {
-            if !voting(i) {
-                continue;
-            }
-            let g = groups[i] as usize;
-            counts[g] += 1;
-            for b in 0..codes.bits {
-                votes[g * codes.bits + b] +=
-                    if codes.get_bit(i, b) { 1 } else { -1 };
+            if voting(i) {
+                offs[groups[i] as usize + 1] += 1;
             }
         }
         for c in 0..n_clusters {
-            for b in 0..codes.bits {
-                let v = votes[c * codes.bits + b];
+            offs[c + 1] += offs[c];
+        }
+        members.clear();
+        members.resize(offs[n_clusters], 0);
+        let mut cursor = offs.clone();
+        for i in 0..codes.n {
+            if voting(i) {
+                let g = groups[i] as usize;
+                members[cursor[g]] = i as u32;
+                cursor[g] += 1;
+            }
+        }
+        // majority vote per cluster, streaming its contiguous members
+        for c in 0..n_clusters {
+            let mem = &members[offs[c]..offs[c + 1]];
+            if mem.is_empty() {
+                continue; // empty cluster keeps its previous centroid
+            }
+            ones.iter_mut().for_each(|o| *o = 0);
+            for &i in mem {
+                let code = codes.code(i as usize);
+                for (b, one) in ones.iter_mut().enumerate() {
+                    *one += ((code[b / 64] >> (b % 64)) & 1) as u32;
+                }
+            }
+            for (b, &one) in ones.iter().enumerate() {
+                // votes = ones - zeros = 2·ones - members
+                let v = 2 * one as i64 - mem.len() as i64;
                 let word = &mut cent[c * wpc + b / 64];
                 let mask = 1u64 << (b % 64);
                 if v > 0 {
@@ -148,23 +263,17 @@ pub fn hamming_kmeans(codes: &BitCodes, n_clusters: usize, iters: usize,
                 } // v == 0 → keep previous bit
             }
         }
+        prev.copy_from_slice(&groups);
     }
 
-    // final assignment + stats
-    let mut cost = 0u64;
-    counts.iter_mut().for_each(|c| *c = 0);
-    for i in 0..codes.n {
-        let code = codes.code(i);
-        let mut best = (u32::MAX, 0usize);
-        for c in 0..n_clusters {
-            let d = hamming(code, &cent[c * wpc..(c + 1) * wpc]);
-            if d < best.0 {
-                best = (d, c);
-            }
-        }
-        groups[i] = best.1 as u32;
-        counts[best.1] += 1;
-        cost += best.0 as u64;
+    // final assignment + stats through the same shared helper (skipped
+    // when the loop already converged on the final centroids)
+    let cost = converged_cost.unwrap_or_else(|| {
+        assign_nearest(codes, &cent, n_clusters, &mut groups, ctx)
+    });
+    let mut counts = vec![0u32; n_clusters];
+    for &g in &groups {
+        counts[g as usize] += 1;
     }
     Clustering { n_clusters, groups, counts, cost }
 }
@@ -226,9 +335,20 @@ pub fn euclidean_kmeans(x: &Matrix, n_clusters: usize, iters: usize)
 /// Cluster queries exactly like the L2 graph: LSH codes → Hamming K-Means.
 pub fn cluster_queries(q: &Matrix, n_clusters: usize, bits: usize,
                        iters: usize, rng: &mut Xoshiro256) -> Clustering {
+    cluster_queries_ctx(q, n_clusters, bits, iters, rng,
+                        &ExecCtx::sequential())
+}
+
+/// [`cluster_queries`] with hashing and assignment partitioned over the
+/// ctx pool.  The RNG draws (the projection directions) happen before
+/// any parallel work, so the clustering is bit-identical for any worker
+/// count.
+pub fn cluster_queries_ctx(q: &Matrix, n_clusters: usize, bits: usize,
+                           iters: usize, rng: &mut Xoshiro256,
+                           ctx: &ExecCtx) -> Clustering {
     let lsh = Lsh::new(q.cols, bits, rng);
-    let codes = lsh.hash(q);
-    hamming_kmeans(&codes, n_clusters, iters, None)
+    let codes = lsh.hash_ctx(q, ctx);
+    hamming_kmeans_ctx(&codes, n_clusters, iters, None, ctx)
 }
 
 /// Cluster every (batch × head) slice of a batched query tensor.
@@ -236,14 +356,17 @@ pub fn cluster_queries(q: &Matrix, n_clusters: usize, bits: usize,
 /// Slice `s` draws its LSH projections from `prng::slice_stream(seed, s)`
 /// and nothing else, so the result is bit-identical whether the pool runs
 /// slices in parallel or `cluster_queries` is called per slice in order.
+/// Like `AttentionKernel::run_batch`, the ctx budget splits between the
+/// slice axis and intra-slice hashing/assignment.
 pub fn cluster_queries_batch(q: &crate::tensor::batch::BatchMatrix,
                              n_clusters: usize, bits: usize, iters: usize,
-                             seed: u64, pool: &crate::exec::WorkerPool)
+                             seed: u64, ctx: &ExecCtx)
                              -> Vec<Clustering> {
-    pool.map_indexed(q.slices(), |s| {
+    let (outer, inner) = ctx.split_batch(q.slices());
+    outer.map_indexed(q.slices(), |s| {
         let mut rng = crate::prng::slice_stream(seed, s as u64);
-        cluster_queries(&q.slice_matrix(s), n_clusters, bits, iters,
-                        &mut rng)
+        cluster_queries_ctx(&q.slice_matrix(s), n_clusters, bits, iters,
+                            &mut rng, &inner)
     })
 }
 
@@ -377,14 +500,84 @@ mod tests {
     }
 
     #[test]
+    fn gemm_hash_parallel_matches_sequential_bit_for_bit() {
+        use crate::exec::WorkerPool;
+        let mut rng = Xoshiro256::new(21);
+        let lsh = Lsh::new(24, 100, &mut rng); // 2 words per code
+        let x = Matrix::randn(137, 24, &mut rng); // ragged row count
+        let seq = lsh.hash(&x);
+        for workers in [2, 3, 8] {
+            let ctx = ExecCtx::with_par_rows(WorkerPool::new(workers), 1);
+            let par = lsh.hash_ctx(&x, &ctx);
+            assert_eq!(par.words, seq.words, "workers={workers}");
+        }
+        // packing invariant: no bit above `bits` is ever set
+        for i in 0..seq.n {
+            for b in seq.bits..seq.words_per_code * 64 {
+                assert!(!seq.get_bit(i, b), "stray bit {b} in code {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn kmeans_parallel_assignment_matches_sequential_bit_for_bit() {
+        use crate::exec::WorkerPool;
+        let codes = random_codes(211, 63, 9);
+        let seq = hamming_kmeans(&codes, 7, 10, None);
+        for workers in [2, 5] {
+            let ctx = ExecCtx::with_par_rows(WorkerPool::new(workers), 1);
+            let par = hamming_kmeans_ctx(&codes, 7, 10, None, &ctx);
+            assert_eq!(par.groups, seq.groups, "workers={workers}");
+            assert_eq!(par.counts, seq.counts);
+            assert_eq!(par.cost, seq.cost);
+        }
+    }
+
+    #[test]
+    fn kmeans_early_exit_is_exact_not_approximate() {
+        // a run capped at many iterations must equal a run with few when
+        // the few already converge — the early exit is a fixed-point
+        // detection, not a tolerance
+        let codes = random_codes(160, 31, 12);
+        let short = hamming_kmeans(&codes, 6, 25, None);
+        let long = hamming_kmeans(&codes, 6, 1000, None);
+        assert_eq!(short.groups, long.groups);
+        assert_eq!(short.cost, long.cost);
+    }
+
+    #[test]
+    fn assign_nearest_is_the_scalar_argmin() {
+        let codes = random_codes(90, 63, 4);
+        let cent_src = random_codes(5, 63, 5);
+        let cent = cent_src.words.clone();
+        let mut groups = vec![0u32; codes.n];
+        let cost = assign_nearest(&codes, &cent, 5, &mut groups,
+                                  &ExecCtx::sequential());
+        let mut want_cost = 0u64;
+        for i in 0..codes.n {
+            let mut best = (u32::MAX, 0usize);
+            for c in 0..5 {
+                let d = hamming(codes.code(i), cent_src.code(c));
+                if d < best.0 {
+                    best = (d, c);
+                }
+            }
+            assert_eq!(groups[i], best.1 as u32, "point {i}");
+            want_cost += best.0 as u64;
+        }
+        assert_eq!(cost, want_cost);
+    }
+
+    #[test]
     fn batched_clustering_matches_per_slice_sequential() {
         use crate::exec::WorkerPool;
         use crate::tensor::batch::BatchMatrix;
 
         let mut rng = Xoshiro256::new(8);
         let q = BatchMatrix::randn(2, 3, 48, 8, &mut rng);
-        let par = cluster_queries_batch(&q, 4, 31, 5, 9,
-                                        &WorkerPool::new(4));
+        let par = cluster_queries_batch(
+            &q, 4, 31, 5, 9,
+            &ExecCtx::with_par_rows(WorkerPool::new(4), 1));
         assert_eq!(par.len(), 6);
         for s in 0..q.slices() {
             let mut rng_s = crate::prng::slice_stream(9, s as u64);

@@ -36,7 +36,7 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, bail, Result};
 
 use crate::attention::{kernel_by_name, AttentionKernel};
-use crate::exec::{Channel, SharedWorkerPool};
+use crate::exec::{Channel, ExecCtx, SharedWorkerPool};
 use crate::metrics::{LatencyHistogram, PaddingWaste};
 use crate::prng::Xoshiro256;
 use crate::tensor::batch::BatchMatrix;
@@ -107,6 +107,12 @@ pub struct GatewayOptions {
     /// Spill fail-fast submissions into the next larger bucket when the
     /// tight bucket's queue is full.
     pub route_up: bool,
+    /// Minimum output rows before an intra-slice compute-core op goes
+    /// parallel (0 = `exec::DEFAULT_PAR_ROWS`).  A leased flush splits
+    /// its workers between the slice axis and intra-slice tiling, so a
+    /// single long-N request in a tail bucket still uses its whole
+    /// lease; output bits never depend on the split.
+    pub par_rows: usize,
 }
 
 impl Default for GatewayOptions {
@@ -117,6 +123,7 @@ impl Default for GatewayOptions {
             workers: 0, // auto
             seed: 0,
             route_up: true,
+            par_rows: 0,
         }
     }
 }
@@ -158,6 +165,11 @@ impl BucketMetrics {
     /// Latency percentile in microseconds (p in [0, 100]).
     pub fn percentile_us(&self, p: f64) -> f64 {
         self.latency.lock().unwrap().percentile_us(p)
+    }
+
+    /// Mean latency in microseconds.
+    pub fn mean_us(&self) -> f64 {
+        self.latency.lock().unwrap().mean_us()
     }
 }
 
@@ -215,12 +227,12 @@ impl ServingGateway {
                 max_wait: opts.max_wait,
             };
             let (shape, seed, pool) = (shape, opts.seed, pool.clone());
-            let seq_len = bucket.seq_len;
+            let (seq_len, par_rows) = (bucket.seq_len, opts.par_rows);
             let spawned = std::thread::Builder::new()
                 .name(format!("ct-gateway-{seq_len}"))
                 .spawn(move || {
                     bucket_dispatcher(kernel, shape, seq_len, ch, m, pool,
-                                      policy, seed)
+                                      policy, seed, par_rows)
                 });
             match spawned {
                 Ok(handle) => workers.push(handle),
@@ -426,11 +438,12 @@ pub fn valid_rows(out: &BatchMatrix, slot: usize, len: usize) -> Vec<f32> {
     rows
 }
 
+#[allow(clippy::too_many_arguments)]
 fn bucket_dispatcher(kernel: Box<dyn AttentionKernel>, shape: GatewayShape,
                      seq_len: usize, ch: Channel<GatewayRequest>,
                      metrics: Arc<BucketMetrics>,
                      pool: Arc<SharedWorkerPool>, policy: BatchPolicy,
-                     seed: u64) {
+                     seed: u64, par_rows: usize) {
     let mut batcher: Batcher<GatewayRequest> = Batcher::new(policy);
     loop {
         let wait = batcher.next_wait(Instant::now());
@@ -443,7 +456,7 @@ fn bucket_dispatcher(kernel: Box<dyn AttentionKernel>, shape: GatewayShape,
             Ok(None) => {
                 if let Some(batch) = batcher.take() {
                     run_bucket_batch(kernel.as_ref(), shape, seq_len, batch,
-                                     &metrics, &pool, seed);
+                                     &metrics, &pool, seed, par_rows);
                 }
                 return;
             }
@@ -454,15 +467,16 @@ fn bucket_dispatcher(kernel: Box<dyn AttentionKernel>, shape: GatewayShape,
         }
         if let Some(batch) = ready {
             run_bucket_batch(kernel.as_ref(), shape, seq_len, batch,
-                             &metrics, &pool, seed);
+                             &metrics, &pool, seed, par_rows);
         }
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn run_bucket_batch(kernel: &dyn AttentionKernel, shape: GatewayShape,
                     seq_len: usize, batch: Vec<GatewayRequest>,
                     metrics: &BucketMetrics, pool: &SharedWorkerPool,
-                    seed: u64) {
+                    seed: u64, par_rows: usize) {
     let occupancy = batch.len();
     let qb: Vec<(&[f32], usize)> =
         batch.iter().map(|r| (&r.q[..], r.len)).collect();
@@ -477,9 +491,13 @@ fn run_bucket_batch(kernel: &dyn AttentionKernel, shape: GatewayShape,
         batch.iter().map(|r| r.enqueued.elapsed()).collect();
 
     // one lease per flush: live leases never sum above the shared
-    // budget (a flush queues here when it is spent)
+    // budget (a flush queues here when it is spent).  The leased
+    // workers split between the slice axis and intra-slice tiled
+    // compute (run_batch), so a lone long-N request still uses them
+    // all — without changing a single output bit.
     let lease = pool.lease();
-    let out = kernel.run_batch(&q, &k, &v, seed, &lease);
+    let ctx = ExecCtx::with_par_rows(*lease, par_rows);
+    let out = kernel.run_batch(&q, &k, &v, seed, &ctx);
     drop(lease);
 
     metrics.batches.fetch_add(1, Ordering::Relaxed);
@@ -680,6 +698,7 @@ mod tests {
                 workers: 4,
                 seed: 17,
                 route_up: true,
+                par_rows: 0,
             },
         )
         .unwrap();

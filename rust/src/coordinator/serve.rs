@@ -18,7 +18,7 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Result};
 
 use crate::attention::AttentionKernel;
-use crate::exec::{Channel, WorkerPool};
+use crate::exec::{Channel, ExecCtx, WorkerPool};
 use crate::metrics::LatencyHistogram;
 use crate::runtime::{HostTensor, Runtime};
 use crate::tensor::batch::BatchMatrix;
@@ -367,10 +367,16 @@ pub struct AttnResponse {
 pub struct NativeAttnOptions {
     pub policy: BatchPolicy,
     pub queue_capacity: usize,
-    /// Exec-pool workers parallelizing over (batch × head) slices.
+    /// Exec-pool workers.  `run_batch` splits them between the
+    /// (batch × head) slice axis and intra-slice tiled compute — a
+    /// lone long-N request still uses the whole budget.
     pub workers: usize,
     /// Base seed of the per-slice PRNG streams (see `prng::slice_stream`).
     pub seed: u64,
+    /// Minimum output rows before an intra-slice op goes parallel
+    /// (0 = `exec::DEFAULT_PAR_ROWS`).  Lower it for long-N /
+    /// small-batch buckets where single-request latency matters most.
+    pub par_rows: usize,
 }
 
 impl Default for NativeAttnOptions {
@@ -380,6 +386,7 @@ impl Default for NativeAttnOptions {
             queue_capacity: 64,
             workers: WorkerPool::auto().workers(),
             seed: 0,
+            par_rows: 0,
         }
     }
 }
@@ -499,7 +506,8 @@ impl NativeAttentionEngine {
 fn native_dispatcher(kernel: Box<dyn AttentionKernel>, shape: AttnShape,
                      ch: Channel<AttnRequest>, metrics: Arc<ServeMetrics>,
                      opts: NativeAttnOptions) {
-    let pool = WorkerPool::new(opts.workers);
+    let pool = ExecCtx::with_par_rows(WorkerPool::new(opts.workers),
+                                      opts.par_rows);
     let mut batcher: Batcher<AttnRequest> = Batcher::new(opts.policy);
     loop {
         let item = ch.recv_timeout(batcher.next_wait(Instant::now()));
@@ -529,7 +537,7 @@ fn native_dispatcher(kernel: Box<dyn AttentionKernel>, shape: AttnShape,
 
 fn run_native_batch(kernel: &dyn AttentionKernel, shape: AttnShape,
                     batch: Vec<AttnRequest>, metrics: &ServeMetrics,
-                    pool: &WorkerPool, seed: u64) {
+                    pool: &ExecCtx, seed: u64) {
     let b = batch.len();
     let occupancy = b;
     // assemble (B, H, N, D): request order is batch order, each request
@@ -621,6 +629,7 @@ mod tests {
                 queue_capacity: 8,
                 workers: 4,
                 seed: 17,
+                par_rows: 0,
             },
         );
         let rx0 = engine

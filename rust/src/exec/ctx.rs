@@ -1,0 +1,242 @@
+//! Intra-op execution context: a pool handle plus the parallelism
+//! threshold every row-partitioned primitive consults.
+//!
+//! [`ExecCtx`] is the seam the tiled compute core (`tensor::gemm`, the
+//! streaming softmax path, LSH hashing, K-Means assignment, the
+//! improved-attention per-query pass) parallelizes through.  The rule
+//! that keeps parallel output bit-identical to sequential output:
+//!
+//! > **Partition output rows, never split a reduction.**
+//!
+//! Workers own disjoint contiguous row ranges of the output; every
+//! reduction (a GEMM k-sum, a softmax normalizer, a top-k scan) runs
+//! entirely inside the worker that owns its output row, in the same
+//! order a sequential loop would use.  Chunk boundaries therefore never
+//! change a single arithmetic operation — only which thread executes it
+//! — so results are independent of the worker count (including 1).
+//! `proptest/attention_props.rs` enforces this for every kernel family.
+
+use crate::exec::WorkerPool;
+
+/// Default minimum output rows before an op splits across the pool.
+/// Below this the fork/join overhead of scoped workers outweighs the
+/// work (a 64-row GEMM stripe is microseconds).
+pub const DEFAULT_PAR_ROWS: usize = 64;
+
+/// Pool handle + parallelism threshold threaded through
+/// [`crate::attention::AttentionKernel::run`] and the compute core.
+#[derive(Debug, Clone, Copy)]
+pub struct ExecCtx {
+    pool: WorkerPool,
+    /// Minimum output rows before an op partitions over the pool.
+    par_rows: usize,
+}
+
+impl ExecCtx {
+    /// Context over `pool` with the default row threshold.
+    pub fn new(pool: WorkerPool) -> Self {
+        Self { pool, par_rows: DEFAULT_PAR_ROWS }
+    }
+
+    /// Context with an explicit threshold (`0` = [`DEFAULT_PAR_ROWS`]).
+    pub fn with_par_rows(pool: WorkerPool, par_rows: usize) -> Self {
+        let par_rows = if par_rows == 0 { DEFAULT_PAR_ROWS } else { par_rows };
+        Self { pool, par_rows }
+    }
+
+    /// Single-worker context: every op runs inline on the caller.
+    pub fn sequential() -> Self {
+        Self { pool: WorkerPool::sequential(), par_rows: usize::MAX }
+    }
+
+    pub fn pool(&self) -> &WorkerPool {
+        &self.pool
+    }
+
+    pub fn workers(&self) -> usize {
+        self.pool.workers()
+    }
+
+    pub fn par_rows(&self) -> usize {
+        self.par_rows
+    }
+
+    /// Should an op with `rows` output rows split across the pool?
+    pub fn should_par(&self, rows: usize) -> bool {
+        self.pool.workers() > 1 && rows >= self.par_rows
+    }
+
+    /// `f(i)` for `i in 0..n`, results in index order — split across
+    /// the pool when the row threshold says so, inline otherwise.  The
+    /// map-shaped sibling of [`par_rows`]; like it, `f` must make each
+    /// index's result independent of every other, which keeps the
+    /// output identical for any worker count.
+    pub fn map_indexed<R, F>(&self, n: usize, f: F) -> Vec<R>
+    where
+        R: Send,
+        F: Fn(usize) -> R + Sync,
+    {
+        if self.should_par(n) {
+            self.pool.map_indexed(n, f)
+        } else {
+            (0..n).map(f).collect()
+        }
+    }
+
+    /// Split the worker budget between `slices` outer tasks (the
+    /// batched (batch × head) axis) and the per-task inner context.
+    ///
+    /// Many slices → all workers go outer, inner runs sequential (the
+    /// pre-compute-core schedule).  Few slices (a lone long-N request)
+    /// → the leftover workers move inside the slice, so single-sequence
+    /// latency still uses the whole budget.  The outer width maximizes
+    /// busy workers (`outer · ⌊total/outer⌋`), preferring the cheaper
+    /// slice axis on ties — a 5-slice batch on 8 workers runs 4×2, not
+    /// 5×1 with three idle.  Worker placement never changes output
+    /// bits, so the split is invisible beyond speed.
+    pub fn split_batch(&self, slices: usize) -> (WorkerPool, ExecCtx) {
+        let total = self.pool.workers();
+        let mut best = (1usize, 1usize);
+        for outer in 1..=total.min(slices.max(1)) {
+            let inner = total / outer;
+            // >= : later (wider-outer) candidates win ties
+            if outer * inner >= best.0 * best.1 {
+                best = (outer, inner);
+            }
+        }
+        (
+            WorkerPool::new(best.0),
+            ExecCtx { pool: WorkerPool::new(best.1),
+                      par_rows: self.par_rows },
+        )
+    }
+}
+
+impl Default for ExecCtx {
+    fn default() -> Self {
+        Self::new(WorkerPool::auto())
+    }
+}
+
+/// Run `f(row_range, chunk)` over contiguous row blocks of a row-major
+/// buffer of `rows` rows × `stride` elements — the one way compute-core
+/// primitives go parallel.
+///
+/// The buffer is split into at most `ctx.workers()` contiguous chunks;
+/// each invocation gets the global row range it owns and the mutable
+/// storage of exactly those rows.  `f` must compute each row the same
+/// way regardless of which chunk contains it (no cross-row state), which
+/// makes the result bit-identical to the sequential call `f(0..rows,
+/// buf)` for any worker count.  When `ctx` declines parallelism the
+/// sequential call is exactly what happens.
+pub fn par_rows<T, F>(ctx: &ExecCtx, buf: &mut [T], rows: usize,
+                      stride: usize, f: F)
+where
+    T: Send,
+    F: Fn(std::ops::Range<usize>, &mut [T]) + Sync,
+{
+    debug_assert_eq!(buf.len(), rows * stride, "par_rows shape mismatch");
+    if rows == 0 || stride == 0 {
+        return;
+    }
+    if !ctx.should_par(rows) {
+        f(0..rows, buf);
+        return;
+    }
+    let rows_per_chunk = rows.div_ceil(ctx.workers());
+    let chunks: Vec<&mut [T]> = buf.chunks_mut(rows_per_chunk * stride).collect();
+    ctx.pool().for_each_mut(chunks, |ci, chunk| {
+        let r0 = ci * rows_per_chunk;
+        let r1 = r0 + chunk.len() / stride;
+        f(r0..r1, chunk);
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn thresholds_and_defaults() {
+        let ctx = ExecCtx::new(WorkerPool::new(4));
+        assert_eq!(ctx.workers(), 4);
+        assert_eq!(ctx.par_rows(), DEFAULT_PAR_ROWS);
+        assert!(ctx.should_par(DEFAULT_PAR_ROWS));
+        assert!(!ctx.should_par(DEFAULT_PAR_ROWS - 1));
+        assert!(!ExecCtx::sequential().should_par(usize::MAX - 1));
+        assert_eq!(ExecCtx::with_par_rows(WorkerPool::new(2), 0).par_rows(),
+                   DEFAULT_PAR_ROWS);
+        assert_eq!(ExecCtx::with_par_rows(WorkerPool::new(2), 7).par_rows(),
+                   7);
+        assert!(ExecCtx::default().workers() >= 1);
+    }
+
+    #[test]
+    fn split_batch_balances_outer_and_inner() {
+        let ctx = ExecCtx::new(WorkerPool::new(8));
+        // many slices: all workers outer, inner sequential
+        let (outer, inner) = ctx.split_batch(16);
+        assert_eq!(outer.workers(), 8);
+        assert_eq!(inner.workers(), 1);
+        // one slice: the whole budget moves inside
+        let (outer, inner) = ctx.split_batch(1);
+        assert_eq!(outer.workers(), 1);
+        assert_eq!(inner.workers(), 8);
+        // threshold survives the split
+        assert_eq!(inner.par_rows(), ctx.par_rows());
+        // awkward slice counts still keep every worker busy: 5 slices
+        // on 8 workers runs 4 outer × 2 inner, not 5 × 1 with 3 idle
+        let (outer, inner) = ctx.split_batch(5);
+        assert_eq!((outer.workers(), inner.workers()), (4, 2));
+        // degenerate: zero slices must not panic or divide by zero
+        let (outer, inner) = ctx.split_batch(0);
+        assert!(outer.workers() >= 1 && inner.workers() >= 1);
+    }
+
+    #[test]
+    fn par_rows_covers_every_row_once_for_any_worker_count() {
+        for workers in [1, 2, 3, 5, 8] {
+            let ctx = ExecCtx::with_par_rows(WorkerPool::new(workers), 1);
+            let (rows, stride) = (23, 3);
+            let mut buf = vec![0u32; rows * stride];
+            par_rows(&ctx, &mut buf, rows, stride, |range, chunk| {
+                for (off, r) in range.enumerate() {
+                    for c in 0..stride {
+                        chunk[off * stride + c] = (r * stride + c) as u32;
+                    }
+                }
+            });
+            let want: Vec<u32> =
+                (0..(rows * stride) as u32).collect();
+            assert_eq!(buf, want, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn map_indexed_matches_inline_map_for_any_worker_count() {
+        for workers in [1, 2, 4] {
+            let ctx = ExecCtx::with_par_rows(WorkerPool::new(workers), 1);
+            assert_eq!(ctx.map_indexed(13, |i| 3 * i),
+                       (0..13).map(|i| 3 * i).collect::<Vec<_>>(),
+                       "workers={workers}");
+        }
+        // below the threshold it stays inline and still matches
+        let ctx = ExecCtx::with_par_rows(WorkerPool::new(4), 100);
+        assert_eq!(ctx.map_indexed(5, |i| i + 1), vec![1, 2, 3, 4, 5]);
+        assert_eq!(ctx.map_indexed(0, |i| i), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn par_rows_sequential_below_threshold_and_on_empty() {
+        let ctx = ExecCtx::with_par_rows(WorkerPool::new(4), 100);
+        let mut buf = vec![0u8; 10];
+        par_rows(&ctx, &mut buf, 10, 1, |range, chunk| {
+            // below threshold: one call owning everything
+            assert_eq!(range, 0..10);
+            chunk.fill(1);
+        });
+        assert!(buf.iter().all(|&b| b == 1));
+        let mut empty: Vec<u8> = Vec::new();
+        par_rows(&ctx, &mut empty, 0, 4, |_, _| panic!("no rows"));
+    }
+}

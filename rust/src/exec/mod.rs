@@ -9,8 +9,10 @@ use std::collections::VecDeque;
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
+pub mod ctx;
 pub mod pool;
 
+pub use ctx::{par_rows, ExecCtx, DEFAULT_PAR_ROWS};
 pub use pool::{PoolLease, SharedWorkerPool, WorkerPool};
 
 /// Bounded multi-producer multi-consumer channel.

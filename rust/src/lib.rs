@@ -31,6 +31,12 @@
 //!   output is **bit-identical** to the sequential loop
 //!   ([`attention::run_batch_seq`]) — property-tested in
 //!   `proptest/attention_props.rs`.
+//! - [`tensor::gemm`] + [`exec::ExecCtx`] — the tiled parallel compute
+//!   core (PR 3): cache-blocked panel-packed GEMM, streaming
+//!   online-max softmax (full attention never materialises N×N),
+//!   one-shot GEMM LSH hashing.  Intra-slice ops partition output rows
+//!   over the ctx pool and never split a reduction, so they are
+//!   bit-identical for any worker count too (see `docs/PERF.md`).
 //! - [`coordinator::NativeAttentionEngine`] — the serving path for the
 //!   native kernels: ingress queue → deadline batcher → one batched
 //!   `run_batch` per flush over the pool, with the same backpressure and

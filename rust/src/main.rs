@@ -244,6 +244,9 @@ fn cmd_gateway(rest: &[String]) -> Result<()> {
         .opt("queue", Some("64"), "per-bucket ingress queue capacity")
         .opt("workers", Some("0"), "shared worker budget (0 = auto)")
         .opt("seed", Some("0"), "trace + clustering seed")
+        .opt("par-rows", Some("0"),
+             "min output rows before intra-slice ops go parallel \
+              (0 = default threshold)")
         .opt("addr", None, "bind address: serve TCP instead of a trace");
     let args = cmd.parse(rest)?;
     init_logging(true);
@@ -276,6 +279,8 @@ fn cmd_gateway(rest: &[String]) -> Result<()> {
         workers: args.get_usize("workers", 0)?, // 0 = auto
         seed,
         route_up: true,
+        // intra-slice parallelism threshold (0 = default)
+        par_rows: args.get_usize("par-rows", 0)?,
     };
     let gw = coordinator::ServingGateway::start(shape, buckets, opts)?;
 

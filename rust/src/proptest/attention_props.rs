@@ -1,14 +1,23 @@
-//! Properties of the batched multi-head attention engine:
+//! Properties of the batched multi-head attention engine and the tiled
+//! compute core:
 //!
 //!  1. **Determinism contract** — `run_batch` over any pool size is
 //!     bit-for-bit identical to the sequential per-slice loop
 //!     (`run_batch_seq`) for every registered kernel family.
-//!  2. **Row-stochasticity** — clustered attention matrices (plain and
+//!  2. **Intra-slice determinism** — `AttentionKernel::run` with a
+//!     parallel `ExecCtx` (row-partitioned GEMM, streaming softmax,
+//!     clustering, top-k) is bit-for-bit identical to the sequential
+//!     ctx, for every kernel family and worker count.
+//!  3. **Blocked GEMM ≡ naive** — the cache-blocked, panel-packed GEMM
+//!     (NN and NT) matches the naive i-k-j scalar loop bit for bit on
+//!     random shapes, including non-multiples of the tile sizes, for
+//!     any worker count.
+//!  4. **Row-stochasticity** — clustered attention matrices (plain and
 //!     improved) stay probability distributions row-wise.
-//!  3. **Gateway determinism** — a live `ServingGateway` co-batch
-//!     (threaded ingress, deadline batcher, shared pool) returns the
-//!     same bits as the sequential per-slice loop over the same padded
-//!     batch.
+//!  5. **Gateway determinism** — a live `ServingGateway` co-batch
+//!     (threaded ingress, deadline batcher, shared pool, intra-slice
+//!     parallelism on) returns the same bits as the sequential
+//!     per-slice loop over the same padded batch.
 
 use std::time::Duration;
 
@@ -18,10 +27,10 @@ use crate::attention::{clustered_attention_matrix,
 use crate::clustering::{cluster_queries, Clustering};
 use crate::coordinator::{pad_batch, valid_rows, Bucket, GatewayOptions,
                          GatewayShape, ServingGateway};
-use crate::exec::WorkerPool;
+use crate::exec::{ExecCtx, WorkerPool};
 use crate::proptest::forall;
 use crate::tensor::batch::BatchMatrix;
-use crate::tensor::Matrix;
+use crate::tensor::{gemm, Matrix};
 
 /// Small-hyperparameter instances of every kernel family (LSH chunk 16
 /// divides the generated Ns).
@@ -56,10 +65,13 @@ fn prop_run_batch_is_bit_identical_to_sequential_loop() {
             (q, k, v, workers, seed)
         },
         |(q, k, v, workers, seed)| {
-            let pool = WorkerPool::new(*workers);
+            // par_rows = 1 forces the intra-slice compute core parallel
+            // on top of the slice-axis parallelism
+            let ctx =
+                ExecCtx::with_par_rows(WorkerPool::new(*workers), 1);
             for var in all_variants() {
                 let kernel = kernel_for(&var);
-                let par = kernel.run_batch(q, k, v, *seed, &pool);
+                let par = kernel.run_batch(q, k, v, *seed, &ctx);
                 let seq = run_batch_seq(kernel.as_ref(), q, k, v, *seed);
                 if !par.bit_identical(&seq) {
                     return Err(format!(
@@ -72,6 +84,79 @@ fn prop_run_batch_is_bit_identical_to_sequential_loop() {
                 {
                     return Err(format!("{} bad output shape", var.name()));
                 }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_kernel_run_is_bit_identical_across_exec_ctx() {
+    forall(
+        "run(ctx parallel) ≡ run(ctx sequential), all variants",
+        0x1A7A_C0DE,
+        5,
+        |rng| {
+            let n = 32 * (1 + rng.below(3)); // 32 | 64 | 96
+            let d = 8 * (1 + rng.below(2)); // 8 | 16
+            let q = Matrix::randn(n, d, rng);
+            let k = Matrix::randn(n, d, rng);
+            let v = Matrix::randn(n, d, rng);
+            let workers = 2 + rng.below(5); // 2..=6
+            let seed = rng.next_u64();
+            (q, k, v, workers, seed)
+        },
+        |(q, k, v, workers, seed)| {
+            let par = ExecCtx::with_par_rows(WorkerPool::new(*workers), 1);
+            let seq = ExecCtx::sequential();
+            for var in all_variants() {
+                let kernel = kernel_for(&var);
+                let mut r1 = crate::prng::Xoshiro256::new(*seed);
+                let mut r2 = crate::prng::Xoshiro256::new(*seed);
+                let a = kernel.run(q, k, v, &mut r1, &seq);
+                let b = kernel.run(q, k, v, &mut r2, &par);
+                if !a.bit_identical(&b) {
+                    return Err(format!(
+                        "{} intra-slice parallel diverged (N={} \
+                         workers={workers})",
+                        var.name(), q.rows));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_blocked_gemm_is_bit_identical_to_naive() {
+    forall(
+        "blocked GEMM ≡ naive i-k-j loop, NN and NT, ragged shapes",
+        0x6E33_1B1D,
+        10,
+        |rng| {
+            // spans sub-tile, tile-aligned and multi-panel shapes
+            let m = 1 + rng.below(70);
+            let k = 1 + rng.below(2 * gemm::KC + 10);
+            let n = 1 + rng.below(40);
+            let a = Matrix::randn(m, k, rng);
+            let b_nn = Matrix::randn(k, n, rng);
+            let b_nt = Matrix::randn(n, k, rng);
+            let workers = 1 + rng.below(5); // 1..=5
+            (a, b_nn, b_nt, workers)
+        },
+        |(a, b_nn, b_nt, workers)| {
+            let ctx = ExecCtx::with_par_rows(WorkerPool::new(*workers), 1);
+            let nn = gemm::matmul_nn(a, b_nn, &ctx);
+            if !nn.bit_identical(&gemm::naive_nn(a, b_nn)) {
+                return Err(format!(
+                    "NN diverged at ({}, {}, {}) workers={workers}",
+                    a.rows, a.cols, b_nn.cols));
+            }
+            let nt = gemm::matmul_nt(a, b_nt, &ctx);
+            if !nt.bit_identical(&gemm::naive_nt(a, b_nt)) {
+                return Err(format!(
+                    "NT diverged at ({}, {}, {}) workers={workers}",
+                    a.rows, a.cols, b_nt.rows));
             }
             Ok(())
         },
@@ -118,6 +203,8 @@ fn prop_gateway_cobatch_is_bit_identical_to_sequential_padded_run() {
                     workers: *workers,
                     seed: *seed,
                     route_up: false,
+                    // exercise intra-slice parallelism on the live path
+                    par_rows: 1,
                 },
             )
             .map_err(|e| format!("gateway start: {e}"))?;

@@ -1,0 +1,411 @@
+//! Cache-blocked, panel-packed f32 GEMM — the compute core every
+//! attention kernel's matmuls run on.
+//!
+//! Two variants share one register-tiled microkernel over `MR × NR`
+//! output tiles:
+//!
+//!  - **NN** — `a (m×k) · b (k×n)`, the attention `A·V` shape;
+//!  - **NT** — `a (m×k) · bᵀ` with `b (n×k)`, the attention-logits
+//!    `Q·Kᵀ` shape (and the one-shot LSH projection).
+//!
+//! The `b` operand is packed once into `NR`-column panels
+//! ([`PackedB`]), `a` tiles are packed on the fly into `MR`-row panels,
+//! so the microkernel's inner loop is unit-stride on both sides and the
+//! k panels stream through L1/L2 ([`KC`] deep, [`MC`]-row blocks).
+//!
+//! **Determinism contract.**  Every output element is accumulated in
+//! strictly increasing `k` order into a single f32 accumulator (carried
+//! across k panels through an exact f32 store/reload of the output
+//! tile).  Tile shape, panel order and row partitioning therefore never
+//! reorder a reduction, and the blocked result is **bit-identical** to
+//! the naive i-k-j scalar loops ([`naive_nn`] / [`naive_nt`]) for any
+//! shape and any [`ExecCtx`] worker count — property-tested in
+//! `proptest/attention_props.rs`.  Parallelism partitions **output rows
+//! only** (`exec::par_rows`); the k reduction is never split.
+
+use crate::exec::{par_rows, ExecCtx};
+use crate::tensor::Matrix;
+
+/// Microkernel tile height (output rows per register tile).
+pub const MR: usize = 4;
+/// Microkernel tile width (output columns per register tile).
+pub const NR: usize = 8;
+/// k-panel depth: one packed a/b panel pair streams through L1.
+pub const KC: usize = 256;
+/// Output row-block height packed per driver pass.
+pub const MC: usize = 64;
+
+/// The `b` operand of a GEMM, packed into `NR`-column panels.
+///
+/// Layout: k panels (depth ≤ [`KC`]) outermost; within a panel, one
+/// `kc × NR` block per `NR`-column group, element `(kk, jj)` at
+/// `kk·NR + jj`; ragged edges zero-padded.  Zero padding never changes
+/// output bits — padded lanes are never stored — and keeps the
+/// microkernel free of bounds checks on the packed side.
+pub struct PackedB {
+    /// Output columns (b cols for NN, b rows for NT).
+    pub n: usize,
+    /// Reduction depth.
+    pub k: usize,
+    /// Column groups: `n.div_ceil(NR)`.
+    nb: usize,
+    data: Vec<f32>,
+}
+
+impl PackedB {
+    fn with_layout(n: usize, k: usize) -> Self {
+        let nb = n.div_ceil(NR);
+        // earlier panels are always full KC deep (panel_off relies on
+        // that); the last panel only needs its true kc depth
+        let data = vec![0.0; packed_len(k, nb * NR)];
+        Self { n, k, nb, data }
+    }
+
+    /// Byte layout offset of panel `p` (all earlier panels are full).
+    #[inline]
+    fn panel_off(&self, p: usize) -> usize {
+        p * KC * self.nb * NR
+    }
+}
+
+/// Packed buffer length for depth `k` and a padded panel width of
+/// `width` lanes: full `KC` for every panel but the last, which is
+/// sized at its actual depth.
+#[inline]
+fn packed_len(k: usize, width: usize) -> usize {
+    let k_panels = k.div_ceil(KC);
+    if k_panels == 0 {
+        return 0;
+    }
+    let kc_last = k - (k_panels - 1) * KC;
+    ((k_panels - 1) * KC + kc_last) * width
+}
+
+/// Pack `b (k×n)` for the NN product `a · b`.
+pub fn pack_nn(b: &Matrix) -> PackedB {
+    let (k, n) = (b.rows, b.cols);
+    let mut out = PackedB::with_layout(n, k);
+    for p in 0..k.div_ceil(KC) {
+        let k0 = p * KC;
+        let kc = KC.min(k - k0);
+        let base = out.panel_off(p);
+        for jb in 0..out.nb {
+            let boff = base + jb * (kc * NR);
+            let j0 = jb * NR;
+            let jn = NR.min(n - j0);
+            for kk in 0..kc {
+                let brow = &b.data[(k0 + kk) * n + j0..];
+                for jj in 0..jn {
+                    out.data[boff + kk * NR + jj] = brow[jj];
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Pack `b (n×k)` for the NT product `a · bᵀ`.
+pub fn pack_nt(b: &Matrix) -> PackedB {
+    let (n, k) = (b.rows, b.cols);
+    let mut out = PackedB::with_layout(n, k);
+    for p in 0..k.div_ceil(KC) {
+        let k0 = p * KC;
+        let kc = KC.min(k - k0);
+        let base = out.panel_off(p);
+        for jb in 0..out.nb {
+            let boff = base + jb * (kc * NR);
+            let j0 = jb * NR;
+            let jn = NR.min(n - j0);
+            for jj in 0..jn {
+                let brow = &b.data[(j0 + jj) * k + k0..];
+                for kk in 0..kc {
+                    out.data[boff + kk * NR + jj] = brow[kk];
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Pack an `m`-row tile of `a` (row stride `lda`, rows `r0..r0+m`,
+/// depth `k`) into `MR`-row panels matching [`PackedB`]'s k-panel
+/// layout.  `apack` is caller-owned scratch, reused across tiles.
+pub fn pack_a_tile(a: &[f32], lda: usize, r0: usize, m: usize, k: usize,
+                   apack: &mut Vec<f32>) {
+    let mtiles = m.div_ceil(MR);
+    let k_panels = k.div_ceil(KC);
+    apack.clear();
+    apack.resize(packed_len(k, mtiles * MR), 0.0);
+    for p in 0..k_panels {
+        let k0 = p * KC;
+        let kc = KC.min(k - k0);
+        let base = p * KC * mtiles * MR;
+        for t in 0..mtiles {
+            let toff = base + t * (kc * MR);
+            let rn = MR.min(m - t * MR);
+            for rr in 0..rn {
+                let arow = &a[(r0 + t * MR + rr) * lda + k0..];
+                for kk in 0..kc {
+                    apack[toff + kk * MR + rr] = arow[kk];
+                }
+            }
+        }
+    }
+}
+
+/// `MR × NR` register tile: `out[tile] (+)= a_panel · b_panel`.
+///
+/// `first_panel` selects write vs accumulate; accumulation loads the
+/// exact f32 partial sum back, so the per-element add order is strictly
+/// increasing k across panels.  Padded lanes compute on zeros and are
+/// never stored.
+#[inline]
+fn microkernel(kc: usize, a_panel: &[f32], b_panel: &[f32],
+               out: &mut [f32], c_off: usize, ldc: usize, mr: usize,
+               nr: usize, first_panel: bool) {
+    let mut acc = [[0f32; NR]; MR];
+    if !first_panel {
+        for (r, arow) in acc.iter_mut().enumerate().take(mr) {
+            let orow = &out[c_off + r * ldc..];
+            arow[..nr].copy_from_slice(&orow[..nr]);
+        }
+    }
+    for kk in 0..kc {
+        let av = &a_panel[kk * MR..kk * MR + MR];
+        let bv = &b_panel[kk * NR..kk * NR + NR];
+        for r in 0..MR {
+            let ar = av[r];
+            for c in 0..NR {
+                acc[r][c] += ar * bv[c];
+            }
+        }
+    }
+    for (r, arow) in acc.iter().enumerate().take(mr) {
+        let orow = &mut out[c_off + r * ldc..];
+        orow[..nr].copy_from_slice(&arow[..nr]);
+    }
+}
+
+/// `out` (an `m × cols` window with row stride `ldc`) = packed-a-tile
+/// times columns `j0 .. j0+cols` of `bp`.  `j0` must be `NR`-aligned;
+/// the window is overwritten (no pre-zeroing needed).  This is the
+/// streaming-softmax inner step: one query tile against one key block.
+pub fn tile_mul(apack: &[f32], m: usize, bp: &PackedB, j0: usize,
+                cols: usize, out: &mut [f32], ldc: usize) {
+    debug_assert_eq!(j0 % NR, 0, "tile_mul j0 must be NR-aligned");
+    debug_assert!(j0 + cols <= bp.n, "tile_mul window out of range");
+    if m == 0 || cols == 0 {
+        return;
+    }
+    if bp.k == 0 {
+        for r in 0..m {
+            out[r * ldc..r * ldc + cols].fill(0.0);
+        }
+        return;
+    }
+    let mtiles = m.div_ceil(MR);
+    let (jb0, jb1) = (j0 / NR, (j0 + cols).div_ceil(NR));
+    for p in 0..bp.k.div_ceil(KC) {
+        let kc = KC.min(bp.k - p * KC);
+        let a_base = p * KC * mtiles * MR;
+        let b_base = bp.panel_off(p);
+        for jb in jb0..jb1 {
+            let jcol = jb * NR;
+            let nr = NR.min(bp.n - jcol).min(j0 + cols - jcol);
+            let boff = b_base + jb * (kc * NR);
+            for t in 0..mtiles {
+                let i0 = t * MR;
+                let mr = MR.min(m - i0);
+                let aoff = a_base + t * (kc * MR);
+                microkernel(kc, &apack[aoff..aoff + kc * MR],
+                            &bp.data[boff..boff + kc * NR], out,
+                            i0 * ldc + (jcol - j0), ldc, mr, nr, p == 0);
+            }
+        }
+    }
+}
+
+/// Compute output rows `r0..r1` of `a · bp` into `chunk` (whose row 0 is
+/// global row `r0`).  The per-worker driver: `MC`-row blocks, on-the-fly
+/// a packing, full output width.
+pub fn gemm_rows(a: &[f32], lda: usize, bp: &PackedB, chunk: &mut [f32],
+                 r0: usize, r1: usize) {
+    let n = bp.n;
+    let mut apack = Vec::new();
+    let mut ic = r0;
+    while ic < r1 {
+        let mc = MC.min(r1 - ic);
+        pack_a_tile(a, lda, ic, mc, bp.k, &mut apack);
+        let base = (ic - r0) * n;
+        tile_mul(&apack, mc, bp, 0, n, &mut chunk[base..base + mc * n], n);
+        ic += mc;
+    }
+}
+
+fn run(a: &Matrix, bp: &PackedB, ctx: &ExecCtx) -> Matrix {
+    let (m, n) = (a.rows, bp.n);
+    let mut out = Matrix::zeros(m, n);
+    if m == 0 || n == 0 {
+        return out;
+    }
+    let lda = a.cols;
+    par_rows(ctx, &mut out.data, m, n, |range, chunk| {
+        gemm_rows(&a.data, lda, bp, chunk, range.start, range.end);
+    });
+    out
+}
+
+/// `a (m×k) · b (k×n)` — blocked, panel-packed, row-partitioned on the
+/// ctx pool.  Bit-identical to [`naive_nn`] for any worker count.
+pub fn matmul_nn(a: &Matrix, b: &Matrix, ctx: &ExecCtx) -> Matrix {
+    assert_eq!(a.cols, b.rows, "matmul shape mismatch");
+    run(a, &pack_nn(b), ctx)
+}
+
+/// `a (m×k) · bᵀ` with `b (n×k)` — the attention-logits shape.
+/// Bit-identical to [`naive_nt`] for any worker count.
+pub fn matmul_nt(a: &Matrix, b: &Matrix, ctx: &ExecCtx) -> Matrix {
+    assert_eq!(a.cols, b.cols, "matmul_nt shape mismatch");
+    run(a, &pack_nt(b), ctx)
+}
+
+/// Reference NN product: the unblocked i-k-j scalar loop (one f32
+/// accumulator per element, ascending k) the blocked path must match
+/// bit for bit.
+pub fn naive_nn(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols, b.rows, "matmul shape mismatch");
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let mut out = Matrix::zeros(m, n);
+    for i in 0..m {
+        let arow = a.row(i);
+        let orow = &mut out.data[i * n..(i + 1) * n];
+        for (kk, &av) in arow.iter().enumerate().take(k) {
+            let brow = &b.data[kk * n..(kk + 1) * n];
+            for j in 0..n {
+                orow[j] += av * brow[j];
+            }
+        }
+    }
+    out
+}
+
+/// Reference NT product: scalar k-ordered dots (single accumulator per
+/// element, matching the blocked accumulation order exactly).
+pub fn naive_nt(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols, b.cols, "matmul_nt shape mismatch");
+    let (m, k, n) = (a.rows, a.cols, b.rows);
+    let mut out = Matrix::zeros(m, n);
+    for i in 0..m {
+        let arow = a.row(i);
+        for j in 0..n {
+            let brow = b.row(j);
+            let mut acc = 0f32;
+            for kk in 0..k {
+                acc += arow[kk] * brow[kk];
+            }
+            out.data[i * n + j] = acc;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::WorkerPool;
+    use crate::prng::Xoshiro256;
+
+    fn bits_eq(a: &Matrix, b: &Matrix) -> bool {
+        a.bit_identical(b)
+    }
+
+    #[test]
+    fn blocked_nn_matches_naive_bit_for_bit_on_ragged_shapes() {
+        let mut rng = Xoshiro256::new(1);
+        for &(m, k, n) in &[(1, 1, 1), (3, 5, 7), (MR, KC, NR),
+                            (MR + 1, KC + 3, NR + 5), (65, 70, 33),
+                            (MC + 9, 2 * KC + 1, 2 * NR + 3)] {
+            let a = Matrix::randn(m, k, &mut rng);
+            let b = Matrix::randn(k, n, &mut rng);
+            let blocked = matmul_nn(&a, &b, &ExecCtx::sequential());
+            assert!(bits_eq(&blocked, &naive_nn(&a, &b)),
+                    "NN diverged at ({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn blocked_nt_matches_naive_bit_for_bit_on_ragged_shapes() {
+        let mut rng = Xoshiro256::new(2);
+        for &(m, k, n) in &[(1, 1, 1), (5, 3, 9), (17, 64, 129),
+                            (MC + 1, KC + 7, 2 * NR + 1)] {
+            let a = Matrix::randn(m, k, &mut rng);
+            let b = Matrix::randn(n, k, &mut rng);
+            let blocked = matmul_nt(&a, &b, &ExecCtx::sequential());
+            assert!(bits_eq(&blocked, &naive_nt(&a, &b)),
+                    "NT diverged at ({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn parallel_rows_never_change_the_bits() {
+        let mut rng = Xoshiro256::new(3);
+        let a = Matrix::randn(70, 33, &mut rng);
+        let b = Matrix::randn(33, 21, &mut rng);
+        let bt = Matrix::randn(21, 33, &mut rng);
+        let seq_nn = matmul_nn(&a, &b, &ExecCtx::sequential());
+        let seq_nt = matmul_nt(&a, &bt, &ExecCtx::sequential());
+        for workers in [2, 3, 8] {
+            let ctx = ExecCtx::with_par_rows(WorkerPool::new(workers), 1);
+            assert!(bits_eq(&matmul_nn(&a, &b, &ctx), &seq_nn),
+                    "NN workers={workers}");
+            assert!(bits_eq(&matmul_nt(&a, &bt, &ctx), &seq_nt),
+                    "NT workers={workers}");
+        }
+    }
+
+    #[test]
+    fn tile_mul_window_matches_full_product_columns() {
+        let mut rng = Xoshiro256::new(4);
+        let (m, k, n) = (11, 40, 48);
+        let a = Matrix::randn(m, k, &mut rng);
+        let b = Matrix::randn(n, k, &mut rng);
+        let full = matmul_nt(&a, &b, &ExecCtx::sequential());
+        let bp = pack_nt(&b);
+        let mut apack = Vec::new();
+        pack_a_tile(&a.data, k, 0, m, k, &mut apack);
+        // window [16, 16+24): NR-aligned start, ragged width
+        let (j0, cols) = (2 * NR, 3 * NR + 1);
+        let mut win = vec![f32::NAN; m * cols];
+        tile_mul(&apack, m, &bp, j0, cols, &mut win, cols);
+        for r in 0..m {
+            for c in 0..cols {
+                assert_eq!(win[r * cols + c].to_bits(),
+                           full.at(r, j0 + c).to_bits(),
+                           "({r},{c})");
+            }
+        }
+    }
+
+    #[test]
+    fn degenerate_shapes_are_zeros_not_panics() {
+        let a = Matrix::zeros(4, 0);
+        let b = Matrix::zeros(0, 6);
+        let out = matmul_nn(&a, &b, &ExecCtx::sequential());
+        assert_eq!((out.rows, out.cols), (4, 6));
+        assert!(out.data.iter().all(|&x| x == 0.0));
+        let bt = Matrix::zeros(6, 0);
+        let out = matmul_nt(&a, &bt, &ExecCtx::sequential());
+        assert!(out.data.iter().all(|&x| x == 0.0));
+        let empty = matmul_nn(&Matrix::zeros(0, 3), &Matrix::zeros(3, 2),
+                              &ExecCtx::sequential());
+        assert_eq!((empty.rows, empty.cols), (0, 2));
+    }
+
+    #[test]
+    fn known_small_product() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Matrix::from_vec(2, 2, vec![1.0, 1.0, 1.0, 1.0]);
+        let c = matmul_nn(&a, &b, &ExecCtx::sequential());
+        assert_eq!(c.data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+}

@@ -2,11 +2,13 @@
 //! benchmark harness.  Deliberately minimal: contiguous `Vec<f32>`, blocked
 //! matmul, row softmax, top-k, argsort — everything `attention/` needs.
 //! The [`batch`] submodule adds the (B, H, N, D) stacked layout the
-//! batched multi-head engine runs over.
+//! batched multi-head engine runs over; [`gemm`] is the cache-blocked,
+//! panel-packed compute core `matmul`/`matmul_nt` delegate to.
 
 use crate::prng::Xoshiro256;
 
 pub mod batch;
+pub mod gemm;
 
 pub use batch::{BatchMatrix, MatrixView};
 
@@ -62,44 +64,17 @@ impl Matrix {
         out
     }
 
-    /// `self (m×k) @ other (k×n)` — blocked over k for cache locality.
+    /// `self (m×k) @ other (k×n)` — the cache-blocked, panel-packed
+    /// [`gemm`] core (sequential here; kernels thread an `ExecCtx`
+    /// through [`gemm::matmul_nn`] for row-partitioned parallelism).
     pub fn matmul(&self, other: &Matrix) -> Matrix {
-        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
-        let (m, k, n) = (self.rows, self.cols, other.cols);
-        let mut out = Matrix::zeros(m, n);
-        // i-k-j loop order: streams `other` rows, accumulates into out row.
-        for i in 0..m {
-            let arow = self.row(i);
-            let orow = &mut out.data[i * n..(i + 1) * n];
-            for kk in 0..k {
-                let a = arow[kk];
-                if a == 0.0 {
-                    continue;
-                }
-                let brow = &other.data[kk * n..(kk + 1) * n];
-                for j in 0..n {
-                    orow[j] += a * brow[j];
-                }
-            }
-        }
-        out
+        gemm::matmul_nn(self, other, &crate::exec::ExecCtx::sequential())
     }
 
-    /// `self @ other^T` — the attention-logits shape, avoids materialising
-    /// the transpose (both operands stream row-major).
+    /// `self @ other^T` — the attention-logits shape, blocked via
+    /// [`gemm::matmul_nt`]; never materialises the transpose.
     pub fn matmul_nt(&self, other: &Matrix) -> Matrix {
-        assert_eq!(self.cols, other.cols, "matmul_nt shape mismatch");
-        let (m, k, n) = (self.rows, self.cols, other.rows);
-        let mut out = Matrix::zeros(m, n);
-        for i in 0..m {
-            let arow = self.row(i);
-            let orow = &mut out.data[i * n..(i + 1) * n];
-            for j in 0..n {
-                orow[j] = dot(arow, other.row(j));
-            }
-        }
-        let _ = k;
-        out
+        gemm::matmul_nt(self, other, &crate::exec::ExecCtx::sequential())
     }
 
     pub fn scale(&mut self, s: f32) {
@@ -122,6 +97,19 @@ impl Matrix {
             .zip(&other.data)
             .map(|(a, b)| (a - b).abs())
             .fold(0.0, f32::max)
+    }
+
+    /// Exact bitwise equality — the check behind the compute-core
+    /// determinism contract (the single-slice sibling of
+    /// [`BatchMatrix::bit_identical`]).
+    pub fn bit_identical(&self, other: &Matrix) -> bool {
+        self.rows == other.rows
+            && self.cols == other.cols
+            && self
+                .data
+                .iter()
+                .zip(&other.data)
+                .all(|(a, b)| a.to_bits() == b.to_bits())
     }
 }
 
@@ -178,6 +166,11 @@ pub fn softmax_inplace(xs: &mut [f32]) {
 /// Indices of the `k` largest values (descending), stable on ties.
 pub fn topk_indices(xs: &[f32], k: usize) -> Vec<usize> {
     let k = k.min(xs.len());
+    if k == 0 {
+        // select_nth on an empty index set would panic; `topk == 0` (or
+        // an empty input) legitimately selects nothing
+        return Vec::new();
+    }
     let mut idx: Vec<usize> = (0..xs.len()).collect();
     idx.select_nth_unstable_by(k.saturating_sub(1), |&a, &b| {
         xs[b].partial_cmp(&xs[a]).unwrap().then(a.cmp(&b))
@@ -240,6 +233,31 @@ mod tests {
         let xs = vec![0.5, 3.0, -1.0, 3.0, 2.0];
         assert_eq!(topk_indices(&xs, 3), vec![1, 3, 4]);
         assert_eq!(topk_indices(&xs, 10).len(), 5);
+    }
+
+    #[test]
+    fn topk_with_k_at_least_n_is_a_full_stable_sort() {
+        let xs = vec![1.0, 4.0, 4.0, -2.0, 0.0];
+        // k == n and k > n both return every index, descending, ties
+        // broken by position
+        assert_eq!(topk_indices(&xs, 5), vec![1, 2, 4, 0, 3]);
+        assert_eq!(topk_indices(&xs, 100), vec![1, 2, 4, 0, 3]);
+    }
+
+    #[test]
+    fn topk_zero_and_empty_inputs_select_nothing() {
+        assert_eq!(topk_indices(&[1.0, 2.0], 0), Vec::<usize>::new());
+        assert_eq!(topk_indices(&[], 0), Vec::<usize>::new());
+        assert_eq!(topk_indices(&[], 3), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn topk_tied_scores_keep_position_order() {
+        let xs = vec![7.0; 6];
+        assert_eq!(topk_indices(&xs, 4), vec![0, 1, 2, 3]);
+        // ties spanning the selection boundary stay stable too
+        let xs = vec![1.0, 5.0, 5.0, 5.0, 0.0];
+        assert_eq!(topk_indices(&xs, 2), vec![1, 2]);
     }
 
     #[test]
