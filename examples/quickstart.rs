@@ -62,12 +62,14 @@ fn main() -> Result<()> {
         &format!("attention variants, single head, N={n}, Dk={dk}"),
         &["variant", "time", "flops (model)", "max|Δ| vs full"],
     );
+    let ctx = clustered_transformers::exec::ExecCtx::sequential();
     for var in &variants {
+        let p = attention::AttnProblem::new(&q, &k, &v);
         let mut r = Xoshiro256::new(1);
-        let out = attention::run(var, &q, &k, &v, &mut r);
+        let out = attention::solve(var, &p, &mut r, &ctx);
         let mut r2 = Xoshiro256::new(1);
         let st = benchlib::quick(|| {
-            let _ = attention::run(var, &q, &k, &v, &mut r2);
+            let _ = attention::solve(var, &p, &mut r2, &ctx);
         });
         let cost = attention::cost_model(var, n, dk, dk);
         table.row(vec![

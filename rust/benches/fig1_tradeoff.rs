@@ -7,7 +7,7 @@
 //! EXPERIMENTS.md records the scaling caveat).  CT_FULL=1 expands to the
 //! full variant grid.
 
-use clustered_transformers::attention::{self, Variant};
+use clustered_transformers::attention::{self, AttnBatch, Variant};
 use clustered_transformers::benchlib::traincache::{
     env_usize, eval_score, forward_time, full_grid, train_or_load,
 };
@@ -29,7 +29,7 @@ fn native_frontier() {
     let k = BatchMatrix::randn(bsz, heads, n, dk, &mut rng);
     let v = BatchMatrix::randn(bsz, heads, n, dk, &mut rng);
     let exact = attention::kernel_for(&Variant::Full)
-        .run_batch(&q, &k, &v, 0, &ctx);
+        .solve_batch(&AttnBatch::new(&q, &k, &v, 0), &ctx);
     let rows = bsz * heads * n;
     let mut tbl = Table::new(
         &format!("fig1c: native batched engine frontier, B={bsz} \
@@ -48,9 +48,10 @@ fn native_frontier() {
     ];
     for var in &variants {
         let kernel = attention::kernel_for(var);
-        let out = kernel.run_batch(&q, &k, &v, 0, &ctx);
+        let batch = AttnBatch::new(&q, &k, &v, 0);
+        let out = kernel.solve_batch(&batch, &ctx);
         let st = benchlib::bench(
-            || { let _ = kernel.run_batch(&q, &k, &v, 0, &ctx); },
+            || { let _ = kernel.solve_batch(&batch, &ctx); },
             1, 2, std::time::Duration::from_millis(300), 8);
         tbl.row(vec![
             var.name(),

@@ -9,7 +9,8 @@
 //! rows/sec through the exec pool, and compiled single-layer HLO
 //! forwards cross-check the trend at N ∈ {256, 512, 1024}.
 
-use clustered_transformers::attention::{self, Variant};
+use clustered_transformers::attention::{self, AttnBatch, AttnProblem,
+                                        Variant};
 use clustered_transformers::benchlib::{self, BenchRecord, Table};
 use clustered_transformers::config::{find_repo_root, init_logging};
 use clustered_transformers::exec::{ExecCtx, WorkerPool};
@@ -63,8 +64,12 @@ fn main() {
                 f64::NAN
             } else {
                 let mut r = Xoshiro256::new(1);
+                let seq = ExecCtx::sequential();
                 let st = benchlib::bench(
-                    || { let _ = attention::run(&var, &q, &k, &v, &mut r); },
+                    || {
+                        let p = AttnProblem::new(&q, &k, &v);
+                        let _ = attention::solve(&var, &p, &mut r, &seq);
+                    },
                     1, 2, std::time::Duration::from_millis(300), 10);
                 st.mean_us() / n as f64
             };
@@ -100,17 +105,18 @@ fn main() {
     let rows = bsz * heads * n_b;
     for var in variants() {
         let kernel = attention::kernel_for(&var);
+        let batch = AttnBatch::new(&bq, &bk, &bv, 0);
         let st_seq = benchlib::bench(
-            || { let _ = kernel.run_batch(&bq, &bk, &bv, 0, &seq); },
+            || { let _ = kernel.solve_batch(&batch, &seq); },
             1, 2, std::time::Duration::from_millis(300), 8);
         let st_par = benchlib::bench(
-            || { let _ = kernel.run_batch(&bq, &bk, &bv, 0, &pool); },
+            || { let _ = kernel.solve_batch(&batch, &pool); },
             1, 2, std::time::Duration::from_millis(300), 8);
         // determinism contract: pool schedule must not change the bits
         let identical = kernel
-            .run_batch(&bq, &bk, &bv, 0, &pool)
-            .bit_identical(&attention::run_batch_seq(
-                kernel.as_ref(), &bq, &bk, &bv, 0));
+            .solve_batch(&batch, &pool)
+            .bit_identical(&attention::solve_batch_seq(kernel.as_ref(),
+                                                       &batch));
         batch_tbl.row(vec![
             var.name(),
             format!("{:.1}", st_seq.mean_ms()),

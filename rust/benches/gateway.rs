@@ -1,24 +1,28 @@
-//! Gateway bench: replay a mixed-length synthetic trace through the
-//! multi-bucket native serving gateway and report per-bucket serving
-//! metrics — p50/p99 latency, rows/sec, batch occupancy, padding-waste
-//! ratio — plus the determinism check (a live gateway co-batch is
-//! bit-identical to the sequential per-slice loop over the same padded
-//! batch).
+//! Gateway bench: replay a mixed-length (ragged) synthetic trace through
+//! the multi-bucket native serving gateway and report per-bucket serving
+//! metrics — p50/p99 latency, rows/sec, batch occupancy, memory-padding
+//! and masked-compute waste — plus the masking contract check (a live
+//! gateway co-batch response is bit-identical to the *unpadded*
+//! computation of each request).
+//!
+//! Each kernel's trace is replayed twice: once with valid-length masking
+//! on (the default — padded rows never computed) and once with it off
+//! (static-shape semantics), so the table and `BENCH_gateway.json` carry
+//! a masked-vs-unmasked rows/sec comparison per bucket.
 //!
 //! This is the serving-side companion of fig. 4: where fig. 4 sweeps raw
 //! kernel throughput, this sweeps the *traffic shape* — log₂-uniform
 //! request lengths against power-of-two buckets, the regime where
 //! clustered attention's linear complexity pays at the tail buckets.
-//! `CT_FULL=1` enlarges the trace.
+//! `CT_FULL=1` enlarges the trace; `CT_SMOKE=1` shrinks it for CI.
 
 use std::time::{Duration, Instant};
 
-use clustered_transformers::attention::{kernel_by_name, run_batch_seq};
 use clustered_transformers::benchlib::{self, BenchRecord, Table};
 use clustered_transformers::config::init_logging;
 use clustered_transformers::coordinator::{
-    bucket_report, pad_batch, replay_blocking, synthetic_trace,
-    valid_rows, Bucket, GatewayOptions, GatewayShape, ServingGateway,
+    bucket_report, replay_blocking, synthetic_trace, unpadded_reference,
+    Bucket, GatewayOptions, GatewayShape, ServingGateway,
     BUCKET_REPORT_HEADERS,
 };
 use clustered_transformers::prng::Xoshiro256;
@@ -26,7 +30,11 @@ use clustered_transformers::prng::Xoshiro256;
 const SHAPE: GatewayShape = GatewayShape { heads: 4, dk: 32, dv: 32 };
 const BUCKETS: [(usize, usize); 3] = [(64, 8), (128, 8), (256, 4)];
 
-fn gateway(kernel: &str, seed: u64) -> ServingGateway {
+fn smoke() -> bool {
+    std::env::var("CT_SMOKE").map(|v| v == "1").unwrap_or(false)
+}
+
+fn gateway(kernel: &str, seed: u64, mask: bool) -> ServingGateway {
     ServingGateway::start(
         SHAPE,
         BUCKETS
@@ -37,17 +45,19 @@ fn gateway(kernel: &str, seed: u64) -> ServingGateway {
             max_wait: Duration::from_millis(2),
             queue_capacity: 64,
             seed,
+            mask,
             ..GatewayOptions::default()
         },
     )
     .expect("gateway start")
 }
 
-/// Live-path determinism: one full co-batch of staggered lengths through
-/// a single-bucket gateway must be bit-identical to `run_batch_seq` over
-/// the identically padded batch.
-fn cobatch_bit_identical(kernel: &str, n: usize, b: usize, seed: u64)
-                         -> bool {
+/// Live-path masking contract: one full co-batch of staggered ragged
+/// lengths through a single-bucket gateway must be bit-identical to the
+/// *unpadded* computation of every request (per-slice seed schedule, no
+/// padded tensor anywhere in the reference).
+fn cobatch_matches_unpadded(kernel: &str, n: usize, b: usize, seed: u64)
+                            -> bool {
     let mut rng = Xoshiro256::new(seed);
     let reqs: Vec<(Vec<f32>, Vec<f32>, Vec<f32>, usize)> = (0..b)
         .map(|i| {
@@ -81,69 +91,102 @@ fn cobatch_bit_identical(kernel: &str, n: usize, b: usize, seed: u64)
         .map(|rx| rx.recv_timeout(Duration::from_secs(60)).expect("reply"))
         .collect();
 
-    let blocks = |f: fn(&(Vec<f32>, Vec<f32>, Vec<f32>, usize))
-                        -> (&[f32], usize)| {
-        reqs.iter().map(f).collect::<Vec<_>>()
-    };
-    let q = pad_batch(&blocks(|r| (&r.0, r.3)), SHAPE.heads, n, SHAPE.dk);
-    let k = pad_batch(&blocks(|r| (&r.1, r.3)), SHAPE.heads, n, SHAPE.dk);
-    let v = pad_batch(&blocks(|r| (&r.2, r.3)), SHAPE.heads, n, SHAPE.dv);
-    let want = run_batch_seq(kernel_by_name(kernel).unwrap().as_ref(), &q,
-                             &k, &v, seed);
+    let resolved =
+        clustered_transformers::attention::kernel_by_name(kernel).unwrap();
     let ok = responses.iter().enumerate().all(|(slot, resp)| {
-        if resp.batch_occupancy != b {
+        if resp.batch_occupancy != b || !resp.masked {
             return false;
         }
-        let want_rows = valid_rows(&want, slot, reqs[slot].3);
-        resp.out.len() == want_rows.len()
-            && resp.out.iter().zip(&want_rows)
+        let (q, k, v, len) = &reqs[slot];
+        let want = unpadded_reference(resolved.as_ref(), SHAPE, seed, slot,
+                                      q, k, v, *len);
+        resp.out.len() == want.len()
+            && resp.out.iter().zip(&want)
                 .all(|(a, b)| a.to_bits() == b.to_bits())
     });
     gw.shutdown();
     ok
 }
 
+/// Replay `trace` through a fresh gateway; returns the gateway (for its
+/// per-bucket metrics), the wall seconds, and the total valid rows.
+fn run_replay(kernel: &str, seed: u64, mask: bool,
+              trace: Vec<clustered_transformers::coordinator::TraceItem>,
+              clients: usize) -> (ServingGateway, f64, usize) {
+    let gw = gateway(kernel, seed, mask);
+    let t0 = Instant::now();
+    let responses = replay_blocking(&gw, trace, clients);
+    let wall = t0.elapsed().as_secs_f64();
+    let total_rows: usize = responses.iter().map(|r| r.len).sum();
+    (gw, wall, total_rows)
+}
+
 fn main() {
     init_logging(false);
-    let count = if benchlib::traincache::full_grid() { 512 } else { 96 };
+    let count = if smoke() {
+        24
+    } else if benchlib::traincache::full_grid() {
+        512
+    } else {
+        96
+    };
     let clients = 8;
     let seed = 0u64;
     let max_n = BUCKETS.iter().map(|&(n, _)| n).max().unwrap();
     let mut records = Vec::new();
 
     for kernel in ["full", "i-clustered-32"] {
-        let gw = gateway(kernel, seed);
         let trace = synthetic_trace(SHAPE, 8, max_n, count, seed);
-        let t0 = Instant::now();
-        let responses = replay_blocking(&gw, trace, clients);
-        let wall = t0.elapsed().as_secs_f64();
+        // masked replay (the serving default) and the static-shape
+        // comparison replay over the identical trace
+        let (gw, wall, total_rows) =
+            run_replay(kernel, seed, true, trace.clone(), clients);
+        let (gw_un, wall_un, _) =
+            run_replay(kernel, seed, false, trace, clients);
 
         let mut headers: Vec<&str> = BUCKET_REPORT_HEADERS.to_vec();
-        headers.push("bit-identical");
+        headers.push("rows/s unmasked");
+        headers.push("≡ unpadded");
         let mut table = Table::new(
             &format!(
-                "gateway[{kernel}]: {count} mixed-length requests \
+                "gateway[{kernel}]: {count} ragged requests \
                  (lens 8..{max_n}, log2-uniform), {clients} clients, \
-                 {:.2}s wall, H={} Dk={}",
-                wall, SHAPE.heads, SHAPE.dk),
+                 {:.2}s wall masked / {:.2}s unmasked, H={} Dk={}",
+                wall, wall_un, SHAPE.heads, SHAPE.dk),
             &headers,
         );
-        for (row, &(n, b)) in
-            bucket_report(&gw, wall).into_iter().zip(BUCKETS.iter())
+        let unmasked_rows_per_sec: Vec<f64> = gw_un
+            .bucket_metrics()
+            .iter()
+            .map(|m| {
+                use std::sync::atomic::Ordering;
+                m.valid_rows.load(Ordering::Relaxed) as f64
+                    / wall_un.max(1e-9)
+            })
+            .collect();
+        for ((row, &(n, b)), unmasked_rps) in bucket_report(&gw, wall)
+            .into_iter()
+            .zip(BUCKETS.iter())
+            .zip(&unmasked_rows_per_sec)
         {
             let mut row = row;
-            row.push(cobatch_bit_identical(kernel, n, b, seed + n as u64)
+            row.push(format!("{unmasked_rps:.0}"));
+            row.push(cobatch_matches_unpadded(kernel, n, b,
+                                              seed + n as u64)
                 .to_string());
             table.row(row);
         }
         table.emit();
-        let total_rows: usize = responses.iter().map(|r| r.len).sum();
-        println!("  total: {} requests, {:.0} valid rows/s end-to-end",
-                 responses.len(),
+        println!("  total: {count} requests, {:.0} valid rows/s \
+                  end-to-end (masked)",
                  total_rows as f64 / wall.max(1e-9));
-        // machine-readable trajectory: one record per (kernel, bucket)
-        for (&(n, _), m) in
-            BUCKETS.iter().zip(gw.bucket_metrics())
+        // machine-readable trajectory: one record per (kernel, bucket),
+        // masked rows/sec as the headline with the unmasked comparison
+        // column riding along
+        for ((&(n, _), m), unmasked_rps) in BUCKETS
+            .iter()
+            .zip(gw.bucket_metrics())
+            .zip(&unmasked_rows_per_sec)
         {
             use std::sync::atomic::Ordering;
             let rows = m.valid_rows.load(Ordering::Relaxed);
@@ -156,15 +199,21 @@ fn main() {
                 iters: m.completed.load(Ordering::Relaxed) as usize,
                 extra: vec![
                     ("occupancy".into(), m.occupancy()),
-                    ("padding_waste".into(), m.padding_waste()),
+                    ("mem_padding_waste".into(), m.padding_waste()),
+                    ("compute_waste".into(), m.compute_waste()),
+                    ("compute_saved".into(), m.compute_saved()),
+                    ("rows_per_sec_unmasked".into(), *unmasked_rps),
                 ],
             });
         }
         gw.shutdown();
+        gw_un.shutdown();
     }
     let _ = benchlib::write_bench_json("gateway", &records);
     println!("\nexpected: tail buckets (N=256) dominate latency; \
-              i-clustered keeps p99 flat where full grows with N²; \
-              waste tracks the log2-uniform mix (~30-40%); bit-identical \
-              must read true everywhere (determinism contract).");
+              i-clustered keeps p99 flat where full grows with N²; mem \
+              waste tracks the log2-uniform mix (~30-40%) while compute \
+              waste reads 0 (masking skips padded rows — the unmasked \
+              column shows what that buys); ≡ unpadded must read true \
+              everywhere (masking contract).");
 }

@@ -1,0 +1,129 @@
+//! The attention backend seam: anything that can execute an
+//! [`AttnBatch`] descriptor.
+//!
+//! Two execution stacks serve attention today and both consume the same
+//! request information — a ragged (B, H, N, D) batch plus per-sequence
+//! valid lengths:
+//!
+//! - **native** ([`NativeBackend`]): a registry [`AttentionKernel`]
+//!   solving descriptors over the exec pool (the `ServingGateway`
+//!   path).  Valid-length masking happens in `solve_batch`, so padded
+//!   rows are never computed.
+//! - **compiled HLO** (`coordinator::InferenceEngine`): forward
+//!   programs that take the lengths as their `xlen` input and mask
+//!   inside the graph.  A raw-attention HLO executable wrapped in this
+//!   trait is the drop-in second implementation once such a program is
+//!   lowered.
+//!
+//! [`AttentionBackend`] is deliberately tiny — one execute method over
+//! the descriptor — because the descriptor is where options grow.  It
+//! is the landing zone for cross-request KV caching (a cache handle on
+//! the descriptor, a caching backend wrapping a native one) and for
+//! sharding across hosts (a fan-out backend splitting the batch axis):
+//! neither needs to touch a kernel signature.
+
+use crate::exec::ExecCtx;
+use crate::tensor::batch::BatchMatrix;
+
+use super::problem::AttnBatch;
+use super::{kernel_by_name, AttentionKernel};
+
+/// One attention execution engine, addressed by descriptor.
+///
+/// Implementations must uphold the engine contracts: output slice `s`
+/// is a pure function of `(inputs[s], seed, s)` (so results are
+/// independent of `ctx` worker placement), and masked sequences obey
+/// the valid-length contract (`AttnProblem` docs) — rows `lens[b]..`
+/// of every output slice are zero and the valid rows match the
+/// unpadded computation.
+pub trait AttentionBackend: Send + Sync {
+    /// Identity for logs and reports, e.g. `"native:i-clustered-8"`.
+    fn backend_name(&self) -> String;
+
+    /// Execute one (possibly ragged) batch descriptor.
+    fn execute(&self, batch: &AttnBatch<'_>, ctx: &ExecCtx) -> BatchMatrix;
+}
+
+/// The native execution engine: a registry kernel solving descriptors
+/// on the caller's [`ExecCtx`].
+///
+/// ```
+/// use clustered_transformers::attention::{AttnBatch, AttentionBackend,
+///                                         NativeBackend};
+/// use clustered_transformers::exec::ExecCtx;
+/// use clustered_transformers::prng::Xoshiro256;
+/// use clustered_transformers::tensor::batch::BatchMatrix;
+///
+/// let backend = NativeBackend::by_name("full").unwrap();
+/// assert_eq!(backend.backend_name(), "native:full");
+/// let mut rng = Xoshiro256::new(0);
+/// let q = BatchMatrix::randn(1, 2, 8, 4, &mut rng);
+/// let k = BatchMatrix::randn(1, 2, 8, 4, &mut rng);
+/// let v = BatchMatrix::randn(1, 2, 8, 4, &mut rng);
+/// let lens = [5usize]; // rows 5.. of the one sequence are padding
+/// let out = backend.execute(
+///     &AttnBatch::new(&q, &k, &v, 0).with_lens(&lens),
+///     &ExecCtx::sequential());
+/// assert_eq!((out.batch, out.heads, out.rows, out.cols), (1, 2, 8, 4));
+/// ```
+pub struct NativeBackend {
+    kernel: Box<dyn AttentionKernel>,
+}
+
+impl NativeBackend {
+    pub fn new(kernel: Box<dyn AttentionKernel>) -> Self {
+        Self { kernel }
+    }
+
+    /// Resolve a kernel by registry name (`None` for unknown names —
+    /// the same validation surface `kernel_by_name` gives).
+    pub fn by_name(name: &str) -> Option<Self> {
+        kernel_by_name(name).map(Self::new)
+    }
+
+    pub fn kernel(&self) -> &dyn AttentionKernel {
+        self.kernel.as_ref()
+    }
+}
+
+impl AttentionBackend for NativeBackend {
+    fn backend_name(&self) -> String {
+        format!("native:{}", self.kernel.name())
+    }
+
+    fn execute(&self, batch: &AttnBatch<'_>, ctx: &ExecCtx) -> BatchMatrix {
+        self.kernel.solve_batch(batch, ctx)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::solve_batch_seq;
+    use crate::exec::WorkerPool;
+    use crate::prng::Xoshiro256;
+
+    #[test]
+    fn native_backend_resolves_names_like_the_registry() {
+        assert!(NativeBackend::by_name("i-clustered-4").is_some());
+        assert!(NativeBackend::by_name("no-such-kernel").is_none());
+        let b = NativeBackend::by_name("clustered-4").unwrap();
+        assert_eq!(b.backend_name(), "native:clustered-4");
+        assert_eq!(b.kernel().name(), "clustered-4");
+    }
+
+    #[test]
+    fn native_backend_execute_is_solve_batch_bit_for_bit() {
+        let mut rng = Xoshiro256::new(3);
+        let q = BatchMatrix::randn(2, 2, 16, 8, &mut rng);
+        let k = BatchMatrix::randn(2, 2, 16, 8, &mut rng);
+        let v = BatchMatrix::randn(2, 2, 16, 8, &mut rng);
+        let lens = [9usize, 16];
+        let backend = NativeBackend::by_name("i-clustered-4").unwrap();
+        let batch = AttnBatch::new(&q, &k, &v, 11).with_lens(&lens);
+        let got = backend.execute(
+            &batch, &ExecCtx::with_par_rows(WorkerPool::new(3), 1));
+        let want = solve_batch_seq(backend.kernel(), &batch);
+        assert!(got.bit_identical(&want));
+    }
+}

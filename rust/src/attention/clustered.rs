@@ -14,7 +14,7 @@ use crate::prng::Xoshiro256;
 use crate::tensor::{axpy, gemm, softmax_inplace, Matrix};
 
 use super::full::streaming_softmax_attention;
-use super::{AttentionKernel, Cost};
+use super::{AttentionKernel, AttnProblem, Cost};
 
 /// Eq. (3): centroids of the member queries.
 pub fn centroids(q: &Matrix, cl: &Clustering) -> Matrix {
@@ -97,11 +97,18 @@ impl AttentionKernel for ClusteredAttention {
         format!("clustered-{}", self.clusters)
     }
 
-    fn run(&self, q: &Matrix, k: &Matrix, v: &Matrix,
-           rng: &mut Xoshiro256, ctx: &ExecCtx) -> Matrix {
+    /// Masking = solving the valid-prefix sub-problem: LSH hashes and
+    /// K-Means assigns only the valid queries (padded rows never vote
+    /// or form centroids), the centroid pass sweeps only valid keys,
+    /// and the RNG draws (the projection directions) depend only on
+    /// the head dim — so the masked run is bit-identical to the
+    /// unpadded run.
+    fn solve(&self, p: &AttnProblem<'_>, rng: &mut Xoshiro256,
+             ctx: &ExecCtx) -> Matrix {
+        let (q, k, v) = p.valid_qkv();
         let cl = clustering::cluster_queries_ctx(
-            q, self.clusters, self.bits, self.iters, rng, ctx);
-        clustered_attention_ctx(q, k, v, &cl, ctx)
+            &q, self.clusters, self.bits, self.iters, rng, ctx);
+        p.restore_rows(clustered_attention_ctx(&q, &k, &v, &cl, ctx))
     }
 
     fn cost(&self, n: usize, dk: usize, dv: usize) -> Cost {

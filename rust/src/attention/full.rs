@@ -22,7 +22,7 @@ use crate::exec::{par_rows, ExecCtx};
 use crate::prng::Xoshiro256;
 use crate::tensor::{axpy, gemm, Matrix};
 
-use super::{AttentionKernel, Cost};
+use super::{AttentionKernel, AttnProblem, Cost};
 
 /// Keys per streaming block (multiple of `gemm::NR`).
 pub const KEY_BLOCK: usize = 128;
@@ -159,9 +159,14 @@ impl AttentionKernel for FullAttention {
         "full".into()
     }
 
-    fn run(&self, q: &Matrix, k: &Matrix, v: &Matrix,
-           _rng: &mut Xoshiro256, ctx: &ExecCtx) -> Matrix {
-        full_attention_ctx(q, k, v, ctx)
+    /// Masking = solving the valid-prefix sub-problem: the streaming
+    /// sweep touches only valid key blocks and only valid query rows
+    /// are partitioned, so the masked run is bit-identical to the
+    /// unpadded run and the padded output rows come back zero.
+    fn solve(&self, p: &AttnProblem<'_>, _rng: &mut Xoshiro256,
+             ctx: &ExecCtx) -> Matrix {
+        let (q, k, v) = p.valid_qkv();
+        p.restore_rows(full_attention_ctx(&q, &k, &v, ctx))
     }
 
     fn cost(&self, n: usize, dk: usize, dv: usize) -> Cost {
@@ -186,9 +191,13 @@ impl AttentionKernel for SharedFullAttention {
         "shared-full".into()
     }
 
-    fn run(&self, q: &Matrix, _k: &Matrix, v: &Matrix,
-           _rng: &mut Xoshiro256, ctx: &ExecCtx) -> Matrix {
-        full_attention_ctx(q, q, v, ctx)
+    /// Shared-QK tying composed with the same valid-prefix masking as
+    /// [`FullAttention`] (the `k` input is ignored, keys are the valid
+    /// queries).
+    fn solve(&self, p: &AttnProblem<'_>, _rng: &mut Xoshiro256,
+             ctx: &ExecCtx) -> Matrix {
+        let (q, _, v) = p.valid_qkv();
+        p.restore_rows(full_attention_ctx(&q, &q, &v, ctx))
     }
 
     fn cost(&self, n: usize, dk: usize, dv: usize) -> Cost {

@@ -20,7 +20,7 @@ use crate::prng::Xoshiro256;
 use crate::tensor::{axpy, dot, gemm, softmax_inplace, topk_indices, Matrix};
 
 use super::clustered::clustered_attention_matrix_ctx;
-use super::{AttentionKernel, Cost};
+use super::{AttentionKernel, AttnProblem, Cost};
 
 pub fn improved_clustered_attention(q: &Matrix, k: &Matrix, v: &Matrix,
                                     cl: &Clustering, topk: usize) -> Matrix {
@@ -118,11 +118,18 @@ impl AttentionKernel for ImprovedClusteredAttention {
         format!("i-clustered-{}", self.clusters)
     }
 
-    fn run(&self, q: &Matrix, k: &Matrix, v: &Matrix,
-           rng: &mut Xoshiro256, ctx: &ExecCtx) -> Matrix {
+    /// Masking = solving the valid-prefix sub-problem: clustering sees
+    /// only valid queries, `A^c` has only valid key columns, so the
+    /// per-cluster top-k can never select a padded key and the masked
+    /// run is bit-identical to the unpadded run.
+    fn solve(&self, p: &AttnProblem<'_>, rng: &mut Xoshiro256,
+             ctx: &ExecCtx) -> Matrix {
+        let (q, k, v) = p.valid_qkv();
         let cl = crate::clustering::cluster_queries_ctx(
-            q, self.clusters, self.bits, self.iters, rng, ctx);
-        improved_clustered_attention_ctx(q, k, v, &cl, self.topk, ctx)
+            &q, self.clusters, self.bits, self.iters, rng, ctx);
+        p.restore_rows(
+            improved_clustered_attention_ctx(&q, &k, &v, &cl, self.topk,
+                                             ctx))
     }
 
     fn cost(&self, n: usize, dk: usize, dv: usize) -> Cost {

@@ -1,12 +1,20 @@
 //! Reformer-style LSH attention baseline: shared-QK, angular LSH
 //! bucketing, chunked local attention, rounds combined with logsumexp
 //! weights.
+//!
+//! Positions are processed in `chunk`-sized blocks of the bucket-sorted
+//! order; the final block may be **ragged** (`N % chunk != 0` is fine:
+//! there are `ceil(N / chunk)` blocks and the last is simply smaller),
+//! which is what lets valid-length masking hand this kernel arbitrary
+//! unpadded lengths.  For chunk-divisible `N` the blocking — and
+//! therefore every output bit — is identical to the historical
+//! divisible-only path.
 
 use crate::exec::ExecCtx;
 use crate::prng::Xoshiro256;
 use crate::tensor::{axpy, dot, Matrix};
 
-use super::{AttentionKernel, Cost};
+use super::{AttentionKernel, AttnProblem, Cost};
 
 /// Shared-QK chunked LSH attention; rounds combined with logsumexp weights.
 pub fn reformer_attention(x: &Matrix, v: &Matrix, rounds: usize,
@@ -23,7 +31,10 @@ pub fn reformer_attention_ctx(x: &Matrix, v: &Matrix, rounds: usize,
                               chunk: usize, rng: &mut Xoshiro256,
                               ctx: &ExecCtx) -> Matrix {
     let n = x.rows;
-    assert_eq!(n % chunk, 0, "N must be divisible by chunk");
+    assert!(chunk >= 1, "chunk must be >= 1");
+    if n == 0 {
+        return Matrix::zeros(0, v.cols);
+    }
     let n_buckets = 16usize;
     let scale = 1.0 / (x.cols as f32).sqrt();
 
@@ -55,16 +66,20 @@ pub fn reformer_attention_ctx(x: &Matrix, v: &Matrix, rounds: usize,
 
         let mut out = Matrix::zeros(n, v.cols);
         let mut lse = vec![f32::NEG_INFINITY; n];
-        let n_chunks = n / chunk;
+        // chunk boundaries: full blocks plus a ragged final block
+        let n_chunks = n.div_ceil(chunk);
+        let bounds = |c: usize| (c * chunk, ((c + 1) * chunk).min(n));
         for cidx in 0..n_chunks {
             let prev = (cidx + n_chunks - 1) % n_chunks;
+            let (p0, p1) = bounds(prev);
+            let (c0, c1) = bounds(cidx);
             // candidate keys: previous chunk ++ own chunk
-            let cand: Vec<usize> = order[prev * chunk..(prev + 1) * chunk]
+            let cand: Vec<usize> = order[p0..p1]
                 .iter()
-                .chain(&order[cidx * chunk..(cidx + 1) * chunk])
+                .chain(&order[c0..c1])
                 .copied()
                 .collect();
-            for &qi in &order[cidx * chunk..(cidx + 1) * chunk] {
+            for &qi in &order[c0..c1] {
                 let mut logits = Vec::with_capacity(cand.len());
                 for &kj in &cand {
                     let l = if buckets[kj] != buckets[qi] {
@@ -126,9 +141,16 @@ impl AttentionKernel for LshAttention {
         format!("lsh-{}", self.rounds)
     }
 
-    fn run(&self, q: &Matrix, _k: &Matrix, v: &Matrix,
-           rng: &mut Xoshiro256, ctx: &ExecCtx) -> Matrix {
-        reformer_attention_ctx(q, v, self.rounds, self.chunk, rng, ctx)
+    /// Masking = solving the valid-prefix sub-problem: bucketing,
+    /// sorting and chunking see only the valid positions (the ragged
+    /// final chunk absorbs any length), and the per-round rotation
+    /// draws depend only on the head dim — so the masked run is
+    /// bit-identical to the unpadded run.
+    fn solve(&self, p: &AttnProblem<'_>, rng: &mut Xoshiro256,
+             ctx: &ExecCtx) -> Matrix {
+        let (q, _, v) = p.valid_qkv();
+        p.restore_rows(reformer_attention_ctx(&q, &v, self.rounds,
+                                              self.chunk, rng, ctx))
     }
 
     fn cost(&self, n: usize, dk: usize, dv: usize) -> Cost {
@@ -139,5 +161,44 @@ impl AttentionKernel for LshAttention {
                 + r * n64 * dk64 * 8,
             bytes: 4 * r * n64 * 2 * c,
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ragged_final_chunk_is_well_defined() {
+        // N = 2·chunk + tail: there are ceil(N/chunk) blocks, the last
+        // one smaller — output stays finite and correctly shaped
+        let mut rng = Xoshiro256::new(1);
+        let x = Matrix::randn(41, 8, &mut rng);
+        let v = Matrix::randn(41, 8, &mut rng);
+        let out = reformer_attention(&x, &v, 2, 16, &mut rng);
+        assert_eq!((out.rows, out.cols), (41, 8));
+        assert!(out.data.iter().all(|f| f.is_finite()));
+        // shorter than one chunk: a single ragged block, still defined
+        let out = reformer_attention(&x.row_prefix(5), &v.row_prefix(5),
+                                     1, 16, &mut rng);
+        assert_eq!((out.rows, out.cols), (5, 8));
+        assert!(out.data.iter().all(|f| f.is_finite()));
+        // empty input short-circuits instead of dividing by zero
+        let empty = reformer_attention(&Matrix::zeros(0, 8),
+                                       &Matrix::zeros(0, 8), 1, 16,
+                                       &mut rng);
+        assert_eq!((empty.rows, empty.cols), (0, 8));
+    }
+
+    #[test]
+    fn identical_inputs_and_rng_streams_are_deterministic() {
+        let mut rng = Xoshiro256::new(3);
+        let x = Matrix::randn(32, 8, &mut rng);
+        let v = Matrix::randn(32, 8, &mut rng);
+        let mut r1 = Xoshiro256::new(7);
+        let mut r2 = Xoshiro256::new(7);
+        let a = reformer_attention(&x, &v, 2, 16, &mut r1);
+        let b = reformer_attention(&x, &v, 2, 16, &mut r2);
+        assert!(a.bit_identical(&b));
     }
 }

@@ -1,11 +1,20 @@
 //! Pure-Rust reference attention — all paper variants behind one
-//! trait-based, batched, multi-head engine.
+//! trait-based, batched, multi-head engine addressed by request
+//! descriptors.
 //!
 //! Layout:
 //!  - one file per kernel family ([`full`], [`clustered`], [`improved`],
 //!    [`oracle`], [`lsh`]), each exporting its free functions (the
 //!    historical API, still the substrate of the golden tests) plus an
 //!    [`AttentionKernel`] implementation;
+//!  - [`problem`] owns the request descriptors ([`AttnProblem`] /
+//!    [`AttnBatch`]) every entry point takes — Q/K/V views plus the
+//!    per-request options (today the valid-length mask; tomorrow
+//!    KV-cache handles, backend hints) — so options travel through one
+//!    struct instead of ever-growing argument lists;
+//!  - [`backend`] owns the [`AttentionBackend`] execution seam (the
+//!    native engine today; compiled-HLO, KV-cached and sharded backends
+//!    plug in behind the same descriptor);
 //!  - this module owns the trait, the name-keyed [`REGISTRY`], the
 //!    [`Variant`] config enum, and the batched entry points.
 //!
@@ -19,23 +28,33 @@
 //!     of fig. 4 and the §Perf roofline estimates.
 //!
 //! **Batched determinism contract:** slice `s = b·H + h` of a
-//! [`run_batch`] call draws randomness only from
+//! [`AttentionKernel::solve_batch`] call draws randomness only from
 //! `prng::slice_stream(seed, s)`, so parallel execution over the exec
 //! pool is bit-identical to the sequential per-slice loop
-//! ([`run_batch_seq`]) — verified by `proptest/attention_props.rs`.
+//! ([`solve_batch_seq`]) — verified by `proptest/attention_props.rs`.
 //! Since the tiled-compute-core rewrite the contract extends *inside*
 //! a slice: every kernel threads an [`ExecCtx`] through its GEMMs,
 //! streaming softmax, clustering and top-k passes, all of which
 //! partition **output rows** and never split a reduction, so
-//! intra-slice parallelism is bit-invisible too (see
-//! `docs/PERF.md`).
+//! intra-slice parallelism is bit-invisible too (see `docs/PERF.md`).
+//!
+//! **Masking contract:** a problem with `valid_len = l` (or a batch
+//! with per-sequence `lens`) solves exactly the unpadded `l`-row
+//! problem — bit for bit — and zeroes the padded output rows.  The
+//! mechanism is the valid-prefix view (padding always trails the valid
+//! rows), so streaming softmax sweeps only valid key blocks, clustering
+//! hashes and assigns only valid queries, and top-k can never select a
+//! padded key.  See [`problem`] and `proptest/attention_props.rs`.
 
+pub mod backend;
 pub mod clustered;
 pub mod full;
 pub mod improved;
 pub mod lsh;
 pub mod oracle;
+pub mod problem;
 
+pub use backend::{AttentionBackend, NativeBackend};
 pub use clustered::{centroids, clustered_attention,
                     clustered_attention_matrix, ClusteredAttention};
 pub use full::{full_attention, full_attention_materialized,
@@ -46,6 +65,7 @@ pub use improved::{improved_clustered_attention,
                    ImprovedClusteredAttention};
 pub use lsh::{reformer_attention, LshAttention};
 pub use oracle::{oracle_top_attention, OracleTopAttention};
+pub use problem::{AttnBatch, AttnProblem};
 
 use crate::exec::ExecCtx;
 use crate::prng::{slice_stream, Xoshiro256};
@@ -102,36 +122,53 @@ pub struct Cost {
     pub bytes: u64,
 }
 
-/// One attention algorithm, usable single-slice or batched multi-head.
+/// One attention algorithm, usable single-slice or batched multi-head,
+/// addressed by request descriptor.
 ///
-/// `run` computes one (sequence, head) slice, parallelizing *within*
-/// the slice through the [`ExecCtx`] (blocked GEMM stripes, streaming
-/// softmax rows, clustering assignment — always partitioned over output
-/// rows, never across a reduction, so any worker count produces the
-/// same bits).  `run_batch` maps it over every slice of a (B, H, N, D)
-/// workload, splitting the ctx budget between the slice axis and the
-/// intra-slice ops (see [`ExecCtx::split_batch`]).
+/// [`solve`] computes one (sequence, head) slice described by an
+/// [`AttnProblem`], parallelizing *within* the slice through the
+/// [`ExecCtx`] (blocked GEMM stripes, streaming softmax rows, clustering
+/// assignment — always partitioned over output rows, never across a
+/// reduction, so any worker count produces the same bits).  A problem
+/// with `valid_len` set obeys the masking contract: the valid rows are
+/// bit-identical to solving the unpadded problem, the padded rows come
+/// back zero.  [`solve_batch`] maps it over every slice of a
+/// (B, H, N, D) workload, resolving per-sequence `lens` to valid-prefix
+/// sub-problems and splitting the ctx budget between the slice axis and
+/// the intra-slice ops (see [`ExecCtx::split_batch`]).
+///
+/// [`solve`]: AttentionKernel::solve
+/// [`solve_batch`]: AttentionKernel::solve_batch
 pub trait AttentionKernel: Send + Sync {
     /// Paper-notation name, e.g. `"i-clustered-100"`.
     fn name(&self) -> String;
 
-    /// One slice: `q`,`k`: (N×Dk), `v`: (N×Dv) → (N×Dv).
+    /// Solve one request slice: `p.q`,`p.k`: (N×Dk), `p.v`: (N×Dv)
+    /// → (N×Dv), honoring `p.valid_len`.
     ///
     /// Output bits are independent of `ctx` (worker count and
-    /// threshold) — the intra-slice determinism contract.
-    fn run(&self, q: &Matrix, k: &Matrix, v: &Matrix,
-           rng: &mut Xoshiro256, ctx: &ExecCtx) -> Matrix;
+    /// threshold) — the intra-slice determinism contract — and masked
+    /// runs are bit-identical to unpadded runs (the masking contract).
+    fn solve(&self, p: &AttnProblem<'_>, rng: &mut Xoshiro256,
+             ctx: &ExecCtx) -> Matrix;
 
     /// Closed-form cost of one slice (matches §3 complexity claims).
     fn cost(&self, n: usize, dk: usize, dv: usize) -> Cost;
 
     /// Batched multi-head forward over (batch × head) slices.
     ///
-    /// Output slice `s` is a pure function of `(inputs[s], seed, s)` —
-    /// bit-identical for any ctx, including [`run_batch_seq`].
-    fn run_batch(&self, q: &BatchMatrix, k: &BatchMatrix, v: &BatchMatrix,
-                 seed: u64, ctx: &ExecCtx) -> BatchMatrix {
-        check_batch_shapes(q, k, v);
+    /// Output slice `s` is a pure function of
+    /// `(inputs[s], batch.seed, s)` — bit-identical for any ctx,
+    /// including [`solve_batch_seq`].  Per-sequence `batch.lens` become
+    /// valid-prefix sub-problems ([`BatchMatrix::slice_valid`]) before
+    /// dispatch, so padded rows are never copied, hashed or swept, and
+    /// the padded span of every output slice is zero.
+    fn solve_batch(&self, batch: &AttnBatch<'_>, ctx: &ExecCtx)
+                   -> BatchMatrix {
+        // public descriptor fields can bypass the constructors —
+        // re-assert the invariants at the execution boundary
+        batch.validate();
+        let (q, k, v) = (batch.q, batch.k, batch.v);
         let mut out = BatchMatrix::zeros(q.batch, q.heads, q.rows, v.cols);
         if out.slices() == 0 || out.slice_len() == 0 {
             return out;
@@ -140,44 +177,70 @@ pub trait AttentionKernel: Send + Sync {
         // axis; few slices (one long request) → leftover workers move
         // inside each slice.  Placement never changes output bits.
         let (outer, inner) = ctx.split_batch(out.slices());
+        let dv = v.cols;
         // workers write straight into disjoint output slices — no
         // per-slice result collection or second copy of the output
         let chunks = out.slices_mut();
         outer.for_each_mut(chunks, |s, chunk: &mut [f32]| {
-            let mut rng = slice_stream(seed, s as u64);
-            let o = self.run(&q.slice_matrix(s), &k.slice_matrix(s),
-                             &v.slice_matrix(s), &mut rng, &inner);
-            chunk.copy_from_slice(&o.data);
+            let mut rng = slice_stream(batch.seed, s as u64);
+            let l = batch.slice_valid_len(s);
+            let (qs, ks, vs) =
+                (q.slice_valid(s, l), k.slice_valid(s, l),
+                 v.slice_valid(s, l));
+            let o = self.solve(&AttnProblem::new(&qs, &ks, &vs), &mut rng,
+                               &inner);
+            // rows l.. of the chunk stay zero — masked rows by contract
+            chunk[..l * dv].copy_from_slice(&o.data);
         });
         out
     }
-}
 
-fn check_batch_shapes(q: &BatchMatrix, k: &BatchMatrix, v: &BatchMatrix) {
-    assert_eq!((q.batch, q.heads), (k.batch, k.heads),
-               "q/k batch-head mismatch");
-    assert_eq!((q.batch, q.heads), (v.batch, v.heads),
-               "q/v batch-head mismatch");
-    assert_eq!(q.cols, k.cols, "q/k head-dim mismatch");
-    assert_eq!(q.rows, k.rows, "q/k length mismatch");
-    assert_eq!(k.rows, v.rows, "k/v length mismatch");
+    /// Positional single-slice entry point of the pre-descriptor API.
+    #[deprecated(note = "use AttnProblem with AttentionKernel::solve")]
+    fn run_qkv(&self, q: &Matrix, k: &Matrix, v: &Matrix,
+               rng: &mut Xoshiro256, ctx: &ExecCtx) -> Matrix {
+        self.solve(&AttnProblem::new(q, k, v), rng, ctx)
+    }
+
+    /// Positional batched entry point of the pre-descriptor API.
+    #[deprecated(note = "use AttnBatch with AttentionKernel::solve_batch")]
+    fn run_batch(&self, q: &BatchMatrix, k: &BatchMatrix, v: &BatchMatrix,
+                 seed: u64, ctx: &ExecCtx) -> BatchMatrix {
+        self.solve_batch(&AttnBatch::new(q, k, v, seed), ctx)
+    }
 }
 
 /// Explicit sequential single-slice loop — the reference schedule the
-/// parallel `run_batch` must match bit-for-bit.
+/// parallel [`AttentionKernel::solve_batch`] must match bit-for-bit,
+/// ragged lens included.
+pub fn solve_batch_seq(kernel: &dyn AttentionKernel, batch: &AttnBatch<'_>)
+                       -> BatchMatrix {
+    batch.validate();
+    let (q, k, v) = (batch.q, batch.k, batch.v);
+    let mut out = BatchMatrix::zeros(q.batch, q.heads, q.rows, v.cols);
+    if out.slices() == 0 || out.slice_len() == 0 {
+        return out;
+    }
+    let ctx = ExecCtx::sequential();
+    let dv = v.cols;
+    for s in 0..q.slices() {
+        let mut rng = slice_stream(batch.seed, s as u64);
+        let l = batch.slice_valid_len(s);
+        let (qs, ks, vs) =
+            (q.slice_valid(s, l), k.slice_valid(s, l), v.slice_valid(s, l));
+        let o = kernel.solve(&AttnProblem::new(&qs, &ks, &vs), &mut rng,
+                             &ctx);
+        out.slice_mut(s)[..l * dv].copy_from_slice(&o.data);
+    }
+    out
+}
+
+/// Sequential reference loop of the pre-descriptor API.
+#[deprecated(note = "use AttnBatch with solve_batch_seq")]
 pub fn run_batch_seq(kernel: &dyn AttentionKernel, q: &BatchMatrix,
                      k: &BatchMatrix, v: &BatchMatrix, seed: u64)
                      -> BatchMatrix {
-    check_batch_shapes(q, k, v);
-    let mut out = BatchMatrix::zeros(q.batch, q.heads, q.rows, v.cols);
-    let ctx = ExecCtx::sequential();
-    for s in 0..q.slices() {
-        let mut rng = slice_stream(seed, s as u64);
-        let o = kernel.run(&q.slice_matrix(s), &k.slice_matrix(s),
-                           &v.slice_matrix(s), &mut rng, &ctx);
-        out.set_slice(s, &o);
-    }
-    out
+    solve_batch_seq(kernel, &AttnBatch::new(q, k, v, seed))
 }
 
 // ---------------------------------------------------------------------------
@@ -267,27 +330,42 @@ pub fn kernel_by_name(name: &str) -> Option<Box<dyn AttentionKernel>> {
 }
 
 // ---------------------------------------------------------------------------
-// thin wrappers (the historical call-site API)
+// variant-dispatch entry points (and the pre-descriptor wrappers)
 // ---------------------------------------------------------------------------
 
-/// Dispatch a variant on one slice, sequentially.  `q`,`k`: (N×Dk),
-/// `v`: (N×Dv) → (N×Dv).
+/// Dispatch a variant on one request descriptor.
+pub fn solve(variant: &Variant, p: &AttnProblem<'_>, rng: &mut Xoshiro256,
+             ctx: &ExecCtx) -> Matrix {
+    kernel_for(variant).solve(p, rng, ctx)
+}
+
+/// Batched dispatch of a variant over a (B, H, N, D) descriptor.
+pub fn solve_batch(variant: &Variant, batch: &AttnBatch<'_>, ctx: &ExecCtx)
+                   -> BatchMatrix {
+    kernel_for(variant).solve_batch(batch, ctx)
+}
+
+/// Dispatch a variant on one slice, sequentially (pre-descriptor API).
+#[deprecated(note = "use AttnProblem with attention::solve")]
 pub fn run(variant: &Variant, q: &Matrix, k: &Matrix, v: &Matrix,
            rng: &mut Xoshiro256) -> Matrix {
-    kernel_for(variant).run(q, k, v, rng, &ExecCtx::sequential())
+    solve(variant, &AttnProblem::new(q, k, v), rng, &ExecCtx::sequential())
 }
 
-/// Dispatch a variant on one slice with intra-slice parallelism.
+/// Dispatch a variant on one slice with intra-slice parallelism
+/// (pre-descriptor API).
+#[deprecated(note = "use AttnProblem with attention::solve")]
 pub fn run_ctx(variant: &Variant, q: &Matrix, k: &Matrix, v: &Matrix,
                rng: &mut Xoshiro256, ctx: &ExecCtx) -> Matrix {
-    kernel_for(variant).run(q, k, v, rng, ctx)
+    solve(variant, &AttnProblem::new(q, k, v), rng, ctx)
 }
 
-/// Batched dispatch over a (B, H, N, D) workload.
+/// Batched dispatch over a (B, H, N, D) workload (pre-descriptor API).
+#[deprecated(note = "use AttnBatch with attention::solve_batch")]
 pub fn run_batch(variant: &Variant, q: &BatchMatrix, k: &BatchMatrix,
                  v: &BatchMatrix, seed: u64, ctx: &ExecCtx)
                  -> BatchMatrix {
-    kernel_for(variant).run_batch(q, k, v, seed, ctx)
+    solve_batch(variant, &AttnBatch::new(q, k, v, seed), ctx)
 }
 
 /// Closed-form cost of each variant (matches §3 complexity claims).
@@ -445,20 +523,21 @@ mod tests {
     }
 
     #[test]
-    fn kernel_run_matches_variant_dispatch() {
+    fn kernel_solve_matches_variant_dispatch() {
         let (q, k, v, _) = qkv(32, 8, 8, 11);
         let ctx = ExecCtx::sequential();
         for var in test_variants() {
             let mut r1 = Xoshiro256::new(5);
             let mut r2 = Xoshiro256::new(5);
-            let a = run(&var, &q, &k, &v, &mut r1);
-            let b = kernel_for(&var).run(&q, &k, &v, &mut r2, &ctx);
+            let p = AttnProblem::new(&q, &k, &v);
+            let a = solve(&var, &p, &mut r1, &ctx);
+            let b = kernel_for(&var).solve(&p, &mut r2, &ctx);
             assert_eq!(a.data, b.data, "{}", var.name());
         }
     }
 
     #[test]
-    fn run_batch_parallel_is_bit_identical_to_sequential() {
+    fn solve_batch_parallel_is_bit_identical_to_sequential() {
         use crate::exec::WorkerPool;
         let mut rng = Xoshiro256::new(21);
         let (b, h, n, d) = (2, 2, 64, 16);
@@ -466,10 +545,11 @@ mod tests {
         let k = BatchMatrix::randn(b, h, n, d, &mut rng);
         let v = BatchMatrix::randn(b, h, n, d, &mut rng);
         let ctx = ExecCtx::new(WorkerPool::new(4));
+        let batch = AttnBatch::new(&q, &k, &v, 7);
         for var in test_variants() {
             let kernel = kernel_for(&var);
-            let par = kernel.run_batch(&q, &k, &v, 7, &ctx);
-            let seq = run_batch_seq(kernel.as_ref(), &q, &k, &v, 7);
+            let par = kernel.solve_batch(&batch, &ctx);
+            let seq = solve_batch_seq(kernel.as_ref(), &batch);
             assert!(par.bit_identical(&seq), "{} diverged", var.name());
             assert_eq!((par.batch, par.heads, par.rows, par.cols),
                        (b, h, n, d));
@@ -480,17 +560,17 @@ mod tests {
     fn intra_slice_parallelism_never_changes_the_bits() {
         use crate::exec::WorkerPool;
         let (q, k, v, _) = qkv(96, 16, 16, 23);
+        let p = AttnProblem::new(&q, &k, &v);
         for var in test_variants() {
             let kernel = kernel_for(&var);
             let mut r_seq = Xoshiro256::new(11);
-            let want = kernel.run(&q, &k, &v, &mut r_seq,
-                                  &ExecCtx::sequential());
+            let want = kernel.solve(&p, &mut r_seq, &ExecCtx::sequential());
             for workers in [2, 5] {
                 // par_rows = 1 forces every row-partitioned op parallel
                 let ctx =
                     ExecCtx::with_par_rows(WorkerPool::new(workers), 1);
                 let mut r_par = Xoshiro256::new(11);
-                let got = kernel.run(&q, &k, &v, &mut r_par, &ctx);
+                let got = kernel.solve(&p, &mut r_par, &ctx);
                 assert!(got.bit_identical(&want),
                         "{} diverged at workers={workers}", var.name());
             }
@@ -498,7 +578,7 @@ mod tests {
     }
 
     #[test]
-    fn run_batch_slices_match_single_slice_runs() {
+    fn solve_batch_slices_match_single_slice_runs() {
         use crate::exec::WorkerPool;
         let mut rng = Xoshiro256::new(22);
         let (b, h, n, d) = (2, 3, 32, 8);
@@ -506,15 +586,138 @@ mod tests {
         let k = BatchMatrix::randn(b, h, n, d, &mut rng);
         let v = BatchMatrix::randn(b, h, n, d, &mut rng);
         let var = Variant::Clustered { clusters: 4, bits: 31, iters: 5 };
-        let out = run_batch(&var, &q, &k, &v, 3,
-                            &ExecCtx::new(WorkerPool::new(3)));
+        let out = solve_batch(&var, &AttnBatch::new(&q, &k, &v, 3),
+                              &ExecCtx::new(WorkerPool::new(3)));
         let kernel = kernel_for(&var);
         for s in 0..q.slices() {
             let mut rng_s = crate::prng::slice_stream(3, s as u64);
-            let want = kernel.run(&q.slice_matrix(s), &k.slice_matrix(s),
-                                  &v.slice_matrix(s), &mut rng_s,
-                                  &ExecCtx::sequential());
+            let (qs, ks, vs) = (q.slice_matrix(s), k.slice_matrix(s),
+                                v.slice_matrix(s));
+            let want = kernel.solve(&AttnProblem::new(&qs, &ks, &vs),
+                                    &mut rng_s, &ExecCtx::sequential());
             assert_eq!(out.slice_matrix(s).data, want.data, "slice {s}");
         }
+    }
+
+    #[test]
+    fn masked_solve_equals_unpadded_solve_with_zero_tail() {
+        // the masking contract on every family at one shape; the
+        // proptests sweep shapes, lens and worker counts
+        let (q, k, v, _) = qkv(48, 8, 8, 31);
+        let l = 29; // ragged: not a multiple of any tile or chunk size
+        let (qu, ku, vu) = (q.row_prefix(l), k.row_prefix(l),
+                            v.row_prefix(l));
+        let ctx = ExecCtx::sequential();
+        for var in test_variants() {
+            let kernel = kernel_for(&var);
+            let mut r_pad = Xoshiro256::new(3);
+            let masked = kernel.solve(
+                &AttnProblem::new(&q, &k, &v).with_valid_len(l),
+                &mut r_pad, &ctx);
+            let mut r_ref = Xoshiro256::new(3);
+            let want = kernel.solve(&AttnProblem::new(&qu, &ku, &vu),
+                                    &mut r_ref, &ctx);
+            assert_eq!((masked.rows, masked.cols), (48, 8), "{}",
+                       var.name());
+            assert!(masked.row_prefix(l).bit_identical(&want),
+                    "{} masked valid rows diverged from unpadded",
+                    var.name());
+            assert!(masked.data[l * 8..].iter().all(|&x| x == 0.0),
+                    "{} left non-zero padded rows", var.name());
+        }
+    }
+
+    #[test]
+    fn solve_batch_with_lens_masks_per_sequence() {
+        use crate::exec::WorkerPool;
+        let mut rng = Xoshiro256::new(40);
+        let (b, h, n, d) = (3, 2, 32, 8);
+        let q = BatchMatrix::randn(b, h, n, d, &mut rng);
+        let k = BatchMatrix::randn(b, h, n, d, &mut rng);
+        let v = BatchMatrix::randn(b, h, n, d, &mut rng);
+        let lens = [5usize, 32, 17];
+        let kernel =
+            kernel_for(&Variant::ImprovedClustered { clusters: 4, bits: 31,
+                                                     iters: 5, topk: 8 });
+        let batch = AttnBatch::new(&q, &k, &v, 9).with_lens(&lens);
+        let out = kernel.solve_batch(
+            &batch, &ExecCtx::with_par_rows(WorkerPool::new(4), 1));
+        for s in 0..q.slices() {
+            let l = lens[s / h];
+            let mut rng_s = crate::prng::slice_stream(9, s as u64);
+            let (qs, ks, vs) = (q.slice_valid(s, l), k.slice_valid(s, l),
+                                v.slice_valid(s, l));
+            let want = kernel.solve(&AttnProblem::new(&qs, &ks, &vs),
+                                    &mut rng_s, &ExecCtx::sequential());
+            let got = out.slice_matrix(s);
+            assert_eq!(&got.data[..l * d], &want.data[..], "slice {s}");
+            assert!(got.data[l * d..].iter().all(|&x| x == 0.0),
+                    "slice {s} padded rows not zero");
+        }
+        // and the parallel schedule matches the sequential reference
+        assert!(out.bit_identical(&solve_batch_seq(kernel.as_ref(),
+                                                   &batch)));
+    }
+
+    #[test]
+    #[should_panic(expected = "lens")]
+    fn solve_batch_validates_literally_constructed_descriptors() {
+        // public fields can bypass AttnBatch::new/with_lens — the
+        // execution boundary must still catch the malformed descriptor
+        let mut rng = Xoshiro256::new(60);
+        let q = BatchMatrix::randn(2, 1, 8, 4, &mut rng);
+        let k = BatchMatrix::randn(2, 1, 8, 4, &mut rng);
+        let v = BatchMatrix::randn(2, 1, 8, 4, &mut rng);
+        let lens = [5usize]; // one entry for a 2-sequence batch
+        let bad = AttnBatch { q: &q, k: &k, v: &v, seed: 0,
+                              lens: Some(&lens) };
+        let _ = kernel_for(&Variant::Full)
+            .solve_batch(&bad, &ExecCtx::sequential());
+    }
+
+    #[test]
+    #[should_panic(expected = "valid_len")]
+    fn kernels_validate_literally_constructed_problems() {
+        let (q, k, v, _) = qkv(8, 4, 4, 61);
+        let bad = AttnProblem { q: &q, k: &k, v: &v, valid_len: Some(99) };
+        let mut rng = Xoshiro256::new(0);
+        let _ = kernel_for(&Variant::Full).solve(&bad, &mut rng,
+                                                 &ExecCtx::sequential());
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_wrappers_delegate_to_the_descriptor_api() {
+        use crate::exec::WorkerPool;
+        let (q, k, v, _) = qkv(32, 8, 8, 50);
+        let var = Variant::Clustered { clusters: 4, bits: 31, iters: 5 };
+        let kernel = kernel_for(&var);
+        let ctx = ExecCtx::sequential();
+
+        let mut r1 = Xoshiro256::new(2);
+        let mut r2 = Xoshiro256::new(2);
+        let old = kernel.run_qkv(&q, &k, &v, &mut r1, &ctx);
+        let new = kernel.solve(&AttnProblem::new(&q, &k, &v), &mut r2,
+                               &ctx);
+        assert!(old.bit_identical(&new));
+
+        let mut r3 = Xoshiro256::new(2);
+        assert!(run(&var, &q, &k, &v, &mut r3).bit_identical(&new));
+        let mut r4 = Xoshiro256::new(2);
+        assert!(run_ctx(&var, &q, &k, &v, &mut r4, &ctx)
+            .bit_identical(&new));
+
+        let mut rng = Xoshiro256::new(51);
+        let bq = BatchMatrix::randn(2, 2, 16, 8, &mut rng);
+        let bk = BatchMatrix::randn(2, 2, 16, 8, &mut rng);
+        let bv = BatchMatrix::randn(2, 2, 16, 8, &mut rng);
+        let pool = ExecCtx::new(WorkerPool::new(2));
+        let old_b = run_batch(&var, &bq, &bk, &bv, 5, &pool);
+        let new_b = solve_batch(&var, &AttnBatch::new(&bq, &bk, &bv, 5),
+                                &pool);
+        assert!(old_b.bit_identical(&new_b));
+        assert!(run_batch_seq(kernel.as_ref(), &bq, &bk, &bv, 5)
+            .bit_identical(&solve_batch_seq(
+                kernel.as_ref(), &AttnBatch::new(&bq, &bk, &bv, 5))));
     }
 }

@@ -10,7 +10,7 @@ use crate::exec::{par_rows, ExecCtx};
 use crate::prng::Xoshiro256;
 use crate::tensor::{axpy, dot, softmax_inplace, topk_indices, Matrix};
 
-use super::{AttentionKernel, Cost};
+use super::{AttentionKernel, AttnProblem, Cost};
 
 pub fn oracle_top_attention(q: &Matrix, k: &Matrix, v: &Matrix, topk: usize)
                             -> Matrix {
@@ -52,9 +52,15 @@ impl AttentionKernel for OracleTopAttention {
         format!("oracle-top-{}", self.topk)
     }
 
-    fn run(&self, q: &Matrix, k: &Matrix, v: &Matrix,
-           _rng: &mut Xoshiro256, ctx: &ExecCtx) -> Matrix {
-        oracle_top_attention_ctx(q, k, v, self.topk, ctx)
+    /// Masking = solving the valid-prefix sub-problem: the per-query
+    /// logits scan covers only valid keys, so top-k can never select a
+    /// padded key and the masked run is bit-identical to the unpadded
+    /// run.
+    fn solve(&self, p: &AttnProblem<'_>, _rng: &mut Xoshiro256,
+             ctx: &ExecCtx) -> Matrix {
+        let (q, k, v) = p.valid_qkv();
+        p.restore_rows(oracle_top_attention_ctx(&q, &k, &v, self.topk,
+                                                ctx))
     }
 
     fn cost(&self, n: usize, dk: usize, dv: usize) -> Cost {

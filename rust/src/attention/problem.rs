@@ -1,0 +1,343 @@
+//! Request descriptors for the attention engine: [`AttnProblem`] (one
+//! slice) and [`AttnBatch`] (a (B, H, N, D) workload), the structs every
+//! kernel entry point now takes instead of growing positional argument
+//! lists.
+//!
+//! The descriptor is where per-request options travel — today the
+//! valid-length mask, tomorrow KV-cache handles and backend hints —
+//! without touching a single kernel signature again.
+//!
+//! ## Valid-length masking
+//!
+//! Serving pads variable-length requests up to a static bucket length,
+//! and the padded rows must not leak into the math: a padded K row
+//! scoring `q·0 = 0` still soaks up softmax mass.  `valid_len` (per
+//! slice) / `lens` (per sequence) declare how many *leading* rows are
+//! real.  The masking contract every kernel obeys:
+//!
+//! > Solving a bucket-padded problem with `valid_len = l` is
+//! > **bit-for-bit identical** to solving the unpadded `l`-row problem;
+//! > output rows `l..` are exactly zero.
+//!
+//! The mechanism is the valid-prefix view ([`Matrix::row_prefix`],
+//! [`BatchMatrix::slice_valid`]): padding always sits *after* the valid
+//! rows, rows are contiguous in row-major storage, so the valid prefix
+//! of a padded tensor *is* the unpadded tensor.  Kernels solve that
+//! sub-problem — streaming softmax sweeps only valid key blocks,
+//! clustering hashes and assigns only valid queries, top-k can never
+//! select a padded key — and zero-extend the output.  Nothing about the
+//! contract is approximate, and `proptest/attention_props.rs` enforces
+//! it for every kernel family at multiple worker counts.
+
+use std::borrow::Cow;
+
+use crate::tensor::batch::BatchMatrix;
+use crate::tensor::Matrix;
+
+/// One attention request slice: Q/K/V plus the request options.
+///
+/// `q`, `k`: (N × Dk), `v`: (N × Dv).  With `valid_len = Some(l)` only
+/// the leading `l` rows are real (bucket padding fills the tail) and the
+/// kernel must honor the masking contract (module docs).  `None` means
+/// every row is valid — the dense case.
+///
+/// ```
+/// use clustered_transformers::attention::{kernel_by_name, AttnProblem};
+/// use clustered_transformers::exec::ExecCtx;
+/// use clustered_transformers::prng::Xoshiro256;
+/// use clustered_transformers::tensor::Matrix;
+///
+/// let mut rng = Xoshiro256::new(0);
+/// let (q, k, v) = (Matrix::randn(8, 4, &mut rng),
+///                  Matrix::randn(8, 4, &mut rng),
+///                  Matrix::randn(8, 4, &mut rng));
+/// let kernel = kernel_by_name("full").unwrap();
+/// // rows 5.. are bucket padding: mask them
+/// let p = AttnProblem::new(&q, &k, &v).with_valid_len(5);
+/// let mut r = Xoshiro256::new(1);
+/// let out = kernel.solve(&p, &mut r, &ExecCtx::sequential());
+/// assert_eq!((out.rows, out.cols), (8, 4));
+/// assert!(out.data[5 * 4..].iter().all(|&x| x == 0.0));
+/// ```
+#[derive(Debug, Clone, Copy)]
+pub struct AttnProblem<'a> {
+    pub q: &'a Matrix,
+    pub k: &'a Matrix,
+    pub v: &'a Matrix,
+    /// Leading rows that are real; `None` = all of them.
+    pub valid_len: Option<usize>,
+}
+
+impl<'a> AttnProblem<'a> {
+    /// Dense problem: every row of `q`/`k`/`v` is valid.
+    pub fn new(q: &'a Matrix, k: &'a Matrix, v: &'a Matrix) -> Self {
+        let p = Self { q, k, v, valid_len: None };
+        p.validate();
+        p
+    }
+
+    /// Declare that only the leading `valid_len` rows are real.
+    ///
+    /// Masking is defined for self-shaped problems (`q.rows == k.rows`,
+    /// the serving layout) and `1 <= valid_len <= N`; a full-length
+    /// `valid_len` is legal and equivalent to the dense problem.
+    pub fn with_valid_len(mut self, valid_len: usize) -> Self {
+        self.valid_len = Some(valid_len);
+        self.validate();
+        self
+    }
+
+    /// Total rows of the (possibly padded) problem.
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.q.rows
+    }
+
+    /// Rows that are real.
+    #[inline]
+    pub fn valid(&self) -> usize {
+        self.valid_len.unwrap_or(self.q.rows)
+    }
+
+    /// Does the mask actually exclude any row?
+    #[inline]
+    pub fn is_masked(&self) -> bool {
+        self.valid_len.is_some_and(|l| l < self.q.rows)
+    }
+
+    /// Re-assert the constructor invariants.  Fields are public (the
+    /// descriptor is the API surface), so a literally-constructed
+    /// problem can bypass [`AttnProblem::new`] — execution entry points
+    /// call this so malformed descriptors fail loudly instead of
+    /// computing garbage.
+    pub fn validate(&self) {
+        assert_eq!(self.q.cols, self.k.cols, "q/k head-dim mismatch");
+        assert_eq!(self.k.rows, self.v.rows, "k/v length mismatch");
+        if let Some(l) = self.valid_len {
+            assert_eq!(self.q.rows, self.k.rows,
+                       "valid-length masking needs q/k of equal length");
+            assert!((1..=self.q.rows).contains(&l),
+                    "valid_len {l} out of 1..={}", self.q.rows);
+        }
+    }
+
+    /// The valid-prefix sub-problem — borrowed when nothing is masked,
+    /// owned `row_prefix` copies when it is.  Kernels solve exactly
+    /// this (it validates the descriptor first), which is what makes
+    /// the masked run bit-identical to the unpadded run.
+    pub fn valid_qkv(&self)
+                     -> (Cow<'a, Matrix>, Cow<'a, Matrix>, Cow<'a, Matrix>) {
+        self.validate();
+        match self.valid_len {
+            Some(l) if l < self.q.rows => (
+                Cow::Owned(self.q.row_prefix(l)),
+                Cow::Owned(self.k.row_prefix(l)),
+                Cow::Owned(self.v.row_prefix(l)),
+            ),
+            _ => (Cow::Borrowed(self.q), Cow::Borrowed(self.k),
+                  Cow::Borrowed(self.v)),
+        }
+    }
+
+    /// Zero-extend a valid-rows output back to the full (padded) height
+    /// — masked output rows are defined to be zero.
+    pub fn restore_rows(&self, valid_out: Matrix) -> Matrix {
+        if !self.is_masked() {
+            return valid_out;
+        }
+        debug_assert_eq!(valid_out.rows, self.valid());
+        let mut out = Matrix::zeros(self.rows(), valid_out.cols);
+        out.data[..valid_out.data.len()].copy_from_slice(&valid_out.data);
+        out
+    }
+}
+
+/// A batched multi-head attention request: (B, H, N, D) tensors, the
+/// base PRNG seed, and optional per-*sequence* valid lengths.
+///
+/// `lens[b]` masks every head of sequence `b` (heads share a length);
+/// `None` means every row of every slice is valid.  Seeding is part of
+/// the descriptor because output slice `s = b·H + h` must be a pure
+/// function of `(inputs[s], seed, s)` — the batched determinism
+/// contract.
+#[derive(Debug, Clone, Copy)]
+pub struct AttnBatch<'a> {
+    pub q: &'a BatchMatrix,
+    pub k: &'a BatchMatrix,
+    pub v: &'a BatchMatrix,
+    /// Base seed of the per-slice PRNG streams (`prng::slice_stream`).
+    pub seed: u64,
+    /// Per-sequence valid lengths (`len == q.batch`); `None` = dense.
+    pub lens: Option<&'a [usize]>,
+}
+
+impl<'a> AttnBatch<'a> {
+    /// Dense batch: every row of every slice is valid.
+    pub fn new(q: &'a BatchMatrix, k: &'a BatchMatrix, v: &'a BatchMatrix,
+               seed: u64) -> Self {
+        let b = Self { q, k, v, seed, lens: None };
+        b.validate();
+        b
+    }
+
+    /// Attach per-sequence valid lengths (each in `1..=N`).
+    pub fn with_lens(mut self, lens: &'a [usize]) -> Self {
+        self.lens = Some(lens);
+        self.validate();
+        self
+    }
+
+    /// Re-assert the constructor invariants (the descriptor's public
+    /// fields can bypass [`AttnBatch::new`] / [`AttnBatch::with_lens`];
+    /// `solve_batch` and `solve_batch_seq` call this so malformed
+    /// descriptors fail loudly at the execution boundary).
+    pub fn validate(&self) {
+        assert_eq!((self.q.batch, self.q.heads),
+                   (self.k.batch, self.k.heads), "q/k batch-head mismatch");
+        assert_eq!((self.q.batch, self.q.heads),
+                   (self.v.batch, self.v.heads), "q/v batch-head mismatch");
+        assert_eq!(self.q.cols, self.k.cols, "q/k head-dim mismatch");
+        assert_eq!(self.q.rows, self.k.rows, "q/k length mismatch");
+        assert_eq!(self.k.rows, self.v.rows, "k/v length mismatch");
+        if let Some(lens) = self.lens {
+            assert_eq!(lens.len(), self.q.batch,
+                       "lens must have one entry per sequence");
+            for (b, &l) in lens.iter().enumerate() {
+                assert!((1..=self.q.rows).contains(&l),
+                        "lens[{b}] = {l} out of 1..={}", self.q.rows);
+            }
+        }
+    }
+
+    /// Valid rows of sequence `b`.
+    #[inline]
+    pub fn valid_len(&self, b: usize) -> usize {
+        self.lens.map_or(self.q.rows, |l| l[b])
+    }
+
+    /// Valid rows of flat slice `s = b·H + h` (heads share the
+    /// sequence's length).
+    #[inline]
+    pub fn slice_valid_len(&self, s: usize) -> usize {
+        self.valid_len(s / self.q.heads)
+    }
+
+    /// Does any sequence mask any row?
+    pub fn is_masked(&self) -> bool {
+        self.lens
+            .is_some_and(|ls| ls.iter().any(|&l| l < self.q.rows))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Xoshiro256;
+
+    fn qkv(n: usize, d: usize, seed: u64) -> (Matrix, Matrix, Matrix) {
+        let mut rng = Xoshiro256::new(seed);
+        (Matrix::randn(n, d, &mut rng), Matrix::randn(n, d, &mut rng),
+         Matrix::randn(n, d, &mut rng))
+    }
+
+    #[test]
+    fn dense_problem_borrows_and_masked_problem_copies_the_prefix() {
+        let (q, k, v) = qkv(8, 4, 1);
+        let dense = AttnProblem::new(&q, &k, &v);
+        assert!(!dense.is_masked());
+        assert_eq!((dense.rows(), dense.valid()), (8, 8));
+        let (dq, _, _) = dense.valid_qkv();
+        assert!(matches!(dq, Cow::Borrowed(_)));
+
+        let masked = AttnProblem::new(&q, &k, &v).with_valid_len(5);
+        assert!(masked.is_masked());
+        assert_eq!((masked.rows(), masked.valid()), (8, 5));
+        let (mq, mk, mv) = masked.valid_qkv();
+        assert!(mq.bit_identical(&q.row_prefix(5)));
+        assert!(mk.bit_identical(&k.row_prefix(5)));
+        assert!(mv.bit_identical(&v.row_prefix(5)));
+
+        // full-length valid_len is the dense problem
+        let full = AttnProblem::new(&q, &k, &v).with_valid_len(8);
+        assert!(!full.is_masked());
+        let (fq, _, _) = full.valid_qkv();
+        assert!(matches!(fq, Cow::Borrowed(_)));
+    }
+
+    #[test]
+    fn restore_rows_zero_extends_masked_output() {
+        let (q, k, v) = qkv(6, 3, 2);
+        let p = AttnProblem::new(&q, &k, &v).with_valid_len(2);
+        let got = p.restore_rows(Matrix::from_vec(2, 3,
+                                                  vec![1., 2., 3., 4., 5.,
+                                                       6.]));
+        assert_eq!((got.rows, got.cols), (6, 3));
+        assert_eq!(&got.data[..6], &[1., 2., 3., 4., 5., 6.]);
+        assert!(got.data[6..].iter().all(|&x| x == 0.0));
+        // dense problems pass through untouched
+        let dense = AttnProblem::new(&q, &k, &v);
+        let m = Matrix::from_vec(6, 3, (0..18).map(|x| x as f32).collect());
+        assert!(dense.restore_rows(m.clone()).bit_identical(&m));
+    }
+
+    #[test]
+    #[should_panic(expected = "valid_len")]
+    fn zero_valid_len_is_rejected() {
+        let (q, k, v) = qkv(4, 2, 3);
+        let _ = AttnProblem::new(&q, &k, &v).with_valid_len(0);
+    }
+
+    #[test]
+    #[should_panic(expected = "valid_len")]
+    fn oversized_valid_len_is_rejected() {
+        let (q, k, v) = qkv(4, 2, 4);
+        let _ = AttnProblem::new(&q, &k, &v).with_valid_len(5);
+    }
+
+    #[test]
+    fn batch_lens_resolve_per_slice_head_major() {
+        let mut rng = Xoshiro256::new(5);
+        let q = BatchMatrix::randn(2, 3, 8, 4, &mut rng);
+        let k = BatchMatrix::randn(2, 3, 8, 4, &mut rng);
+        let v = BatchMatrix::randn(2, 3, 8, 4, &mut rng);
+        let dense = AttnBatch::new(&q, &k, &v, 7);
+        assert!(!dense.is_masked());
+        assert_eq!(dense.slice_valid_len(5), 8);
+
+        let lens = [3usize, 8];
+        let ragged = AttnBatch::new(&q, &k, &v, 7).with_lens(&lens);
+        assert!(ragged.is_masked());
+        // slices 0..3 belong to sequence 0, slices 3..6 to sequence 1
+        for s in 0..3 {
+            assert_eq!(ragged.slice_valid_len(s), 3, "slice {s}");
+        }
+        for s in 3..6 {
+            assert_eq!(ragged.slice_valid_len(s), 8, "slice {s}");
+        }
+        // all-full lens are not a mask
+        let full = [8usize, 8];
+        assert!(!AttnBatch::new(&q, &k, &v, 7).with_lens(&full).is_masked());
+    }
+
+    #[test]
+    #[should_panic(expected = "lens")]
+    fn batch_lens_length_must_match_batch() {
+        let mut rng = Xoshiro256::new(6);
+        let q = BatchMatrix::randn(2, 1, 4, 2, &mut rng);
+        let k = BatchMatrix::randn(2, 1, 4, 2, &mut rng);
+        let v = BatchMatrix::randn(2, 1, 4, 2, &mut rng);
+        let lens = [4usize];
+        let _ = AttnBatch::new(&q, &k, &v, 0).with_lens(&lens);
+    }
+
+    #[test]
+    #[should_panic(expected = "lens[1]")]
+    fn batch_lens_entries_must_fit_the_rows() {
+        let mut rng = Xoshiro256::new(7);
+        let q = BatchMatrix::randn(2, 1, 4, 2, &mut rng);
+        let k = BatchMatrix::randn(2, 1, 4, 2, &mut rng);
+        let v = BatchMatrix::randn(2, 1, 4, 2, &mut rng);
+        let lens = [4usize, 5];
+        let _ = AttnBatch::new(&q, &k, &v, 0).with_lens(&lens);
+    }
+}

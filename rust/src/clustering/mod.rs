@@ -356,8 +356,8 @@ pub fn cluster_queries_ctx(q: &Matrix, n_clusters: usize, bits: usize,
 /// Slice `s` draws its LSH projections from `prng::slice_stream(seed, s)`
 /// and nothing else, so the result is bit-identical whether the pool runs
 /// slices in parallel or `cluster_queries` is called per slice in order.
-/// Like `AttentionKernel::run_batch`, the ctx budget splits between the
-/// slice axis and intra-slice hashing/assignment.
+/// Like `AttentionKernel::solve_batch`, the ctx budget splits between
+/// the slice axis and intra-slice hashing/assignment.
 pub fn cluster_queries_batch(q: &crate::tensor::batch::BatchMatrix,
                              n_clusters: usize, bits: usize, iters: usize,
                              seed: u64, ctx: &ExecCtx)

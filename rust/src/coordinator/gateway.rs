@@ -11,6 +11,17 @@
 //! applied to the Rust-native kernels: route to the tightest bucket,
 //! pad, batch, execute, return only the valid rows.
 //!
+//! **Valid-length masking (default on):** a flush hands the kernels an
+//! `attention::AttnBatch` carrying each request's true length, so
+//! padded rows are never hashed, swept or softmaxed — every response is
+//! **bit-identical to the unpadded computation** of its request (the
+//! masking contract, property-tested end-to-end on ragged traces).
+//! Padding still costs *memory* (the batch buffers are bucket-sized);
+//! it no longer costs *compute*, and [`BucketMetrics`] reports the two
+//! separately.  `GatewayOptions { mask: false, … }` restores the
+//! historical static-shape semantics (padded K rows participating in
+//! softmax) for comparison benches.
+//!
 //! Admission control: `submit` fails fast with backpressure when queues
 //! are full, but first *routes up* — a request that overflows its tight
 //! bucket spills into the next larger bucket, trading padding waste for
@@ -18,16 +29,21 @@
 //! longer than every bucket are rejected outright.
 //!
 //! Per-bucket [`BucketMetrics`] record latency percentiles, completed /
-//! rejected / routed-up counts, batch occupancy and the padding-waste
-//! ratio ([`crate::metrics::PaddingWaste`]) — the numbers the `gateway`
-//! bench tabulates.
+//! rejected / routed-up counts, batch occupancy and both waste ratios
+//! ([`crate::metrics::PaddingWaste`]) — the numbers the `gateway` bench
+//! tabulates.
 //!
 //! **Determinism:** a flushed batch runs through the same
-//! `AttentionKernel::run_batch` contract as everything else — output
+//! `AttentionKernel::solve_batch` contract as everything else — output
 //! slice `s` depends only on `(inputs[s], seed, s)` — so gateway output
 //! for a given batch composition is bit-identical to the sequential
-//! per-slice loop over the same padded batch, regardless of pool size
+//! per-slice loop over the same descriptor, regardless of pool size
 //! (property-tested in `proptest/attention_props.rs`).
+//!
+//! Execution goes through the [`AttentionBackend`] seam
+//! ([`attention::backend`](crate::attention::backend)): every bucket
+//! dispatcher drives a [`NativeBackend`] today, and a compiled-HLO,
+//! KV-cached or sharded backend plugs in behind the same descriptor.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
@@ -35,11 +51,13 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::attention::{kernel_by_name, AttentionKernel};
+use crate::attention::{AttentionBackend, AttentionKernel, AttnBatch,
+                       AttnProblem, NativeBackend};
 use crate::exec::{Channel, ExecCtx, SharedWorkerPool};
 use crate::metrics::{LatencyHistogram, PaddingWaste};
 use crate::prng::Xoshiro256;
 use crate::tensor::batch::BatchMatrix;
+use crate::tensor::Matrix;
 
 use super::batcher::{BatchPolicy, Batcher};
 use super::router::{Bucket, Router};
@@ -87,6 +105,10 @@ pub struct GatewayResponse {
     pub len: usize,
     /// Pad-to length of the bucket that served the request.
     pub bucket_seq_len: usize,
+    /// Whether valid-length masking was applied: `true` means `out` is
+    /// bit-identical to the unpadded computation of this request;
+    /// `false` means static-shape semantics (padded keys participated).
+    pub masked: bool,
     pub queue_time: Duration,
     pub total_time: Duration,
     pub batch_occupancy: usize,
@@ -113,6 +135,11 @@ pub struct GatewayOptions {
     /// single long-N request in a tail bucket still uses its whole
     /// lease; output bits never depend on the split.
     pub par_rows: usize,
+    /// Apply valid-length masking (default).  `false` restores the
+    /// static-shape semantics of the pre-masking gateway: padded K rows
+    /// participate in softmax and responses depend on the bucket
+    /// length.  Useful only for comparison benches.
+    pub mask: bool,
 }
 
 impl Default for GatewayOptions {
@@ -124,6 +151,7 @@ impl Default for GatewayOptions {
             seed: 0,
             route_up: true,
             par_rows: 0,
+            mask: true,
         }
     }
 }
@@ -139,10 +167,13 @@ pub struct BucketMetrics {
     pub routed_up: AtomicU64,
     pub batches: AtomicU64,
     pub batched_items: AtomicU64,
-    /// Valid request rows executed (`Σ len`).
+    /// Valid request rows (`Σ len`).
     pub valid_rows: AtomicU64,
-    /// Rows executed after padding (`Σ seq_len`).
+    /// Rows in the padded batch buffers (`Σ seq_len`).
     pub padded_rows: AtomicU64,
+    /// Rows the kernels actually executed (`Σ len` masked,
+    /// `Σ seq_len` unmasked).
+    pub computed_rows: AtomicU64,
     pub latency: Mutex<LatencyHistogram>,
 }
 
@@ -153,13 +184,31 @@ impl BucketMetrics {
         self.batched_items.load(Ordering::Relaxed) as f64 / b as f64
     }
 
-    /// Fraction of executed rows that were padding, in [0, 1].
-    pub fn padding_waste(&self) -> f64 {
+    fn waste(&self) -> PaddingWaste {
         PaddingWaste {
             valid: self.valid_rows.load(Ordering::Relaxed),
             padded: self.padded_rows.load(Ordering::Relaxed),
+            computed: self.computed_rows.load(Ordering::Relaxed),
         }
-        .ratio()
+    }
+
+    /// Fraction of padded-buffer rows that were padding, in [0, 1] —
+    /// the memory cost of static shapes (masking cannot reduce it).
+    pub fn padding_waste(&self) -> f64 {
+        self.waste().memory_ratio()
+    }
+
+    /// Fraction of *executed* rows that were padding, in [0, 1] — zero
+    /// when masking is on, equal to [`BucketMetrics::padding_waste`]
+    /// when it is off.
+    pub fn compute_waste(&self) -> f64 {
+        self.waste().compute_ratio()
+    }
+
+    /// Fraction of padded rows the kernels never executed, in [0, 1] —
+    /// the compute masking saved this bucket.
+    pub fn compute_saved(&self) -> f64 {
+        self.waste().compute_saved()
     }
 
     /// Latency percentile in microseconds (p in [0, 100]).
@@ -199,7 +248,7 @@ impl ServingGateway {
             if b.seq_len == 0 || b.batch_size == 0 {
                 bail!("bucket needs seq_len/batch_size >= 1, got {b:?}");
             }
-            if kernel_by_name(&b.kernel).is_none() {
+            if NativeBackend::by_name(&b.kernel).is_none() {
                 bail!("bucket kernel {:?} not in the attention registry \
                        (native buckets only; see Bucket::native)", b.kernel);
             }
@@ -220,20 +269,24 @@ impl ServingGateway {
             let m = Arc::new(BucketMetrics::default());
             ingress.push(ch.clone());
             metrics.push(m.clone());
-            let kernel = kernel_by_name(&bucket.kernel)
-                .expect("validated above");
+            let worker = BucketWorker {
+                backend: NativeBackend::by_name(&bucket.kernel)
+                    .expect("validated above"),
+                shape,
+                seq_len: bucket.seq_len,
+                metrics: m,
+                pool: pool.clone(),
+                seed: opts.seed,
+                par_rows: opts.par_rows,
+                mask: opts.mask,
+            };
             let policy = BatchPolicy {
                 max_batch: bucket.batch_size,
                 max_wait: opts.max_wait,
             };
-            let (shape, seed, pool) = (shape, opts.seed, pool.clone());
-            let (seq_len, par_rows) = (bucket.seq_len, opts.par_rows);
             let spawned = std::thread::Builder::new()
-                .name(format!("ct-gateway-{seq_len}"))
-                .spawn(move || {
-                    bucket_dispatcher(kernel, shape, seq_len, ch, m, pool,
-                                      policy, seed, par_rows)
-                });
+                .name(format!("ct-gateway-{}", bucket.seq_len))
+                .spawn(move || worker.dispatch(ch, policy));
             match spawned {
                 Ok(handle) => workers.push(handle),
                 Err(e) => {
@@ -405,7 +458,8 @@ fn offer<T>(channels: &[Channel<T>], tight: usize,
 ///
 /// Slot order is block order, so this is exactly the batch a gateway
 /// dispatcher assembles from a flush — the reference the gateway
-/// determinism property test replays through `run_batch_seq`.
+/// determinism property test replays through
+/// `attention::solve_batch_seq`.
 pub fn pad_batch(blocks: &[(&[f32], usize)], heads: usize, seq_len: usize,
                  d: usize) -> BatchMatrix {
     let mut out = BatchMatrix::zeros(blocks.len(), heads, seq_len, d);
@@ -438,89 +492,155 @@ pub fn valid_rows(out: &BatchMatrix, slot: usize, len: usize) -> Vec<f32> {
     rows
 }
 
+/// The unpadded reference for one co-batched request: solve slot
+/// `slot`'s (H, len, D) blocks head by head against the gateway's
+/// per-slice seed schedule (`slice_stream(seed, slot·H + h)`), with no
+/// padding anywhere.  A masked gateway response must equal this
+/// bit-for-bit — the end-to-end statement of the masking contract,
+/// asserted by the `gateway` bench, the ragged proptest and the
+/// integration tests.
 #[allow(clippy::too_many_arguments)]
-fn bucket_dispatcher(kernel: Box<dyn AttentionKernel>, shape: GatewayShape,
-                     seq_len: usize, ch: Channel<GatewayRequest>,
-                     metrics: Arc<BucketMetrics>,
-                     pool: Arc<SharedWorkerPool>, policy: BatchPolicy,
-                     seed: u64, par_rows: usize) {
-    let mut batcher: Batcher<GatewayRequest> = Batcher::new(policy);
-    loop {
-        let wait = batcher.next_wait(Instant::now());
-        let item = ch.recv_timeout(wait);
-        let mut ready: Option<Vec<GatewayRequest>> = None;
-        match item {
-            Ok(Some(req)) => {
-                ready = batcher.push(req, Instant::now());
-            }
-            Ok(None) => {
-                if let Some(batch) = batcher.take() {
-                    run_bucket_batch(kernel.as_ref(), shape, seq_len, batch,
-                                     &metrics, &pool, seed, par_rows);
-                }
-                return;
-            }
-            Err(()) => {}
-        }
-        if ready.is_none() {
-            ready = batcher.poll_deadline(Instant::now());
-        }
-        if let Some(batch) = ready {
-            run_bucket_batch(kernel.as_ref(), shape, seq_len, batch,
-                             &metrics, &pool, seed, par_rows);
-        }
+pub fn unpadded_reference(kernel: &dyn AttentionKernel, shape: GatewayShape,
+                          seed: u64, slot: usize, q: &[f32], k: &[f32],
+                          v: &[f32], len: usize) -> Vec<f32> {
+    assert_eq!(q.len(), shape.qk_len(len), "q block is not (H, len, Dk)");
+    assert_eq!(k.len(), shape.qk_len(len), "k block is not (H, len, Dk)");
+    assert_eq!(v.len(), shape.v_len(len), "v block is not (H, len, Dv)");
+    let (dk, dv) = (shape.dk, shape.dv);
+    let mut out = Vec::with_capacity(shape.v_len(len));
+    for h in 0..shape.heads {
+        let s = (slot * shape.heads + h) as u64;
+        let mut rng = crate::prng::slice_stream(seed, s);
+        let qm = Matrix::from_vec(len, dk,
+                                  q[h * len * dk..(h + 1) * len * dk]
+                                      .to_vec());
+        let km = Matrix::from_vec(len, dk,
+                                  k[h * len * dk..(h + 1) * len * dk]
+                                      .to_vec());
+        let vm = Matrix::from_vec(len, dv,
+                                  v[h * len * dv..(h + 1) * len * dv]
+                                      .to_vec());
+        let o = kernel.solve(&AttnProblem::new(&qm, &km, &vm), &mut rng,
+                             &ExecCtx::sequential());
+        out.extend_from_slice(&o.data);
     }
+    out
 }
 
-#[allow(clippy::too_many_arguments)]
-fn run_bucket_batch(kernel: &dyn AttentionKernel, shape: GatewayShape,
-                    seq_len: usize, batch: Vec<GatewayRequest>,
-                    metrics: &BucketMetrics, pool: &SharedWorkerPool,
-                    seed: u64, par_rows: usize) {
-    let occupancy = batch.len();
-    let qb: Vec<(&[f32], usize)> =
-        batch.iter().map(|r| (&r.q[..], r.len)).collect();
-    let kb: Vec<(&[f32], usize)> =
-        batch.iter().map(|r| (&r.k[..], r.len)).collect();
-    let vb: Vec<(&[f32], usize)> =
-        batch.iter().map(|r| (&r.v[..], r.len)).collect();
-    let q = pad_batch(&qb, shape.heads, seq_len, shape.dk);
-    let k = pad_batch(&kb, shape.heads, seq_len, shape.dk);
-    let v = pad_batch(&vb, shape.heads, seq_len, shape.dv);
-    let queue_times: Vec<Duration> =
-        batch.iter().map(|r| r.enqueued.elapsed()).collect();
+/// One bucket's dispatcher state: the backend it drives plus everything
+/// a flush needs.  Keeping it a struct (instead of a nine-argument
+/// function) is what lets the backend seam swap implementations without
+/// touching the dispatch loop.
+struct BucketWorker {
+    backend: NativeBackend,
+    shape: GatewayShape,
+    seq_len: usize,
+    metrics: Arc<BucketMetrics>,
+    pool: Arc<SharedWorkerPool>,
+    seed: u64,
+    par_rows: usize,
+    mask: bool,
+}
 
-    // one lease per flush: live leases never sum above the shared
-    // budget (a flush queues here when it is spent).  The leased
-    // workers split between the slice axis and intra-slice tiled
-    // compute (run_batch), so a lone long-N request still uses them
-    // all — without changing a single output bit.
-    let lease = pool.lease();
-    let ctx = ExecCtx::with_par_rows(*lease, par_rows);
-    let out = kernel.run_batch(&q, &k, &v, seed, &ctx);
-    drop(lease);
+impl BucketWorker {
+    /// The dispatcher loop: drain → batch → execute → reply.
+    fn dispatch(self, ch: Channel<GatewayRequest>, policy: BatchPolicy) {
+        let mut batcher: Batcher<GatewayRequest> = Batcher::new(policy);
+        loop {
+            let wait = batcher.next_wait(Instant::now());
+            let item = ch.recv_timeout(wait);
+            let mut ready: Option<Vec<GatewayRequest>> = None;
+            match item {
+                Ok(Some(req)) => {
+                    ready = batcher.push(req, Instant::now());
+                }
+                Ok(None) => {
+                    if let Some(batch) = batcher.take() {
+                        self.run_flush(batch);
+                    }
+                    return;
+                }
+                Err(()) => {}
+            }
+            if ready.is_none() {
+                ready = batcher.poll_deadline(Instant::now());
+            }
+            if let Some(batch) = ready {
+                self.run_flush(batch);
+            }
+        }
+    }
 
-    metrics.batches.fetch_add(1, Ordering::Relaxed);
-    metrics
-        .batched_items
-        .fetch_add(occupancy as u64, Ordering::Relaxed);
+    /// Execute one flushed co-batch through the backend and reply.
+    fn run_flush(&self, batch: Vec<GatewayRequest>) {
+        let (shape, seq_len) = (self.shape, self.seq_len);
+        let occupancy = batch.len();
+        let qb: Vec<(&[f32], usize)> =
+            batch.iter().map(|r| (&r.q[..], r.len)).collect();
+        let kb: Vec<(&[f32], usize)> =
+            batch.iter().map(|r| (&r.k[..], r.len)).collect();
+        let vb: Vec<(&[f32], usize)> =
+            batch.iter().map(|r| (&r.v[..], r.len)).collect();
+        let q = pad_batch(&qb, shape.heads, seq_len, shape.dk);
+        let k = pad_batch(&kb, shape.heads, seq_len, shape.dk);
+        let v = pad_batch(&vb, shape.heads, seq_len, shape.dv);
+        let lens: Vec<usize> = batch.iter().map(|r| r.len).collect();
+        let queue_times: Vec<Duration> =
+            batch.iter().map(|r| r.enqueued.elapsed()).collect();
 
-    for (slot, req) in batch.into_iter().enumerate() {
-        let rows = valid_rows(&out, slot, req.len);
-        let total = req.enqueued.elapsed();
-        metrics.completed.fetch_add(1, Ordering::Relaxed);
-        metrics.valid_rows.fetch_add(req.len as u64, Ordering::Relaxed);
-        metrics.padded_rows.fetch_add(seq_len as u64, Ordering::Relaxed);
-        metrics.latency.lock().unwrap().record(total);
-        let _ = req.reply.send(GatewayResponse {
-            id: req.id,
-            out: rows,
-            len: req.len,
-            bucket_seq_len: seq_len,
-            queue_time: queue_times[slot],
-            total_time: total,
-            batch_occupancy: occupancy,
-        });
+        // the request descriptor: the true lengths ride along, so the
+        // backend masks padded rows out of the compute entirely
+        let mut descriptor = AttnBatch::new(&q, &k, &v, self.seed);
+        if self.mask {
+            descriptor = descriptor.with_lens(&lens);
+        }
+
+        // one lease per flush: live leases never sum above the shared
+        // budget (a flush queues here when it is spent).  The leased
+        // workers split between the slice axis and intra-slice tiled
+        // compute (solve_batch), so a lone long-N request still uses
+        // them all — without changing a single output bit.
+        let lease = self.pool.lease();
+        let ctx = ExecCtx::with_par_rows(*lease, self.par_rows);
+        let out = self.backend.execute(&descriptor, &ctx);
+        drop(lease);
+
+        let metrics = &self.metrics;
+        metrics.batches.fetch_add(1, Ordering::Relaxed);
+        metrics
+            .batched_items
+            .fetch_add(occupancy as u64, Ordering::Relaxed);
+
+        for (slot, req) in batch.into_iter().enumerate() {
+            let rows = valid_rows(&out, slot, req.len);
+            let total = req.enqueued.elapsed();
+            metrics.completed.fetch_add(1, Ordering::Relaxed);
+            // the masked/unmasked executed-rows rule lives in
+            // PaddingWaste, not here — accumulate a per-request delta
+            // through it and publish the counters it produced
+            let mut delta = PaddingWaste::default();
+            if self.mask {
+                delta.add_masked(req.len, seq_len);
+            } else {
+                delta.add(req.len, seq_len);
+            }
+            metrics.valid_rows.fetch_add(delta.valid, Ordering::Relaxed);
+            metrics.padded_rows.fetch_add(delta.padded, Ordering::Relaxed);
+            metrics
+                .computed_rows
+                .fetch_add(delta.computed, Ordering::Relaxed);
+            metrics.latency.lock().unwrap().record(total);
+            let _ = req.reply.send(GatewayResponse {
+                id: req.id,
+                out: rows,
+                len: req.len,
+                bucket_seq_len: seq_len,
+                masked: self.mask,
+                queue_time: queue_times[slot],
+                total_time: total,
+                batch_occupancy: occupancy,
+            });
+        }
     }
 }
 
@@ -605,10 +725,13 @@ pub fn replay_blocking(gw: &ServingGateway, trace: Vec<TraceItem>,
         .collect()
 }
 
-/// Column headers matching [`bucket_report`] rows.
-pub const BUCKET_REPORT_HEADERS: [&str; 10] =
+/// Column headers matching [`bucket_report`] rows.  `mem waste %` is
+/// the padded-buffer fraction that was padding (static shapes always
+/// pay it); `cmp waste %` is the *executed*-row fraction that was
+/// padding — 0.0 when masking is on, equal to `mem waste %` when off.
+pub const BUCKET_REPORT_HEADERS: [&str; 11] =
     ["N", "kernel", "done", "routed-up", "rejected", "occupancy",
-     "p50 ms", "p99 ms", "rows/s", "waste %"];
+     "p50 ms", "p99 ms", "rows/s", "mem waste %", "cmp waste %"];
 
 /// Per-bucket serving report, one row of strings per bucket (ascending
 /// seq_len), ready for a `benchlib::Table` with
@@ -635,6 +758,7 @@ pub fn bucket_report(gw: &ServingGateway, wall_s: f64) -> Vec<Vec<String>> {
                         if wall_s > 0.0 { rows as f64 / wall_s }
                         else { 0.0 }),
                 format!("{:.1}", 100.0 * m.padding_waste()),
+                format!("{:.1}", 100.0 * m.compute_waste()),
             ]
         })
         .collect()
@@ -643,7 +767,7 @@ pub fn bucket_report(gw: &ServingGateway, wall_s: f64) -> Vec<Vec<String>> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::attention::run_batch_seq;
+    use crate::attention::{kernel_by_name, solve_batch_seq};
 
     const SHAPE: GatewayShape = GatewayShape { heads: 2, dk: 8, dv: 8 };
 
@@ -680,8 +804,13 @@ mod tests {
         assert_eq!(offer(&chans, 0, 1..3, true, 3), Err(3));
     }
 
+    fn same_bits(got: &[f32], want: &[f32]) -> bool {
+        got.len() == want.len()
+            && got.iter().zip(want).all(|(a, b)| a.to_bits() == b.to_bits())
+    }
+
     #[test]
-    fn gateway_cobatch_matches_sequential_padded_run_bit_for_bit() {
+    fn masked_cobatch_matches_the_unpadded_reference_bit_for_bit() {
         let (l0, l1) = (20, 32);
         let (q0, k0, v0) =
             (block(l0, 8, 1), block(l0, 8, 2), block(l0, 8, 3));
@@ -699,6 +828,7 @@ mod tests {
                 seed: 17,
                 route_up: true,
                 par_rows: 0,
+                mask: true,
             },
         )
         .unwrap();
@@ -711,8 +841,69 @@ mod tests {
         let r0 = rx0.recv_timeout(Duration::from_secs(30)).unwrap();
         let r1 = rx1.recv_timeout(Duration::from_secs(30)).unwrap();
         assert_eq!(r0.batch_occupancy, 2, "requests were not co-batched");
+        assert!(r0.masked && r1.masked);
 
-        // reference: sequential per-slice loop over the same padded batch
+        // reference 1: the sequential loop over the same ragged
+        // descriptor (lens attached) — the determinism contract
+        let q = pad_batch(&[(&q0, l0), (&q1, l1)], SHAPE.heads, 32,
+                          SHAPE.dk);
+        let k = pad_batch(&[(&k0, l0), (&k1, l1)], SHAPE.heads, 32,
+                          SHAPE.dk);
+        let v = pad_batch(&[(&v0, l0), (&v1, l1)], SHAPE.heads, 32,
+                          SHAPE.dv);
+        let lens = [l0, l1];
+        let kernel = kernel_by_name("clustered-4").unwrap();
+        let want = solve_batch_seq(
+            kernel.as_ref(),
+            &AttnBatch::new(&q, &k, &v, 17).with_lens(&lens));
+        assert!(same_bits(&r0.out, &valid_rows(&want, 0, l0)));
+        assert!(same_bits(&r1.out, &valid_rows(&want, 1, l1)));
+
+        // reference 2: the fully-unpadded per-request computation — the
+        // masking contract end-to-end (no padded tensor anywhere)
+        let u0 = unpadded_reference(kernel.as_ref(), SHAPE, 17, 0, &q0,
+                                    &k0, &v0, l0);
+        let u1 = unpadded_reference(kernel.as_ref(), SHAPE, 17, 1, &q1,
+                                    &k1, &v1, l1);
+        assert!(same_bits(&r0.out, &u0),
+                "masked response != unpadded computation (slot 0)");
+        assert!(same_bits(&r1.out, &u1),
+                "masked response != unpadded computation (slot 1)");
+        gw.shutdown();
+    }
+
+    #[test]
+    fn unmasked_gateway_keeps_static_shape_semantics() {
+        let (l0, l1) = (20, 32);
+        let (q0, k0, v0) =
+            (block(l0, 8, 7), block(l0, 8, 8), block(l0, 8, 9));
+        let (q1, k1, v1) =
+            (block(l1, 8, 10), block(l1, 8, 11), block(l1, 8, 12));
+        let gw = ServingGateway::start(
+            SHAPE,
+            vec![Bucket::native("clustered-4", 32, 2)],
+            GatewayOptions {
+                max_wait: Duration::from_secs(10),
+                mask: false, // historical static-shape semantics
+                workers: 4,
+                seed: 17,
+                ..GatewayOptions::default()
+            },
+        )
+        .unwrap();
+        let rx0 = gw
+            .submit_blocking(q0.clone(), k0.clone(), v0.clone(), l0)
+            .unwrap();
+        let rx1 = gw
+            .submit_blocking(q1.clone(), k1.clone(), v1.clone(), l1)
+            .unwrap();
+        let r0 = rx0.recv_timeout(Duration::from_secs(30)).unwrap();
+        let r1 = rx1.recv_timeout(Duration::from_secs(30)).unwrap();
+        assert_eq!(r0.batch_occupancy, 2);
+        assert!(!r0.masked && !r1.masked);
+
+        // reference: the dense (no-lens) sequential loop over the same
+        // padded batch — exactly the pre-masking gateway contract
         let q = pad_batch(&[(&q0, l0), (&q1, l1)], SHAPE.heads, 32,
                           SHAPE.dk);
         let k = pad_batch(&[(&k0, l0), (&k1, l1)], SHAPE.heads, 32,
@@ -720,14 +911,15 @@ mod tests {
         let v = pad_batch(&[(&v0, l0), (&v1, l1)], SHAPE.heads, 32,
                           SHAPE.dv);
         let kernel = kernel_by_name("clustered-4").unwrap();
-        let want = run_batch_seq(kernel.as_ref(), &q, &k, &v, 17);
-        let same = |got: &[f32], want: &[f32]| {
-            got.len() == want.len()
-                && got.iter().zip(want)
-                    .all(|(a, b)| a.to_bits() == b.to_bits())
-        };
-        assert!(same(&r0.out, &valid_rows(&want, 0, l0)));
-        assert!(same(&r1.out, &valid_rows(&want, 1, l1)));
+        let want =
+            solve_batch_seq(kernel.as_ref(), &AttnBatch::new(&q, &k, &v,
+                                                             17));
+        assert!(same_bits(&r0.out, &valid_rows(&want, 0, l0)));
+        assert!(same_bits(&r1.out, &valid_rows(&want, 1, l1)));
+        // unmasked metrics: compute waste equals memory waste
+        let m = &gw.bucket_metrics()[0];
+        assert!((m.compute_waste() - m.padding_waste()).abs() < 1e-12);
+        assert_eq!(m.compute_saved(), 0.0);
         gw.shutdown();
     }
 
@@ -750,6 +942,7 @@ mod tests {
             assert_eq!(resp.len, item.len);
             assert_eq!(resp.out.len(), SHAPE.v_len(item.len));
             assert!(resp.out.iter().all(|x| x.is_finite()));
+            assert!(resp.masked, "masking defaults on");
             // blocking replay never routes up: tightest fit always
             let want_bucket = if item.len <= 16 { 16 } else { 32 };
             assert_eq!(resp.bucket_seq_len, want_bucket);
@@ -766,6 +959,12 @@ mod tests {
             assert!(b.occupancy() >= 1.0);
             let waste = b.padding_waste();
             assert!((0.0..1.0).contains(&waste), "waste {waste}");
+            // masked: kernels executed exactly the valid rows
+            assert_eq!(b.computed_rows.load(Ordering::Relaxed),
+                       b.valid_rows.load(Ordering::Relaxed));
+            assert_eq!(b.compute_waste(), 0.0);
+            assert!((b.compute_saved() - waste).abs() < 1e-12,
+                    "masking saves exactly the padded rows");
             assert!(b.percentile_us(99.0) >= b.percentile_us(50.0));
             assert!(b.valid_rows.load(Ordering::Relaxed) > 0);
         }
@@ -821,5 +1020,20 @@ mod tests {
         let none = ServingGateway::start(SHAPE, vec![],
                                          GatewayOptions::default());
         assert!(none.is_err());
+    }
+
+    #[test]
+    fn unpadded_reference_rejects_malformed_blocks() {
+        let kernel = kernel_by_name("full").unwrap();
+        let ok = unpadded_reference(kernel.as_ref(), SHAPE, 0, 0,
+                                    &block(4, 8, 1), &block(4, 8, 2),
+                                    &block(4, 8, 3), 4);
+        assert_eq!(ok.len(), SHAPE.v_len(4));
+        let bad = std::panic::catch_unwind(|| {
+            unpadded_reference(kernel_by_name("full").unwrap().as_ref(),
+                               SHAPE, 0, 0, &[0.0; 3], &block(4, 8, 2),
+                               &block(4, 8, 3), 4)
+        });
+        assert!(bad.is_err());
     }
 }

@@ -7,11 +7,18 @@
 //! batcher and backpressure substrate (vLLM-router-shaped, scaled to one
 //! host):
 //!
-//! - [`InferenceEngine`] — compiled-HLO buckets through PJRT;
+//! - [`InferenceEngine`] — compiled-HLO buckets through PJRT, masking
+//!   ragged lengths inside the graph via the `xlen` input;
 //! - [`ServingGateway`] — a fleet of native attention engines, one
 //!   kernel/pad-length/batch-size [`Bucket`] each, sharing one worker
-//!   budget, with route-up admission control and per-bucket
-//!   [`BucketMetrics`] (see `docs/SERVING.md`).
+//!   budget, with route-up admission control, valid-length masking
+//!   (responses are bit-identical to the unpadded computation) and
+//!   per-bucket [`BucketMetrics`] (see `docs/SERVING.md`).
+//!
+//! Both stacks consume the same request information — tensors plus true
+//! lengths — and the native side resolves it through the
+//! `attention::AttnBatch` descriptor and the `attention::AttentionBackend`
+//! execution seam.
 
 pub mod batcher;
 pub mod datafeed;
@@ -23,10 +30,10 @@ pub mod trainer;
 pub use batcher::{BatchPolicy, Batcher};
 pub use datafeed::DataFeed;
 pub use gateway::{bucket_report, pad_batch, replay_blocking,
-                  synthetic_trace, valid_rows, BucketMetrics,
-                  GatewayOptions, GatewayRequest, GatewayResponse,
-                  GatewayShape, ServingGateway, TraceItem,
-                  BUCKET_REPORT_HEADERS};
+                  synthetic_trace, unpadded_reference, valid_rows,
+                  BucketMetrics, GatewayOptions, GatewayRequest,
+                  GatewayResponse, GatewayShape, ServingGateway,
+                  TraceItem, BUCKET_REPORT_HEADERS};
 pub use router::{Bucket, Router};
 pub use serve::{AttnRequest, AttnResponse, AttnShape, InferenceEngine,
                 NativeAttentionEngine, NativeAttnOptions, Request,

@@ -116,6 +116,12 @@ impl Router {
     }
 
     /// Padding waste fraction for a request of `len` in its bucket.
+    ///
+    /// This is the *memory* waste of the static batch buffers.  With
+    /// the gateway's valid-length masking on (the default), the padded
+    /// rows are never computed — see
+    /// `metrics::PaddingWaste::compute_saved` — so routing a request up
+    /// a bucket costs buffer space, not kernel time.
     pub fn padding_waste(&self, len: usize) -> Option<f64> {
         self.route(len)
             .map(|b| 1.0 - len as f64 / b.seq_len as f64)

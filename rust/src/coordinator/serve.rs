@@ -6,10 +6,15 @@
 //! `submit` blocks or fails fast when the system is saturated).
 //!
 //! Two engines share the batcher/metrics machinery:
-//! [`InferenceEngine`] executes compiled HLO through PJRT, and
-//! [`NativeAttentionEngine`] batches multi-head attention requests into
-//! (B, H, N, D) tensors and runs them through an [`AttentionKernel`]
-//! over the exec worker pool — no artifacts or native XLA required.
+//! [`InferenceEngine`] executes compiled HLO through PJRT — its forward
+//! programs take the per-request lengths as their `xlen` input and mask
+//! ragged sequences inside the graph — and [`NativeAttentionEngine`]
+//! batches multi-head attention requests into (B, H, N, D) descriptors
+//! and executes them through the [`NativeBackend`] seam over the exec
+//! worker pool — no artifacts or native XLA required.  Both paths
+//! consume the same request information; an HLO raw-attention
+//! executable wrapped in `attention::AttentionBackend` is the drop-in
+//! bridge between them.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
@@ -17,7 +22,8 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
-use crate::attention::AttentionKernel;
+use crate::attention::{AttentionBackend, AttentionKernel, AttnBatch,
+                       NativeBackend};
 use crate::exec::{Channel, ExecCtx, WorkerPool};
 use crate::metrics::LatencyHistogram;
 use crate::runtime::{HostTensor, Runtime};
@@ -367,7 +373,7 @@ pub struct AttnResponse {
 pub struct NativeAttnOptions {
     pub policy: BatchPolicy,
     pub queue_capacity: usize,
-    /// Exec-pool workers.  `run_batch` splits them between the
+    /// Exec-pool workers.  `solve_batch` splits them between the
     /// (batch × head) slice axis and intra-slice tiled compute — a
     /// lone long-N request still uses the whole budget.
     pub workers: usize,
@@ -392,12 +398,16 @@ impl Default for NativeAttnOptions {
 }
 
 /// Serving engine for the Rust-native attention kernels: ingress queue →
-/// deadline batcher → one (B, H, N, D) `run_batch` over the exec pool →
-/// per-request replies.  Shares [`ServeMetrics`] with the HLO engine so
-/// benches report both paths in the same terms.
+/// deadline batcher → one (B, H, N, D) descriptor executed through the
+/// [`NativeBackend`] seam over the exec pool → per-request replies.
+/// Shares [`ServeMetrics`] with the HLO engine so benches report both
+/// paths in the same terms.
 ///
-/// One engine serves one static shape; a fleet of them behind the length
-/// router is [`super::ServingGateway`].
+/// One engine serves one static shape (requests arrive already at the
+/// engine's exact length, so there is nothing to mask); the ragged
+/// path — routing, padding and valid-length masking — is
+/// [`super::ServingGateway`], a fleet of these behind the length
+/// router.
 ///
 /// ```
 /// use clustered_transformers::attention::kernel_by_name;
@@ -506,6 +516,9 @@ impl NativeAttentionEngine {
 fn native_dispatcher(kernel: Box<dyn AttentionKernel>, shape: AttnShape,
                      ch: Channel<AttnRequest>, metrics: Arc<ServeMetrics>,
                      opts: NativeAttnOptions) {
+    // the engine drives its kernel through the backend seam, like the
+    // gateway dispatchers — one descriptor per flush
+    let backend = NativeBackend::new(kernel);
     let pool = ExecCtx::with_par_rows(WorkerPool::new(opts.workers),
                                       opts.par_rows);
     let mut batcher: Batcher<AttnRequest> = Batcher::new(opts.policy);
@@ -518,8 +531,8 @@ fn native_dispatcher(kernel: Box<dyn AttentionKernel>, shape: AttnShape,
             }
             Ok(None) => {
                 if let Some(batch) = batcher.take() {
-                    run_native_batch(kernel.as_ref(), shape, batch,
-                                     &metrics, &pool, opts.seed);
+                    run_native_batch(&backend, shape, batch, &metrics,
+                                     &pool, opts.seed);
                 }
                 return;
             }
@@ -529,13 +542,13 @@ fn native_dispatcher(kernel: Box<dyn AttentionKernel>, shape: AttnShape,
             ready = batcher.poll_deadline(Instant::now());
         }
         if let Some(batch) = ready {
-            run_native_batch(kernel.as_ref(), shape, batch, &metrics,
-                             &pool, opts.seed);
+            run_native_batch(&backend, shape, batch, &metrics, &pool,
+                             opts.seed);
         }
     }
 }
 
-fn run_native_batch(kernel: &dyn AttentionKernel, shape: AttnShape,
+fn run_native_batch(backend: &dyn AttentionBackend, shape: AttnShape,
                     batch: Vec<AttnRequest>, metrics: &ServeMetrics,
                     pool: &ExecCtx, seed: u64) {
     let b = batch.len();
@@ -559,7 +572,9 @@ fn run_native_batch(kernel: &dyn AttentionKernel, shape: AttnShape,
     let queue_times: Vec<Duration> =
         batch.iter().map(|r| r.enqueued.elapsed()).collect();
 
-    let out = kernel.run_batch(&q, &k, &v, seed, pool);
+    // dense descriptor: engine requests arrive at the exact shape, so
+    // there are no lens to mask
+    let out = backend.execute(&AttnBatch::new(&q, &k, &v, seed), pool);
 
     metrics.batches.fetch_add(1, Ordering::Relaxed);
     metrics
@@ -585,7 +600,7 @@ fn run_native_batch(kernel: &dyn AttentionKernel, shape: AttnShape,
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::attention::{kernel_for, run_batch_seq, Variant};
+    use crate::attention::{kernel_for, solve_batch_seq, Variant};
     use crate::prng::Xoshiro256;
 
     const SHAPE: AttnShape =
@@ -645,8 +660,8 @@ mod tests {
         assert_eq!(r0.batch_occupancy, 2, "requests were not co-batched");
 
         // reference: the explicit sequential loop over the same batch
-        let want = run_batch_seq(kernel_for(&variant()).as_ref(), &q, &k,
-                                 &v, 17);
+        let want = solve_batch_seq(kernel_for(&variant()).as_ref(),
+                                   &AttnBatch::new(&q, &k, &v, 17));
         let per = SHAPE.v_len();
         assert_eq!(r0.out.len(), per);
         let same = |got: &[f32], want: &[f32]| {

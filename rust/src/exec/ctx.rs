@@ -24,7 +24,7 @@ use crate::exec::WorkerPool;
 pub const DEFAULT_PAR_ROWS: usize = 64;
 
 /// Pool handle + parallelism threshold threaded through
-/// [`crate::attention::AttentionKernel::run`] and the compute core.
+/// [`crate::attention::AttentionKernel::solve`] and the compute core.
 #[derive(Debug, Clone, Copy)]
 pub struct ExecCtx {
     pool: WorkerPool,

@@ -18,18 +18,28 @@
 //! The Rust reference attention is a **trait-based, batched, multi-head
 //! engine** (see `docs/ARCHITECTURE.md` for the full design):
 //!
+//! - [`attention::AttnProblem`] / [`attention::AttnBatch`] — the
+//!   request descriptors every kernel entry point takes: Q/K/V views
+//!   plus per-request options (valid-length masks, seeding; later
+//!   KV-cache handles).  The **masking contract**: solving
+//!   bucket-padded inputs with `valid_len`/`lens` set is bit-identical
+//!   to solving the unpadded inputs, and padded output rows are zero.
 //! - [`attention::AttentionKernel`] — one algorithm (full, clustered,
 //!   improved-clustered, oracle-top, LSH), one file per family under
 //!   `attention/`, resolvable by paper-notation name through the
 //!   name-keyed [`attention::REGISTRY`] (e.g. `"i-clustered-100"`).
+//! - [`attention::AttentionBackend`] — the execution seam over
+//!   descriptors: [`attention::NativeBackend`] today, compiled-HLO /
+//!   KV-cached / sharded backends behind the same struct tomorrow.
 //! - [`tensor::batch::BatchMatrix`] — a (B, H, N, D) tensor stored as
-//!   B·H stacked row-major slices with zero-copy per-slice views; slice
-//!   `s = b·H + h` is the unit of parallelism.
+//!   B·H stacked row-major slices with zero-copy per-slice views
+//!   (including ragged `slice_valid` prefixes); slice `s = b·H + h` is
+//!   the unit of parallelism.
 //! - [`exec::pool::WorkerPool`] — a scoped, std-only worker pool that
 //!   maps kernels over (batch × head) slices.  Each slice draws
 //!   randomness only from [`prng::slice_stream`]`(seed, s)`, so parallel
 //!   output is **bit-identical** to the sequential loop
-//!   ([`attention::run_batch_seq`]) — property-tested in
+//!   ([`attention::solve_batch_seq`]) — property-tested in
 //!   `proptest/attention_props.rs`.
 //! - [`tensor::gemm`] + [`exec::ExecCtx`] — the tiled parallel compute
 //!   core (PR 3): cache-blocked panel-packed GEMM, streaming
@@ -38,15 +48,18 @@
 //!   over the ctx pool and never split a reduction, so they are
 //!   bit-identical for any worker count too (see `docs/PERF.md`).
 //! - [`coordinator::NativeAttentionEngine`] — the serving path for the
-//!   native kernels: ingress queue → deadline batcher → one batched
-//!   `run_batch` per flush over the pool, with the same backpressure and
-//!   metrics as the compiled-HLO [`coordinator::InferenceEngine`].
+//!   native kernels: ingress queue → deadline batcher → one descriptor
+//!   executed through the backend seam per flush over the pool, with
+//!   the same backpressure and metrics as the compiled-HLO
+//!   [`coordinator::InferenceEngine`].
 //! - [`coordinator::ServingGateway`] — a fleet of those engines, one per
 //!   sequence-length [`coordinator::Bucket`], behind the length router:
 //!   requests are routed to the tightest bucket, padded, co-batched and
 //!   executed over one shared [`exec::SharedWorkerPool`] budget, with
-//!   route-up admission control and per-bucket latency/padding-waste
-//!   metrics (see `docs/SERVING.md`).
+//!   route-up admission control and valid-length masking on by default
+//!   — every response is bit-identical to the unpadded computation of
+//!   its request, and per-bucket metrics report memory-padding and
+//!   masked-compute waste separately (see `docs/SERVING.md`).
 //!
 //! ## Serving in five lines
 //!
@@ -60,12 +73,14 @@
 //!     vec![Bucket::native("full", 8, 2), Bucket::native("full", 16, 2)],
 //!     GatewayOptions::default(),
 //! ).unwrap();
-//! // a 5-row request routes to the N=8 bucket and is padded to 8 rows
+//! // a 5-row request routes to the N=8 bucket and is padded to 8 rows;
+//! // masking (default) keeps the padded rows out of the math entirely
 //! let (q, k, v) = (vec![0.1; 5 * 4], vec![0.2; 5 * 4], vec![0.3; 5 * 4]);
 //! let rx = gw.submit_blocking(q, k, v, 5).unwrap();
 //! let resp = rx.recv().unwrap();
 //! assert_eq!(resp.bucket_seq_len, 8);
 //! assert_eq!(resp.out.len(), 5 * 4); // only the valid rows come back
+//! assert!(resp.masked); // and they equal the unpadded computation
 //! gw.shutdown();
 //! ```
 //!

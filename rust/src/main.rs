@@ -247,6 +247,9 @@ fn cmd_gateway(rest: &[String]) -> Result<()> {
         .opt("par-rows", Some("0"),
              "min output rows before intra-slice ops go parallel \
               (0 = default threshold)")
+        .flag("no-mask",
+              "disable valid-length masking: padded rows participate in \
+               the compute (pre-masking static-shape semantics)")
         .opt("addr", None, "bind address: serve TCP instead of a trace");
     let args = cmd.parse(rest)?;
     init_logging(true);
@@ -272,6 +275,7 @@ fn cmd_gateway(rest: &[String]) -> Result<()> {
         dv: args.get_usize("dv", 32)?,
     };
     let seed = args.get_u64("seed", 0)?;
+    let mask = !args.flag("no-mask");
     let opts = coordinator::GatewayOptions {
         max_wait: std::time::Duration::from_millis(
             args.get_u64("max-wait-ms", 2)?),
@@ -281,6 +285,7 @@ fn cmd_gateway(rest: &[String]) -> Result<()> {
         route_up: true,
         // intra-slice parallelism threshold (0 = default)
         par_rows: args.get_usize("par-rows", 0)?,
+        mask,
     };
     let gw = coordinator::ServingGateway::start(shape, buckets, opts)?;
 
@@ -292,7 +297,8 @@ fn cmd_gateway(rest: &[String]) -> Result<()> {
             gw, addr, stop, |a| println!("bound {a}"));
     }
 
-    // trace mode: replay a mixed-length synthetic trace, report buckets
+    // trace mode: replay a mixed-length (ragged) synthetic trace,
+    // report buckets
     let count = args.get_usize("requests", 64)?;
     let clients = args.get_usize("clients", 4)?;
     let max_n = gw.router().max_len();
@@ -305,7 +311,9 @@ fn cmd_gateway(rest: &[String]) -> Result<()> {
     let mut table = benchlib::Table::new(
         &format!(
             "gateway: {count} requests, lens {min_len}..{max_n}, \
-             {clients} clients, {:.2}s wall", wall),
+             {clients} clients, {:.2}s wall, masking {}", wall,
+            if mask { "on (responses ≡ unpadded compute)" }
+            else { "off (static-shape semantics)" }),
         &coordinator::BUCKET_REPORT_HEADERS,
     );
     for row in coordinator::bucket_report(&gw, wall) {
@@ -358,8 +366,10 @@ fn cmd_bench_attn(rest: &[String]) -> Result<()> {
     let mut full_time = None;
     for var in &variants {
         let mut rng2 = prng::Xoshiro256::new(1);
+        let ctx = clustered_transformers::exec::ExecCtx::sequential();
         let st = benchlib::quick(|| {
-            let _ = attention::run(var, &q, &kk, &v, &mut rng2);
+            let p = attention::AttnProblem::new(&q, &kk, &v);
+            let _ = attention::solve(var, &p, &mut rng2, &ctx);
         });
         if matches!(var, attention::Variant::Full) {
             full_time = Some(st.mean_s);

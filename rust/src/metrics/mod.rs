@@ -86,31 +86,87 @@ pub fn span_f1(pred: (i32, i32), gold: (i32, i32)) -> f64 {
 /// Padding-waste accumulator for static-shape serving.
 ///
 /// A length-bucketed engine pads every request of `len` valid rows up to
-/// its bucket's `seq_len`; the waste ratio is the fraction of executed
-/// rows that were padding.  Accumulated per bucket by the serving
-/// gateway and reported next to latency percentiles, because waste is
-/// the price paid for static shapes and bucket sizing is the dial.
+/// its bucket's `seq_len`.  Two different costs hide in that padding and
+/// this accumulator tracks both:
+///
+/// - **memory-padding waste** ([`memory_ratio`]) — the fraction of rows
+///   in the padded batch buffers that are padding.  Static shapes always
+///   pay this: the (B, H, N, D) tensors are allocated at bucket size no
+///   matter what the kernels later touch.
+/// - **masked-compute waste** ([`compute_ratio`]) — the fraction of rows
+///   the kernels actually *executed* that were padding.  With
+///   valid-length masking on, kernels skip padded rows entirely, this
+///   drops to zero, and the flip side — [`compute_saved`], the fraction
+///   of padded rows never executed — measures what masking bought.
+///
+/// Accumulated per bucket by the serving gateway and reported next to
+/// latency percentiles, because waste is the price paid for static
+/// shapes and bucket sizing (plus masking) is the dial.
+///
+/// [`memory_ratio`]: PaddingWaste::memory_ratio
+/// [`compute_ratio`]: PaddingWaste::compute_ratio
+/// [`compute_saved`]: PaddingWaste::compute_saved
 #[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
 pub struct PaddingWaste {
-    /// Valid (request) rows executed.
+    /// Valid (request) rows.
     pub valid: u64,
-    /// Total rows executed after padding (`Σ bucket seq_len`).
+    /// Rows in the padded batch buffers (`Σ bucket seq_len`).
     pub padded: u64,
+    /// Rows the kernels actually executed (`Σ len` when masked,
+    /// `Σ seq_len` when not).
+    pub computed: u64,
 }
 
 impl PaddingWaste {
-    /// Record one request: `len` valid rows padded to `seq_len`.
+    /// Record one *unmasked* request: `len` valid rows padded to
+    /// `seq_len`, all `seq_len` rows executed.
     pub fn add(&mut self, len: usize, seq_len: usize) {
         self.valid += len as u64;
         self.padded += seq_len as u64;
+        self.computed += seq_len as u64;
     }
 
-    /// Fraction of executed rows that were padding, in [0, 1].
-    pub fn ratio(&self) -> f64 {
+    /// Record one *masked* request: `len` valid rows padded to
+    /// `seq_len`, only the `len` valid rows executed.
+    pub fn add_masked(&mut self, len: usize, seq_len: usize) {
+        self.valid += len as u64;
+        self.padded += seq_len as u64;
+        self.computed += len as u64;
+    }
+
+    /// Fraction of padded-buffer rows that were padding, in [0, 1] —
+    /// the memory cost of static shapes (masking cannot reduce it).
+    pub fn memory_ratio(&self) -> f64 {
         if self.padded == 0 {
             0.0
         } else {
             1.0 - self.valid as f64 / self.padded as f64
+        }
+    }
+
+    /// Back-compat alias of [`PaddingWaste::memory_ratio`] (the only
+    /// waste there was before masked compute existed).
+    pub fn ratio(&self) -> f64 {
+        self.memory_ratio()
+    }
+
+    /// Fraction of *executed* rows that were padding, in [0, 1] — zero
+    /// when masking skips every padded row.
+    pub fn compute_ratio(&self) -> f64 {
+        if self.computed == 0 {
+            0.0
+        } else {
+            1.0 - self.valid as f64 / self.computed as f64
+        }
+    }
+
+    /// Fraction of padded-buffer rows the kernels never executed, in
+    /// [0, 1] — the compute masking saved.
+    pub fn compute_saved(&self) -> f64 {
+        if self.padded == 0 {
+            0.0
+        } else {
+            1.0 - self.computed as f64 / self.padded as f64
         }
     }
 }
@@ -254,6 +310,30 @@ mod tests {
         assert!((w.ratio() - 0.25).abs() < 1e-12);
         w.add(0, 64); // degenerate empty request is pure waste
         assert!((w.ratio() - (1.0 - 96.0 / 192.0)).abs() < 1e-12);
+        // unmasked: every padded row was executed, nothing saved
+        assert!((w.compute_ratio() - w.memory_ratio()).abs() < 1e-12);
+        assert_eq!(w.compute_saved(), 0.0);
+    }
+
+    #[test]
+    fn masked_requests_split_memory_and_compute_waste() {
+        let mut w = PaddingWaste::default();
+        assert_eq!(w.compute_ratio(), 0.0); // empty: 0, not NaN
+        assert_eq!(w.compute_saved(), 0.0);
+        w.add_masked(32, 64);
+        w.add_masked(64, 64);
+        // buffers still carry the padding...
+        assert!((w.memory_ratio() - 0.25).abs() < 1e-12);
+        // ...but the kernels executed only valid rows
+        assert_eq!(w.compute_ratio(), 0.0);
+        assert!((w.compute_saved() - 0.25).abs() < 1e-12);
+        // a mixed masked/unmasked stream accounts each request its way
+        w.add(32, 64); // unmasked spill: executes its padding
+        assert!(w.compute_ratio() > 0.0);
+        assert!(w.compute_saved() > 0.0);
+        assert_eq!(w.computed, 32 + 64 + 64);
+        assert_eq!(w.padded, 192);
+        assert_eq!(w.valid, 128);
     }
 
     #[test]

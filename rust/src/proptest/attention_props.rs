@@ -1,39 +1,49 @@
 //! Properties of the batched multi-head attention engine and the tiled
 //! compute core:
 //!
-//!  1. **Determinism contract** — `run_batch` over any pool size is
+//!  1. **Determinism contract** — `solve_batch` over any pool size is
 //!     bit-for-bit identical to the sequential per-slice loop
-//!     (`run_batch_seq`) for every registered kernel family.
-//!  2. **Intra-slice determinism** — `AttentionKernel::run` with a
+//!     (`solve_batch_seq`) for every registered kernel family.
+//!  2. **Intra-slice determinism** — `AttentionKernel::solve` with a
 //!     parallel `ExecCtx` (row-partitioned GEMM, streaming softmax,
 //!     clustering, top-k) is bit-for-bit identical to the sequential
 //!     ctx, for every kernel family and worker count.
-//!  3. **Blocked GEMM ≡ naive** — the cache-blocked, panel-packed GEMM
+//!  3. **Masking contract** — solving bucket-padded inputs (padding
+//!     filled with random garbage, not zeros) with `valid_len` set is
+//!     bit-identical to solving the unpadded inputs, for every kernel
+//!     family, ragged length and worker count; padded output rows are
+//!     exactly zero.  The batched form holds per sequence through
+//!     `AttnBatch::lens`.
+//!  4. **Blocked GEMM ≡ naive** — the cache-blocked, panel-packed GEMM
 //!     (NN and NT) matches the naive i-k-j scalar loop bit for bit on
 //!     random shapes, including non-multiples of the tile sizes, for
 //!     any worker count.
-//!  4. **Row-stochasticity** — clustered attention matrices (plain and
+//!  5. **Row-stochasticity** — clustered attention matrices (plain and
 //!     improved) stay probability distributions row-wise.
-//!  5. **Gateway determinism** — a live `ServingGateway` co-batch
-//!     (threaded ingress, deadline batcher, shared pool, intra-slice
-//!     parallelism on) returns the same bits as the sequential
-//!     per-slice loop over the same padded batch.
+//!  6. **Gateway determinism on ragged traces** — a live
+//!     `ServingGateway` co-batch of ragged lengths (threaded ingress,
+//!     deadline batcher, shared pool, intra-slice parallelism on,
+//!     masking on) returns, per request, exactly the unpadded
+//!     computation of that request.
 
 use std::time::Duration;
 
 use crate::attention::{clustered_attention_matrix,
                        improved_clustered_attention_matrix, kernel_by_name,
-                       kernel_for, run_batch_seq, Variant};
+                       kernel_for, solve_batch_seq, AttnBatch, AttnProblem,
+                       Variant};
 use crate::clustering::{cluster_queries, Clustering};
-use crate::coordinator::{pad_batch, valid_rows, Bucket, GatewayOptions,
-                         GatewayShape, ServingGateway};
+use crate::coordinator::{pad_batch, unpadded_reference, valid_rows, Bucket,
+                         GatewayOptions, GatewayShape, ServingGateway};
 use crate::exec::{ExecCtx, WorkerPool};
+use crate::prng::Xoshiro256;
 use crate::proptest::forall;
 use crate::tensor::batch::BatchMatrix;
 use crate::tensor::{gemm, Matrix};
 
-/// Small-hyperparameter instances of every kernel family (LSH chunk 16
-/// divides the generated Ns).
+/// Small-hyperparameter instances of every kernel family.  The LSH
+/// chunk (16) deliberately does *not* divide the ragged lengths the
+/// masking property generates — the ragged final chunk must hold.
 fn all_variants() -> Vec<Variant> {
     vec![
         Variant::Full,
@@ -47,9 +57,9 @@ fn all_variants() -> Vec<Variant> {
 }
 
 #[test]
-fn prop_run_batch_is_bit_identical_to_sequential_loop() {
+fn prop_solve_batch_is_bit_identical_to_sequential_loop() {
     forall(
-        "run_batch ≡ per-slice run, all variants",
+        "solve_batch ≡ per-slice solve, all variants",
         0xBA7C11ED,
         6,
         |rng| {
@@ -69,10 +79,11 @@ fn prop_run_batch_is_bit_identical_to_sequential_loop() {
             // on top of the slice-axis parallelism
             let ctx =
                 ExecCtx::with_par_rows(WorkerPool::new(*workers), 1);
+            let batch = AttnBatch::new(q, k, v, *seed);
             for var in all_variants() {
                 let kernel = kernel_for(&var);
-                let par = kernel.run_batch(q, k, v, *seed, &ctx);
-                let seq = run_batch_seq(kernel.as_ref(), q, k, v, *seed);
+                let par = kernel.solve_batch(&batch, &ctx);
+                let seq = solve_batch_seq(kernel.as_ref(), &batch);
                 if !par.bit_identical(&seq) {
                     return Err(format!(
                         "{} diverged from sequential (B={} H={} N={} \
@@ -91,9 +102,9 @@ fn prop_run_batch_is_bit_identical_to_sequential_loop() {
 }
 
 #[test]
-fn prop_kernel_run_is_bit_identical_across_exec_ctx() {
+fn prop_kernel_solve_is_bit_identical_across_exec_ctx() {
     forall(
-        "run(ctx parallel) ≡ run(ctx sequential), all variants",
+        "solve(ctx parallel) ≡ solve(ctx sequential), all variants",
         0x1A7A_C0DE,
         5,
         |rng| {
@@ -109,17 +120,139 @@ fn prop_kernel_run_is_bit_identical_across_exec_ctx() {
         |(q, k, v, workers, seed)| {
             let par = ExecCtx::with_par_rows(WorkerPool::new(*workers), 1);
             let seq = ExecCtx::sequential();
+            let p = AttnProblem::new(q, k, v);
             for var in all_variants() {
                 let kernel = kernel_for(&var);
-                let mut r1 = crate::prng::Xoshiro256::new(*seed);
-                let mut r2 = crate::prng::Xoshiro256::new(*seed);
-                let a = kernel.run(q, k, v, &mut r1, &seq);
-                let b = kernel.run(q, k, v, &mut r2, &par);
+                let mut r1 = Xoshiro256::new(*seed);
+                let mut r2 = Xoshiro256::new(*seed);
+                let a = kernel.solve(&p, &mut r1, &seq);
+                let b = kernel.solve(&p, &mut r2, &par);
                 if !a.bit_identical(&b) {
                     return Err(format!(
                         "{} intra-slice parallel diverged (N={} \
                          workers={workers})",
                         var.name(), q.rows));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_masked_padded_solve_is_bit_identical_to_unpadded_solve() {
+    forall(
+        "solve(padded, valid_len=l) ≡ solve(unpadded), all variants",
+        0x3A5C_11ED,
+        6,
+        |rng| {
+            let n = 24 + rng.below(73); // 24..=96, rarely tile-aligned
+            let l = 1 + rng.below(n); // 1..=n, any raggedness
+            let d = 8 * (1 + rng.below(2)); // 8 | 16
+            // the padded buffers are FULLY random — padding rows carry
+            // garbage, so any kernel that peeks at them gets caught
+            // (zero padding would mask the bug class the contract
+            // exists for)
+            let q = Matrix::randn(n, d, rng);
+            let k = Matrix::randn(n, d, rng);
+            let v = Matrix::randn(n, d, rng);
+            let workers = 1 + rng.below(5); // 1..=5
+            let seed = rng.next_u64();
+            (q, k, v, l, workers, seed)
+        },
+        |(q, k, v, l, workers, seed)| {
+            let (l, dv) = (*l, v.cols);
+            let (qu, ku, vu) =
+                (q.row_prefix(l), k.row_prefix(l), v.row_prefix(l));
+            let par = ExecCtx::with_par_rows(WorkerPool::new(*workers), 1);
+            for var in all_variants() {
+                let kernel = kernel_for(&var);
+                // masked run on the padded buffers, parallel ctx
+                let mut r_pad = Xoshiro256::new(*seed);
+                let masked = kernel.solve(
+                    &AttnProblem::new(q, k, v).with_valid_len(l),
+                    &mut r_pad, &par);
+                // unpadded run, sequential ctx — one check covers both
+                // the masking and the intra-slice determinism contract
+                let mut r_ref = Xoshiro256::new(*seed);
+                let want = kernel.solve(&AttnProblem::new(&qu, &ku, &vu),
+                                        &mut r_ref,
+                                        &ExecCtx::sequential());
+                if (masked.rows, masked.cols) != (q.rows, dv) {
+                    return Err(format!("{} bad masked shape", var.name()));
+                }
+                if !masked.row_prefix(l).bit_identical(&want) {
+                    return Err(format!(
+                        "{} masked(N={}, l={l}, workers={workers}) \
+                         diverged from the unpadded run",
+                        var.name(), q.rows));
+                }
+                if masked.data[l * dv..].iter().any(|&x| x != 0.0) {
+                    return Err(format!(
+                        "{} left non-zero padded output rows (N={}, \
+                         l={l})", var.name(), q.rows));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_batched_lens_mask_each_sequence_like_its_unpadded_run() {
+    forall(
+        "solve_batch(lens) ≡ per-sequence unpadded solves, all variants",
+        0x4A66_EDBA,
+        4,
+        |rng| {
+            let b = 2 + rng.below(2); // 2..=3
+            let h = 1 + rng.below(2); // 1..=2
+            let n = 32 + rng.below(33); // 32..=64
+            let d = 8;
+            let q = BatchMatrix::randn(b, h, n, d, rng);
+            let k = BatchMatrix::randn(b, h, n, d, rng);
+            let v = BatchMatrix::randn(b, h, n, d, rng);
+            let lens: Vec<usize> =
+                (0..b).map(|_| 1 + rng.below(n)).collect();
+            let workers = 2 + rng.below(3); // 2..=4
+            let seed = rng.next_u64();
+            (q, k, v, lens, workers, seed)
+        },
+        |(q, k, v, lens, workers, seed)| {
+            let ctx = ExecCtx::with_par_rows(WorkerPool::new(*workers), 1);
+            let dv = v.cols;
+            for var in all_variants() {
+                let kernel = kernel_for(&var);
+                let batch =
+                    AttnBatch::new(q, k, v, *seed).with_lens(lens);
+                let out = kernel.solve_batch(&batch, &ctx);
+                for s in 0..q.slices() {
+                    let l = lens[s / q.heads];
+                    // the unpadded single-slice run on this slice's
+                    // PRNG stream is the ground truth
+                    let mut rng_s =
+                        crate::prng::slice_stream(*seed, s as u64);
+                    let (qs, ks, vs) =
+                        (q.slice_valid(s, l), k.slice_valid(s, l),
+                         v.slice_valid(s, l));
+                    let want = kernel.solve(
+                        &AttnProblem::new(&qs, &ks, &vs), &mut rng_s,
+                        &ExecCtx::sequential());
+                    let got = out.slice_matrix(s);
+                    let bits_match = got.data[..l * dv]
+                        .iter()
+                        .zip(&want.data)
+                        .all(|(a, b)| a.to_bits() == b.to_bits());
+                    if !bits_match {
+                        return Err(format!(
+                            "{} slice {s} (len {l}) diverged from its \
+                             unpadded run", var.name()));
+                    }
+                    if got.data[l * dv..].iter().any(|&x| x != 0.0) {
+                        return Err(format!(
+                            "{} slice {s} padded rows not zero",
+                            var.name()));
+                    }
                 }
             }
             Ok(())
@@ -167,10 +300,10 @@ fn prop_blocked_gemm_is_bit_identical_to_naive() {
 type GatewayReq = (Vec<f32>, Vec<f32>, Vec<f32>, usize);
 
 #[test]
-fn prop_gateway_cobatch_is_bit_identical_to_sequential_padded_run() {
+fn prop_gateway_cobatch_on_ragged_traces_matches_unpadded_compute() {
     const N: usize = 32;
     forall(
-        "gateway co-batch ≡ run_batch_seq over the padded batch",
+        "gateway co-batch ≡ unpadded per-request compute (masked)",
         0x6A7E3A1D,
         4,
         |rng| {
@@ -181,7 +314,7 @@ fn prop_gateway_cobatch_is_bit_identical_to_sequential_padded_run() {
             let n_req = 2 + rng.below(2); // 2..=3
             let reqs: Vec<GatewayReq> = (0..n_req)
                 .map(|_| {
-                    let len = 1 + rng.below(N); // 1..=N
+                    let len = 1 + rng.below(N); // 1..=N, ragged
                     (rng.normal_vec(shape.qk_len(len)),
                      rng.normal_vec(shape.qk_len(len)),
                      rng.normal_vec(shape.v_len(len)),
@@ -205,6 +338,7 @@ fn prop_gateway_cobatch_is_bit_identical_to_sequential_padded_run() {
                     route_up: false,
                     // exercise intra-slice parallelism on the live path
                     par_rows: 1,
+                    mask: true,
                 },
             )
             .map_err(|e| format!("gateway start: {e}"))?;
@@ -222,7 +356,8 @@ fn prop_gateway_cobatch_is_bit_identical_to_sequential_padded_run() {
                             .expect("gateway reply"))
                 .collect();
 
-            // reference: sequential loop over the identically padded batch
+            // reference 1: the sequential loop over the identically
+            // padded descriptor (lens attached)
             let blocks = |sel: fn(&GatewayReq) -> (&[f32], usize)| {
                 reqs.iter().map(sel).collect::<Vec<_>>()
             };
@@ -232,11 +367,13 @@ fn prop_gateway_cobatch_is_bit_identical_to_sequential_padded_run() {
                               shape.dk);
             let v = pad_batch(&blocks(|r| (&r.2, r.3)), shape.heads, N,
                               shape.dv);
-            let want = run_batch_seq(
-                kernel_by_name(kernel).expect("kernel").as_ref(), &q, &k,
-                &v, *seed);
+            let lens: Vec<usize> = reqs.iter().map(|r| r.3).collect();
+            let resolved = kernel_by_name(kernel).expect("kernel");
+            let want = solve_batch_seq(
+                resolved.as_ref(),
+                &AttnBatch::new(&q, &k, &v, *seed).with_lens(&lens));
 
-            for (slot, (resp, (_, _, _, len))) in
+            for (slot, (resp, (rq, rk, rv, len))) in
                 responses.iter().zip(reqs).enumerate()
             {
                 if resp.batch_occupancy != reqs.len() {
@@ -244,14 +381,29 @@ fn prop_gateway_cobatch_is_bit_identical_to_sequential_padded_run() {
                         "batch composition changed: occupancy {} != {}",
                         resp.batch_occupancy, reqs.len()));
                 }
+                if !resp.masked {
+                    return Err("response not flagged masked".into());
+                }
                 let want_rows = valid_rows(&want, slot, *len);
-                let same = resp.out.len() == want_rows.len()
-                    && resp.out.iter().zip(&want_rows)
-                        .all(|(a, b)| a.to_bits() == b.to_bits());
-                if !same {
+                let same = |a: &[f32], b: &[f32]| {
+                    a.len() == b.len()
+                        && a.iter().zip(b)
+                            .all(|(x, y)| x.to_bits() == y.to_bits())
+                };
+                if !same(&resp.out, &want_rows) {
                     return Err(format!(
                         "{kernel}: slot {slot} (len {len}) diverged from \
-                         the sequential padded run"));
+                         the sequential masked run"));
+                }
+                // reference 2: the fully-unpadded computation of this
+                // request — no padded tensor anywhere in the reference
+                let unpadded = unpadded_reference(
+                    resolved.as_ref(), *shape, *seed, slot, rq, rk, rv,
+                    *len);
+                if !same(&resp.out, &unpadded) {
+                    return Err(format!(
+                        "{kernel}: slot {slot} (len {len}) diverged from \
+                         the unpadded computation"));
                 }
             }
             gw.shutdown();

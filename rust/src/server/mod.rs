@@ -9,7 +9,15 @@
 //! Native attention ([`serve_gateway`], over [`ServingGateway`]):
 //!   request : {"id": 1, "len": N, "q": [f32...], "k": [...], "v": [...]}
 //!   response: {"id": 1, "out": [f32...], "bucket_n": 128,
-//!              "latency_us": 1234, "batch_occupancy": 3}
+//!              "masked": true, "latency_us": 1234,
+//!              "batch_occupancy": 3}
+//!
+//! `len` is the request's true (valid) length: the gateway pads the
+//! tensors up to its bucket and, with masking on (the default), `out`
+//! is bit-identical to computing the unpadded request — `"masked":
+//! true` in the response asserts exactly that.  `"masked": false`
+//! means the gateway was started with static-shape semantics
+//! (`GatewayOptions { mask: false, … }`) and padded keys participated.
 //!
 //! Either endpoint replies {"id": ..., "error": "..."} on a bad request
 //! (including backpressure surfaced from the engine; `id` is 0 when the
@@ -178,6 +186,7 @@ fn handle_attn_request(req: &Value, gateway: &ServingGateway)
         ("out", Value::Arr(
             resp.out.iter().map(|&x| Value::Num(x as f64)).collect())),
         ("bucket_n", (resp.bucket_seq_len as i64).into()),
+        ("masked", resp.masked.into()),
         ("latency_us", (resp.total_time.as_micros() as i64).into()),
         ("batch_occupancy", (resp.batch_occupancy as i64).into()),
     ]))
@@ -222,6 +231,11 @@ impl Client {
     }
 
     /// Send one (H, len, D) attention request to the gateway endpoint.
+    ///
+    /// `len` is the request's true valid length — the gateway buckets
+    /// and pads internally, and with masking on (the default) the
+    /// reply's `out` is bit-identical to computing the unpadded
+    /// request (`"masked": true` in the reply confirms it).
     pub fn attend(&mut self, id: i64, q: &[f32], k: &[f32], v: &[f32],
                   len: usize) -> Result<Value> {
         let arr = |xs: &[f32]| Value::Arr(

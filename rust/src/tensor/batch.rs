@@ -8,6 +8,15 @@
 //! [`BatchMatrix::slices_mut`].  [`MatrixView`] is the read-side seam for
 //! a future kernel API that borrows slices instead of copying them.
 //!
+//! **Ragged views.**  Serving pads variable-length sequences up to a
+//! bucket length, so a slice often carries only `len < N` valid rows —
+//! always the *leading* rows (`coordinator::pad_batch` zero-fills the
+//! tail).  [`BatchMatrix::view_valid`] / [`BatchMatrix::slice_valid`]
+//! expose exactly that prefix; because rows are contiguous, the valid
+//! prefix of a padded slice is bit-for-bit the unpadded sequence, which
+//! is what makes length-masked kernel runs exactly equal to unpadded
+//! runs (see `attention::AttnProblem`).
+//!
 //! The flat layout is what the exec pool parallelizes over: slices are
 //! independent, so (batch × head) is an embarrassingly parallel axis, and
 //! the per-slice PRNG stream contract (`prng::slice_stream`) keeps the
@@ -117,6 +126,30 @@ impl BatchMatrix {
             cols: self.cols,
             data: self.data[s * len..(s + 1) * len].to_vec(),
         }
+    }
+
+    /// Zero-copy view of the first `valid` rows of slice `s` — the
+    /// ragged-serving view: rows are contiguous, so the valid prefix of
+    /// a bucket-padded slice *is* the unpadded sequence.
+    #[inline]
+    pub fn view_valid(&self, s: usize, valid: usize) -> MatrixView<'_> {
+        assert!(valid <= self.rows,
+                "valid len {valid} exceeds slice rows {}", self.rows);
+        let off = s * self.slice_len();
+        MatrixView {
+            rows: valid,
+            cols: self.cols,
+            data: &self.data[off..off + valid * self.cols],
+        }
+    }
+
+    /// Owned copy of the first `valid` rows of slice `s` — the ragged
+    /// sibling of [`BatchMatrix::slice_matrix`], which copies only the
+    /// valid rows (`attention::AttentionKernel::solve_batch` resolves
+    /// per-sequence lengths through this, so padded rows are never even
+    /// copied, let alone computed).
+    pub fn slice_valid(&self, s: usize, valid: usize) -> Matrix {
+        self.view_valid(s, valid).to_matrix()
     }
 
     /// Mutable flat storage of slice `s`.
@@ -248,6 +281,29 @@ mod tests {
         for r in 0..5 {
             assert_eq!(bm.view(1).row(r), m.row(r));
         }
+    }
+
+    #[test]
+    fn valid_views_are_the_leading_rows_of_a_slice() {
+        let mut rng = Xoshiro256::new(5);
+        let bm = BatchMatrix::randn(2, 2, 6, 3, &mut rng);
+        for s in 0..bm.slices() {
+            let full = bm.slice_matrix(s);
+            for valid in [0, 1, 4, 6] {
+                let m = bm.slice_valid(s, valid);
+                assert_eq!((m.rows, m.cols), (valid, 3));
+                assert_eq!(m.data, full.data[..valid * 3], "slice {s}");
+                assert_eq!(bm.view_valid(s, valid).to_matrix(), m);
+            }
+            // full-length valid view is exactly slice_matrix
+            assert!(bm.slice_valid(s, 6).bit_identical(&full));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "valid len")]
+    fn valid_view_past_the_slice_panics() {
+        BatchMatrix::zeros(1, 1, 4, 2).view_valid(0, 5);
     }
 
     #[test]

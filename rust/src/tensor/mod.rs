@@ -99,6 +99,21 @@ impl Matrix {
             .fold(0.0, f32::max)
     }
 
+    /// Owned copy of the first `rows` rows — the "valid prefix" of a
+    /// bucket-padded sequence (rows are contiguous in row-major storage,
+    /// so the prefix of a padded matrix *is* the unpadded matrix).  The
+    /// ragged-serving substrate `attention::AttnProblem` masks through
+    /// exactly this view.
+    pub fn row_prefix(&self, rows: usize) -> Matrix {
+        assert!(rows <= self.rows,
+                "row_prefix of {rows} rows from a {}-row matrix", self.rows);
+        Matrix {
+            rows,
+            cols: self.cols,
+            data: self.data[..rows * self.cols].to_vec(),
+        }
+    }
+
     /// Exact bitwise equality — the check behind the compute-core
     /// determinism contract (the single-slice sibling of
     /// [`BatchMatrix::bit_identical`]).
@@ -258,6 +273,24 @@ mod tests {
         // ties spanning the selection boundary stay stable too
         let xs = vec![1.0, 5.0, 5.0, 5.0, 0.0];
         assert_eq!(topk_indices(&xs, 2), vec![1, 2]);
+    }
+
+    #[test]
+    fn row_prefix_is_the_leading_rows_verbatim() {
+        let mut rng = Xoshiro256::new(9);
+        let m = Matrix::randn(6, 3, &mut rng);
+        let p = m.row_prefix(4);
+        assert_eq!((p.rows, p.cols), (4, 3));
+        assert_eq!(p.data, m.data[..12]);
+        // degenerate prefixes: everything and nothing
+        assert!(m.row_prefix(6).bit_identical(&m));
+        assert_eq!(m.row_prefix(0).data, Vec::<f32>::new());
+    }
+
+    #[test]
+    #[should_panic(expected = "row_prefix")]
+    fn row_prefix_past_the_end_panics() {
+        Matrix::zeros(2, 2).row_prefix(3);
     }
 
     #[test]

@@ -1,15 +1,18 @@
 //! Integration: the multi-bucket native serving gateway end-to-end —
-//! routing, padding, per-bucket batching, metrics — and its TCP JSON
-//! endpoint.  Fully native: needs no compiled artifacts.
+//! routing, padding, valid-length masking, per-bucket batching,
+//! metrics — and its TCP JSON endpoint.  Fully native: needs no
+//! compiled artifacts.
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc};
 use std::time::Duration;
 
+use clustered_transformers::attention::kernel_by_name;
 use clustered_transformers::coordinator::{
-    replay_blocking, synthetic_trace, Bucket, GatewayOptions, GatewayShape,
-    ServingGateway,
+    replay_blocking, synthetic_trace, unpadded_reference, Bucket,
+    GatewayOptions, GatewayShape, ServingGateway,
 };
+use clustered_transformers::prng::Xoshiro256;
 use clustered_transformers::server;
 
 const SHAPE: GatewayShape = GatewayShape { heads: 2, dk: 8, dv: 8 };
@@ -61,6 +64,66 @@ fn mixed_length_trace_lands_in_the_right_buckets() {
 }
 
 #[test]
+fn ragged_cobatch_responses_equal_the_unpadded_computation() {
+    // the masking acceptance criterion, end-to-end: three staggered
+    // ragged requests co-batched into one N=32 bucket flush must each
+    // come back bit-identical to computing the request UNPADDED —
+    // through the live threaded gateway (queues, batcher, shared pool)
+    let seed = 23;
+    let gw = ServingGateway::start(
+        SHAPE,
+        vec![Bucket::native("i-clustered-4", 32, 3)],
+        GatewayOptions {
+            max_wait: Duration::from_secs(10), // size trigger forms batch
+            queue_capacity: 4,
+            workers: 4,
+            seed,
+            ..GatewayOptions::default()
+        },
+    )
+    .unwrap();
+    let lens = [7usize, 19, 32];
+    let mut rng = Xoshiro256::new(1);
+    let reqs: Vec<(Vec<f32>, Vec<f32>, Vec<f32>, usize)> = lens
+        .iter()
+        .map(|&len| {
+            (rng.normal_vec(SHAPE.qk_len(len)),
+             rng.normal_vec(SHAPE.qk_len(len)),
+             rng.normal_vec(SHAPE.v_len(len)),
+             len)
+        })
+        .collect();
+    let rxs: Vec<_> = reqs
+        .iter()
+        .map(|(q, k, v, len)| {
+            gw.submit_blocking(q.clone(), k.clone(), v.clone(), *len)
+                .unwrap()
+        })
+        .collect();
+    let kernel = kernel_by_name("i-clustered-4").unwrap();
+    for (slot, (rx, (q, k, v, len))) in
+        rxs.into_iter().zip(&reqs).enumerate()
+    {
+        let resp = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+        assert_eq!(resp.batch_occupancy, 3, "requests were not co-batched");
+        assert!(resp.masked);
+        assert_eq!(resp.len, *len);
+        let want = unpadded_reference(kernel.as_ref(), SHAPE, seed, slot,
+                                      q, k, v, *len);
+        assert_eq!(resp.out.len(), want.len());
+        assert!(resp.out.iter().zip(&want)
+                    .all(|(a, b)| a.to_bits() == b.to_bits()),
+                "slot {slot} (len {len}) diverged from unpadded compute");
+    }
+    // masked flushes execute only valid rows: compute waste is zero,
+    // the saved fraction is exactly the memory padding
+    let m = &gw.bucket_metrics()[0];
+    assert_eq!(m.compute_waste(), 0.0);
+    assert!((m.compute_saved() - m.padding_waste()).abs() < 1e-12);
+    gw.shutdown();
+}
+
+#[test]
 fn tcp_gateway_round_trips_attention_requests() {
     let gw = Arc::new(gateway());
     let stop = Arc::new(AtomicBool::new(false));
@@ -83,6 +146,7 @@ fn tcp_gateway_round_trips_attention_requests() {
     let reply = client.attend(7, &q, &k, &v, len).unwrap();
     assert_eq!(reply.get("id").as_i64(), Some(7));
     assert_eq!(reply.get("bucket_n").as_i64(), Some(32));
+    assert_eq!(reply.get("masked").as_bool(), Some(true));
     assert_eq!(reply.get("out").as_arr().unwrap().len(),
                SHAPE.v_len(len));
     assert!(reply.get("latency_us").as_i64().unwrap() > 0);
