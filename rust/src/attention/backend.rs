@@ -16,11 +16,13 @@
 //!   lowered.
 //!
 //! [`AttentionBackend`] is deliberately tiny — one execute method over
-//! the descriptor — because the descriptor is where options grow.  It
-//! is the landing zone for cross-request KV caching (a cache handle on
-//! the descriptor, a caching backend wrapping a native one) and for
-//! sharding across hosts (a fan-out backend splitting the batch axis):
-//! neither needs to touch a kernel signature.
+//! the descriptor — because the descriptor is where options grow.
+//! Cross-request KV caching landed exactly this way: cache handles
+//! ride the descriptor (`AttnBatch::sessions`) and
+//! [`super::CachingBackend`] wraps any implementation of this trait
+//! without touching a kernel signature.  Sharding across hosts (a
+//! fan-out backend splitting the batch axis) is the remaining
+//! direction.
 
 use crate::exec::ExecCtx;
 use crate::tensor::batch::BatchMatrix;

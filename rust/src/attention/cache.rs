@@ -1,0 +1,1125 @@
+//! The incremental-decode subsystem: a per-session KV-panel store
+//! ([`KvCache`]) and a [`CachingBackend`] that wraps any
+//! [`AttentionBackend`] with cross-request KV caching.
+//!
+//! ## The decode problem
+//!
+//! Autoregressive traffic submits the *same growing history* step after
+//! step: a prefill of `p` rows, then steps that each add a few rows and
+//! need attention for only those new rows — over **all** rows seen so
+//! far.  Without a cache every step is a full O(N²) recompute.  With
+//! one, the step appends its new K/V rows to the session's cached
+//! panels and solves only the incremental query span, which for the
+//! row-independent families is O(m·N).
+//!
+//! ## The correctness contract
+//!
+//! > A cached incremental step is **bit-for-bit identical** to
+//! > recomputing the full unpadded history through the wrapped backend
+//! > with the session's PRNG streams
+//! > (`slice_stream(session_seed(seed, sid), head)`), restricted to the
+//! > span rows.
+//!
+//! Nothing about the cache is approximate by default.  The mechanisms,
+//! per family:
+//!
+//! - **full / shared-full / oracle-top** — per-query-row independence:
+//!   the kernels' `query_span` path streams only the new rows against
+//!   every cached key (shared-full's keys are the cached *query*
+//!   history, which is why the store keeps Q panels too).
+//! - **clustered** — the kernel's span path re-clusters the full query
+//!   history (same RNG draws as a full solve) and runs the centroid
+//!   pass only for the clusters the span touches.
+//! - **improved / lsh** — rows couple through shared state, so the
+//!   exact span is a full recompute with span extraction.
+//! - Any **miss** (no entry, evicted entry, stale generation, desynced
+//!   length, zero-capacity store) falls back to the wrapped backend on
+//!   the full descriptor and repopulates the cache — identical by
+//!   construction.
+//!
+//! ## Frozen-model reuse (the growth threshold)
+//!
+//! Re-clustering every step costs O(N) hashing + Lloyd work per step.
+//! With `KvCacheOptions::growth > 1.0` the clustered families freeze
+//! their clustering model (LSH projections, Hamming centroids, real
+//! centroids) at the last re-cluster and, while
+//! `len <= growth · clustered_len`, assign only the *new* queries to
+//! the frozen centroids and attend through the affected clusters —
+//! O(m·C + |affected|·N·D) per step.  Reused steps are deterministic
+//! (bit-identical for any worker count) but **approximate** relative to
+//! a fresh clustering, in exactly the way clustered attention is
+//! approximate relative to full attention; the step that crosses the
+//! threshold re-clusters and is exact again.  The default
+//! (`growth = 1.0`) re-clusters every step: exactness everywhere.
+//!
+//! Capacity is accounted in cached *sequence rows* (`Σ session len`);
+//! eviction is LRU by last touch.  A zero-capacity store caches
+//! nothing, so every step recomputes — the always-miss degenerate that
+//! the fallback contract keeps bit-identical.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::clustering::{assign_nearest, hamming_kmeans_model_ctx, Lsh};
+use crate::exec::ExecCtx;
+use crate::prng::{session_seed, slice_stream};
+use crate::tensor::batch::BatchMatrix;
+use crate::tensor::{axpy, dot, softmax_inplace, topk_indices, Matrix};
+
+use super::backend::{AttentionBackend, NativeBackend};
+use super::clustered::{centroids, clustered_span_attention_ctx};
+use super::improved::improved_clustered_attention_ctx;
+use super::problem::{AttnBatch, AttnProblem, CacheRef};
+use super::{kernel_for, AttentionKernel, Variant};
+
+/// KV-cache sizing and re-cluster policy.
+#[derive(Debug, Clone, Copy)]
+pub struct KvCacheOptions {
+    /// Maximum cached sequence rows summed over sessions (`Σ len`).
+    /// `0` caches nothing (every step misses and recomputes).
+    pub capacity_rows: usize,
+    /// Clustered-family re-cluster threshold: reuse the frozen
+    /// clustering while `len <= growth · clustered_len`.  `1.0` (the
+    /// default) re-clusters every step — exact everywhere; values
+    /// above 1.0 trade exactness between re-clusters for O(m) steps.
+    pub growth: f64,
+}
+
+impl Default for KvCacheOptions {
+    fn default() -> Self {
+        Self { capacity_rows: usize::MAX, growth: 1.0 }
+    }
+}
+
+/// Cache traffic counters (atomic; shared across buckets).
+#[derive(Debug, Default)]
+pub struct CacheCounters {
+    pub hits: AtomicU64,
+    pub misses: AtomicU64,
+    /// Sessions dropped to make room (LRU) or because they outgrew the
+    /// capacity.
+    pub evictions: AtomicU64,
+    /// New rows appended on hits.
+    pub appended_rows: AtomicU64,
+    /// Prefix rows *not* recomputed thanks to hits (`Σ span_start`).
+    pub reused_rows: AtomicU64,
+    /// Rows recomputed on misses (`Σ len`).
+    pub recomputed_rows: AtomicU64,
+}
+
+impl CacheCounters {
+    /// Hits over lookups, in [0, 1] (0 when no lookup happened).
+    pub fn hit_rate(&self) -> f64 {
+        let h = self.hits.load(Ordering::Relaxed) as f64;
+        let m = self.misses.load(Ordering::Relaxed) as f64;
+        if h + m == 0.0 { 0.0 } else { h / (h + m) }
+    }
+}
+
+/// Frozen clustering model of one (session, head) slice — everything a
+/// reused step needs to assign new queries and attend through their
+/// clusters without re-running LSH + Lloyd on the history.
+#[derive(Debug, Clone)]
+pub(crate) struct HeadModel {
+    bits: usize,
+    /// LSH projection directions (bits × Dk) of the last re-cluster.
+    proj: Matrix,
+    /// Packed Hamming centroids (C × words_per_code) — new queries
+    /// assign against these.
+    cent_codes: Vec<u64>,
+    /// Real-space centroids (C × Dk) — the frozen attention queries.
+    cent_real: Matrix,
+}
+
+/// One session's cached state: per-head appended Q/K/V panels (the Q
+/// panel is the key history of shared-QK families and the re-cluster
+/// input of the clustered ones) plus the optional frozen clustering.
+struct SessionEntry {
+    generation: u64,
+    heads: usize,
+    dk: usize,
+    dv: usize,
+    /// Cached history rows (every panel has exactly this many rows).
+    len: usize,
+    last_used: u64,
+    q: Vec<Matrix>,
+    k: Vec<Matrix>,
+    v: Vec<Matrix>,
+    model: Option<Vec<HeadModel>>,
+    /// History length at the last re-cluster (0 = never clustered).
+    clustered_len: usize,
+}
+
+struct Store {
+    sessions: HashMap<u64, SessionEntry>,
+    used_rows: usize,
+    clock: u64,
+}
+
+/// Everything a hit hands the backend: the full panels (cloned out of
+/// the store so the lock is not held across the solve) and the frozen
+/// model when this step may reuse it.
+pub(crate) struct HitData {
+    pub q: Vec<Matrix>,
+    pub k: Vec<Matrix>,
+    pub v: Vec<Matrix>,
+    pub model: Option<Vec<HeadModel>>,
+    pub reuse: bool,
+}
+
+/// Per-session, per-head appended K/V (and Q) panel store with
+/// capacity + LRU-eviction accounting.  See the module docs for the
+/// correctness contract; [`CachingBackend`] is the consumer.
+pub struct KvCache {
+    opts: KvCacheOptions,
+    store: Mutex<Store>,
+    counters: CacheCounters,
+}
+
+impl KvCache {
+    pub fn new(opts: KvCacheOptions) -> Self {
+        Self {
+            opts,
+            store: Mutex::new(Store {
+                sessions: HashMap::new(),
+                used_rows: 0,
+                clock: 0,
+            }),
+            counters: CacheCounters::default(),
+        }
+    }
+
+    /// Unbounded store with the exact (re-cluster-every-step) policy.
+    pub fn unbounded() -> Self {
+        Self::new(KvCacheOptions::default())
+    }
+
+    /// Bounded store with the exact policy.
+    pub fn with_capacity(capacity_rows: usize) -> Self {
+        Self::new(KvCacheOptions { capacity_rows,
+                                   ..KvCacheOptions::default() })
+    }
+
+    pub fn options(&self) -> KvCacheOptions {
+        self.opts
+    }
+
+    pub fn counters(&self) -> &CacheCounters {
+        &self.counters
+    }
+
+    /// Cached sequence rows currently held (`Σ session len`).
+    pub fn used_rows(&self) -> usize {
+        self.store.lock().unwrap().used_rows
+    }
+
+    /// Cached length of a session — `None` unless the entry exists
+    /// *and* the generation matches (a stale handle sees nothing).
+    pub fn session_len(&self, r: CacheRef) -> Option<usize> {
+        let store = self.store.lock().unwrap();
+        store
+            .sessions
+            .get(&r.session)
+            .filter(|e| e.generation == r.generation)
+            .map(|e| e.len)
+    }
+
+    /// Drop a session's cached state (e.g. the gateway ended it).
+    pub fn invalidate(&self, session: u64) {
+        let mut store = self.store.lock().unwrap();
+        if let Some(e) = store.sessions.remove(&session) {
+            store.used_rows -= e.len;
+        }
+    }
+
+    /// Evict LRU sessions (preferring ones other than `keep`) until the
+    /// store fits its capacity.  May evict `keep` itself as a last
+    /// resort — callers clone what they need before calling this.
+    fn evict_until_fits(&self, store: &mut Store, keep: u64) {
+        while store.used_rows > self.opts.capacity_rows {
+            let victim = store
+                .sessions
+                .iter()
+                .filter(|(id, _)| **id != keep)
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(id, _)| *id)
+                .or_else(|| store.sessions.contains_key(&keep)
+                            .then_some(keep));
+            let Some(id) = victim else { break };
+            let e = store.sessions.remove(&id).unwrap();
+            store.used_rows -= e.len;
+            self.counters.evictions.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// One decode step's cache transaction: on a usable entry (same
+    /// generation, cached length == `span_start`, same geometry) append
+    /// the new rows and return the full panels; anything else is a miss
+    /// (stale entries are dropped so they can never alias).
+    ///
+    /// The panels are *cloned* under the store lock so the solve never
+    /// holds it: an O(len·D) memcpy per step, which is cheap next to
+    /// the O(len·D) FLOPs of even the incremental solve but does
+    /// serialize concurrent steps on the lock for its duration —
+    /// Arc-shared append-only segments are the known follow-up if that
+    /// ever shows up in a profile (see ROADMAP).
+    pub(crate) fn step(&self, r: CacheRef, heads: usize, dk: usize,
+                       dv: usize, span_start: usize, new_q: &[Matrix],
+                       new_k: &[Matrix], new_v: &[Matrix])
+                       -> Option<HitData> {
+        if self.opts.capacity_rows == 0 || span_start == 0 {
+            self.counters.misses.fetch_add(1, Ordering::Relaxed);
+            return None;
+        }
+        let mut store = self.store.lock().unwrap();
+        store.clock += 1;
+        let tick = store.clock;
+        let usable = store.sessions.get(&r.session).is_some_and(|e| {
+            e.generation == r.generation
+                && e.len == span_start
+                && (e.heads, e.dk, e.dv) == (heads, dk, dv)
+        });
+        if !usable {
+            // a mismatched entry must never alias: drop it now, the
+            // recompute path repopulates under the caller's handle
+            if let Some(e) = store.sessions.remove(&r.session) {
+                store.used_rows -= e.len;
+            }
+            self.counters.misses.fetch_add(1, Ordering::Relaxed);
+            return None;
+        }
+        let m = new_q[0].rows;
+        let e = store.sessions.get_mut(&r.session).unwrap();
+        for h in 0..heads {
+            e.q[h].data.extend_from_slice(&new_q[h].data);
+            e.q[h].rows += m;
+            e.k[h].data.extend_from_slice(&new_k[h].data);
+            e.k[h].rows += m;
+            e.v[h].data.extend_from_slice(&new_v[h].data);
+            e.v[h].rows += m;
+        }
+        e.len += m;
+        e.last_used = tick;
+        let reuse = e.model.is_some()
+            && e.len as f64 <= self.opts.growth * e.clustered_len as f64;
+        let hit = HitData {
+            q: e.q.clone(),
+            k: e.k.clone(),
+            v: e.v.clone(),
+            model: if reuse { e.model.clone() } else { None },
+            reuse,
+        };
+        store.used_rows += m;
+        self.counters.hits.fetch_add(1, Ordering::Relaxed);
+        self.counters
+            .appended_rows
+            .fetch_add(m as u64, Ordering::Relaxed);
+        self.counters
+            .reused_rows
+            .fetch_add(span_start as u64, Ordering::Relaxed);
+        self.evict_until_fits(&mut store, r.session);
+        Some(hit)
+    }
+
+    /// Store a freshly recomputed session history (the miss path).
+    pub(crate) fn populate(&self, r: CacheRef, heads: usize, dk: usize,
+                           dv: usize, q: Vec<Matrix>, k: Vec<Matrix>,
+                           v: Vec<Matrix>) {
+        if self.opts.capacity_rows == 0 {
+            return;
+        }
+        let len = q[0].rows;
+        let mut store = self.store.lock().unwrap();
+        store.clock += 1;
+        let tick = store.clock;
+        if let Some(e) = store.sessions.remove(&r.session) {
+            store.used_rows -= e.len;
+        }
+        if len > self.opts.capacity_rows {
+            // the session alone exceeds the store: cannot cache it
+            self.counters.evictions.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        store.used_rows += len;
+        store.sessions.insert(r.session, SessionEntry {
+            generation: r.generation,
+            heads,
+            dk,
+            dv,
+            len,
+            last_used: tick,
+            q,
+            k,
+            v,
+            model: None,
+            clustered_len: 0,
+        });
+        self.evict_until_fits(&mut store, r.session);
+    }
+
+    /// Attach a freshly computed clustering model (the re-cluster
+    /// path).  Silently dropped if the entry vanished in between.
+    pub(crate) fn store_model(&self, r: CacheRef, models: Vec<HeadModel>,
+                              clustered_len: usize) {
+        let mut store = self.store.lock().unwrap();
+        if let Some(e) = store.sessions.get_mut(&r.session) {
+            if e.generation == r.generation && e.len == clustered_len {
+                e.model = Some(models);
+                e.clustered_len = clustered_len;
+            }
+        }
+    }
+}
+
+/// What happened to one sequence of a [`CachingBackend`] execution.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SeqOutcome {
+    /// Not a session sequence — rode the wrapped backend unchanged.
+    Bypass,
+    /// Cached prefix found: the cache transaction appended only the
+    /// new rows.
+    Hit {
+        /// Prefix rows the cache held (`span_start`).
+        reused_rows: usize,
+        /// Output rows the backend actually materialized for this
+        /// step: the span (`len - span_start`) for the genuinely
+        /// incremental families, the full history for the
+        /// recompute-with-extraction ones (lsh; improved on a
+        /// re-cluster step) — the honest number behind any
+        /// compute-saved metric.
+        computed_rows: usize,
+        /// Clustered families: whether this step re-clustered (`true`,
+        /// exact) or reused the frozen model (`false`).
+        reclustered: bool,
+    },
+    /// No usable cache entry: full recompute + repopulation.
+    Miss {
+        /// History rows the fallback recomputed.
+        recomputed_rows: usize,
+    },
+}
+
+/// How the backend solves a hit for this kernel family.
+enum FamilyPlan {
+    /// The kernel's own `query_span` path is exact.  `full_recompute`
+    /// is `false` for the genuinely incremental families (full,
+    /// shared-full, oracle-top: O(m·N) per step) and `true` for lsh,
+    /// whose span is a full solve with extraction — the honest
+    /// accounting behind [`SeqOutcome::Hit::computed_rows`].
+    Span { full_recompute: bool },
+    /// Clustered families: the backend owns the clustering so it can
+    /// freeze and reuse it across steps.
+    ClusterModel {
+        clusters: usize,
+        bits: usize,
+        iters: usize,
+        /// `Some` for improved clustered (its top-k refinement).
+        topk: Option<usize>,
+    },
+}
+
+fn plan_for(variant: &Variant) -> FamilyPlan {
+    match *variant {
+        Variant::Clustered { clusters, bits, iters } => {
+            FamilyPlan::ClusterModel { clusters, bits, iters, topk: None }
+        }
+        Variant::ImprovedClustered { clusters, bits, iters, topk } => {
+            FamilyPlan::ClusterModel { clusters, bits, iters,
+                                       topk: Some(topk) }
+        }
+        Variant::Lsh { .. } => FamilyPlan::Span { full_recompute: true },
+        _ => FamilyPlan::Span { full_recompute: false },
+    }
+}
+
+/// Owned copy of rows `r0..r1` of batch slice `s`.
+fn seq_rows(t: &BatchMatrix, s: usize, r0: usize, r1: usize) -> Matrix {
+    let vw = t.view(s);
+    Matrix {
+        rows: r1 - r0,
+        cols: t.cols,
+        data: vw.data[r0 * t.cols..r1 * t.cols].to_vec(),
+    }
+}
+
+/// Gather a subset of sequences into a dense sub-batch (slice order).
+fn gather(t: &BatchMatrix, idx: &[usize]) -> BatchMatrix {
+    let mut out = BatchMatrix::zeros(idx.len(), t.heads, t.rows, t.cols);
+    for (pos, &b) in idx.iter().enumerate() {
+        for h in 0..t.heads {
+            out.slice_mut(pos * t.heads + h)
+                .copy_from_slice(t.view(b * t.heads + h).data);
+        }
+    }
+    out
+}
+
+/// Cross-request KV caching over any [`AttentionBackend`].
+///
+/// Sequences without a [`SessionRef`] ride the wrapped backend as one
+/// sub-batch (an all-plain flush is bit-identical to the uncached
+/// path).  Session sequences resolve through the [`KvCache`]: hits
+/// solve only the incremental span against the cached panels, misses
+/// recompute the full history through the wrapped backend and
+/// repopulate.  Either way the span rows equal the full unpadded
+/// recompute bit-for-bit (module docs).
+///
+/// [`SessionRef`]: super::problem::SessionRef
+///
+/// ```
+/// use std::sync::Arc;
+/// use clustered_transformers::attention::{AttentionBackend,
+///                                         CachingBackend, KvCache};
+///
+/// let cache = Arc::new(KvCache::unbounded());
+/// let backend = CachingBackend::native("full", cache).unwrap();
+/// assert_eq!(backend.backend_name(), "cached:native:full");
+/// ```
+pub struct CachingBackend {
+    inner: Box<dyn AttentionBackend>,
+    kernel: Box<dyn AttentionKernel>,
+    plan: FamilyPlan,
+    cache: Arc<KvCache>,
+}
+
+impl CachingBackend {
+    /// Wrap `inner` with caching for the named kernel family (the name
+    /// tells the backend which incremental strategy is exact).
+    pub fn wrap(inner: Box<dyn AttentionBackend>, kernel: &str,
+                cache: Arc<KvCache>) -> Option<Self> {
+        let variant = Variant::parse(kernel)?;
+        Some(Self {
+            inner,
+            kernel: kernel_for(&variant),
+            plan: plan_for(&variant),
+            cache,
+        })
+    }
+
+    /// Caching over the in-tree native backend.
+    pub fn native(kernel: &str, cache: Arc<KvCache>) -> Option<Self> {
+        let inner = NativeBackend::by_name(kernel)?;
+        Self::wrap(Box::new(inner), kernel, cache)
+    }
+
+    pub fn cache(&self) -> &Arc<KvCache> {
+        &self.cache
+    }
+
+    /// Execute one descriptor and report, per sequence, how the cache
+    /// treated it.  [`AttentionBackend::execute`] is this minus the
+    /// report.
+    ///
+    /// Session sequences leave rows `0..span_start` of their output
+    /// slices zero (only the span is contractual — and computed);
+    /// plain and miss sequences carry every valid row as usual.
+    pub fn execute_with_report(&self, batch: &AttnBatch<'_>,
+                               ctx: &ExecCtx)
+                               -> (BatchMatrix, Vec<SeqOutcome>) {
+        batch.validate();
+        let (q, k, v) = (batch.q, batch.k, batch.v);
+        let (bsz, heads) = (q.batch, q.heads);
+        let (dk, dv) = (q.cols, v.cols);
+        let Some(sessions) = batch.sessions else {
+            return (self.inner.execute(batch, ctx),
+                    vec![SeqOutcome::Bypass; bsz]);
+        };
+        let mut out = BatchMatrix::zeros(bsz, heads, q.rows, dv);
+        let mut outcomes = vec![SeqOutcome::Bypass; bsz];
+
+        // ordinary sequences: one sub-batch through the wrapped
+        // backend; sub-batch position keys their PRNG streams, so an
+        // all-plain flush is bit-identical to the uncached path
+        let plain: Vec<usize> =
+            (0..bsz).filter(|&b| sessions[b].is_none()).collect();
+        if !plain.is_empty() {
+            let (sq, sk, sv) =
+                (gather(q, &plain), gather(k, &plain), gather(v, &plain));
+            let lens: Option<Vec<usize>> = batch
+                .lens
+                .map(|ls| plain.iter().map(|&b| ls[b]).collect());
+            let mut sub = AttnBatch::new(&sq, &sk, &sv, batch.seed);
+            if let Some(ls) = lens.as_deref() {
+                sub = sub.with_lens(ls);
+            }
+            let o = self.inner.execute(&sub, ctx);
+            for (pos, &b) in plain.iter().enumerate() {
+                for h in 0..heads {
+                    out.slice_mut(b * heads + h)
+                        .copy_from_slice(o.view(pos * heads + h).data);
+                }
+            }
+        }
+
+        // session sequences: cache transaction + span solve or
+        // full-recompute fallback, per sequence
+        for b in 0..bsz {
+            let Some(sref) = sessions[b] else { continue };
+            let valid = batch.valid_len(b);
+            let span = sref.span_start;
+            let seed2 = session_seed(batch.seed, sref.cache.session);
+            let rows_of = |t: &BatchMatrix, r0: usize, r1: usize| {
+                (0..heads)
+                    .map(|h| seq_rows(t, b * heads + h, r0, r1))
+                    .collect::<Vec<Matrix>>()
+            };
+            let hit = self.cache.step(sref.cache, heads, dk, dv, span,
+                                      &rows_of(q, span, valid),
+                                      &rows_of(k, span, valid),
+                                      &rows_of(v, span, valid));
+            match hit {
+                Some(data) => {
+                    let mut reclustered = false;
+                    let mut computed = valid - span;
+                    // a frozen model is only ever consulted when
+                    // growth > 1; capturing one below that threshold
+                    // would be stored and never read
+                    let want_model = self.cache.opts.growth > 1.0;
+                    let mut models = Vec::new();
+                    for h in 0..heads {
+                        let mut rng = slice_stream(seed2, h as u64);
+                        let (qf, kf, vf) =
+                            (&data.q[h], &data.k[h], &data.v[h]);
+                        let span_out = if data.reuse {
+                            let model =
+                                &data.model.as_ref().unwrap()[h];
+                            reuse_head(model, &self.plan,
+                                       &qf.row_span(span, valid), kf, vf,
+                                       ctx)
+                        } else {
+                            match self.plan {
+                                FamilyPlan::Span { full_recompute } => {
+                                    if full_recompute {
+                                        computed = valid;
+                                    }
+                                    self.kernel
+                                        .solve(&AttnProblem::new(qf, kf,
+                                                                 vf)
+                                               .with_query_span(span),
+                                               &mut rng, ctx)
+                                        .row_span(span, valid)
+                                }
+                                FamilyPlan::ClusterModel {
+                                    clusters, bits, iters, topk,
+                                } => {
+                                    reclustered = true;
+                                    if topk.is_some() {
+                                        // improved re-cluster = full
+                                        // solve + span extraction
+                                        computed = valid;
+                                    }
+                                    let (o, m) = recluster_head(
+                                        clusters, bits, iters, topk, qf,
+                                        kf, vf, span, want_model,
+                                        &mut rng, ctx);
+                                    if let Some(m) = m {
+                                        models.push(m);
+                                    }
+                                    o
+                                }
+                            }
+                        };
+                        let dst = out.slice_mut(b * heads + h);
+                        dst[span * dv..valid * dv]
+                            .copy_from_slice(&span_out.data);
+                    }
+                    if reclustered && !models.is_empty() {
+                        self.cache.store_model(sref.cache, models, valid);
+                    }
+                    outcomes[b] = SeqOutcome::Hit {
+                        reused_rows: span,
+                        computed_rows: computed,
+                        reclustered,
+                    };
+                }
+                None => {
+                    // full recompute through the wrapped backend with
+                    // the session streams, then repopulate
+                    let fq = gather(q, &[b]);
+                    let fk = gather(k, &[b]);
+                    let fv = gather(v, &[b]);
+                    let lens = [valid];
+                    let sub = AttnBatch::new(&fq, &fk, &fv, seed2)
+                        .with_lens(&lens);
+                    let o = self.inner.execute(&sub, ctx);
+                    for h in 0..heads {
+                        out.slice_mut(b * heads + h)
+                            .copy_from_slice(o.view(h).data);
+                    }
+                    self.cache.populate(sref.cache, heads, dk, dv,
+                                        rows_of(q, 0, valid),
+                                        rows_of(k, 0, valid),
+                                        rows_of(v, 0, valid));
+                    self.cache
+                        .counters
+                        .recomputed_rows
+                        .fetch_add(valid as u64, Ordering::Relaxed);
+                    outcomes[b] = SeqOutcome::Miss {
+                        recomputed_rows: valid,
+                    };
+                }
+            }
+        }
+        (out, outcomes)
+    }
+}
+
+impl AttentionBackend for CachingBackend {
+    fn backend_name(&self) -> String {
+        format!("cached:{}", self.inner.backend_name())
+    }
+
+    fn execute(&self, batch: &AttnBatch<'_>, ctx: &ExecCtx)
+               -> BatchMatrix {
+        self.execute_with_report(batch, ctx).0
+    }
+}
+
+/// Exact re-cluster step of one head: fresh clustering over the full
+/// query history (the same LSH + Lloyd sequence — and RNG draws — a
+/// spanless kernel solve performs), the span attended through its
+/// affected clusters, and (when `want_model`, i.e. the growth policy
+/// can ever reuse it) the frozen model for later steps.
+#[allow(clippy::too_many_arguments)]
+fn recluster_head(clusters: usize, bits: usize, iters: usize,
+                  topk: Option<usize>, qf: &Matrix, kf: &Matrix,
+                  vf: &Matrix, span: usize, want_model: bool,
+                  rng: &mut crate::prng::Xoshiro256, ctx: &ExecCtx)
+                  -> (Matrix, Option<HeadModel>) {
+    let lsh = Lsh::new(qf.cols, bits, rng);
+    let codes = lsh.hash_ctx(qf, ctx);
+    let (cl, cent_codes) =
+        hamming_kmeans_model_ctx(&codes, clusters, iters, None, ctx);
+    let (span_out, cent) = match topk {
+        None => {
+            let cent = centroids(qf, &cl);
+            let o = clustered_span_attention_ctx(&cl.groups[span..],
+                                                 &cent, kf, vf, ctx);
+            (o, Some(cent))
+        }
+        Some(t) => {
+            let o = improved_clustered_attention_ctx(qf, kf, vf, &cl, t,
+                                                     ctx)
+                .row_span(span, qf.rows);
+            // the improved path computes its centroids internally —
+            // only build the frozen copy when it will ever be read
+            (o, want_model.then(|| centroids(qf, &cl)))
+        }
+    };
+    let model = match (want_model, cent) {
+        (true, Some(cent_real)) => Some(HeadModel {
+            bits,
+            proj: lsh.proj,
+            cent_codes,
+            cent_real,
+        }),
+        _ => None,
+    };
+    (span_out, model)
+}
+
+/// Frozen-model step of one head: hash the new queries with the stored
+/// projections, assign them to the stored Hamming centroids, attend
+/// through the affected clusters' frozen real centroids over the full
+/// cached keys.  Deterministic (no RNG, row-partitioned ops only), but
+/// approximate relative to a fresh clustering — see the module docs.
+fn reuse_head(model: &HeadModel, plan: &FamilyPlan, q_new: &Matrix,
+              kf: &Matrix, vf: &Matrix, ctx: &ExecCtx) -> Matrix {
+    let n_clusters = model.cent_real.rows;
+    let lsh = Lsh { bits: model.bits, proj: model.proj.clone() };
+    let codes = lsh.hash_ctx(q_new, ctx);
+    let mut groups = vec![0u32; q_new.rows];
+    assign_nearest(&codes, &model.cent_codes, n_clusters, &mut groups,
+                   ctx);
+    match plan {
+        FamilyPlan::ClusterModel { topk: Some(t), .. } => {
+            improved_reuse(&model.cent_real, *t, &groups, q_new, kf, vf)
+        }
+        _ => clustered_span_attention_ctx(&groups, &model.cent_real, kf,
+                                          vf, ctx),
+    }
+}
+
+/// Improved-clustered refinement against a frozen clustering: per
+/// affected cluster, the centroid's attention row over all keys, its
+/// top-k mass and complement basis (eqs. 9–17 with the frozen
+/// centroid), then the per-new-query top-k softmax.
+fn improved_reuse(cent: &Matrix, topk: usize, groups: &[u32],
+                  q_new: &Matrix, kf: &Matrix, vf: &Matrix) -> Matrix {
+    let (n, dv) = (kf.rows, vf.cols);
+    let scale = 1.0 / (kf.cols as f32).sqrt();
+    let mut affected: Vec<usize> =
+        groups.iter().map(|&g| g as usize).collect();
+    affected.sort_unstable();
+    affected.dedup();
+    // per affected cluster: top-k keys, captured mass, complement basis
+    let mut per_cluster: HashMap<usize, (Vec<usize>, f32, Vec<f32>)> =
+        HashMap::new();
+    let mut arow = vec![0f32; n];
+    for &j in &affected {
+        for (l, a) in arow.iter_mut().enumerate() {
+            *a = dot(cent.row(j), kf.row(l)) * scale;
+        }
+        softmax_inplace(&mut arow);
+        let idx = topk_indices(&arow, topk);
+        let mhat: f32 = idx.iter().map(|&l| arow[l]).sum();
+        let mut vb = vec![0f32; dv];
+        for (l, &a) in arow.iter().enumerate() {
+            axpy(&mut vb, a, vf.row(l));
+        }
+        for &l in &idx {
+            axpy(&mut vb, -arow[l], vf.row(l));
+        }
+        per_cluster.insert(j, (idx, mhat, vb));
+    }
+    let mut out = Matrix::zeros(q_new.rows, dv);
+    let mut dots = vec![0f32; topk];
+    for i in 0..q_new.rows {
+        let (idx, mhat, vb) = &per_cluster[&(groups[i] as usize)];
+        let t = idx.len();
+        for (slot, &l) in idx.iter().enumerate() {
+            dots[slot] = dot(q_new.row(i), kf.row(l)) * scale;
+        }
+        softmax_inplace(&mut dots[..t]);
+        let orow = out.row_mut(i);
+        orow.copy_from_slice(vb);
+        for (slot, &l) in idx.iter().enumerate() {
+            axpy(orow, dots[slot] * *mhat, vf.row(l));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::problem::SessionRef;
+    use crate::exec::WorkerPool;
+    use crate::prng::Xoshiro256;
+
+    const H: usize = 2;
+    const D: usize = 8;
+
+    fn history(n: usize, seed: u64)
+               -> (BatchMatrix, BatchMatrix, BatchMatrix) {
+        let mut rng = Xoshiro256::new(seed);
+        (BatchMatrix::randn(1, H, n, D, &mut rng),
+         BatchMatrix::randn(1, H, n, D, &mut rng),
+         BatchMatrix::randn(1, H, n, D, &mut rng))
+    }
+
+    /// Prefix of a (1, H, N, D) history as an equally tall batch whose
+    /// rows `len..` are garbage the contract must ignore.
+    fn prefix(t: &BatchMatrix, len: usize) -> BatchMatrix {
+        let mut rng = Xoshiro256::new(0xBAD);
+        let mut out =
+            BatchMatrix::randn(1, H, t.rows, t.cols, &mut rng);
+        for s in 0..t.slices() {
+            let cols = t.cols;
+            out.slice_mut(s)[..len * cols]
+                .copy_from_slice(&t.view(s).data[..len * cols]);
+        }
+        out
+    }
+
+    /// The oracle: full unpadded recompute of the history with the
+    /// session streams, per head, sliced to the span.
+    fn oracle_span(kernel: &str, q: &BatchMatrix, k: &BatchMatrix,
+                   v: &BatchMatrix, len: usize, span: usize, seed: u64,
+                   sid: u64) -> Vec<Matrix> {
+        let kern = crate::attention::kernel_by_name(kernel).unwrap();
+        let seed2 = session_seed(seed, sid);
+        (0..H)
+            .map(|h| {
+                let (qh, kh, vh) = (q.slice_valid(h, len),
+                                    k.slice_valid(h, len),
+                                    v.slice_valid(h, len));
+                let mut rng = slice_stream(seed2, h as u64);
+                kern.solve(&AttnProblem::new(&qh, &kh, &vh), &mut rng,
+                           &ExecCtx::sequential())
+                    .row_span(span, len)
+            })
+            .collect()
+    }
+
+    fn run_step(backend: &CachingBackend, q: &BatchMatrix,
+                k: &BatchMatrix, v: &BatchMatrix, len: usize,
+                span: usize, seed: u64, sid: u64, gen: u64, workers: usize)
+                -> (BatchMatrix, SeqOutcome) {
+        let (qp, kp, vp) = (prefix(q, len), prefix(k, len), prefix(v, len));
+        let lens = [len];
+        let sessions = [Some(SessionRef {
+            cache: CacheRef { session: sid, generation: gen },
+            span_start: span,
+        })];
+        let batch = AttnBatch::new(&qp, &kp, &vp, seed)
+            .with_lens(&lens)
+            .with_sessions(&sessions);
+        let ctx = if workers <= 1 {
+            ExecCtx::sequential()
+        } else {
+            ExecCtx::with_par_rows(WorkerPool::new(workers), 1)
+        };
+        let (out, rep) = backend.execute_with_report(&batch, &ctx);
+        (out, rep[0])
+    }
+
+    fn assert_span_matches(out: &BatchMatrix, want: &[Matrix],
+                           span: usize, len: usize, tag: &str) {
+        for (h, w) in want.iter().enumerate() {
+            let got = seq_rows(out, h, span, len);
+            assert!(got.bit_identical(w),
+                    "{tag}: head {h} span {span}..{len} diverged");
+        }
+    }
+
+    #[test]
+    fn incremental_steps_match_full_recompute_per_family() {
+        let n = 24;
+        let (q, k, v) = history(n, 1);
+        for kernel in ["full", "shared-full", "oracle-top-4",
+                       "clustered-3", "i-clustered-3", "lsh-1"] {
+            let cache = Arc::new(KvCache::unbounded());
+            let backend =
+                CachingBackend::native(kernel, cache.clone()).unwrap();
+            // prefill 10, then steps to 17 and 24, varied worker counts
+            let plan = [(10usize, 0usize, 1usize), (17, 10, 3), (24, 17, 2)];
+            for (i, &(len, span, workers)) in plan.iter().enumerate() {
+                let (out, outcome) = run_step(&backend, &q, &k, &v, len,
+                                              span, 7, 42, 0, workers);
+                let want = oracle_span(kernel, &q, &k, &v, len, span, 7,
+                                       42);
+                assert_span_matches(&out, &want, span, len, kernel);
+                if i == 0 {
+                    assert!(matches!(outcome,
+                                     SeqOutcome::Miss { recomputed_rows }
+                                     if recomputed_rows == len),
+                            "{kernel}: prefill should miss");
+                } else {
+                    // honest executed-rows accounting: lsh and
+                    // improved (which re-clusters every step at the
+                    // default growth) recompute the full history;
+                    // everything else materializes only the span
+                    let want_computed =
+                        if kernel == "lsh-1" || kernel == "i-clustered-3"
+                        { len } else { len - span };
+                    assert!(matches!(outcome,
+                                     SeqOutcome::Hit { reused_rows,
+                                                       computed_rows,
+                                                       .. }
+                                     if reused_rows == span
+                                        && computed_rows == want_computed),
+                            "{kernel}: step should hit with \
+                             computed_rows {want_computed}, got \
+                             {outcome:?}");
+                    // a hit computes only the span: the skipped prefix
+                    // rows of the output slices stay zero
+                    for h in 0..H {
+                        let pre = seq_rows(&out, h, 0, span);
+                        assert!(pre.data.iter().all(|&x| x == 0.0),
+                                "{kernel}: head {h} pre-span not zero");
+                    }
+                }
+            }
+            assert_eq!(cache.session_len(
+                CacheRef { session: 42, generation: 0 }), Some(n));
+            assert!(cache.counters().hit_rate() > 0.5);
+        }
+    }
+
+    #[test]
+    fn zero_capacity_store_always_misses_but_stays_exact() {
+        let (q, k, v) = history(16, 2);
+        let cache = Arc::new(KvCache::with_capacity(0));
+        let backend = CachingBackend::native("full", cache.clone())
+            .unwrap();
+        for &(len, span) in &[(8usize, 0usize), (12, 8), (16, 12)] {
+            let (out, outcome) =
+                run_step(&backend, &q, &k, &v, len, span, 3, 5, 0, 1);
+            let want = oracle_span("full", &q, &k, &v, len, span, 3, 5);
+            assert_span_matches(&out, &want, span, len, "cap0");
+            assert!(matches!(outcome, SeqOutcome::Miss { .. }));
+        }
+        assert_eq!(cache.used_rows(), 0);
+        assert_eq!(cache.counters().hits.load(Ordering::Relaxed), 0);
+        assert_eq!(cache.counters().misses.load(Ordering::Relaxed), 3);
+    }
+
+    #[test]
+    fn stale_generation_misses_and_never_aliases() {
+        let (q, k, v) = history(16, 3);
+        let cache = Arc::new(KvCache::unbounded());
+        let backend = CachingBackend::native("full", cache.clone())
+            .unwrap();
+        // generation 0 populates
+        let _ = run_step(&backend, &q, &k, &v, 8, 0, 9, 1, 0, 1);
+        assert_eq!(cache.session_len(
+            CacheRef { session: 1, generation: 0 }), Some(8));
+        // a *different history* under generation 1 must not see gen 0
+        let (q2, k2, v2) = history(16, 4);
+        let (out, outcome) =
+            run_step(&backend, &q2, &k2, &v2, 12, 8, 9, 1, 1, 1);
+        assert!(matches!(outcome, SeqOutcome::Miss { .. }),
+                "stale generation must miss");
+        let want = oracle_span("full", &q2, &k2, &v2, 12, 8, 9, 1);
+        assert_span_matches(&out, &want, 8, 12, "gen-bump");
+        // the stale entry is gone; the new generation owns the id
+        assert_eq!(cache.session_len(
+            CacheRef { session: 1, generation: 0 }), None);
+        assert_eq!(cache.session_len(
+            CacheRef { session: 1, generation: 1 }), Some(12));
+    }
+
+    #[test]
+    fn eviction_mid_session_falls_back_to_recompute_bit_identically() {
+        let (q, k, v) = history(20, 5);
+        // capacity of exactly the prefill: the first decode step's
+        // append overflows and evicts the session itself
+        let cache = Arc::new(KvCache::with_capacity(10));
+        let backend = CachingBackend::native("full", cache.clone())
+            .unwrap();
+        let (_, o0) = run_step(&backend, &q, &k, &v, 10, 0, 11, 7, 0, 1);
+        assert!(matches!(o0, SeqOutcome::Miss { .. }));
+        assert_eq!(cache.used_rows(), 10);
+        // step appends to 14 > 10: the hit still computes (clones are
+        // taken first), then the entry is evicted
+        let (out1, o1) =
+            run_step(&backend, &q, &k, &v, 14, 10, 11, 7, 0, 2);
+        assert!(matches!(o1, SeqOutcome::Hit { reused_rows: 10, .. }));
+        assert_span_matches(&out1,
+                            &oracle_span("full", &q, &k, &v, 14, 10, 11,
+                                         7),
+                            10, 14, "pre-evict step");
+        assert_eq!(cache.used_rows(), 0, "over-capacity entry evicted");
+        assert!(cache.counters().evictions.load(Ordering::Relaxed) >= 1);
+        // next step finds nothing: full recompute, bit-identical
+        let (out2, o2) =
+            run_step(&backend, &q, &k, &v, 18, 14, 11, 7, 0, 1);
+        assert!(matches!(o2, SeqOutcome::Miss { recomputed_rows: 18 }));
+        assert_span_matches(&out2,
+                            &oracle_span("full", &q, &k, &v, 18, 14, 11,
+                                         7),
+                            14, 18, "post-evict step");
+    }
+
+    #[test]
+    fn lru_eviction_prefers_the_coldest_session() {
+        let cache = KvCache::with_capacity(20);
+        let panels = |n: usize, seed: u64| -> Vec<Matrix> {
+            let mut rng = Xoshiro256::new(seed);
+            (0..H).map(|_| Matrix::randn(n, D, &mut rng)).collect()
+        };
+        let r = |sid: u64| CacheRef { session: sid, generation: 0 };
+        cache.populate(r(1), H, D, D, panels(8, 1), panels(8, 2),
+                       panels(8, 3));
+        cache.populate(r(2), H, D, D, panels(8, 4), panels(8, 5),
+                       panels(8, 6));
+        assert_eq!(cache.used_rows(), 16);
+        // touching session 1 makes session 2 the LRU victim
+        assert_eq!(cache.session_len(r(1)), Some(8));
+        let _ = cache.step(r(1), H, D, D, 8, &panels(2, 7),
+                           &panels(2, 8), &panels(2, 9));
+        cache.populate(r(3), H, D, D, panels(8, 10), panels(8, 11),
+                       panels(8, 12));
+        assert_eq!(cache.session_len(r(2)), None, "LRU evicted");
+        assert_eq!(cache.session_len(r(1)), Some(10));
+        assert_eq!(cache.session_len(r(3)), Some(8));
+        assert_eq!(cache.used_rows(), 18);
+    }
+
+    #[test]
+    fn plain_sequences_bypass_and_match_the_wrapped_backend() {
+        // a sessions array of all-None entries must ride the inner
+        // backend with the ordinary slot streams
+        let mut rng = Xoshiro256::new(6);
+        let q = BatchMatrix::randn(2, H, 12, D, &mut rng);
+        let k = BatchMatrix::randn(2, H, 12, D, &mut rng);
+        let v = BatchMatrix::randn(2, H, 12, D, &mut rng);
+        let lens = [9usize, 12];
+        let sessions: [Option<SessionRef>; 2] = [None, None];
+        let cache = Arc::new(KvCache::unbounded());
+        let backend =
+            CachingBackend::native("clustered-3", cache.clone()).unwrap();
+        let batch = AttnBatch::new(&q, &k, &v, 13)
+            .with_lens(&lens)
+            .with_sessions(&sessions);
+        let ctx = ExecCtx::sequential();
+        let (out, rep) = backend.execute_with_report(&batch, &ctx);
+        assert_eq!(rep, vec![SeqOutcome::Bypass; 2]);
+        let inner = NativeBackend::by_name("clustered-3").unwrap();
+        let plain = AttnBatch::new(&q, &k, &v, 13).with_lens(&lens);
+        assert!(out.bit_identical(&inner.execute(&plain, &ctx)));
+        assert_eq!(cache.used_rows(), 0);
+    }
+
+    #[test]
+    fn frozen_model_reuse_kicks_in_above_growth_one() {
+        let n = 32;
+        let (q, k, v) = history(n, 8);
+        for kernel in ["clustered-3", "i-clustered-3"] {
+            let cache = Arc::new(KvCache::new(KvCacheOptions {
+                capacity_rows: usize::MAX,
+                growth: 1.5,
+            }));
+            let backend =
+                CachingBackend::native(kernel, cache.clone()).unwrap();
+            // prefill 16 (miss), step to 20 (hit, re-cluster: no model
+            // yet), step to 24 (reuse: 24 <= 1.5·20), step to 32
+            // (re-cluster: 32 > 1.5·20)
+            let (_, o0) =
+                run_step(&backend, &q, &k, &v, 16, 0, 21, 9, 0, 1);
+            assert!(matches!(o0, SeqOutcome::Miss { .. }), "{kernel}");
+            let (out1, o1) =
+                run_step(&backend, &q, &k, &v, 20, 16, 21, 9, 0, 1);
+            assert!(matches!(o1, SeqOutcome::Hit { reused_rows: 16,
+                                                   reclustered: true,
+                                                   .. }),
+                    "{kernel}: first hit must re-cluster, got {o1:?}");
+            // the re-cluster step is exact
+            assert_span_matches(&out1,
+                                &oracle_span(kernel, &q, &k, &v, 20, 16,
+                                             21, 9),
+                                16, 20, kernel);
+            let (out2, o2) =
+                run_step(&backend, &q, &k, &v, 24, 20, 21, 9, 0, 1);
+            assert!(matches!(o2, SeqOutcome::Hit { reused_rows: 20,
+                                                   computed_rows: 4,
+                                                   reclustered: false }),
+                    "{kernel}: inside the threshold must reuse, got \
+                     {o2:?}");
+            // reused steps are deterministic across worker counts...
+            for workers in [2, 4] {
+                let cache_b = Arc::new(KvCache::new(KvCacheOptions {
+                    capacity_rows: usize::MAX,
+                    growth: 1.5,
+                }));
+                let backend_b =
+                    CachingBackend::native(kernel, cache_b).unwrap();
+                let _ = run_step(&backend_b, &q, &k, &v, 16, 0, 21, 9, 0,
+                                 workers);
+                let _ = run_step(&backend_b, &q, &k, &v, 20, 16, 21, 9,
+                                 0, workers);
+                let (out2b, _) = run_step(&backend_b, &q, &k, &v, 24, 20,
+                                          21, 9, 0, workers);
+                assert!(out2b.bit_identical(&out2),
+                        "{kernel}: reuse diverged at {workers} workers");
+            }
+            // ...and finite with the right shape
+            let got = seq_rows(&out2, 0, 20, 24);
+            assert!(got.data.iter().all(|x| x.is_finite()), "{kernel}");
+            // crossing the threshold re-clusters and is exact again
+            let (out3, o3) =
+                run_step(&backend, &q, &k, &v, 32, 24, 21, 9, 0, 2);
+            assert!(matches!(o3, SeqOutcome::Hit { reused_rows: 24,
+                                                   reclustered: true,
+                                                   .. }),
+                    "{kernel}: crossing the threshold re-clusters, got \
+                     {o3:?}");
+            assert_span_matches(&out3,
+                                &oracle_span(kernel, &q, &k, &v, 32, 24,
+                                             21, 9),
+                                24, 32, kernel);
+        }
+    }
+}

@@ -84,6 +84,42 @@ pub fn clustered_attention_ctx(q: &Matrix, k: &Matrix, v: &Matrix,
     out
 }
 
+/// Attend a query span through *only the clusters it touches*: centroid
+/// attention rows are computed for the distinct clusters of
+/// `groups_span` (each row of `cent` is one cluster's centroid) and
+/// scattered back to the span members — the incremental-decode pruning
+/// of the eq. (4)–(6) centroid pass, O(|affected|·N·D) instead of
+/// O(C·N·D).
+///
+/// Bit-exactness: each centroid row's online-softmax sweep is
+/// independent of every other centroid row (the per-row invariance the
+/// worker-count determinism property enforces), so computing a subset
+/// of centroid rows yields exactly the bits the full [`centroids`]-wide
+/// pass would, and the scatter copies them unchanged.  Returns a
+/// `(groups_span.len() × Dv)` matrix, one row per span member.
+pub fn clustered_span_attention_ctx(groups_span: &[u32], cent: &Matrix,
+                                    k: &Matrix, v: &Matrix, ctx: &ExecCtx)
+                                    -> Matrix {
+    let scale = 1.0 / (cent.cols as f32).sqrt();
+    // distinct affected clusters, ascending, and cluster → sub-row map
+    let mut affected: Vec<usize> =
+        groups_span.iter().map(|&g| g as usize).collect();
+    affected.sort_unstable();
+    affected.dedup();
+    let mut sub_row = vec![usize::MAX; cent.rows];
+    let mut cent_sub = Matrix::zeros(affected.len(), cent.cols);
+    for (r, &c) in affected.iter().enumerate() {
+        sub_row[c] = r;
+        cent_sub.row_mut(r).copy_from_slice(cent.row(c));
+    }
+    let v_c = streaming_softmax_attention(&cent_sub, k, v, scale, ctx);
+    let mut out = Matrix::zeros(groups_span.len(), v.cols);
+    for (i, &g) in groups_span.iter().enumerate() {
+        out.row_mut(i).copy_from_slice(v_c.row(sub_row[g as usize]));
+    }
+    out
+}
+
 /// Clustered attention kernel: LSH → Hamming K-Means → centroid attention.
 #[derive(Debug, Clone, Copy)]
 pub struct ClusteredAttention {
@@ -103,11 +139,24 @@ impl AttentionKernel for ClusteredAttention {
     /// and the RNG draws (the projection directions) depend only on
     /// the head dim — so the masked run is bit-identical to the
     /// unpadded run.
+    ///
+    /// A `query_span` still clusters *every* valid query (the joint
+    /// assignment is what the span rows' outputs depend on — and the
+    /// RNG draws stay identical to the spanless solve), but then runs
+    /// the centroid attention pass only for the clusters the span
+    /// touches ([`clustered_span_attention_ctx`]): exact span bits at
+    /// O(|affected|·N·D) instead of O(C·N·D).
     fn solve(&self, p: &AttnProblem<'_>, rng: &mut Xoshiro256,
              ctx: &ExecCtx) -> Matrix {
         let (q, k, v) = p.valid_qkv();
         let cl = clustering::cluster_queries_ctx(
             &q, self.clusters, self.bits, self.iters, rng, ctx);
+        if p.is_spanned() {
+            let cent = centroids(&q, &cl);
+            let span = clustered_span_attention_ctx(
+                &cl.groups[p.span_start()..], &cent, &k, &v, ctx);
+            return p.restore_span(span);
+        }
         p.restore_rows(clustered_attention_ctx(&q, &k, &v, &cl, ctx))
     }
 

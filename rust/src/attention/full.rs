@@ -163,9 +163,20 @@ impl AttentionKernel for FullAttention {
     /// sweep touches only valid key blocks and only valid query rows
     /// are partitioned, so the masked run is bit-identical to the
     /// unpadded run and the padded output rows come back zero.
+    ///
+    /// A `query_span` genuinely prunes the compute to O(m·N): each
+    /// query row's online-softmax sweep is independent of every other
+    /// row (the same per-row invariance the worker-count determinism
+    /// property pins down), so streaming only the span rows against
+    /// all valid keys emits bits identical to the full solve's span
+    /// rows.  This is the incremental-decode hot path.
     fn solve(&self, p: &AttnProblem<'_>, _rng: &mut Xoshiro256,
              ctx: &ExecCtx) -> Matrix {
         let (q, k, v) = p.valid_qkv();
+        if p.is_spanned() {
+            let qs = p.span_q();
+            return p.restore_span(full_attention_ctx(&qs, &k, &v, ctx));
+        }
         p.restore_rows(full_attention_ctx(&q, &k, &v, ctx))
     }
 
@@ -193,10 +204,16 @@ impl AttentionKernel for SharedFullAttention {
 
     /// Shared-QK tying composed with the same valid-prefix masking as
     /// [`FullAttention`] (the `k` input is ignored, keys are the valid
-    /// queries).
+    /// queries).  A `query_span` streams only the span rows against
+    /// the *full* valid query history as keys — per-row independence
+    /// makes that bit-identical to the span rows of the full solve.
     fn solve(&self, p: &AttnProblem<'_>, _rng: &mut Xoshiro256,
              ctx: &ExecCtx) -> Matrix {
         let (q, _, v) = p.valid_qkv();
+        if p.is_spanned() {
+            let qs = p.span_q();
+            return p.restore_span(full_attention_ctx(&qs, &q, &v, ctx));
+        }
         p.restore_rows(full_attention_ctx(&q, &q, &v, ctx))
     }
 

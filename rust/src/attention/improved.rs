@@ -122,14 +122,25 @@ impl AttentionKernel for ImprovedClusteredAttention {
     /// only valid queries, `A^c` has only valid key columns, so the
     /// per-cluster top-k can never select a padded key and the masked
     /// run is bit-identical to the unpadded run.
+    ///
+    /// A `query_span` is honored by computing the full valid solve and
+    /// emitting only the span rows (exact by construction): this
+    /// kernel's rows couple through the shared (C × N) matrix and the
+    /// per-cluster top-k basis, so an affected-cluster pruning is left
+    /// to the KV-cached reuse path (`attention::cache`), which freezes
+    /// that shared state between re-clusters.
     fn solve(&self, p: &AttnProblem<'_>, rng: &mut Xoshiro256,
              ctx: &ExecCtx) -> Matrix {
         let (q, k, v) = p.valid_qkv();
         let cl = crate::clustering::cluster_queries_ctx(
             &q, self.clusters, self.bits, self.iters, rng, ctx);
-        p.restore_rows(
+        let out =
             improved_clustered_attention_ctx(&q, &k, &v, &cl, self.topk,
-                                             ctx))
+                                             ctx);
+        if p.is_spanned() {
+            return p.restore_span(out.row_span(p.span_start(), out.rows));
+        }
+        p.restore_rows(out)
     }
 
     fn cost(&self, n: usize, dk: usize, dv: usize) -> Cost {

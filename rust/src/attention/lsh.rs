@@ -146,11 +146,22 @@ impl AttentionKernel for LshAttention {
     /// final chunk absorbs any length), and the per-round rotation
     /// draws depend only on the head dim — so the masked run is
     /// bit-identical to the unpadded run.
+    ///
+    /// A `query_span` is honored by computing the full valid solve and
+    /// emitting only the span rows (exact by construction): every
+    /// position participates in the joint bucket sort and chunk
+    /// layout, so there is no cheaper exact span for this family — the
+    /// KV cache still removes the per-step history re-upload, but not
+    /// the recompute.
     fn solve(&self, p: &AttnProblem<'_>, rng: &mut Xoshiro256,
              ctx: &ExecCtx) -> Matrix {
         let (q, _, v) = p.valid_qkv();
-        p.restore_rows(reformer_attention_ctx(&q, &v, self.rounds,
-                                              self.chunk, rng, ctx))
+        let out = reformer_attention_ctx(&q, &v, self.rounds, self.chunk,
+                                         rng, ctx);
+        if p.is_spanned() {
+            return p.restore_span(out.row_span(p.span_start(), out.rows));
+        }
+        p.restore_rows(out)
     }
 
     fn cost(&self, n: usize, dk: usize, dv: usize) -> Cost {

@@ -9,12 +9,16 @@
 //!    [`AttentionKernel`] implementation;
 //!  - [`problem`] owns the request descriptors ([`AttnProblem`] /
 //!    [`AttnBatch`]) every entry point takes — Q/K/V views plus the
-//!    per-request options (today the valid-length mask; tomorrow
-//!    KV-cache handles, backend hints) — so options travel through one
-//!    struct instead of ever-growing argument lists;
+//!    per-request options (the valid-length mask, the incremental
+//!    `query_span`, and the KV-cache handles [`CacheRef`] /
+//!    [`SessionRef`]) — so options travel through one struct instead
+//!    of ever-growing argument lists;
 //!  - [`backend`] owns the [`AttentionBackend`] execution seam (the
-//!    native engine today; compiled-HLO, KV-cached and sharded backends
-//!    plug in behind the same descriptor);
+//!    native engine today; compiled-HLO and sharded backends plug in
+//!    behind the same descriptor);
+//!  - [`cache`] owns the incremental-decode subsystem: the per-session
+//!    [`KvCache`] panel store and the [`CachingBackend`] that wraps
+//!    any backend with cross-request KV caching;
 //!  - this module owns the trait, the name-keyed [`REGISTRY`], the
 //!    [`Variant`] config enum, and the batched entry points.
 //!
@@ -45,8 +49,17 @@
 //! rows), so streaming softmax sweeps only valid key blocks, clustering
 //! hashes and assigns only valid queries, and top-k can never select a
 //! padded key.  See [`problem`] and `proptest/attention_props.rs`.
+//!
+//! **Span contract:** a problem with `query_span = s` emits output rows
+//! `s..valid` bit-identical to the spanless solve and zeroes the rest —
+//! the incremental-decode primitive.  Row-independent families (full,
+//! shared-full, oracle-top) genuinely compute only the span; the
+//! coupled families (clustered prunes to affected clusters; improved
+//! and LSH recompute) emit the same bits either way.  See [`problem`]
+//! and [`cache`].
 
 pub mod backend;
+pub mod cache;
 pub mod clustered;
 pub mod full;
 pub mod improved;
@@ -55,8 +68,11 @@ pub mod oracle;
 pub mod problem;
 
 pub use backend::{AttentionBackend, NativeBackend};
+pub use cache::{CacheCounters, CachingBackend, KvCache, KvCacheOptions,
+                SeqOutcome};
 pub use clustered::{centroids, clustered_attention,
-                    clustered_attention_matrix, ClusteredAttention};
+                    clustered_attention_matrix,
+                    clustered_span_attention_ctx, ClusteredAttention};
 pub use full::{full_attention, full_attention_materialized,
                full_attention_matrix, streaming_softmax_attention,
                FullAttention, SharedFullAttention};
@@ -65,7 +81,7 @@ pub use improved::{improved_clustered_attention,
                    ImprovedClusteredAttention};
 pub use lsh::{reformer_attention, LshAttention};
 pub use oracle::{oracle_top_attention, OracleTopAttention};
-pub use problem::{AttnBatch, AttnProblem};
+pub use problem::{AttnBatch, AttnProblem, CacheRef, SessionRef};
 
 use crate::exec::ExecCtx;
 use crate::prng::{slice_stream, Xoshiro256};
@@ -194,20 +210,6 @@ pub trait AttentionKernel: Send + Sync {
         });
         out
     }
-
-    /// Positional single-slice entry point of the pre-descriptor API.
-    #[deprecated(note = "use AttnProblem with AttentionKernel::solve")]
-    fn run_qkv(&self, q: &Matrix, k: &Matrix, v: &Matrix,
-               rng: &mut Xoshiro256, ctx: &ExecCtx) -> Matrix {
-        self.solve(&AttnProblem::new(q, k, v), rng, ctx)
-    }
-
-    /// Positional batched entry point of the pre-descriptor API.
-    #[deprecated(note = "use AttnBatch with AttentionKernel::solve_batch")]
-    fn run_batch(&self, q: &BatchMatrix, k: &BatchMatrix, v: &BatchMatrix,
-                 seed: u64, ctx: &ExecCtx) -> BatchMatrix {
-        self.solve_batch(&AttnBatch::new(q, k, v, seed), ctx)
-    }
 }
 
 /// Explicit sequential single-slice loop — the reference schedule the
@@ -233,14 +235,6 @@ pub fn solve_batch_seq(kernel: &dyn AttentionKernel, batch: &AttnBatch<'_>)
         out.slice_mut(s)[..l * dv].copy_from_slice(&o.data);
     }
     out
-}
-
-/// Sequential reference loop of the pre-descriptor API.
-#[deprecated(note = "use AttnBatch with solve_batch_seq")]
-pub fn run_batch_seq(kernel: &dyn AttentionKernel, q: &BatchMatrix,
-                     k: &BatchMatrix, v: &BatchMatrix, seed: u64)
-                     -> BatchMatrix {
-    solve_batch_seq(kernel, &AttnBatch::new(q, k, v, seed))
 }
 
 // ---------------------------------------------------------------------------
@@ -330,7 +324,7 @@ pub fn kernel_by_name(name: &str) -> Option<Box<dyn AttentionKernel>> {
 }
 
 // ---------------------------------------------------------------------------
-// variant-dispatch entry points (and the pre-descriptor wrappers)
+// variant-dispatch entry points
 // ---------------------------------------------------------------------------
 
 /// Dispatch a variant on one request descriptor.
@@ -343,29 +337,6 @@ pub fn solve(variant: &Variant, p: &AttnProblem<'_>, rng: &mut Xoshiro256,
 pub fn solve_batch(variant: &Variant, batch: &AttnBatch<'_>, ctx: &ExecCtx)
                    -> BatchMatrix {
     kernel_for(variant).solve_batch(batch, ctx)
-}
-
-/// Dispatch a variant on one slice, sequentially (pre-descriptor API).
-#[deprecated(note = "use AttnProblem with attention::solve")]
-pub fn run(variant: &Variant, q: &Matrix, k: &Matrix, v: &Matrix,
-           rng: &mut Xoshiro256) -> Matrix {
-    solve(variant, &AttnProblem::new(q, k, v), rng, &ExecCtx::sequential())
-}
-
-/// Dispatch a variant on one slice with intra-slice parallelism
-/// (pre-descriptor API).
-#[deprecated(note = "use AttnProblem with attention::solve")]
-pub fn run_ctx(variant: &Variant, q: &Matrix, k: &Matrix, v: &Matrix,
-               rng: &mut Xoshiro256, ctx: &ExecCtx) -> Matrix {
-    solve(variant, &AttnProblem::new(q, k, v), rng, ctx)
-}
-
-/// Batched dispatch over a (B, H, N, D) workload (pre-descriptor API).
-#[deprecated(note = "use AttnBatch with attention::solve_batch")]
-pub fn run_batch(variant: &Variant, q: &BatchMatrix, k: &BatchMatrix,
-                 v: &BatchMatrix, seed: u64, ctx: &ExecCtx)
-                 -> BatchMatrix {
-    solve_batch(variant, &AttnBatch::new(q, k, v, seed), ctx)
 }
 
 /// Closed-form cost of each variant (matches §3 complexity claims).
@@ -670,7 +641,7 @@ mod tests {
         let v = BatchMatrix::randn(2, 1, 8, 4, &mut rng);
         let lens = [5usize]; // one entry for a 2-sequence batch
         let bad = AttnBatch { q: &q, k: &k, v: &v, seed: 0,
-                              lens: Some(&lens) };
+                              lens: Some(&lens), sessions: None };
         let _ = kernel_for(&Variant::Full)
             .solve_batch(&bad, &ExecCtx::sequential());
     }
@@ -679,45 +650,43 @@ mod tests {
     #[should_panic(expected = "valid_len")]
     fn kernels_validate_literally_constructed_problems() {
         let (q, k, v, _) = qkv(8, 4, 4, 61);
-        let bad = AttnProblem { q: &q, k: &k, v: &v, valid_len: Some(99) };
+        let bad = AttnProblem { q: &q, k: &k, v: &v, valid_len: Some(99),
+                                query_span: None };
         let mut rng = Xoshiro256::new(0);
         let _ = kernel_for(&Variant::Full).solve(&bad, &mut rng,
                                                  &ExecCtx::sequential());
     }
 
     #[test]
-    #[allow(deprecated)]
-    fn deprecated_wrappers_delegate_to_the_descriptor_api() {
-        use crate::exec::WorkerPool;
-        let (q, k, v, _) = qkv(32, 8, 8, 50);
-        let var = Variant::Clustered { clusters: 4, bits: 31, iters: 5 };
-        let kernel = kernel_for(&var);
+    fn spanned_solve_equals_the_span_rows_of_the_spanless_solve() {
+        // the span contract on every family at one shape; the proptests
+        // sweep shapes, spans and worker counts
+        let (q, k, v, _) = qkv(48, 8, 8, 70);
+        let (l, s) = (41, 29); // ragged valid length, interior span
         let ctx = ExecCtx::sequential();
-
-        let mut r1 = Xoshiro256::new(2);
-        let mut r2 = Xoshiro256::new(2);
-        let old = kernel.run_qkv(&q, &k, &v, &mut r1, &ctx);
-        let new = kernel.solve(&AttnProblem::new(&q, &k, &v), &mut r2,
-                               &ctx);
-        assert!(old.bit_identical(&new));
-
-        let mut r3 = Xoshiro256::new(2);
-        assert!(run(&var, &q, &k, &v, &mut r3).bit_identical(&new));
-        let mut r4 = Xoshiro256::new(2);
-        assert!(run_ctx(&var, &q, &k, &v, &mut r4, &ctx)
-            .bit_identical(&new));
-
-        let mut rng = Xoshiro256::new(51);
-        let bq = BatchMatrix::randn(2, 2, 16, 8, &mut rng);
-        let bk = BatchMatrix::randn(2, 2, 16, 8, &mut rng);
-        let bv = BatchMatrix::randn(2, 2, 16, 8, &mut rng);
-        let pool = ExecCtx::new(WorkerPool::new(2));
-        let old_b = run_batch(&var, &bq, &bk, &bv, 5, &pool);
-        let new_b = solve_batch(&var, &AttnBatch::new(&bq, &bk, &bv, 5),
-                                &pool);
-        assert!(old_b.bit_identical(&new_b));
-        assert!(run_batch_seq(kernel.as_ref(), &bq, &bk, &bv, 5)
-            .bit_identical(&solve_batch_seq(
-                kernel.as_ref(), &AttnBatch::new(&bq, &bk, &bv, 5))));
+        for var in test_variants() {
+            let kernel = kernel_for(&var);
+            let mut r_span = Xoshiro256::new(4);
+            let spanned = kernel.solve(
+                &AttnProblem::new(&q, &k, &v)
+                    .with_valid_len(l)
+                    .with_query_span(s),
+                &mut r_span, &ctx);
+            let mut r_ref = Xoshiro256::new(4);
+            let want = kernel.solve(
+                &AttnProblem::new(&q, &k, &v).with_valid_len(l),
+                &mut r_ref, &ctx);
+            assert_eq!((spanned.rows, spanned.cols), (48, 8), "{}",
+                       var.name());
+            assert!(spanned
+                        .row_span(s, l)
+                        .bit_identical(&want.row_span(s, l)),
+                    "{} span rows diverged from the spanless solve",
+                    var.name());
+            assert!(spanned.data[..s * 8].iter().all(|&x| x == 0.0),
+                    "{} left non-zero pre-span rows", var.name());
+            assert!(spanned.data[l * 8..].iter().all(|&x| x == 0.0),
+                    "{} left non-zero padded rows", var.name());
+        }
     }
 }

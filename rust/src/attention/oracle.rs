@@ -55,10 +55,18 @@ impl AttentionKernel for OracleTopAttention {
     /// Masking = solving the valid-prefix sub-problem: the per-query
     /// logits scan covers only valid keys, so top-k can never select a
     /// padded key and the masked run is bit-identical to the unpadded
-    /// run.
+    /// run.  A `query_span` scans only the span rows (each row's
+    /// logits/top-k/softmax is independent of every other row), so
+    /// incremental decode costs O(m·N) and matches the full solve's
+    /// span rows bit-for-bit.
     fn solve(&self, p: &AttnProblem<'_>, _rng: &mut Xoshiro256,
              ctx: &ExecCtx) -> Matrix {
         let (q, k, v) = p.valid_qkv();
+        if p.is_spanned() {
+            let qs = p.span_q();
+            return p.restore_span(oracle_top_attention_ctx(
+                &qs, &k, &v, self.topk, ctx));
+        }
         p.restore_rows(oracle_top_attention_ctx(&q, &k, &v, self.topk,
                                                 ctx))
     }

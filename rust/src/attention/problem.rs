@@ -3,9 +3,10 @@
 //! kernel entry point now takes instead of growing positional argument
 //! lists.
 //!
-//! The descriptor is where per-request options travel — today the
-//! valid-length mask, tomorrow KV-cache handles and backend hints —
-//! without touching a single kernel signature again.
+//! The descriptor is where per-request options travel — the
+//! valid-length mask, the incremental-decode query span, and the
+//! KV-cache handles ([`CacheRef`] / [`SessionRef`]) — without touching
+//! a single kernel signature.
 //!
 //! ## Valid-length masking
 //!
@@ -28,11 +29,67 @@
 //! select a padded key — and zero-extend the output.  Nothing about the
 //! contract is approximate, and `proptest/attention_props.rs` enforces
 //! it for every kernel family at multiple worker counts.
+//!
+//! ## Incremental query spans
+//!
+//! Autoregressive decode re-attends the *new* query rows over the full
+//! key history; recomputing the prefix rows every step is the O(N²)
+//! waste the KV cache exists to remove.  `query_span = Some(s)`
+//! declares that only query rows `s..valid` need computing this step.
+//! The span contract (enforced per family alongside the masking
+//! property):
+//!
+//! > Solving with `query_span = s` yields output rows `s..valid` that
+//! > are **bit-for-bit identical** to rows `s..valid` of the same
+//! > solve without a span; rows outside the span are exactly zero.
+//!
+//! Keys/values are *not* restricted — the span rows attend over every
+//! valid key.  Row-independent kernels (full, shared-full, oracle-top)
+//! genuinely compute only the span (O(m·N) instead of O(N²)); kernels
+//! whose rows couple through joint state (clustered query assignments,
+//! LSH bucket sorts) may compute more internally but must emit the
+//! identical span bits.  The span requires a self-shaped problem
+//! (`q.rows == k.rows`, the serving layout), like masking.
 
 use std::borrow::Cow;
 
 use crate::tensor::batch::BatchMatrix;
 use crate::tensor::Matrix;
+
+/// Handle to one decode session's KV-cache entry: the session id plus a
+/// generation counter.
+///
+/// The generation exists so a stale handle can never alias fresh state:
+/// a cache entry stored under generation `g` is invisible to a lookup
+/// carrying any other generation (the lookup misses and the entry is
+/// replaced).  Gateways bump the generation whenever a session id is
+/// (re-)created, so a client resurrecting an old id gets a clean miss
+/// instead of someone else's keys.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct CacheRef {
+    /// Session id (client-scoped).
+    pub session: u64,
+    /// Generation of the session id — mismatches always miss.
+    pub generation: u64,
+}
+
+/// Per-sequence incremental-decode annotation on an [`AttnBatch`]: the
+/// cache handle plus where this step's new rows start.
+///
+/// `span_start` is the length of the history the cache is expected to
+/// hold; rows `span_start..lens[b]` of the sequence are this step's new
+/// tokens.  A caching backend that finds the cached prefix (same
+/// session, same generation, cached length == `span_start`) appends
+/// only the new K/V rows and solves only the span; any mismatch —
+/// evicted entry, stale generation, desynced length — falls back to a
+/// full recompute of the sequence and repopulates the cache, which is
+/// bit-identical by the span contract.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SessionRef {
+    pub cache: CacheRef,
+    /// First new query row of this step (0 = full prefill).
+    pub span_start: usize,
+}
 
 /// One attention request slice: Q/K/V plus the request options.
 ///
@@ -66,12 +123,15 @@ pub struct AttnProblem<'a> {
     pub v: &'a Matrix,
     /// Leading rows that are real; `None` = all of them.
     pub valid_len: Option<usize>,
+    /// First query row that needs computing (incremental decode);
+    /// `None` = all valid rows.  See the span contract (module docs).
+    pub query_span: Option<usize>,
 }
 
 impl<'a> AttnProblem<'a> {
     /// Dense problem: every row of `q`/`k`/`v` is valid.
     pub fn new(q: &'a Matrix, k: &'a Matrix, v: &'a Matrix) -> Self {
-        let p = Self { q, k, v, valid_len: None };
+        let p = Self { q, k, v, valid_len: None, query_span: None };
         p.validate();
         p
     }
@@ -83,6 +143,16 @@ impl<'a> AttnProblem<'a> {
     /// `valid_len` is legal and equivalent to the dense problem.
     pub fn with_valid_len(mut self, valid_len: usize) -> Self {
         self.valid_len = Some(valid_len);
+        self.validate();
+        self
+    }
+
+    /// Declare that only query rows `start..valid` need computing
+    /// (incremental decode); the span rows still attend over *every*
+    /// valid key.  Requires a self-shaped problem and `start < valid`;
+    /// `start == 0` is legal and equivalent to no span.
+    pub fn with_query_span(mut self, start: usize) -> Self {
+        self.query_span = Some(start);
         self.validate();
         self
     }
@@ -105,6 +175,18 @@ impl<'a> AttnProblem<'a> {
         self.valid_len.is_some_and(|l| l < self.q.rows)
     }
 
+    /// First query row to compute (0 when no span is set).
+    #[inline]
+    pub fn span_start(&self) -> usize {
+        self.query_span.unwrap_or(0)
+    }
+
+    /// Does the span actually exclude any valid row?
+    #[inline]
+    pub fn is_spanned(&self) -> bool {
+        self.query_span.is_some_and(|s| s > 0)
+    }
+
     /// Re-assert the constructor invariants.  Fields are public (the
     /// descriptor is the API surface), so a literally-constructed
     /// problem can bypass [`AttnProblem::new`] — execution entry points
@@ -118,6 +200,12 @@ impl<'a> AttnProblem<'a> {
                        "valid-length masking needs q/k of equal length");
             assert!((1..=self.q.rows).contains(&l),
                     "valid_len {l} out of 1..={}", self.q.rows);
+        }
+        if let Some(s) = self.query_span {
+            assert_eq!(self.q.rows, self.k.rows,
+                       "query_span needs q/k of equal length");
+            assert!(s < self.valid(),
+                    "query_span {s} leaves no row in 0..{}", self.valid());
         }
     }
 
@@ -150,6 +238,37 @@ impl<'a> AttnProblem<'a> {
         out.data[..valid_out.data.len()].copy_from_slice(&valid_out.data);
         out
     }
+
+    /// The active query rows of this step (rows `span_start..valid`),
+    /// borrowed when the whole problem is active.  Row-independent
+    /// kernels solve exactly these rows against the valid keys, which
+    /// is what makes incremental decode O(m·N) instead of O(N²).
+    pub fn span_q(&self) -> Cow<'a, Matrix> {
+        self.validate();
+        let (s, l) = (self.span_start(), self.valid());
+        if s == 0 && l == self.q.rows {
+            Cow::Borrowed(self.q)
+        } else {
+            Cow::Owned(self.q.row_span(s, l))
+        }
+    }
+
+    /// Embed a span-rows output (`valid - span_start` rows) back at the
+    /// span offset of the full (padded) height; every row outside the
+    /// span — the skipped prefix and the padding — is defined to be
+    /// zero.  With no span this is exactly [`AttnProblem::restore_rows`].
+    pub fn restore_span(&self, span_out: Matrix) -> Matrix {
+        let s = self.span_start();
+        if s == 0 {
+            return self.restore_rows(span_out);
+        }
+        debug_assert_eq!(span_out.rows, self.valid() - s);
+        let mut out = Matrix::zeros(self.rows(), span_out.cols);
+        let off = s * span_out.cols;
+        out.data[off..off + span_out.data.len()]
+            .copy_from_slice(&span_out.data);
+        out
+    }
 }
 
 /// A batched multi-head attention request: (B, H, N, D) tensors, the
@@ -169,13 +288,22 @@ pub struct AttnBatch<'a> {
     pub seed: u64,
     /// Per-sequence valid lengths (`len == q.batch`); `None` = dense.
     pub lens: Option<&'a [usize]>,
+    /// Per-sequence decode-session annotations (`len == q.batch`);
+    /// `None` = no sequence is a session step.  Consumed by caching
+    /// backends ([`crate::attention::CachingBackend`]); plain kernels
+    /// ignore it (they compute every valid row), which is always
+    /// correct because only rows `span_start..` of a session sequence
+    /// are contractual.  A sequence with `Some(sref)` draws its PRNG
+    /// streams from the session (`prng::session_seed`), not its batch
+    /// slot, so its output is invariant to co-batching.
+    pub sessions: Option<&'a [Option<SessionRef>]>,
 }
 
 impl<'a> AttnBatch<'a> {
     /// Dense batch: every row of every slice is valid.
     pub fn new(q: &'a BatchMatrix, k: &'a BatchMatrix, v: &'a BatchMatrix,
                seed: u64) -> Self {
-        let b = Self { q, k, v, seed, lens: None };
+        let b = Self { q, k, v, seed, lens: None, sessions: None };
         b.validate();
         b
     }
@@ -183,6 +311,15 @@ impl<'a> AttnBatch<'a> {
     /// Attach per-sequence valid lengths (each in `1..=N`).
     pub fn with_lens(mut self, lens: &'a [usize]) -> Self {
         self.lens = Some(lens);
+        self.validate();
+        self
+    }
+
+    /// Attach per-sequence decode-session annotations (one entry per
+    /// sequence; `None` entries are ordinary one-shot requests).
+    pub fn with_sessions(mut self,
+                         sessions: &'a [Option<SessionRef>]) -> Self {
+        self.sessions = Some(sessions);
         self.validate();
         self
     }
@@ -205,6 +342,18 @@ impl<'a> AttnBatch<'a> {
             for (b, &l) in lens.iter().enumerate() {
                 assert!((1..=self.q.rows).contains(&l),
                         "lens[{b}] = {l} out of 1..={}", self.q.rows);
+            }
+        }
+        if let Some(sessions) = self.sessions {
+            assert_eq!(sessions.len(), self.q.batch,
+                       "sessions must have one entry per sequence");
+            for (b, s) in sessions.iter().enumerate() {
+                if let Some(sref) = s {
+                    let l = self.valid_len(b);
+                    assert!(sref.span_start < l,
+                            "sessions[{b}] span_start {} leaves no row \
+                             in 0..{l}", sref.span_start);
+                }
             }
         }
     }
@@ -281,6 +430,48 @@ mod tests {
     }
 
     #[test]
+    fn query_span_selects_the_tail_and_restores_at_offset() {
+        let (q, k, v) = qkv(8, 4, 9);
+        // span over the masked valid prefix: rows 5..7 are active
+        let p = AttnProblem::new(&q, &k, &v)
+            .with_valid_len(7)
+            .with_query_span(5);
+        assert!(p.is_spanned());
+        assert_eq!(p.span_start(), 5);
+        let sq = p.span_q();
+        assert!(sq.bit_identical(&q.row_span(5, 7)));
+        // restore: 2 active rows land at offset 5, everything else zero
+        let out = p.restore_span(Matrix::from_vec(2, 4, vec![1.0; 8]));
+        assert_eq!((out.rows, out.cols), (8, 4));
+        assert!(out.data[..5 * 4].iter().all(|&x| x == 0.0));
+        assert!(out.data[5 * 4..7 * 4].iter().all(|&x| x == 1.0));
+        assert!(out.data[7 * 4..].iter().all(|&x| x == 0.0));
+        // span 0 is the dense problem: borrow, no copy
+        let dense = AttnProblem::new(&q, &k, &v).with_query_span(0);
+        assert!(!dense.is_spanned());
+        assert!(matches!(dense.span_q(), Cow::Borrowed(_)));
+    }
+
+    #[test]
+    #[should_panic(expected = "query_span")]
+    fn query_span_past_the_valid_rows_is_rejected() {
+        let (q, k, v) = qkv(8, 4, 10);
+        let _ = AttnProblem::new(&q, &k, &v)
+            .with_valid_len(5)
+            .with_query_span(5); // leaves no active row
+    }
+
+    #[test]
+    fn cache_refs_compare_by_session_and_generation() {
+        let a = CacheRef { session: 1, generation: 0 };
+        let b = CacheRef { session: 1, generation: 1 };
+        assert_ne!(a, b);
+        assert_eq!(a, CacheRef { session: 1, generation: 0 });
+        let s = SessionRef { cache: a, span_start: 16 };
+        assert_eq!(s.cache.session, 1);
+    }
+
+    #[test]
     #[should_panic(expected = "valid_len")]
     fn zero_valid_len_is_rejected() {
         let (q, k, v) = qkv(4, 2, 3);
@@ -328,6 +519,42 @@ mod tests {
         let v = BatchMatrix::randn(2, 1, 4, 2, &mut rng);
         let lens = [4usize];
         let _ = AttnBatch::new(&q, &k, &v, 0).with_lens(&lens);
+    }
+
+    #[test]
+    fn batch_sessions_attach_per_sequence() {
+        let mut rng = Xoshiro256::new(8);
+        let q = BatchMatrix::randn(2, 1, 8, 4, &mut rng);
+        let k = BatchMatrix::randn(2, 1, 8, 4, &mut rng);
+        let v = BatchMatrix::randn(2, 1, 8, 4, &mut rng);
+        let lens = [6usize, 8];
+        let sref = SessionRef {
+            cache: CacheRef { session: 9, generation: 0 },
+            span_start: 4,
+        };
+        let sessions = [Some(sref), None];
+        let b = AttnBatch::new(&q, &k, &v, 0)
+            .with_lens(&lens)
+            .with_sessions(&sessions);
+        assert_eq!(b.sessions.unwrap()[0], Some(sref));
+        assert!(b.sessions.unwrap()[1].is_none());
+    }
+
+    #[test]
+    #[should_panic(expected = "span_start")]
+    fn batch_session_span_must_leave_a_row() {
+        let mut rng = Xoshiro256::new(9);
+        let q = BatchMatrix::randn(1, 1, 8, 4, &mut rng);
+        let k = BatchMatrix::randn(1, 1, 8, 4, &mut rng);
+        let v = BatchMatrix::randn(1, 1, 8, 4, &mut rng);
+        let lens = [5usize];
+        let sessions = [Some(SessionRef {
+            cache: CacheRef { session: 1, generation: 0 },
+            span_start: 5, // == valid len: no new row
+        })];
+        let _ = AttnBatch::new(&q, &k, &v, 0)
+            .with_lens(&lens)
+            .with_sessions(&sessions);
     }
 
     #[test]

@@ -186,6 +186,17 @@ pub fn hamming_kmeans(codes: &BitCodes, n_clusters: usize, iters: usize,
 pub fn hamming_kmeans_ctx(codes: &BitCodes, n_clusters: usize, iters: usize,
                           point_mask: Option<&[bool]>, ctx: &ExecCtx)
                           -> Clustering {
+    hamming_kmeans_model_ctx(codes, n_clusters, iters, point_mask, ctx).0
+}
+
+/// [`hamming_kmeans_ctx`] that also returns the final centroid codes
+/// (`n_clusters × words_per_code` packed words) — the piece a KV-cached
+/// decode session stores so later steps can assign *new* queries to the
+/// frozen clustering ([`assign_nearest`] against these centroids)
+/// without re-running Lloyd iterations.
+pub fn hamming_kmeans_model_ctx(codes: &BitCodes, n_clusters: usize,
+                                iters: usize, point_mask: Option<&[bool]>,
+                                ctx: &ExecCtx) -> (Clustering, Vec<u64>) {
     assert!(n_clusters >= 1 && codes.n >= 1);
     let wpc = codes.words_per_code;
     // strided init
@@ -275,7 +286,7 @@ pub fn hamming_kmeans_ctx(codes: &BitCodes, n_clusters: usize, iters: usize,
     for &g in &groups {
         counts[g as usize] += 1;
     }
-    Clustering { n_clusters, groups, counts, cost }
+    (Clustering { n_clusters, groups, counts, cost }, cent)
 }
 
 /// Euclidean K-Means baseline (plain Lloyd on the raw vectors) — used by
@@ -566,6 +577,26 @@ mod tests {
             want_cost += best.0 as u64;
         }
         assert_eq!(cost, want_cost);
+    }
+
+    #[test]
+    fn kmeans_model_centroids_reproduce_the_final_assignment() {
+        // the returned centroids must be exactly the ones the final
+        // assignment ran against: assign_nearest over them reproduces
+        // groups and cost bit-for-bit
+        let codes = random_codes(150, 63, 17);
+        let (cl, cent) = hamming_kmeans_model_ctx(
+            &codes, 6, 10, None, &ExecCtx::sequential());
+        assert_eq!(cent.len(), 6 * codes.words_per_code);
+        let mut groups = vec![0u32; codes.n];
+        let cost = assign_nearest(&codes, &cent, 6, &mut groups,
+                                  &ExecCtx::sequential());
+        assert_eq!(groups, cl.groups);
+        assert_eq!(cost, cl.cost);
+        // and the plain entry point is the model entry point minus cent
+        let plain = hamming_kmeans(&codes, 6, 10, None);
+        assert_eq!(plain.groups, cl.groups);
+        assert_eq!(plain.cost, cl.cost);
     }
 
     #[test]

@@ -42,9 +42,26 @@
 //!
 //! Execution goes through the [`AttentionBackend`] seam
 //! ([`attention::backend`](crate::attention::backend)): every bucket
-//! dispatcher drives a [`NativeBackend`] today, and a compiled-HLO,
-//! KV-cached or sharded backend plugs in behind the same descriptor.
+//! dispatcher drives a [`CachingBackend`] wrapping a [`NativeBackend`],
+//! and a compiled-HLO or sharded backend plugs in behind the same
+//! descriptor.
+//!
+//! **Decode sessions:** [`ServingGateway::submit_session`] serves
+//! autoregressive traffic.  A session submits its *full history* each
+//! step (`len` grows monotonically); the gateway tracks the served
+//! length, attaches a [`SessionRef`] (cache handle + span start) to the
+//! flush descriptor, and the shared [`KvCache`] lets the backend solve
+//! only the new rows against the cached K/V panels — the reply carries
+//! just the span rows.  Sessions are *pinned* to the bucket that served
+//! them and **route up** when the grown history outgrows it; the cache
+//! is gateway-global, so a migrated session keeps its panels.  Session
+//! PRNG streams key off the session id (`prng::session_seed`), not the
+//! batch slot, so a step's bits are invariant to co-batched traffic and
+//! equal the full unpadded recompute of its history
+//! ([`session_reference`]) — hit or miss, property-tested per kernel
+//! family.
 
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -52,7 +69,9 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, bail, Result};
 
 use crate::attention::{AttentionBackend, AttentionKernel, AttnBatch,
-                       AttnProblem, NativeBackend};
+                       AttnProblem, CacheRef, CachingBackend, KvCache,
+                       KvCacheOptions, NativeBackend, SeqOutcome,
+                       SessionRef};
 use crate::exec::{Channel, ExecCtx, SharedWorkerPool};
 use crate::metrics::{LatencyHistogram, PaddingWaste};
 use crate::prng::Xoshiro256;
@@ -91,18 +110,32 @@ pub struct GatewayRequest {
     pub k: Vec<f32>,
     pub v: Vec<f32>,
     pub len: usize,
+    /// Decode-session annotation (cache handle + span start); `None`
+    /// for ordinary one-shot requests.
+    pub session: Option<SessionRef>,
     pub enqueued: Instant,
     pub reply: mpsc::Sender<GatewayResponse>,
 }
 
-/// Per-request result: the (H, len, Dv) valid output rows, flattened
-/// row-major — padding rows never leave the gateway.
+/// Per-request result: the `(H, len - span_start, Dv)` output rows of
+/// this step, flattened row-major — padding rows (and, for decode
+/// steps, the already-served prefix rows) never leave the gateway.
 #[derive(Debug, Clone)]
 pub struct GatewayResponse {
     pub id: u64,
     pub out: Vec<f32>,
-    /// Valid sequence length (rows per head in `out`).
+    /// Valid sequence length (full history rows for decode steps).
     pub len: usize,
+    /// First row `out` covers: 0 for one-shot requests and prefills,
+    /// the previously served length for decode steps.
+    pub span_start: usize,
+    /// Session id when this was a decode-session step.
+    pub session: Option<u64>,
+    /// Decode steps: whether the KV cache held the prefix (`true`) or
+    /// the step fell back to a full recompute (`false`).  `None` for
+    /// one-shot requests.  Either way `out` is bit-identical to the
+    /// full unpadded recompute of the history.
+    pub cache_hit: Option<bool>,
     /// Pad-to length of the bucket that served the request.
     pub bucket_seq_len: usize,
     /// Whether valid-length masking was applied: `true` means `out` is
@@ -138,8 +171,18 @@ pub struct GatewayOptions {
     /// Apply valid-length masking (default).  `false` restores the
     /// static-shape semantics of the pre-masking gateway: padded K rows
     /// participate in softmax and responses depend on the bucket
-    /// length.  Useful only for comparison benches.
+    /// length.  Useful only for comparison benches.  Decode sessions
+    /// require masking (the cache stores true-length histories).
     pub mask: bool,
+    /// KV-cache capacity in cached sequence rows (`Σ session len`),
+    /// shared by every bucket.  0 caches nothing — decode sessions
+    /// still work, every step just recomputes.
+    pub cache_capacity_rows: usize,
+    /// Clustered-family re-cluster threshold
+    /// ([`KvCacheOptions::growth`]): 1.0 (default) re-clusters every
+    /// step (exact everywhere); above 1.0 reuses the frozen clustering
+    /// between re-clusters.
+    pub cache_growth: f64,
 }
 
 impl Default for GatewayOptions {
@@ -152,6 +195,8 @@ impl Default for GatewayOptions {
             route_up: true,
             par_rows: 0,
             mask: true,
+            cache_capacity_rows: usize::MAX,
+            cache_growth: 1.0,
         }
     }
 }
@@ -174,10 +219,41 @@ pub struct BucketMetrics {
     /// Rows the kernels actually executed (`Σ len` masked,
     /// `Σ seq_len` unmasked).
     pub computed_rows: AtomicU64,
+    /// Decode steps whose cached prefix was found (only the span was
+    /// solved).
+    pub cache_hits: AtomicU64,
+    /// Decode steps that fell back to a full recompute (prefills,
+    /// evictions, stale generations).
+    pub cache_misses: AtomicU64,
+    /// History rows cache hits did *not* materialize
+    /// (`Σ (len − executed)`, per the backend's own accounting) — the
+    /// decode compute the cache actually saved this bucket; 0 for
+    /// families whose exact span is a full recompute (lsh).
+    pub saved_rows: AtomicU64,
+    /// History rows miss fallbacks recomputed (`Σ len`).
+    pub recomputed_rows: AtomicU64,
+    /// Sessions this bucket accepted after outgrowing a smaller bucket
+    /// (decode route-up; the cache entry migrates with them).
+    pub session_route_up: AtomicU64,
     pub latency: Mutex<LatencyHistogram>,
 }
 
 impl BucketMetrics {
+    /// Cache hits over decode steps, in [0, 1] (0 with no sessions).
+    pub fn cache_hit_rate(&self) -> f64 {
+        let h = self.cache_hits.load(Ordering::Relaxed) as f64;
+        let m = self.cache_misses.load(Ordering::Relaxed) as f64;
+        if h + m == 0.0 { 0.0 } else { h / (h + m) }
+    }
+
+    /// Fraction of decode history rows the cache kept out of the
+    /// kernels, in [0, 1]: saved / (saved + recomputed-on-miss).
+    pub fn recompute_saved(&self) -> f64 {
+        let saved = self.saved_rows.load(Ordering::Relaxed) as f64;
+        let redone = self.recomputed_rows.load(Ordering::Relaxed) as f64;
+        if saved + redone == 0.0 { 0.0 } else { saved / (saved + redone) }
+    }
+
     /// Mean requests per executed batch.
     pub fn occupancy(&self) -> f64 {
         let b = self.batches.load(Ordering::Relaxed).max(1);
@@ -222,6 +298,15 @@ impl BucketMetrics {
     }
 }
 
+/// One live decode session's gateway-side state.
+struct SessionState {
+    generation: u64,
+    /// History rows already served (the next step's span start).
+    len: usize,
+    /// Bucket the session is pinned to (index; `None` before prefill).
+    bucket: Option<usize>,
+}
+
 /// Multi-bucket native attention serving gateway (see module docs).
 pub struct ServingGateway {
     shape: GatewayShape,
@@ -231,6 +316,12 @@ pub struct ServingGateway {
     /// Requests longer than every bucket (no candidate at all).
     overlong: AtomicU64,
     route_up: bool,
+    mask: bool,
+    /// Gateway-global KV cache, shared by every bucket dispatcher —
+    /// route-up migrates a session without losing its panels.
+    cache: Arc<KvCache>,
+    sessions: Mutex<HashMap<u64, SessionState>>,
+    next_generation: AtomicU64,
     workers: Vec<std::thread::JoinHandle<()>>,
     next_id: AtomicU64,
 }
@@ -259,6 +350,10 @@ impl ServingGateway {
         } else {
             SharedWorkerPool::new(opts.workers)
         });
+        let cache = Arc::new(KvCache::new(KvCacheOptions {
+            capacity_rows: opts.cache_capacity_rows,
+            growth: opts.cache_growth,
+        }));
 
         let mut ingress = Vec::new();
         let mut metrics = Vec::new();
@@ -270,7 +365,8 @@ impl ServingGateway {
             ingress.push(ch.clone());
             metrics.push(m.clone());
             let worker = BucketWorker {
-                backend: NativeBackend::by_name(&bucket.kernel)
+                backend: CachingBackend::native(&bucket.kernel,
+                                                cache.clone())
                     .expect("validated above"),
                 shape,
                 seq_len: bucket.seq_len,
@@ -309,6 +405,10 @@ impl ServingGateway {
             metrics,
             overlong: AtomicU64::new(0),
             route_up: opts.route_up,
+            mask: opts.mask,
+            cache,
+            sessions: Mutex::new(HashMap::new()),
+            next_generation: AtomicU64::new(0),
             workers,
             next_id: AtomicU64::new(0),
         })
@@ -343,7 +443,7 @@ impl ServingGateway {
     }
 
     fn make_request(&self, q: Vec<f32>, k: Vec<f32>, v: Vec<f32>,
-                    len: usize)
+                    len: usize, session: Option<SessionRef>)
                     -> Result<(GatewayRequest,
                                mpsc::Receiver<GatewayResponse>)> {
         if len == 0 {
@@ -366,10 +466,139 @@ impl ServingGateway {
             k,
             v,
             len,
+            session,
             enqueued: Instant::now(),
             reply: tx,
         };
         Ok((req, rx))
+    }
+
+    /// Resolve one decode step: the session's cache handle and span,
+    /// plus the bucket it must be offered to first.  Sessions stay
+    /// pinned to their bucket until the history outgrows it, then move
+    /// up to the tightest bucket that still fits (the table commits
+    /// only after the step is accepted).
+    fn session_step(&self, session: u64, len: usize)
+                    -> Result<(SessionRef, usize)> {
+        if !self.mask {
+            bail!("decode sessions require valid-length masking \
+                   (GatewayOptions::mask)");
+        }
+        let tight = self.router.route_index(len).ok_or_else(|| {
+            self.overlong.fetch_add(1, Ordering::Relaxed);
+            anyhow!("session {session} history of {len} rows exceeds \
+                     every bucket (max {})", self.router.max_len())
+        })?;
+        // read-only: the table entry is created only when the step is
+        // accepted (commit_session), so a rejected or malformed first
+        // request leaks no session state
+        let (generation, span, pinned) = {
+            let table = self.sessions.lock().unwrap();
+            match table.get(&session) {
+                Some(st) => {
+                    if len <= st.len {
+                        bail!("session {session} step of len {len} does \
+                               not extend the {} rows already served",
+                              st.len);
+                    }
+                    (st.generation, st.len, st.bucket)
+                }
+                None => (self
+                             .next_generation
+                             .fetch_add(1, Ordering::Relaxed),
+                         0, None),
+            }
+        };
+        // pinned bucket, routed up when the history outgrew it
+        let target = pinned.map_or(tight, |b| b.max(tight));
+        Ok((SessionRef {
+            cache: CacheRef { session, generation },
+            span_start: span,
+        }, target))
+    }
+
+    /// Record a successfully enqueued step: create/advance the
+    /// session's table entry and (re-)pin the bucket, counting decode
+    /// route-ups.
+    fn commit_session(&self, session: u64, generation: u64, len: usize,
+                      bucket: usize) {
+        let mut table = self.sessions.lock().unwrap();
+        let st = table.entry(session).or_insert(SessionState {
+            generation,
+            len: 0,
+            bucket: None,
+        });
+        if let Some(prev) = st.bucket {
+            if bucket > prev {
+                self.metrics[bucket]
+                    .session_route_up
+                    .fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        st.len = len;
+        st.bucket = Some(bucket);
+    }
+
+    /// Fail-fast decode-session submit: the full history so far plus
+    /// the session id.  The reply carries only this step's new rows
+    /// (`span_start..len`), bit-identical to recomputing the history
+    /// unpadded.  See the module docs for pinning and route-up.
+    pub fn submit_session(&self, q: Vec<f32>, k: Vec<f32>, v: Vec<f32>,
+                          len: usize, session: u64)
+                          -> Result<mpsc::Receiver<GatewayResponse>> {
+        let (sref, target) = self.session_step(session, len)?;
+        let (req, rx) = self.make_request(q, k, v, len, Some(sref))?;
+        let rest = (target + 1)..self.ingress.len();
+        match offer(&self.ingress, target, rest, self.route_up, req) {
+            Ok(idx) => {
+                if idx != target {
+                    self.metrics[idx]
+                        .routed_up
+                        .fetch_add(1, Ordering::Relaxed);
+                }
+                self.commit_session(session, sref.cache.generation,
+                                    len, idx);
+                Ok(rx)
+            }
+            Err(_) => {
+                self.metrics[target]
+                    .rejected
+                    .fetch_add(1, Ordering::Relaxed);
+                Err(anyhow!(
+                    "bucket N={} queue full (backpressure{})",
+                    self.router.buckets()[target].seq_len,
+                    if self.route_up { ", route-up exhausted" }
+                    else { "" }))
+            }
+        }
+    }
+
+    /// Blocking decode-session submit: waits out backpressure on the
+    /// session's (possibly grown) pinned bucket.
+    pub fn submit_session_blocking(&self, q: Vec<f32>, k: Vec<f32>,
+                                   v: Vec<f32>, len: usize, session: u64)
+                                   -> Result<mpsc::Receiver<GatewayResponse>>
+    {
+        let (sref, target) = self.session_step(session, len)?;
+        let (req, rx) = self.make_request(q, k, v, len, Some(sref))?;
+        self.ingress[target]
+            .send(req)
+            .map_err(|_| anyhow!("gateway shut down"))?;
+        self.commit_session(session, sref.cache.generation, len, target);
+        Ok(rx)
+    }
+
+    /// Forget a session: its gateway state and cached panels are
+    /// dropped, and the generation counter guarantees a later session
+    /// under the same id can never alias the old cache entry.
+    pub fn end_session(&self, session: u64) {
+        self.sessions.lock().unwrap().remove(&session);
+        self.cache.invalidate(session);
+    }
+
+    /// The gateway-global KV cache (counters, capacity introspection).
+    pub fn cache(&self) -> &Arc<KvCache> {
+        &self.cache
     }
 
     /// Fail-fast submit with route-up admission control: try the
@@ -377,7 +606,7 @@ impl ServingGateway {
     /// backpressure error when every candidate is full.
     pub fn submit(&self, q: Vec<f32>, k: Vec<f32>, v: Vec<f32>, len: usize)
                   -> Result<mpsc::Receiver<GatewayResponse>> {
-        let (req, rx) = self.make_request(q, k, v, len)?;
+        let (req, rx) = self.make_request(q, k, v, len, None)?;
         let mut candidates = self.router.route_candidates(len);
         let Some(tight) = candidates.next() else {
             self.overlong.fetch_add(1, Ordering::Relaxed);
@@ -409,7 +638,7 @@ impl ServingGateway {
     pub fn submit_blocking(&self, q: Vec<f32>, k: Vec<f32>, v: Vec<f32>,
                            len: usize)
                            -> Result<mpsc::Receiver<GatewayResponse>> {
-        let (req, rx) = self.make_request(q, k, v, len)?;
+        let (req, rx) = self.make_request(q, k, v, len, None)?;
         let idx = self.router.route_index(len).ok_or_else(|| {
             self.overlong.fetch_add(1, Ordering::Relaxed);
             anyhow!("request of length {len} exceeds every bucket (max {})",
@@ -483,11 +712,21 @@ pub fn pad_batch(blocks: &[(&[f32], usize)], heads: usize, seq_len: usize,
 /// replying; the determinism property test and the `gateway` bench use
 /// it to slice the sequential reference run identically.
 pub fn valid_rows(out: &BatchMatrix, slot: usize, len: usize) -> Vec<f32> {
+    span_rows(out, slot, 0, len)
+}
+
+/// The `(H, len - span_start, Dv)` span rows of batch slot `slot` — the
+/// decode-step sibling of [`valid_rows`]: a session reply carries only
+/// the rows this step computed.
+pub fn span_rows(out: &BatchMatrix, slot: usize, span_start: usize,
+                 len: usize) -> Vec<f32> {
+    debug_assert!(span_start <= len && len <= out.rows);
     let (n, dv, heads) = (out.rows, out.cols, out.heads);
-    let mut rows = Vec::with_capacity(heads * len * dv);
+    let mut rows = Vec::with_capacity(heads * (len - span_start) * dv);
     for h in 0..heads {
         let base = (slot * heads + h) * n * dv;
-        rows.extend_from_slice(&out.data[base..base + len * dv]);
+        rows.extend_from_slice(
+            &out.data[base + span_start * dv..base + len * dv]);
     }
     rows
 }
@@ -527,12 +766,51 @@ pub fn unpadded_reference(kernel: &dyn AttentionKernel, shape: GatewayShape,
     out
 }
 
+/// The unpadded full-history recompute of one decode-session step: the
+/// oracle a session reply must match bit-for-bit, hit or miss.
+///
+/// `q`/`k`/`v` are the step's full (H, len, D) history blocks; the
+/// per-head streams come from the *session* (`prng::session_seed`), not
+/// a batch slot, which is what makes the reply invariant to co-batched
+/// traffic.  Returns the `(H, len - span_start, Dv)` span rows, exactly
+/// like the reply's `out`.
+#[allow(clippy::too_many_arguments)]
+pub fn session_reference(kernel: &dyn AttentionKernel, shape: GatewayShape,
+                         seed: u64, session: u64, q: &[f32], k: &[f32],
+                         v: &[f32], len: usize, span_start: usize)
+                         -> Vec<f32> {
+    assert_eq!(q.len(), shape.qk_len(len), "q block is not (H, len, Dk)");
+    assert_eq!(k.len(), shape.qk_len(len), "k block is not (H, len, Dk)");
+    assert_eq!(v.len(), shape.v_len(len), "v block is not (H, len, Dv)");
+    assert!(span_start < len, "span must leave a row");
+    let (dk, dv) = (shape.dk, shape.dv);
+    let seed2 = crate::prng::session_seed(seed, session);
+    let mut out =
+        Vec::with_capacity(shape.heads * (len - span_start) * dv);
+    for h in 0..shape.heads {
+        let mut rng = crate::prng::slice_stream(seed2, h as u64);
+        let qm = Matrix::from_vec(len, dk,
+                                  q[h * len * dk..(h + 1) * len * dk]
+                                      .to_vec());
+        let km = Matrix::from_vec(len, dk,
+                                  k[h * len * dk..(h + 1) * len * dk]
+                                      .to_vec());
+        let vm = Matrix::from_vec(len, dv,
+                                  v[h * len * dv..(h + 1) * len * dv]
+                                      .to_vec());
+        let o = kernel.solve(&AttnProblem::new(&qm, &km, &vm), &mut rng,
+                             &ExecCtx::sequential());
+        out.extend_from_slice(&o.data[span_start * dv..]);
+    }
+    out
+}
+
 /// One bucket's dispatcher state: the backend it drives plus everything
 /// a flush needs.  Keeping it a struct (instead of a nine-argument
 /// function) is what lets the backend seam swap implementations without
 /// touching the dispatch loop.
 struct BucketWorker {
-    backend: NativeBackend,
+    backend: CachingBackend,
     shape: GatewayShape,
     seq_len: usize,
     metrics: Arc<BucketMetrics>,
@@ -589,10 +867,17 @@ impl BucketWorker {
             batch.iter().map(|r| r.enqueued.elapsed()).collect();
 
         // the request descriptor: the true lengths ride along, so the
-        // backend masks padded rows out of the compute entirely
+        // backend masks padded rows out of the compute entirely, and
+        // decode steps carry their cache handle + span
+        let sessions: Vec<Option<SessionRef>> =
+            batch.iter().map(|r| r.session).collect();
+        let any_session = sessions.iter().any(|s| s.is_some());
         let mut descriptor = AttnBatch::new(&q, &k, &v, self.seed);
         if self.mask {
             descriptor = descriptor.with_lens(&lens);
+        }
+        if any_session {
+            descriptor = descriptor.with_sessions(&sessions);
         }
 
         // one lease per flush: live leases never sum above the shared
@@ -602,7 +887,12 @@ impl BucketWorker {
         // them all — without changing a single output bit.
         let lease = self.pool.lease();
         let ctx = ExecCtx::with_par_rows(*lease, self.par_rows);
-        let out = self.backend.execute(&descriptor, &ctx);
+        let (out, outcomes) = if any_session {
+            self.backend.execute_with_report(&descriptor, &ctx)
+        } else {
+            (self.backend.execute(&descriptor, &ctx),
+             vec![SeqOutcome::Bypass; occupancy])
+        };
         drop(lease);
 
         let metrics = &self.metrics;
@@ -612,7 +902,8 @@ impl BucketWorker {
             .fetch_add(occupancy as u64, Ordering::Relaxed);
 
         for (slot, req) in batch.into_iter().enumerate() {
-            let rows = valid_rows(&out, slot, req.len);
+            let span = req.session.map_or(0, |s| s.span_start);
+            let rows = span_rows(&out, slot, span, req.len);
             let total = req.enqueued.elapsed();
             metrics.completed.fetch_add(1, Ordering::Relaxed);
             // the masked/unmasked executed-rows rule lives in
@@ -624,6 +915,29 @@ impl BucketWorker {
             } else {
                 delta.add(req.len, seq_len);
             }
+            let cache_hit = match outcomes[slot] {
+                SeqOutcome::Hit { computed_rows, .. } => {
+                    metrics.cache_hits.fetch_add(1, Ordering::Relaxed);
+                    // honest accounting: the backend reports what it
+                    // actually materialized (the span for incremental
+                    // families, the full history for the
+                    // recompute-with-extraction ones), so `saved` is
+                    // real work avoided, never phantom savings
+                    let spared = req.len.saturating_sub(computed_rows);
+                    metrics
+                        .saved_rows
+                        .fetch_add(spared as u64, Ordering::Relaxed);
+                    delta.computed = computed_rows as u64;
+                    Some(true)
+                }
+                SeqOutcome::Miss { recomputed_rows } => {
+                    metrics.cache_misses.fetch_add(1, Ordering::Relaxed);
+                    metrics.recomputed_rows.fetch_add(
+                        recomputed_rows as u64, Ordering::Relaxed);
+                    Some(false)
+                }
+                SeqOutcome::Bypass => None,
+            };
             metrics.valid_rows.fetch_add(delta.valid, Ordering::Relaxed);
             metrics.padded_rows.fetch_add(delta.padded, Ordering::Relaxed);
             metrics
@@ -634,6 +948,9 @@ impl BucketWorker {
                 id: req.id,
                 out: rows,
                 len: req.len,
+                span_start: span,
+                session: req.session.map(|s| s.cache.session),
+                cache_hit,
                 bucket_seq_len: seq_len,
                 masked: self.mask,
                 queue_time: queue_times[slot],
@@ -655,6 +972,10 @@ pub struct TraceItem {
     pub k: Vec<f32>,
     pub v: Vec<f32>,
     pub len: usize,
+    /// Decode-session id: the item is one step of a growing history
+    /// (replayed in order through `submit_session_blocking`).  `None`
+    /// = ordinary one-shot request.
+    pub session: Option<u64>,
 }
 
 /// Mixed-length synthetic trace: lengths are log₂-uniform in
@@ -677,14 +998,65 @@ pub fn synthetic_trace(shape: GatewayShape, min_len: usize, max_len: usize,
                 k: rng.normal_vec(shape.qk_len(len)),
                 v: rng.normal_vec(shape.v_len(len)),
                 len,
+                session: None,
             }
         })
         .collect()
 }
 
+/// Multi-step decode-session trace: `sessions` concurrent sessions,
+/// each a prefill of `prefill` rows followed by `steps` decode steps of
+/// `step_len` new rows.  Every item carries the session's *full
+/// history so far* (the submit-session protocol), and the prefixes are
+/// bit-identical across steps — each session's history is generated
+/// once and sliced — so the cache-hit path sees exactly the bytes it
+/// cached.  Items are emitted step-round-robin across sessions;
+/// [`replay_blocking`] keeps each session's steps in order.
+pub fn synthetic_decode_trace(shape: GatewayShape, prefill: usize,
+                              steps: usize, step_len: usize,
+                              sessions: usize, seed: u64)
+                              -> Vec<TraceItem> {
+    assert!(prefill >= 1 && step_len >= 1 && sessions >= 1,
+            "bad decode trace parameters");
+    let total = prefill + steps * step_len;
+    let mut rng = Xoshiro256::new(seed);
+    let histories: Vec<(Vec<f32>, Vec<f32>, Vec<f32>)> = (0..sessions)
+        .map(|_| (rng.normal_vec(shape.qk_len(total)),
+                  rng.normal_vec(shape.qk_len(total)),
+                  rng.normal_vec(shape.v_len(total))))
+        .collect();
+    // (H, total, D) row-major → the (H, len, D) prefix is per-head
+    let prefix = |data: &[f32], d: usize, len: usize| -> Vec<f32> {
+        let mut out = Vec::with_capacity(shape.heads * len * d);
+        for h in 0..shape.heads {
+            let base = h * total * d;
+            out.extend_from_slice(&data[base..base + len * d]);
+        }
+        out
+    };
+    let mut items = Vec::new();
+    for step in 0..=steps {
+        let len = prefill + step * step_len;
+        for (sid, (q, k, v)) in histories.iter().enumerate() {
+            items.push(TraceItem {
+                q: prefix(q, shape.dk, len),
+                k: prefix(k, shape.dk, len),
+                v: prefix(v, shape.dv, len),
+                len,
+                session: Some(sid as u64),
+            });
+        }
+    }
+    items
+}
+
 /// Replay a trace through the gateway from `clients` concurrent blocking
-/// submitters (client `c` takes items `c, c+clients, …`); responses come
-/// back in trace order.  Every trace length must fit some bucket.
+/// submitters; responses come back in trace order.  One-shot items
+/// round-robin across clients; session items pin to the lane
+/// `session % clients`, so a session's steps replay strictly in trace
+/// order (each step waits for the previous reply — the span
+/// bookkeeping decode requires).  Every trace length must fit some
+/// bucket.
 pub fn replay_blocking(gw: &ServingGateway, trace: Vec<TraceItem>,
                        clients: usize) -> Vec<GatewayResponse> {
     let n = trace.len();
@@ -692,7 +1064,11 @@ pub fn replay_blocking(gw: &ServingGateway, trace: Vec<TraceItem>,
     let mut lanes: Vec<Vec<(usize, TraceItem)>> =
         (0..clients).map(|_| Vec::new()).collect();
     for (i, item) in trace.into_iter().enumerate() {
-        lanes[i % clients].push((i, item));
+        let lane = match item.session {
+            Some(sid) => sid as usize % clients,
+            None => i % clients,
+        };
+        lanes[lane].push((i, item));
     }
     let mut out: Vec<Option<GatewayResponse>> = Vec::with_capacity(n);
     out.resize_with(n, || None);
@@ -703,10 +1079,13 @@ pub fn replay_blocking(gw: &ServingGateway, trace: Vec<TraceItem>,
                 scope.spawn(move || {
                     let mut got = Vec::with_capacity(lane.len());
                     for (i, item) in lane {
-                        let rx = gw
-                            .submit_blocking(item.q, item.k, item.v,
-                                             item.len)
-                            .expect("trace length exceeds every bucket");
+                        let rx = match item.session {
+                            Some(sid) => gw.submit_session_blocking(
+                                item.q, item.k, item.v, item.len, sid),
+                            None => gw.submit_blocking(item.q, item.k,
+                                                       item.v, item.len),
+                        }
+                        .expect("trace item rejected");
                         got.push((i, rx.recv().expect("gateway dropped \
                                                        a trace request")));
                     }
@@ -729,9 +1108,14 @@ pub fn replay_blocking(gw: &ServingGateway, trace: Vec<TraceItem>,
 /// the padded-buffer fraction that was padding (static shapes always
 /// pay it); `cmp waste %` is the *executed*-row fraction that was
 /// padding — 0.0 when masking is on, equal to `mem waste %` when off.
-pub const BUCKET_REPORT_HEADERS: [&str; 11] =
+/// `hit %` is the KV-cache hit rate over decode steps and
+/// `saved %` the fraction of decode history rows the cache kept out of
+/// the kernels ([`BucketMetrics::recompute_saved`]) — both 0.0 for
+/// buckets that served no sessions.
+pub const BUCKET_REPORT_HEADERS: [&str; 13] =
     ["N", "kernel", "done", "routed-up", "rejected", "occupancy",
-     "p50 ms", "p99 ms", "rows/s", "mem waste %", "cmp waste %"];
+     "p50 ms", "p99 ms", "rows/s", "mem waste %", "cmp waste %",
+     "hit %", "saved %"];
 
 /// Per-bucket serving report, one row of strings per bucket (ascending
 /// seq_len), ready for a `benchlib::Table` with
@@ -759,6 +1143,8 @@ pub fn bucket_report(gw: &ServingGateway, wall_s: f64) -> Vec<Vec<String>> {
                         else { 0.0 }),
                 format!("{:.1}", 100.0 * m.padding_waste()),
                 format!("{:.1}", 100.0 * m.compute_waste()),
+                format!("{:.1}", 100.0 * m.cache_hit_rate()),
+                format!("{:.1}", 100.0 * m.recompute_saved()),
             ]
         })
         .collect()
@@ -826,9 +1212,7 @@ mod tests {
                 queue_capacity: 8,
                 workers: 4,
                 seed: 17,
-                route_up: true,
-                par_rows: 0,
-                mask: true,
+                ..GatewayOptions::default()
             },
         )
         .unwrap();
@@ -1020,6 +1404,188 @@ mod tests {
         let none = ServingGateway::start(SHAPE, vec![],
                                          GatewayOptions::default());
         assert!(none.is_err());
+    }
+
+    #[test]
+    fn decode_session_replies_match_the_full_recompute_span_for_span() {
+        let gw = ServingGateway::start(
+            SHAPE,
+            vec![Bucket::native("full", 32, 2)],
+            GatewayOptions {
+                max_wait: Duration::from_millis(2),
+                seed: 23,
+                ..GatewayOptions::default()
+            },
+        )
+        .unwrap();
+        // one session: prefill 10, steps to 16 and 22; items carry the
+        // full history with bit-identical prefixes
+        let trace = synthetic_decode_trace(SHAPE, 10, 2, 6, 1, 40);
+        assert_eq!(trace.len(), 3);
+        let kernel = kernel_by_name("full").unwrap();
+        let mut prev_len = 0usize;
+        for (step, item) in trace.iter().enumerate() {
+            let rx = gw
+                .submit_session_blocking(item.q.clone(), item.k.clone(),
+                                         item.v.clone(), item.len, 0)
+                .unwrap();
+            let resp = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+            assert_eq!(resp.session, Some(0));
+            assert_eq!(resp.span_start, prev_len);
+            assert_eq!(resp.len, item.len);
+            assert_eq!(resp.out.len(),
+                       SHAPE.heads * (item.len - prev_len) * SHAPE.dv);
+            assert_eq!(resp.cache_hit, Some(step > 0),
+                       "prefill misses, steps hit");
+            let want = session_reference(kernel.as_ref(), SHAPE, 23, 0,
+                                         &item.q, &item.k, &item.v,
+                                         item.len, prev_len);
+            assert!(same_bits(&resp.out, &want),
+                    "step {step} diverged from the full recompute");
+            prev_len = item.len;
+        }
+        let m = &gw.bucket_metrics()[0];
+        assert_eq!(m.cache_hits.load(Ordering::Relaxed), 2);
+        assert_eq!(m.cache_misses.load(Ordering::Relaxed), 1);
+        assert_eq!(m.saved_rows.load(Ordering::Relaxed), (10 + 16) as u64);
+        assert!(m.cache_hit_rate() > 0.6);
+        assert!(m.recompute_saved() > 0.0);
+        // the cache holds the full history under generation 0
+        assert_eq!(gw.cache().session_len(
+            CacheRef { session: 0, generation: 0 }), Some(22));
+        // ending the session drops gateway state and panels
+        gw.end_session(0);
+        assert_eq!(gw.cache().session_len(
+            CacheRef { session: 0, generation: 0 }), None);
+        gw.shutdown();
+    }
+
+    #[test]
+    fn sessions_route_up_when_the_history_outgrows_the_bucket() {
+        let gw = ServingGateway::start(
+            SHAPE,
+            vec![Bucket::native("full", 16, 2),
+                 Bucket::native("full", 32, 2)],
+            GatewayOptions {
+                max_wait: Duration::from_millis(2),
+                seed: 5,
+                ..GatewayOptions::default()
+            },
+        )
+        .unwrap();
+        let trace = synthetic_decode_trace(SHAPE, 12, 1, 8, 1, 41);
+        let kernel = kernel_by_name("full").unwrap();
+        // prefill (12 rows) pins to the N=16 bucket
+        let r0 = gw
+            .submit_session_blocking(trace[0].q.clone(),
+                                     trace[0].k.clone(),
+                                     trace[0].v.clone(), 12, 7)
+            .unwrap()
+            .recv_timeout(Duration::from_secs(30))
+            .unwrap();
+        assert_eq!(r0.bucket_seq_len, 16);
+        // the grown history (20 rows) routes up to N=32 — and the
+        // cache entry migrates with it (the step still hits)
+        let r1 = gw
+            .submit_session_blocking(trace[1].q.clone(),
+                                     trace[1].k.clone(),
+                                     trace[1].v.clone(), 20, 7)
+            .unwrap()
+            .recv_timeout(Duration::from_secs(30))
+            .unwrap();
+        assert_eq!(r1.bucket_seq_len, 32);
+        assert_eq!(r1.cache_hit, Some(true),
+                   "route-up must not lose the cached panels");
+        let want = session_reference(kernel.as_ref(), SHAPE, 5, 7,
+                                     &trace[1].q, &trace[1].k,
+                                     &trace[1].v, 20, 12);
+        assert!(same_bits(&r1.out, &want),
+                "migrated session diverged from the full recompute");
+        assert_eq!(gw.bucket_metrics()[1]
+                       .session_route_up
+                       .load(Ordering::Relaxed), 1);
+        gw.shutdown();
+    }
+
+    #[test]
+    fn session_steps_must_extend_the_history_and_require_masking() {
+        let gw = ServingGateway::start(
+            SHAPE,
+            vec![Bucket::native("full", 16, 2)],
+            GatewayOptions::default(),
+        )
+        .unwrap();
+        let (q, k, v) = (block(8, 8, 1), block(8, 8, 2), block(8, 8, 3));
+        let rx = gw
+            .submit_session_blocking(q.clone(), k.clone(), v.clone(), 8,
+                                     3)
+            .unwrap();
+        let _ = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+        // a repeat of the same length does not extend the history
+        let err = gw
+            .submit_session_blocking(q.clone(), k.clone(), v.clone(), 8,
+                                     3)
+            .unwrap_err();
+        assert!(format!("{err}").contains("does not extend"));
+        // longer than every bucket
+        let err = gw
+            .submit_session(block(17, 8, 4), block(17, 8, 5),
+                            block(17, 8, 6), 17, 9)
+            .unwrap_err();
+        assert!(format!("{err}").contains("exceeds every bucket"));
+        gw.shutdown();
+        // an unmasked gateway refuses sessions outright
+        let gw = ServingGateway::start(
+            SHAPE,
+            vec![Bucket::native("full", 16, 2)],
+            GatewayOptions { mask: false, ..GatewayOptions::default() },
+        )
+        .unwrap();
+        let err = gw
+            .submit_session(block(8, 8, 1), block(8, 8, 2),
+                            block(8, 8, 3), 8, 1)
+            .unwrap_err();
+        assert!(format!("{err}").contains("masking"));
+        gw.shutdown();
+    }
+
+    #[test]
+    fn decode_trace_replay_exercises_the_cache_path() {
+        let gw = ServingGateway::start(
+            SHAPE,
+            vec![Bucket::native("i-clustered-4", 32, 4)],
+            GatewayOptions {
+                max_wait: Duration::from_millis(2),
+                seed: 31,
+                ..GatewayOptions::default()
+            },
+        )
+        .unwrap();
+        // 3 sessions × (prefill + 2 steps), interleaved with replay
+        let trace = synthetic_decode_trace(SHAPE, 8, 2, 4, 3, 42);
+        assert_eq!(trace.len(), 9);
+        let responses = replay_blocking(&gw, trace.clone(), 2);
+        let kernel = kernel_by_name("i-clustered-4").unwrap();
+        for (item, resp) in trace.iter().zip(&responses) {
+            assert_eq!(resp.session, item.session);
+            assert_eq!(resp.len, item.len);
+            let want = session_reference(
+                kernel.as_ref(), SHAPE, 31, item.session.unwrap(),
+                &item.q, &item.k, &item.v, item.len, resp.span_start);
+            assert!(same_bits(&resp.out, &want),
+                    "session {:?} len {} diverged", item.session,
+                    item.len);
+        }
+        let m = &gw.bucket_metrics()[0];
+        assert_eq!(m.cache_misses.load(Ordering::Relaxed), 3,
+                   "one prefill miss per session");
+        assert_eq!(m.cache_hits.load(Ordering::Relaxed), 6,
+                   "every later step hits");
+        let report = bucket_report(&gw, 1.0);
+        assert!(report
+            .iter()
+            .all(|r| r.len() == BUCKET_REPORT_HEADERS.len()));
+        gw.shutdown();
     }
 
     #[test]

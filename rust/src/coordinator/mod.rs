@@ -12,8 +12,11 @@
 //! - [`ServingGateway`] — a fleet of native attention engines, one
 //!   kernel/pad-length/batch-size [`Bucket`] each, sharing one worker
 //!   budget, with route-up admission control, valid-length masking
-//!   (responses are bit-identical to the unpadded computation) and
-//!   per-bucket [`BucketMetrics`] (see `docs/SERVING.md`).
+//!   (responses are bit-identical to the unpadded computation),
+//!   session-aware incremental decode (a gateway-global
+//!   `attention::KvCache` behind `attention::CachingBackend`; sessions
+//!   pin to buckets and route up as they grow) and per-bucket
+//!   [`BucketMetrics`] (see `docs/SERVING.md`).
 //!
 //! Both stacks consume the same request information — tensors plus true
 //! lengths — and the native side resolves it through the
@@ -30,6 +33,7 @@ pub mod trainer;
 pub use batcher::{BatchPolicy, Batcher};
 pub use datafeed::DataFeed;
 pub use gateway::{bucket_report, pad_batch, replay_blocking,
+                  session_reference, span_rows, synthetic_decode_trace,
                   synthetic_trace, unpadded_reference, valid_rows,
                   BucketMetrics, GatewayOptions, GatewayRequest,
                   GatewayResponse, GatewayShape, ServingGateway,

@@ -20,17 +20,25 @@
 //!
 //! - [`attention::AttnProblem`] / [`attention::AttnBatch`] — the
 //!   request descriptors every kernel entry point takes: Q/K/V views
-//!   plus per-request options (valid-length masks, seeding; later
-//!   KV-cache handles).  The **masking contract**: solving
-//!   bucket-padded inputs with `valid_len`/`lens` set is bit-identical
-//!   to solving the unpadded inputs, and padded output rows are zero.
+//!   plus per-request options (valid-length masks, seeding, the
+//!   incremental `query_span`, and KV-cache handles
+//!   [`attention::CacheRef`] / [`attention::SessionRef`]).  The
+//!   **masking contract**: solving bucket-padded inputs with
+//!   `valid_len`/`lens` set is bit-identical to solving the unpadded
+//!   inputs, and padded output rows are zero.  The **span contract**:
+//!   `query_span = s` emits rows `s..valid` bit-identical to the
+//!   spanless solve — the incremental-decode primitive.
 //! - [`attention::AttentionKernel`] — one algorithm (full, clustered,
 //!   improved-clustered, oracle-top, LSH), one file per family under
 //!   `attention/`, resolvable by paper-notation name through the
 //!   name-keyed [`attention::REGISTRY`] (e.g. `"i-clustered-100"`).
 //! - [`attention::AttentionBackend`] — the execution seam over
-//!   descriptors: [`attention::NativeBackend`] today, compiled-HLO /
-//!   KV-cached / sharded backends behind the same struct tomorrow.
+//!   descriptors: [`attention::NativeBackend`] plus
+//!   [`attention::CachingBackend`], which wraps any backend with a
+//!   per-session [`attention::KvCache`] so decode steps solve only
+//!   their new rows — bit-identical to the full unpadded recompute of
+//!   the history, hits and misses alike; compiled-HLO / sharded
+//!   backends plug in behind the same struct.
 //! - [`tensor::batch::BatchMatrix`] — a (B, H, N, D) tensor stored as
 //!   B·H stacked row-major slices with zero-copy per-slice views
 //!   (including ragged `slice_valid` prefixes); slice `s = b·H + h` is
@@ -59,7 +67,11 @@
 //!   route-up admission control and valid-length masking on by default
 //!   — every response is bit-identical to the unpadded computation of
 //!   its request, and per-bucket metrics report memory-padding and
-//!   masked-compute waste separately (see `docs/SERVING.md`).
+//!   masked-compute waste separately.  Decode sessions
+//!   ([`coordinator::ServingGateway::submit_session`]) serve
+//!   autoregressive traffic through a gateway-global KV cache: pinned
+//!   to their bucket, routed up as the history grows, replying with
+//!   only the new rows (see `docs/SERVING.md`).
 //!
 //! ## Serving in five lines
 //!

@@ -240,6 +240,16 @@ fn cmd_gateway(rest: &[String]) -> Result<()> {
         .opt("dv", Some("32"), "value head dim")
         .opt("requests", Some("64"), "synthetic trace length (trace mode)")
         .opt("clients", Some("4"), "concurrent submitters (trace mode)")
+        .opt("sessions", Some("0"),
+             "decode sessions in the trace (0 = one-shot trace only)")
+        .opt("prefill", Some("0"),
+             "decode session prefill rows (0 = half the smallest bucket)")
+        .opt("decode-steps", Some("8"), "decode steps per session")
+        .opt("step-len", Some("1"), "new rows per decode step")
+        .opt("cache-rows", Some("0"),
+             "KV-cache capacity in cached sequence rows (0 = unbounded)")
+        .opt("cache-growth", Some("1.0"),
+             "clustered re-cluster threshold (1.0 = exact every step)")
         .opt("max-wait-ms", Some("2"), "batcher deadline")
         .opt("queue", Some("64"), "per-bucket ingress queue capacity")
         .opt("workers", Some("0"), "shared worker budget (0 = auto)")
@@ -276,6 +286,7 @@ fn cmd_gateway(rest: &[String]) -> Result<()> {
     };
     let seed = args.get_u64("seed", 0)?;
     let mask = !args.flag("no-mask");
+    let cache_rows = args.get_usize("cache-rows", 0)?;
     let opts = coordinator::GatewayOptions {
         max_wait: std::time::Duration::from_millis(
             args.get_u64("max-wait-ms", 2)?),
@@ -286,6 +297,9 @@ fn cmd_gateway(rest: &[String]) -> Result<()> {
         // intra-slice parallelism threshold (0 = default)
         par_rows: args.get_usize("par-rows", 0)?,
         mask,
+        cache_capacity_rows: if cache_rows == 0 { usize::MAX }
+                             else { cache_rows },
+        cache_growth: args.get_f64("cache-growth", 1.0)?,
     };
     let gw = coordinator::ServingGateway::start(shape, buckets, opts)?;
 
@@ -297,20 +311,40 @@ fn cmd_gateway(rest: &[String]) -> Result<()> {
             gw, addr, stop, |a| println!("bound {a}"));
     }
 
-    // trace mode: replay a mixed-length (ragged) synthetic trace,
-    // report buckets
+    // trace mode: replay a mixed-length (ragged) synthetic trace —
+    // optionally mixed with multi-step decode sessions — and report
+    // buckets
     let count = args.get_usize("requests", 64)?;
     let clients = args.get_usize("clients", 4)?;
+    let sessions = args.get_usize("sessions", 0)?;
     let max_n = gw.router().max_len();
     let min_len = (max_n / 16).max(1);
-    let trace =
+    let mut trace =
         coordinator::synthetic_trace(shape, min_len, max_n, count, seed);
+    if sessions > 0 {
+        let min_bucket = gw.router().buckets()[0].seq_len;
+        let prefill = match args.get_usize("prefill", 0)? {
+            0 => (min_bucket / 2).max(1),
+            p => p,
+        };
+        let steps = args.get_usize("decode-steps", 8)?;
+        let step_len = args.get_usize("step-len", 1)?;
+        if prefill + steps * step_len > max_n {
+            return Err(anyhow!(
+                "decode sessions grow to {} rows, over the largest \
+                 bucket ({max_n})", prefill + steps * step_len));
+        }
+        trace.extend(coordinator::synthetic_decode_trace(
+            shape, prefill, steps, step_len, sessions, seed ^ 0xDEC0));
+    }
+    let total_items = trace.len();
     let t0 = std::time::Instant::now();
     let responses = coordinator::replay_blocking(&gw, trace, clients);
     let wall = t0.elapsed().as_secs_f64();
     let mut table = benchlib::Table::new(
         &format!(
-            "gateway: {count} requests, lens {min_len}..{max_n}, \
+            "gateway: {total_items} requests ({count} one-shot, \
+             {sessions} decode sessions), lens {min_len}..{max_n}, \
              {clients} clients, {:.2}s wall, masking {}", wall,
             if mask { "on (responses ≡ unpadded compute)" }
             else { "off (static-shape semantics)" }),
@@ -320,8 +354,18 @@ fn cmd_gateway(rest: &[String]) -> Result<()> {
         table.row(row);
     }
     table.emit();
-    println!("completed {} requests; rejected {}", responses.len(),
-             gw.rejected_total());
+    let c = gw.cache().counters();
+    use std::sync::atomic::Ordering;
+    println!("completed {} requests; rejected {}; cache: {} hits / {} \
+              misses ({:.1}% hit rate), {} prefix rows reused, {} rows \
+              recomputed, {} evictions",
+             responses.len(), gw.rejected_total(),
+             c.hits.load(Ordering::Relaxed),
+             c.misses.load(Ordering::Relaxed),
+             100.0 * c.hit_rate(),
+             c.reused_rows.load(Ordering::Relaxed),
+             c.recomputed_rows.load(Ordering::Relaxed),
+             c.evictions.load(Ordering::Relaxed));
     gw.shutdown();
     Ok(())
 }

@@ -16,6 +16,23 @@ pub fn slice_stream(seed: u64, slice: u64) -> Xoshiro256 {
     Xoshiro256::new(seed).fold_in(slice)
 }
 
+/// Derive a decode session's base seed from the gateway seed and the
+/// session id.
+///
+/// Incremental-decode sequences draw their per-head streams from
+/// `slice_stream(session_seed(seed, session), head)` instead of the
+/// batch-slot stream, so a session's output is a pure function of
+/// `(history, seed, session id, head)` — **independent of which batch
+/// slot the step landed in or what traffic it was co-batched with**.
+/// That slot-independence is what lets an incremental step (computed
+/// against the KV cache) be bit-identical to a full recompute of the
+/// same history submitted later, in a different batch composition.
+pub fn session_seed(seed: u64, session: u64) -> u64 {
+    let mut sm = SplitMix64::new(
+        seed.rotate_left(32) ^ session.wrapping_mul(0xD1B54A32D192ED03));
+    sm.next_u64()
+}
+
 /// SplitMix64 — tiny, used for seeding and for hash-style key folding.
 #[derive(Debug, Clone)]
 pub struct SplitMix64 {
@@ -198,6 +215,17 @@ mod tests {
             t.next_u64()
         });
         let _ = a2;
+    }
+
+    #[test]
+    fn session_seed_is_stable_and_separates_sessions() {
+        assert_eq!(session_seed(7, 42), session_seed(7, 42));
+        assert_ne!(session_seed(7, 42), session_seed(7, 43));
+        assert_ne!(session_seed(7, 42), session_seed(8, 42));
+        // the derived streams are independent of the base slice streams
+        let mut a = slice_stream(session_seed(7, 42), 0);
+        let mut b = slice_stream(7, 42);
+        assert_ne!(a.next_u64(), b.next_u64());
     }
 
     #[test]

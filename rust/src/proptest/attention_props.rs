@@ -25,18 +25,33 @@
 //!     deadline batcher, shared pool, intra-slice parallelism on,
 //!     masking on) returns, per request, exactly the unpadded
 //!     computation of that request.
+//!  7. **Span contract** — solving with `query_span = s` emits rows
+//!     `s..valid` bit-identical to the spanless solve (zeros outside),
+//!     for every kernel family, ragged length, span and worker count.
+//!  8. **Decode-cache contract** — a `CachingBackend` session (prefill
+//!     + ragged decode steps) produces, at every step, span rows
+//!     bit-identical to the full unpadded recompute of the history on
+//!     the session's PRNG streams — for every kernel family, worker
+//!     count, and across eviction points (a capacity that evicts
+//!     mid-session just turns hits into equally-exact misses).  The
+//!     clustered families additionally hold it at the re-cluster
+//!     threshold boundary (`growth > 1`): re-cluster steps stay exact
+//!     and frozen-reuse steps are bit-deterministic across worker
+//!     counts.
 
+use std::sync::Arc;
 use std::time::Duration;
 
 use crate::attention::{clustered_attention_matrix,
                        improved_clustered_attention_matrix, kernel_by_name,
                        kernel_for, solve_batch_seq, AttnBatch, AttnProblem,
-                       Variant};
+                       CacheRef, CachingBackend, KvCache, KvCacheOptions,
+                       SeqOutcome, SessionRef, Variant};
 use crate::clustering::{cluster_queries, Clustering};
 use crate::coordinator::{pad_batch, unpadded_reference, valid_rows, Bucket,
                          GatewayOptions, GatewayShape, ServingGateway};
 use crate::exec::{ExecCtx, WorkerPool};
-use crate::prng::Xoshiro256;
+use crate::prng::{session_seed, slice_stream, Xoshiro256};
 use crate::proptest::forall;
 use crate::tensor::batch::BatchMatrix;
 use crate::tensor::{gemm, Matrix};
@@ -261,6 +276,289 @@ fn prop_batched_lens_mask_each_sequence_like_its_unpadded_run() {
 }
 
 #[test]
+fn prop_spanned_solve_is_bit_identical_to_the_spanless_solve() {
+    forall(
+        "solve(valid_len=l, query_span=s) ≡ rows s..l of solve(l), all \
+         variants",
+        0x5DA2_11ED,
+        5,
+        |rng| {
+            let n = 24 + rng.below(49); // 24..=72
+            let l = 2 + rng.below(n - 1); // 2..=n
+            let s = rng.below(l); // 0..l
+            let d = 8;
+            let q = Matrix::randn(n, d, rng);
+            let k = Matrix::randn(n, d, rng);
+            let v = Matrix::randn(n, d, rng);
+            let workers = 1 + rng.below(4); // 1..=4
+            let seed = rng.next_u64();
+            (q, k, v, l, s, workers, seed)
+        },
+        |(q, k, v, l, s, workers, seed)| {
+            let (l, s, dv) = (*l, *s, v.cols);
+            let par = ExecCtx::with_par_rows(WorkerPool::new(*workers), 1);
+            for var in all_variants() {
+                let kernel = kernel_for(&var);
+                let mut r_span = Xoshiro256::new(*seed);
+                let spanned = kernel.solve(
+                    &AttnProblem::new(q, k, v)
+                        .with_valid_len(l)
+                        .with_query_span(s),
+                    &mut r_span, &par);
+                let mut r_ref = Xoshiro256::new(*seed);
+                let want = kernel.solve(
+                    &AttnProblem::new(q, k, v).with_valid_len(l),
+                    &mut r_ref, &ExecCtx::sequential());
+                if !spanned
+                    .row_span(s, l)
+                    .bit_identical(&want.row_span(s, l))
+                {
+                    return Err(format!(
+                        "{} span rows (N={}, l={l}, s={s}, \
+                         workers={workers}) diverged from the spanless \
+                         solve", var.name(), q.rows));
+                }
+                if spanned.data[..s * dv].iter().any(|&x| x != 0.0)
+                    || spanned.data[l * dv..].iter().any(|&x| x != 0.0)
+                {
+                    return Err(format!(
+                        "{} non-zero rows outside the span", var.name()));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// One decode session's shape: full history tensors plus the step
+/// lengths (prefill first).
+type DecodeCase = (BatchMatrix, BatchMatrix, BatchMatrix, Vec<usize>,
+                   usize, usize, u64);
+
+fn decode_prefix(t: &BatchMatrix, len: usize) -> BatchMatrix {
+    let mut out = BatchMatrix::zeros(1, t.heads, len, t.cols);
+    for h in 0..t.heads {
+        out.slice_mut(h)
+            .copy_from_slice(&t.view(h).data[..len * t.cols]);
+    }
+    out
+}
+
+/// Run one session through a fresh `CachingBackend`; returns, per step,
+/// the concatenated per-head span rows and the outcome.
+#[allow(clippy::too_many_arguments)]
+fn run_session(kernel: &str, growth: f64, capacity: usize,
+               q: &BatchMatrix, k: &BatchMatrix, v: &BatchMatrix,
+               lens: &[usize], workers: usize, seed: u64, sid: u64)
+               -> Vec<(Vec<f32>, SeqOutcome)> {
+    let cache = Arc::new(KvCache::new(KvCacheOptions {
+        capacity_rows: capacity,
+        growth,
+    }));
+    let backend = CachingBackend::native(kernel, cache).expect("kernel");
+    let ctx = if workers <= 1 {
+        ExecCtx::sequential()
+    } else {
+        ExecCtx::with_par_rows(WorkerPool::new(workers), 1)
+    };
+    let heads = q.heads;
+    let dv = v.cols;
+    let mut steps = Vec::new();
+    let mut span = 0usize;
+    for &len in lens {
+        let (qp, kp, vp) =
+            (decode_prefix(q, len), decode_prefix(k, len),
+             decode_prefix(v, len));
+        let blens = [len];
+        let sessions = [Some(SessionRef {
+            cache: CacheRef { session: sid, generation: 0 },
+            span_start: span,
+        })];
+        let batch = AttnBatch::new(&qp, &kp, &vp, seed)
+            .with_lens(&blens)
+            .with_sessions(&sessions);
+        let (out, rep) = backend.execute_with_report(&batch, &ctx);
+        let mut rows = Vec::with_capacity(heads * (len - span) * dv);
+        for h in 0..heads {
+            rows.extend_from_slice(
+                &out.view(h).data[span * dv..len * dv]);
+        }
+        steps.push((rows, rep[0]));
+        span = len;
+    }
+    steps
+}
+
+/// The decode oracle: per head, the full unpadded recompute of the
+/// history on the session streams, sliced to the span.
+fn recompute_span(kernel: &str, q: &BatchMatrix, k: &BatchMatrix,
+                  v: &BatchMatrix, len: usize, span: usize, seed: u64,
+                  sid: u64) -> Vec<f32> {
+    let kern = kernel_by_name(kernel).expect("kernel");
+    let seed2 = session_seed(seed, sid);
+    let dv = v.cols;
+    let mut rows = Vec::new();
+    for h in 0..q.heads {
+        let (qh, kh, vh) = (q.slice_valid(h, len), k.slice_valid(h, len),
+                            v.slice_valid(h, len));
+        let mut rng = slice_stream(seed2, h as u64);
+        let o = kern.solve(&AttnProblem::new(&qh, &kh, &vh), &mut rng,
+                           &ExecCtx::sequential());
+        rows.extend_from_slice(&o.data[span * dv..len * dv]);
+    }
+    rows
+}
+
+fn same_bits(a: &[f32], b: &[f32]) -> bool {
+    a.len() == b.len()
+        && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+#[test]
+fn prop_cached_decode_is_bit_identical_to_full_recompute() {
+    let families = ["full", "shared-full", "oracle-top-4", "clustered-3",
+                    "i-clustered-3", "lsh-1"];
+    forall(
+        "CachingBackend decode ≡ full unpadded recompute, all families, \
+         ragged histories × eviction points × worker counts",
+        0xDEC0_DE01,
+        4,
+        |rng| {
+            let heads = 1 + rng.below(2); // 1..=2
+            let prefill = 6 + rng.below(15); // 6..=20
+            let steps = 1 + rng.below(3); // 1..=3
+            let mut lens = vec![prefill];
+            for _ in 0..steps {
+                lens.push(lens.last().unwrap() + 1 + rng.below(6));
+            }
+            let total = *lens.last().unwrap();
+            let q = BatchMatrix::randn(1, heads, total, 8, rng);
+            let k = BatchMatrix::randn(1, heads, total, 8, rng);
+            let v = BatchMatrix::randn(1, heads, total, 8, rng);
+            // capacity: unbounded, or exactly the prefill so the first
+            // decode append evicts mid-session (later steps miss — and
+            // must stay exact)
+            let capacity =
+                if rng.coin(0.5) { usize::MAX } else { prefill };
+            let workers = 1 + rng.below(4); // 1..=4
+            let seed = rng.next_u64();
+            (q, k, v, lens, capacity, workers, seed)
+        },
+        |case: &DecodeCase| {
+            let (q, k, v, lens, capacity, workers, seed) = case;
+            for kernel in families {
+                let steps = run_session(kernel, 1.0, *capacity, q, k, v,
+                                        lens, *workers, *seed, 77);
+                let mut span = 0usize;
+                for (i, ((rows, outcome), &len)) in
+                    steps.iter().zip(lens).enumerate()
+                {
+                    let want = recompute_span(kernel, q, k, v, len, span,
+                                              *seed, 77);
+                    if !same_bits(rows, &want) {
+                        return Err(format!(
+                            "{kernel}: step {i} (span {span}..{len}, \
+                             cap {capacity}, workers {workers}) \
+                             diverged from the full recompute"));
+                    }
+                    if i == 0
+                        && !matches!(outcome, SeqOutcome::Miss { .. })
+                    {
+                        return Err(format!(
+                            "{kernel}: prefill reported {outcome:?}"));
+                    }
+                    if i > 0
+                        && *capacity == usize::MAX
+                        && !matches!(outcome, SeqOutcome::Hit { .. })
+                    {
+                        return Err(format!(
+                            "{kernel}: unbounded-cache step {i} \
+                             reported {outcome:?}"));
+                    }
+                    span = len;
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_recluster_threshold_keeps_exact_steps_exact() {
+    // growth > 1: frozen-reuse steps are approximate by design, but
+    // (a) re-cluster and miss steps stay bit-identical to the full
+    // recompute — including the step that crosses the boundary — and
+    // (b) the whole trajectory is bit-deterministic across worker
+    // counts
+    forall(
+        "clustered families at the re-cluster threshold boundary",
+        0xDEC0_DE02,
+        3,
+        |rng| {
+            let prefill = 8 + rng.below(9); // 8..=16
+            let growth = 1.25 + 0.5 * rng.next_f64(); // 1.25..1.75
+            // step lens that straddle the threshold: two +1 steps (the
+            // first hit re-clusters at prefill+1, the next stays under
+            // growth·(prefill+1), so it must reuse), then a jump past
+            // the threshold that must re-cluster
+            let lens = vec![prefill, prefill + 1, prefill + 2,
+                            (prefill as f64 * growth) as usize + 4
+                                + rng.below(4)];
+            let total = *lens.last().unwrap();
+            let q = BatchMatrix::randn(1, 2, total, 8, rng);
+            let k = BatchMatrix::randn(1, 2, total, 8, rng);
+            let v = BatchMatrix::randn(1, 2, total, 8, rng);
+            let seed = rng.next_u64();
+            (q, k, v, lens, growth, seed)
+        },
+        |(q, k, v, lens, growth, seed)| {
+            for kernel in ["clustered-3", "i-clustered-3"] {
+                let a = run_session(kernel, *growth, usize::MAX, q, k, v,
+                                    lens, 1, *seed, 5);
+                let b = run_session(kernel, *growth, usize::MAX, q, k, v,
+                                    lens, 3, *seed, 5);
+                let mut span = 0usize;
+                let mut saw_reuse = false;
+                for (i, (((rows_a, out_a), (rows_b, out_b)), &len)) in
+                    a.iter().zip(&b).zip(lens).enumerate()
+                {
+                    if out_a != out_b || !same_bits(rows_a, rows_b) {
+                        return Err(format!(
+                            "{kernel}: step {i} not deterministic \
+                             across worker counts ({out_a:?} vs \
+                             {out_b:?})"));
+                    }
+                    let exact = matches!(
+                        out_a,
+                        SeqOutcome::Miss { .. }
+                            | SeqOutcome::Hit { reclustered: true, .. });
+                    saw_reuse |= matches!(
+                        out_a,
+                        SeqOutcome::Hit { reclustered: false, .. });
+                    if exact {
+                        let want = recompute_span(kernel, q, k, v, len,
+                                                  span, *seed, 5);
+                        if !same_bits(rows_a, &want) {
+                            return Err(format!(
+                                "{kernel}: exact step {i} (span \
+                                 {span}..{len}) diverged from the full \
+                                 recompute"));
+                        }
+                    }
+                    span = len;
+                }
+                if !saw_reuse {
+                    return Err(format!(
+                        "{kernel}: growth {growth} produced no \
+                         frozen-reuse step — boundary untested"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
 fn prop_blocked_gemm_is_bit_identical_to_naive() {
     forall(
         "blocked GEMM ≡ naive i-k-j loop, NN and NT, ragged shapes",
@@ -338,7 +636,7 @@ fn prop_gateway_cobatch_on_ragged_traces_matches_unpadded_compute() {
                     route_up: false,
                     // exercise intra-slice parallelism on the live path
                     par_rows: 1,
-                    mask: true,
+                    ..GatewayOptions::default()
                 },
             )
             .map_err(|e| format!("gateway start: {e}"))?;

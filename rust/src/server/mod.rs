@@ -7,10 +7,12 @@
 //!   response: {"id": 1, "labels": [i32...], "latency_us": 1234}
 //!
 //! Native attention ([`serve_gateway`], over [`ServingGateway`]):
-//!   request : {"id": 1, "len": N, "q": [f32...], "k": [...], "v": [...]}
+//!   request : {"id": 1, "len": N, "q": [f32...], "k": [...], "v": [...],
+//!              "session": 7}          // optional: decode-session step
 //!   response: {"id": 1, "out": [f32...], "bucket_n": 128,
 //!              "masked": true, "latency_us": 1234,
-//!              "batch_occupancy": 3}
+//!              "batch_occupancy": 3,
+//!              "session": 7, "span_start": 96, "cached": true}
 //!
 //! `len` is the request's true (valid) length: the gateway pads the
 //! tensors up to its bucket and, with masking on (the default), `out`
@@ -18,6 +20,17 @@
 //! true` in the response asserts exactly that.  `"masked": false`
 //! means the gateway was started with static-shape semantics
 //! (`GatewayOptions { mask: false, … }`) and padded keys participated.
+//!
+//! With `"session"` set, the request is one step of an incremental
+//! decode session: the tensors carry the session's *full history* (len
+//! grows every step), the reply's `out` holds only the new rows
+//! (`span_start..len`), and `"cached": true` means the KV cache held
+//! the prefix so only the span was computed (`false` = transparent
+//! full-recompute fallback; the bits are identical either way).  The
+//! session/span/cached fields are absent on one-shot replies.
+//! `{"id": 9, "session": 7, "end": true}` ends a session — replied
+//! with `{"id": 9, "session": 7, "ended": true}` — releasing its
+//! gateway state and cached panels.
 //!
 //! Either endpoint replies {"id": ..., "error": "..."} on a bad request
 //! (including backpressure surfaced from the engine; `id` is 0 when the
@@ -169,6 +182,20 @@ fn handle_request(req: &Value, engine: &InferenceEngine) -> Result<Value> {
 fn handle_attn_request(req: &Value, gateway: &ServingGateway)
                        -> Result<Value> {
     let id = req.get("id").as_i64().unwrap_or(0);
+    let session = req.get("session").as_i64().map(|s| s as u64);
+    // {"id", "session", "end": true} releases the session's gateway
+    // state and cached panels — long-running servers must not leak a
+    // table entry per session ever seen
+    if req.get("end").as_bool() == Some(true) {
+        let sid = session
+            .ok_or_else(|| anyhow!("\"end\" needs a \"session\""))?;
+        gateway.end_session(sid);
+        return Ok(obj(vec![
+            ("id", id.into()),
+            ("session", (sid as i64).into()),
+            ("ended", true.into()),
+        ]));
+    }
     let len = req
         .get("len")
         .as_usize()
@@ -177,11 +204,14 @@ fn handle_attn_request(req: &Value, gateway: &ServingGateway)
                      f32_field(req, "v")?);
     // blocking: a TCP client rides out backpressure instead of seeing
     // spurious 429-style errors (fail-fast admission is the bench's job)
-    let rx = gateway.submit_blocking(q, k, v, len)?;
+    let rx = match session {
+        Some(sid) => gateway.submit_session_blocking(q, k, v, len, sid)?,
+        None => gateway.submit_blocking(q, k, v, len)?,
+    };
     let resp = rx
         .recv()
         .map_err(|_| anyhow!("gateway dropped the request"))?;
-    Ok(obj(vec![
+    let mut fields = vec![
         ("id", id.into()),
         ("out", Value::Arr(
             resp.out.iter().map(|&x| Value::Num(x as f64)).collect())),
@@ -189,7 +219,13 @@ fn handle_attn_request(req: &Value, gateway: &ServingGateway)
         ("masked", resp.masked.into()),
         ("latency_us", (resp.total_time.as_micros() as i64).into()),
         ("batch_occupancy", (resp.batch_occupancy as i64).into()),
-    ]))
+    ];
+    if let Some(sid) = resp.session {
+        fields.push(("session", (sid as i64).into()));
+        fields.push(("span_start", (resp.span_start as i64).into()));
+        fields.push(("cached", resp.cache_hit.unwrap_or(false).into()));
+    }
+    Ok(obj(fields))
 }
 
 /// Minimal blocking client for tests/examples.
@@ -246,6 +282,36 @@ impl Client {
             ("q", arr(q)),
             ("k", arr(k)),
             ("v", arr(v)),
+        ]))
+    }
+
+    /// Send one decode-session step: the session's full (H, len, D)
+    /// history plus its id.  The reply's `out` carries only the new
+    /// rows (`span_start..len`); `cached` reports whether the KV cache
+    /// held the prefix (the bits are the same either way).
+    pub fn attend_session(&mut self, id: i64, q: &[f32], k: &[f32],
+                          v: &[f32], len: usize, session: u64)
+                          -> Result<Value> {
+        let arr = |xs: &[f32]| Value::Arr(
+            xs.iter().map(|&x| Value::Num(x as f64)).collect());
+        self.round_trip(obj(vec![
+            ("id", id.into()),
+            ("len", len.into()),
+            ("session", (session as i64).into()),
+            ("q", arr(q)),
+            ("k", arr(k)),
+            ("v", arr(v)),
+        ]))
+    }
+
+    /// End a decode session: the gateway drops its table entry and
+    /// cached panels (a later session under the same id gets a fresh
+    /// generation and can never alias the old cache state).
+    pub fn end_session(&mut self, id: i64, session: u64) -> Result<Value> {
+        self.round_trip(obj(vec![
+            ("id", id.into()),
+            ("session", (session as i64).into()),
+            ("end", true.into()),
         ]))
     }
 }

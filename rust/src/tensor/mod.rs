@@ -114,6 +114,20 @@ impl Matrix {
         }
     }
 
+    /// Owned copy of rows `start..end` — the incremental-decode query
+    /// span ([`row_prefix`] generalized to an interior range).
+    ///
+    /// [`row_prefix`]: Matrix::row_prefix
+    pub fn row_span(&self, start: usize, end: usize) -> Matrix {
+        assert!(start <= end && end <= self.rows,
+                "row_span {start}..{end} from a {}-row matrix", self.rows);
+        Matrix {
+            rows: end - start,
+            cols: self.cols,
+            data: self.data[start * self.cols..end * self.cols].to_vec(),
+        }
+    }
+
     /// Exact bitwise equality — the check behind the compute-core
     /// determinism contract (the single-slice sibling of
     /// [`BatchMatrix::bit_identical`]).

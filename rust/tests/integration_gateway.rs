@@ -9,8 +9,9 @@ use std::time::Duration;
 
 use clustered_transformers::attention::kernel_by_name;
 use clustered_transformers::coordinator::{
-    replay_blocking, synthetic_trace, unpadded_reference, Bucket,
-    GatewayOptions, GatewayShape, ServingGateway,
+    replay_blocking, session_reference, synthetic_decode_trace,
+    synthetic_trace, unpadded_reference, Bucket, GatewayOptions,
+    GatewayShape, ServingGateway,
 };
 use clustered_transformers::prng::Xoshiro256;
 use clustered_transformers::server;
@@ -121,6 +122,135 @@ fn ragged_cobatch_responses_equal_the_unpadded_computation() {
     assert_eq!(m.compute_waste(), 0.0);
     assert!((m.compute_saved() - m.padding_waste()).abs() < 1e-12);
     gw.shutdown();
+}
+
+#[test]
+fn decode_sessions_interleave_with_oneshot_traffic_end_to_end() {
+    // decode sessions and ordinary ragged one-shots through the same
+    // live gateway: every session step must equal the full unpadded
+    // recompute of its history (session streams — invariant to what it
+    // was co-batched with), and the one-shot traffic must still be
+    // served
+    let seed = 37;
+    let gw = ServingGateway::start(
+        SHAPE,
+        vec![
+            Bucket::native("i-clustered-4", 16, 4),
+            Bucket::native("i-clustered-4", 32, 4),
+            Bucket::native("i-clustered-4", 64, 2),
+        ],
+        GatewayOptions {
+            max_wait: Duration::from_millis(2),
+            seed,
+            ..GatewayOptions::default()
+        },
+    )
+    .unwrap();
+    let mut trace = synthetic_trace(SHAPE, 4, 64, 10, 3);
+    // two sessions: prefill 12, three steps of 6 — they grow from the
+    // N=16 bucket into N=32 (route-up of grown sessions)
+    trace.extend(synthetic_decode_trace(SHAPE, 12, 3, 6, 2, 9));
+    let responses = replay_blocking(&gw, trace.clone(), 3);
+    let kernel = kernel_by_name("i-clustered-4").unwrap();
+    let mut hits = 0;
+    for (item, resp) in trace.iter().zip(&responses) {
+        assert_eq!(resp.len, item.len);
+        match item.session {
+            Some(sid) => {
+                assert_eq!(resp.session, Some(sid));
+                let want = session_reference(
+                    kernel.as_ref(), SHAPE, seed, sid, &item.q, &item.k,
+                    &item.v, item.len, resp.span_start);
+                assert_eq!(resp.out.len(), want.len());
+                assert!(resp.out.iter().zip(&want)
+                            .all(|(a, b)| a.to_bits() == b.to_bits()),
+                        "session {sid} step at len {} diverged",
+                        item.len);
+                if resp.cache_hit == Some(true) {
+                    hits += 1;
+                }
+            }
+            None => {
+                assert_eq!(resp.session, None);
+                assert_eq!(resp.span_start, 0);
+                assert_eq!(resp.out.len(), SHAPE.v_len(item.len));
+            }
+        }
+    }
+    // every non-prefill step hit the cache (2 sessions × 3 steps)
+    assert_eq!(hits, 6);
+    // grown sessions landed in the N=32 bucket and were counted
+    let m = gw.bucket_metrics();
+    assert!(m[1].session_route_up.load(Ordering::Relaxed) >= 2,
+            "both sessions should route up into N=32");
+    assert!(m[0].cache_misses.load(Ordering::Relaxed) >= 2,
+            "prefills miss in the pinned N=16 bucket");
+    gw.shutdown();
+}
+
+#[test]
+fn tcp_gateway_serves_decode_sessions() {
+    let gw = Arc::new(gateway());
+    let stop = Arc::new(AtomicBool::new(false));
+    let (addr_tx, addr_rx) = mpsc::channel();
+    let stop2 = stop.clone();
+    let gw2 = gw.clone();
+    let server_thread = std::thread::spawn(move || {
+        server::serve_gateway(gw2, "127.0.0.1:0", stop2, move |a| {
+            addr_tx.send(a).unwrap();
+        })
+        .unwrap();
+    });
+    let addr = addr_rx.recv_timeout(Duration::from_secs(30)).unwrap();
+    let mut client = server::Client::connect(&addr.to_string()).unwrap();
+
+    // one session, prefill 8 then a step to 12 — full-history protocol
+    let steps = synthetic_decode_trace(SHAPE, 8, 1, 4, 1, 3);
+    let r0 = client
+        .attend_session(1, &steps[0].q, &steps[0].k, &steps[0].v, 8, 5)
+        .unwrap();
+    assert_eq!(r0.get("session").as_i64(), Some(5));
+    assert_eq!(r0.get("span_start").as_i64(), Some(0));
+    assert_eq!(r0.get("cached").as_bool(), Some(false));
+    assert_eq!(r0.get("out").as_arr().unwrap().len(), SHAPE.v_len(8));
+
+    let r1 = client
+        .attend_session(2, &steps[1].q, &steps[1].k, &steps[1].v, 12, 5)
+        .unwrap();
+    assert_eq!(r1.get("session").as_i64(), Some(5));
+    assert_eq!(r1.get("span_start").as_i64(), Some(8));
+    assert_eq!(r1.get("cached").as_bool(), Some(true));
+    // the reply carries only the new rows
+    assert_eq!(r1.get("out").as_arr().unwrap().len(),
+               SHAPE.heads * 4 * SHAPE.dv);
+
+    // a non-growing step surfaces an error object, session intact
+    let err = client.attend_session(3, &steps[1].q, &steps[1].k,
+                                    &steps[1].v, 12, 5);
+    assert!(err.is_err());
+
+    // ending the session releases its state; the same id then starts
+    // fresh (new generation → the prefill misses again, no aliasing)
+    let ended = client.end_session(5, 5).unwrap();
+    assert_eq!(ended.get("ended").as_bool(), Some(true));
+    let r2 = client
+        .attend_session(6, &steps[0].q, &steps[0].k, &steps[0].v, 8, 5)
+        .unwrap();
+    assert_eq!(r2.get("span_start").as_i64(), Some(0));
+    assert_eq!(r2.get("cached").as_bool(), Some(false));
+
+    // one-shot replies carry no session fields
+    let len = 8;
+    let reply = client
+        .attend(4, &vec![0.1; SHAPE.qk_len(len)],
+                &vec![0.2; SHAPE.qk_len(len)],
+                &vec![0.3; SHAPE.v_len(len)], len)
+        .unwrap();
+    assert!(reply.get("session").as_i64().is_none());
+
+    drop(client);
+    stop.store(true, Ordering::Relaxed);
+    server_thread.join().unwrap();
 }
 
 #[test]
