@@ -1,0 +1,150 @@
+//! Sharded fan-out bench: rows/sec vs in-process shard-worker count,
+//! split/gather overhead, and tail latency under mixed ragged traffic.
+//!
+//! Every `ShardedBackend` here runs its workers in-process (one
+//! sequential `ShardEngine` per shard, fanned out on scoped threads),
+//! so the numbers isolate the split/dispatch/gather machinery from
+//! network cost — the TCP transport adds wire time on top but reuses
+//! exactly this planner.  Before any timing, each configuration is
+//! asserted bit-identical to `NativeBackend` on the same descriptor:
+//! the scaling numbers are only meaningful because the answer never
+//! changes.
+//!
+//! Expected shape: compute-bound kernels (`full` at large N) scale
+//! near-linearly to the physical core count — >= 1.7x at 2 shards on
+//! the large-N bucket — then flatten once shards outnumber cores or
+//! the per-shard slice gets too thin to amortise split/gather.  The
+//! `shards=1` row against raw native is the overhead floor: one extra
+//! tensor copy each way, no threads.  `CT_SMOKE=1` shrinks the grid
+//! for CI.
+
+use clustered_transformers::attention::{AttentionBackend, AttnBatch,
+                                        NativeBackend, ShardedBackend};
+use clustered_transformers::benchlib::{self, quick, rows_per_sec,
+                                       BenchRecord, Table};
+use clustered_transformers::config::init_logging;
+use clustered_transformers::exec::ExecCtx;
+use clustered_transformers::prng::Xoshiro256;
+use clustered_transformers::tensor::batch::BatchMatrix;
+
+const HEADS: usize = 2;
+const BATCH: usize = 8;
+
+fn smoke() -> bool {
+    std::env::var("CT_SMOKE").map(|v| v == "1").unwrap_or(false)
+}
+
+fn main() {
+    init_logging(false);
+    let (n, d) = if smoke() { (256, 16) } else { (1024, 32) };
+    let families: &[&str] =
+        if smoke() { &["full"] } else { &["full", "i-clustered-8"] };
+    let shard_counts = [1usize, 2, 4, 8];
+    let ctx = ExecCtx::sequential();
+    let seed = 0x5AAD_BE4C_u64;
+    let mut records = Vec::new();
+
+    for &kernel in families {
+        let mut rng = Xoshiro256::new(seed ^ n as u64);
+        let q = BatchMatrix::randn(BATCH, HEADS, n, d, &mut rng);
+        let k = BatchMatrix::randn(BATCH, HEADS, n, d, &mut rng);
+        let v = BatchMatrix::randn(BATCH, HEADS, n, d, &mut rng);
+        let batch = AttnBatch::new(&q, &k, &v, seed);
+        let rows = BATCH * n;
+
+        let native = NativeBackend::by_name(kernel).expect("kernel");
+        let want = native.execute(&batch, &ctx);
+        let st_native = quick(|| {
+            let _ = native.execute(&batch, &ctx);
+        });
+        let native_rps = rows_per_sec(rows, &st_native);
+
+        let mut table = Table::new(
+            &format!(
+                "sharded[{kernel}]: B={BATCH} H={HEADS} N={n} D={d}, \
+                 in-process shard workers"),
+            &["shards", "rows/s", "speedup vs 1", "p99 ms",
+              "overhead vs native"],
+        );
+        let mut base_rps = 0.0f64;
+        for &shards in &shard_counts {
+            let backend = ShardedBackend::in_process(kernel, shards, 1)
+                .expect("kernel");
+            // the contract, live: fan-out never moves bits
+            let got = backend.execute(&batch, &ctx);
+            assert!(got.bit_identical(&want),
+                    "{kernel}/{shards} shards diverged from native");
+            let st = quick(|| {
+                let _ = backend.execute(&batch, &ctx);
+            });
+            let rps = rows_per_sec(rows, &st);
+            if shards == 1 {
+                base_rps = rps;
+            }
+            let speedup = rps / base_rps.max(1e-9);
+            // shards=1 vs raw native is the pure split/gather cost
+            let overhead = st.mean_s / st_native.mean_s.max(1e-12) - 1.0;
+            table.row(vec![
+                shards.to_string(),
+                format!("{rps:.0}"),
+                format!("{speedup:.2}x"),
+                format!("{:.3}", st.p99_s * 1e3),
+                format!("{:+.1}%", 100.0 * overhead),
+            ]);
+            records.push(
+                BenchRecord::from_stats(
+                    &format!("{kernel}/N={n}/shards={shards}"), rows, &st)
+                    .with("shards", shards as f64)
+                    .with("speedup_vs_1", speedup)
+                    .with("efficiency", speedup / shards as f64)
+                    .with("overhead_vs_native", overhead),
+            );
+        }
+        table.emit();
+        records.push(
+            BenchRecord::from_stats(&format!("{kernel}/N={n}/native"),
+                                    rows, &st_native)
+                .with("rows_per_sec_native", native_rps),
+        );
+
+        // Mixed ragged traffic: lens spanning 1..N stress the planner's
+        // per-sequence masking; p99 lands in the JSON via BenchRecord.
+        let lens: Vec<usize> =
+            (0..BATCH).map(|b| 1 + (b * (n - 1)) / (BATCH - 1)).collect();
+        let valid: usize = lens.iter().sum();
+        let ragged = AttnBatch::new(&q, &k, &v, seed).with_lens(&lens);
+        let want_ragged = native.execute(&ragged, &ctx);
+        let backend = ShardedBackend::in_process(kernel, 4, 1)
+            .expect("kernel");
+        assert!(backend.execute(&ragged, &ctx).bit_identical(&want_ragged),
+                "{kernel}: ragged fan-out diverged from native");
+        let st = quick(|| {
+            let _ = backend.execute(&ragged, &ctx);
+        });
+        let mut mixed = Table::new(
+            &format!("sharded[{kernel}]: mixed ragged traffic, 4 shards"),
+            &["valid rows", "rows/s", "p50 ms", "p99 ms"],
+        );
+        mixed.row(vec![
+            format!("{valid}/{}", BATCH * n),
+            format!("{:.0}", rows_per_sec(valid, &st)),
+            format!("{:.3}", st.p50_s * 1e3),
+            format!("{:.3}", st.p99_s * 1e3),
+        ]);
+        mixed.emit();
+        records.push(
+            BenchRecord::from_stats(&format!("{kernel}/N={n}/mixed-4"),
+                                    valid, &st)
+                .with("shards", 4.0)
+                .with("valid_rows", valid as f64),
+        );
+    }
+
+    let _ = benchlib::write_bench_json("sharded", &records);
+    println!("\nexpected: full/N={n} reaches >= 1.7x rows/sec at 2 shards \
+              (compute-bound O(N^2) slices dwarf the one copy each way), \
+              scaling flattens past the core count; shards=1 vs native \
+              is the split/gather floor (single-digit % at large N); \
+              ragged traffic keeps p99 close to p50 because the planner \
+              balances sequences, not padded rows.");
+}

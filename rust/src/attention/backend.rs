@@ -20,9 +20,10 @@
 //! Cross-request KV caching landed exactly this way: cache handles
 //! ride the descriptor (`AttnBatch::sessions`) and
 //! [`super::CachingBackend`] wraps any implementation of this trait
-//! without touching a kernel signature.  Sharding across hosts (a
-//! fan-out backend splitting the batch axis) is the remaining
-//! direction.
+//! without touching a kernel signature.  Multi-host fan-out landed the
+//! same way: [`super::ShardedBackend`] splits the descriptor across
+//! shard workers and implements this trait bit-identically to the
+//! native engine (see [`super::sharded`]).
 
 use crate::exec::ExecCtx;
 use crate::tensor::batch::BatchMatrix;

@@ -132,6 +132,53 @@ pub(crate) struct HeadModel {
     cent_real: Matrix,
 }
 
+/// One head's cached panel: immutable, Arc-shared, append-only row
+/// segments (one segment per populate/step).  Rows never mutate after
+/// they land in a segment, so a hit "takes" the whole history with
+/// `clone()` — O(#segments) pointer bumps, no row data touched — and
+/// the store lock is held only for the lookup + append.  The contiguous
+/// matrix a solve needs is assembled lock-free by [`Panel::to_matrix`];
+/// eviction can race that assembly safely because the Arcs keep every
+/// segment alive for as long as any snapshot does.
+#[derive(Debug, Clone)]
+pub(crate) struct Panel {
+    rows: usize,
+    cols: usize,
+    segs: Vec<Arc<Vec<f32>>>,
+}
+
+impl Panel {
+    /// Seed a panel from a freshly recomputed history (no copy — the
+    /// matrix's storage becomes the first segment).
+    fn from_matrix(m: Matrix) -> Self {
+        Self { rows: m.rows, cols: m.cols, segs: vec![Arc::new(m.data)] }
+    }
+
+    /// Append a step's new rows as one fresh segment (copies only the
+    /// new rows; the history segments are untouched and stay shared).
+    fn append(&mut self, m: &Matrix) {
+        debug_assert_eq!(m.cols, self.cols, "panel column mismatch");
+        self.rows += m.rows;
+        self.segs.push(Arc::new(m.data.clone()));
+    }
+
+    /// Contiguous copy of the whole panel — called *outside* the store
+    /// lock, so the per-step O(len·D) assembly never serializes
+    /// concurrent bucket steps the way the old under-lock clone did.
+    pub(crate) fn to_matrix(&self) -> Matrix {
+        if let [seg] = self.segs.as_slice() {
+            return Matrix { rows: self.rows, cols: self.cols,
+                            data: seg.as_ref().clone() };
+        }
+        let mut data = Vec::with_capacity(self.rows * self.cols);
+        for seg in &self.segs {
+            data.extend_from_slice(seg);
+        }
+        debug_assert_eq!(data.len(), self.rows * self.cols);
+        Matrix { rows: self.rows, cols: self.cols, data }
+    }
+}
+
 /// One session's cached state: per-head appended Q/K/V panels (the Q
 /// panel is the key history of shared-QK families and the re-cluster
 /// input of the clustered ones) plus the optional frozen clustering.
@@ -143,9 +190,9 @@ struct SessionEntry {
     /// Cached history rows (every panel has exactly this many rows).
     len: usize,
     last_used: u64,
-    q: Vec<Matrix>,
-    k: Vec<Matrix>,
-    v: Vec<Matrix>,
+    q: Vec<Panel>,
+    k: Vec<Panel>,
+    v: Vec<Panel>,
     model: Option<Vec<HeadModel>>,
     /// History length at the last re-cluster (0 = never clustered).
     clustered_len: usize,
@@ -157,13 +204,14 @@ struct Store {
     clock: u64,
 }
 
-/// Everything a hit hands the backend: the full panels (cloned out of
-/// the store so the lock is not held across the solve) and the frozen
-/// model when this step may reuse it.
+/// Everything a hit hands the backend: Arc-shared snapshots of the full
+/// panels (pointer clones only — no row data is copied under the store
+/// lock) and the frozen model when this step may reuse it.  The backend
+/// materializes contiguous matrices from the snapshots lock-free.
 pub(crate) struct HitData {
-    pub q: Vec<Matrix>,
-    pub k: Vec<Matrix>,
-    pub v: Vec<Matrix>,
+    pub q: Vec<Panel>,
+    pub k: Vec<Panel>,
+    pub v: Vec<Panel>,
     pub model: Option<Vec<HeadModel>>,
     pub reuse: bool,
 }
@@ -258,12 +306,13 @@ impl KvCache {
     /// the new rows and return the full panels; anything else is a miss
     /// (stale entries are dropped so they can never alias).
     ///
-    /// The panels are *cloned* under the store lock so the solve never
-    /// holds it: an O(len·D) memcpy per step, which is cheap next to
-    /// the O(len·D) FLOPs of even the incremental solve but does
-    /// serialize concurrent steps on the lock for its duration —
-    /// Arc-shared append-only segments are the known follow-up if that
-    /// ever shows up in a profile (see ROADMAP).
+    /// The panels are append-only Arc-shared segment lists, so the hit
+    /// snapshot is O(#segments) pointer clones: the lock is held only
+    /// for the lookup and the append of the new rows (one fresh
+    /// segment per head), never for an O(len·D) history memcpy.  The
+    /// contiguous view a solve needs is assembled lock-free from the
+    /// snapshot ([`Panel::to_matrix`]), which is what stops concurrent
+    /// bucket steps from serializing on the store lock.
     pub(crate) fn step(&self, r: CacheRef, heads: usize, dk: usize,
                        dv: usize, span_start: usize, new_q: &[Matrix],
                        new_k: &[Matrix], new_v: &[Matrix])
@@ -292,12 +341,9 @@ impl KvCache {
         let m = new_q[0].rows;
         let e = store.sessions.get_mut(&r.session).unwrap();
         for h in 0..heads {
-            e.q[h].data.extend_from_slice(&new_q[h].data);
-            e.q[h].rows += m;
-            e.k[h].data.extend_from_slice(&new_k[h].data);
-            e.k[h].rows += m;
-            e.v[h].data.extend_from_slice(&new_v[h].data);
-            e.v[h].rows += m;
+            e.q[h].append(&new_q[h]);
+            e.k[h].append(&new_k[h]);
+            e.v[h].append(&new_v[h]);
         }
         e.len += m;
         e.last_used = tick;
@@ -342,6 +388,9 @@ impl KvCache {
             return;
         }
         store.used_rows += len;
+        let panels =
+            |ms: Vec<Matrix>| ms.into_iter().map(Panel::from_matrix)
+                                .collect::<Vec<Panel>>();
         store.sessions.insert(r.session, SessionEntry {
             generation: r.generation,
             heads,
@@ -349,9 +398,9 @@ impl KvCache {
             dv,
             len,
             last_used: tick,
-            q,
-            k,
-            v,
+            q: panels(q),
+            k: panels(k),
+            v: panels(v),
             model: None,
             clustered_len: 0,
         });
@@ -579,14 +628,17 @@ impl CachingBackend {
                     let mut models = Vec::new();
                     for h in 0..heads {
                         let mut rng = slice_stream(seed2, h as u64);
-                        let (qf, kf, vf) =
-                            (&data.q[h], &data.k[h], &data.v[h]);
+                        // the store lock is long gone — assemble the
+                        // contiguous panels from the Arc snapshots here
+                        let (qf, kf, vf) = (data.q[h].to_matrix(),
+                                            data.k[h].to_matrix(),
+                                            data.v[h].to_matrix());
                         let span_out = if data.reuse {
                             let model =
                                 &data.model.as_ref().unwrap()[h];
                             reuse_head(model, &self.plan,
-                                       &qf.row_span(span, valid), kf, vf,
-                                       ctx)
+                                       &qf.row_span(span, valid), &kf,
+                                       &vf, ctx)
                         } else {
                             match self.plan {
                                 FamilyPlan::Span { full_recompute } => {
@@ -594,8 +646,8 @@ impl CachingBackend {
                                         computed = valid;
                                     }
                                     self.kernel
-                                        .solve(&AttnProblem::new(qf, kf,
-                                                                 vf)
+                                        .solve(&AttnProblem::new(&qf, &kf,
+                                                                 &vf)
                                                .with_query_span(span),
                                                &mut rng, ctx)
                                         .row_span(span, valid)
@@ -610,8 +662,8 @@ impl CachingBackend {
                                         computed = valid;
                                     }
                                     let (o, m) = recluster_head(
-                                        clusters, bits, iters, topk, qf,
-                                        kf, vf, span, want_model,
+                                        clusters, bits, iters, topk, &qf,
+                                        &kf, &vf, span, want_model,
                                         &mut rng, ctx);
                                     if let Some(m) = m {
                                         models.push(m);

@@ -19,6 +19,10 @@
 //!  - [`cache`] owns the incremental-decode subsystem: the per-session
 //!    [`KvCache`] panel store and the [`CachingBackend`] that wraps
 //!    any backend with cross-request KV caching;
+//!  - [`sharded`] owns the multi-host fan-out: [`ShardedBackend`]
+//!    splits a descriptor across shard workers (batch axis, then head
+//!    axis) and reassembles the replies bit-identically, routing decode
+//!    sessions to their owning shard by consistent hash;
 //!  - this module owns the trait, the name-keyed [`REGISTRY`], the
 //!    [`Variant`] config enum, and the batched entry points.
 //!
@@ -66,6 +70,7 @@ pub mod improved;
 pub mod lsh;
 pub mod oracle;
 pub mod problem;
+pub mod sharded;
 
 pub use backend::{AttentionBackend, NativeBackend};
 pub use cache::{CacheCounters, CachingBackend, KvCache, KvCacheOptions,
@@ -82,6 +87,9 @@ pub use improved::{improved_clustered_attention,
 pub use lsh::{reformer_attention, LshAttention};
 pub use oracle::{oracle_top_attention, OracleTopAttention};
 pub use problem::{AttnBatch, AttnProblem, CacheRef, SessionRef};
+pub use sharded::{solve_batch_offset, InProcessShard, ShardEngine,
+                  ShardOptions, ShardReply, ShardRequest, ShardSession,
+                  ShardTransport, ShardedBackend, TcpShard};
 
 use crate::exec::ExecCtx;
 use crate::prng::{slice_stream, Xoshiro256};

@@ -1,0 +1,1373 @@
+//! Multi-host fan-out: [`ShardedBackend`] splits an [`AttnBatch`]
+//! across shard workers and reassembles the replies bit-identically to
+//! [`NativeBackend`].
+//!
+//! ## Why the split preserves the bits
+//!
+//! The batched determinism contract keys output slice `s = b·H + h` to
+//! `slice_stream(seed, s)` — a pure function of the *flat position*,
+//! not of which pool (or host) computes it.  A shard therefore receives
+//! its sub-batch together with the `slice_base` its slices start at and
+//! runs [`solve_batch_offset`], the offset-keyed twin of
+//! [`AttentionKernel::solve_batch`]: local slice `s` draws from
+//! `slice_stream(seed, slice_base + s)`.  Sequences are split along the
+//! batch axis (contiguous chunks); a batch smaller than the fleet
+//! splits each sequence's *head* axis instead, which is just a finer
+//! slice range.  Session sequences draw from their session streams
+//! (`prng::session_seed`, slot-independent) so they can route anywhere
+//! without changing a bit — `proptest/attention_props.rs` pins all of
+//! this against the single-host oracle.
+//!
+//! ## Topology
+//!
+//! - [`ShardEngine`] is the worker-side solver: kernel registry +
+//!   per-shard [`KvCache`] behind a [`CachingBackend`].  `ct
+//!   shard-worker` serves it over TCP (`server::serve_shard_worker`);
+//!   [`InProcessShard`] embeds it for tests and loopback benches.
+//! - [`ShardTransport`] is the dispatch seam; [`TcpShard`] implements
+//!   it over the wire protocol below.
+//! - [`ShardedBackend`] is the gateway-side [`AttentionBackend`]: it
+//!   plans the split, dispatches the parts concurrently, and scatters
+//!   the replies.  Plain sequences are compacted exactly the way
+//!   [`CachingBackend`] compacts its plain flush (PRNG streams keyed by
+//!   compacted position), so the gateway can swap this backend in for
+//!   its per-bucket `CachingBackend` without changing any output.
+//!   Decode sessions route by consistent hash
+//!   ([`crate::coordinator::HashRing`]) so a session's cached panels
+//!   land on the same host every step.
+//!
+//! ## Failure semantics
+//!
+//! Dispatch retries a failed shard `retries` times with doubling
+//! backoff, then marks it down and solves the part locally (degraded
+//! mode — same bits, single-host speed).  Down shards are skipped when
+//! planning until [`ShardedBackend::health_check`] sees them answer a
+//! ping.  Session stickiness survives failure: a downed owner's
+//! sessions fall back to *local* compute — they are never re-routed to
+//! another shard, so no foreign cache state is ever created.
+//!
+//! ## Wire protocol (shard-worker endpoint)
+//!
+//! One JSON header line, then raw little-endian f32 frames — tensors
+//! are never JSON-encoded on the hot path:
+//!
+//! ```text
+//! {"id":1,"op":"solve","kernel":"full","batch":2,"heads":4,"rows":128,
+//!  "dk":32,"dv":32,"seed":"00..0f","slice_base":"0..8",
+//!  "lens":[100,128]?,
+//!  "session":{"id":"..","generation":"..","span_start":96}?}\n
+//! <q: B·H·N·Dk f32s> <k: B·H·N·Dk f32s> <v: B·H·N·Dv f32s>
+//! ```
+//!
+//! reply: `{"id":1,"ok":true,"batch":..,"heads":..,"rows":..,"cols":..,
+//! "outcome":{..}?}\n` followed by the output frame, or `{"id",
+//! "error"}` with no frame.  `{"op":"ping"}` → `{"ok":true}` and
+//! `{"op":"end","session":"<hex>"}` → `{"ok":true}` share the framing.
+//! Seeds, session ids and generations travel as 16-hex-digit strings:
+//! JSON numbers are f64 and silently round u64s above 2^53, which
+//! would break bit-identity.
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::ring::HashRing;
+use crate::exec::{ExecCtx, WorkerPool};
+use crate::jsonio::{obj, parse, Value};
+use crate::prng::slice_stream;
+use crate::tensor::batch::BatchMatrix;
+
+use super::backend::AttentionBackend;
+use super::cache::{CachingBackend, KvCache, SeqOutcome};
+use super::problem::{AttnBatch, AttnProblem, CacheRef, SessionRef};
+use super::{kernel_for, AttentionKernel, Variant};
+
+// ---------------------------------------------------------------------------
+// offset-keyed batch solve
+// ---------------------------------------------------------------------------
+
+/// [`AttentionKernel::solve_batch`] with the PRNG streams keyed at an
+/// offset: local slice `s` draws from `slice_stream(seed, slice_base +
+/// s)`.  With `slice_base = 0` this *is* `solve_batch`; with the base
+/// of a sub-batch's first slice it reproduces the slices a single-host
+/// solve would have produced at those flat positions — the primitive
+/// that makes the shard split bit-invisible.
+pub fn solve_batch_offset(kernel: &dyn AttentionKernel,
+                          batch: &AttnBatch<'_>, slice_base: u64,
+                          ctx: &ExecCtx) -> BatchMatrix {
+    batch.validate();
+    let (q, k, v) = (batch.q, batch.k, batch.v);
+    let mut out = BatchMatrix::zeros(q.batch, q.heads, q.rows, v.cols);
+    if out.slices() == 0 || out.slice_len() == 0 {
+        return out;
+    }
+    let (outer, inner) = ctx.split_batch(out.slices());
+    let dv = v.cols;
+    let chunks = out.slices_mut();
+    outer.for_each_mut(chunks, |s, chunk: &mut [f32]| {
+        let mut rng = slice_stream(batch.seed, slice_base + s as u64);
+        let l = batch.slice_valid_len(s);
+        let (qs, ks, vs) =
+            (q.slice_valid(s, l), k.slice_valid(s, l),
+             v.slice_valid(s, l));
+        let o = kernel.solve(&AttnProblem::new(&qs, &ks, &vs), &mut rng,
+                             &inner);
+        chunk[..l * dv].copy_from_slice(&o.data);
+    });
+    out
+}
+
+// ---------------------------------------------------------------------------
+// request/reply types + transport seam
+// ---------------------------------------------------------------------------
+
+/// Session annotation of a shard request (the wire form of
+/// [`SessionRef`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardSession {
+    pub session: u64,
+    pub generation: u64,
+    pub span_start: usize,
+}
+
+/// One dispatchable sub-problem: a dense (sub-)batch plus the
+/// `slice_base` its PRNG streams start at.  `session` marks a one-
+/// sequence decode step (its streams come from the session instead).
+pub struct ShardRequest {
+    pub kernel: String,
+    pub q: BatchMatrix,
+    pub k: BatchMatrix,
+    pub v: BatchMatrix,
+    pub seed: u64,
+    pub slice_base: u64,
+    pub lens: Option<Vec<usize>>,
+    pub session: Option<ShardSession>,
+}
+
+/// A shard's answer: the sub-batch output, plus the cache outcome when
+/// the request was a session step.
+pub struct ShardReply {
+    pub out: BatchMatrix,
+    pub outcome: Option<SeqOutcome>,
+}
+
+/// How [`ShardedBackend`] reaches one shard — in-process for tests and
+/// loopback benches, TCP for real fleets.
+pub trait ShardTransport: Send + Sync {
+    /// Stable identity — the consistent-hash ring hashes this, so it
+    /// must not change across gateway restarts (use the address).
+    fn shard_id(&self) -> String;
+
+    fn execute(&self, req: &ShardRequest) -> Result<ShardReply>;
+
+    /// Liveness probe for [`ShardedBackend::health_check`].
+    fn ping(&self) -> bool;
+
+    /// Release a session's cached state on this shard.
+    fn end_session(&self, session: u64) -> Result<()>;
+}
+
+// ---------------------------------------------------------------------------
+// worker-side engine
+// ---------------------------------------------------------------------------
+
+/// A shard request's kernel, resolved once and reused: the raw kernel
+/// for plain parts, a [`CachingBackend`] for session steps.
+struct KernelEntry {
+    kernel: Box<dyn AttentionKernel>,
+    cached: CachingBackend,
+}
+
+/// The worker-side solver behind `ct shard-worker` (and
+/// [`InProcessShard`]): resolves kernels by name on demand and executes
+/// [`ShardRequest`]s against a shard-local [`KvCache`].
+pub struct ShardEngine {
+    workers: usize,
+    cache: Arc<KvCache>,
+    kernels: Mutex<HashMap<String, Arc<KernelEntry>>>,
+}
+
+impl ShardEngine {
+    /// Engine over an unbounded cache.  `workers` sizes the solve pool
+    /// (`0` = one per hardware thread, `1` = sequential).
+    pub fn new(workers: usize) -> Self {
+        Self::with_cache(workers, Arc::new(KvCache::unbounded()))
+    }
+
+    pub fn with_cache(workers: usize, cache: Arc<KvCache>) -> Self {
+        Self { workers, cache, kernels: Mutex::new(HashMap::new()) }
+    }
+
+    pub fn cache(&self) -> &Arc<KvCache> {
+        &self.cache
+    }
+
+    fn ctx(&self) -> ExecCtx {
+        match self.workers {
+            0 => ExecCtx::new(WorkerPool::auto()),
+            1 => ExecCtx::sequential(),
+            n => ExecCtx::new(WorkerPool::new(n)),
+        }
+    }
+
+    fn entry(&self, name: &str) -> Result<Arc<KernelEntry>> {
+        let mut kernels = self.kernels.lock().unwrap();
+        if let Some(e) = kernels.get(name) {
+            return Ok(e.clone());
+        }
+        let variant = Variant::parse(name)
+            .ok_or_else(|| anyhow!("unknown kernel {name:?}"))?;
+        let cached = CachingBackend::native(name, self.cache.clone())
+            .expect("variant parsed above");
+        let e = Arc::new(KernelEntry { kernel: kernel_for(&variant),
+                                       cached });
+        kernels.insert(name.to_string(), e.clone());
+        Ok(e)
+    }
+
+    /// Execute one shard request.  This is the worker's trust boundary:
+    /// malformed requests come back as `Err` (one error reply on the
+    /// wire), never as a panic that kills the connection thread.
+    pub fn solve(&self, req: &ShardRequest) -> Result<ShardReply> {
+        let entry = self.entry(&req.kernel)?;
+        let (q, k, v) = (&req.q, &req.k, &req.v);
+        if (q.batch, q.heads, q.rows) != (k.batch, k.heads, k.rows)
+            || (q.batch, q.heads, q.rows) != (v.batch, v.heads, v.rows)
+            || q.cols != k.cols
+        {
+            return Err(anyhow!("q/k/v shape mismatch"));
+        }
+        if let Some(lens) = &req.lens {
+            if lens.len() != q.batch {
+                return Err(anyhow!("lens has {} entries for batch {}",
+                                   lens.len(), q.batch));
+            }
+            if lens.iter().any(|&l| l == 0 || l > q.rows) {
+                return Err(anyhow!("lens entry out of 1..={}", q.rows));
+            }
+        }
+        let ctx = self.ctx();
+        match req.session {
+            None => {
+                let mut batch = AttnBatch::new(q, k, v, req.seed);
+                if let Some(lens) = req.lens.as_deref() {
+                    batch = batch.with_lens(lens);
+                }
+                Ok(ShardReply {
+                    out: solve_batch_offset(entry.kernel.as_ref(), &batch,
+                                            req.slice_base, &ctx),
+                    outcome: None,
+                })
+            }
+            Some(s) => {
+                if q.batch != 1 {
+                    return Err(anyhow!("session request must carry \
+                                        exactly one sequence"));
+                }
+                let valid = req.lens.as_ref().map_or(q.rows, |l| l[0]);
+                if s.span_start >= valid {
+                    return Err(anyhow!("span_start {} leaves no row in \
+                                        0..{valid}", s.span_start));
+                }
+                let sessions = [Some(SessionRef {
+                    cache: CacheRef { session: s.session,
+                                      generation: s.generation },
+                    span_start: s.span_start,
+                })];
+                let lens = [valid];
+                let batch = AttnBatch::new(q, k, v, req.seed)
+                    .with_lens(&lens)
+                    .with_sessions(&sessions);
+                let (out, outcomes) =
+                    entry.cached.execute_with_report(&batch, &ctx);
+                Ok(ShardReply { out, outcome: Some(outcomes[0]) })
+            }
+        }
+    }
+
+    /// Release a session's cached panels.
+    pub fn end_session(&self, session: u64) {
+        self.cache.invalidate(session);
+    }
+}
+
+/// Loopback transport: a [`ShardEngine`] called directly.  Used by
+/// tests, the sharded bench (`CT_SMOKE` CI runs no real network) and
+/// single-host smoke deployments.
+pub struct InProcessShard {
+    id: String,
+    engine: Arc<ShardEngine>,
+}
+
+impl InProcessShard {
+    pub fn new(id: &str, engine: Arc<ShardEngine>) -> Self {
+        Self { id: id.to_string(), engine }
+    }
+}
+
+impl ShardTransport for InProcessShard {
+    fn shard_id(&self) -> String {
+        self.id.clone()
+    }
+
+    fn execute(&self, req: &ShardRequest) -> Result<ShardReply> {
+        self.engine.solve(req)
+    }
+
+    fn ping(&self) -> bool {
+        true
+    }
+
+    fn end_session(&self, session: u64) -> Result<()> {
+        self.engine.end_session(session);
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// wire encoding (shared with server::serve_shard_worker)
+// ---------------------------------------------------------------------------
+
+/// u64 → 16 hex digits.  Never encode a u64 as a JSON number: `Value`
+/// numbers are f64 and round above 2^53, which would corrupt seeds and
+/// session ids — and with them, the bits.
+pub(crate) fn hex_u64(v: u64) -> String {
+    format!("{v:016x}")
+}
+
+pub(crate) fn parse_hex_u64(v: &Value) -> Result<u64> {
+    let s = v.as_str()
+        .ok_or_else(|| anyhow!("expected a hex-string u64"))?;
+    u64::from_str_radix(s, 16)
+        .map_err(|e| anyhow!("bad hex u64 {s:?}: {e}"))
+}
+
+/// Write one raw little-endian f32 frame.
+pub(crate) fn write_f32s(w: &mut impl Write, xs: &[f32])
+                         -> std::io::Result<()> {
+    let mut buf = Vec::with_capacity(xs.len() * 4);
+    for &x in xs {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+    w.write_all(&buf)
+}
+
+/// Read exactly `n` little-endian f32s.
+pub(crate) fn read_f32s(r: &mut impl Read, n: usize)
+                        -> std::io::Result<Vec<f32>> {
+    let mut buf = vec![0u8; n * 4];
+    r.read_exact(&mut buf)?;
+    Ok(buf.chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// The `"op":"solve"` header line of a request.
+fn solve_header(id: i64, req: &ShardRequest) -> Value {
+    let mut fields = vec![
+        ("id", id.into()),
+        ("op", "solve".into()),
+        ("kernel", req.kernel.as_str().into()),
+        ("batch", req.q.batch.into()),
+        ("heads", req.q.heads.into()),
+        ("rows", req.q.rows.into()),
+        ("dk", req.q.cols.into()),
+        ("dv", req.v.cols.into()),
+        ("seed", hex_u64(req.seed).into()),
+        ("slice_base", hex_u64(req.slice_base).into()),
+    ];
+    if let Some(lens) = &req.lens {
+        fields.push(("lens", lens.clone().into()));
+    }
+    if let Some(s) = &req.session {
+        fields.push(("session", obj(vec![
+            ("id", hex_u64(s.session).into()),
+            ("generation", hex_u64(s.generation).into()),
+            ("span_start", s.span_start.into()),
+        ])));
+    }
+    obj(fields)
+}
+
+/// Parsed `"op":"solve"` header — everything but the tensor frames.
+pub(crate) struct SolveHeader {
+    pub id: i64,
+    pub kernel: String,
+    pub batch: usize,
+    pub heads: usize,
+    pub rows: usize,
+    pub dk: usize,
+    pub dv: usize,
+    pub seed: u64,
+    pub slice_base: u64,
+    pub lens: Option<Vec<usize>>,
+    pub session: Option<ShardSession>,
+}
+
+impl SolveHeader {
+    pub(crate) fn parse(req: &Value) -> Result<Self> {
+        let field = |k: &str| {
+            req.get(k).as_usize().ok_or_else(|| anyhow!("missing {k}"))
+        };
+        let lens = match req.get("lens") {
+            Value::Null => None,
+            Value::Arr(a) => Some(
+                a.iter()
+                    .map(|v| v.as_usize()
+                         .ok_or_else(|| anyhow!("bad lens entry")))
+                    .collect::<Result<Vec<usize>>>()?),
+            _ => return Err(anyhow!("lens must be an array")),
+        };
+        let session = match req.get("session") {
+            Value::Null => None,
+            s => Some(ShardSession {
+                session: parse_hex_u64(s.get("id"))?,
+                generation: parse_hex_u64(s.get("generation"))?,
+                span_start: s.get("span_start").as_usize()
+                    .ok_or_else(|| anyhow!("missing span_start"))?,
+            }),
+        };
+        Ok(Self {
+            id: req.get("id").as_i64().unwrap_or(0),
+            kernel: req.get("kernel").as_str()
+                .ok_or_else(|| anyhow!("missing kernel"))?
+                .to_string(),
+            batch: field("batch")?,
+            heads: field("heads")?,
+            rows: field("rows")?,
+            dk: field("dk")?,
+            dv: field("dv")?,
+            seed: parse_hex_u64(req.get("seed"))?,
+            slice_base: parse_hex_u64(req.get("slice_base"))?,
+            lens,
+            session,
+        })
+    }
+
+    /// Elements of one tensor frame of column width `cols` — `None` on
+    /// overflow or past the sanity cap, so a hostile header can never
+    /// make the worker allocate unbounded memory.
+    pub(crate) fn payload_elems(&self, cols: usize) -> Option<usize> {
+        const MAX_ELEMS: usize = 1 << 28; // 1 GiB of f32 per frame
+        let n = self.batch.checked_mul(self.heads)?
+            .checked_mul(self.rows)?
+            .checked_mul(cols)?;
+        (n <= MAX_ELEMS).then_some(n)
+    }
+}
+
+/// JSON form of a [`SeqOutcome`] (the `"outcome"` reply field).
+pub(crate) fn outcome_to_value(o: &SeqOutcome) -> Value {
+    match o {
+        SeqOutcome::Bypass => obj(vec![("kind", "bypass".into())]),
+        SeqOutcome::Hit { reused_rows, computed_rows, reclustered } => {
+            obj(vec![
+                ("kind", "hit".into()),
+                ("reused_rows", (*reused_rows).into()),
+                ("computed_rows", (*computed_rows).into()),
+                ("reclustered", (*reclustered).into()),
+            ])
+        }
+        SeqOutcome::Miss { recomputed_rows } => obj(vec![
+            ("kind", "miss".into()),
+            ("recomputed_rows", (*recomputed_rows).into()),
+        ]),
+    }
+}
+
+pub(crate) fn outcome_from_value(v: &Value) -> Result<SeqOutcome> {
+    let field = |k: &str| {
+        v.get(k).as_usize().ok_or_else(|| anyhow!("outcome missing {k}"))
+    };
+    match v.get("kind").as_str() {
+        Some("bypass") => Ok(SeqOutcome::Bypass),
+        Some("hit") => Ok(SeqOutcome::Hit {
+            reused_rows: field("reused_rows")?,
+            computed_rows: field("computed_rows")?,
+            reclustered: v.get("reclustered").as_bool().unwrap_or(false),
+        }),
+        Some("miss") => Ok(SeqOutcome::Miss {
+            recomputed_rows: field("recomputed_rows")?,
+        }),
+        other => Err(anyhow!("unknown outcome kind {other:?}")),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// TCP transport
+// ---------------------------------------------------------------------------
+
+struct ShardConn {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+/// One shard worker over the wire protocol (module docs).  Connects
+/// lazily, holds one connection, and drops it after any failed
+/// exchange — the binary framing makes a half-consumed stream
+/// unrecoverable, and reconnecting is cheap next to a solve.  Retry
+/// policy lives in [`ShardedBackend`], not here: one call, one attempt.
+pub struct TcpShard {
+    addr: String,
+    conn: Mutex<Option<ShardConn>>,
+    next_id: AtomicU64,
+}
+
+impl TcpShard {
+    pub fn new(addr: &str) -> Self {
+        Self {
+            addr: addr.to_string(),
+            conn: Mutex::new(None),
+            next_id: AtomicU64::new(1),
+        }
+    }
+
+    fn with_conn<R>(&self, f: impl FnOnce(&mut ShardConn) -> Result<R>)
+                    -> Result<R> {
+        let mut guard = self.conn.lock().unwrap();
+        if guard.is_none() {
+            let stream = TcpStream::connect(&self.addr)?;
+            *guard = Some(ShardConn {
+                reader: BufReader::new(stream.try_clone()?),
+                writer: stream,
+            });
+        }
+        match f(guard.as_mut().unwrap()) {
+            Ok(r) => Ok(r),
+            Err(e) => {
+                // framing state unknown after a failure: reconnect on
+                // the next call
+                *guard = None;
+                Err(e)
+            }
+        }
+    }
+
+    fn round_trip_line(&self, conn: &mut ShardConn, header: Value)
+                       -> Result<Value> {
+        conn.writer.write_all(header.to_string().as_bytes())?;
+        conn.writer.write_all(b"\n")?;
+        conn.writer.flush()?;
+        let mut line = String::new();
+        if conn.reader.read_line(&mut line)? == 0 {
+            return Err(anyhow!("shard closed the connection"));
+        }
+        let reply = parse(&line).map_err(|e| anyhow!("bad reply: {e}"))?;
+        if let Some(err) = reply.get("error").as_str() {
+            return Err(anyhow!("shard error: {err}"));
+        }
+        Ok(reply)
+    }
+}
+
+impl ShardTransport for TcpShard {
+    fn shard_id(&self) -> String {
+        self.addr.clone()
+    }
+
+    fn execute(&self, req: &ShardRequest) -> Result<ShardReply> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed) as i64;
+        let header = solve_header(id, req);
+        let want = (req.q.batch, req.q.heads, req.q.rows, req.v.cols);
+        self.with_conn(|conn| {
+            conn.writer.write_all(header.to_string().as_bytes())?;
+            conn.writer.write_all(b"\n")?;
+            write_f32s(&mut conn.writer, &req.q.data)?;
+            write_f32s(&mut conn.writer, &req.k.data)?;
+            write_f32s(&mut conn.writer, &req.v.data)?;
+            conn.writer.flush()?;
+            let mut line = String::new();
+            if conn.reader.read_line(&mut line)? == 0 {
+                return Err(anyhow!("shard closed the connection"));
+            }
+            let reply =
+                parse(&line).map_err(|e| anyhow!("bad reply: {e}"))?;
+            if let Some(err) = reply.get("error").as_str() {
+                return Err(anyhow!("shard error: {err}"));
+            }
+            if reply.get("id").as_i64() != Some(id) {
+                return Err(anyhow!("reply id mismatch"));
+            }
+            let dim = |k: &str| {
+                reply.get(k).as_usize()
+                    .ok_or_else(|| anyhow!("reply missing {k}"))
+            };
+            let got = (dim("batch")?, dim("heads")?, dim("rows")?,
+                       dim("cols")?);
+            if got != want {
+                return Err(anyhow!("reply shape {got:?} != {want:?}"));
+            }
+            let data = read_f32s(&mut conn.reader,
+                                 got.0 * got.1 * got.2 * got.3)?;
+            let outcome = match reply.get("outcome") {
+                Value::Null => None,
+                v => Some(outcome_from_value(v)?),
+            };
+            Ok(ShardReply {
+                out: BatchMatrix::from_vec(got.0, got.1, got.2, got.3,
+                                           data),
+                outcome,
+            })
+        })
+    }
+
+    fn ping(&self) -> bool {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed) as i64;
+        let header = obj(vec![("id", id.into()), ("op", "ping".into())]);
+        self.with_conn(|conn| {
+            let reply = self.round_trip_line(conn, header)?;
+            (reply.get("ok").as_bool() == Some(true))
+                .then_some(())
+                .ok_or_else(|| anyhow!("ping not acknowledged"))
+        })
+        .is_ok()
+    }
+
+    fn end_session(&self, session: u64) -> Result<()> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed) as i64;
+        let header = obj(vec![
+            ("id", id.into()),
+            ("op", "end".into()),
+            ("session", hex_u64(session).into()),
+        ]);
+        self.with_conn(|conn| {
+            self.round_trip_line(conn, header).map(|_| ())
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// gateway-side fan-out backend
+// ---------------------------------------------------------------------------
+
+/// Dispatch policy of a [`ShardedBackend`].
+#[derive(Debug, Clone, Copy)]
+pub struct ShardOptions {
+    /// Re-dispatch attempts after a failed shard exchange (on top of
+    /// the first try) before the part falls back to local compute.
+    pub retries: usize,
+    /// Sleep before the first retry; doubles per attempt.
+    pub backoff: Duration,
+    /// Virtual nodes per shard on the session-routing ring.
+    pub vnodes: usize,
+}
+
+impl Default for ShardOptions {
+    fn default() -> Self {
+        Self {
+            retries: 2,
+            backoff: Duration::from_millis(10),
+            vnodes: HashRing::DEFAULT_VNODES,
+        }
+    }
+}
+
+/// One contiguous (sequence-range × head-range) block of the compacted
+/// plain batch.  The planner's invariant: a part spanning more than one
+/// sequence always carries every head, so a part's slices are
+/// contiguous in flat `b·H + h` order and one `slice_base` keys them
+/// all.
+struct Part {
+    /// Position into the compacted sequence list.
+    seq0: usize,
+    nseq: usize,
+    head0: usize,
+    nheads: usize,
+}
+
+/// Split `nseq` sequences × `heads` heads across `shards` parts: batch
+/// axis first (contiguous chunks, sizes within one), head axis when the
+/// batch alone cannot feed every shard (`nseq < shards`).
+fn plan_parts(nseq: usize, heads: usize, shards: usize) -> Vec<Part> {
+    let shards = shards.max(1);
+    if nseq == 0 || heads == 0 {
+        return Vec::new();
+    }
+    if nseq >= shards {
+        let (base, extra) = (nseq / shards, nseq % shards);
+        let mut parts = Vec::with_capacity(shards);
+        let mut s0 = 0;
+        for i in 0..shards {
+            let n = base + usize::from(i < extra);
+            parts.push(Part { seq0: s0, nseq: n, head0: 0,
+                              nheads: heads });
+            s0 += n;
+        }
+        parts
+    } else {
+        // fewer sequences than shards: split each sequence's head axis
+        let per_seq = (shards / nseq).min(heads).max(1);
+        let (base, extra) = (heads / per_seq, heads % per_seq);
+        let mut parts = Vec::with_capacity(nseq * per_seq);
+        for s in 0..nseq {
+            let mut h0 = 0;
+            for i in 0..per_seq {
+                let nh = base + usize::from(i < extra);
+                parts.push(Part { seq0: s, nseq: 1, head0: h0,
+                                  nheads: nh });
+                h0 += nh;
+            }
+        }
+        parts
+    }
+}
+
+/// Gather head range `head0..head0+nheads` of the listed sequences
+/// (original batch indices) into a dense sub-batch.
+fn gather_part(t: &BatchMatrix, seqs: &[usize], head0: usize,
+               nheads: usize) -> BatchMatrix {
+    let mut out = BatchMatrix::zeros(seqs.len(), nheads, t.rows, t.cols);
+    for (pos, &b) in seqs.iter().enumerate() {
+        for hh in 0..nheads {
+            out.slice_mut(pos * nheads + hh)
+                .copy_from_slice(t.view(b * t.heads + head0 + hh).data);
+        }
+    }
+    out
+}
+
+/// One dispatch unit: a gathered sub-request, its target shard, and
+/// where the reply's slices scatter back to.
+struct Job {
+    /// Original batch indices of the gathered sequences.
+    seqs: Vec<usize>,
+    head0: usize,
+    nheads: usize,
+    /// Transport index; `None` = forced local (every shard down, or a
+    /// downed session owner — stickiness forbids re-routing sessions).
+    shard: Option<usize>,
+    req: ShardRequest,
+    /// Original batch index when the job is one session sequence.
+    session_seq: Option<usize>,
+}
+
+/// Fan-out [`AttentionBackend`]: splits each descriptor across shard
+/// workers, dispatches the parts concurrently, and reassembles the
+/// replies bit-identically to [`NativeBackend`] (module docs).
+///
+/// [`NativeBackend`]: super::backend::NativeBackend
+pub struct ShardedBackend {
+    kernel_name: String,
+    kernel: Box<dyn AttentionKernel>,
+    /// Degraded-mode solver (down shards, downed session owners).
+    local: CachingBackend,
+    transports: Vec<Box<dyn ShardTransport>>,
+    /// `transports[i].shard_id()`, transport order.
+    ids: Vec<String>,
+    /// Liveness map, transport order; flips down after exhausted
+    /// retries, back up on success or a good health-check ping.
+    down: Vec<AtomicBool>,
+    ring: HashRing,
+    opts: ShardOptions,
+}
+
+impl ShardedBackend {
+    /// Fan out over explicit transports (`None` on an unknown kernel or
+    /// an empty fleet).
+    pub fn from_transports(kernel: &str,
+                           transports: Vec<Box<dyn ShardTransport>>,
+                           opts: ShardOptions) -> Option<Self> {
+        if transports.is_empty() {
+            return None;
+        }
+        let variant = Variant::parse(kernel)?;
+        let ids: Vec<String> =
+            transports.iter().map(|t| t.shard_id()).collect();
+        let local =
+            CachingBackend::native(kernel, Arc::new(KvCache::unbounded()))
+                .expect("variant parsed above");
+        Some(Self {
+            kernel_name: kernel.to_string(),
+            kernel: kernel_for(&variant),
+            local,
+            down: transports.iter().map(|_| AtomicBool::new(false))
+                .collect(),
+            ring: HashRing::new(&ids, opts.vnodes.max(1)),
+            ids,
+            transports,
+            opts,
+        })
+    }
+
+    /// `shards` in-process loopback workers, each with its own engine
+    /// and cache — the test/bench topology.
+    pub fn in_process(kernel: &str, shards: usize,
+                      workers_per_shard: usize) -> Option<Self> {
+        let transports: Vec<Box<dyn ShardTransport>> = (0..shards.max(1))
+            .map(|i| {
+                Box::new(InProcessShard::new(
+                    &format!("local-{i}"),
+                    Arc::new(ShardEngine::new(workers_per_shard)),
+                )) as Box<dyn ShardTransport>
+            })
+            .collect();
+        Self::from_transports(kernel, transports, ShardOptions::default())
+    }
+
+    /// Fan out over `ct shard-worker` hosts.
+    pub fn over_tcp(kernel: &str, addrs: &[String], opts: ShardOptions)
+                    -> Option<Self> {
+        let transports: Vec<Box<dyn ShardTransport>> = addrs
+            .iter()
+            .map(|a| Box::new(TcpShard::new(a)) as Box<dyn ShardTransport>)
+            .collect();
+        Self::from_transports(kernel, transports, opts)
+    }
+
+    /// Shard identities, transport order.
+    pub fn shard_ids(&self) -> &[String] {
+        &self.ids
+    }
+
+    /// The session-routing ring.
+    pub fn ring(&self) -> &HashRing {
+        &self.ring
+    }
+
+    pub fn options(&self) -> ShardOptions {
+        self.opts
+    }
+
+    /// Ping every shard and refresh the liveness map; returns per-shard
+    /// liveness in transport order.  A recovered shard starts receiving
+    /// parts (and its sessions) again right away.
+    pub fn health_check(&self) -> Vec<bool> {
+        (0..self.transports.len())
+            .map(|i| {
+                let up = self.transports[i].ping();
+                self.down[i].store(!up, Ordering::Relaxed);
+                up
+            })
+            .collect()
+    }
+
+    /// Release a session's cached state on its owning shard (and in the
+    /// local degraded-mode cache, in case any step fell back).
+    pub fn end_session(&self, session: u64) {
+        if let Some(i) = self.owner_index(session) {
+            if let Err(e) = self.transports[i].end_session(session) {
+                log::debug!("end_session({session}) on {}: {e:#}",
+                            self.ids[i]);
+            }
+        }
+        self.local.cache().invalidate(session);
+    }
+
+    /// Transport index of the ring owner of `session`.
+    fn owner_index(&self, session: u64) -> Option<usize> {
+        self.ring.owner_id(session)
+            .and_then(|oid| self.ids.iter().position(|id| id == oid))
+    }
+
+    /// Execute one descriptor and report, per sequence, how the cache
+    /// treated it — the sharded twin of
+    /// [`CachingBackend::execute_with_report`].
+    pub fn execute_with_report(&self, batch: &AttnBatch<'_>,
+                               ctx: &ExecCtx)
+                               -> (BatchMatrix, Vec<SeqOutcome>) {
+        batch.validate();
+        let (q, k, v) = (batch.q, batch.k, batch.v);
+        let (bsz, heads) = (q.batch, q.heads);
+        let dv = v.cols;
+        let mut out = BatchMatrix::zeros(bsz, heads, q.rows, dv);
+        let mut outcomes = vec![SeqOutcome::Bypass; bsz];
+        if out.slices() == 0 || out.slice_len() == 0 {
+            return (out, outcomes);
+        }
+
+        // plain sequences are compacted exactly like CachingBackend's
+        // plain flush: PRNG streams keyed by *compacted* position, so
+        // this backend is a drop-in for the gateway's per-bucket
+        // CachingBackend (and, all-plain, for NativeBackend)
+        let plain: Vec<usize> = (0..bsz)
+            .filter(|&b| batch.sessions.map_or(true, |ss| ss[b].is_none()))
+            .collect();
+        let healthy: Vec<usize> = (0..self.transports.len())
+            .filter(|&i| !self.down[i].load(Ordering::Relaxed))
+            .collect();
+
+        let mut jobs: Vec<Job> = Vec::new();
+        let parts =
+            plan_parts(plain.len(), heads, healthy.len().max(1));
+        for (pi, part) in parts.into_iter().enumerate() {
+            let seqs: Vec<usize> =
+                plain[part.seq0..part.seq0 + part.nseq].to_vec();
+            let lens = batch.lens.map(|ls| {
+                seqs.iter().map(|&b| ls[b]).collect::<Vec<usize>>()
+            });
+            let req = ShardRequest {
+                kernel: self.kernel_name.clone(),
+                q: gather_part(q, &seqs, part.head0, part.nheads),
+                k: gather_part(k, &seqs, part.head0, part.nheads),
+                v: gather_part(v, &seqs, part.head0, part.nheads),
+                seed: batch.seed,
+                slice_base: (part.seq0 * heads + part.head0) as u64,
+                lens,
+                session: None,
+            };
+            // one part per healthy shard (the planner emits at most
+            // `healthy.len()` parts, so this never doubles up)
+            let shard = (!healthy.is_empty())
+                .then(|| healthy[pi % healthy.len()]);
+            jobs.push(Job { seqs, head0: part.head0,
+                            nheads: part.nheads, shard, req,
+                            session_seq: None });
+        }
+
+        if let Some(sessions) = batch.sessions {
+            for b in 0..bsz {
+                let Some(sref) = sessions[b] else { continue };
+                let valid = batch.valid_len(b);
+                let seqs = vec![b];
+                let req = ShardRequest {
+                    kernel: self.kernel_name.clone(),
+                    q: gather_part(q, &seqs, 0, heads),
+                    k: gather_part(k, &seqs, 0, heads),
+                    v: gather_part(v, &seqs, 0, heads),
+                    seed: batch.seed,
+                    slice_base: 0,
+                    lens: Some(vec![valid]),
+                    session: Some(ShardSession {
+                        session: sref.cache.session,
+                        generation: sref.cache.generation,
+                        span_start: sref.span_start,
+                    }),
+                };
+                // the ring owner or local — never another shard, so a
+                // down owner can't scatter session state over the fleet
+                let shard = self
+                    .owner_index(sref.cache.session)
+                    .filter(|&i| !self.down[i].load(Ordering::Relaxed));
+                jobs.push(Job { seqs, head0: 0, nheads: heads, shard,
+                                req, session_seq: Some(b) });
+            }
+        }
+
+        // dispatch every job concurrently: shard latency overlaps, and
+        // the gather/scatter copies stay on this thread's schedule
+        let replies: Vec<ShardReply> = std::thread::scope(|scope| {
+            let handles: Vec<_> = jobs
+                .iter()
+                .map(|job| scope.spawn(move || self.run_job(job, ctx)))
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("shard dispatch panicked"))
+                .collect()
+        });
+
+        for (job, rep) in jobs.iter().zip(&replies) {
+            for (pos, &b) in job.seqs.iter().enumerate() {
+                for hh in 0..job.nheads {
+                    out.slice_mut(b * heads + job.head0 + hh)
+                        .copy_from_slice(
+                            rep.out.view(pos * job.nheads + hh).data);
+                }
+            }
+            if let Some(b) = job.session_seq {
+                outcomes[b] = rep.outcome.unwrap_or(SeqOutcome::Miss {
+                    recomputed_rows: batch.valid_len(b),
+                });
+            }
+        }
+        (out, outcomes)
+    }
+
+    /// Dispatch one job: bounded retry with doubling backoff against
+    /// its shard, then degraded-mode local fallback (marking the shard
+    /// down).  A malformed reply counts as a failure — a shard can be
+    /// wrong as well as unreachable.
+    fn run_job(&self, job: &Job, ctx: &ExecCtx) -> ShardReply {
+        if let Some(si) = job.shard {
+            let want = (job.req.q.batch, job.req.q.heads,
+                        job.req.q.rows, job.req.v.cols);
+            let mut backoff = self.opts.backoff;
+            for attempt in 0..=self.opts.retries {
+                if attempt > 0 {
+                    std::thread::sleep(backoff);
+                    backoff *= 2;
+                }
+                match self.transports[si].execute(&job.req) {
+                    Ok(rep) => {
+                        let shape = (rep.out.batch, rep.out.heads,
+                                     rep.out.rows, rep.out.cols);
+                        let complete = shape == want
+                            && (job.session_seq.is_none()
+                                || rep.outcome.is_some());
+                        if complete {
+                            self.down[si].store(false, Ordering::Relaxed);
+                            return rep;
+                        }
+                        log::warn!("shard {} returned a malformed reply",
+                                   self.ids[si]);
+                    }
+                    Err(e) => {
+                        log::debug!("shard {} attempt {attempt}: {e:#}",
+                                    self.ids[si]);
+                    }
+                }
+            }
+            log::warn!("shard {} failed {} attempts — marking it down, \
+                        solving locally",
+                       self.ids[si], self.opts.retries + 1);
+            self.down[si].store(true, Ordering::Relaxed);
+        }
+        self.solve_local(&job.req, ctx)
+    }
+
+    /// Degraded-mode execution of one shard request on this host —
+    /// plain parts run the offset solve, session steps run the local
+    /// caching backend.  Same bits, single-host speed.
+    fn solve_local(&self, req: &ShardRequest, ctx: &ExecCtx)
+                   -> ShardReply {
+        match req.session {
+            None => {
+                let mut b = AttnBatch::new(&req.q, &req.k, &req.v,
+                                           req.seed);
+                if let Some(lens) = req.lens.as_deref() {
+                    b = b.with_lens(lens);
+                }
+                ShardReply {
+                    out: solve_batch_offset(self.kernel.as_ref(), &b,
+                                            req.slice_base, ctx),
+                    outcome: None,
+                }
+            }
+            Some(s) => {
+                let sessions = [Some(SessionRef {
+                    cache: CacheRef { session: s.session,
+                                      generation: s.generation },
+                    span_start: s.span_start,
+                })];
+                let lens = req.lens.clone()
+                    .unwrap_or_else(|| vec![req.q.rows]);
+                let b = AttnBatch::new(&req.q, &req.k, &req.v, req.seed)
+                    .with_lens(&lens)
+                    .with_sessions(&sessions);
+                let (out, outcomes) =
+                    self.local.execute_with_report(&b, ctx);
+                ShardReply { out, outcome: Some(outcomes[0]) }
+            }
+        }
+    }
+}
+
+impl AttentionBackend for ShardedBackend {
+    fn backend_name(&self) -> String {
+        format!("sharded[{}]:{}", self.transports.len(), self.kernel_name)
+    }
+
+    fn execute(&self, batch: &AttnBatch<'_>, ctx: &ExecCtx)
+               -> BatchMatrix {
+        self.execute_with_report(batch, ctx).0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::NativeBackend;
+    use crate::prng::Xoshiro256;
+
+    fn qkv(bsz: usize, h: usize, n: usize, d: usize, seed: u64)
+           -> (BatchMatrix, BatchMatrix, BatchMatrix) {
+        let mut rng = Xoshiro256::new(seed);
+        (BatchMatrix::randn(bsz, h, n, d, &mut rng),
+         BatchMatrix::randn(bsz, h, n, d, &mut rng),
+         BatchMatrix::randn(bsz, h, n, d, &mut rng))
+    }
+
+    #[test]
+    fn plan_parts_cover_every_slice_exactly_once() {
+        for &(nseq, heads, shards) in &[(0usize, 2usize, 3usize),
+                                        (1, 1, 1), (1, 4, 3), (2, 3, 8),
+                                        (5, 2, 2), (7, 3, 4), (4, 4, 1),
+                                        (3, 2, 16)] {
+            let parts = plan_parts(nseq, heads, shards);
+            assert!(parts.len() <= shards.max(1),
+                    "({nseq},{heads},{shards}) made {} parts",
+                    parts.len());
+            let mut seen = vec![0usize; nseq * heads];
+            for p in &parts {
+                // multi-sequence parts must span every head, or their
+                // slices are not contiguous and one slice_base cannot
+                // key them
+                if p.nseq > 1 {
+                    assert_eq!((p.head0, p.nheads), (0, heads));
+                }
+                for s in p.seq0..p.seq0 + p.nseq {
+                    for hh in p.head0..p.head0 + p.nheads {
+                        seen[s * heads + hh] += 1;
+                    }
+                }
+            }
+            assert!(seen.iter().all(|&c| c == 1),
+                    "({nseq},{heads},{shards}) coverage {seen:?}");
+        }
+    }
+
+    #[test]
+    fn solve_batch_offset_zero_is_solve_batch() {
+        let (q, k, v) = qkv(2, 2, 16, 8, 3);
+        let kernel = crate::attention::kernel_by_name("full").unwrap();
+        let batch = AttnBatch::new(&q, &k, &v, 5);
+        let ctx = ExecCtx::sequential();
+        let a = solve_batch_offset(kernel.as_ref(), &batch, 0, &ctx);
+        let b = kernel.solve_batch(&batch, &ctx);
+        assert!(a.bit_identical(&b));
+    }
+
+    #[test]
+    fn sharded_plain_batches_are_bit_identical_to_native() {
+        let (q, k, v) = qkv(5, 2, 32, 8, 11);
+        let lens = [32usize, 7, 19, 32, 1];
+        let ctx = ExecCtx::sequential();
+        for kernel in ["full", "i-clustered-4", "lsh-2"] {
+            let native = NativeBackend::by_name(kernel).unwrap();
+            for shards in [1usize, 2, 3] {
+                let sharded =
+                    ShardedBackend::in_process(kernel, shards, 1).unwrap();
+                for masked in [false, true] {
+                    let mut batch = AttnBatch::new(&q, &k, &v, 5);
+                    if masked {
+                        batch = batch.with_lens(&lens);
+                    }
+                    let got = sharded.execute(&batch, &ctx);
+                    let want = native.execute(&batch, &ctx);
+                    assert!(got.bit_identical(&want),
+                            "{kernel} shards={shards} masked={masked}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn single_sequence_batches_split_along_the_head_axis() {
+        // b = 1 < 3 shards: the planner must go to per-head parts
+        assert_eq!(plan_parts(1, 4, 3).len(), 3);
+        let (q, k, v) = qkv(1, 4, 40, 8, 21);
+        let lens = [23usize];
+        let ctx = ExecCtx::sequential();
+        let native = NativeBackend::by_name("oracle-top-8").unwrap();
+        let sharded =
+            ShardedBackend::in_process("oracle-top-8", 3, 1).unwrap();
+        let batch = AttnBatch::new(&q, &k, &v, 9).with_lens(&lens);
+        let got = sharded.execute(&batch, &ctx);
+        let want = native.execute(&batch, &ctx);
+        assert!(got.bit_identical(&want));
+    }
+
+    #[test]
+    fn mixed_plain_and_session_batches_match_the_single_host_cache() {
+        let (q, k, v) = qkv(3, 2, 24, 8, 77);
+        let sharded =
+            ShardedBackend::in_process("i-clustered-4", 2, 1).unwrap();
+        let reference = CachingBackend::native(
+            "i-clustered-4", Arc::new(KvCache::unbounded())).unwrap();
+        let ctx = ExecCtx::sequential();
+        let sid = 41u64;
+        // prefill (span 0 misses by contract), then two decode steps
+        let steps = [(12usize, 0usize), (18, 12), (24, 18)];
+        for (step, &(len, span)) in steps.iter().enumerate() {
+            let lens = [20usize, len, 24];
+            let sessions = [
+                None,
+                Some(SessionRef {
+                    cache: CacheRef { session: sid, generation: 3 },
+                    span_start: span,
+                }),
+                None,
+            ];
+            let batch = AttnBatch::new(&q, &k, &v, 9)
+                .with_lens(&lens)
+                .with_sessions(&sessions);
+            let (got, got_oc) = sharded.execute_with_report(&batch, &ctx);
+            let (want, want_oc) =
+                reference.execute_with_report(&batch, &ctx);
+            assert!(got.bit_identical(&want), "step {step} diverged");
+            assert_eq!(got_oc, want_oc, "step {step} outcomes diverged");
+            if step > 0 {
+                assert!(matches!(got_oc[1], SeqOutcome::Hit { .. }),
+                        "step {step} should hit the owning shard's cache");
+            }
+        }
+    }
+
+    #[test]
+    fn end_session_releases_the_owning_shards_cache() {
+        let engines: Vec<Arc<ShardEngine>> =
+            (0..2).map(|_| Arc::new(ShardEngine::new(1))).collect();
+        let transports: Vec<Box<dyn ShardTransport>> = engines
+            .iter()
+            .enumerate()
+            .map(|(i, e)| {
+                Box::new(InProcessShard::new(&format!("local-{i}"),
+                                             e.clone()))
+                    as Box<dyn ShardTransport>
+            })
+            .collect();
+        let sharded = ShardedBackend::from_transports(
+            "full", transports, ShardOptions::default()).unwrap();
+        let (q, k, v) = qkv(1, 2, 16, 4, 31);
+        let sessions = [Some(SessionRef {
+            cache: CacheRef { session: 5, generation: 0 },
+            span_start: 0,
+        })];
+        let batch =
+            AttnBatch::new(&q, &k, &v, 1).with_sessions(&sessions);
+        let _ = sharded.execute(&batch, &ExecCtx::sequential());
+        let cached_rows = || {
+            engines.iter().map(|e| e.cache().used_rows()).sum::<usize>()
+        };
+        assert!(cached_rows() > 0, "prefill should populate one shard");
+        sharded.end_session(5);
+        assert_eq!(cached_rows(), 0,
+                   "end_session must reach the owning shard");
+    }
+
+    struct FailingShard {
+        id: String,
+    }
+
+    impl ShardTransport for FailingShard {
+        fn shard_id(&self) -> String {
+            self.id.clone()
+        }
+
+        fn execute(&self, _req: &ShardRequest) -> Result<ShardReply> {
+            Err(anyhow!("injected failure"))
+        }
+
+        fn ping(&self) -> bool {
+            false
+        }
+
+        fn end_session(&self, _session: u64) -> Result<()> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn a_down_shard_degrades_to_local_compute_without_changing_bits() {
+        let transports: Vec<Box<dyn ShardTransport>> = vec![
+            Box::new(InProcessShard::new("up-0",
+                                         Arc::new(ShardEngine::new(1)))),
+            Box::new(FailingShard { id: "down-1".into() }),
+        ];
+        let opts = ShardOptions { retries: 1,
+                                  backoff: Duration::from_millis(1),
+                                  vnodes: 16 };
+        let sharded =
+            ShardedBackend::from_transports("full", transports, opts)
+                .unwrap();
+        let (q, k, v) = qkv(4, 2, 24, 8, 41);
+        let batch = AttnBatch::new(&q, &k, &v, 13);
+        let ctx = ExecCtx::sequential();
+        let want = NativeBackend::by_name("full").unwrap()
+            .execute(&batch, &ctx);
+        // first flush: the failing shard's part falls back locally
+        let got = sharded.execute(&batch, &ctx);
+        assert!(got.bit_identical(&want),
+                "degraded flush changed the bits");
+        assert_eq!(sharded.health_check(), vec![true, false]);
+        // later flushes plan around the down shard — still identical
+        let got2 = sharded.execute(&batch, &ctx);
+        assert!(got2.bit_identical(&want));
+    }
+
+    #[test]
+    fn f32_frames_round_trip_little_endian() {
+        let xs = vec![0.0f32, -1.5, f32::MIN_POSITIVE, 3.25e7, -0.0,
+                      f32::MAX];
+        let mut buf = Vec::new();
+        write_f32s(&mut buf, &xs).unwrap();
+        assert_eq!(buf.len(), xs.len() * 4);
+        let got =
+            read_f32s(&mut std::io::Cursor::new(buf), xs.len()).unwrap();
+        assert_eq!(got.iter().map(|x| x.to_bits()).collect::<Vec<u32>>(),
+                   xs.iter().map(|x| x.to_bits()).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn solve_headers_round_trip_with_full_u64_precision() {
+        let (q, k, v) = qkv(1, 2, 4, 3, 1);
+        let req = ShardRequest {
+            kernel: "full".into(),
+            q,
+            k,
+            v,
+            // any of these would round if encoded as a JSON f64
+            seed: u64::MAX - 12,
+            slice_base: (1u64 << 60) | 7,
+            lens: Some(vec![3]),
+            session: Some(ShardSession {
+                session: (1u64 << 63) | 5,
+                generation: u64::MAX,
+                span_start: 2,
+            }),
+        };
+        let line = solve_header(9, &req).to_string();
+        let hdr = SolveHeader::parse(&parse(&line).unwrap()).unwrap();
+        assert_eq!(hdr.id, 9);
+        assert_eq!(hdr.kernel, "full");
+        assert_eq!(hdr.seed, u64::MAX - 12);
+        assert_eq!(hdr.slice_base, (1u64 << 60) | 7);
+        assert_eq!(hdr.lens.as_deref(), Some(&[3usize][..]));
+        let s = hdr.session.unwrap();
+        assert_eq!((s.session, s.generation, s.span_start),
+                   ((1u64 << 63) | 5, u64::MAX, 2));
+        assert_eq!((hdr.batch, hdr.heads, hdr.rows, hdr.dk, hdr.dv),
+                   (1, 2, 4, 3, 3));
+    }
+
+    #[test]
+    fn outcomes_round_trip_through_json() {
+        for oc in [SeqOutcome::Bypass,
+                   SeqOutcome::Hit { reused_rows: 7, computed_rows: 9,
+                                     reclustered: true },
+                   SeqOutcome::Miss { recomputed_rows: 31 }] {
+            let v = parse(&outcome_to_value(&oc).to_string()).unwrap();
+            assert_eq!(outcome_from_value(&v).unwrap(), oc);
+        }
+    }
+
+    #[test]
+    fn engine_rejects_malformed_requests_instead_of_panicking() {
+        let engine = ShardEngine::new(1);
+        let (q, k, v) = qkv(2, 1, 8, 4, 2);
+        let base = |session| ShardRequest {
+            kernel: "full".into(),
+            q: q.clone(),
+            k: k.clone(),
+            v: v.clone(),
+            seed: 0,
+            slice_base: 0,
+            lens: None,
+            session,
+        };
+        assert!(engine.solve(&ShardRequest {
+            kernel: "no-such-kernel".into(),
+            ..base(None)
+        }).is_err());
+        assert!(engine.solve(&ShardRequest {
+            lens: Some(vec![4]), // one entry for a 2-sequence batch
+            ..base(None)
+        }).is_err());
+        assert!(engine.solve(&ShardRequest {
+            lens: Some(vec![4, 99]), // out of 1..=rows
+            ..base(None)
+        }).is_err());
+        // session requests must be single-sequence
+        assert!(engine
+            .solve(&base(Some(ShardSession { session: 1, generation: 0,
+                                             span_start: 0 })))
+            .is_err());
+        // and a well-formed request still solves
+        assert!(engine.solve(&base(None)).is_ok());
+    }
+}

@@ -59,7 +59,21 @@
 //! batch slot, so a step's bits are invariant to co-batched traffic and
 //! equal the full unpadded recompute of its history
 //! ([`session_reference`]) — hit or miss, property-tested per kernel
-//! family.
+//! family.  Idle sessions expire after
+//! [`GatewayOptions::session_ttl`]: a hostile TCP client that never
+//! sends `"end"` cannot pin cache capacity or table entries forever
+//! ([`ServingGateway::sweep_expired`]).
+//!
+//! **Multi-host:** with [`GatewayOptions::shards`] set, every bucket
+//! dispatcher drives an `attention::ShardedBackend` over the listed
+//! `ct shard-worker` hosts instead of a local [`CachingBackend`] —
+//! one-shot batches split across the fleet, and decode sessions route
+//! to their owning shard by consistent hash
+//! ([`super::ring::HashRing`]) so cached panels stay put across steps
+//! *and* bucket route-ups (every bucket's ring is built from the same
+//! shard list).  Retry/backoff and degraded-mode local fallback are
+//! the backend's ([`attention::sharded`](crate::attention::sharded));
+//! responses stay bit-identical to single-host serving throughout.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -71,7 +85,7 @@ use anyhow::{anyhow, bail, Result};
 use crate::attention::{AttentionBackend, AttentionKernel, AttnBatch,
                        AttnProblem, CacheRef, CachingBackend, KvCache,
                        KvCacheOptions, NativeBackend, SeqOutcome,
-                       SessionRef};
+                       SessionRef, ShardOptions, ShardedBackend};
 use crate::exec::{Channel, ExecCtx, SharedWorkerPool};
 use crate::metrics::{LatencyHistogram, PaddingWaste};
 use crate::prng::Xoshiro256;
@@ -183,6 +197,19 @@ pub struct GatewayOptions {
     /// step (exact everywhere); above 1.0 reuses the frozen clustering
     /// between re-clusters.
     pub cache_growth: f64,
+    /// Evict decode sessions idle longer than this (`None` = never):
+    /// the table entry and cached panels are released exactly as if
+    /// the client had sent `"end"`.  Swept opportunistically on every
+    /// session step and on demand via
+    /// [`ServingGateway::sweep_expired`].
+    pub session_ttl: Option<Duration>,
+    /// `ct shard-worker` addresses.  Empty (default) = single-host
+    /// serving; non-empty = every bucket fans out across these hosts
+    /// through an `attention::ShardedBackend` (see module docs).
+    pub shards: Vec<String>,
+    /// Dispatch policy (retry/backoff/vnodes) of the sharded backends;
+    /// ignored when [`GatewayOptions::shards`] is empty.
+    pub shard_opts: ShardOptions,
 }
 
 impl Default for GatewayOptions {
@@ -197,6 +224,9 @@ impl Default for GatewayOptions {
             mask: true,
             cache_capacity_rows: usize::MAX,
             cache_growth: 1.0,
+            session_ttl: None,
+            shards: Vec::new(),
+            shard_opts: ShardOptions::default(),
         }
     }
 }
@@ -305,6 +335,8 @@ struct SessionState {
     len: usize,
     /// Bucket the session is pinned to (index; `None` before prefill).
     bucket: Option<usize>,
+    /// Last accepted step — the TTL sweep's idleness clock.
+    last_step: Instant,
 }
 
 /// Multi-bucket native attention serving gateway (see module docs).
@@ -321,6 +353,11 @@ pub struct ServingGateway {
     /// route-up migrates a session without losing its panels.
     cache: Arc<KvCache>,
     sessions: Mutex<HashMap<u64, SessionState>>,
+    session_ttl: Option<Duration>,
+    /// Per-bucket sharded backends when multi-host serving is on
+    /// (bucket order; empty for single-host).  Held here so
+    /// `end_session` can release shard-side cache state too.
+    sharded: Vec<Arc<ShardedBackend>>,
     next_generation: AtomicU64,
     workers: Vec<std::thread::JoinHandle<()>>,
     next_id: AtomicU64,
@@ -358,16 +395,30 @@ impl ServingGateway {
         let mut ingress = Vec::new();
         let mut metrics = Vec::new();
         let mut workers = Vec::new();
+        let mut sharded = Vec::new();
         for bucket in router.buckets() {
             let ch: Channel<GatewayRequest> =
                 Channel::bounded(opts.queue_capacity.max(1));
             let m = Arc::new(BucketMetrics::default());
             ingress.push(ch.clone());
             metrics.push(m.clone());
+            let backend = if opts.shards.is_empty() {
+                BucketBackend::Cached(
+                    CachingBackend::native(&bucket.kernel, cache.clone())
+                        .expect("validated above"))
+            } else {
+                // one fan-out backend per bucket, all over the same
+                // shard list — identical rings, so a session routed up
+                // between buckets still lands on its owning shard
+                let sb = Arc::new(
+                    ShardedBackend::over_tcp(&bucket.kernel, &opts.shards,
+                                             opts.shard_opts)
+                        .expect("validated above"));
+                sharded.push(sb.clone());
+                BucketBackend::Sharded(sb)
+            };
             let worker = BucketWorker {
-                backend: CachingBackend::native(&bucket.kernel,
-                                                cache.clone())
-                    .expect("validated above"),
+                backend,
                 shape,
                 seq_len: bucket.seq_len,
                 metrics: m,
@@ -408,6 +459,8 @@ impl ServingGateway {
             mask: opts.mask,
             cache,
             sessions: Mutex::new(HashMap::new()),
+            session_ttl: opts.session_ttl,
+            sharded,
             next_generation: AtomicU64::new(0),
             workers,
             next_id: AtomicU64::new(0),
@@ -484,6 +537,9 @@ impl ServingGateway {
             bail!("decode sessions require valid-length masking \
                    (GatewayOptions::mask)");
         }
+        // opportunistic TTL sweep: any decode traffic collects the
+        // idle sessions hostile clients abandoned without an "end"
+        self.sweep_expired();
         let tight = self.router.route_index(len).ok_or_else(|| {
             self.overlong.fetch_add(1, Ordering::Relaxed);
             anyhow!("session {session} history of {len} rows exceeds \
@@ -527,6 +583,7 @@ impl ServingGateway {
             generation,
             len: 0,
             bucket: None,
+            last_step: Instant::now(),
         });
         if let Some(prev) = st.bucket {
             if bucket > prev {
@@ -537,6 +594,7 @@ impl ServingGateway {
         }
         st.len = len;
         st.bucket = Some(bucket);
+        st.last_step = Instant::now();
     }
 
     /// Fail-fast decode-session submit: the full history so far plus
@@ -590,10 +648,45 @@ impl ServingGateway {
 
     /// Forget a session: its gateway state and cached panels are
     /// dropped, and the generation counter guarantees a later session
-    /// under the same id can never alias the old cache entry.
+    /// under the same id can never alias the old cache entry.  With
+    /// multi-host serving, the release also reaches the session's
+    /// owning shard (every bucket's backend, since a routed-up session
+    /// may have fallen back to any of their local caches).
     pub fn end_session(&self, session: u64) {
         self.sessions.lock().unwrap().remove(&session);
         self.cache.invalidate(session);
+        for sb in &self.sharded {
+            sb.end_session(session);
+        }
+    }
+
+    /// Evict every session idle past [`GatewayOptions::session_ttl`]
+    /// (no-op without a TTL); returns how many were released.  Called
+    /// opportunistically on each decode step; long-running servers with
+    /// bursty session traffic should also call it periodically (the
+    /// `ct gateway` command runs a sweeper thread).
+    pub fn sweep_expired(&self) -> usize {
+        let Some(ttl) = self.session_ttl else { return 0 };
+        let now = Instant::now();
+        // collect under the lock, release outside it: end_session
+        // re-locks the table and talks to shards
+        let expired: Vec<u64> = {
+            let table = self.sessions.lock().unwrap();
+            table.iter()
+                .filter(|(_, st)| now.duration_since(st.last_step) >= ttl)
+                .map(|(&sid, _)| sid)
+                .collect()
+        };
+        for &sid in &expired {
+            log::debug!("session {sid} idle past {ttl:?} — evicting");
+            self.end_session(sid);
+        }
+        expired.len()
+    }
+
+    /// Live decode sessions in the table.
+    pub fn live_sessions(&self) -> usize {
+        self.sessions.lock().unwrap().len()
     }
 
     /// The gateway-global KV cache (counters, capacity introspection).
@@ -805,12 +898,41 @@ pub fn session_reference(kernel: &dyn AttentionKernel, shape: GatewayShape,
     out
 }
 
+/// What a bucket dispatcher executes flushes through — the two
+/// concrete ends of the [`AttentionBackend`] seam the gateway serves
+/// from.
+enum BucketBackend {
+    /// Single-host: native kernel behind the gateway-global KV cache.
+    Cached(CachingBackend),
+    /// Multi-host: fan-out across shard workers; sessions are cached
+    /// on their owning shard, not in the gateway-global cache.
+    Sharded(Arc<ShardedBackend>),
+}
+
+impl BucketBackend {
+    fn execute(&self, batch: &AttnBatch<'_>, ctx: &ExecCtx)
+               -> BatchMatrix {
+        match self {
+            Self::Cached(b) => b.execute(batch, ctx),
+            Self::Sharded(b) => b.execute(batch, ctx),
+        }
+    }
+
+    fn execute_with_report(&self, batch: &AttnBatch<'_>, ctx: &ExecCtx)
+                           -> (BatchMatrix, Vec<SeqOutcome>) {
+        match self {
+            Self::Cached(b) => b.execute_with_report(batch, ctx),
+            Self::Sharded(b) => b.execute_with_report(batch, ctx),
+        }
+    }
+}
+
 /// One bucket's dispatcher state: the backend it drives plus everything
 /// a flush needs.  Keeping it a struct (instead of a nine-argument
 /// function) is what lets the backend seam swap implementations without
 /// touching the dispatch loop.
 struct BucketWorker {
-    backend: CachingBackend,
+    backend: BucketBackend,
     shape: GatewayShape,
     seq_len: usize,
     metrics: Arc<BucketMetrics>,
@@ -1546,6 +1668,33 @@ mod tests {
                             block(8, 8, 3), 8, 1)
             .unwrap_err();
         assert!(format!("{err}").contains("masking"));
+        gw.shutdown();
+    }
+
+    #[test]
+    fn session_ttl_sweeps_idle_sessions() {
+        let gw = ServingGateway::start(
+            SHAPE,
+            vec![Bucket::native("full", 16, 2)],
+            GatewayOptions {
+                session_ttl: Some(Duration::from_millis(250)),
+                ..GatewayOptions::default()
+            },
+        )
+        .unwrap();
+        let (q, k, v) = (block(8, 8, 1), block(8, 8, 2), block(8, 8, 3));
+        let rx = gw.submit_session_blocking(q, k, v, 8, 3).unwrap();
+        let _ = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+        assert_eq!(gw.live_sessions(), 1);
+        assert!(gw.cache().used_rows() > 0,
+                "prefill should populate the cache");
+        std::thread::sleep(Duration::from_millis(500));
+        // the abandoned session (no "end" ever sent) is collected, and
+        // its table entry AND cached panels are released
+        assert_eq!(gw.sweep_expired(), 1);
+        assert_eq!(gw.live_sessions(), 0);
+        assert_eq!(gw.cache().used_rows(), 0);
+        assert_eq!(gw.sweep_expired(), 0);
         gw.shutdown();
     }
 

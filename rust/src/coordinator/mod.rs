@@ -15,8 +15,12 @@
 //!   (responses are bit-identical to the unpadded computation),
 //!   session-aware incremental decode (a gateway-global
 //!   `attention::KvCache` behind `attention::CachingBackend`; sessions
-//!   pin to buckets and route up as they grow) and per-bucket
-//!   [`BucketMetrics`] (see `docs/SERVING.md`).
+//!   pin to buckets and route up as they grow), idle-session TTL
+//!   eviction, and per-bucket [`BucketMetrics`] (see
+//!   `docs/SERVING.md`).  With `GatewayOptions::shards` set, every
+//!   bucket executes through an `attention::ShardedBackend` fan-out,
+//!   and [`HashRing`] (this module's `ring`) keeps each decode session
+//!   on its owning shard worker.
 //!
 //! Both stacks consume the same request information — tensors plus true
 //! lengths — and the native side resolves it through the
@@ -26,6 +30,7 @@
 pub mod batcher;
 pub mod datafeed;
 pub mod gateway;
+pub mod ring;
 pub mod router;
 pub mod serve;
 pub mod trainer;
@@ -38,6 +43,7 @@ pub use gateway::{bucket_report, pad_batch, replay_blocking,
                   BucketMetrics, GatewayOptions, GatewayRequest,
                   GatewayResponse, GatewayShape, ServingGateway,
                   TraceItem, BUCKET_REPORT_HEADERS};
+pub use ring::HashRing;
 pub use router::{Bucket, Router};
 pub use serve::{AttnRequest, AttnResponse, AttnShape, InferenceEngine,
                 NativeAttentionEngine, NativeAttnOptions, Request,

@@ -1,0 +1,220 @@
+//! Consistent-hash ring: stable session → shard placement for the
+//! multi-host gateway.
+//!
+//! [`HashRing`] places `vnodes` virtual points per shard id on a u64
+//! circle (SplitMix64 over an FNV-1a digest of the id — fully
+//! deterministic from the id set alone, no RNG state, no insertion-order
+//! dependence) and a session key is owned by the first point clockwise
+//! from its own hash.  That gives the three properties the sharded
+//! serving path needs, each pinned by a test below:
+//!
+//! - **determinism** — the same shard ids (in any order) always build
+//!   the same ring, so every gateway replica routes identically;
+//! - **stickiness** — removing a shard moves only the sessions it
+//!   owned, adding one only steals its fair share; every other session
+//!   keeps its owner, so `attention::KvCache` state stays where it is
+//!   across membership changes;
+//! - **balance** — with enough virtual nodes, ownership spreads within
+//!   a constant factor of fair share.
+//!
+//! The ring answers *placement* only; liveness is the caller's problem
+//! (`attention::sharded::ShardedBackend` keeps a down-map next to its
+//! ring and falls back to local compute for sessions whose owner is
+//! unreachable — ownership itself never flaps).
+
+use crate::prng::SplitMix64;
+
+/// FNV-1a over the shard id bytes — the stable string → u64 digest the
+/// virtual-node stream is seeded from.
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// Deterministic consistent-hash ring over string shard ids.
+#[derive(Debug, Clone)]
+pub struct HashRing {
+    /// Sorted, deduplicated shard ids — the canonical member set.
+    ids: Vec<String>,
+    /// `(point, index into ids)`, sorted by point (ties by index, which
+    /// the sort order makes deterministic too).
+    points: Vec<(u64, usize)>,
+    vnodes: usize,
+}
+
+impl HashRing {
+    /// Virtual nodes per shard when the caller has no opinion — enough
+    /// for ~±10% share balance at small fleet sizes.
+    pub const DEFAULT_VNODES: usize = 64;
+
+    /// Build the ring for `ids` (order-insensitive; duplicates are
+    /// collapsed).  `vnodes` is clamped to at least 1.
+    pub fn new(ids: &[String], vnodes: usize) -> Self {
+        let vnodes = vnodes.max(1);
+        let mut ids = ids.to_vec();
+        ids.sort();
+        ids.dedup();
+        let mut points = Vec::with_capacity(ids.len() * vnodes);
+        for (i, id) in ids.iter().enumerate() {
+            let mut sm = SplitMix64::new(fnv1a(id.as_bytes()));
+            for _ in 0..vnodes {
+                points.push((sm.next_u64(), i));
+            }
+        }
+        points.sort_unstable();
+        Self { ids, points, vnodes }
+    }
+
+    /// Member count.
+    pub fn len(&self) -> usize {
+        self.ids.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ids.is_empty()
+    }
+
+    /// The canonical (sorted) member ids.
+    pub fn ids(&self) -> &[String] {
+        &self.ids
+    }
+
+    /// Index (into [`HashRing::ids`]) of the shard owning `key` —
+    /// `None` only on an empty ring.  Keys are mixed through SplitMix64
+    /// first, so dense session ids (1, 2, 3, …) spread uniformly.
+    pub fn owner(&self, key: u64) -> Option<usize> {
+        if self.points.is_empty() {
+            return None;
+        }
+        let h = SplitMix64::new(key).next_u64();
+        let i = self.points.partition_point(|&(p, _)| p < h);
+        let i = if i == self.points.len() { 0 } else { i };
+        Some(self.points[i].1)
+    }
+
+    /// Id of the shard owning `key`.
+    pub fn owner_id(&self, key: u64) -> Option<&str> {
+        self.owner(key).map(|i| self.ids[i].as_str())
+    }
+
+    /// A new ring with `id` added (same vnodes) — membership changes
+    /// build fresh rings; nothing mutates in place.
+    pub fn with_shard(&self, id: &str) -> Self {
+        let mut ids = self.ids.clone();
+        ids.push(id.to_string());
+        Self::new(&ids, self.vnodes)
+    }
+
+    /// A new ring with `id` removed (same vnodes).
+    pub fn without_shard(&self, id: &str) -> Self {
+        let ids: Vec<String> =
+            self.ids.iter().filter(|x| x.as_str() != id).cloned().collect();
+        Self::new(&ids, self.vnodes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ids(n: usize) -> Vec<String> {
+        (0..n).map(|i| format!("shard-{i}")).collect()
+    }
+
+    #[test]
+    fn construction_is_deterministic_and_order_independent() {
+        let a = HashRing::new(&ids(5), 32);
+        let mut rev = ids(5);
+        rev.reverse();
+        let b = HashRing::new(&rev, 32);
+        let c = HashRing::new(&ids(5), 32);
+        for key in 0..1000u64 {
+            assert_eq!(a.owner_id(key), b.owner_id(key),
+                       "insertion order changed placement of {key}");
+            assert_eq!(a.owner(key), c.owner(key),
+                       "rebuild changed placement of {key}");
+        }
+    }
+
+    #[test]
+    fn duplicate_ids_collapse() {
+        let mut doubled = ids(3);
+        doubled.extend(ids(3));
+        let ring = HashRing::new(&doubled, 16);
+        assert_eq!(ring.len(), 3);
+        assert_eq!(ring.ids(), &ids(3)[..]);
+    }
+
+    #[test]
+    fn removal_only_moves_the_removed_shards_sessions() {
+        let full = HashRing::new(&ids(4), 64);
+        let reduced = full.without_shard("shard-2");
+        let total = 4000u64;
+        let mut moved = 0usize;
+        for key in 0..total {
+            let before = full.owner_id(key).unwrap();
+            let after = reduced.owner_id(key).unwrap();
+            if before == "shard-2" {
+                assert_ne!(after, "shard-2");
+                moved += 1;
+            } else {
+                // stickiness: sessions on surviving shards never move
+                assert_eq!(before, after, "session {key} moved off a \
+                                           surviving shard");
+            }
+        }
+        // the rebalanced fraction is the removed shard's share — about
+        // 1/4, and certainly nowhere near a full reshuffle
+        let frac = moved as f64 / total as f64;
+        assert!(frac > 0.05 && frac < 0.5,
+                "removal moved {frac} of sessions");
+    }
+
+    #[test]
+    fn addition_only_steals_for_the_new_shard() {
+        let base = HashRing::new(&ids(3), 64);
+        let grown = base.with_shard("shard-3");
+        let total = 4000u64;
+        let mut stolen = 0usize;
+        for key in 0..total {
+            let before = base.owner_id(key).unwrap().to_string();
+            let after = grown.owner_id(key).unwrap();
+            if after != before {
+                // every moved session lands on the new shard only
+                assert_eq!(after, "shard-3",
+                           "session {key} moved between old shards");
+                stolen += 1;
+            }
+        }
+        // the new shard takes roughly its fair share (1/4)
+        let frac = stolen as f64 / total as f64;
+        assert!(frac > 0.05 && frac < 0.6, "addition stole {frac}");
+    }
+
+    #[test]
+    fn ownership_is_roughly_balanced() {
+        let ring = HashRing::new(&ids(4), 128);
+        let total = 8000u64;
+        let mut counts = [0usize; 4];
+        for key in 0..total {
+            counts[ring.owner(key).unwrap()] += 1;
+        }
+        for (i, &c) in counts.iter().enumerate() {
+            let share = c as f64 / total as f64;
+            assert!(share > 0.10 && share < 0.45,
+                    "shard {i} owns {share} of the keyspace");
+        }
+    }
+
+    #[test]
+    fn empty_ring_owns_nothing() {
+        let ring = HashRing::new(&[], 16);
+        assert!(ring.is_empty());
+        assert_eq!(ring.owner(9), None);
+        assert_eq!(ring.owner_id(9), None);
+    }
+}

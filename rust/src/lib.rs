@@ -37,8 +37,12 @@
 //!   [`attention::CachingBackend`], which wraps any backend with a
 //!   per-session [`attention::KvCache`] so decode steps solve only
 //!   their new rows — bit-identical to the full unpadded recompute of
-//!   the history, hits and misses alike; compiled-HLO / sharded
-//!   backends plug in behind the same struct.
+//!   the history, hits and misses alike; and
+//!   [`attention::ShardedBackend`], the multi-host fan-out that splits
+//!   a descriptor across TCP shard workers (`ct shard-worker`), routes
+//!   decode sessions by consistent hash ([`coordinator::HashRing`])
+//!   and reassembles outputs bit-identically to the native engine —
+//!   compiled-HLO backends plug in behind the same seam.
 //! - [`tensor::batch::BatchMatrix`] — a (B, H, N, D) tensor stored as
 //!   B·H stacked row-major slices with zero-copy per-slice views
 //!   (including ragged `slice_valid` prefixes); slice `s = b·H + h` is

@@ -7,6 +7,8 @@
 //!   serve       run the TCP inference server (compiled HLO buckets)
 //!   gateway     multi-bucket native attention gateway: replay a
 //!               synthetic mixed-length trace (default) or serve TCP
+//!   shard-worker  serve raw attention sub-batches (binary-framed f32)
+//!               for a multi-host gateway's sharded fan-out backend
 //!   validate    run every *.forward program once (artifact smoke test)
 //!   bench-attn  quick native attention timing (see benches for full runs)
 
@@ -40,13 +42,14 @@ fn dispatch(argv: &[String]) -> Result<()> {
         "eval" => cmd_eval(rest),
         "serve" => cmd_serve(rest),
         "gateway" => cmd_gateway(rest),
+        "shard-worker" => cmd_shard_worker(rest),
         "validate" => cmd_validate(rest),
         "bench-attn" => cmd_bench_attn(rest),
         _ => {
             println!(
                 "ct — Fast Transformers with Clustered Attention (repro)\n\
                  subcommands: list | train | eval | serve | gateway | \
-                 validate | bench-attn\n\
+                 shard-worker | validate | bench-attn\n\
                  run `ct <subcommand> --help` conceptually via source; \
                  common options: --artifacts DIR --steps N --model NAME"
             );
@@ -260,6 +263,13 @@ fn cmd_gateway(rest: &[String]) -> Result<()> {
         .flag("no-mask",
               "disable valid-length masking: padded rows participate in \
                the compute (pre-masking static-shape semantics)")
+        .opt("session-ttl-ms", Some("0"),
+             "evict decode sessions idle this long (0 = never); \
+              releases their cache capacity and table entries")
+        .opt("shards", None,
+             "comma-separated ct shard-worker addresses: serve \
+              multi-host through the sharded fan-out backend \
+              (sessions route to their owning shard by consistent hash)")
         .opt("addr", None, "bind address: serve TCP instead of a trace");
     let args = cmd.parse(rest)?;
     init_logging(true);
@@ -287,6 +297,15 @@ fn cmd_gateway(rest: &[String]) -> Result<()> {
     let seed = args.get_u64("seed", 0)?;
     let mask = !args.flag("no-mask");
     let cache_rows = args.get_usize("cache-rows", 0)?;
+    let ttl_ms = args.get_u64("session-ttl-ms", 0)?;
+    let shards: Vec<String> = args
+        .get("shards")
+        .map(|s| s.split(',').map(|a| a.trim().to_string()).collect())
+        .unwrap_or_default();
+    if !shards.is_empty() {
+        println!("multi-host: fanning out across {} shard workers",
+                 shards.len());
+    }
     let opts = coordinator::GatewayOptions {
         max_wait: std::time::Duration::from_millis(
             args.get_u64("max-wait-ms", 2)?),
@@ -300,12 +319,34 @@ fn cmd_gateway(rest: &[String]) -> Result<()> {
         cache_capacity_rows: if cache_rows == 0 { usize::MAX }
                              else { cache_rows },
         cache_growth: args.get_f64("cache-growth", 1.0)?,
+        session_ttl: if ttl_ms == 0 { None } else {
+            Some(std::time::Duration::from_millis(ttl_ms))
+        },
+        shards,
+        shard_opts: attention::ShardOptions::default(),
     };
     let gw = coordinator::ServingGateway::start(shape, buckets, opts)?;
 
     if let Some(addr) = args.get("addr") {
         let gw = Arc::new(gw);
         let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        if ttl_ms > 0 {
+            // periodic sweep: the opportunistic per-step sweep can't
+            // collect abandoned sessions when decode traffic stops
+            let gw2 = gw.clone();
+            let stop2 = stop.clone();
+            std::thread::spawn(move || {
+                let period =
+                    std::time::Duration::from_millis((ttl_ms / 2).max(1));
+                while !stop2.load(std::sync::atomic::Ordering::Relaxed) {
+                    std::thread::sleep(period);
+                    let n = gw2.sweep_expired();
+                    if n > 0 {
+                        log::info!("session TTL sweep evicted {n}");
+                    }
+                }
+            });
+        }
         println!("gateway serving on {addr} (ctrl-c to stop)");
         return clustered_transformers::server::serve_gateway(
             gw, addr, stop, |a| println!("bound {a}"));
@@ -368,6 +409,35 @@ fn cmd_gateway(rest: &[String]) -> Result<()> {
              c.evictions.load(Ordering::Relaxed));
     gw.shutdown();
     Ok(())
+}
+
+fn cmd_shard_worker(rest: &[String]) -> Result<()> {
+    let cmd = Command::new(
+        "shard-worker",
+        "serve raw attention sub-batches for a sharded gateway")
+        .opt("addr", Some("127.0.0.1:7979"), "bind address")
+        .opt("workers", Some("0"),
+             "solve pool size (0 = auto, 1 = sequential)")
+        .opt("cache-rows", Some("0"),
+             "KV-cache capacity in cached sequence rows (0 = unbounded)")
+        .opt("cache-growth", Some("1.0"),
+             "clustered re-cluster threshold (1.0 = exact every step)");
+    let args = cmd.parse(rest)?;
+    init_logging(true);
+    let cache_rows = args.get_usize("cache-rows", 0)?;
+    let cache = Arc::new(attention::KvCache::new(
+        attention::KvCacheOptions {
+            capacity_rows: if cache_rows == 0 { usize::MAX }
+                           else { cache_rows },
+            growth: args.get_f64("cache-growth", 1.0)?,
+        }));
+    let engine = Arc::new(attention::ShardEngine::with_cache(
+        args.get_usize("workers", 0)?, cache));
+    let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let addr = args.get_or("addr", "127.0.0.1:7979");
+    println!("shard worker serving on {addr} (ctrl-c to stop)");
+    clustered_transformers::server::serve_shard_worker(
+        engine, &addr, stop, |a| println!("bound {a}"))
 }
 
 fn cmd_bench_attn(rest: &[String]) -> Result<()> {

@@ -38,15 +38,25 @@
 //!     threshold boundary (`growth > 1`): re-cluster steps stay exact
 //!     and frozen-reuse steps are bit-deterministic across worker
 //!     counts.
+//!  9. **Sharded fan-out contract** — a `ShardedBackend` over any
+//!     number of in-process shard workers is bit-for-bit identical to
+//!     `NativeBackend` on the same descriptor, for every kernel
+//!     family, shard count, ragged lens and batch/head-axis split
+//!     (including B < shards, where the planner splits heads).
+//! 10. **Sharded decode contract** — decode sessions routed through a
+//!     sharded backend land on their consistent-hash owner every step
+//!     (sticky: later steps hit that shard's cache) and every step's
+//!     span rows equal the full unpadded recompute of the history.
 
 use std::sync::Arc;
 use std::time::Duration;
 
 use crate::attention::{clustered_attention_matrix,
                        improved_clustered_attention_matrix, kernel_by_name,
-                       kernel_for, solve_batch_seq, AttnBatch, AttnProblem,
-                       CacheRef, CachingBackend, KvCache, KvCacheOptions,
-                       SeqOutcome, SessionRef, Variant};
+                       kernel_for, solve_batch_seq, AttentionBackend,
+                       AttnBatch, AttnProblem, CacheRef, CachingBackend,
+                       KvCache, KvCacheOptions, NativeBackend, SeqOutcome,
+                       SessionRef, ShardedBackend, Variant};
 use crate::clustering::{cluster_queries, Clustering};
 use crate::coordinator::{pad_batch, unpadded_reference, valid_rows, Bucket,
                          GatewayOptions, GatewayShape, ServingGateway};
@@ -743,6 +753,136 @@ fn prop_clustered_attention_rows_are_row_stochastic() {
                 }
                 if a_t.row(r).iter().any(|&w| w < -1e-6) {
                     return Err(format!("A^t row {r} has negative mass"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_sharded_backend_is_bit_identical_to_native() {
+    // Property 9.  Resolve kernels by registry NAME on both sides so
+    // hyperparameters match exactly; `all_variants()` carries custom
+    // bits/iters that a name round-trip would not reproduce.
+    let families = ["full", "shared-full", "clustered-3", "i-clustered-3",
+                    "oracle-top-4", "lsh-1"];
+    forall(
+        "ShardedBackend == NativeBackend across families, shard counts, lens",
+        0x5AAD_ED01,
+        4,
+        |rng| {
+            let b = 1 + rng.below(4); // 1..=4
+            let h = 1 + rng.below(3); // 1..=3
+            let n = 24 + rng.below(25); // 24..=48
+            let q = BatchMatrix::randn(b, h, n, 8, rng);
+            let k = BatchMatrix::randn(b, h, n, 8, rng);
+            let v = BatchMatrix::randn(b, h, n, 8, rng);
+            let lens: Vec<usize> = (0..b).map(|_| 1 + rng.below(n)).collect();
+            let masked = rng.coin(0.5);
+            (q, k, v, lens, masked, rng.next_u64())
+        },
+        |(q, k, v, lens, masked, seed)| {
+            let ctx = ExecCtx::sequential();
+            for kernel in families {
+                let native = NativeBackend::by_name(kernel).expect("kernel");
+                let mut batch = AttnBatch::new(q, k, v, *seed);
+                if *masked {
+                    batch = batch.with_lens(lens);
+                }
+                let want = native.execute(&batch, &ctx);
+                for shards in [1usize, 2, 4] {
+                    let sharded = ShardedBackend::in_process(kernel, shards, 1)
+                        .expect("kernel");
+                    let got = sharded.execute(&batch, &ctx);
+                    if !got.bit_identical(&want) {
+                        return Err(format!(
+                            "{kernel}: {shards} shards diverged from native \
+                             (B={} H={} N={} masked={masked})",
+                            q.batch, q.heads, q.rows));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_sharded_decode_sessions_match_the_full_recompute() {
+    // Property 10.  A decode session driven through a sharded backend
+    // must (a) produce span rows bit-identical to the unsharded full
+    // recompute of its history at every step — routing can never move
+    // bits — and (b) actually land on one sticky owner, observable as
+    // cache Hits on every post-prefill step.
+    forall(
+        "sharded decode sessions: sticky owner + exact span rows",
+        0x5AAD_ED02,
+        3,
+        |rng| {
+            let heads = 1 + rng.below(2); // 1..=2
+            let prefill = 6 + rng.below(11); // 6..=16
+            let steps = 1 + rng.below(3); // 1..=3 decode steps
+            let mut lens = vec![prefill];
+            for _ in 0..steps {
+                let grown = lens.last().unwrap() + 1 + rng.below(5);
+                lens.push(grown);
+            }
+            let total = *lens.last().unwrap();
+            let q = BatchMatrix::randn(1, heads, total, 8, rng);
+            let k = BatchMatrix::randn(1, heads, total, 8, rng);
+            let v = BatchMatrix::randn(1, heads, total, 8, rng);
+            (q, k, v, lens, rng.next_u64(), rng.next_u64())
+        },
+        |(q, k, v, lens, sid, seed)| {
+            let ctx = ExecCtx::sequential();
+            for kernel in ["full", "oracle-top-4", "i-clustered-3"] {
+                for shards in [1usize, 3] {
+                    let sharded =
+                        ShardedBackend::in_process(kernel, shards, 1)
+                            .expect("kernel");
+                    let mut span = 0usize;
+                    for (i, &len) in lens.iter().enumerate() {
+                        let qp = decode_prefix(q, len);
+                        let kp = decode_prefix(k, len);
+                        let vp = decode_prefix(v, len);
+                        let blens = [len];
+                        let sessions = [Some(SessionRef {
+                            cache: CacheRef { session: *sid, generation: 0 },
+                            span_start: span,
+                        })];
+                        let batch = AttnBatch::new(&qp, &kp, &vp, *seed)
+                            .with_lens(&blens)
+                            .with_sessions(&sessions);
+                        let (out, rep) =
+                            sharded.execute_with_report(&batch, &ctx);
+                        let dv = v.cols;
+                        let mut rows = Vec::new();
+                        for h in 0..q.heads {
+                            rows.extend_from_slice(
+                                &out.view(h).data[span * dv..len * dv]);
+                        }
+                        let want = recompute_span(
+                            kernel, q, k, v, len, span, *seed, *sid);
+                        if !same_bits(&rows, &want) {
+                            return Err(format!(
+                                "{kernel}: {shards} shards, step {i} \
+                                 (span {span}..{len}) diverged from the \
+                                 full recompute"));
+                        }
+                        if i == 0 && !matches!(rep[0], SeqOutcome::Miss { .. })
+                        {
+                            return Err(format!(
+                                "{kernel}: prefill reported {:?}", rep[0]));
+                        }
+                        if i > 0 && !matches!(rep[0], SeqOutcome::Hit { .. }) {
+                            return Err(format!(
+                                "{kernel}: {shards} shards, step {i} \
+                                 reported {:?} — session did not stick to \
+                                 its owning shard", rep[0]));
+                        }
+                        span = len;
+                    }
                 }
             }
             Ok(())

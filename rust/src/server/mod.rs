@@ -36,6 +36,20 @@
 //! (including backpressure surfaced from the engine; `id` is 0 when the
 //! line was not valid JSON).  Decoding (greedy CTC) happens server-side
 //! on the ASR endpoint so clients receive label sequences.
+//!
+//! Shard worker ([`serve_shard_worker`], over
+//! `attention::sharded::ShardEngine`, the `ct shard-worker` endpoint):
+//! unlike the two JSON-tensor endpoints above, this one is on the
+//! sharded fan-out hot path, so tensors travel as **raw little-endian
+//! f32 frames** after a JSON header line — never JSON-encoded.  A
+//! `"solve"` header (dims, kernel, hex seed/slice_base, optional
+//! lens/session) is followed by the q, k, v frames; the reply header
+//! (`"ok": true`, dims, optional `"outcome"`) is followed by the
+//! output frame.  `"ping"` and `"end"` ops are header-only.  Framing
+//! recovery rule: a header that fails to parse closes the connection
+//! (the frame boundary is unknowable), while an engine error *after*
+//! the frames were consumed replies `{"id", "error"}` and keeps
+//! serving.  See `attention::sharded` for the full wire grammar.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -44,9 +58,13 @@ use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
 
+use crate::attention::sharded::{outcome_to_value, parse_hex_u64,
+                                read_f32s, write_f32s, ShardEngine,
+                                ShardRequest, SolveHeader};
 use crate::coordinator::{InferenceEngine, ServingGateway};
 use crate::data::asr::ctc_greedy_decode;
 use crate::jsonio::{obj, parse, Value};
+use crate::tensor::batch::BatchMatrix;
 
 /// Accept connections until `stop` flips, spawning one detached handler
 /// thread per connection; reports the bound address via `on_bound`
@@ -136,6 +154,150 @@ pub fn serve_gateway(gateway: Arc<ServingGateway>, addr: &str,
         let gateway = gateway.clone();
         line_loop(stream, move |req| handle_attn_request(req, &gateway))
     })
+}
+
+/// Serve the shard-worker endpoint (binary-framed `AttnBatch` slices
+/// for `attention::ShardedBackend`) until `stop` flips.
+pub fn serve_shard_worker(engine: Arc<ShardEngine>, addr: &str,
+                          stop: Arc<AtomicBool>,
+                          on_bound: impl FnOnce(std::net::SocketAddr))
+                          -> Result<()> {
+    accept_loop(addr, stop, on_bound, move |stream| {
+        shard_conn_loop(stream, &engine)
+    })
+}
+
+fn reply_line(w: &mut TcpStream, v: Value) -> Result<()> {
+    w.write_all(v.to_string().as_bytes())?;
+    w.write_all(b"\n")?;
+    w.flush()?;
+    Ok(())
+}
+
+/// One shard-worker connection: JSON header lines with raw f32 frames
+/// between them.  The loop's framing discipline is the whole game — a
+/// header we cannot parse means we no longer know where the next frame
+/// boundary is, so the connection closes after one error reply; an
+/// engine failure after the frames were read leaves the stream in sync,
+/// so the connection survives it.
+fn shard_conn_loop(stream: TcpStream, engine: &Arc<ShardEngine>)
+                   -> Result<()> {
+    let mut writer = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+    loop {
+        let mut line = String::new();
+        if reader.read_line(&mut line)? == 0 {
+            return Ok(()); // clean disconnect
+        }
+        if line.trim().is_empty() {
+            continue;
+        }
+        let req = match parse(&line) {
+            Ok(v) => v,
+            Err(e) => {
+                // frame boundary unknowable from here: reply, close
+                reply_line(&mut writer, obj(vec![
+                    ("id", 0i64.into()),
+                    ("error", format!("bad json: {e}").into()),
+                ]))?;
+                return Ok(());
+            }
+        };
+        let id = req.get("id").as_i64().unwrap_or(0);
+        match req.get("op").as_str() {
+            Some("ping") => {
+                reply_line(&mut writer, obj(vec![
+                    ("id", id.into()),
+                    ("ok", true.into()),
+                ]))?;
+            }
+            Some("end") => match parse_hex_u64(req.get("session")) {
+                Ok(sid) => {
+                    engine.end_session(sid);
+                    reply_line(&mut writer, obj(vec![
+                        ("id", id.into()),
+                        ("ok", true.into()),
+                    ]))?;
+                }
+                Err(e) => {
+                    reply_line(&mut writer, obj(vec![
+                        ("id", id.into()),
+                        ("error", format!("{e:#}").into()),
+                    ]))?;
+                }
+            },
+            Some("solve") => {
+                let hdr = match SolveHeader::parse(&req) {
+                    Ok(h) => h,
+                    Err(e) => {
+                        // the peer is about to stream frames we cannot
+                        // size: reply, close
+                        reply_line(&mut writer, obj(vec![
+                            ("id", id.into()),
+                            ("error", format!("{e:#}").into()),
+                        ]))?;
+                        return Ok(());
+                    }
+                };
+                let (Some(nqk), Some(nv)) =
+                    (hdr.payload_elems(hdr.dk), hdr.payload_elems(hdr.dv))
+                else {
+                    reply_line(&mut writer, obj(vec![
+                        ("id", hdr.id.into()),
+                        ("error", "payload too large".into()),
+                    ]))?;
+                    return Ok(());
+                };
+                let q = read_f32s(&mut reader, nqk)?;
+                let k = read_f32s(&mut reader, nqk)?;
+                let v = read_f32s(&mut reader, nv)?;
+                let shard_req = ShardRequest {
+                    kernel: hdr.kernel.clone(),
+                    q: BatchMatrix::from_vec(hdr.batch, hdr.heads,
+                                             hdr.rows, hdr.dk, q),
+                    k: BatchMatrix::from_vec(hdr.batch, hdr.heads,
+                                             hdr.rows, hdr.dk, k),
+                    v: BatchMatrix::from_vec(hdr.batch, hdr.heads,
+                                             hdr.rows, hdr.dv, v),
+                    seed: hdr.seed,
+                    slice_base: hdr.slice_base,
+                    lens: hdr.lens.clone(),
+                    session: hdr.session,
+                };
+                match engine.solve(&shard_req) {
+                    Ok(rep) => {
+                        let mut fields = vec![
+                            ("id", hdr.id.into()),
+                            ("ok", true.into()),
+                            ("batch", rep.out.batch.into()),
+                            ("heads", rep.out.heads.into()),
+                            ("rows", rep.out.rows.into()),
+                            ("cols", rep.out.cols.into()),
+                        ];
+                        if let Some(oc) = &rep.outcome {
+                            fields.push(("outcome", outcome_to_value(oc)));
+                        }
+                        reply_line(&mut writer, obj(fields))?;
+                        write_f32s(&mut writer, &rep.out.data)?;
+                        writer.flush()?;
+                    }
+                    // frames consumed: the stream is in sync, keep it
+                    Err(e) => {
+                        reply_line(&mut writer, obj(vec![
+                            ("id", hdr.id.into()),
+                            ("error", format!("{e:#}").into()),
+                        ]))?;
+                    }
+                }
+            }
+            other => {
+                reply_line(&mut writer, obj(vec![
+                    ("id", id.into()),
+                    ("error", format!("unknown op {other:?}").into()),
+                ]))?;
+            }
+        }
+    }
 }
 
 fn f32_field(req: &Value, key: &str) -> Result<Vec<f32>> {

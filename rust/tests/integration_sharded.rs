@@ -1,0 +1,129 @@
+//! Integration: the sharded fan-out backend over real TCP shard
+//! workers — binary-framed solves, sticky decode sessions, and the
+//! degraded-mode fallback when a shard is unreachable.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+use clustered_transformers::attention::{AttentionBackend, AttnBatch,
+                                        CacheRef, CachingBackend, KvCache,
+                                        NativeBackend, SeqOutcome,
+                                        SessionRef, ShardEngine,
+                                        ShardOptions, ShardedBackend};
+use clustered_transformers::exec::ExecCtx;
+use clustered_transformers::prng::Xoshiro256;
+use clustered_transformers::server;
+use clustered_transformers::tensor::batch::BatchMatrix;
+
+const KERNEL: &str = "i-clustered-4";
+
+struct Worker {
+    addr: String,
+    stop: Arc<AtomicBool>,
+    thread: std::thread::JoinHandle<()>,
+}
+
+fn spawn_worker() -> Worker {
+    let engine = Arc::new(ShardEngine::new(1));
+    let stop = Arc::new(AtomicBool::new(false));
+    let (addr_tx, addr_rx) = mpsc::channel();
+    let stop2 = stop.clone();
+    let thread = std::thread::spawn(move || {
+        server::serve_shard_worker(engine, "127.0.0.1:0", stop2, move |a| {
+            addr_tx.send(a).unwrap();
+        })
+        .unwrap();
+    });
+    let addr = addr_rx.recv_timeout(Duration::from_secs(30)).unwrap();
+    Worker { addr: addr.to_string(), stop, thread }
+}
+
+impl Worker {
+    fn shutdown(self) {
+        self.stop.store(true, Ordering::Relaxed);
+        self.thread.join().unwrap();
+    }
+}
+
+fn prefix(t: &BatchMatrix, len: usize) -> BatchMatrix {
+    let mut out = BatchMatrix::zeros(1, t.heads, len, t.cols);
+    for h in 0..t.heads {
+        out.slice_mut(h)
+            .copy_from_slice(&t.view(h).data[..len * t.cols]);
+    }
+    out
+}
+
+#[test]
+fn tcp_shard_workers_match_native_and_survive_a_dead_shard() {
+    clustered_transformers::config::init_logging(true);
+    let w1 = spawn_worker();
+    let w2 = spawn_worker();
+    let addrs = vec![w1.addr.clone(), w2.addr.clone()];
+    let opts = ShardOptions::default();
+    let backend = ShardedBackend::over_tcp(KERNEL, &addrs, opts).unwrap();
+    assert_eq!(backend.health_check(), vec![true, true]);
+
+    let ctx = ExecCtx::sequential();
+    let native = NativeBackend::by_name(KERNEL).unwrap();
+    let mut rng = Xoshiro256::new(7);
+    let q = BatchMatrix::randn(3, 2, 24, 8, &mut rng);
+    let k = BatchMatrix::randn(3, 2, 24, 8, &mut rng);
+    let v = BatchMatrix::randn(3, 2, 24, 8, &mut rng);
+
+    // plain batch over the wire == native, both dense and ragged
+    let batch = AttnBatch::new(&q, &k, &v, 11);
+    assert!(backend.execute(&batch, &ctx)
+        .bit_identical(&native.execute(&batch, &ctx)));
+    let lens = [24usize, 5, 17];
+    let ragged = AttnBatch::new(&q, &k, &v, 11).with_lens(&lens);
+    assert!(backend.execute(&ragged, &ctx)
+        .bit_identical(&native.execute(&ragged, &ctx)));
+
+    // a decode session lands on its ring owner every step: prefill
+    // misses, later steps hit the worker-side cache; every span equals
+    // the single-host cached run bit for bit
+    let oracle = CachingBackend::native(KERNEL, Arc::new(KvCache::unbounded()))
+        .unwrap();
+    let sid = 0xD00D_u64;
+    let mut span = 0usize;
+    for (i, len) in [10usize, 16, 24].into_iter().enumerate() {
+        let (qp, kp, vp) = (prefix(&q, len), prefix(&k, len), prefix(&v, len));
+        let blens = [len];
+        let sessions = [Some(SessionRef {
+            cache: CacheRef { session: sid, generation: 0 },
+            span_start: span,
+        })];
+        let step = AttnBatch::new(&qp, &kp, &vp, 11)
+            .with_lens(&blens)
+            .with_sessions(&sessions);
+        let (got, rep) = backend.execute_with_report(&step, &ctx);
+        let (want, wrep) = oracle.execute_with_report(&step, &ctx);
+        assert!(got.bit_identical(&want), "step {i} diverged");
+        assert_eq!(rep, wrep, "step {i} outcome diverged");
+        if i > 0 {
+            assert!(matches!(rep[0], SeqOutcome::Hit { .. }),
+                    "step {i}: session did not stick to its owner");
+        }
+        span = len;
+    }
+    backend.end_session(sid);
+
+    // kill one worker: the backend retries, marks it down, and falls
+    // back to local compute without changing a single bit
+    w2.shutdown();
+    let opts = ShardOptions {
+        retries: 1,
+        backoff: Duration::from_millis(1),
+        ..ShardOptions::default()
+    };
+    let degraded = ShardedBackend::over_tcp(
+        KERNEL, &[w1.addr.clone(), "127.0.0.1:1".to_string()], opts)
+        .unwrap();
+    assert_eq!(degraded.health_check(), vec![true, false]);
+    assert!(degraded.execute(&ragged, &ctx)
+        .bit_identical(&native.execute(&ragged, &ctx)));
+
+    w1.shutdown();
+}
