@@ -254,6 +254,65 @@ pub fn write_bench_json(bench: &str,
     Some(path)
 }
 
+/// Parse a `BENCH_<name>.json` document (the [`write_bench_json`]
+/// schema) back into records.  Returns `(bench_name, records)`; unknown
+/// extra columns round-trip into [`BenchRecord::extra`].  This is the
+/// read half the `ct oracle perf-gate` baseline comparison runs on.
+pub fn parse_bench_doc(doc: &crate::jsonio::Value)
+                       -> anyhow::Result<(String, Vec<BenchRecord>)> {
+    use anyhow::anyhow;
+    let bench = doc
+        .get("bench")
+        .as_str()
+        .ok_or_else(|| anyhow!("bench doc: missing \"bench\" name"))?
+        .to_string();
+    let rows = doc
+        .get("records")
+        .as_arr()
+        .ok_or_else(|| anyhow!("bench doc: missing \"records\" array"))?;
+    const FIXED: [&str; 6] =
+        ["name", "rows_per_sec", "mean_us", "p50_us", "p99_us", "iters"];
+    let mut records = Vec::with_capacity(rows.len());
+    for row in rows {
+        let name = row
+            .get("name")
+            .as_str()
+            .ok_or_else(|| anyhow!("bench doc: record missing \"name\""))?;
+        let num = |key: &str| row.get(key).as_f64().unwrap_or(0.0);
+        let mut rec = BenchRecord {
+            name: name.to_string(),
+            rows_per_sec: num("rows_per_sec"),
+            mean_us: num("mean_us"),
+            p50_us: num("p50_us"),
+            p99_us: num("p99_us"),
+            iters: row.get("iters").as_usize().unwrap_or(0),
+            extra: Vec::new(),
+        };
+        if let Some(obj) = row.as_obj() {
+            for (k, v) in obj.iter() {
+                if !FIXED.contains(&k.as_str()) {
+                    if let Some(n) = v.as_f64() {
+                        rec.extra.push((k.clone(), n));
+                    }
+                }
+            }
+        }
+        records.push(rec);
+    }
+    Ok((bench, records))
+}
+
+/// Read and parse a `BENCH_<name>.json` file — see [`parse_bench_doc`].
+pub fn read_bench_json(path: &std::path::Path)
+                       -> anyhow::Result<(String, Vec<BenchRecord>)> {
+    use anyhow::anyhow;
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow!("read {}: {e}", path.display()))?;
+    let doc = crate::jsonio::parse(&text)
+        .map_err(|e| anyhow!("parse {}: {e}", path.display()))?;
+    parse_bench_doc(&doc)
+}
+
 /// Format seconds adaptively (ns/µs/ms/s).
 pub fn fmt_time(s: f64) -> String {
     if s < 1e-6 {
@@ -356,6 +415,25 @@ mod tests {
         assert_eq!(rows[1].get("rows_per_sec").as_f64(), Some(0.0));
         // peak RSS is best-effort but must be a number
         assert!(doc.get("peak_rss_bytes").as_f64().is_some());
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn bench_doc_roundtrips_through_reader() {
+        let st = Stats::from_samples(&[0.004, 0.006]);
+        let recs = vec![BenchRecord::from_stats("row-a", 500, &st)
+                            .with("waste", 0.25)];
+        let Some(path) = write_bench_json("readertest", &recs) else {
+            eprintln!("SKIP: repo root not writable");
+            return;
+        };
+        let (bench, parsed) = read_bench_json(&path).unwrap();
+        assert_eq!(bench, "readertest");
+        assert_eq!(parsed.len(), 1);
+        assert_eq!(parsed[0].name, "row-a");
+        assert!((parsed[0].rows_per_sec - recs[0].rows_per_sec).abs() < 1e-6);
+        assert_eq!(parsed[0].iters, 2);
+        assert_eq!(parsed[0].extra, vec![("waste".to_string(), 0.25)]);
         let _ = std::fs::remove_file(path);
     }
 

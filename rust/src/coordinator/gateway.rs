@@ -652,12 +652,20 @@ impl ServingGateway {
     /// multi-host serving, the release also reaches the session's
     /// owning shard (every bucket's backend, since a routed-up session
     /// may have fallen back to any of their local caches).
-    pub fn end_session(&self, session: u64) {
-        self.sessions.lock().unwrap().remove(&session);
+    ///
+    /// Idempotent: ending an unknown (or already-ended) session is a
+    /// harmless no-op that creates no state.  Returns whether the
+    /// session was live — the wire protocol reports it as
+    /// `"was_live"` so clients can distinguish a real teardown from a
+    /// duplicate or misaddressed `end`.
+    pub fn end_session(&self, session: u64) -> bool {
+        let was_live =
+            self.sessions.lock().unwrap().remove(&session).is_some();
         self.cache.invalidate(session);
         for sb in &self.sharded {
             sb.end_session(session);
         }
+        was_live
     }
 
     /// Evict every session idle past [`GatewayOptions::session_ttl`]

@@ -4,9 +4,93 @@
 //! full JSON grammar (objects, arrays, strings with escapes, numbers,
 //! bools, null); numbers are kept as `f64` which is lossless for every
 //! integer the manifest contains (< 2^53).
+//!
+//! **Byte-stability contract.** Serialisation is deterministic: objects
+//! emit fields in insertion order ([`ObjMap`] preserves it; the parser
+//! inserts in document order, so parse → write round-trips field order),
+//! and the number writer emits integers exactly.  Building the same
+//! document twice — or parsing and re-writing it — yields identical
+//! bytes, which is what lets oracle fixtures and `oracle-report.json`
+//! diff cleanly in git.  [`to_string_pretty`] is the stable multi-line
+//! form used for checked-in files.
 
-use std::collections::BTreeMap;
 use std::fmt;
+
+/// An insertion-order-preserving string-keyed map for [`Value::Obj`].
+///
+/// JSON writers that sort keys scramble the author's field order and make
+/// semantically-identical documents diff noisily; hash maps are worse
+/// (nondeterministic).  This is a small Vec-backed map — objects in our
+/// manifests have at most a few dozen fields, so linear `get` is fine —
+/// with last-insert-wins replacement *in place* (the key keeps its
+/// original position), so output order is a pure function of the build
+/// order.
+#[derive(Debug, Clone, Default)]
+pub struct ObjMap {
+    entries: Vec<(String, Value)>,
+}
+
+impl ObjMap {
+    pub fn new() -> Self {
+        Self { entries: Vec::new() }
+    }
+    /// Insert, replacing any existing value for `key` in place.
+    pub fn insert(&mut self, key: String, value: Value) {
+        match self.entries.iter_mut().find(|(k, _)| *k == key) {
+            Some(slot) => slot.1 = value,
+            None => self.entries.push((key, value)),
+        }
+    }
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.entries.iter().find(|(k, _)| k == key).map(|(_, v)| v)
+    }
+    pub fn contains_key(&self, key: &str) -> bool {
+        self.get(key).is_some()
+    }
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+    pub fn iter(&self) -> impl Iterator<Item = (&String, &Value)> {
+        self.entries.iter().map(|(k, v)| (k, v))
+    }
+    pub fn keys(&self) -> impl Iterator<Item = &String> {
+        self.entries.iter().map(|(k, _)| k)
+    }
+}
+
+impl FromIterator<(String, Value)> for ObjMap {
+    fn from_iter<I: IntoIterator<Item = (String, Value)>>(it: I) -> Self {
+        let mut m = ObjMap::new();
+        for (k, v) in it {
+            m.insert(k, v);
+        }
+        m
+    }
+}
+
+impl<'a> IntoIterator for &'a ObjMap {
+    type Item = (&'a String, &'a Value);
+    type IntoIter = std::iter::Map<
+        std::slice::Iter<'a, (String, Value)>,
+        fn(&'a (String, Value)) -> (&'a String, &'a Value),
+    >;
+    fn into_iter(self) -> Self::IntoIter {
+        self.entries.iter().map(|(k, v)| (k, v))
+    }
+}
+
+/// Order-insensitive equality: two objects are equal iff they hold the
+/// same key→value set, matching JSON semantics (field order is a
+/// serialisation detail, not data).
+impl PartialEq for ObjMap {
+    fn eq(&self, other: &Self) -> bool {
+        self.len() == other.len()
+            && self.iter().all(|(k, v)| other.get(k) == Some(v))
+    }
+}
 
 /// An owned JSON document node.
 #[derive(Debug, Clone, PartialEq)]
@@ -16,7 +100,7 @@ pub enum Value {
     Num(f64),
     Str(String),
     Arr(Vec<Value>),
-    Obj(BTreeMap<String, Value>),
+    Obj(ObjMap),
 }
 
 impl Value {
@@ -50,7 +134,7 @@ impl Value {
             _ => None,
         }
     }
-    pub fn as_obj(&self) -> Option<&BTreeMap<String, Value>> {
+    pub fn as_obj(&self) -> Option<&ObjMap> {
         match self {
             Value::Obj(o) => Some(o),
             _ => None,
@@ -62,6 +146,22 @@ impl Value {
         match self {
             Value::Obj(o) => o.get(key).unwrap_or(&NULL),
             _ => &NULL,
+        }
+    }
+    /// Mutable field access on an object; `None` for non-objects or
+    /// missing keys.
+    pub fn get_mut(&mut self, key: &str) -> Option<&mut Value> {
+        match self {
+            Value::Obj(o) => {
+                o.entries.iter_mut().find(|(k, _)| k == key).map(|(_, v)| v)
+            }
+            _ => None,
+        }
+    }
+    /// Insert/replace a field on an object; no-op on non-objects.
+    pub fn set(&mut self, key: &str, value: Value) {
+        if let Value::Obj(o) = self {
+            o.insert(key.to_string(), value);
         }
     }
 }
@@ -284,7 +384,7 @@ impl<'a> Parser<'a> {
 
     fn object(&mut self) -> Result<Value, ParseError> {
         self.eat(b'{')?;
-        let mut map = BTreeMap::new();
+        let mut map = ObjMap::new();
         self.skip_ws();
         if self.peek() == Some(b'}') {
             self.i += 1;
@@ -393,6 +493,52 @@ pub fn to_string(v: &Value) -> String {
     v.to_string()
 }
 
+fn write_pretty(v: &Value, indent: usize, out: &mut String) {
+    const STEP: usize = 2;
+    match v {
+        Value::Arr(a) if !a.is_empty() => {
+            out.push_str("[\n");
+            for (i, item) in a.iter().enumerate() {
+                if i > 0 {
+                    out.push_str(",\n");
+                }
+                out.push_str(&" ".repeat(indent + STEP));
+                write_pretty(item, indent + STEP, out);
+            }
+            out.push('\n');
+            out.push_str(&" ".repeat(indent));
+            out.push(']');
+        }
+        Value::Obj(o) if !o.is_empty() => {
+            out.push_str("{\n");
+            for (i, (k, val)) in o.iter().enumerate() {
+                if i > 0 {
+                    out.push_str(",\n");
+                }
+                out.push_str(&" ".repeat(indent + STEP));
+                write_escaped(k, out);
+                out.push_str(": ");
+                write_pretty(val, indent + STEP, out);
+            }
+            out.push('\n');
+            out.push_str(&" ".repeat(indent));
+            out.push('}');
+        }
+        other => write_value(other, out),
+    }
+}
+
+/// Serialise to stable multi-line JSON (2-space indent, field order
+/// preserved, trailing newline) — the form for checked-in files like
+/// oracle fixture headers and `oracle-report.json`, so regenerating an
+/// unchanged document is byte-identical and git diffs stay line-scoped.
+pub fn to_string_pretty(v: &Value) -> String {
+    let mut s = String::new();
+    write_pretty(v, 0, &mut s);
+    s.push('\n');
+    s
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -445,5 +591,70 @@ mod tests {
     fn get_on_missing_returns_null() {
         let v = parse("{}").unwrap();
         assert_eq!(*v.get("nope"), Value::Null);
+    }
+
+    #[test]
+    fn objects_emit_fields_in_insertion_order() {
+        let v = obj(vec![("zeta", 1.0.into()),
+                         ("alpha", 2.0.into()),
+                         ("mid", Value::Null)]);
+        assert_eq!(to_string(&v), r#"{"zeta":1,"alpha":2,"mid":null}"#);
+    }
+
+    #[test]
+    fn parse_rewrite_preserves_document_field_order() {
+        let src = r#"{"z":1,"a":{"y":2,"b":3},"m":[{"k":4,"c":5}]}"#;
+        assert_eq!(to_string(&parse(src).unwrap()), src);
+    }
+
+    #[test]
+    fn serialization_is_byte_stable_across_builds() {
+        let build = || {
+            obj(vec![
+                ("name", "fixture".into()),
+                ("version", 1usize.into()),
+                ("items", Value::Arr(vec![
+                    obj(vec![("len", 5usize.into()), ("ok", true.into())]),
+                    obj(vec![("len", 9usize.into()), ("ok", false.into())]),
+                ])),
+            ])
+        };
+        assert_eq!(to_string(&build()), to_string(&build()));
+        assert_eq!(to_string_pretty(&build()), to_string_pretty(&build()));
+        // and a parse → write cycle of the pretty form is stable too
+        let pretty = to_string_pretty(&build());
+        assert_eq!(to_string_pretty(&parse(&pretty).unwrap()), pretty);
+    }
+
+    #[test]
+    fn duplicate_key_last_wins_in_place() {
+        let mut m = ObjMap::new();
+        m.insert("a".into(), 1.0.into());
+        m.insert("b".into(), 2.0.into());
+        m.insert("a".into(), 3.0.into());
+        assert_eq!(to_string(&Value::Obj(m)), r#"{"a":3,"b":2}"#);
+    }
+
+    #[test]
+    fn object_equality_is_order_insensitive() {
+        let a = parse(r#"{"x":1,"y":[2,3]}"#).unwrap();
+        let b = parse(r#"{"y":[2,3],"x":1}"#).unwrap();
+        assert_eq!(a, b);
+        assert_ne!(a, parse(r#"{"x":1,"y":[3,2]}"#).unwrap());
+        assert_ne!(a, parse(r#"{"x":1}"#).unwrap());
+    }
+
+    #[test]
+    fn pretty_form_parses_back_equal() {
+        let v = parse(r#"{"a":[1,{"b":[]},{}],"c":"s"}"#).unwrap();
+        assert_eq!(parse(&to_string_pretty(&v)).unwrap(), v);
+    }
+
+    #[test]
+    fn set_and_get_mut_edit_objects() {
+        let mut v = parse(r#"{"a":1}"#).unwrap();
+        v.set("b", true.into());
+        *v.get_mut("a").unwrap() = 7.0.into();
+        assert_eq!(to_string(&v), r#"{"a":7,"b":true}"#);
     }
 }

@@ -76,6 +76,13 @@
 //!   autoregressive traffic through a gateway-global KV cache: pinned
 //!   to their bucket, routed up as the history grows, replying with
 //!   only the new rows (see `docs/SERVING.md`).
+//! - [`oracle`] — the golden-trace regression oracle over all of the
+//!   above: `ct oracle record` freezes the gateway's bit-exact outputs
+//!   and deterministic counters for a seeded trace suite into
+//!   checked-in fixtures, `ct oracle replay` diffs the current build
+//!   against them under `oracle/tolerance-policy.json`, and the perf
+//!   gate compares fresh `BENCH_*.json` drops against
+//!   `bench-baselines/` (see `docs/TESTING.md`).
 //!
 //! ## Serving in five lines
 //!
@@ -119,6 +126,7 @@ pub mod data;
 pub mod exec;
 pub mod jsonio;
 pub mod metrics;
+pub mod oracle;
 pub mod prng;
 pub mod proptest;
 pub mod runtime;

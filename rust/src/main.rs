@@ -9,6 +9,9 @@
 //!               synthetic mixed-length trace (default) or serve TCP
 //!   shard-worker  serve raw attention sub-batches (binary-framed f32)
 //!               for a multi-host gateway's sharded fan-out backend
+//!   oracle      golden-trace regression harness: record / replay /
+//!               bless fixtures, run the bench perf gate
+//!               (see docs/TESTING.md)
 //!   validate    run every *.forward program once (artifact smoke test)
 //!   bench-attn  quick native attention timing (see benches for full runs)
 
@@ -43,13 +46,14 @@ fn dispatch(argv: &[String]) -> Result<()> {
         "serve" => cmd_serve(rest),
         "gateway" => cmd_gateway(rest),
         "shard-worker" => cmd_shard_worker(rest),
+        "oracle" => cmd_oracle(rest),
         "validate" => cmd_validate(rest),
         "bench-attn" => cmd_bench_attn(rest),
         _ => {
             println!(
                 "ct — Fast Transformers with Clustered Attention (repro)\n\
                  subcommands: list | train | eval | serve | gateway | \
-                 shard-worker | validate | bench-attn\n\
+                 shard-worker | oracle | validate | bench-attn\n\
                  run `ct <subcommand> --help` conceptually via source; \
                  common options: --artifacts DIR --steps N --model NAME"
             );
@@ -438,6 +442,211 @@ fn cmd_shard_worker(rest: &[String]) -> Result<()> {
     println!("shard worker serving on {addr} (ctrl-c to stop)");
     clustered_transformers::server::serve_shard_worker(
         engine, &addr, stop, |a| println!("bound {a}"))
+}
+
+fn cmd_oracle(rest: &[String]) -> Result<()> {
+    use clustered_transformers::oracle;
+    let action = rest.first().map(|s| s.as_str()).unwrap_or("help");
+    let rest = if rest.is_empty() { &[][..] } else { &rest[1..] };
+    match action {
+        "record" => cmd_oracle_record(rest, /*bless=*/ false),
+        "bless" => cmd_oracle_record(rest, /*bless=*/ true),
+        "replay" => cmd_oracle_replay(rest),
+        "perf-gate" => cmd_oracle_perf_gate(rest),
+        _ => {
+            println!(
+                "ct oracle — golden-trace regression harness \
+                 (docs/TESTING.md)\n\
+                 actions:\n\
+                 \x20 record     record standard-suite fixtures that are \
+                 missing (--force: all)\n\
+                 \x20 replay     re-run the recorded suite on this build, \
+                 diff bit-exactly,\n\
+                 \x20            write {}\n\
+                 \x20 bless      re-record every fixture in place \
+                 (--bench: also copy fresh\n\
+                 \x20            BENCH_*.json into {})\n\
+                 \x20 perf-gate  compare fresh BENCH_*.json against the \
+                 blessed baselines",
+                oracle::default_report_path().display(),
+                oracle::default_baseline_dir().display());
+            Ok(())
+        }
+    }
+}
+
+fn cmd_oracle_record(rest: &[String], bless: bool) -> Result<()> {
+    use clustered_transformers::oracle;
+    let cmd = if bless {
+        Command::new("oracle bless",
+                     "re-record the fixture suite on this build")
+            .flag("bench",
+                  "also bless perf baselines: copy the repo root's fresh \
+                   BENCH_*.json files into bench-baselines/")
+    } else {
+        Command::new("oracle record",
+                     "record standard-suite fixtures (missing-only by \
+                      default)")
+            .flag("force", "re-record fixtures that already exist")
+    }
+    .opt("fixtures", None,
+         "fixture directory (default <repo>/oracle/fixtures)");
+    let args = cmd.parse(rest)?;
+    init_logging(true);
+    let dir = args.get("fixtures")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(oracle::default_fixture_dir);
+    let force = bless || args.flag("force");
+    let recorded =
+        oracle::record_suite(&dir, &oracle::standard_suite(), force)?;
+    if recorded.is_empty() {
+        println!("all fixtures present in {} — nothing recorded \
+                  (use `ct oracle bless` to re-record)", dir.display());
+    } else {
+        for name in &recorded {
+            println!("recorded {name}");
+        }
+        println!("{} fixture(s) written to {}", recorded.len(),
+                 dir.display());
+    }
+    if bless && args.flag("bench") {
+        let root = find_repo_root();
+        let baselines = oracle::default_baseline_dir();
+        std::fs::create_dir_all(&baselines)?;
+        let mut copied = 0;
+        let mut names: Vec<String> = std::fs::read_dir(&root)?
+            .filter_map(|e| e.ok())
+            .map(|e| e.file_name().to_string_lossy().to_string())
+            .filter(|n| n.starts_with("BENCH_") && n.ends_with(".json"))
+            .collect();
+        names.sort();
+        for name in names {
+            std::fs::copy(root.join(&name), baselines.join(&name))?;
+            println!("blessed baseline {name}");
+            copied += 1;
+        }
+        if copied == 0 {
+            println!("no BENCH_*.json at {} — run the benches first \
+                      (cargo bench, or CT_SMOKE=1 for the quick pass)",
+                     root.display());
+        }
+    }
+    Ok(())
+}
+
+fn cmd_oracle_replay(rest: &[String]) -> Result<()> {
+    use clustered_transformers::oracle;
+    let cmd = Command::new("oracle replay",
+                           "replay recorded fixtures against this build")
+        .opt("fixtures", None,
+             "fixture directory (default <repo>/oracle/fixtures)")
+        .opt("policy", None,
+             "tolerance policy path (default \
+              <repo>/oracle/tolerance-policy.json)")
+        .opt("report", None,
+             "report output path (default <repo>/oracle-report.json)")
+        .flag("inject-perturbation",
+              "self-test: flip one output bit of the first fixture — \
+               the run must go red (CI proves the harness can fail)");
+    let args = cmd.parse(rest)?;
+    init_logging(true);
+    let dir = args.get("fixtures")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(oracle::default_fixture_dir);
+    let policy_path = args.get("policy")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(oracle::default_policy_path);
+    let report_path = args.get("report")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(oracle::default_report_path);
+    let policy = oracle::TolerancePolicy::load(&policy_path)?;
+    let names = oracle::Manifest::load(&dir)?.fixtures;
+    if names.is_empty() {
+        return Err(anyhow!(
+            "no fixtures in {} — run `ct oracle record` first",
+            dir.display()));
+    }
+    let perturb = args.flag("inject-perturbation");
+    let report = oracle::replay_suite(&dir, &names, &policy, perturb);
+    report.write(&report_path)?;
+    for f in &report.fixtures {
+        println!("{}  {}", if f.passed { "pass" } else { "FAIL" },
+                 f.name);
+        for msg in f.failures.iter().chain(&f.notes) {
+            println!("      {msg}");
+        }
+    }
+    println!("report: {}", report_path.display());
+    if report.passed() {
+        println!("oracle: green ({} fixtures bit-exact)",
+                 report.fixtures.len());
+        Ok(())
+    } else {
+        Err(anyhow!("oracle: RED — see {}", report_path.display()))
+    }
+}
+
+fn cmd_oracle_perf_gate(rest: &[String]) -> Result<()> {
+    use clustered_transformers::oracle;
+    let cmd = Command::new(
+        "oracle perf-gate",
+        "fail on bench throughput regressions vs blessed baselines")
+        .opt("fresh", None,
+             "directory holding fresh BENCH_*.json (default repo root)")
+        .opt("baselines", None,
+             "baseline directory (default <repo>/bench-baselines)")
+        .opt("policy", None,
+             "tolerance policy path (default \
+              <repo>/oracle/tolerance-policy.json)")
+        .opt("report", None,
+             "oracle report to merge the verdict into (default \
+              <repo>/oracle-report.json)")
+        .flag("self-check",
+              "first prove the gate can fail on fabricated numbers, \
+               then run it for real");
+    let args = cmd.parse(rest)?;
+    init_logging(true);
+    let policy_path = args.get("policy")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(oracle::default_policy_path);
+    let policy = oracle::TolerancePolicy::load(&policy_path)?;
+    if args.flag("self-check") {
+        oracle::self_check(policy.max_bench_regression)?;
+        println!("perf-gate self-check: red path verified");
+    }
+    let fresh = args.get("fresh")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(find_repo_root);
+    let baselines = args.get("baselines")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(oracle::default_baseline_dir);
+    let gate = oracle::run_perf_gate(&fresh, &baselines,
+                                     policy.max_bench_regression)?;
+    for b in &gate.benches {
+        println!("{:22} {}", b.status, b.file);
+        for note in &b.notes {
+            println!("      {note}");
+        }
+    }
+    let report_path = args.get("report")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(oracle::default_report_path);
+    let ok = oracle::OracleReport::merge_perf_into(
+        &report_path, gate.to_value(), gate.passed())?;
+    println!("report: {}", report_path.display());
+    if gate.passed() {
+        println!("perf gate: pass (tolerance {:.0}%)",
+                 policy.max_bench_regression * 100.0);
+        if ok { Ok(()) } else {
+            Err(anyhow!("perf gate passed but {} is red from the \
+                         replay phase", report_path.display()))
+        }
+    } else {
+        Err(anyhow!("perf gate: FAIL — rows/sec regressed more than \
+                     {:.0}% (see {})",
+                    policy.max_bench_regression * 100.0,
+                    report_path.display()))
+    }
 }
 
 fn cmd_bench_attn(rest: &[String]) -> Result<()> {

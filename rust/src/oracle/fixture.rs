@@ -1,0 +1,841 @@
+//! Golden-trace fixture model and on-disk format.
+//!
+//! A fixture is a *regenerable* recording of the serving gateway over a
+//! seeded trace: the spec (kernel, shape, buckets, seed, trace
+//! parameters) fully determines the requests, so the fixture files only
+//! need to store what the gateway **returned** — per-response metadata
+//! plus the output frames — and the expected metric counters.
+//!
+//! On disk a fixture `<name>` is two files in the fixture directory:
+//!
+//! - `<name>.json` — pretty-printed header: format version, the spec,
+//!   one metadata record per response (lengths, spans, sessions,
+//!   cache-hit flags, serving bucket, frame element count), the
+//!   expected metric counters, and the frame file's element count +
+//!   FNV-1a-64 checksum.
+//! - `<name>.bin` — the response output frames, concatenated in trace
+//!   order as raw little-endian f32 (the shard wire-frame codec,
+//!   `attention::sharded::write_f32s`).
+//!
+//! `manifest.json` lists the fixture names (sorted — the file is
+//! byte-stable) so `ct oracle replay` knows the full suite without
+//! globbing.
+//!
+//! u64 values that must survive JSON exactly (seeds, session ids, the
+//! checksum) travel as 16-hex-digit strings, same as the shard wire
+//! protocol — JSON `f64` rounds past 2^53.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::attention::sharded::{hex_u64, parse_hex_u64, write_f32s};
+use crate::coordinator::{synthetic_decode_trace, synthetic_trace,
+                         GatewayResponse, GatewayShape, ServingGateway,
+                         TraceItem};
+use crate::jsonio::{self, obj, Value};
+
+/// Version stamp of the fixture on-disk format.  Bump on any breaking
+/// header/frame layout change; `load` rejects mismatches with a
+/// re-record hint instead of mis-diffing.
+pub const FORMAT_VERSION: u32 = 1;
+
+// ---------------------------------------------------------------------------
+// trace specs
+// ---------------------------------------------------------------------------
+
+/// The seeded trace a fixture drives through the gateway.  Generation is
+/// a pure function of `(spec, shape, seed)`, which is what makes
+/// fixtures regenerable from their header alone.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TraceSpec {
+    /// Ragged one-shot requests, log₂-uniform lengths
+    /// ([`synthetic_trace`]).
+    Ragged { min_len: usize, max_len: usize, count: usize },
+    /// Multi-step decode sessions ([`synthetic_decode_trace`]).
+    Decode { prefill: usize, steps: usize, step_len: usize,
+             sessions: usize },
+    /// Ragged one-shots interleaved item-by-item with decode-session
+    /// steps (the decode half draws from `seed + 1` so the two streams
+    /// stay independent).
+    Mixed { min_len: usize, max_len: usize, count: usize,
+            prefill: usize, steps: usize, step_len: usize,
+            sessions: usize },
+    /// `count` single-row full-attention requests with closed-form
+    /// pattern tensors: softmax over one element is exactly 1.0, so the
+    /// expected output **is the V block, bit for bit**
+    /// ([`identity_expected_frames`]).  The one fixture whose `.bin`
+    /// can be authored by hand and checked in.
+    IdentityLen1 { count: usize },
+}
+
+/// The deterministic tensor fill of the identity trace: element `j` of
+/// tensor `c` (0 = q, 1 = k, 2 = v) of request `r`.  Every value is an
+/// integer in [0, 250] times 2⁻⁶ — exactly representable in f32, so any
+/// independent implementation of this formula reproduces the bytes.
+pub fn pattern_value(c: usize, r: usize, j: usize) -> f32 {
+    ((r * 31 + j * 7 + c * 13) % 251) as f32 * 0.015625
+}
+
+/// The expected `.bin` frame stream of an `IdentityLen1 { count }`
+/// fixture: each response is its request's V block exactly (single-row
+/// softmax weight is exactly 1.0 and `1.0 * v` is exact in f32).
+pub fn identity_expected_frames(shape: GatewayShape, count: usize)
+                                -> Vec<f32> {
+    let mut frames = Vec::with_capacity(count * shape.v_len(1));
+    for r in 0..count {
+        frames.extend((0..shape.v_len(1)).map(|j| pattern_value(2, r, j)));
+    }
+    frames
+}
+
+impl TraceSpec {
+    /// Generate the trace this spec describes (pure in `(self, shape,
+    /// seed)`).
+    pub fn generate(&self, shape: GatewayShape, seed: u64)
+                    -> Vec<TraceItem> {
+        match *self {
+            TraceSpec::Ragged { min_len, max_len, count } => {
+                synthetic_trace(shape, min_len, max_len, count, seed)
+            }
+            TraceSpec::Decode { prefill, steps, step_len, sessions } => {
+                synthetic_decode_trace(shape, prefill, steps, step_len,
+                                       sessions, seed)
+            }
+            TraceSpec::Mixed { min_len, max_len, count, prefill, steps,
+                               step_len, sessions } => {
+                let shots =
+                    synthetic_trace(shape, min_len, max_len, count, seed);
+                let decode = synthetic_decode_trace(
+                    shape, prefill, steps, step_len, sessions,
+                    seed.wrapping_add(1));
+                interleave(shots, decode)
+            }
+            TraceSpec::IdentityLen1 { count } => (0..count)
+                .map(|r| TraceItem {
+                    q: (0..shape.qk_len(1))
+                        .map(|j| pattern_value(0, r, j))
+                        .collect(),
+                    k: (0..shape.qk_len(1))
+                        .map(|j| pattern_value(1, r, j))
+                        .collect(),
+                    v: (0..shape.v_len(1))
+                        .map(|j| pattern_value(2, r, j))
+                        .collect(),
+                    len: 1,
+                    session: None,
+                })
+                .collect(),
+        }
+    }
+
+    pub fn to_value(&self) -> Value {
+        match *self {
+            TraceSpec::Ragged { min_len, max_len, count } => obj(vec![
+                ("kind", "ragged".into()),
+                ("min_len", min_len.into()),
+                ("max_len", max_len.into()),
+                ("count", count.into()),
+            ]),
+            TraceSpec::Decode { prefill, steps, step_len, sessions } => {
+                obj(vec![
+                    ("kind", "decode".into()),
+                    ("prefill", prefill.into()),
+                    ("steps", steps.into()),
+                    ("step_len", step_len.into()),
+                    ("sessions", sessions.into()),
+                ])
+            }
+            TraceSpec::Mixed { min_len, max_len, count, prefill, steps,
+                               step_len, sessions } => obj(vec![
+                ("kind", "mixed".into()),
+                ("min_len", min_len.into()),
+                ("max_len", max_len.into()),
+                ("count", count.into()),
+                ("prefill", prefill.into()),
+                ("steps", steps.into()),
+                ("step_len", step_len.into()),
+                ("sessions", sessions.into()),
+            ]),
+            TraceSpec::IdentityLen1 { count } => obj(vec![
+                ("kind", "identity-len1".into()),
+                ("count", count.into()),
+            ]),
+        }
+    }
+
+    pub fn from_value(v: &Value) -> Result<Self> {
+        let field = |key: &str| {
+            v.get(key)
+                .as_usize()
+                .ok_or_else(|| anyhow!("trace spec: missing {key:?}"))
+        };
+        match v.get("kind").as_str() {
+            Some("ragged") => Ok(TraceSpec::Ragged {
+                min_len: field("min_len")?,
+                max_len: field("max_len")?,
+                count: field("count")?,
+            }),
+            Some("decode") => Ok(TraceSpec::Decode {
+                prefill: field("prefill")?,
+                steps: field("steps")?,
+                step_len: field("step_len")?,
+                sessions: field("sessions")?,
+            }),
+            Some("mixed") => Ok(TraceSpec::Mixed {
+                min_len: field("min_len")?,
+                max_len: field("max_len")?,
+                count: field("count")?,
+                prefill: field("prefill")?,
+                steps: field("steps")?,
+                step_len: field("step_len")?,
+                sessions: field("sessions")?,
+            }),
+            Some("identity-len1") => Ok(TraceSpec::IdentityLen1 {
+                count: field("count")?,
+            }),
+            other => bail!("trace spec: unknown kind {other:?}"),
+        }
+    }
+}
+
+/// Alternate `a[0], b[0], a[1], b[1], …` preserving each stream's
+/// internal order (decode steps must stay in session order).
+fn interleave(a: Vec<TraceItem>, b: Vec<TraceItem>) -> Vec<TraceItem> {
+    let mut a = a.into_iter();
+    let mut b = b.into_iter();
+    let mut out = Vec::with_capacity(a.len() + b.len());
+    loop {
+        let (x, y) = (a.next(), b.next());
+        if x.is_none() && y.is_none() {
+            return out;
+        }
+        out.extend(x);
+        out.extend(y);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// fixture spec
+// ---------------------------------------------------------------------------
+
+/// Everything needed to regenerate a fixture's requests and rebuild the
+/// gateway that serves them.
+///
+/// **Bucket batch size is pinned to 1.**  One-shot PRNG streams key off
+/// the batch *slot* (`slice_stream(seed, slot·H + h)`), so a
+/// multi-request flush's bits depend on which requests happened to
+/// co-batch — timing, not data.  Single-request flushes make every
+/// response a pure function of its own item, which is the composition
+/// independence the record/replay parity diff (and the lane-invariance
+/// property test) stands on.  Session streams are slot-independent by
+/// design (`prng::session_seed`) but ride the same rule.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FixtureSpec {
+    /// Fixture (and file-stem) name: `[a-z0-9-]+`.
+    pub name: String,
+    /// Attention-registry kernel every bucket runs.
+    pub kernel: String,
+    pub heads: usize,
+    pub dk: usize,
+    pub dv: usize,
+    /// Bucket pad-to lengths, ascending (each `Bucket::native(kernel,
+    /// n, 1)`).
+    pub buckets: Vec<usize>,
+    /// Gateway + trace seed.
+    pub seed: u64,
+    /// Valid-length masking (`GatewayOptions::mask`).
+    pub masked: bool,
+    /// 0 = single-host native serving; N = fan out over N local
+    /// `ct shard-worker` instances spawned for the run (the multi-host
+    /// path, exercised hermetically).
+    pub shards: usize,
+    pub trace: TraceSpec,
+}
+
+impl FixtureSpec {
+    pub fn shape(&self) -> GatewayShape {
+        GatewayShape { heads: self.heads, dk: self.dk, dv: self.dv }
+    }
+
+    fn validate(&self) -> Result<()> {
+        if self.name.is_empty()
+            || !self.name.chars().all(|c| {
+                c.is_ascii_lowercase() || c.is_ascii_digit() || c == '-'
+            })
+        {
+            bail!("fixture name {:?} must be non-empty [a-z0-9-]+ (it \
+                   names files)", self.name);
+        }
+        if self.buckets.is_empty() {
+            bail!("fixture {:?} has no buckets", self.name);
+        }
+        Ok(())
+    }
+
+    pub fn to_value(&self) -> Value {
+        obj(vec![
+            ("name", self.name.as_str().into()),
+            ("kernel", self.kernel.as_str().into()),
+            ("heads", self.heads.into()),
+            ("dk", self.dk.into()),
+            ("dv", self.dv.into()),
+            ("buckets", Value::Arr(
+                self.buckets.iter().map(|&n| n.into()).collect())),
+            ("seed", hex_u64(self.seed).into()),
+            ("masked", self.masked.into()),
+            ("shards", self.shards.into()),
+            ("trace", self.trace.to_value()),
+        ])
+    }
+
+    pub fn from_value(v: &Value) -> Result<Self> {
+        let field = |key: &str| {
+            v.get(key)
+                .as_usize()
+                .ok_or_else(|| anyhow!("fixture spec: missing {key:?}"))
+        };
+        let spec = FixtureSpec {
+            name: v.get("name")
+                .as_str()
+                .ok_or_else(|| anyhow!("fixture spec: missing name"))?
+                .to_string(),
+            kernel: v.get("kernel")
+                .as_str()
+                .ok_or_else(|| anyhow!("fixture spec: missing kernel"))?
+                .to_string(),
+            heads: field("heads")?,
+            dk: field("dk")?,
+            dv: field("dv")?,
+            buckets: v.get("buckets")
+                .as_arr()
+                .ok_or_else(|| anyhow!("fixture spec: missing buckets"))?
+                .iter()
+                .map(|b| b.as_usize()
+                    .ok_or_else(|| anyhow!("fixture spec: bad bucket")))
+                .collect::<Result<_>>()?,
+            seed: parse_hex_u64(v.get("seed"))?,
+            masked: v.get("masked")
+                .as_bool()
+                .ok_or_else(|| anyhow!("fixture spec: missing masked"))?,
+            shards: field("shards")?,
+            trace: TraceSpec::from_value(v.get("trace"))?,
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// recorded responses + metrics
+// ---------------------------------------------------------------------------
+
+/// Per-response metadata the replay diff checks alongside the frame
+/// bytes.  Everything here is deterministic under the batch-size-1
+/// serving discipline (see [`FixtureSpec`]); latencies are *not*
+/// recorded — they are machine noise, and the perf gate owns timing.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RespMeta {
+    pub len: usize,
+    pub span_start: usize,
+    pub session: Option<u64>,
+    pub cache_hit: Option<bool>,
+    /// Pad-to length of the serving bucket.
+    pub bucket_n: usize,
+    /// f32 elements this response contributed to the frame stream.
+    pub elems: usize,
+}
+
+impl RespMeta {
+    pub fn from_response(r: &GatewayResponse) -> Self {
+        Self {
+            len: r.len,
+            span_start: r.span_start,
+            session: r.session,
+            cache_hit: r.cache_hit,
+            bucket_n: r.bucket_seq_len,
+            elems: r.out.len(),
+        }
+    }
+
+    pub fn to_value(&self) -> Value {
+        obj(vec![
+            ("len", self.len.into()),
+            ("span_start", self.span_start.into()),
+            ("session", match self.session {
+                Some(sid) => hex_u64(sid).into(),
+                None => Value::Null,
+            }),
+            ("cache_hit", match self.cache_hit {
+                Some(b) => b.into(),
+                None => Value::Null,
+            }),
+            ("bucket_n", self.bucket_n.into()),
+            ("elems", self.elems.into()),
+        ])
+    }
+
+    pub fn from_value(v: &Value) -> Result<Self> {
+        let field = |key: &str| {
+            v.get(key)
+                .as_usize()
+                .ok_or_else(|| anyhow!("response meta: missing {key:?}"))
+        };
+        Ok(Self {
+            len: field("len")?,
+            span_start: field("span_start")?,
+            session: match v.get("session") {
+                Value::Null => None,
+                s => Some(parse_hex_u64(s)?),
+            },
+            cache_hit: match v.get("cache_hit") {
+                Value::Null => None,
+                b => Some(b.as_bool().ok_or_else(
+                    || anyhow!("response meta: bad cache_hit"))?),
+            },
+            bucket_n: field("bucket_n")?,
+            elems: field("elems")?,
+        })
+    }
+}
+
+/// The deterministic gateway counters a fixture pins: per-bucket
+/// completed counts plus the gateway-wide cache/session totals.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct MetricsSnapshot {
+    /// Completed requests per bucket, ascending seq_len order.
+    pub completed: Vec<u64>,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub saved_rows: u64,
+    pub recomputed_rows: u64,
+    pub session_route_up: u64,
+}
+
+impl MetricsSnapshot {
+    pub fn capture(gw: &ServingGateway) -> Self {
+        use std::sync::atomic::Ordering::Relaxed;
+        let ms = gw.bucket_metrics();
+        Self {
+            completed: ms.iter()
+                .map(|m| m.completed.load(Relaxed))
+                .collect(),
+            cache_hits: ms.iter()
+                .map(|m| m.cache_hits.load(Relaxed))
+                .sum(),
+            cache_misses: ms.iter()
+                .map(|m| m.cache_misses.load(Relaxed))
+                .sum(),
+            saved_rows: ms.iter()
+                .map(|m| m.saved_rows.load(Relaxed))
+                .sum(),
+            recomputed_rows: ms.iter()
+                .map(|m| m.recomputed_rows.load(Relaxed))
+                .sum(),
+            session_route_up: ms.iter()
+                .map(|m| m.session_route_up.load(Relaxed))
+                .sum(),
+        }
+    }
+
+    pub fn to_value(&self) -> Value {
+        obj(vec![
+            ("completed", Value::Arr(
+                self.completed.iter().map(|&n| (n as usize).into())
+                    .collect())),
+            ("cache_hits", (self.cache_hits as usize).into()),
+            ("cache_misses", (self.cache_misses as usize).into()),
+            ("saved_rows", (self.saved_rows as usize).into()),
+            ("recomputed_rows", (self.recomputed_rows as usize).into()),
+            ("session_route_up",
+             (self.session_route_up as usize).into()),
+        ])
+    }
+
+    pub fn from_value(v: &Value) -> Result<Self> {
+        let field = |key: &str| {
+            v.get(key)
+                .as_usize()
+                .map(|n| n as u64)
+                .ok_or_else(|| anyhow!("metrics: missing {key:?}"))
+        };
+        Ok(Self {
+            completed: v.get("completed")
+                .as_arr()
+                .ok_or_else(|| anyhow!("metrics: missing completed"))?
+                .iter()
+                .map(|n| n.as_usize()
+                    .map(|n| n as u64)
+                    .ok_or_else(|| anyhow!("metrics: bad completed")))
+                .collect::<Result<_>>()?,
+            cache_hits: field("cache_hits")?,
+            cache_misses: field("cache_misses")?,
+            saved_rows: field("saved_rows")?,
+            recomputed_rows: field("recomputed_rows")?,
+            session_route_up: field("session_route_up")?,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the fixture itself + file I/O
+// ---------------------------------------------------------------------------
+
+/// FNV-1a 64-bit over a byte stream — the frame-file checksum.  Chosen
+/// for being trivially reimplementable (the identity fixture's header
+/// is authored outside this crate) and good enough to catch truncation
+/// and bit rot; this is an integrity check, not a security boundary.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Frame stream → the raw little-endian bytes of the `.bin` file.
+pub fn frames_to_bytes(frames: &[f32]) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(frames.len() * 4);
+    write_f32s(&mut buf, frames).expect("Vec write is infallible");
+    buf
+}
+
+/// One recorded golden fixture: spec + expected responses, metrics and
+/// output frames.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Fixture {
+    pub spec: FixtureSpec,
+    pub responses: Vec<RespMeta>,
+    pub metrics: MetricsSnapshot,
+    /// All response outputs concatenated in trace order.
+    pub frames: Vec<f32>,
+}
+
+impl Fixture {
+    fn header_path(dir: &Path, name: &str) -> PathBuf {
+        dir.join(format!("{name}.json"))
+    }
+
+    fn frames_path(dir: &Path, name: &str) -> PathBuf {
+        dir.join(format!("{name}.bin"))
+    }
+
+    /// Whether both fixture files exist under `dir`.
+    pub fn exists(dir: &Path, name: &str) -> bool {
+        Self::header_path(dir, name).exists()
+            && Self::frames_path(dir, name).exists()
+    }
+
+    pub fn to_value(&self) -> Value {
+        let bytes = frames_to_bytes(&self.frames);
+        obj(vec![
+            ("format_version", (FORMAT_VERSION as usize).into()),
+            ("spec", self.spec.to_value()),
+            ("responses", Value::Arr(
+                self.responses.iter().map(RespMeta::to_value).collect())),
+            ("metrics", self.metrics.to_value()),
+            ("frames", obj(vec![
+                ("file", format!("{}.bin", self.spec.name).into()),
+                ("total_elems", self.frames.len().into()),
+                ("fnv1a64", hex_u64(fnv1a64(&bytes)).into()),
+            ])),
+        ])
+    }
+
+    /// Write `<name>.json` + `<name>.bin` under `dir` (created if
+    /// missing).  The header is pretty-printed stable JSON — recording
+    /// an unchanged build over an unchanged spec is byte-identical.
+    pub fn save(&self, dir: &Path) -> Result<()> {
+        self.spec.validate()?;
+        let total: usize = self.responses.iter().map(|r| r.elems).sum();
+        if total != self.frames.len() {
+            bail!("fixture {:?}: responses claim {total} frame elems, \
+                   stream has {}", self.spec.name, self.frames.len());
+        }
+        std::fs::create_dir_all(dir)?;
+        std::fs::write(Self::header_path(dir, &self.spec.name),
+                       jsonio::to_string_pretty(&self.to_value()))?;
+        std::fs::write(Self::frames_path(dir, &self.spec.name),
+                       frames_to_bytes(&self.frames))?;
+        Ok(())
+    }
+
+    /// Load and integrity-check a fixture: format version, frame count,
+    /// checksum, and per-response element accounting all verified here,
+    /// so the replay diff only ever compares well-formed recordings.
+    pub fn load(dir: &Path, name: &str) -> Result<Self> {
+        let hp = Self::header_path(dir, name);
+        let text = std::fs::read_to_string(&hp)
+            .map_err(|e| anyhow!("read {}: {e}", hp.display()))?;
+        let v = jsonio::parse(&text)
+            .map_err(|e| anyhow!("parse {}: {e}", hp.display()))?;
+        let version = v.get("format_version").as_usize().unwrap_or(0);
+        if version != FORMAT_VERSION as usize {
+            bail!("fixture {name:?} is format v{version}, this build \
+                   reads v{FORMAT_VERSION} — re-record it (ct oracle \
+                   bless)");
+        }
+        let spec = FixtureSpec::from_value(v.get("spec"))?;
+        if spec.name != name {
+            bail!("fixture file {name:?} contains spec named {:?}",
+                  spec.name);
+        }
+        let responses: Vec<RespMeta> = v.get("responses")
+            .as_arr()
+            .ok_or_else(|| anyhow!("fixture {name:?}: missing responses"))?
+            .iter()
+            .map(RespMeta::from_value)
+            .collect::<Result<_>>()?;
+        let metrics = MetricsSnapshot::from_value(v.get("metrics"))?;
+        let total_elems = v.get("frames")
+            .get("total_elems")
+            .as_usize()
+            .ok_or_else(|| anyhow!("fixture {name:?}: missing frame \
+                                    count"))?;
+        let want_sum = fnv1a64(&[]);
+        let want_sum = match v.get("frames").get("fnv1a64") {
+            Value::Null => want_sum, // tolerated only for empty streams
+            s => parse_hex_u64(s)?,
+        };
+        let fp = Self::frames_path(dir, name);
+        let bytes = std::fs::read(&fp)
+            .map_err(|e| anyhow!("read {}: {e}", fp.display()))?;
+        if bytes.len() != total_elems * 4 {
+            bail!("fixture {name:?}: frame file is {} bytes, header \
+                   says {} elems ({} bytes) — truncated or stale",
+                  bytes.len(), total_elems, total_elems * 4);
+        }
+        let got_sum = fnv1a64(&bytes);
+        if got_sum != want_sum {
+            bail!("fixture {name:?}: frame checksum {} != header {} — \
+                   corrupt or stale frame file",
+                  hex_u64(got_sum), hex_u64(want_sum));
+        }
+        let frames: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        let claimed: usize = responses.iter().map(|r| r.elems).sum();
+        if claimed != frames.len() {
+            bail!("fixture {name:?}: responses claim {claimed} elems, \
+                   frame file holds {}", frames.len());
+        }
+        Ok(Self { spec, responses, metrics, frames })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// manifest
+// ---------------------------------------------------------------------------
+
+/// The fixture directory's index: sorted fixture names.  Kept sorted on
+/// every save so re-recording a suite never reorders the file.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Manifest {
+    pub fixtures: Vec<String>,
+}
+
+impl Manifest {
+    pub fn path(dir: &Path) -> PathBuf {
+        dir.join("manifest.json")
+    }
+
+    pub fn load(dir: &Path) -> Result<Self> {
+        let p = Self::path(dir);
+        if !p.exists() {
+            return Ok(Self::default());
+        }
+        let text = std::fs::read_to_string(&p)
+            .map_err(|e| anyhow!("read {}: {e}", p.display()))?;
+        let v = jsonio::parse(&text)
+            .map_err(|e| anyhow!("parse {}: {e}", p.display()))?;
+        let version = v.get("format_version").as_usize().unwrap_or(0);
+        if version != FORMAT_VERSION as usize {
+            bail!("manifest is format v{version}, this build reads \
+                   v{FORMAT_VERSION}");
+        }
+        Ok(Self {
+            fixtures: v.get("fixtures")
+                .as_arr()
+                .ok_or_else(|| anyhow!("manifest: missing fixtures"))?
+                .iter()
+                .map(|f| f.as_str()
+                    .map(str::to_string)
+                    .ok_or_else(|| anyhow!("manifest: bad fixture name")))
+                .collect::<Result<_>>()?,
+        })
+    }
+
+    pub fn add(&mut self, name: &str) {
+        if !self.fixtures.iter().any(|f| f == name) {
+            self.fixtures.push(name.to_string());
+        }
+        self.fixtures.sort();
+    }
+
+    pub fn save(&self, dir: &Path) -> Result<()> {
+        std::fs::create_dir_all(dir)?;
+        let mut sorted = self.fixtures.clone();
+        sorted.sort();
+        let v = obj(vec![
+            ("format_version", (FORMAT_VERSION as usize).into()),
+            ("fixtures", Value::Arr(
+                sorted.iter().map(|f| f.as_str().into()).collect())),
+        ]);
+        std::fs::write(Self::path(dir), jsonio::to_string_pretty(&v))?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo_spec() -> FixtureSpec {
+        FixtureSpec {
+            name: "demo-mixed".into(),
+            kernel: "full".into(),
+            heads: 2,
+            dk: 4,
+            dv: 4,
+            buckets: vec![8, 16],
+            seed: 0xDEAD_BEEF_0000_0001,
+            masked: true,
+            shards: 0,
+            trace: TraceSpec::Mixed {
+                min_len: 2, max_len: 12, count: 5,
+                prefill: 4, steps: 2, step_len: 2, sessions: 2,
+            },
+        }
+    }
+
+    #[test]
+    fn spec_roundtrips_through_json() {
+        let spec = demo_spec();
+        let v = jsonio::parse(&jsonio::to_string(&spec.to_value()))
+            .unwrap();
+        assert_eq!(FixtureSpec::from_value(&v).unwrap(), spec);
+    }
+
+    #[test]
+    fn trace_generation_is_deterministic_and_mixed_interleaves() {
+        let spec = demo_spec();
+        let shape = spec.shape();
+        let a = spec.trace.generate(shape, spec.seed);
+        let b = spec.trace.generate(shape, spec.seed);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.len, y.len);
+            assert_eq!(x.session, y.session);
+            assert_eq!(x.q, y.q);
+        }
+        // 5 one-shots + 2 sessions × (prefill + 2 steps)
+        assert_eq!(a.len(), 5 + 2 * 3);
+        assert!(a.iter().any(|i| i.session.is_some()));
+        assert!(a.iter().any(|i| i.session.is_none()));
+        // interleaved, not concatenated: a session step appears before
+        // the last one-shot
+        let first_session =
+            a.iter().position(|i| i.session.is_some()).unwrap();
+        let last_shot =
+            a.iter().rposition(|i| i.session.is_none()).unwrap();
+        assert!(first_session < last_shot);
+    }
+
+    #[test]
+    fn identity_trace_is_the_documented_closed_form() {
+        let shape = GatewayShape { heads: 2, dk: 4, dv: 4 };
+        let items =
+            TraceSpec::IdentityLen1 { count: 3 }.generate(shape, 0);
+        assert_eq!(items.len(), 3);
+        for (r, item) in items.iter().enumerate() {
+            assert_eq!(item.len, 1);
+            assert_eq!(item.v.len(), shape.v_len(1));
+            for (j, &x) in item.v.iter().enumerate() {
+                assert_eq!(x.to_bits(),
+                           pattern_value(2, r, j).to_bits());
+            }
+        }
+        // the formula itself, pinned: (0*31 + 0*7 + 2*13) % 251 = 26
+        assert_eq!(pattern_value(2, 0, 0), 26.0 * 0.015625);
+        let expected = identity_expected_frames(shape, 3);
+        assert_eq!(expected.len(), 3 * shape.v_len(1));
+        assert_eq!(expected[0].to_bits(),
+                   pattern_value(2, 0, 0).to_bits());
+    }
+
+    #[test]
+    fn fixture_files_roundtrip_and_checksum_catches_corruption() {
+        let dir = std::env::temp_dir()
+            .join(format!("ct-oracle-fixture-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let fx = Fixture {
+            spec: FixtureSpec {
+                name: "roundtrip".into(),
+                trace: TraceSpec::IdentityLen1 { count: 2 },
+                ..demo_spec()
+            },
+            responses: vec![
+                RespMeta { len: 1, span_start: 0, session: None,
+                           cache_hit: None, bucket_n: 8, elems: 3 },
+                RespMeta { len: 1, span_start: 0,
+                           session: Some(0xFFFF_FFFF_FFFF_FFFE),
+                           cache_hit: Some(true), bucket_n: 8,
+                           elems: 2 },
+            ],
+            metrics: MetricsSnapshot {
+                completed: vec![2, 0],
+                cache_hits: 1,
+                ..MetricsSnapshot::default()
+            },
+            frames: vec![1.0, -0.5, 3.25, f32::MIN_POSITIVE, 0.0],
+        };
+        fx.save(&dir).unwrap();
+        // byte-stable: a second save writes identical files
+        let header = dir.join("roundtrip.json");
+        let before = std::fs::read(&header).unwrap();
+        fx.save(&dir).unwrap();
+        assert_eq!(before, std::fs::read(&header).unwrap());
+        let loaded = Fixture::load(&dir, "roundtrip").unwrap();
+        assert_eq!(loaded, fx);
+        // corrupt one frame byte → load must refuse
+        let bin = dir.join("roundtrip.bin");
+        let mut bytes = std::fs::read(&bin).unwrap();
+        bytes[5] ^= 0x01;
+        std::fs::write(&bin, &bytes).unwrap();
+        let err = Fixture::load(&dir, "roundtrip").unwrap_err();
+        assert!(err.to_string().contains("checksum"), "{err:#}");
+        // truncation → load must refuse
+        std::fs::write(&bin, &bytes[..bytes.len() - 4]).unwrap();
+        let err = Fixture::load(&dir, "roundtrip").unwrap_err();
+        assert!(err.to_string().contains("bytes"), "{err:#}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn manifest_sorts_and_dedups() {
+        let dir = std::env::temp_dir()
+            .join(format!("ct-oracle-manifest-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut m = Manifest::default();
+        m.add("zeta");
+        m.add("alpha");
+        m.add("zeta");
+        assert_eq!(m.fixtures, vec!["alpha", "zeta"]);
+        m.save(&dir).unwrap();
+        let before = std::fs::read(Manifest::path(&dir)).unwrap();
+        m.save(&dir).unwrap();
+        assert_eq!(before, std::fs::read(Manifest::path(&dir)).unwrap());
+        assert_eq!(Manifest::load(&dir).unwrap(), m);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn fnv1a64_matches_reference_vectors() {
+        // published FNV-1a 64 test vectors
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x8594_4171_f739_67e8);
+    }
+}

@@ -1,0 +1,573 @@
+//! Golden-trace oracle harness: record/replay parity for the serving
+//! stack, plus the perf-regression gate.
+//!
+//! (Not to be confused with the `oracle-top-N` *attention kernel* in
+//! [`crate::attention`] — that oracle picks top-K keys; this module is
+//! the repo's regression oracle.)
+//!
+//! # What it pins
+//!
+//! `ct oracle record` drives the live [`ServingGateway`] — native
+//! single-host or fanned out over freshly spawned local
+//! `ct shard-worker` processes-worth of [`ShardEngine`]s — through a
+//! seeded trace (ragged one-shots, multi-step decode sessions, or a
+//! mix) and freezes what came back: output frames, per-response
+//! metadata (bucket, span, cache-hit flags) and the deterministic
+//! metric counters.  `ct oracle replay` re-runs the same specs on the
+//! *current* build and diffs against the recording **bit-exactly**,
+//! emitting `oracle-report.json` (see [`report`]).  Anything that
+//! changes serving semantics — a kernel tweak, a batcher reorder, a
+//! cache bug — turns a fixture red with the first differing f32 bit
+//! pattern in hand.
+//!
+//! # Why replay can demand bit-exactness
+//!
+//! Fixture buckets always run `batch_size = 1` ([`FixtureSpec`] docs):
+//! single-request flushes make every response a pure function of its
+//! own request, independent of co-batching, lane count, worker count
+//! and timing.  Record deliberately replays with a *different* client
+//! lane count than replay ([`RECORD_LANES`] vs [`REPLAY_LANES`]), so a
+//! green suite is itself evidence of composition independence.
+//!
+//! # Regenerability
+//!
+//! A fixture's requests are a pure function of its spec
+//! ([`TraceSpec::generate`]), so fixtures never store inputs and any
+//! fixture can be re-recorded from its header alone (`ct oracle bless`
+//! re-records the standard suite in place; CI bootstrap-records any
+//! missing fixture before replaying).  The one hand-auditable fixture,
+//! `identity-len1`, has closed-form expected outputs
+//! ([`identity_expected_frames`]) and ships checked in.
+//!
+//! # Perf gate
+//!
+//! [`perf`] compares fresh `BENCH_*.json` files against
+//! `bench-baselines/` and fails CI on a >15% rows/sec regression
+//! (tolerance from `oracle/tolerance-policy.json`, see [`policy`]).
+//!
+//! Operator guide: `docs/TESTING.md`.
+
+pub mod fixture;
+pub mod perf;
+pub mod policy;
+pub mod report;
+
+pub use fixture::{fnv1a64, frames_to_bytes, identity_expected_frames,
+                  pattern_value, Fixture, FixtureSpec, Manifest,
+                  MetricsSnapshot, RespMeta, TraceSpec, FORMAT_VERSION};
+pub use perf::{bench_doc, compare_records, run_perf_gate, self_check,
+               BenchGate, PerfGateResult, RowGate, RowStatus};
+pub use policy::TolerancePolicy;
+pub use report::{FixtureResult, FrameDiff, OracleReport};
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+use crate::attention::ShardEngine;
+use crate::coordinator::{replay_blocking, Bucket, GatewayOptions,
+                         ServingGateway};
+
+/// Client lanes used when recording a fixture…
+pub const RECORD_LANES: usize = 4;
+/// …and when replaying it.  Different on purpose: a green replay also
+/// proves the bits don't depend on how the trace was spread over
+/// concurrent clients.
+pub const REPLAY_LANES: usize = 3;
+
+// ---------------------------------------------------------------------------
+// canonical repo locations
+// ---------------------------------------------------------------------------
+
+/// `<repo>/oracle/fixtures` — fixture headers, frames and manifest.
+pub fn default_fixture_dir() -> PathBuf {
+    crate::config::find_repo_root().join("oracle").join("fixtures")
+}
+
+/// `<repo>/oracle/tolerance-policy.json`.
+pub fn default_policy_path() -> PathBuf {
+    crate::config::find_repo_root()
+        .join("oracle")
+        .join("tolerance-policy.json")
+}
+
+/// `<repo>/oracle-report.json` — next to the `BENCH_*.json` drops.
+pub fn default_report_path() -> PathBuf {
+    crate::config::find_repo_root().join("oracle-report.json")
+}
+
+/// `<repo>/bench-baselines` — blessed perf baselines.
+pub fn default_baseline_dir() -> PathBuf {
+    crate::config::find_repo_root().join("bench-baselines")
+}
+
+// ---------------------------------------------------------------------------
+// the standard suite
+// ---------------------------------------------------------------------------
+
+/// The checked-in fixture suite `ct oracle record`/`replay`/`bless`
+/// operate on by default.  Kept deliberately small — six fixtures
+/// covering the serving matrix: identity (hand-auditable), ragged
+/// masked, ragged *unmasked* (static-shape semantics: padded keys
+/// participate, still deterministic at batch 1), a clustered kernel,
+/// decode sessions (masking required there), and sharded fan-out with
+/// a mixed trace.
+pub fn standard_suite() -> Vec<FixtureSpec> {
+    vec![
+        FixtureSpec {
+            name: "identity-len1".into(),
+            kernel: "full".into(),
+            heads: 2,
+            dk: 4,
+            dv: 4,
+            buckets: vec![8],
+            seed: 7,
+            masked: true,
+            shards: 0,
+            trace: TraceSpec::IdentityLen1 { count: 6 },
+        },
+        FixtureSpec {
+            name: "ragged-full-masked".into(),
+            kernel: "full".into(),
+            heads: 2,
+            dk: 8,
+            dv: 8,
+            buckets: vec![8, 16, 32, 64],
+            seed: 11,
+            masked: true,
+            shards: 0,
+            trace: TraceSpec::Ragged {
+                min_len: 3, max_len: 48, count: 24,
+            },
+        },
+        FixtureSpec {
+            name: "ragged-full-unmasked".into(),
+            kernel: "full".into(),
+            heads: 2,
+            dk: 8,
+            dv: 8,
+            buckets: vec![8, 16, 32, 64],
+            seed: 19,
+            masked: false,
+            shards: 0,
+            trace: TraceSpec::Ragged {
+                min_len: 3, max_len: 48, count: 12,
+            },
+        },
+        FixtureSpec {
+            name: "clustered-masked".into(),
+            kernel: "i-clustered-4".into(),
+            heads: 2,
+            dk: 8,
+            dv: 8,
+            buckets: vec![8, 16, 32, 64],
+            seed: 13,
+            masked: true,
+            shards: 0,
+            trace: TraceSpec::Ragged {
+                min_len: 8, max_len: 64, count: 16,
+            },
+        },
+        FixtureSpec {
+            name: "decode-sessions".into(),
+            kernel: "full".into(),
+            heads: 2,
+            dk: 8,
+            dv: 8,
+            buckets: vec![8, 16, 32],
+            seed: 17,
+            masked: true,
+            shards: 0,
+            trace: TraceSpec::Decode {
+                prefill: 6, steps: 3, step_len: 2, sessions: 3,
+            },
+        },
+        FixtureSpec {
+            name: "mixed-sharded".into(),
+            kernel: "full".into(),
+            heads: 2,
+            dk: 8,
+            dv: 8,
+            buckets: vec![8, 16, 32],
+            seed: 23,
+            masked: true,
+            shards: 2,
+            trace: TraceSpec::Mixed {
+                min_len: 3, max_len: 24, count: 10,
+                prefill: 5, steps: 2, step_len: 2, sessions: 2,
+            },
+        },
+    ]
+}
+
+// ---------------------------------------------------------------------------
+// driving the gateway
+// ---------------------------------------------------------------------------
+
+/// A running local shard worker (the hermetic stand-in for a remote
+/// `ct shard-worker` host).  Dropping without [`shutdown`] leaks the
+/// accept thread for the process lifetime — call shutdown.
+///
+/// [`shutdown`]: ShardWorkerGuard::shutdown
+pub struct ShardWorkerGuard {
+    stop: Arc<AtomicBool>,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ShardWorkerGuard {
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Spawn `n` single-threaded shard workers on ephemeral localhost
+/// ports; returns their addresses (gateway `shards` option) and the
+/// guards to shut them down.
+pub fn spawn_local_shard_workers(n: usize)
+    -> Result<(Vec<String>, Vec<ShardWorkerGuard>)> {
+    let mut addrs = Vec::with_capacity(n);
+    let mut guards = Vec::with_capacity(n);
+    for _ in 0..n {
+        let engine = Arc::new(ShardEngine::new(1));
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let (tx, rx) = mpsc::channel();
+        let thread = std::thread::spawn(move || {
+            let _ = crate::server::serve_shard_worker(
+                engine, "127.0.0.1:0", stop2,
+                move |a| { let _ = tx.send(a); });
+        });
+        let addr = rx
+            .recv_timeout(Duration::from_secs(30))
+            .map_err(|_| anyhow!("oracle shard worker failed to bind"))?;
+        addrs.push(addr.to_string());
+        guards.push(ShardWorkerGuard { stop, thread: Some(thread) });
+    }
+    Ok((addrs, guards))
+}
+
+/// What one pass of a spec through a live gateway produced.
+#[derive(Debug, Clone)]
+pub struct RecordedRun {
+    pub responses: Vec<RespMeta>,
+    pub metrics: MetricsSnapshot,
+    pub frames: Vec<f32>,
+}
+
+/// Build the gateway a spec describes, replay its trace over `lanes`
+/// blocking clients, and capture responses + metrics.  Pure record/
+/// replay workhorse: record calls it with [`RECORD_LANES`], replay
+/// with [`REPLAY_LANES`].  Sharded specs spawn their own local workers
+/// for the duration of the run.
+pub fn run_spec(spec: &FixtureSpec, lanes: usize) -> Result<RecordedRun> {
+    let shape = spec.shape();
+    let trace = spec.trace.generate(shape, spec.seed);
+    let (shard_addrs, guards) = if spec.shards > 0 {
+        spawn_local_shard_workers(spec.shards)?
+    } else {
+        (Vec::new(), Vec::new())
+    };
+    let buckets = spec.buckets.iter()
+        // batch_size pinned to 1 — see FixtureSpec docs
+        .map(|&n| Bucket::native(spec.kernel.as_str(), n, 1))
+        .collect();
+    let opts = GatewayOptions {
+        max_wait: Duration::from_millis(1),
+        seed: spec.seed,
+        mask: spec.masked,
+        shards: shard_addrs,
+        ..GatewayOptions::default()
+    };
+    let gw = ServingGateway::start(shape, buckets, opts)?;
+    let responses = replay_blocking(&gw, trace, lanes);
+    let metrics = MetricsSnapshot::capture(&gw);
+    gw.shutdown();
+    for g in guards {
+        g.shutdown();
+    }
+    let mut frames = Vec::new();
+    let responses = responses
+        .iter()
+        .map(|r| {
+            frames.extend_from_slice(&r.out);
+            RespMeta::from_response(r)
+        })
+        .collect();
+    Ok(RecordedRun { responses, metrics, frames })
+}
+
+// ---------------------------------------------------------------------------
+// record
+// ---------------------------------------------------------------------------
+
+/// Record one spec into an in-memory [`Fixture`].
+pub fn record_spec(spec: &FixtureSpec) -> Result<Fixture> {
+    let run = run_spec(spec, RECORD_LANES)?;
+    Ok(Fixture {
+        spec: spec.clone(),
+        responses: run.responses,
+        metrics: run.metrics,
+        frames: run.frames,
+    })
+}
+
+/// Record `specs` into `dir`, updating the manifest.  Existing
+/// fixtures are kept unless `force` (that asymmetry is the whole
+/// `record --missing-only` vs `bless` distinction).  Returns the names
+/// actually (re-)recorded.
+pub fn record_suite(dir: &std::path::Path, specs: &[FixtureSpec],
+                    force: bool) -> Result<Vec<String>> {
+    let mut manifest = Manifest::load(dir)?;
+    let mut recorded = Vec::new();
+    for spec in specs {
+        if !force && Fixture::exists(dir, &spec.name) {
+            manifest.add(&spec.name);
+            continue;
+        }
+        record_spec(spec)?.save(dir)?;
+        manifest.add(&spec.name);
+        recorded.push(spec.name.clone());
+    }
+    manifest.save(dir)?;
+    Ok(recorded)
+}
+
+// ---------------------------------------------------------------------------
+// replay + diff
+// ---------------------------------------------------------------------------
+
+/// Flat frame offset → (response index, element offset) under the
+/// recording's per-response element counts.
+fn locate(fx: &Fixture, flat: usize) -> (usize, usize) {
+    let mut off = 0;
+    for (i, r) in fx.responses.iter().enumerate() {
+        if flat < off + r.elems {
+            return (i, flat - off);
+        }
+        off += r.elems;
+    }
+    (fx.responses.len(), 0)
+}
+
+/// Diff a fresh run against a recording under `policy`.
+fn diff_run(fx: &Fixture, run: &RecordedRun, policy: &TolerancePolicy)
+            -> FixtureResult {
+    let mut failures = Vec::new();
+    if run.responses.len() != fx.responses.len() {
+        failures.push(format!(
+            "response count {} != recorded {}",
+            run.responses.len(), fx.responses.len()));
+    }
+    let n = run.responses.len().min(fx.responses.len());
+    let mut frames_comparable = run.frames.len() == fx.frames.len();
+    for i in 0..n {
+        let (got, want) = (&run.responses[i], &fx.responses[i]);
+        if got.len != want.len
+            || got.span_start != want.span_start
+            || got.session != want.session
+        {
+            failures.push(format!(
+                "response {i}: identity mismatch — got len {} span {} \
+                 session {:?}, recorded len {} span {} session {:?}",
+                got.len, got.span_start, got.session,
+                want.len, want.span_start, want.session));
+        }
+        if policy.require_bucket_match && got.bucket_n != want.bucket_n {
+            failures.push(format!(
+                "response {i}: served by bucket {} instead of recorded \
+                 bucket {}", got.bucket_n, want.bucket_n));
+        }
+        if policy.require_cache_hit_match
+            && got.cache_hit != want.cache_hit
+        {
+            failures.push(format!(
+                "response {i}: cache_hit {:?} != recorded {:?}",
+                got.cache_hit, want.cache_hit));
+        }
+        if got.elems != want.elems {
+            frames_comparable = false;
+            failures.push(format!(
+                "response {i}: {} output elems != recorded {} — frame \
+                 streams are misaligned, skipping the bit diff",
+                got.elems, want.elems));
+        }
+    }
+    let mut mismatched = 0usize;
+    let mut first_diff = None;
+    if frames_comparable {
+        for (j, (g, w)) in
+            run.frames.iter().zip(&fx.frames).enumerate()
+        {
+            if g.to_bits() != w.to_bits() {
+                mismatched += 1;
+                if first_diff.is_none() {
+                    let (ri, ei) = locate(fx, j);
+                    first_diff = Some(FrameDiff {
+                        response: ri,
+                        elem: ei,
+                        got_bits: g.to_bits(),
+                        want_bits: w.to_bits(),
+                    });
+                }
+            }
+        }
+        if mismatched > 0 {
+            failures.push(format!(
+                "{mismatched} frame element(s) differ — outputs must \
+                 be bit-exact"));
+        }
+    }
+    if policy.require_counter_match && run.metrics != fx.metrics {
+        failures.push(format!(
+            "metric counters drifted — got {:?}, recorded {:?}",
+            run.metrics, fx.metrics));
+    }
+    FixtureResult {
+        name: fx.spec.name.clone(),
+        passed: failures.is_empty(),
+        checked_responses: n,
+        mismatched_elems: mismatched,
+        first_diff,
+        failures,
+        notes: Vec::new(),
+    }
+}
+
+/// Re-run a fixture's spec on the current build and diff.  `perturb`
+/// flips the low bit of the first fresh frame element before diffing —
+/// the CI self-test that proves a changed bit actually turns the
+/// report red.
+pub fn replay_fixture(fx: &Fixture, policy: &TolerancePolicy,
+                      perturb: bool) -> FixtureResult {
+    match run_spec(&fx.spec, REPLAY_LANES) {
+        Err(e) => FixtureResult::errored(&fx.spec.name, &e),
+        Ok(mut run) => {
+            let mut notes = Vec::new();
+            if perturb {
+                if let Some(x) = run.frames.first_mut() {
+                    *x = f32::from_bits(x.to_bits() ^ 1);
+                    notes.push("injected perturbation: flipped the low \
+                                bit of frame element 0"
+                        .to_string());
+                }
+            }
+            let mut res = diff_run(fx, &run, policy);
+            res.notes.extend(notes);
+            res
+        }
+    }
+}
+
+/// Replay every named fixture in `dir`; `perturb` poisons the first
+/// one.  Load errors become failing results, never panics — CI wants a
+/// red report, not a stack trace.
+pub fn replay_suite(dir: &std::path::Path, names: &[String],
+                    policy: &TolerancePolicy, perturb: bool)
+                    -> OracleReport {
+    let mut fixtures = Vec::new();
+    for (i, name) in names.iter().enumerate() {
+        let res = match Fixture::load(dir, name) {
+            Err(e) => FixtureResult::errored(name, &e),
+            Ok(fx) => replay_fixture(&fx, policy, perturb && i == 0),
+        };
+        fixtures.push(res);
+    }
+    OracleReport { fixtures, perf: None }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_spec(name: &str) -> FixtureSpec {
+        FixtureSpec {
+            name: name.into(),
+            kernel: "full".into(),
+            heads: 2,
+            dk: 4,
+            dv: 4,
+            buckets: vec![8, 16],
+            seed: 41,
+            masked: true,
+            shards: 0,
+            trace: TraceSpec::Mixed {
+                min_len: 2, max_len: 12, count: 6,
+                prefill: 4, steps: 2, step_len: 1, sessions: 2,
+            },
+        }
+    }
+
+    #[test]
+    fn record_then_replay_is_bit_exact_across_lane_counts() {
+        let fx = record_spec(&small_spec("unit-mixed")).unwrap();
+        assert!(!fx.frames.is_empty());
+        // decode sessions present and pinned
+        assert!(fx.responses.iter().any(|r| r.session.is_some()));
+        assert!(fx.responses.iter().any(|r| r.cache_hit == Some(true)));
+        let res =
+            replay_fixture(&fx, &TolerancePolicy::default(), false);
+        assert!(res.passed, "failures: {:?}", res.failures);
+        assert_eq!(res.checked_responses, fx.responses.len());
+        assert_eq!(res.mismatched_elems, 0);
+    }
+
+    #[test]
+    fn perturbation_turns_the_diff_red_with_the_exact_bit() {
+        let fx = record_spec(&small_spec("unit-perturb")).unwrap();
+        let res = replay_fixture(&fx, &TolerancePolicy::default(), true);
+        assert!(!res.passed);
+        assert_eq!(res.mismatched_elems, 1);
+        let diff = res.first_diff.expect("diff located");
+        assert_eq!((diff.response, diff.elem), (0, 0));
+        assert_eq!(diff.got_bits ^ diff.want_bits, 1);
+        assert!(res.notes.iter().any(|n| n.contains("perturbation")));
+    }
+
+    #[test]
+    fn identity_fixture_matches_the_closed_form() {
+        let specs = standard_suite();
+        let identity = specs.iter()
+            .find(|s| s.name == "identity-len1")
+            .unwrap();
+        let fx = record_spec(identity).unwrap();
+        let expected = identity_expected_frames(
+            identity.shape(),
+            match identity.trace {
+                TraceSpec::IdentityLen1 { count } => count,
+                _ => unreachable!(),
+            });
+        assert_eq!(fx.frames.len(), expected.len());
+        for (g, w) in fx.frames.iter().zip(&expected) {
+            assert_eq!(g.to_bits(), w.to_bits());
+        }
+        // all six land in the only bucket, no sessions, no cache
+        assert_eq!(fx.metrics.completed, vec![6]);
+        assert_eq!(fx.metrics.cache_hits, 0);
+        assert_eq!(fx.metrics.cache_misses, 0);
+    }
+
+    #[test]
+    fn suite_round_trips_through_disk() {
+        let dir = std::env::temp_dir()
+            .join(format!("ct-oracle-suite-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let specs = vec![small_spec("unit-disk")];
+        let recorded = record_suite(&dir, &specs, false).unwrap();
+        assert_eq!(recorded, vec!["unit-disk"]);
+        // second record without force is a no-op
+        assert!(record_suite(&dir, &specs, false).unwrap().is_empty());
+        let names = Manifest::load(&dir).unwrap().fixtures;
+        assert_eq!(names, vec!["unit-disk"]);
+        let report = replay_suite(&dir, &names,
+                                  &TolerancePolicy::default(), false);
+        assert!(report.passed(),
+                "failures: {:?}", report.fixtures[0].failures);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,429 @@
+//! Perf-regression gate: fresh `BENCH_*.json` files vs checked-in
+//! baselines.
+//!
+//! The bench harness (`cargo bench`, or `CT_SMOKE=1` in CI) drops one
+//! `BENCH_<name>.json` per suite at the repo root.  This gate compares
+//! each of them against `bench-baselines/BENCH_<name>.json` and fails
+//! when any row's `rows_per_sec` falls below
+//! `baseline · (1 − max_bench_regression)` (policy default: 15%).
+//!
+//! Matching is by row name.  The failure modes are asymmetric on
+//! purpose:
+//!
+//! - A baseline row **missing from the fresh run** fails the gate —
+//!   silently losing bench coverage is exactly the regression class a
+//!   gate exists to catch.
+//! - A fresh row with no baseline passes with a note — new benches
+//!   must not need a baseline to land, they get one at the next bless.
+//! - A baseline *file* with no fresh counterpart is a warn-pass note —
+//!   CI shards may run bench suites selectively.
+//! - A baseline file carrying `"bootstrap": true` is skipped: it marks
+//!   a placeholder checked in before any real numbers existed (this
+//!   repo's builds happen on the CI host, so first-run baselines are
+//!   recorded there and blessed in a follow-up).  `ct oracle bless
+//!   --bench` rewrites baselines from fresh files without the flag.
+//!
+//! Latency percentiles are reported but never gated — `rows_per_sec`
+//! over a fixed workload is the one number that is comparable across
+//! runs on the same host class.
+//!
+//! `self_check()` proves the red path end to end on every CI run: it
+//! fabricates a baseline and a 25%-slower fresh copy in a temp dir and
+//! asserts the gate fails, so a broken gate cannot silently pass real
+//! regressions.
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::benchlib::{parse_bench_doc, BenchRecord};
+use crate::jsonio::{self, obj, Value};
+
+/// Verdict for one baseline/fresh row pair.
+#[derive(Debug, Clone, PartialEq)]
+pub enum RowStatus {
+    /// Within tolerance (ratio ≥ 1 − max_regression).
+    Pass,
+    /// Regressed beyond tolerance, or lost from the fresh run.
+    Fail,
+    /// Fresh row with no baseline — passes, blessed later.
+    New,
+}
+
+#[derive(Debug, Clone)]
+pub struct RowGate {
+    pub name: String,
+    pub baseline_rps: f64,
+    pub fresh_rps: f64,
+    pub status: RowStatus,
+}
+
+impl RowGate {
+    fn to_value(&self) -> Value {
+        let ratio = if self.baseline_rps > 0.0 {
+            self.fresh_rps / self.baseline_rps
+        } else {
+            0.0
+        };
+        obj(vec![
+            ("name", self.name.as_str().into()),
+            ("status", match self.status {
+                RowStatus::Pass => "pass",
+                RowStatus::Fail => "fail",
+                RowStatus::New => "new",
+            }.into()),
+            ("baseline_rows_per_sec", self.baseline_rps.into()),
+            ("fresh_rows_per_sec", self.fresh_rps.into()),
+            ("ratio", ratio.into()),
+        ])
+    }
+}
+
+/// Verdict for one `BENCH_*.json` file.
+#[derive(Debug, Clone)]
+pub struct BenchGate {
+    /// File name, e.g. `BENCH_gateway.json`.
+    pub file: String,
+    /// `"pass"`, `"fail"`, or one of the `"skipped-*"` warn-pass
+    /// states (see module docs).
+    pub status: String,
+    pub rows: Vec<RowGate>,
+    pub notes: Vec<String>,
+}
+
+impl BenchGate {
+    fn skipped(file: &str, status: &str, note: String) -> Self {
+        Self { file: file.to_string(), status: status.to_string(),
+               rows: Vec::new(), notes: vec![note] }
+    }
+
+    pub fn failed(&self) -> bool {
+        self.status == "fail"
+    }
+
+    fn to_value(&self) -> Value {
+        obj(vec![
+            ("file", self.file.as_str().into()),
+            ("status", self.status.as_str().into()),
+            ("rows", Value::Arr(
+                self.rows.iter().map(RowGate::to_value).collect())),
+            ("notes", Value::Arr(
+                self.notes.iter().map(|s| s.as_str().into())
+                    .collect())),
+        ])
+    }
+}
+
+/// The whole gate run, mergeable into `oracle-report.json`.
+#[derive(Debug, Clone)]
+pub struct PerfGateResult {
+    pub max_regression: f64,
+    pub benches: Vec<BenchGate>,
+}
+
+impl PerfGateResult {
+    pub fn passed(&self) -> bool {
+        !self.benches.iter().any(BenchGate::failed)
+    }
+
+    pub fn to_value(&self) -> Value {
+        obj(vec![
+            ("status",
+             if self.passed() { "pass" } else { "fail" }.into()),
+            ("max_regression", self.max_regression.into()),
+            ("benches", Value::Arr(
+                self.benches.iter().map(BenchGate::to_value)
+                    .collect())),
+        ])
+    }
+}
+
+/// Row-by-row comparison of one bench suite.  Baseline rows with
+/// non-positive `rows_per_sec` are skipped (a zeroed row carries no
+/// signal).
+pub fn compare_records(baseline: &[BenchRecord], fresh: &[BenchRecord],
+                       max_regression: f64) -> Vec<RowGate> {
+    let mut rows = Vec::new();
+    for b in baseline {
+        if b.rows_per_sec <= 0.0 {
+            continue;
+        }
+        match fresh.iter().find(|f| f.name == b.name) {
+            None => rows.push(RowGate {
+                name: b.name.clone(),
+                baseline_rps: b.rows_per_sec,
+                fresh_rps: 0.0,
+                status: RowStatus::Fail,
+            }),
+            Some(f) => {
+                let floor = b.rows_per_sec * (1.0 - max_regression);
+                rows.push(RowGate {
+                    name: b.name.clone(),
+                    baseline_rps: b.rows_per_sec,
+                    fresh_rps: f.rows_per_sec,
+                    status: if f.rows_per_sec >= floor {
+                        RowStatus::Pass
+                    } else {
+                        RowStatus::Fail
+                    },
+                });
+            }
+        }
+    }
+    for f in fresh {
+        if !baseline.iter().any(|b| b.name == f.name) {
+            rows.push(RowGate {
+                name: f.name.clone(),
+                baseline_rps: 0.0,
+                fresh_rps: f.rows_per_sec,
+                status: RowStatus::New,
+            });
+        }
+    }
+    rows
+}
+
+fn gate_one(file: &str, baseline_doc: &Value, fresh_doc: &Value,
+            max_regression: f64) -> Result<BenchGate> {
+    if baseline_doc.get("bootstrap").as_bool() == Some(true) {
+        return Ok(BenchGate::skipped(
+            file, "skipped-bootstrap",
+            "baseline is a bootstrap placeholder — run `ct oracle \
+             bless --bench` on a healthy build to pin real numbers"
+                .into()));
+    }
+    let (_, baseline) = parse_bench_doc(baseline_doc)?;
+    let (_, fresh) = parse_bench_doc(fresh_doc)?;
+    let rows = compare_records(&baseline, &fresh, max_regression);
+    let mut notes = Vec::new();
+    for r in &rows {
+        match r.status {
+            RowStatus::Fail if r.fresh_rps == 0.0 => notes.push(format!(
+                "row {:?} present in baseline but missing from the \
+                 fresh run (lost bench coverage)", r.name)),
+            RowStatus::Fail => notes.push(format!(
+                "row {:?} regressed: {:.1} → {:.1} rows/s ({:.1}% \
+                 below baseline, tolerance {:.0}%)",
+                r.name, r.baseline_rps, r.fresh_rps,
+                (1.0 - r.fresh_rps / r.baseline_rps) * 100.0,
+                max_regression * 100.0)),
+            RowStatus::New => notes.push(format!(
+                "row {:?} is new (no baseline yet)", r.name)),
+            RowStatus::Pass => {}
+        }
+    }
+    let failed = rows.iter().any(|r| r.status == RowStatus::Fail);
+    Ok(BenchGate {
+        file: file.to_string(),
+        status: if failed { "fail" } else { "pass" }.to_string(),
+        rows,
+        notes,
+    })
+}
+
+/// Run the gate: every `BENCH_*.json` directly under `fresh_dir`
+/// against its same-named file under `baseline_dir`.  Never errors on
+/// missing files (those are warn-pass states); errors only on
+/// unreadable/unparseable JSON.
+pub fn run_perf_gate(fresh_dir: &Path, baseline_dir: &Path,
+                     max_regression: f64) -> Result<PerfGateResult> {
+    let list = |dir: &Path| -> Result<Vec<String>> {
+        let mut names = Vec::new();
+        if dir.is_dir() {
+            for entry in std::fs::read_dir(dir)? {
+                let name = entry?.file_name();
+                let name = name.to_string_lossy().to_string();
+                if name.starts_with("BENCH_") && name.ends_with(".json")
+                {
+                    names.push(name);
+                }
+            }
+        }
+        names.sort();
+        Ok(names)
+    };
+    let read = |path: &Path| -> Result<Value> {
+        jsonio::parse(&std::fs::read_to_string(path)
+                .map_err(|e| anyhow!("read {}: {e}", path.display()))?)
+            .map_err(|e| anyhow!("parse {}: {e}", path.display()))
+    };
+    let fresh_files = list(fresh_dir)?;
+    let baseline_files = list(baseline_dir)?;
+    let mut benches = Vec::new();
+    for file in &fresh_files {
+        let bp = baseline_dir.join(file);
+        if !bp.exists() {
+            benches.push(BenchGate::skipped(
+                file, "skipped-no-baseline",
+                format!("no baseline {} — gate passes; bless one when \
+                         the numbers are trusted", bp.display())));
+            continue;
+        }
+        benches.push(gate_one(file, &read(&bp)?,
+                              &read(&fresh_dir.join(file))?,
+                              max_regression)?);
+    }
+    for file in &baseline_files {
+        if !fresh_files.contains(file) {
+            benches.push(BenchGate::skipped(
+                file, "skipped-no-fresh",
+                "baseline exists but this run produced no fresh file \
+                 (bench suite not run here)".into()));
+        }
+    }
+    Ok(PerfGateResult { max_regression, benches })
+}
+
+/// Build a minimal bench document in the `write_bench_json` schema —
+/// used by `self_check` and tests to fabricate suites without timing
+/// anything.
+pub fn bench_doc(bench: &str, rows: &[(&str, f64)]) -> Value {
+    obj(vec![
+        ("bench", bench.into()),
+        ("peak_rss_bytes", 0.0.into()),
+        ("records", Value::Arr(rows.iter().map(|&(name, rps)| obj(vec![
+            ("name", name.into()),
+            ("rows_per_sec", rps.into()),
+            ("mean_us", 1.0.into()),
+            ("p50_us", 1.0.into()),
+            ("p99_us", 2.0.into()),
+            ("iters", 10usize.into()),
+        ])).collect())),
+    ])
+}
+
+/// Prove the gate's red path: fabricate a baseline and a fresh run
+/// regressed past tolerance, assert the gate fails, then assert an
+/// identical fresh run passes.  Errors if either direction misbehaves —
+/// CI runs this before trusting a green gate.
+pub fn self_check(max_regression: f64) -> Result<()> {
+    let root = std::env::temp_dir().join(format!(
+        "ct-oracle-perf-selfcheck-{}", std::process::id()));
+    let fresh_dir = root.join("fresh");
+    let base_dir = root.join("baselines");
+    let _ = std::fs::remove_dir_all(&root);
+    std::fs::create_dir_all(&fresh_dir)?;
+    std::fs::create_dir_all(&base_dir)?;
+    let write = |dir: &Path, rows: &[(&str, f64)]| -> Result<()> {
+        std::fs::write(dir.join("BENCH_selfcheck.json"),
+                       jsonio::to_string_pretty(
+                           &bench_doc("selfcheck", rows)))?;
+        Ok(())
+    };
+    let baseline = [("alpha", 1000.0), ("beta", 2000.0)];
+    write(&base_dir, &baseline)?;
+    // regress beta past the tolerance band
+    let slow = [("alpha", 1000.0),
+                ("beta", 2000.0 * (1.0 - max_regression) * 0.9)];
+    write(&fresh_dir, &slow)?;
+    let gate = run_perf_gate(&fresh_dir, &base_dir, max_regression)?;
+    if gate.passed() {
+        bail!("perf-gate self-check: a regression past the {:.0}% \
+               tolerance passed — the gate is broken",
+              max_regression * 100.0);
+    }
+    write(&fresh_dir, &baseline)?;
+    let gate = run_perf_gate(&fresh_dir, &base_dir, max_regression)?;
+    if !gate.passed() {
+        bail!("perf-gate self-check: identical numbers failed the gate");
+    }
+    let _ = std::fs::remove_dir_all(&root);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(name: &str, rps: f64) -> BenchRecord {
+        BenchRecord {
+            name: name.into(),
+            rows_per_sec: rps,
+            mean_us: 1.0,
+            p50_us: 1.0,
+            p99_us: 2.0,
+            iters: 10,
+            extra: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn rows_within_band_pass_and_regressions_fail() {
+        let baseline = [rec("a", 1000.0), rec("b", 500.0)];
+        // a: −10% (inside 15% band), b: −20% (outside)
+        let fresh = [rec("a", 900.0), rec("b", 400.0)];
+        let rows = compare_records(&baseline, &fresh, 0.15);
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].status, RowStatus::Pass);
+        assert_eq!(rows[1].status, RowStatus::Fail);
+    }
+
+    #[test]
+    fn lost_rows_fail_and_new_rows_pass() {
+        let baseline = [rec("kept", 100.0), rec("lost", 100.0),
+                        rec("zeroed", 0.0)];
+        let fresh = [rec("kept", 100.0), rec("brand-new", 5.0)];
+        let rows = compare_records(&baseline, &fresh, 0.15);
+        let by_name = |n: &str| {
+            rows.iter().find(|r| r.name == n).unwrap().status.clone()
+        };
+        assert_eq!(by_name("kept"), RowStatus::Pass);
+        assert_eq!(by_name("lost"), RowStatus::Fail);
+        assert_eq!(by_name("brand-new"), RowStatus::New);
+        // zero-rps baseline rows carry no signal and are dropped
+        assert!(!rows.iter().any(|r| r.name == "zeroed"));
+    }
+
+    #[test]
+    fn faster_is_always_fine() {
+        let rows = compare_records(&[rec("a", 100.0)],
+                                   &[rec("a", 10_000.0)], 0.15);
+        assert_eq!(rows[0].status, RowStatus::Pass);
+    }
+
+    #[test]
+    fn bootstrap_baselines_are_skipped_not_gated() {
+        let mut doc = bench_doc("x", &[("a", 1.0)]);
+        doc.set("bootstrap", true.into());
+        let fresh = bench_doc("x", &[("a", 0.001)]);
+        let gate = gate_one("BENCH_x.json", &doc, &fresh, 0.15).unwrap();
+        assert_eq!(gate.status, "skipped-bootstrap");
+        assert!(!gate.failed());
+    }
+
+    #[test]
+    fn self_check_proves_the_red_path() {
+        self_check(0.15).unwrap();
+    }
+
+    #[test]
+    fn gate_over_directories_handles_all_skip_states() {
+        let root = std::env::temp_dir().join(format!(
+            "ct-oracle-perf-dirs-{}", std::process::id()));
+        let fresh = root.join("fresh");
+        let base = root.join("base");
+        let _ = std::fs::remove_dir_all(&root);
+        std::fs::create_dir_all(&fresh).unwrap();
+        std::fs::create_dir_all(&base).unwrap();
+        // fresh-only file → skipped-no-baseline
+        std::fs::write(fresh.join("BENCH_new.json"),
+                       jsonio::to_string(
+                           &bench_doc("new", &[("r", 1.0)]))).unwrap();
+        // baseline-only file → skipped-no-fresh
+        std::fs::write(base.join("BENCH_old.json"),
+                       jsonio::to_string(
+                           &bench_doc("old", &[("r", 1.0)]))).unwrap();
+        // non-bench files are ignored
+        std::fs::write(fresh.join("notes.txt"), "x").unwrap();
+        let gate = run_perf_gate(&fresh, &base, 0.15).unwrap();
+        assert!(gate.passed());
+        let statuses: Vec<&str> =
+            gate.benches.iter().map(|b| b.status.as_str()).collect();
+        assert_eq!(statuses,
+                   vec!["skipped-no-baseline", "skipped-no-fresh"]);
+        // serialized verdict is stable and carries the verdict
+        let v = gate.to_value();
+        assert_eq!(v.get("status").as_str(), Some("pass"));
+        let _ = std::fs::remove_dir_all(&root);
+    }
+}

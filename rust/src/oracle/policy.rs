@@ -1,0 +1,180 @@
+//! Tolerance policy: what the replay diff and the perf gate are
+//! allowed to forgive.
+//!
+//! The policy lives in a checked-in file (`oracle/tolerance-policy.json`
+//! at the repo root) so loosening a gate is a reviewed diff, not a CI
+//! knob.  The defaults are the strictest settings — everything the
+//! serving stack produces deterministically is held bit-exact /
+//! count-exact, and only wall-clock throughput gets a tolerance band:
+//!
+//! ```json
+//! {
+//!   "version": 1,
+//!   "output_bits": "exact",
+//!   "require_bucket_match": true,
+//!   "require_cache_hit_match": true,
+//!   "require_counter_match": true,
+//!   "max_bench_regression": 0.15
+//! }
+//! ```
+//!
+//! `output_bits` is declarative on purpose: `"exact"` is the only mode
+//! this build implements (the gateway's parity contract is bit-exact),
+//! but the field keeps the file forward-compatible with an approximate
+//! mode should a future kernel need ULP bands.  Unknown keys are
+//! rejected — a typoed knob must fail loudly, not silently gate
+//! nothing.
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::jsonio::{self, obj, Value};
+
+/// Parsed tolerance policy; see the module docs for field meaning.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TolerancePolicy {
+    /// Fail a fixture whose response lands in a different bucket.
+    pub require_bucket_match: bool,
+    /// Fail a fixture whose decode steps change cache-hit/miss flags.
+    pub require_cache_hit_match: bool,
+    /// Fail a fixture whose deterministic metric counters drift.
+    pub require_counter_match: bool,
+    /// Perf gate: fail when fresh rows/sec drops below
+    /// `baseline · (1 − max_bench_regression)`.
+    pub max_bench_regression: f64,
+}
+
+impl Default for TolerancePolicy {
+    fn default() -> Self {
+        Self {
+            require_bucket_match: true,
+            require_cache_hit_match: true,
+            require_counter_match: true,
+            max_bench_regression: 0.15,
+        }
+    }
+}
+
+impl TolerancePolicy {
+    /// Load the policy file; a missing file means the strict defaults.
+    pub fn load(path: &Path) -> Result<Self> {
+        if !path.exists() {
+            return Ok(Self::default());
+        }
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("read {}: {e}", path.display()))?;
+        let v = jsonio::parse(&text)
+            .map_err(|e| anyhow!("parse {}: {e}", path.display()))?;
+        Self::from_value(&v)
+            .map_err(|e| anyhow!("{}: {e}", path.display()))
+    }
+
+    pub fn from_value(v: &Value) -> Result<Self> {
+        let o = v.as_obj()
+            .ok_or_else(|| anyhow!("policy must be a JSON object"))?;
+        let mut policy = Self::default();
+        for (key, val) in o {
+            match key.as_str() {
+                "version" => {
+                    if val.as_usize() != Some(1) {
+                        bail!("unsupported policy version {val:?}");
+                    }
+                }
+                "output_bits" => {
+                    if val.as_str() != Some("exact") {
+                        bail!("output_bits {val:?} unsupported — this \
+                               build only implements \"exact\"");
+                    }
+                }
+                "require_bucket_match" => {
+                    policy.require_bucket_match = val.as_bool()
+                        .ok_or_else(|| anyhow!("require_bucket_match \
+                                                must be a bool"))?;
+                }
+                "require_cache_hit_match" => {
+                    policy.require_cache_hit_match = val.as_bool()
+                        .ok_or_else(|| anyhow!("require_cache_hit_match \
+                                                must be a bool"))?;
+                }
+                "require_counter_match" => {
+                    policy.require_counter_match = val.as_bool()
+                        .ok_or_else(|| anyhow!("require_counter_match \
+                                                must be a bool"))?;
+                }
+                "max_bench_regression" => {
+                    let f = val.as_f64().ok_or_else(
+                        || anyhow!("max_bench_regression must be a \
+                                    number"))?;
+                    if !(0.0..1.0).contains(&f) {
+                        bail!("max_bench_regression {f} outside [0, 1)");
+                    }
+                    policy.max_bench_regression = f;
+                }
+                other => bail!("unknown policy key {other:?} (typo? \
+                                known keys: version, output_bits, \
+                                require_bucket_match, \
+                                require_cache_hit_match, \
+                                require_counter_match, \
+                                max_bench_regression)"),
+            }
+        }
+        Ok(policy)
+    }
+
+    /// The canonical serialized form (what `docs/TESTING.md` tells
+    /// operators to check in).
+    pub fn to_value(&self) -> Value {
+        obj(vec![
+            ("version", 1usize.into()),
+            ("output_bits", "exact".into()),
+            ("require_bucket_match", self.require_bucket_match.into()),
+            ("require_cache_hit_match",
+             self.require_cache_hit_match.into()),
+            ("require_counter_match",
+             self.require_counter_match.into()),
+            ("max_bench_regression", self.max_bench_regression.into()),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn missing_file_means_strict_defaults() {
+        let p = std::env::temp_dir().join(format!(
+            "ct-oracle-no-such-policy-{}.json", std::process::id()));
+        let _ = std::fs::remove_file(&p);
+        assert_eq!(TolerancePolicy::load(&p).unwrap(),
+                   TolerancePolicy::default());
+    }
+
+    #[test]
+    fn canonical_form_roundtrips() {
+        let policy = TolerancePolicy {
+            max_bench_regression: 0.25,
+            require_cache_hit_match: false,
+            ..TolerancePolicy::default()
+        };
+        let v = jsonio::parse(&jsonio::to_string_pretty(
+            &policy.to_value())).unwrap();
+        assert_eq!(TolerancePolicy::from_value(&v).unwrap(), policy);
+    }
+
+    #[test]
+    fn unknown_keys_and_bad_modes_are_rejected() {
+        let v = jsonio::parse(
+            r#"{"version": 1, "max_bench_regresion": 0.2}"#).unwrap();
+        let err = TolerancePolicy::from_value(&v).unwrap_err();
+        assert!(err.to_string().contains("unknown policy key"),
+                "{err:#}");
+        let v = jsonio::parse(
+            r#"{"output_bits": "ulp-2"}"#).unwrap();
+        assert!(TolerancePolicy::from_value(&v).is_err());
+        let v = jsonio::parse(
+            r#"{"max_bench_regression": 1.5}"#).unwrap();
+        assert!(TolerancePolicy::from_value(&v).is_err());
+    }
+}

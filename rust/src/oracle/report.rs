@@ -1,0 +1,270 @@
+//! `oracle-report.json`: the machine-readable verdict of a replay (and
+//! optionally a perf-gate) run.
+//!
+//! The report is deliberately timestamp-free and field-order-stable
+//! (jsonio emits insertion order), so two green runs of the same build
+//! produce byte-identical reports — the report file itself can be
+//! diffed, archived, or checked into a triage issue without noise.
+//!
+//! Layout:
+//!
+//! ```json
+//! {
+//!   "format_version": 1,
+//!   "tool": "ct oracle",
+//!   "status": "green" | "red",
+//!   "fixtures": [
+//!     {
+//!       "name": "...", "status": "pass" | "fail",
+//!       "checked_responses": N, "mismatched_elems": N,
+//!       "first_diff": null | {"response": i, "elem": j,
+//!                             "got_bits": "hex", "want_bits": "hex"},
+//!       "failures": ["..."], "notes": ["..."]
+//!     }, ...
+//!   ],
+//!   "perf": { ... merged by `ct oracle perf-gate`, see perf.rs ... }
+//! }
+//! ```
+//!
+//! `status` is red iff any fixture failed **or** the merged perf gate
+//! failed.  Frame bits in `first_diff` are reported as the raw f32 bit
+//! patterns (hex) rather than decimals — the diff contract is
+//! bit-exactness, and `0x3f800001` vs `0x3f800000` says more than
+//! `1.0000001 != 1.0`.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+
+use crate::jsonio::{self, obj, Value};
+
+use super::fixture::FORMAT_VERSION;
+
+/// Location of the first differing frame element, by response index and
+/// element offset within that response's output block.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FrameDiff {
+    pub response: usize,
+    pub elem: usize,
+    pub got_bits: u32,
+    pub want_bits: u32,
+}
+
+impl FrameDiff {
+    fn to_value(&self) -> Value {
+        obj(vec![
+            ("response", self.response.into()),
+            ("elem", self.elem.into()),
+            ("got_bits", format!("{:08x}", self.got_bits).into()),
+            ("want_bits", format!("{:08x}", self.want_bits).into()),
+        ])
+    }
+}
+
+/// Verdict for one fixture.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FixtureResult {
+    pub name: String,
+    pub passed: bool,
+    /// Responses compared (0 when the fixture failed to load or run).
+    pub checked_responses: usize,
+    /// Total frame elements whose bits differed.
+    pub mismatched_elems: usize,
+    pub first_diff: Option<FrameDiff>,
+    /// Gating failures: meta mismatches, counter drift, run errors.
+    pub failures: Vec<String>,
+    /// Non-gating annotations (e.g. the injected-perturbation marker).
+    pub notes: Vec<String>,
+}
+
+impl FixtureResult {
+    /// A result that never ran (load/run error) — always a failure.
+    pub fn errored(name: &str, err: &anyhow::Error) -> Self {
+        Self {
+            name: name.to_string(),
+            passed: false,
+            checked_responses: 0,
+            mismatched_elems: 0,
+            first_diff: None,
+            failures: vec![format!("{err:#}")],
+            notes: Vec::new(),
+        }
+    }
+
+    fn to_value(&self) -> Value {
+        obj(vec![
+            ("name", self.name.as_str().into()),
+            ("status",
+             if self.passed { "pass" } else { "fail" }.into()),
+            ("checked_responses", self.checked_responses.into()),
+            ("mismatched_elems", self.mismatched_elems.into()),
+            ("first_diff", match &self.first_diff {
+                Some(d) => d.to_value(),
+                None => Value::Null,
+            }),
+            ("failures", Value::Arr(
+                self.failures.iter().map(|s| s.as_str().into())
+                    .collect())),
+            ("notes", Value::Arr(
+                self.notes.iter().map(|s| s.as_str().into())
+                    .collect())),
+        ])
+    }
+}
+
+/// The whole report: fixture verdicts plus an optional perf-gate
+/// section merged in by `ct oracle perf-gate`.
+#[derive(Debug, Clone, Default)]
+pub struct OracleReport {
+    pub fixtures: Vec<FixtureResult>,
+    /// Pre-built perf section (`PerfGateResult::to_value()`) and
+    /// whether it passed.
+    pub perf: Option<(Value, bool)>,
+}
+
+impl OracleReport {
+    pub fn passed(&self) -> bool {
+        self.fixtures.iter().all(|f| f.passed)
+            && self.perf.as_ref().map_or(true, |&(_, ok)| ok)
+    }
+
+    pub fn to_value(&self) -> Value {
+        let mut v = obj(vec![
+            ("format_version", (FORMAT_VERSION as usize).into()),
+            ("tool", "ct oracle".into()),
+            ("status",
+             if self.passed() { "green" } else { "red" }.into()),
+            ("fixtures", Value::Arr(
+                self.fixtures.iter().map(FixtureResult::to_value)
+                    .collect())),
+        ]);
+        if let Some((perf, _)) = &self.perf {
+            v.set("perf", perf.clone());
+        }
+        v
+    }
+
+    /// Write the report (pretty, stable) to `path`.
+    pub fn write(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, jsonio::to_string_pretty(&self.to_value()))
+            .map_err(|e| anyhow!("write {}: {e}", path.display()))
+    }
+
+    /// Merge a perf-gate verdict into an existing report file (or start
+    /// a fresh report when none exists), preserving the fixture section
+    /// verbatim, and recompute `status`.  Returns the merged report's
+    /// overall pass/fail.
+    pub fn merge_perf_into(path: &Path, perf: Value, perf_ok: bool)
+                           -> Result<bool> {
+        let mut v = if path.exists() {
+            jsonio::parse(&std::fs::read_to_string(path)?)
+                .map_err(|e| anyhow!("parse {}: {e}", path.display()))?
+        } else {
+            obj(vec![
+                ("format_version", (FORMAT_VERSION as usize).into()),
+                ("tool", "ct oracle".into()),
+                ("status", "green".into()),
+                ("fixtures", Value::Arr(Vec::new())),
+            ])
+        };
+        let fixtures_green = v.get("status").as_str() != Some("red");
+        let ok = fixtures_green && perf_ok;
+        v.set("status", if ok { "green" } else { "red" }.into());
+        v.set("perf", perf);
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, jsonio::to_string_pretty(&v))
+            .map_err(|e| anyhow!("write {}: {e}", path.display()))?;
+        Ok(ok)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pass(name: &str) -> FixtureResult {
+        FixtureResult {
+            name: name.into(),
+            passed: true,
+            checked_responses: 4,
+            mismatched_elems: 0,
+            first_diff: None,
+            failures: Vec::new(),
+            notes: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn status_reflects_fixtures_and_perf() {
+        let mut report = OracleReport {
+            fixtures: vec![pass("a"), pass("b")],
+            perf: None,
+        };
+        assert!(report.passed());
+        assert_eq!(report.to_value().get("status").as_str(),
+                   Some("green"));
+        report.fixtures[1].passed = false;
+        report.fixtures[1].failures.push("frame diff".into());
+        assert!(!report.passed());
+        assert_eq!(report.to_value().get("status").as_str(),
+                   Some("red"));
+        report.fixtures[1] = pass("b");
+        report.perf = Some((obj(vec![("status", "fail".into())]),
+                            false));
+        assert!(!report.passed());
+    }
+
+    #[test]
+    fn report_file_is_byte_stable_and_perf_merge_recomputes_status() {
+        let dir = std::env::temp_dir()
+            .join(format!("ct-oracle-report-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("oracle-report.json");
+        let report = OracleReport {
+            fixtures: vec![pass("a"),
+                           FixtureResult {
+                               passed: false,
+                               mismatched_elems: 1,
+                               first_diff: Some(FrameDiff {
+                                   response: 2,
+                                   elem: 7,
+                                   got_bits: 0x3f80_0001,
+                                   want_bits: 0x3f80_0000,
+                               }),
+                               failures: vec!["frame bits".into()],
+                               ..pass("b")
+                           }],
+            perf: None,
+        };
+        report.write(&path).unwrap();
+        let first = std::fs::read(&path).unwrap();
+        report.write(&path).unwrap();
+        assert_eq!(first, std::fs::read(&path).unwrap());
+        let v = jsonio::parse(
+            &String::from_utf8(first).unwrap()).unwrap();
+        assert_eq!(v.get("status").as_str(), Some("red"));
+        let diff = v.get("fixtures").as_arr().unwrap()[1]
+            .get("first_diff").clone();
+        assert_eq!(diff.get("got_bits").as_str(), Some("3f800001"));
+
+        // a green-fixture report + failing perf gate goes red on merge
+        let green = OracleReport { fixtures: vec![pass("a")],
+                                   perf: None };
+        green.write(&path).unwrap();
+        let ok = OracleReport::merge_perf_into(
+            &path, obj(vec![("status", "fail".into())]), false)
+            .unwrap();
+        assert!(!ok);
+        let v = jsonio::parse(
+            &std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(v.get("status").as_str(), Some("red"));
+        assert_eq!(v.get("perf").get("status").as_str(), Some("fail"));
+        assert_eq!(v.get("fixtures").as_arr().unwrap().len(), 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -47,6 +47,14 @@
 //!     sharded backend land on their consistent-hash owner every step
 //!     (sticky: later steps hit that shard's cache) and every step's
 //!     span rows equal the full unpadded recompute of the history.
+//! 11. **Lane-composition invariance** — `replay_blocking` over a live
+//!     gateway of batch-1 buckets returns byte-identical responses
+//!     (outputs *and* metadata) for any client lane count, RNG kernels
+//!     included: at batch size 1 every one-shot PRNG stream keys off
+//!     batch slot 0 and session streams are slot-independent, so how
+//!     requests get composed into batches can never move bits.  This
+//!     is the invariant the golden-trace oracle leans on — fixtures
+//!     recorded at one lane count must replay bit-exactly at another.
 
 use std::sync::Arc;
 use std::time::Duration;
@@ -58,8 +66,10 @@ use crate::attention::{clustered_attention_matrix,
                        KvCache, KvCacheOptions, NativeBackend, SeqOutcome,
                        SessionRef, ShardedBackend, Variant};
 use crate::clustering::{cluster_queries, Clustering};
-use crate::coordinator::{pad_batch, unpadded_reference, valid_rows, Bucket,
-                         GatewayOptions, GatewayShape, ServingGateway};
+use crate::coordinator::{pad_batch, replay_blocking, synthetic_decode_trace,
+                         synthetic_trace, unpadded_reference, valid_rows,
+                         Bucket, GatewayOptions, GatewayShape,
+                         ServingGateway};
 use crate::exec::{ExecCtx, WorkerPool};
 use crate::prng::{session_seed, slice_stream, Xoshiro256};
 use crate::proptest::forall;
@@ -882,6 +892,100 @@ fn prop_sharded_decode_sessions_match_the_full_recompute() {
                                  its owning shard", rep[0]));
                         }
                         span = len;
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// One lane-invariance case: gateway shape plus the mixed-trace knobs.
+type LaneCase = (GatewayShape, usize, usize, usize, usize, usize, u64);
+
+#[test]
+fn prop_gateway_replay_is_invariant_to_client_lane_count() {
+    // Property 11.  Batch-1 buckets are the precondition: at larger
+    // batch sizes the slot a one-shot request lands in feeds its PRNG
+    // stream, so batch composition legitimately moves bits for the
+    // randomised kernels.  The oracle harness records fixtures under
+    // exactly this configuration (and replays them at a *different*
+    // lane count), so this property is its soundness proof.
+    forall(
+        "replay_blocking(lanes ∈ {1,2,8}) byte-identical on batch-1 \
+         buckets, one-shots + decode sessions, RNG kernel included",
+        0x7A9E_5111,
+        3,
+        |rng| {
+            let shape =
+                GatewayShape { heads: 1 + rng.below(2), dk: 8, dv: 8 };
+            let oneshots = 4 + rng.below(4); // 4..=7
+            let prefill = 5 + rng.below(6); // 5..=10
+            let steps = 1 + rng.below(2); // 1..=2
+            let step_len = 1 + rng.below(3); // 1..=3, total ≤ 16
+            let sessions = 2 + rng.below(2); // 2..=3
+            (shape, oneshots, prefill, steps, step_len, sessions,
+             rng.next_u64())
+        },
+        |case: &LaneCase| {
+            let (shape, oneshots, prefill, steps, step_len, sessions,
+                 seed) = *case;
+            for kernel in ["i-clustered-4", "full"] {
+                // one mixed trace per kernel: one-shots and session
+                // steps interleaved (session step order is preserved,
+                // which replay_blocking's lane pinning relies on)
+                let a = synthetic_trace(shape, 2, 24, oneshots, seed);
+                let b = synthetic_decode_trace(
+                    shape, prefill, steps, step_len, sessions,
+                    seed ^ 0x9E37_79B9);
+                let mut trace = Vec::with_capacity(a.len() + b.len());
+                let (mut a, mut b) = (a.into_iter(), b.into_iter());
+                loop {
+                    match (a.next(), b.next()) {
+                        (None, None) => break,
+                        (x, y) => {
+                            trace.extend(x);
+                            trace.extend(y);
+                        }
+                    }
+                }
+                let mut runs = Vec::new();
+                for clients in [1usize, 2, 8] {
+                    let gw = ServingGateway::start(
+                        shape,
+                        vec![Bucket::native(kernel, 16, 1),
+                             Bucket::native(kernel, 32, 1)],
+                        GatewayOptions {
+                            max_wait: Duration::from_millis(1),
+                            seed,
+                            ..GatewayOptions::default()
+                        },
+                    )
+                    .map_err(|e| format!("gateway start: {e}"))?;
+                    let resp = replay_blocking(&gw, trace.clone(), clients);
+                    gw.shutdown();
+                    runs.push((clients, resp));
+                }
+                let (_, base) = &runs[0];
+                for (clients, resp) in &runs[1..] {
+                    for (i, (got, want)) in
+                        resp.iter().zip(base.iter()).enumerate()
+                    {
+                        if !same_bits(&got.out, &want.out) {
+                            return Err(format!(
+                                "{kernel}: item {i} output bits moved \
+                                 between 1 and {clients} lanes"));
+                        }
+                        let meta = |r: &crate::coordinator::GatewayResponse| {
+                            (r.len, r.span_start, r.session, r.cache_hit,
+                             r.bucket_seq_len, r.masked)
+                        };
+                        if meta(got) != meta(want) {
+                            return Err(format!(
+                                "{kernel}: item {i} metadata changed \
+                                 between 1 and {clients} lanes ({:?} vs \
+                                 {:?})", meta(got), meta(want)));
+                        }
                     }
                 }
             }

@@ -29,8 +29,10 @@
 //! full-recompute fallback; the bits are identical either way).  The
 //! session/span/cached fields are absent on one-shot replies.
 //! `{"id": 9, "session": 7, "end": true}` ends a session — replied
-//! with `{"id": 9, "session": 7, "ended": true}` — releasing its
-//! gateway state and cached panels.
+//! with `{"id": 9, "session": 7, "ended": true, "was_live": true}` —
+//! releasing its gateway state and cached panels.  `end` is
+//! idempotent: unknown sessions and duplicate ends succeed with
+//! `"was_live": false` and create no state.
 //!
 //! Either endpoint replies {"id": ..., "error": "..."} on a bad request
 //! (including backpressure surfaced from the engine; `id` is 0 when the
@@ -351,11 +353,15 @@ fn handle_attn_request(req: &Value, gateway: &ServingGateway)
     if req.get("end").as_bool() == Some(true) {
         let sid = session
             .ok_or_else(|| anyhow!("\"end\" needs a \"session\""))?;
-        gateway.end_session(sid);
+        let was_live = gateway.end_session(sid);
+        // `ended` is idempotent-success; `was_live` tells a client
+        // whether this end actually tore a session down (false for
+        // unknown sessions and duplicate ends — both harmless)
         return Ok(obj(vec![
             ("id", id.into()),
             ("session", (sid as i64).into()),
             ("ended", true.into()),
+            ("was_live", was_live.into()),
         ]));
     }
     let len = req

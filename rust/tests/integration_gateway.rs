@@ -254,6 +254,107 @@ fn tcp_gateway_serves_decode_sessions() {
 }
 
 #[test]
+fn session_lifecycle_edges_leave_no_leaked_state() {
+    // the long-running-server invariant, exercised over the TCP
+    // protocol with the gateway handle in hand: every lifecycle edge —
+    // unknown end, duplicate end, step-after-end, rejected-then-retried
+    // steps — must leave zero leaked table entries (live_sessions) and
+    // zero leaked cache rows (used_rows)
+    let gw = Arc::new(gateway());
+    let stop = Arc::new(AtomicBool::new(false));
+    let (addr_tx, addr_rx) = mpsc::channel();
+    let stop2 = stop.clone();
+    let gw2 = gw.clone();
+    let server_thread = std::thread::spawn(move || {
+        server::serve_gateway(gw2, "127.0.0.1:0", stop2, move |a| {
+            addr_tx.send(a).unwrap();
+        })
+        .unwrap();
+    });
+    let addr = addr_rx.recv_timeout(Duration::from_secs(30)).unwrap();
+    let mut client = server::Client::connect(&addr.to_string()).unwrap();
+
+    // `end` for a session that never existed: idempotent success,
+    // creates nothing
+    let r = client.end_session(1, 42).unwrap();
+    assert_eq!(r.get("ended").as_bool(), Some(true));
+    assert_eq!(r.get("was_live").as_bool(), Some(false));
+    assert_eq!(gw.live_sessions(), 0);
+    assert_eq!(gw.cache().used_rows(), 0);
+
+    // a real session: prefill 8 rows, then one step to 12
+    let steps = synthetic_decode_trace(SHAPE, 8, 1, 4, 1, 3);
+    client
+        .attend_session(2, &steps[0].q, &steps[0].k, &steps[0].v, 8, 7)
+        .unwrap();
+    assert_eq!(gw.live_sessions(), 1);
+    assert!(gw.cache().used_rows() > 0, "prefill must cache rows");
+    let r1 = client
+        .attend_session(3, &steps[1].q, &steps[1].k, &steps[1].v, 12, 7)
+        .unwrap();
+    assert_eq!(r1.get("cached").as_bool(), Some(true));
+
+    // first end tears the session down; the duplicate is a no-op —
+    // and both leave the accounting at exactly zero
+    let r = client.end_session(4, 7).unwrap();
+    assert_eq!(r.get("was_live").as_bool(), Some(true));
+    assert_eq!(gw.live_sessions(), 0);
+    assert_eq!(gw.cache().used_rows(), 0);
+    let r = client.end_session(5, 7).unwrap();
+    assert_eq!(r.get("ended").as_bool(), Some(true));
+    assert_eq!(r.get("was_live").as_bool(), Some(false));
+    assert_eq!(gw.live_sessions(), 0);
+    assert_eq!(gw.cache().used_rows(), 0);
+
+    // a step after `end` is a fresh generation, not a resurrection:
+    // span restarts at 0 and the prefill misses the cache again
+    let r2 = client
+        .attend_session(6, &steps[0].q, &steps[0].k, &steps[0].v, 8, 7)
+        .unwrap();
+    assert_eq!(r2.get("span_start").as_i64(), Some(0));
+    assert_eq!(r2.get("cached").as_bool(), Some(false));
+    assert_eq!(gw.live_sessions(), 1);
+
+    // reject-then-retry: a non-growing step errors without touching
+    // state, and the legitimate next step then succeeds from where the
+    // session really is
+    let rows_before = gw.cache().used_rows();
+    let err = client.attend_session(7, &steps[0].q, &steps[0].k,
+                                    &steps[0].v, 8, 7);
+    assert!(err.is_err(), "non-growing step must be rejected");
+    assert_eq!(gw.live_sessions(), 1);
+    assert_eq!(gw.cache().used_rows(), rows_before,
+               "rejected step must not change cached rows");
+    let r3 = client
+        .attend_session(8, &steps[1].q, &steps[1].k, &steps[1].v, 12, 7)
+        .unwrap();
+    assert_eq!(r3.get("span_start").as_i64(), Some(8));
+    assert_eq!(r3.get("cached").as_bool(), Some(true));
+
+    // an overlong step under a brand-new session id is rejected at
+    // admission and must not commit a table entry for it
+    let live = gw.live_sessions();
+    let long = 65; // over the largest (N=64) bucket
+    let err = client.attend_session(9, &vec![0.0; SHAPE.qk_len(long)],
+                                    &vec![0.0; SHAPE.qk_len(long)],
+                                    &vec![0.0; SHAPE.v_len(long)],
+                                    long, 99);
+    assert!(err.is_err());
+    assert_eq!(gw.live_sessions(), live,
+               "a rejected session must not appear in the table");
+
+    // final teardown returns every counter to zero
+    let r = client.end_session(10, 7).unwrap();
+    assert_eq!(r.get("was_live").as_bool(), Some(true));
+    assert_eq!(gw.live_sessions(), 0);
+    assert_eq!(gw.cache().used_rows(), 0);
+
+    drop(client);
+    stop.store(true, Ordering::Relaxed);
+    server_thread.join().unwrap();
+}
+
+#[test]
 fn tcp_gateway_round_trips_attention_requests() {
     let gw = Arc::new(gateway());
     let stop = Arc::new(AtomicBool::new(false));

@@ -1,0 +1,188 @@
+//! End-to-end tests of the golden-trace oracle harness through its
+//! public API: record a suite to disk, replay it bit-exactly, prove an
+//! injected perturbation turns the report red, and hold the *checked-in*
+//! `identity-len1` fixture to its closed-form expectation — the one
+//! fixture whose bytes were authored outside this crate, so it also
+//! cross-checks the on-disk format (header schema, LE f32 frames,
+//! FNV-1a-64 checksum) against an independent writer.
+
+use std::path::PathBuf;
+
+use clustered_transformers::jsonio;
+use clustered_transformers::oracle::{
+    self, identity_expected_frames, Fixture, FixtureSpec, Manifest,
+    OracleReport, TolerancePolicy, TraceSpec,
+};
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("ct-it-oracle-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// A small suite covering both serving paths: a native mixed trace
+/// (one-shots + decode sessions) and a sharded ragged trace that spawns
+/// real local shard workers over TCP.
+fn small_suite() -> Vec<FixtureSpec> {
+    vec![
+        FixtureSpec {
+            name: "it-mixed".into(),
+            kernel: "full".into(),
+            heads: 2,
+            dk: 4,
+            dv: 4,
+            buckets: vec![8, 16],
+            seed: 101,
+            masked: true,
+            shards: 0,
+            trace: TraceSpec::Mixed {
+                min_len: 2, max_len: 12, count: 6,
+                prefill: 4, steps: 2, step_len: 1, sessions: 2,
+            },
+        },
+        FixtureSpec {
+            name: "it-sharded".into(),
+            kernel: "full".into(),
+            heads: 2,
+            dk: 4,
+            dv: 4,
+            buckets: vec![8, 16],
+            seed: 103,
+            masked: true,
+            shards: 2,
+            trace: TraceSpec::Ragged { min_len: 2, max_len: 12, count: 6 },
+        },
+    ]
+}
+
+#[test]
+fn record_then_replay_suite_is_bit_exact_and_reports_green() {
+    let dir = temp_dir("roundtrip");
+    let specs = small_suite();
+    let recorded = oracle::record_suite(&dir, &specs, false).unwrap();
+    assert_eq!(recorded, vec!["it-mixed", "it-sharded"]);
+    let names = Manifest::load(&dir).unwrap().fixtures;
+    assert_eq!(names, vec!["it-mixed", "it-sharded"]);
+
+    let report =
+        oracle::replay_suite(&dir, &names, &TolerancePolicy::default(),
+                             false);
+    assert!(report.passed(), "replay failures: {:#?}",
+            report.fixtures.iter().filter(|f| !f.passed)
+                  .collect::<Vec<_>>());
+    for f in &report.fixtures {
+        assert!(f.checked_responses > 0, "{}: nothing compared", f.name);
+        assert_eq!(f.mismatched_elems, 0, "{}", f.name);
+    }
+
+    // the written report is valid JSON with a green verdict, and
+    // writing it twice is byte-identical (no timestamps, no machine
+    // noise — diffs of the report only ever show real changes)
+    let rp = dir.join("oracle-report.json");
+    report.write(&rp).unwrap();
+    let first = std::fs::read(&rp).unwrap();
+    report.write(&rp).unwrap();
+    assert_eq!(first, std::fs::read(&rp).unwrap());
+    let doc =
+        jsonio::parse(&std::fs::read_to_string(&rp).unwrap()).unwrap();
+    assert_eq!(doc.get("tool").as_str(), Some("ct oracle"));
+    assert_eq!(doc.get("status").as_str(), Some("green"));
+    assert_eq!(doc.get("fixtures").as_arr().map(Vec::len), Some(2));
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn injected_perturbation_turns_the_report_red() {
+    let dir = temp_dir("perturb");
+    let specs = vec![small_suite().remove(0)];
+    oracle::record_suite(&dir, &specs, false).unwrap();
+    let names = Manifest::load(&dir).unwrap().fixtures;
+
+    let report =
+        oracle::replay_suite(&dir, &names, &TolerancePolicy::default(),
+                             true);
+    assert!(!report.passed());
+    let f = &report.fixtures[0];
+    assert_eq!(f.mismatched_elems, 1);
+    let diff = f.first_diff.as_ref().expect("diff located");
+    assert_eq!((diff.response, diff.elem), (0, 0));
+    assert_eq!(diff.got_bits ^ diff.want_bits, 1);
+    assert!(f.notes.iter().any(|n| n.contains("perturbation")));
+
+    let rp = dir.join("oracle-report.json");
+    report.write(&rp).unwrap();
+    let doc =
+        jsonio::parse(&std::fs::read_to_string(&rp).unwrap()).unwrap();
+    assert_eq!(doc.get("status").as_str(), Some("red"));
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn checked_in_identity_fixture_replays_green_against_the_closed_form() {
+    // This is the tier-1 guard on the *committed* fixture files: if
+    // oracle/fixtures/identity-len1.{json,bin} rot, drift from the
+    // spec's closed form, or fail their own checksum, this test goes
+    // red without any CI bootstrap step in the loop.
+    let dir = oracle::default_fixture_dir();
+    assert!(Fixture::exists(&dir, "identity-len1"),
+            "checked-in fixture missing under {}", dir.display());
+    assert!(Manifest::load(&dir).unwrap().fixtures
+                .contains(&"identity-len1".to_string()),
+            "manifest does not list identity-len1");
+
+    // load() verifies format version, byte count and FNV checksum
+    let fx = Fixture::load(&dir, "identity-len1").unwrap();
+    let count = match fx.spec.trace {
+        TraceSpec::IdentityLen1 { count } => count,
+        ref other => panic!("unexpected trace spec {other:?}"),
+    };
+    let expected = identity_expected_frames(fx.spec.shape(), count);
+    assert_eq!(fx.frames.len(), expected.len());
+    for (i, (g, w)) in fx.frames.iter().zip(&expected).enumerate() {
+        assert_eq!(g.to_bits(), w.to_bits(), "frame elem {i}");
+    }
+
+    // and the live gateway still reproduces it bit for bit
+    let res =
+        oracle::replay_fixture(&fx, &TolerancePolicy::default(), false);
+    assert!(res.passed, "failures: {:?}", res.failures);
+    assert_eq!(res.mismatched_elems, 0);
+}
+
+#[test]
+fn perf_gate_self_check_and_report_merge_go_red_on_regression() {
+    // the gate's own red-path proof must hold
+    oracle::self_check(0.15).unwrap();
+
+    // fabricate a regression and merge the verdict into a green report
+    let dir = temp_dir("perfgate");
+    let fresh = dir.join("fresh");
+    let base = dir.join("baselines");
+    std::fs::create_dir_all(&fresh).unwrap();
+    std::fs::create_dir_all(&base).unwrap();
+    let write = |d: &PathBuf, rps: f64| {
+        std::fs::write(
+            d.join("BENCH_it.json"),
+            jsonio::to_string_pretty(
+                &oracle::bench_doc("it", &[("row", rps)]))).unwrap();
+    };
+    write(&base, 1000.0);
+    write(&fresh, 100.0); // −90%, far past the 15% band
+    let gate = oracle::run_perf_gate(&fresh, &base, 0.15).unwrap();
+    assert!(!gate.passed());
+
+    let rp = dir.join("oracle-report.json");
+    OracleReport::default().write(&rp).unwrap(); // green, no fixtures
+    let ok = OracleReport::merge_perf_into(&rp, gate.to_value(),
+                                           gate.passed()).unwrap();
+    assert!(!ok);
+    let doc =
+        jsonio::parse(&std::fs::read_to_string(&rp).unwrap()).unwrap();
+    assert_eq!(doc.get("status").as_str(), Some("red"));
+    assert_eq!(doc.get("perf").get("status").as_str(), Some("fail"));
+
+    let _ = std::fs::remove_dir_all(&dir);
+}

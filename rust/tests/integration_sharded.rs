@@ -1,7 +1,11 @@
 //! Integration: the sharded fan-out backend over real TCP shard
-//! workers — binary-framed solves, sticky decode sessions, and the
-//! degraded-mode fallback when a shard is unreachable.
+//! workers — binary-framed solves, sticky decode sessions, the
+//! degraded-mode fallback when a shard is unreachable, and the
+//! worker's survival of adversarial wire traffic (garbage headers,
+//! truncated frames, mid-frame disconnects, frame-cap overflow).
 
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc};
 use std::time::Duration;
@@ -126,4 +130,172 @@ fn tcp_shard_workers_match_native_and_survive_a_dead_shard() {
         .bit_identical(&native.execute(&ragged, &ctx)));
 
     w1.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// adversarial wire traffic: the worker must reply with an error where a
+// header was parsed, and must keep serving fresh connections no matter
+// how a client mangles its own
+// ---------------------------------------------------------------------------
+
+/// A raw client speaking the shard wire protocol by hand.
+struct RawConn {
+    writer: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl RawConn {
+    fn open(addr: &str) -> Self {
+        let stream = TcpStream::connect(addr).unwrap();
+        stream
+            .set_read_timeout(Some(Duration::from_secs(30)))
+            .unwrap();
+        let writer = stream.try_clone().unwrap();
+        Self { writer, reader: BufReader::new(stream) }
+    }
+
+    fn send_line(&mut self, line: &str) {
+        self.writer.write_all(line.as_bytes()).unwrap();
+        self.writer.write_all(b"\n").unwrap();
+        self.writer.flush().unwrap();
+    }
+
+    fn send_bytes(&mut self, bytes: &[u8]) {
+        self.writer.write_all(bytes).unwrap();
+        self.writer.flush().unwrap();
+    }
+
+    /// Read one reply line; `""` means the worker closed the stream.
+    fn read_line(&mut self) -> String {
+        let mut line = String::new();
+        self.reader.read_line(&mut line).unwrap();
+        line
+    }
+
+    fn ping_ok(&mut self, id: i64) {
+        self.send_line(&format!(r#"{{"op":"ping","id":{id}}}"#));
+        let reply = self.read_line();
+        assert!(reply.contains(&format!("\"id\":{id}"))
+                    && reply.contains("true"),
+                "ping {id} got {reply:?}");
+    }
+}
+
+/// The worker is still healthy: a fresh connection answers a ping and a
+/// real solve through the production backend matches native compute.
+fn assert_worker_serves(addr: &str) {
+    RawConn::open(addr).ping_ok(99);
+    let backend = ShardedBackend::over_tcp(
+        KERNEL, &[addr.to_string()], ShardOptions::default()).unwrap();
+    let ctx = ExecCtx::sequential();
+    let native = NativeBackend::by_name(KERNEL).unwrap();
+    let mut rng = Xoshiro256::new(5);
+    let q = BatchMatrix::randn(1, 2, 8, 4, &mut rng);
+    let k = BatchMatrix::randn(1, 2, 8, 4, &mut rng);
+    let v = BatchMatrix::randn(1, 2, 8, 4, &mut rng);
+    let batch = AttnBatch::new(&q, &k, &v, 3);
+    assert!(backend.execute(&batch, &ctx)
+        .bit_identical(&native.execute(&batch, &ctx)));
+}
+
+/// A syntactically valid solve header for KERNEL: batch 1, 2 heads,
+/// 4 rows, dk = dv = 8 → each q/k/v frame is 1·2·4·8 = 64 f32.
+fn small_solve_header(id: i64) -> String {
+    format!(
+        r#"{{"op":"solve","id":{id},"kernel":"{KERNEL}","batch":1,"heads":2,"rows":4,"dk":8,"dv":8,"seed":"0000000000000000","slice_base":"0000000000000000"}}"#
+    )
+}
+
+#[test]
+fn worker_rejects_garbage_json_header_and_closes() {
+    let w = spawn_worker();
+    let mut conn = RawConn::open(&w.addr);
+    conn.send_line("{this is not json");
+    let reply = conn.read_line();
+    assert!(reply.contains("bad json"), "got {reply:?}");
+    // the frame boundary is unknowable now — the worker must close
+    assert_eq!(conn.read_line(), "", "worker kept a poisoned stream");
+    assert_worker_serves(&w.addr);
+    w.shutdown();
+}
+
+#[test]
+fn worker_rejects_malformed_solve_header_and_closes() {
+    let w = spawn_worker();
+    let mut conn = RawConn::open(&w.addr);
+    // valid JSON, but no shape fields: frames can't be sized
+    conn.send_line(r#"{"op":"solve","id":5}"#);
+    let reply = conn.read_line();
+    assert!(reply.contains("\"error\""), "got {reply:?}");
+    assert!(reply.contains("\"id\":5"), "error not keyed: {reply:?}");
+    assert_eq!(conn.read_line(), "", "worker kept a poisoned stream");
+    assert_worker_serves(&w.addr);
+    w.shutdown();
+}
+
+#[test]
+fn worker_refuses_frame_cap_overflow_headers() {
+    let w = spawn_worker();
+    let mut conn = RawConn::open(&w.addr);
+    // 65536³·8 elements per frame: far past the 2²⁸-element sanity cap
+    // (and past usize arithmetic on 32-bit) — the worker must refuse
+    // before allocating anything
+    conn.send_line(&format!(
+        r#"{{"op":"solve","id":7,"kernel":"{KERNEL}","batch":65536,"heads":65536,"rows":65536,"dk":8,"dv":8,"seed":"0000000000000000","slice_base":"0000000000000000"}}"#
+    ));
+    let reply = conn.read_line();
+    assert!(reply.contains("payload too large"), "got {reply:?}");
+    assert_eq!(conn.read_line(), "", "worker kept a poisoned stream");
+    assert_worker_serves(&w.addr);
+    w.shutdown();
+}
+
+#[test]
+fn worker_survives_truncated_frames_and_midframe_disconnects() {
+    let w = spawn_worker();
+
+    // half a frame then FIN: read_f32s hits EOF mid-frame, the handler
+    // dies without replying, the accept loop keeps serving
+    let mut conn = RawConn::open(&w.addr);
+    conn.send_line(&small_solve_header(11));
+    conn.send_bytes(&vec![0u8; 64 * 4 / 2]);
+    conn.writer.shutdown(std::net::Shutdown::Write).unwrap();
+    assert_eq!(conn.read_line(), "",
+               "no reply can be framed for a truncated request");
+    drop(conn);
+
+    // abrupt mid-frame disconnect (no FIN handshake discipline): same
+    // story from a second client
+    let mut conn = RawConn::open(&w.addr);
+    conn.send_line(&small_solve_header(12));
+    conn.send_bytes(&vec![0u8; 7]); // not even one whole f32
+    drop(conn);
+
+    assert_worker_serves(&w.addr);
+    w.shutdown();
+}
+
+#[test]
+fn worker_reports_engine_errors_and_keeps_the_connection() {
+    let w = spawn_worker();
+    let mut conn = RawConn::open(&w.addr);
+    // header parses and frames are fully consumed, so the stream stays
+    // in sync — an unknown kernel is an engine error, not a wire error
+    conn.send_line(
+        r#"{"op":"solve","id":21,"kernel":"no-such-kernel","batch":1,"heads":2,"rows":4,"dk":8,"dv":8,"seed":"0000000000000000","slice_base":"0000000000000000"}"#,
+    );
+    conn.send_bytes(&vec![0u8; 3 * 64 * 4]); // q, k, v frames
+    let reply = conn.read_line();
+    assert!(reply.contains("\"error\""), "got {reply:?}");
+    assert!(reply.contains("\"id\":21"), "error not keyed: {reply:?}");
+    // the SAME connection keeps working…
+    conn.ping_ok(22);
+    // …including unknown ops, which are error replies, not closes
+    conn.send_line(r#"{"op":"frobnicate","id":23}"#);
+    let reply = conn.read_line();
+    assert!(reply.contains("unknown op"), "got {reply:?}");
+    conn.ping_ok(24);
+    drop(conn);
+    assert_worker_serves(&w.addr);
+    w.shutdown();
 }
