@@ -18,6 +18,14 @@
 //! nothing by construction (joint bucketing defeats incremental reuse)
 //! and documents the honest ~1× floor.  `CT_SMOKE=1` shrinks the grid
 //! for CI.
+//!
+//! The second section is the **decode curve**: cached tokens/sec as a
+//! function of history length per family, plus the per-step session
+//! state each family pins.  The linear family runs *causal* and rides
+//! the recurrent-state cache path — a step updates a constant-size
+//! `(S, z)` accumulator and costs O(m·D²) no matter the history — so
+//! its curve stays flat while every KV-panel family decays with the
+//! history it must rescan (full: O(m·N) per step) or re-cluster.
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -61,9 +69,10 @@ struct DecodeRun {
     outs: Vec<f32>,
 }
 
+#[allow(clippy::too_many_arguments)]
 fn run_decode(kernel: &str, cache_rows: usize, q: &BatchMatrix,
               k: &BatchMatrix, v: &BatchMatrix, prefill: usize,
-              step_len: usize, seed: u64) -> DecodeRun {
+              step_len: usize, seed: u64, causal: bool) -> DecodeRun {
     let total = q.rows;
     let cache = Arc::new(KvCache::with_capacity(cache_rows));
     let backend = CachingBackend::native(kernel, cache.clone())
@@ -88,7 +97,8 @@ fn run_decode(kernel: &str, cache_rows: usize, q: &BatchMatrix,
         })];
         let batch = AttnBatch::new(&qp, &kp, &vp, seed)
             .with_lens(&lens)
-            .with_sessions(&sessions);
+            .with_sessions(&sessions)
+            .with_causal(causal);
         let t0 = Instant::now();
         let out = backend.execute(&batch, &ctx);
         let dt = t0.elapsed().as_secs_f64();
@@ -113,6 +123,104 @@ fn run_decode(kernel: &str, cache_rows: usize, q: &BatchMatrix,
     run
 }
 
+/// Bytes of session state the cache pins per decode step for a family
+/// holding a history of `len` rows: the KV-panel families keep the
+/// full q/k/v panels, `heads * len * (2*dk + dv) * 4`, while the
+/// linear family keeps one `(S: D×D, z: D)` accumulator per head —
+/// `heads * (dk*dv + dk) * 4`, independent of the history.  Mirrors
+/// `RecurrentState::state_bytes` and the panel charge in the cache.
+fn state_bytes(kernel: &str, len: usize) -> usize {
+    if kernel == "linear" {
+        HEADS * (D * D + D) * 4
+    } else {
+        HEADS * len * (2 * D + D) * 4
+    }
+}
+
+/// Decode curve: cached tokens/sec vs history length.  Prefill `h`
+/// rows, then time `steps` decode steps of `step_len` rows against an
+/// unbounded cache.  The linear family runs causal (the recurrent
+/// O(m·D²) path); the panel families rescan their history each step.
+/// At the smallest history the run is repeated with a zero-capacity
+/// cache and the span outputs are asserted bit-identical — the same
+/// live contract check the comparison section does, kept off the long
+/// histories where the full recompute would dominate the bench.
+fn decode_curve(seed: u64, records: &mut Vec<BenchRecord>) {
+    let (histories, steps, step_len): (Vec<usize>, usize, usize) =
+        if smoke() {
+            (vec![256, 1024], 4, 4)
+        } else if benchlib::traincache::full_grid() {
+            (vec![256, 1024, 4096, 16384], 8, 4)
+        } else {
+            (vec![256, 1024, 4096], 8, 4)
+        };
+    let families = ["full", "oracle-top-32", "clustered-16", "linear"];
+    let mut table = Table::new(
+        &format!(
+            "decode curve: tokens/sec vs history length, {steps} steps \
+             of {step_len} rows, H={HEADS} D={D} — linear runs causal \
+             on the O(1) recurrent-state path"),
+        &["kernel", "history", "tok/s", "hit %", "state B/step",
+          "p50 ms/step", "≡ recompute"],
+    );
+    for kernel in families {
+        let causal = kernel == "linear";
+        for (i, &h) in histories.iter().enumerate() {
+            let total = h + steps * step_len;
+            let mut rng = Xoshiro256::new(seed ^ ((h as u64) << 1));
+            let q = BatchMatrix::randn(1, HEADS, total, D, &mut rng);
+            let k = BatchMatrix::randn(1, HEADS, total, D, &mut rng);
+            let v = BatchMatrix::randn(1, HEADS, total, D, &mut rng);
+            let cached = run_decode(kernel, usize::MAX, &q, &k, &v, h,
+                                    step_len, seed, causal);
+            let checked = if i == 0 {
+                let redone = run_decode(kernel, 0, &q, &k, &v, h,
+                                        step_len, seed, causal);
+                let identical = cached.outs.len() == redone.outs.len()
+                    && cached
+                        .outs
+                        .iter()
+                        .zip(&redone.outs)
+                        .all(|(a, b)| a.to_bits() == b.to_bits());
+                assert!(identical,
+                        "{kernel}/hist={h}: cached decode diverged \
+                         from the full recompute");
+                "true"
+            } else {
+                "-"
+            };
+            let tok_s = cached.tokens as f64 / cached.wall_s.max(1e-9);
+            let bytes = state_bytes(kernel, total);
+            let st = Stats::from_samples(&cached.step_samples);
+            table.row(vec![
+                kernel.to_string(),
+                h.to_string(),
+                format!("{tok_s:.0}"),
+                format!("{:.0}", 100.0 * cached.hit_rate),
+                bytes.to_string(),
+                format!("{:.3}", st.p50_s * 1e3),
+                checked.to_string(),
+            ]);
+            records.push(
+                BenchRecord::from_stats(
+                    &format!("decode-curve/{kernel}/hist={h}"),
+                    step_len, &st)
+                    .with("tokens_per_sec_cached", tok_s)
+                    .with("history_rows", h as f64)
+                    .with("state_bytes_per_step", bytes as f64)
+                    .with("cache_hit_rate", cached.hit_rate),
+            );
+        }
+    }
+    table.emit();
+    println!("\nexpected: linear tokens/sec stays flat (±10%) from the \
+              shortest to the longest history — its recurrent state is \
+              {} bytes regardless of length — while the panel families \
+              decay as O(m·N) rescans (full) or re-clustering charges \
+              grow with the history.",
+             state_bytes("linear", 0));
+}
+
 fn main() {
     init_logging(false);
     let (sizes, step_len): (Vec<usize>, usize) = if smoke() {
@@ -123,7 +231,8 @@ fn main() {
         (vec![512, 1024], 4)
     };
     let families = ["full", "shared-full", "oracle-top-32",
-                    "clustered-16", "i-clustered-16", "lsh-2"];
+                    "clustered-16", "i-clustered-16", "lsh-2",
+                    "linear"];
     let seed = 0u64;
     let mut records = Vec::new();
 
@@ -143,9 +252,9 @@ fn main() {
             let k = BatchMatrix::randn(1, HEADS, n, D, &mut rng);
             let v = BatchMatrix::randn(1, HEADS, n, D, &mut rng);
             let cached = run_decode(kernel, usize::MAX, &q, &k, &v,
-                                    prefill, step_len, seed);
+                                    prefill, step_len, seed, false);
             let redone = run_decode(kernel, 0, &q, &k, &v, prefill,
-                                    step_len, seed);
+                                    step_len, seed, false);
             // the decode contract, live: cached spans == recompute
             // spans, bit for bit
             let identical = cached.outs.len() == redone.outs.len()
@@ -180,10 +289,11 @@ fn main() {
         }
         table.emit();
     }
-    let _ = benchlib::write_bench_json("decode", &records);
     println!("\nexpected: full-family cached decode beats recompute by \
               ~N/step_len at N >= 512 (O(m·N) vs O(N²) per step); \
               shared-full and oracle-top track it; clustered wins on \
               the pruned centroid pass; lsh sits near 1x (joint \
               bucketing defeats incremental reuse — documented floor).");
+    decode_curve(seed, &mut records);
+    let _ = benchlib::write_bench_json("decode", &records);
 }

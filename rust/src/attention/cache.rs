@@ -32,10 +32,20 @@
 //!   pass only for the clusters the span touches.
 //! - **improved / lsh** — rows couple through shared state, so the
 //!   exact span is a full recompute with span extraction.
+//! - **linear (causal)** — the O(1)-state family: instead of panels the
+//!   session entry holds per-head [`RecurrentState`] accumulators
+//!   (`S: Dk×Dv`, `z: Dk`), everything a causal row needs to know about
+//!   the keys below it.  A hit absorbs the step's new K/V rows into the
+//!   accumulator and emits the span rows directly — O(m·D²) per step,
+//!   **independent of history length** — replaying exactly the
+//!   elementary accumulation order of the full causal recompute, so the
+//!   step is bit-identical to it.  Bidirectional linear sessions use
+//!   the ordinary panel path (every row attends future keys, so the
+//!   prefix state alone cannot serve them).
 //! - Any **miss** (no entry, evicted entry, stale generation, desynced
-//!   length, zero-capacity store) falls back to the wrapped backend on
-//!   the full descriptor and repopulates the cache — identical by
-//!   construction.
+//!   length, zero-capacity store, panel/recurrent kind mismatch) falls
+//!   back to the wrapped backend on the full descriptor and repopulates
+//!   the cache — identical by construction.
 //!
 //! ## Frozen-model reuse (the growth threshold)
 //!
@@ -53,9 +63,13 @@
 //! (`growth = 1.0`) re-clusters every step: exactness everywhere.
 //!
 //! Capacity is accounted in cached *sequence rows* (`Σ session len`);
-//! eviction is LRU by last touch.  A zero-capacity store caches
-//! nothing, so every step recomputes — the always-miss degenerate that
-//! the fallback contract keeps bit-identical.
+//! eviction is LRU by last touch.  A recurrent entry's size never
+//! grows, so it charges a constant row-equivalent
+//! ([`recurrent_rows_equiv`]: its float count expressed in panel-row
+//! units) and competes in the same LRU order as the panel entries.  A
+//! zero-capacity store caches nothing, so every step recomputes — the
+//! always-miss degenerate that the fallback contract keeps
+//! bit-identical.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -70,7 +84,8 @@ use crate::tensor::{axpy, dot, softmax_inplace, topk_indices, Matrix};
 use super::backend::{AttentionBackend, NativeBackend};
 use super::clustered::{centroids, clustered_span_attention_ctx};
 use super::improved::improved_clustered_attention_ctx;
-use super::problem::{AttnBatch, AttnProblem, CacheRef};
+use super::linear::RecurrentState;
+use super::problem::{AttnBatch, AttnProblem, CacheRef, SessionRef};
 use super::{kernel_for, AttentionKernel, Variant};
 
 /// KV-cache sizing and re-cluster policy.
@@ -181,13 +196,16 @@ impl Panel {
 
 /// One session's cached state: per-head appended Q/K/V panels (the Q
 /// panel is the key history of shared-QK families and the re-cluster
-/// input of the clustered ones) plus the optional frozen clustering.
+/// input of the clustered ones) plus the optional frozen clustering —
+/// or, for linear-family causal sessions, per-head [`RecurrentState`]
+/// accumulators instead of panels (the panels stay empty).
 struct SessionEntry {
     generation: u64,
     heads: usize,
     dk: usize,
     dv: usize,
-    /// Cached history rows (every panel has exactly this many rows).
+    /// Cached history rows (every panel has exactly this many rows;
+    /// for a recurrent entry, the rows absorbed so far).
     len: usize,
     last_used: u64,
     q: Vec<Panel>,
@@ -196,6 +214,32 @@ struct SessionEntry {
     model: Option<Vec<HeadModel>>,
     /// History length at the last re-cluster (0 = never clustered).
     clustered_len: usize,
+    /// Per-head `(S, z)` accumulators — `Some` makes this a recurrent
+    /// entry (linear family, causal); panel and recurrent kinds never
+    /// serve each other's lookups.
+    recurrent: Option<Vec<RecurrentState>>,
+}
+
+impl SessionEntry {
+    /// Capacity charge in cached sequence rows: panel entries charge
+    /// their length, recurrent entries the constant row-equivalent of
+    /// their accumulator floats.
+    fn charged_rows(&self) -> usize {
+        if self.recurrent.is_some() {
+            recurrent_rows_equiv(self.dk, self.dv)
+        } else {
+            self.len
+        }
+    }
+}
+
+/// A recurrent entry's capacity charge: its per-head float count
+/// (`Dk·Dv + Dk`) expressed in panel sequence-row units (`2·Dk + Dv`
+/// floats per row per head — the head counts cancel), at least 1 so a
+/// live accumulator is never free.  Constant in history length, which
+/// is the whole point of the recurrent family.
+pub(crate) fn recurrent_rows_equiv(dk: usize, dv: usize) -> usize {
+    (dk * dv + dk).div_ceil(2 * dk + dv).max(1)
 }
 
 struct Store {
@@ -277,7 +321,7 @@ impl KvCache {
     pub fn invalidate(&self, session: u64) {
         let mut store = self.store.lock().unwrap();
         if let Some(e) = store.sessions.remove(&session) {
-            store.used_rows -= e.len;
+            store.used_rows -= e.charged_rows();
         }
     }
 
@@ -296,7 +340,7 @@ impl KvCache {
                             .then_some(keep));
             let Some(id) = victim else { break };
             let e = store.sessions.remove(&id).unwrap();
-            store.used_rows -= e.len;
+            store.used_rows -= e.charged_rows();
             self.counters.evictions.fetch_add(1, Ordering::Relaxed);
         }
     }
@@ -328,12 +372,13 @@ impl KvCache {
             e.generation == r.generation
                 && e.len == span_start
                 && (e.heads, e.dk, e.dv) == (heads, dk, dv)
+                && e.recurrent.is_none()
         });
         if !usable {
             // a mismatched entry must never alias: drop it now, the
             // recompute path repopulates under the caller's handle
             if let Some(e) = store.sessions.remove(&r.session) {
-                store.used_rows -= e.len;
+                store.used_rows -= e.charged_rows();
             }
             self.counters.misses.fetch_add(1, Ordering::Relaxed);
             return None;
@@ -380,7 +425,7 @@ impl KvCache {
         store.clock += 1;
         let tick = store.clock;
         if let Some(e) = store.sessions.remove(&r.session) {
-            store.used_rows -= e.len;
+            store.used_rows -= e.charged_rows();
         }
         if len > self.opts.capacity_rows {
             // the session alone exceeds the store: cannot cache it
@@ -403,6 +448,113 @@ impl KvCache {
             v: panels(v),
             model: None,
             clustered_len: 0,
+            recurrent: None,
+        });
+        self.evict_until_fits(&mut store, r.session);
+    }
+
+    /// One *recurrent* decode step's cache transaction (linear family,
+    /// causal): on a usable entry (same generation, absorbed length ==
+    /// `span_start`, same geometry, recurrent kind) return a snapshot of
+    /// the per-head accumulators *as of the span start*, then absorb the
+    /// step's new K/V rows into the entry — O(m·D²) under the lock,
+    /// independent of history length, which is the O(1)-state contract.
+    /// Anything else — a panel entry included — is a miss and drops the
+    /// entry so it can never alias;
+    /// [`CachingBackend`] repopulates via [`Self::populate_recurrent`].
+    pub(crate) fn step_recurrent(&self, r: CacheRef, heads: usize,
+                                 dk: usize, dv: usize, span_start: usize,
+                                 new_k: &[Matrix], new_v: &[Matrix])
+                                 -> Option<Vec<RecurrentState>> {
+        if self.opts.capacity_rows == 0 || span_start == 0 {
+            self.counters.misses.fetch_add(1, Ordering::Relaxed);
+            return None;
+        }
+        let mut store = self.store.lock().unwrap();
+        store.clock += 1;
+        let tick = store.clock;
+        let usable = store.sessions.get(&r.session).is_some_and(|e| {
+            e.generation == r.generation
+                && e.len == span_start
+                && (e.heads, e.dk, e.dv) == (heads, dk, dv)
+                && e.recurrent.is_some()
+        });
+        if !usable {
+            if let Some(e) = store.sessions.remove(&r.session) {
+                store.used_rows -= e.charged_rows();
+            }
+            self.counters.misses.fetch_add(1, Ordering::Relaxed);
+            return None;
+        }
+        let m = new_k[0].rows;
+        let e = store.sessions.get_mut(&r.session).unwrap();
+        let prior = e.recurrent.clone().unwrap();
+        let states = e.recurrent.as_mut().unwrap();
+        for h in 0..heads {
+            for j in 0..m {
+                states[h].absorb(new_k[h].row(j), new_v[h].row(j));
+            }
+        }
+        e.len += m;
+        e.last_used = tick;
+        // the accumulator's charge is constant — used_rows is unchanged
+        self.counters.hits.fetch_add(1, Ordering::Relaxed);
+        self.counters
+            .appended_rows
+            .fetch_add(m as u64, Ordering::Relaxed);
+        self.counters
+            .reused_rows
+            .fetch_add(span_start as u64, Ordering::Relaxed);
+        Some(prior)
+    }
+
+    /// Store a freshly recomputed recurrent session (the linear causal
+    /// miss path): fresh per-head accumulators absorb the full K/V
+    /// history in ascending row order — the pinned elementary order the
+    /// bit-identity contract is built on.  The absorption runs before
+    /// the store lock is taken.
+    pub(crate) fn populate_recurrent(&self, r: CacheRef, heads: usize,
+                                     dk: usize, dv: usize, k: &[Matrix],
+                                     v: &[Matrix]) {
+        if self.opts.capacity_rows == 0 {
+            return;
+        }
+        let len = k[0].rows;
+        let charge = recurrent_rows_equiv(dk, dv);
+        let states: Vec<RecurrentState> = (0..heads)
+            .map(|h| {
+                let mut st = RecurrentState::new(dk, dv);
+                for j in 0..len {
+                    st.absorb(k[h].row(j), v[h].row(j));
+                }
+                st
+            })
+            .collect();
+        let mut store = self.store.lock().unwrap();
+        store.clock += 1;
+        let tick = store.clock;
+        if let Some(e) = store.sessions.remove(&r.session) {
+            store.used_rows -= e.charged_rows();
+        }
+        if charge > self.opts.capacity_rows {
+            // the accumulator alone exceeds the store: cannot cache it
+            self.counters.evictions.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        store.used_rows += charge;
+        store.sessions.insert(r.session, SessionEntry {
+            generation: r.generation,
+            heads,
+            dk,
+            dv,
+            len,
+            last_used: tick,
+            q: Vec::new(),
+            k: Vec::new(),
+            v: Vec::new(),
+            model: None,
+            clustered_len: 0,
+            recurrent: Some(states),
         });
         self.evict_until_fits(&mut store, r.session);
     }
@@ -466,6 +618,12 @@ enum FamilyPlan {
         /// `Some` for improved clustered (its top-k refinement).
         topk: Option<usize>,
     },
+    /// Linear family: *causal* sessions store per-head
+    /// [`RecurrentState`] accumulators instead of panels and step in
+    /// O(m·D²) regardless of history length; bidirectional sessions
+    /// fall through to the panel span path (the kernel's span solve is
+    /// genuinely incremental there too).
+    Recurrent,
 }
 
 fn plan_for(variant: &Variant) -> FamilyPlan {
@@ -478,6 +636,7 @@ fn plan_for(variant: &Variant) -> FamilyPlan {
                                        topk: Some(topk) }
         }
         Variant::Lsh { .. } => FamilyPlan::Span { full_recompute: true },
+        Variant::Linear => FamilyPlan::Recurrent,
         _ => FamilyPlan::Span { full_recompute: false },
     }
 }
@@ -588,7 +747,8 @@ impl CachingBackend {
             let lens: Option<Vec<usize>> = batch
                 .lens
                 .map(|ls| plain.iter().map(|&b| ls[b]).collect());
-            let mut sub = AttnBatch::new(&sq, &sk, &sv, batch.seed);
+            let mut sub = AttnBatch::new(&sq, &sk, &sv, batch.seed)
+                .with_causal(batch.causal);
             if let Some(ls) = lens.as_deref() {
                 sub = sub.with_lens(ls);
             }
@@ -605,6 +765,13 @@ impl CachingBackend {
         // full-recompute fallback, per sequence
         for b in 0..bsz {
             let Some(sref) = sessions[b] else { continue };
+            // linear-family causal sessions ride the recurrent path:
+            // O(m·D²) per step, independent of history length
+            if matches!(self.plan, FamilyPlan::Recurrent) && batch.causal {
+                outcomes[b] = self.recurrent_seq(batch, b, sref, &mut out,
+                                                 ctx);
+                continue;
+            }
             let valid = batch.valid_len(b);
             let span = sref.span_start;
             let seed2 = session_seed(batch.seed, sref.cache.session);
@@ -652,6 +819,16 @@ impl CachingBackend {
                                                &mut rng, ctx)
                                         .row_span(span, valid)
                                 }
+                                // bidirectional linear sessions: the
+                                // kernel's span path is genuinely
+                                // incremental over the cached panels
+                                FamilyPlan::Recurrent => self
+                                    .kernel
+                                    .solve(&AttnProblem::new(&qf, &kf,
+                                                             &vf)
+                                           .with_query_span(span),
+                                           &mut rng, ctx)
+                                    .row_span(span, valid),
                                 FamilyPlan::ClusterModel {
                                     clusters, bits, iters, topk,
                                 } => {
@@ -693,7 +870,8 @@ impl CachingBackend {
                     let fv = gather(v, &[b]);
                     let lens = [valid];
                     let sub = AttnBatch::new(&fq, &fk, &fv, seed2)
-                        .with_lens(&lens);
+                        .with_lens(&lens)
+                        .with_causal(batch.causal);
                     let o = self.inner.execute(&sub, ctx);
                     for h in 0..heads {
                         out.slice_mut(b * heads + h)
@@ -714,6 +892,79 @@ impl CachingBackend {
             }
         }
         (out, outcomes)
+    }
+
+    /// One linear-family *causal* session sequence: a recurrent cache
+    /// transaction plus an O(m·D²) span walk, or a full causal
+    /// recompute + accumulator repopulation on a miss.
+    ///
+    /// On a hit the per-head state snapshot covers rows `0..span`; the
+    /// walk absorbs each new K/V row then emits its output row — the
+    /// exact elementary order of
+    /// [`causal_linear_attention_span_ctx`], which is what makes the
+    /// cached step bit-identical to the full recompute.  No RNG is
+    /// consumed (the linear kernel draws nothing).
+    ///
+    /// [`causal_linear_attention_span_ctx`]:
+    /// super::linear::causal_linear_attention_span_ctx
+    fn recurrent_seq(&self, batch: &AttnBatch<'_>, b: usize,
+                     sref: SessionRef, out: &mut BatchMatrix,
+                     ctx: &ExecCtx) -> SeqOutcome {
+        let (q, k, v) = (batch.q, batch.k, batch.v);
+        let heads = q.heads;
+        let (dk, dv) = (q.cols, v.cols);
+        let valid = batch.valid_len(b);
+        let span = sref.span_start;
+        let seed2 = session_seed(batch.seed, sref.cache.session);
+        let rows_of = |t: &BatchMatrix, r0: usize, r1: usize| {
+            (0..heads)
+                .map(|h| seq_rows(t, b * heads + h, r0, r1))
+                .collect::<Vec<Matrix>>()
+        };
+        let new_k = rows_of(k, span, valid);
+        let new_v = rows_of(v, span, valid);
+        match self.cache.step_recurrent(sref.cache, heads, dk, dv, span,
+                                        &new_k, &new_v) {
+            Some(states) => {
+                for (h, mut state) in states.into_iter().enumerate() {
+                    let qd = q.view(b * heads + h).data;
+                    let dst = out.slice_mut(b * heads + h);
+                    for r in 0..valid - span {
+                        state.absorb(new_k[h].row(r), new_v[h].row(r));
+                        let i = span + r;
+                        state.emit(&qd[i * dk..(i + 1) * dk],
+                                   &mut dst[i * dv..(i + 1) * dv]);
+                    }
+                }
+                SeqOutcome::Hit {
+                    reused_rows: span,
+                    computed_rows: valid - span,
+                    reclustered: false,
+                }
+            }
+            None => {
+                let fq = gather(q, &[b]);
+                let fk = gather(k, &[b]);
+                let fv = gather(v, &[b]);
+                let lens = [valid];
+                let sub = AttnBatch::new(&fq, &fk, &fv, seed2)
+                    .with_lens(&lens)
+                    .with_causal(true);
+                let o = self.inner.execute(&sub, ctx);
+                for h in 0..heads {
+                    out.slice_mut(b * heads + h)
+                        .copy_from_slice(o.view(h).data);
+                }
+                self.cache.populate_recurrent(sref.cache, heads, dk, dv,
+                                              &rows_of(k, 0, valid),
+                                              &rows_of(v, 0, valid));
+                self.cache
+                    .counters
+                    .recomputed_rows
+                    .fetch_add(valid as u64, Ordering::Relaxed);
+                SeqOutcome::Miss { recomputed_rows: valid }
+            }
+        }
     }
 }
 
@@ -895,10 +1146,34 @@ mod tests {
             .collect()
     }
 
-    fn run_step(backend: &CachingBackend, q: &BatchMatrix,
-                k: &BatchMatrix, v: &BatchMatrix, len: usize,
-                span: usize, seed: u64, sid: u64, gen: u64, workers: usize)
-                -> (BatchMatrix, SeqOutcome) {
+    /// The causal oracle: full *causal* recompute of the history with
+    /// the session streams, per head, sliced to the span (linear
+    /// family — the only causal-capable one).
+    fn causal_oracle_span(q: &BatchMatrix, k: &BatchMatrix,
+                          v: &BatchMatrix, len: usize, span: usize,
+                          seed: u64, sid: u64) -> Vec<Matrix> {
+        let kern = crate::attention::kernel_by_name("linear").unwrap();
+        let seed2 = session_seed(seed, sid);
+        (0..H)
+            .map(|h| {
+                let (qh, kh, vh) = (q.slice_valid(h, len),
+                                    k.slice_valid(h, len),
+                                    v.slice_valid(h, len));
+                let mut rng = slice_stream(seed2, h as u64);
+                kern.solve(&AttnProblem::new(&qh, &kh, &vh)
+                               .with_causal(true),
+                           &mut rng, &ExecCtx::sequential())
+                    .row_span(span, len)
+            })
+            .collect()
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn run_step_with(backend: &CachingBackend, q: &BatchMatrix,
+                     k: &BatchMatrix, v: &BatchMatrix, len: usize,
+                     span: usize, seed: u64, sid: u64, gen: u64,
+                     workers: usize, causal: bool)
+                     -> (BatchMatrix, SeqOutcome) {
         let (qp, kp, vp) = (prefix(q, len), prefix(k, len), prefix(v, len));
         let lens = [len];
         let sessions = [Some(SessionRef {
@@ -907,7 +1182,8 @@ mod tests {
         })];
         let batch = AttnBatch::new(&qp, &kp, &vp, seed)
             .with_lens(&lens)
-            .with_sessions(&sessions);
+            .with_sessions(&sessions)
+            .with_causal(causal);
         let ctx = if workers <= 1 {
             ExecCtx::sequential()
         } else {
@@ -915,6 +1191,22 @@ mod tests {
         };
         let (out, rep) = backend.execute_with_report(&batch, &ctx);
         (out, rep[0])
+    }
+
+    fn run_step(backend: &CachingBackend, q: &BatchMatrix,
+                k: &BatchMatrix, v: &BatchMatrix, len: usize,
+                span: usize, seed: u64, sid: u64, gen: u64, workers: usize)
+                -> (BatchMatrix, SeqOutcome) {
+        run_step_with(backend, q, k, v, len, span, seed, sid, gen,
+                      workers, false)
+    }
+
+    fn run_step_causal(backend: &CachingBackend, q: &BatchMatrix,
+                       k: &BatchMatrix, v: &BatchMatrix, len: usize,
+                       span: usize, seed: u64, sid: u64, gen: u64,
+                       workers: usize) -> (BatchMatrix, SeqOutcome) {
+        run_step_with(backend, q, k, v, len, span, seed, sid, gen,
+                      workers, true)
     }
 
     fn assert_span_matches(out: &BatchMatrix, want: &[Matrix],
@@ -931,7 +1223,8 @@ mod tests {
         let n = 24;
         let (q, k, v) = history(n, 1);
         for kernel in ["full", "shared-full", "oracle-top-4",
-                       "clustered-3", "i-clustered-3", "lsh-1"] {
+                       "clustered-3", "i-clustered-3", "lsh-1",
+                       "linear"] {
             let cache = Arc::new(KvCache::unbounded());
             let backend =
                 CachingBackend::native(kernel, cache.clone()).unwrap();
@@ -1173,5 +1466,202 @@ mod tests {
                                              21, 9),
                                 24, 32, kernel);
         }
+    }
+
+    #[test]
+    fn recurrent_steps_match_the_full_causal_recompute() {
+        let n = 24;
+        let (q, k, v) = history(n, 12);
+        let cache = Arc::new(KvCache::unbounded());
+        let backend =
+            CachingBackend::native("linear", cache.clone()).unwrap();
+        let plan = [(10usize, 0usize, 1usize), (17, 10, 3), (24, 17, 2)];
+        for (i, &(len, span, workers)) in plan.iter().enumerate() {
+            let (out, outcome) = run_step_causal(&backend, &q, &k, &v,
+                                                 len, span, 7, 42, 0,
+                                                 workers);
+            let want = causal_oracle_span(&q, &k, &v, len, span, 7, 42);
+            assert_span_matches(&out, &want, span, len,
+                                "linear-recurrent");
+            if i == 0 {
+                assert!(matches!(outcome,
+                                 SeqOutcome::Miss { recomputed_rows }
+                                 if recomputed_rows == len),
+                        "prefill should miss");
+            } else {
+                assert!(matches!(outcome,
+                                 SeqOutcome::Hit { reused_rows,
+                                                   computed_rows,
+                                                   reclustered: false }
+                                 if reused_rows == span
+                                    && computed_rows == len - span),
+                        "recurrent step should hit with computed_rows \
+                         {}, got {outcome:?}", len - span);
+                // only the span is computed: pre-span rows stay zero
+                for h in 0..H {
+                    let pre = seq_rows(&out, h, 0, span);
+                    assert!(pre.data.iter().all(|&x| x == 0.0),
+                            "head {h} pre-span not zero");
+                }
+            }
+        }
+        assert_eq!(cache.session_len(
+            CacheRef { session: 42, generation: 0 }), Some(n));
+        // the accumulator charges its constant row-equivalent, not len
+        assert_eq!(cache.used_rows(), recurrent_rows_equiv(D, D));
+        assert!(cache.counters().hit_rate() > 0.5);
+    }
+
+    #[test]
+    fn recurrent_zero_capacity_always_misses_but_stays_exact() {
+        let (q, k, v) = history(16, 13);
+        let cache = Arc::new(KvCache::with_capacity(0));
+        let backend =
+            CachingBackend::native("linear", cache.clone()).unwrap();
+        for &(len, span) in &[(8usize, 0usize), (12, 8), (16, 12)] {
+            let (out, outcome) = run_step_causal(&backend, &q, &k, &v,
+                                                 len, span, 3, 5, 0, 1);
+            let want = causal_oracle_span(&q, &k, &v, len, span, 3, 5);
+            assert_span_matches(&out, &want, span, len,
+                                "recurrent-cap0");
+            assert!(matches!(outcome, SeqOutcome::Miss { .. }));
+        }
+        assert_eq!(cache.used_rows(), 0);
+        assert_eq!(cache.counters().hits.load(Ordering::Relaxed), 0);
+        assert_eq!(cache.counters().misses.load(Ordering::Relaxed), 3);
+    }
+
+    #[test]
+    fn recurrent_stale_generation_misses_and_never_aliases() {
+        let (q, k, v) = history(16, 14);
+        let cache = Arc::new(KvCache::unbounded());
+        let backend =
+            CachingBackend::native("linear", cache.clone()).unwrap();
+        // generation 0 populates an accumulator
+        let _ = run_step_causal(&backend, &q, &k, &v, 8, 0, 9, 1, 0, 1);
+        assert_eq!(cache.session_len(
+            CacheRef { session: 1, generation: 0 }), Some(8));
+        // a *different history* under generation 1 must not see gen 0's
+        // accumulator (an aliased S/z would corrupt every later step)
+        let (q2, k2, v2) = history(16, 15);
+        let (out, outcome) =
+            run_step_causal(&backend, &q2, &k2, &v2, 12, 8, 9, 1, 1, 1);
+        assert!(matches!(outcome, SeqOutcome::Miss { .. }),
+                "stale generation must miss");
+        let want = causal_oracle_span(&q2, &k2, &v2, 12, 8, 9, 1);
+        assert_span_matches(&out, &want, 8, 12, "recurrent-gen-bump");
+        assert_eq!(cache.session_len(
+            CacheRef { session: 1, generation: 0 }), None);
+        assert_eq!(cache.session_len(
+            CacheRef { session: 1, generation: 1 }), Some(12));
+    }
+
+    #[test]
+    fn recurrent_eviction_falls_back_to_recompute_bit_identically() {
+        // an accumulator's charge never grows, so it cannot evict
+        // itself by stepping — eviction pressure comes from a
+        // *competing* session in a store that fits exactly one
+        let (q, k, v) = history(20, 16);
+        let (q2, k2, v2) = history(20, 17);
+        let cache = Arc::new(KvCache::with_capacity(
+            recurrent_rows_equiv(D, D)));
+        let backend =
+            CachingBackend::native("linear", cache.clone()).unwrap();
+        // session 7 prefills and owns the store
+        let (_, o0) =
+            run_step_causal(&backend, &q, &k, &v, 10, 0, 11, 7, 0, 1);
+        assert!(matches!(o0, SeqOutcome::Miss { .. }));
+        assert_eq!(cache.used_rows(), recurrent_rows_equiv(D, D));
+        // session 8's prefill evicts session 7 (LRU)
+        let (_, o1) =
+            run_step_causal(&backend, &q2, &k2, &v2, 10, 0, 11, 8, 0, 1);
+        assert!(matches!(o1, SeqOutcome::Miss { .. }));
+        assert!(cache.counters().evictions.load(Ordering::Relaxed) >= 1);
+        assert_eq!(cache.session_len(
+            CacheRef { session: 7, generation: 0 }), None, "LRU evicted");
+        // session 7's next step misses, recomputes bit-identically...
+        let (out2, o2) =
+            run_step_causal(&backend, &q, &k, &v, 14, 10, 11, 7, 0, 2);
+        assert!(matches!(o2, SeqOutcome::Miss { recomputed_rows: 14 }));
+        assert_span_matches(&out2,
+                            &causal_oracle_span(&q, &k, &v, 14, 10, 11,
+                                                7),
+                            10, 14, "post-evict recurrent step");
+        // ...re-owns the store, and the step after hits again
+        let (out3, o3) =
+            run_step_causal(&backend, &q, &k, &v, 18, 14, 11, 7, 0, 1);
+        assert!(matches!(o3, SeqOutcome::Hit { reused_rows: 14,
+                                               computed_rows: 4, .. }),
+                "got {o3:?}");
+        assert_span_matches(&out3,
+                            &causal_oracle_span(&q, &k, &v, 18, 14, 11,
+                                                7),
+                            14, 18, "re-owned recurrent step");
+    }
+
+    #[test]
+    fn recurrent_and_panel_entries_share_capacity_and_lru() {
+        // capacity fits one 8-row panel session plus one accumulator —
+        // both kinds compete in the same LRU order and row budget
+        let charge = recurrent_rows_equiv(D, D);
+        let cache = KvCache::with_capacity(8 + charge);
+        let panels = |n: usize, seed: u64| -> Vec<Matrix> {
+            let mut rng = Xoshiro256::new(seed);
+            (0..H).map(|_| Matrix::randn(n, D, &mut rng)).collect()
+        };
+        let r = |sid: u64| CacheRef { session: sid, generation: 0 };
+        cache.populate(r(1), H, D, D, panels(8, 1), panels(8, 2),
+                       panels(8, 3));
+        cache.populate_recurrent(r(2), H, D, D, &panels(8, 4),
+                                 &panels(8, 5));
+        assert_eq!(cache.used_rows(), 8 + charge);
+        // touching the recurrent session makes the panel one the LRU
+        // victim of the next populate
+        assert!(cache.step_recurrent(r(2), H, D, D, 8, &panels(2, 6),
+                                     &panels(2, 7)).is_some());
+        cache.populate(r(3), H, D, D, panels(8, 8), panels(8, 9),
+                       panels(8, 10));
+        assert_eq!(cache.session_len(r(1)), None,
+                   "panel entry was the LRU victim");
+        assert_eq!(cache.session_len(r(2)), Some(10));
+        assert_eq!(cache.session_len(r(3)), Some(8));
+        assert_eq!(cache.used_rows(), 8 + charge);
+    }
+
+    #[test]
+    fn panel_and_recurrent_kinds_never_serve_each_other() {
+        // the same session id flipping between causal (recurrent entry)
+        // and bidirectional (panel entry) use must miss on every flip,
+        // drop the other kind, and stay exact against its own oracle
+        let (q, k, v) = history(16, 18);
+        let cache = Arc::new(KvCache::unbounded());
+        let backend =
+            CachingBackend::native("linear", cache.clone()).unwrap();
+        // causal prefill → recurrent entry
+        let (_, o0) =
+            run_step_causal(&backend, &q, &k, &v, 8, 0, 19, 4, 0, 1);
+        assert!(matches!(o0, SeqOutcome::Miss { .. }));
+        assert_eq!(cache.used_rows(), recurrent_rows_equiv(D, D));
+        // a bidirectional step must not read the accumulator
+        let (out1, o1) = run_step(&backend, &q, &k, &v, 12, 8, 19, 4, 0,
+                                  1);
+        assert!(matches!(o1, SeqOutcome::Miss { .. }),
+                "kind mismatch must miss, got {o1:?}");
+        assert_span_matches(&out1,
+                            &oracle_span("linear", &q, &k, &v, 12, 8, 19,
+                                         4),
+                            8, 12, "recurrent-to-panel flip");
+        // the flip repopulated panels, charged by length again
+        assert_eq!(cache.used_rows(), 12);
+        // ...and back: the panel entry must not serve the causal step
+        let (out2, o2) =
+            run_step_causal(&backend, &q, &k, &v, 16, 12, 19, 4, 0, 1);
+        assert!(matches!(o2, SeqOutcome::Miss { .. }),
+                "kind mismatch must miss, got {o2:?}");
+        assert_span_matches(&out2,
+                            &causal_oracle_span(&q, &k, &v, 16, 12, 19,
+                                                4),
+                            12, 16, "panel-to-recurrent flip");
+        assert_eq!(cache.used_rows(), recurrent_rows_equiv(D, D));
     }
 }

@@ -148,6 +148,7 @@ impl AttentionKernel for ClusteredAttention {
     /// O(|affected|·N·D) instead of O(C·N·D).
     fn solve(&self, p: &AttnProblem<'_>, rng: &mut Xoshiro256,
              ctx: &ExecCtx) -> Matrix {
+        assert!(!p.causal, "clustered does not support causal attention");
         let (q, k, v) = p.valid_qkv();
         let cl = clustering::cluster_queries_ctx(
             &q, self.clusters, self.bits, self.iters, rng, ctx);

@@ -172,6 +172,7 @@ impl AttentionKernel for FullAttention {
     /// rows.  This is the incremental-decode hot path.
     fn solve(&self, p: &AttnProblem<'_>, _rng: &mut Xoshiro256,
              ctx: &ExecCtx) -> Matrix {
+        assert!(!p.causal, "full does not support causal attention");
         let (q, k, v) = p.valid_qkv();
         if p.is_spanned() {
             let qs = p.span_q();
@@ -209,6 +210,7 @@ impl AttentionKernel for SharedFullAttention {
     /// makes that bit-identical to the span rows of the full solve.
     fn solve(&self, p: &AttnProblem<'_>, _rng: &mut Xoshiro256,
              ctx: &ExecCtx) -> Matrix {
+        assert!(!p.causal, "shared-full does not support causal attention");
         let (q, _, v) = p.valid_qkv();
         if p.is_spanned() {
             let qs = p.span_q();

@@ -131,6 +131,8 @@ impl AttentionKernel for ImprovedClusteredAttention {
     /// that shared state between re-clusters.
     fn solve(&self, p: &AttnProblem<'_>, rng: &mut Xoshiro256,
              ctx: &ExecCtx) -> Matrix {
+        assert!(!p.causal,
+                "i-clustered does not support causal attention");
         let (q, k, v) = p.valid_qkv();
         let cl = crate::clustering::cluster_queries_ctx(
             &q, self.clusters, self.bits, self.iters, rng, ctx);

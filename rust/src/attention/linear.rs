@@ -1,0 +1,356 @@
+//! Linear (kernelized) attention — "Transformers are RNNs"
+//! (Katharopoulos et al., same authors as the source paper) — the sixth
+//! kernel family, and the only one that supports **causal** problems.
+//!
+//! Softmax is replaced by a positive feature map φ(x) = elu(x) + 1
+//! applied elementwise to queries and keys, which factorizes the
+//! attention matrix:
+//!
+//! ```text
+//! out_i = ( φ(q_i)ᵀ · S ) / ( φ(q_i) · z )
+//!     S  = Σ_j φ(k_j) v_jᵀ      (Dk × Dv)
+//!     z  = Σ_j φ(k_j)           (Dk)
+//! ```
+//!
+//! Bidirectionally the sums run over every valid key; causally they run
+//! over each row's own prefix `j ≤ i`, which makes attention an RNN
+//! with the constant-size [`RecurrentState`] `(S, z)` as its hidden
+//! state — the accumulator the KV-cache layer persists per session so a
+//! decode step costs O(m·D²) regardless of history length.
+//!
+//! ## The recurrent bit-identity contract
+//!
+//! The cached decode path must reproduce the full causal recompute
+//! **bit-for-bit**, so the accumulation order is pinned down once, in
+//! [`RecurrentState`]: keys are absorbed in ascending row order, each
+//! row elementwise with `a` (feature dim) ascending and `c` (value dim)
+//! ascending inside `a`; emission contracts `a` ascending with the same
+//! `1/den.max(1e-30)` guard the softmax kernels use.  Every consumer —
+//! the causal solve here, the cache's recurrent hits, the naive
+//! property-test reference — replays exactly that elementary order, so
+//! where the state came from (one shot, incremental steps, a replayed
+//! prefix on another worker) can never change an output bit.
+//!
+//! Parallelism follows the compute-core contract: output rows are
+//! partitioned over the [`ExecCtx`] pool.  Causal workers replay the
+//! key prefix below their range into a private accumulator first —
+//! redundant arithmetic, zero cross-worker coupling — so the reduction
+//! order per output row is independent of the worker count.
+
+use crate::exec::{par_rows, ExecCtx};
+use crate::prng::Xoshiro256;
+use crate::tensor::{axpy, Matrix};
+
+use super::{AttentionKernel, AttnProblem, Cost};
+
+/// The positive feature map φ(x) = elu(x) + 1 (strictly positive, so
+/// denominators never vanish for a nonempty key prefix).
+#[inline]
+pub fn feature_map(x: f32) -> f32 {
+    if x > 0.0 {
+        x + 1.0
+    } else {
+        x.exp()
+    }
+}
+
+/// The constant-size linear-attention accumulator `(S, z)`: everything
+/// a causal row needs to know about the keys at or below it, in
+/// `Dk·Dv + Dk` floats — per-token decode state that does **not** grow
+/// with history length (contrast the KV cache's O(len) panels).
+///
+/// The elementary accumulation order (module docs) is part of the type's
+/// contract: [`RecurrentState::absorb`] and [`RecurrentState::emit`] are
+/// the *only* arithmetic every linear-attention consumer performs, which
+/// is what makes cached decode bit-identical to the full recompute.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RecurrentState {
+    dk: usize,
+    dv: usize,
+    /// `S` (Dk × Dv), row-major: `s[a·Dv + c] = Σ_j φ(k_j)[a] · v_j[c]`.
+    s: Vec<f32>,
+    /// `z` (Dk): `z[a] = Σ_j φ(k_j)[a]`.
+    z: Vec<f32>,
+}
+
+impl RecurrentState {
+    /// Fresh zero state (the empty key prefix).
+    pub fn new(dk: usize, dv: usize) -> Self {
+        Self { dk, dv, s: vec![0.0; dk * dv], z: vec![0.0; dk] }
+    }
+
+    /// `(Dk, Dv)` geometry — cache entries check this before reuse.
+    #[inline]
+    pub fn dims(&self) -> (usize, usize) {
+        (self.dk, self.dv)
+    }
+
+    /// Bytes this state occupies — the per-session per-head decode
+    /// memory cost, constant in history length.
+    pub fn state_bytes(&self) -> usize {
+        (self.s.len() + self.z.len()) * std::mem::size_of::<f32>()
+    }
+
+    /// Fold one key/value row into the accumulator.  Fixed elementary
+    /// order — `a` ascending, `c` ascending within `a` — is the
+    /// bit-identity contract shared by every caller.
+    pub fn absorb(&mut self, k_row: &[f32], v_row: &[f32]) {
+        debug_assert_eq!(k_row.len(), self.dk, "k row width");
+        debug_assert_eq!(v_row.len(), self.dv, "v row width");
+        for a in 0..self.dk {
+            let f = feature_map(k_row[a]);
+            self.z[a] += f;
+            axpy(&mut self.s[a * self.dv..(a + 1) * self.dv], f, v_row);
+        }
+    }
+
+    /// Emit the output row for `q_row` against the current accumulator:
+    /// `out = (φ(q)ᵀ·S) · (1 / (φ(q)·z).max(1e-30))`, contracting `a`
+    /// ascending.  The guard mirrors the softmax kernels' zero-mass
+    /// fallback (an empty prefix emits zeros).
+    pub fn emit(&self, q_row: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(q_row.len(), self.dk, "q row width");
+        debug_assert_eq!(out.len(), self.dv, "out row width");
+        out.fill(0.0);
+        let mut den = 0.0f32;
+        for a in 0..self.dk {
+            let f = feature_map(q_row[a]);
+            den += f * self.z[a];
+            axpy(out, f, &self.s[a * self.dv..(a + 1) * self.dv]);
+        }
+        let inv = 1.0 / den.max(1e-30);
+        for o in out.iter_mut() {
+            *o *= inv;
+        }
+    }
+}
+
+/// Bidirectional linear attention: one shared `(S, z)` over *all* keys,
+/// then an independent emit per query row (partitioned over the ctx
+/// pool — emission is read-only on the state, so worker count can't
+/// move a bit).
+pub fn linear_attention_ctx(q: &Matrix, k: &Matrix, v: &Matrix,
+                            ctx: &ExecCtx) -> Matrix {
+    assert_eq!(q.cols, k.cols, "q/k dim mismatch");
+    assert_eq!(k.rows, v.rows, "k/v length mismatch");
+    let (n_q, dv) = (q.rows, v.cols);
+    let mut out = Matrix::zeros(n_q, dv);
+    if n_q == 0 || dv == 0 {
+        return out;
+    }
+    let mut state = RecurrentState::new(k.cols, dv);
+    for j in 0..k.rows {
+        state.absorb(k.row(j), v.row(j));
+    }
+    par_rows(ctx, &mut out.data, n_q, dv, |range, chunk| {
+        for r in range.clone() {
+            state.emit(q.row(r), &mut chunk[(r - range.start) * dv..][..dv]);
+        }
+    });
+    out
+}
+
+/// Causal linear attention emitting rows `span..n` (`span = 0` emits
+/// every row): row `i` absorbs keys `0..=i` before emitting.
+///
+/// Workers each replay the key prefix below their range into a private
+/// [`RecurrentState`] — the replayed arithmetic is the same ascending
+/// sequence of f32 ops no matter which worker performs it, so the
+/// output is bit-identical for any worker count (and to the
+/// accumulator-carrying decode path, which skips the replay entirely).
+pub fn causal_linear_attention_span_ctx(q: &Matrix, k: &Matrix, v: &Matrix,
+                                        span: usize, ctx: &ExecCtx)
+                                        -> Matrix {
+    assert_eq!(q.cols, k.cols, "q/k dim mismatch");
+    assert_eq!(q.rows, k.rows, "causal attention needs q/k of equal length");
+    assert_eq!(k.rows, v.rows, "k/v length mismatch");
+    assert!(span <= q.rows, "span {span} out of 0..={}", q.rows);
+    let (n, dv) = (q.rows, v.cols);
+    let rows = n - span;
+    let mut out = Matrix::zeros(rows, dv);
+    if rows == 0 || dv == 0 {
+        return out;
+    }
+    par_rows(ctx, &mut out.data, rows, dv, |range, chunk| {
+        let mut state = RecurrentState::new(k.cols, dv);
+        for j in 0..span + range.start {
+            state.absorb(k.row(j), v.row(j));
+        }
+        for r in range.clone() {
+            let i = span + r;
+            state.absorb(k.row(i), v.row(i));
+            state.emit(q.row(i), &mut chunk[(r - range.start) * dv..][..dv]);
+        }
+    });
+    out
+}
+
+/// Kernelized linear attention (feature map `elu(x)+1`), bidirectional
+/// and causal — O(N·Dk·Dv) instead of O(N²·D), and the only family with
+/// a constant-size recurrent decode state.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LinearAttention;
+
+impl AttentionKernel for LinearAttention {
+    fn name(&self) -> String {
+        "linear".into()
+    }
+
+    fn supports_causal(&self) -> bool {
+        true
+    }
+
+    /// Masking = solving the valid-prefix sub-problem (the accumulators
+    /// only ever absorb valid keys).  A bidirectional `query_span`
+    /// genuinely prunes emission to the span rows against the shared
+    /// full-key state; a causal span replays the key prefix and emits
+    /// only rows `span..valid` — in both cases bit-identical to the
+    /// same rows of the spanless solve, per the span contract.
+    fn solve(&self, p: &AttnProblem<'_>, _rng: &mut Xoshiro256,
+             ctx: &ExecCtx) -> Matrix {
+        let (q, k, v) = p.valid_qkv();
+        if p.causal {
+            let out = causal_linear_attention_span_ctx(&q, &k, &v,
+                                                       p.span_start(), ctx);
+            return p.restore_span(out);
+        }
+        if p.is_spanned() {
+            let qs = p.span_q();
+            return p.restore_span(linear_attention_ctx(&qs, &k, &v, ctx));
+        }
+        p.restore_rows(linear_attention_ctx(&q, &k, &v, ctx))
+    }
+
+    fn cost(&self, n: usize, dk: usize, dv: usize) -> Cost {
+        let (n64, dk64, dv64) = (n as u64, dk as u64, dv as u64);
+        Cost {
+            // absorb + emit are each ~2·Dk·(Dv+1) flops per row
+            flops: 4 * n64 * dk64 * (dv64 + 1),
+            // working set: one (S, z) accumulator per worker
+            bytes: 4 * (dk64 * dv64 + dk64),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::WorkerPool;
+    use crate::tensor::dot;
+
+    fn qkv(n: usize, dk: usize, dv: usize, seed: u64)
+           -> (Matrix, Matrix, Matrix) {
+        let mut rng = Xoshiro256::new(seed);
+        (Matrix::randn(n, dk, &mut rng), Matrix::randn(n, dk, &mut rng),
+         Matrix::randn(n, dv, &mut rng))
+    }
+
+    fn phi(row: &[f32]) -> Vec<f32> {
+        row.iter().map(|&x| feature_map(x)).collect()
+    }
+
+    #[test]
+    fn bidirectional_matches_the_explicit_weight_matrix() {
+        // out_i = Σ_j w_ij v_j with w_ij = φq_i·φk_j / Σ_j φq_i·φk_j —
+        // mathematically equal to the factorized path (float noise only)
+        let (q, k, v) = qkv(23, 6, 5, 1);
+        let got = linear_attention_ctx(&q, &k, &v, &ExecCtx::sequential());
+        for i in 0..q.rows {
+            let fq = phi(q.row(i));
+            let ws: Vec<f32> =
+                (0..k.rows).map(|j| dot(&fq, &phi(k.row(j)))).collect();
+            let mass: f32 = ws.iter().sum();
+            let mut want = vec![0.0f32; v.cols];
+            for (j, &w) in ws.iter().enumerate() {
+                axpy(&mut want, w / mass, v.row(j));
+            }
+            for (c, &w) in want.iter().enumerate() {
+                let g = got.data[i * v.cols + c];
+                assert!((g - w).abs() < 1e-4,
+                        "row {i} col {c}: {g} vs {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn causal_parallel_is_bit_identical_to_sequential() {
+        let (q, k, v) = qkv(97, 8, 8, 2);
+        let seq = causal_linear_attention_span_ctx(&q, &k, &v, 0,
+                                                   &ExecCtx::sequential());
+        for workers in [2, 3, 8] {
+            let ctx = ExecCtx::with_par_rows(WorkerPool::new(workers), 1);
+            let par = causal_linear_attention_span_ctx(&q, &k, &v, 0, &ctx);
+            assert!(par.bit_identical(&seq), "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn causal_last_row_equals_the_bidirectional_last_row() {
+        // row n-1 attends every key either way, and both paths absorb
+        // keys 0..n ascending into the same accumulator — bit-identical
+        let (q, k, v) = qkv(31, 4, 6, 3);
+        let c = causal_linear_attention_span_ctx(&q, &k, &v, 0,
+                                                 &ExecCtx::sequential());
+        let b = linear_attention_ctx(&q, &k, &v, &ExecCtx::sequential());
+        assert_eq!(c.row(30), b.row(30));
+    }
+
+    #[test]
+    fn span_emits_the_same_bits_as_the_full_causal_solve() {
+        let (q, k, v) = qkv(40, 5, 5, 4);
+        let full = causal_linear_attention_span_ctx(&q, &k, &v, 0,
+                                                    &ExecCtx::sequential());
+        for span in [1, 17, 39] {
+            let got = causal_linear_attention_span_ctx(
+                &q, &k, &v, span, &ExecCtx::sequential());
+            assert_eq!(got.rows, 40 - span);
+            for r in 0..got.rows {
+                assert_eq!(got.row(r), full.row(span + r), "span {span}");
+            }
+        }
+    }
+
+    #[test]
+    fn incremental_absorb_matches_the_from_scratch_state() {
+        // clone-and-continue (the cache's hit path) ≡ replay-from-zero
+        let (_, k, v) = qkv(12, 4, 3, 5);
+        let mut scratch = RecurrentState::new(4, 3);
+        for j in 0..8 {
+            scratch.absorb(k.row(j), v.row(j));
+        }
+        let mut carried = scratch.clone();
+        for j in 8..12 {
+            scratch.absorb(k.row(j), v.row(j));
+            carried.absorb(k.row(j), v.row(j));
+        }
+        assert_eq!(scratch, carried);
+        assert_eq!(carried.state_bytes(), (4 * 3 + 4) * 4);
+    }
+
+    #[test]
+    fn masked_causal_solve_matches_the_unpadded_prefix() {
+        let (q, k, v) = qkv(16, 4, 4, 6);
+        let mut rng = Xoshiro256::new(0);
+        let p = AttnProblem::new(&q, &k, &v)
+            .with_valid_len(9)
+            .with_causal(true);
+        let got = LinearAttention.solve(&p, &mut rng, &ExecCtx::sequential());
+        let (qp, kp, vp) = (q.row_prefix(9), k.row_prefix(9), v.row_prefix(9));
+        let want = causal_linear_attention_span_ctx(&qp, &kp, &vp, 0,
+                                                    &ExecCtx::sequential());
+        assert_eq!((got.rows, got.cols), (16, 4));
+        assert_eq!(&got.data[..9 * 4], &want.data[..]);
+        assert!(got.data[9 * 4..].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn empty_prefix_emits_zero_rows_through_the_guard() {
+        let mut rng = Xoshiro256::new(7);
+        let q = Matrix::randn(4, 8, &mut rng);
+        let k = Matrix::zeros(0, 8);
+        let v = Matrix::zeros(0, 8);
+        let out = linear_attention_ctx(&q, &k, &v, &ExecCtx::sequential());
+        assert_eq!((out.rows, out.cols), (4, 8));
+        assert!(out.data.iter().all(|&x| x == 0.0));
+    }
+}

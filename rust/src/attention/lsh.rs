@@ -155,6 +155,7 @@ impl AttentionKernel for LshAttention {
     /// the recompute.
     fn solve(&self, p: &AttnProblem<'_>, rng: &mut Xoshiro256,
              ctx: &ExecCtx) -> Matrix {
+        assert!(!p.causal, "lsh does not support causal attention");
         let (q, _, v) = p.valid_qkv();
         let out = reformer_attention_ctx(&q, &v, self.rounds, self.chunk,
                                          rng, ctx);

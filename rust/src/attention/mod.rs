@@ -4,15 +4,15 @@
 //!
 //! Layout:
 //!  - one file per kernel family ([`full`], [`clustered`], [`improved`],
-//!    [`oracle`], [`lsh`]), each exporting its free functions (the
-//!    historical API, still the substrate of the golden tests) plus an
-//!    [`AttentionKernel`] implementation;
+//!    [`oracle`], [`lsh`], [`linear`]), each exporting its free
+//!    functions (the historical API, still the substrate of the golden
+//!    tests) plus an [`AttentionKernel`] implementation;
 //!  - [`problem`] owns the request descriptors ([`AttnProblem`] /
 //!    [`AttnBatch`]) every entry point takes — Q/K/V views plus the
 //!    per-request options (the valid-length mask, the incremental
-//!    `query_span`, and the KV-cache handles [`CacheRef`] /
-//!    [`SessionRef`]) — so options travel through one struct instead
-//!    of ever-growing argument lists;
+//!    `query_span`, the `causal` flag, and the KV-cache handles
+//!    [`CacheRef`] / [`SessionRef`]) — so options travel through one
+//!    struct instead of ever-growing argument lists;
 //!  - [`backend`] owns the [`AttentionBackend`] execution seam (the
 //!    native engine today; compiled-HLO and sharded backends plug in
 //!    behind the same descriptor);
@@ -61,12 +61,21 @@
 //! coupled families (clustered prunes to affected clusters; improved
 //! and LSH recompute) emit the same bits either way.  See [`problem`]
 //! and [`cache`].
+//!
+//! **Causal capability:** `causal = true` on a descriptor requests
+//! autoregressive attention (row `i` attends keys `0..=i`).  Causality
+//! is a per-kernel capability, not a universal contract:
+//! [`AttentionKernel::supports_causal`] defaults to `false`, only the
+//! [`linear`] family opts in, and the execution entry points reject
+//! causal batches for non-supporting kernels up front.  For supporting
+//! kernels the masking and span contracts hold verbatim under `causal`.
 
 pub mod backend;
 pub mod cache;
 pub mod clustered;
 pub mod full;
 pub mod improved;
+pub mod linear;
 pub mod lsh;
 pub mod oracle;
 pub mod problem;
@@ -84,6 +93,8 @@ pub use full::{full_attention, full_attention_materialized,
 pub use improved::{improved_clustered_attention,
                    improved_clustered_attention_matrix,
                    ImprovedClusteredAttention};
+pub use linear::{causal_linear_attention_span_ctx, linear_attention_ctx,
+                 LinearAttention, RecurrentState};
 pub use lsh::{reformer_attention, LshAttention};
 pub use oracle::{oracle_top_attention, OracleTopAttention};
 pub use problem::{AttnBatch, AttnProblem, CacheRef, SessionRef};
@@ -112,6 +123,7 @@ pub enum Variant {
                         topk: usize },
     OracleTop { topk: usize },
     Lsh { rounds: usize, chunk: usize },
+    Linear,
 }
 
 impl Variant {
@@ -127,6 +139,7 @@ impl Variant {
             }
             Variant::OracleTop { topk } => format!("oracle-top-{topk}"),
             Variant::Lsh { rounds, .. } => format!("lsh-{rounds}"),
+            Variant::Linear => "linear".into(),
         }
     }
 
@@ -179,6 +192,14 @@ pub trait AttentionKernel: Send + Sync {
     /// Closed-form cost of one slice (matches §3 complexity claims).
     fn cost(&self, n: usize, dk: usize, dv: usize) -> Cost;
 
+    /// Does this kernel accept causal (`row i attends keys 0..=i`)
+    /// problems?  Defaults to `false`; only the [`linear`] family opts
+    /// in.  Non-supporting kernels assert on a causal descriptor, and
+    /// the batched entry points reject causal batches up front.
+    fn supports_causal(&self) -> bool {
+        false
+    }
+
     /// Batched multi-head forward over (batch × head) slices.
     ///
     /// Output slice `s` is a pure function of
@@ -192,6 +213,8 @@ pub trait AttentionKernel: Send + Sync {
         // public descriptor fields can bypass the constructors —
         // re-assert the invariants at the execution boundary
         batch.validate();
+        assert!(!batch.causal || self.supports_causal(),
+                "kernel {} does not support causal attention", self.name());
         let (q, k, v) = (batch.q, batch.k, batch.v);
         let mut out = BatchMatrix::zeros(q.batch, q.heads, q.rows, v.cols);
         if out.slices() == 0 || out.slice_len() == 0 {
@@ -211,8 +234,9 @@ pub trait AttentionKernel: Send + Sync {
             let (qs, ks, vs) =
                 (q.slice_valid(s, l), k.slice_valid(s, l),
                  v.slice_valid(s, l));
-            let o = self.solve(&AttnProblem::new(&qs, &ks, &vs), &mut rng,
-                               &inner);
+            let o = self.solve(&AttnProblem::new(&qs, &ks, &vs)
+                                   .with_causal(batch.causal),
+                               &mut rng, &inner);
             // rows l.. of the chunk stay zero — masked rows by contract
             chunk[..l * dv].copy_from_slice(&o.data);
         });
@@ -226,6 +250,8 @@ pub trait AttentionKernel: Send + Sync {
 pub fn solve_batch_seq(kernel: &dyn AttentionKernel, batch: &AttnBatch<'_>)
                        -> BatchMatrix {
     batch.validate();
+    assert!(!batch.causal || kernel.supports_causal(),
+            "kernel {} does not support causal attention", kernel.name());
     let (q, k, v) = (batch.q, batch.k, batch.v);
     let mut out = BatchMatrix::zeros(q.batch, q.heads, q.rows, v.cols);
     if out.slices() == 0 || out.slice_len() == 0 {
@@ -238,8 +264,9 @@ pub fn solve_batch_seq(kernel: &dyn AttentionKernel, batch: &AttnBatch<'_>)
         let l = batch.slice_valid_len(s);
         let (qs, ks, vs) =
             (q.slice_valid(s, l), k.slice_valid(s, l), v.slice_valid(s, l));
-        let o = kernel.solve(&AttnProblem::new(&qs, &ks, &vs), &mut rng,
-                             &ctx);
+        let o = kernel.solve(&AttnProblem::new(&qs, &ks, &vs)
+                                 .with_causal(batch.causal),
+                             &mut rng, &ctx);
         out.slice_mut(s)[..l * dv].copy_from_slice(&o.data);
     }
     out
@@ -288,12 +315,17 @@ fn parse_lsh(name: &str) -> Option<Variant> {
     Some(Variant::Lsh { rounds, chunk: DEFAULT_CHUNK })
 }
 
+fn parse_linear(name: &str) -> Option<Variant> {
+    (name == "linear").then_some(Variant::Linear)
+}
+
 /// Every kernel family, keyed by paper-notation name.
 pub static REGISTRY: &[KernelFamily] = &[
     KernelFamily { key: "i-clustered", parse: parse_improved },
     KernelFamily { key: "clustered", parse: parse_clustered },
     KernelFamily { key: "oracle-top", parse: parse_oracle },
     KernelFamily { key: "lsh", parse: parse_lsh },
+    KernelFamily { key: "linear", parse: parse_linear },
     KernelFamily { key: "shared-full", parse: parse_shared_full },
     KernelFamily { key: "full", parse: parse_full },
 ];
@@ -323,6 +355,7 @@ pub fn kernel_for(variant: &Variant) -> Box<dyn AttentionKernel> {
         Variant::Lsh { rounds, chunk } => {
             Box::new(LshAttention { rounds: *rounds, chunk: *chunk })
         }
+        Variant::Linear => Box::new(LinearAttention),
     }
 }
 
@@ -482,20 +515,22 @@ mod tests {
                                          topk: 8 },
             Variant::OracleTop { topk: 8 },
             Variant::Lsh { rounds: 2, chunk: 16 },
+            Variant::Linear,
         ]
     }
 
     #[test]
     fn registry_resolves_every_paper_name() {
         for name in ["full", "shared-full", "clustered-100",
-                     "i-clustered-100", "oracle-top-32", "lsh-4"] {
+                     "i-clustered-100", "oracle-top-32", "lsh-4",
+                     "linear"] {
             let kernel = kernel_by_name(name)
                 .unwrap_or_else(|| panic!("registry missed {name}"));
             assert_eq!(kernel.name(), name);
             assert_eq!(Variant::parse(name).unwrap().name(), name);
         }
         for bad in ["", "fullx", "clustered-", "i-clustered-x",
-                    "oracle-top--3", "lshx-1"] {
+                    "oracle-top--3", "lshx-1", "linear-4"] {
             assert!(kernel_by_name(bad).is_none(), "{bad:?} resolved");
         }
         assert_eq!(kernel_families().len(), REGISTRY.len());
@@ -649,7 +684,8 @@ mod tests {
         let v = BatchMatrix::randn(2, 1, 8, 4, &mut rng);
         let lens = [5usize]; // one entry for a 2-sequence batch
         let bad = AttnBatch { q: &q, k: &k, v: &v, seed: 0,
-                              lens: Some(&lens), sessions: None };
+                              lens: Some(&lens), sessions: None,
+                              causal: false };
         let _ = kernel_for(&Variant::Full)
             .solve_batch(&bad, &ExecCtx::sequential());
     }
@@ -659,10 +695,55 @@ mod tests {
     fn kernels_validate_literally_constructed_problems() {
         let (q, k, v, _) = qkv(8, 4, 4, 61);
         let bad = AttnProblem { q: &q, k: &k, v: &v, valid_len: Some(99),
-                                query_span: None };
+                                query_span: None, causal: false };
         let mut rng = Xoshiro256::new(0);
         let _ = kernel_for(&Variant::Full).solve(&bad, &mut rng,
                                                  &ExecCtx::sequential());
+    }
+
+    #[test]
+    fn only_the_linear_family_accepts_causal_batches() {
+        for var in test_variants() {
+            let kernel = kernel_for(&var);
+            assert_eq!(kernel.supports_causal(), var == Variant::Linear,
+                       "{}", var.name());
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "causal")]
+    fn causal_batches_are_rejected_for_non_supporting_kernels() {
+        let mut rng = Xoshiro256::new(62);
+        let q = BatchMatrix::randn(1, 1, 8, 4, &mut rng);
+        let k = BatchMatrix::randn(1, 1, 8, 4, &mut rng);
+        let v = BatchMatrix::randn(1, 1, 8, 4, &mut rng);
+        let batch = AttnBatch::new(&q, &k, &v, 0).with_causal(true);
+        let _ = kernel_for(&Variant::Full)
+            .solve_batch(&batch, &ExecCtx::sequential());
+    }
+
+    #[test]
+    fn causal_linear_batch_matches_the_sequential_loop() {
+        use crate::exec::WorkerPool;
+        let mut rng = Xoshiro256::new(63);
+        let (b, h, n, d) = (2, 2, 48, 8);
+        let q = BatchMatrix::randn(b, h, n, d, &mut rng);
+        let k = BatchMatrix::randn(b, h, n, d, &mut rng);
+        let v = BatchMatrix::randn(b, h, n, d, &mut rng);
+        let lens = [31usize, 48];
+        let batch = AttnBatch::new(&q, &k, &v, 5)
+            .with_lens(&lens)
+            .with_causal(true);
+        let kernel = kernel_for(&Variant::Linear);
+        let par = kernel.solve_batch(
+            &batch, &ExecCtx::with_par_rows(WorkerPool::new(4), 1));
+        let seq = solve_batch_seq(kernel.as_ref(), &batch);
+        assert!(par.bit_identical(&seq));
+        // causal actually changes the math vs the bidirectional solve
+        let bi = kernel.solve_batch(
+            &AttnBatch::new(&q, &k, &v, 5).with_lens(&lens),
+            &ExecCtx::sequential());
+        assert!(!par.bit_identical(&bi));
     }
 
     #[test]

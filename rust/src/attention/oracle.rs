@@ -61,6 +61,7 @@ impl AttentionKernel for OracleTopAttention {
     /// span rows bit-for-bit.
     fn solve(&self, p: &AttnProblem<'_>, _rng: &mut Xoshiro256,
              ctx: &ExecCtx) -> Matrix {
+        assert!(!p.causal, "oracle-top does not support causal attention");
         let (q, k, v) = p.valid_qkv();
         if p.is_spanned() {
             let qs = p.span_q();

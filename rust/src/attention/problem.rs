@@ -50,6 +50,22 @@
 //! LSH bucket sorts) may compute more internally but must emit the
 //! identical span bits.  The span requires a self-shaped problem
 //! (`q.rows == k.rows`, the serving layout), like masking.
+//!
+//! ## Causal masking
+//!
+//! `causal = true` declares autoregressive attention: query row `i`
+//! attends keys `0..=i` only (its own prefix, self included).  The
+//! descriptors were bidirectional-only before the linear family landed;
+//! causality is a *kernel capability*, not a universal contract — only
+//! kernels whose [`AttentionKernel::supports_causal`] returns `true`
+//! accept a causal descriptor (the rest assert), and execution entry
+//! points reject causal batches for non-supporting kernels up front.
+//! Causal composes with the other options: masking restricts the key
+//! prefix to the valid rows, a `query_span` restricts which rows are
+//! emitted (each span row still attends exactly its own key prefix),
+//! and the span contract holds verbatim — causal span rows are
+//! bit-identical to the same rows of the spanless causal solve.  Like
+//! masking, causal needs a self-shaped problem (`q.rows == k.rows`).
 
 use std::borrow::Cow;
 
@@ -126,12 +142,16 @@ pub struct AttnProblem<'a> {
     /// First query row that needs computing (incremental decode);
     /// `None` = all valid rows.  See the span contract (module docs).
     pub query_span: Option<usize>,
+    /// Autoregressive masking: row `i` attends keys `0..=i` only.
+    /// Kernel capability, not a universal contract (module docs).
+    pub causal: bool,
 }
 
 impl<'a> AttnProblem<'a> {
     /// Dense problem: every row of `q`/`k`/`v` is valid.
     pub fn new(q: &'a Matrix, k: &'a Matrix, v: &'a Matrix) -> Self {
-        let p = Self { q, k, v, valid_len: None, query_span: None };
+        let p =
+            Self { q, k, v, valid_len: None, query_span: None, causal: false };
         p.validate();
         p
     }
@@ -153,6 +173,15 @@ impl<'a> AttnProblem<'a> {
     /// `start == 0` is legal and equivalent to no span.
     pub fn with_query_span(mut self, start: usize) -> Self {
         self.query_span = Some(start);
+        self.validate();
+        self
+    }
+
+    /// Declare autoregressive attention: row `i` attends keys `0..=i`.
+    /// Requires a self-shaped problem (`q.rows == k.rows`) and a kernel
+    /// whose [`super::AttentionKernel::supports_causal`] is `true`.
+    pub fn with_causal(mut self, causal: bool) -> Self {
+        self.causal = causal;
         self.validate();
         self
     }
@@ -206,6 +235,10 @@ impl<'a> AttnProblem<'a> {
                        "query_span needs q/k of equal length");
             assert!(s < self.valid(),
                     "query_span {s} leaves no row in 0..{}", self.valid());
+        }
+        if self.causal {
+            assert_eq!(self.q.rows, self.k.rows,
+                       "causal attention needs q/k of equal length");
         }
     }
 
@@ -297,13 +330,18 @@ pub struct AttnBatch<'a> {
     /// streams from the session (`prng::session_seed`), not its batch
     /// slot, so its output is invariant to co-batching.
     pub sessions: Option<&'a [Option<SessionRef>]>,
+    /// Autoregressive masking for every sequence of the batch: row `i`
+    /// attends keys `0..=i` of its own sequence.  Kernel capability —
+    /// see the module docs and [`AttnProblem::causal`].
+    pub causal: bool,
 }
 
 impl<'a> AttnBatch<'a> {
     /// Dense batch: every row of every slice is valid.
     pub fn new(q: &'a BatchMatrix, k: &'a BatchMatrix, v: &'a BatchMatrix,
                seed: u64) -> Self {
-        let b = Self { q, k, v, seed, lens: None, sessions: None };
+        let b = Self { q, k, v, seed, lens: None, sessions: None,
+                       causal: false };
         b.validate();
         b
     }
@@ -320,6 +358,15 @@ impl<'a> AttnBatch<'a> {
     pub fn with_sessions(mut self,
                          sessions: &'a [Option<SessionRef>]) -> Self {
         self.sessions = Some(sessions);
+        self.validate();
+        self
+    }
+
+    /// Declare every sequence autoregressive (row `i` attends keys
+    /// `0..=i`).  Execution entry points reject causal batches for
+    /// kernels that don't support causality.
+    pub fn with_causal(mut self, causal: bool) -> Self {
+        self.causal = causal;
         self.validate();
         self
     }
@@ -459,6 +506,34 @@ mod tests {
         let _ = AttnProblem::new(&q, &k, &v)
             .with_valid_len(5)
             .with_query_span(5); // leaves no active row
+    }
+
+    #[test]
+    fn causal_flag_travels_and_composes_with_mask_and_span() {
+        let (q, k, v) = qkv(8, 4, 11);
+        let p = AttnProblem::new(&q, &k, &v)
+            .with_valid_len(6)
+            .with_query_span(4)
+            .with_causal(true);
+        assert!(p.causal && p.is_masked() && p.is_spanned());
+        // with_causal(false) is the bidirectional default
+        assert!(!AttnProblem::new(&q, &k, &v).with_causal(false).causal);
+        let mut rng = Xoshiro256::new(12);
+        let bq = BatchMatrix::randn(2, 1, 8, 4, &mut rng);
+        let bk = BatchMatrix::randn(2, 1, 8, 4, &mut rng);
+        let bv = BatchMatrix::randn(2, 1, 8, 4, &mut rng);
+        let b = AttnBatch::new(&bq, &bk, &bv, 3).with_causal(true);
+        assert!(b.causal);
+    }
+
+    #[test]
+    #[should_panic(expected = "causal")]
+    fn causal_rejects_cross_shaped_problems() {
+        let mut rng = Xoshiro256::new(13);
+        let q = Matrix::randn(4, 2, &mut rng);
+        let k = Matrix::randn(6, 2, &mut rng); // q.rows != k.rows
+        let v = Matrix::randn(6, 2, &mut rng);
+        let _ = AttnProblem::new(&q, &k, &v).with_causal(true);
     }
 
     #[test]

@@ -54,10 +54,16 @@
 //! ```text
 //! {"id":1,"op":"solve","kernel":"full","batch":2,"heads":4,"rows":128,
 //!  "dk":32,"dv":32,"seed":"00..0f","slice_base":"0..8",
-//!  "lens":[100,128]?,
+//!  "lens":[100,128]?,"causal":true?,
 //!  "session":{"id":"..","generation":"..","span_start":96}?}\n
 //! <q: B·H·N·Dk f32s> <k: B·H·N·Dk f32s> <v: B·H·N·Dv f32s>
 //! ```
+//!
+//! `causal` is emitted only when `true` and parsed leniently (absent =
+//! `false`), so pre-causal gateways and workers interoperate
+//! unchanged.  Tensor frames are streamed through a fixed-size chunk
+//! buffer ([`write_f32s`]) rather than materialised as one
+//! frame-sized byte vector per tensor.
 //!
 //! reply: `{"id":1,"ok":true,"batch":..,"heads":..,"rows":..,"cols":..,
 //! "outcome":{..}?}\n` followed by the output frame, or `{"id",
@@ -115,8 +121,9 @@ pub fn solve_batch_offset(kernel: &dyn AttentionKernel,
         let (qs, ks, vs) =
             (q.slice_valid(s, l), k.slice_valid(s, l),
              v.slice_valid(s, l));
-        let o = kernel.solve(&AttnProblem::new(&qs, &ks, &vs), &mut rng,
-                             &inner);
+        let o = kernel.solve(&AttnProblem::new(&qs, &ks, &vs)
+                                 .with_causal(batch.causal),
+                             &mut rng, &inner);
         chunk[..l * dv].copy_from_slice(&o.data);
     });
     out
@@ -146,6 +153,9 @@ pub struct ShardRequest {
     pub seed: u64,
     pub slice_base: u64,
     pub lens: Option<Vec<usize>>,
+    /// Autoregressive masking — only causal-capable kernels (the linear
+    /// family) accept it; the engine rejects the rest with an error.
+    pub causal: bool,
     pub session: Option<ShardSession>,
 }
 
@@ -251,10 +261,17 @@ impl ShardEngine {
                 return Err(anyhow!("lens entry out of 1..={}", q.rows));
             }
         }
+        if req.causal && !entry.kernel.supports_causal() {
+            // part of the trust boundary: an error reply, not the
+            // assert the kernel itself would raise
+            return Err(anyhow!("kernel {:?} does not support causal \
+                                attention", req.kernel));
+        }
         let ctx = self.ctx();
         match req.session {
             None => {
-                let mut batch = AttnBatch::new(q, k, v, req.seed);
+                let mut batch = AttnBatch::new(q, k, v, req.seed)
+                    .with_causal(req.causal);
                 if let Some(lens) = req.lens.as_deref() {
                     batch = batch.with_lens(lens);
                 }
@@ -282,7 +299,8 @@ impl ShardEngine {
                 let lens = [valid];
                 let batch = AttnBatch::new(q, k, v, req.seed)
                     .with_lens(&lens)
-                    .with_sessions(&sessions);
+                    .with_sessions(&sessions)
+                    .with_causal(req.causal);
                 let (out, outcomes) =
                     entry.cached.execute_with_report(&batch, &ctx);
                 Ok(ShardReply { out, outcome: Some(outcomes[0]) })
@@ -347,14 +365,23 @@ pub(crate) fn parse_hex_u64(v: &Value) -> Result<u64> {
         .map_err(|e| anyhow!("bad hex u64 {s:?}: {e}"))
 }
 
-/// Write one raw little-endian f32 frame.
+/// Write one raw little-endian f32 frame, pipelined: the floats stream
+/// through a fixed 32 KiB chunk buffer instead of materialising a
+/// second frame-sized byte vector per tensor, so writer memory is O(1)
+/// in frame size and the first chunks reach the socket while later
+/// ones are still being encoded.
 pub(crate) fn write_f32s(w: &mut impl Write, xs: &[f32])
                          -> std::io::Result<()> {
-    let mut buf = Vec::with_capacity(xs.len() * 4);
-    for &x in xs {
-        buf.extend_from_slice(&x.to_le_bytes());
+    const CHUNK_ELEMS: usize = 8192; // 32 KiB per write
+    let mut buf = Vec::with_capacity(CHUNK_ELEMS.min(xs.len()) * 4);
+    for chunk in xs.chunks(CHUNK_ELEMS) {
+        buf.clear();
+        for &x in chunk {
+            buf.extend_from_slice(&x.to_le_bytes());
+        }
+        w.write_all(&buf)?;
     }
-    w.write_all(&buf)
+    Ok(())
 }
 
 /// Read exactly `n` little-endian f32s.
@@ -384,6 +411,11 @@ fn solve_header(id: i64, req: &ShardRequest) -> Value {
     if let Some(lens) = &req.lens {
         fields.push(("lens", lens.clone().into()));
     }
+    if req.causal {
+        // emitted only when set: a non-causal header is byte-identical
+        // to the pre-causal protocol
+        fields.push(("causal", true.into()));
+    }
     if let Some(s) = &req.session {
         fields.push(("session", obj(vec![
             ("id", hex_u64(s.session).into()),
@@ -406,6 +438,7 @@ pub(crate) struct SolveHeader {
     pub seed: u64,
     pub slice_base: u64,
     pub lens: Option<Vec<usize>>,
+    pub causal: bool,
     pub session: Option<ShardSession>,
 }
 
@@ -445,6 +478,8 @@ impl SolveHeader {
             seed: parse_hex_u64(req.get("seed"))?,
             slice_base: parse_hex_u64(req.get("slice_base"))?,
             lens,
+            // lenient: absent (pre-causal peers) means false
+            causal: req.get("causal").as_bool().unwrap_or(false),
             session,
         })
     }
@@ -908,6 +943,7 @@ impl ShardedBackend {
                 seed: batch.seed,
                 slice_base: (part.seq0 * heads + part.head0) as u64,
                 lens,
+                causal: batch.causal,
                 session: None,
             };
             // one part per healthy shard (the planner emits at most
@@ -932,6 +968,7 @@ impl ShardedBackend {
                     seed: batch.seed,
                     slice_base: 0,
                     lens: Some(vec![valid]),
+                    causal: batch.causal,
                     session: Some(ShardSession {
                         session: sref.cache.session,
                         generation: sref.cache.generation,
@@ -1028,7 +1065,8 @@ impl ShardedBackend {
         match req.session {
             None => {
                 let mut b = AttnBatch::new(&req.q, &req.k, &req.v,
-                                           req.seed);
+                                           req.seed)
+                    .with_causal(req.causal);
                 if let Some(lens) = req.lens.as_deref() {
                     b = b.with_lens(lens);
                 }
@@ -1048,7 +1086,8 @@ impl ShardedBackend {
                     .unwrap_or_else(|| vec![req.q.rows]);
                 let b = AttnBatch::new(&req.q, &req.k, &req.v, req.seed)
                     .with_lens(&lens)
-                    .with_sessions(&sessions);
+                    .with_sessions(&sessions)
+                    .with_causal(req.causal);
                 let (out, outcomes) =
                     self.local.execute_with_report(&b, ctx);
                 ShardReply { out, outcome: Some(outcomes[0]) }
@@ -1199,6 +1238,54 @@ mod tests {
     }
 
     #[test]
+    fn causal_linear_sessions_match_the_single_host_cache() {
+        // the recurrent decode state rides the same consistent-hash
+        // session placement as KV panels: a sharded causal linear
+        // session is bit-identical to the single-host caching backend
+        let (q, k, v) = qkv(3, 2, 24, 8, 99);
+        for shards in [1usize, 3] {
+            let sharded =
+                ShardedBackend::in_process("linear", shards, 1).unwrap();
+            let reference = CachingBackend::native(
+                "linear", Arc::new(KvCache::unbounded())).unwrap();
+            let ctx = ExecCtx::sequential();
+            let sid = 43u64;
+            let steps = [(12usize, 0usize), (18, 12), (24, 18)];
+            for (step, &(len, span)) in steps.iter().enumerate() {
+                let lens = [20usize, len, 24];
+                let sessions = [
+                    None,
+                    Some(SessionRef {
+                        cache: CacheRef { session: sid, generation: 1 },
+                        span_start: span,
+                    }),
+                    None,
+                ];
+                let batch = AttnBatch::new(&q, &k, &v, 9)
+                    .with_lens(&lens)
+                    .with_sessions(&sessions)
+                    .with_causal(true);
+                let (got, got_oc) =
+                    sharded.execute_with_report(&batch, &ctx);
+                let (want, want_oc) =
+                    reference.execute_with_report(&batch, &ctx);
+                assert!(got.bit_identical(&want),
+                        "shards={shards} step {step} diverged");
+                assert_eq!(got_oc, want_oc,
+                           "shards={shards} step {step} outcomes");
+                if step > 0 {
+                    assert!(matches!(got_oc[1],
+                                     SeqOutcome::Hit { computed_rows,
+                                                       .. }
+                                     if computed_rows == len - span),
+                            "shards={shards} step {step} should hit the \
+                             owner's recurrent state");
+                }
+            }
+        }
+    }
+
+    #[test]
     fn end_session_releases_the_owning_shards_cache() {
         let engines: Vec<Arc<ShardEngine>> =
             (0..2).map(|_| Arc::new(ShardEngine::new(1))).collect();
@@ -1291,6 +1378,22 @@ mod tests {
             read_f32s(&mut std::io::Cursor::new(buf), xs.len()).unwrap();
         assert_eq!(got.iter().map(|x| x.to_bits()).collect::<Vec<u32>>(),
                    xs.iter().map(|x| x.to_bits()).collect::<Vec<u32>>());
+        // frames longer than the streaming chunk arrive intact and in
+        // order (the pipelined writer splits them into several writes)
+        let mut rng = Xoshiro256::new(17);
+        let big = crate::tensor::Matrix::randn(300, 100, &mut rng).data;
+        assert!(big.len() > 3 * 8192, "must span several chunks");
+        let mut buf = Vec::new();
+        write_f32s(&mut buf, &big).unwrap();
+        assert_eq!(buf.len(), big.len() * 4);
+        let got =
+            read_f32s(&mut std::io::Cursor::new(buf), big.len()).unwrap();
+        assert!(got.iter().zip(&big).all(|(a, b)| a.to_bits()
+                                         == b.to_bits()));
+        // the empty frame writes nothing
+        let mut buf = Vec::new();
+        write_f32s(&mut buf, &[]).unwrap();
+        assert!(buf.is_empty());
     }
 
     #[test]
@@ -1305,6 +1408,7 @@ mod tests {
             seed: u64::MAX - 12,
             slice_base: (1u64 << 60) | 7,
             lens: Some(vec![3]),
+            causal: true,
             session: Some(ShardSession {
                 session: (1u64 << 63) | 5,
                 generation: u64::MAX,
@@ -1318,11 +1422,16 @@ mod tests {
         assert_eq!(hdr.seed, u64::MAX - 12);
         assert_eq!(hdr.slice_base, (1u64 << 60) | 7);
         assert_eq!(hdr.lens.as_deref(), Some(&[3usize][..]));
+        assert!(hdr.causal);
         let s = hdr.session.unwrap();
         assert_eq!((s.session, s.generation, s.span_start),
                    ((1u64 << 63) | 5, u64::MAX, 2));
         assert_eq!((hdr.batch, hdr.heads, hdr.rows, hdr.dk, hdr.dv),
                    (1, 2, 4, 3, 3));
+        // a causal-less header (pre-causal peer) parses as false
+        let legacy = line.replace("\"causal\":true,", "");
+        let hdr2 = SolveHeader::parse(&parse(&legacy).unwrap()).unwrap();
+        assert!(!hdr2.causal);
     }
 
     #[test]
@@ -1348,6 +1457,7 @@ mod tests {
             seed: 0,
             slice_base: 0,
             lens: None,
+            causal: false,
             session,
         };
         assert!(engine.solve(&ShardRequest {
@@ -1367,6 +1477,12 @@ mod tests {
             .solve(&base(Some(ShardSession { session: 1, generation: 0,
                                              span_start: 0 })))
             .is_err());
+        // causal on a non-supporting kernel is an error reply, not the
+        // kernel's panic
+        assert!(engine.solve(&ShardRequest {
+            causal: true,
+            ..base(None)
+        }).is_err());
         // and a well-formed request still solves
         assert!(engine.solve(&base(None)).is_ok());
     }

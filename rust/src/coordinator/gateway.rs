@@ -22,6 +22,14 @@
 //! historical static-shape semantics (padded K rows participating in
 //! softmax) for comparison benches.
 //!
+//! **Causal serving:** `GatewayOptions { causal: true, … }` marks every
+//! flush descriptor autoregressive (row `i` attends keys `j <= i`);
+//! start-time validation requires every bucket kernel to support it
+//! (the linear family).  Causal decode sessions ride the KV cache's
+//! recurrent-state path: each step updates a per-session `(S, z)`
+//! accumulator and costs O(new rows · D²) regardless of history
+//! length, still bit-identical to the full causal recompute.
+//!
 //! Admission control: `submit` fails fast with backpressure when queues
 //! are full, but first *routes up* — a request that overflows its tight
 //! bucket spills into the next larger bucket, trading padding waste for
@@ -203,6 +211,12 @@ pub struct GatewayOptions {
     /// session step and on demand via
     /// [`ServingGateway::sweep_expired`].
     pub session_ttl: Option<Duration>,
+    /// Serve autoregressive (causal) attention: every flush descriptor
+    /// carries the causal flag, so row `i` attends keys `j <= i` only.
+    /// Requires every bucket kernel to support causal masking (the
+    /// linear family) — validated at start.  Decode sessions under a
+    /// causal gateway ride the O(1) recurrent-state cache path.
+    pub causal: bool,
     /// `ct shard-worker` addresses.  Empty (default) = single-host
     /// serving; non-empty = every bucket fans out across these hosts
     /// through an `attention::ShardedBackend` (see module docs).
@@ -225,6 +239,7 @@ impl Default for GatewayOptions {
             cache_capacity_rows: usize::MAX,
             cache_growth: 1.0,
             session_ttl: None,
+            causal: false,
             shards: Vec::new(),
             shard_opts: ShardOptions::default(),
         }
@@ -380,6 +395,15 @@ impl ServingGateway {
                 bail!("bucket kernel {:?} not in the attention registry \
                        (native buckets only; see Bucket::native)", b.kernel);
             }
+            if opts.causal
+                && !crate::attention::kernel_by_name(&b.kernel)
+                    .expect("validated above")
+                    .supports_causal()
+            {
+                bail!("bucket kernel {:?} does not support causal \
+                       attention (GatewayOptions::causal needs a \
+                       causal-capable family, e.g. linear)", b.kernel);
+            }
         }
         let router = Router::new(buckets)?;
         let pool = Arc::new(if opts.workers == 0 {
@@ -426,6 +450,7 @@ impl ServingGateway {
                 seed: opts.seed,
                 par_rows: opts.par_rows,
                 mask: opts.mask,
+                causal: opts.causal,
             };
             let policy = BatchPolicy {
                 max_batch: bucket.batch_size,
@@ -843,6 +868,26 @@ pub fn span_rows(out: &BatchMatrix, slot: usize, span_start: usize,
 pub fn unpadded_reference(kernel: &dyn AttentionKernel, shape: GatewayShape,
                           seed: u64, slot: usize, q: &[f32], k: &[f32],
                           v: &[f32], len: usize) -> Vec<f32> {
+    unpadded_reference_impl(kernel, shape, seed, slot, q, k, v, len, false)
+}
+
+/// [`unpadded_reference`] for a causal gateway: the per-head problems
+/// carry the causal flag, so the reference is the autoregressive
+/// computation a `GatewayOptions { causal: true, … }` response must
+/// match bit-for-bit.
+#[allow(clippy::too_many_arguments)]
+pub fn unpadded_reference_causal(kernel: &dyn AttentionKernel,
+                                 shape: GatewayShape, seed: u64,
+                                 slot: usize, q: &[f32], k: &[f32],
+                                 v: &[f32], len: usize) -> Vec<f32> {
+    unpadded_reference_impl(kernel, shape, seed, slot, q, k, v, len, true)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn unpadded_reference_impl(kernel: &dyn AttentionKernel,
+                           shape: GatewayShape, seed: u64, slot: usize,
+                           q: &[f32], k: &[f32], v: &[f32], len: usize,
+                           causal: bool) -> Vec<f32> {
     assert_eq!(q.len(), shape.qk_len(len), "q block is not (H, len, Dk)");
     assert_eq!(k.len(), shape.qk_len(len), "k block is not (H, len, Dk)");
     assert_eq!(v.len(), shape.v_len(len), "v block is not (H, len, Dv)");
@@ -860,8 +905,9 @@ pub fn unpadded_reference(kernel: &dyn AttentionKernel, shape: GatewayShape,
         let vm = Matrix::from_vec(len, dv,
                                   v[h * len * dv..(h + 1) * len * dv]
                                       .to_vec());
-        let o = kernel.solve(&AttnProblem::new(&qm, &km, &vm), &mut rng,
-                             &ExecCtx::sequential());
+        let o = kernel.solve(&AttnProblem::new(&qm, &km, &vm)
+                                 .with_causal(causal),
+                             &mut rng, &ExecCtx::sequential());
         out.extend_from_slice(&o.data);
     }
     out
@@ -880,6 +926,29 @@ pub fn session_reference(kernel: &dyn AttentionKernel, shape: GatewayShape,
                          seed: u64, session: u64, q: &[f32], k: &[f32],
                          v: &[f32], len: usize, span_start: usize)
                          -> Vec<f32> {
+    session_reference_impl(kernel, shape, seed, session, q, k, v, len,
+                           span_start, false)
+}
+
+/// [`session_reference`] for a causal gateway: the full-history
+/// recompute is autoregressive, so this is the oracle a causal decode
+/// step — recurrent-state hit or full-recompute miss — must match
+/// bit-for-bit.
+#[allow(clippy::too_many_arguments)]
+pub fn session_reference_causal(kernel: &dyn AttentionKernel,
+                                shape: GatewayShape, seed: u64,
+                                session: u64, q: &[f32], k: &[f32],
+                                v: &[f32], len: usize, span_start: usize)
+                                -> Vec<f32> {
+    session_reference_impl(kernel, shape, seed, session, q, k, v, len,
+                           span_start, true)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn session_reference_impl(kernel: &dyn AttentionKernel,
+                          shape: GatewayShape, seed: u64, session: u64,
+                          q: &[f32], k: &[f32], v: &[f32], len: usize,
+                          span_start: usize, causal: bool) -> Vec<f32> {
     assert_eq!(q.len(), shape.qk_len(len), "q block is not (H, len, Dk)");
     assert_eq!(k.len(), shape.qk_len(len), "k block is not (H, len, Dk)");
     assert_eq!(v.len(), shape.v_len(len), "v block is not (H, len, Dv)");
@@ -899,8 +968,9 @@ pub fn session_reference(kernel: &dyn AttentionKernel, shape: GatewayShape,
         let vm = Matrix::from_vec(len, dv,
                                   v[h * len * dv..(h + 1) * len * dv]
                                       .to_vec());
-        let o = kernel.solve(&AttnProblem::new(&qm, &km, &vm), &mut rng,
-                             &ExecCtx::sequential());
+        let o = kernel.solve(&AttnProblem::new(&qm, &km, &vm)
+                                 .with_causal(causal),
+                             &mut rng, &ExecCtx::sequential());
         out.extend_from_slice(&o.data[span_start * dv..]);
     }
     out
@@ -948,6 +1018,7 @@ struct BucketWorker {
     seed: u64,
     par_rows: usize,
     mask: bool,
+    causal: bool,
 }
 
 impl BucketWorker {
@@ -1002,7 +1073,8 @@ impl BucketWorker {
         let sessions: Vec<Option<SessionRef>> =
             batch.iter().map(|r| r.session).collect();
         let any_session = sessions.iter().any(|s| s.is_some());
-        let mut descriptor = AttnBatch::new(&q, &k, &v, self.seed);
+        let mut descriptor = AttnBatch::new(&q, &k, &v, self.seed)
+            .with_causal(self.causal);
         if self.mask {
             descriptor = descriptor.with_lens(&lens);
         }
@@ -1534,6 +1606,12 @@ mod tests {
         let none = ServingGateway::start(SHAPE, vec![],
                                          GatewayOptions::default());
         assert!(none.is_err());
+        // causal serving needs a causal-capable kernel in every bucket
+        let causal_full = ServingGateway::start(
+            SHAPE, vec![Bucket::native("full", 16, 2)],
+            GatewayOptions { causal: true, ..GatewayOptions::default() });
+        assert!(format!("{}", causal_full.unwrap_err())
+            .contains("causal"));
     }
 
     #[test]
@@ -1742,6 +1820,94 @@ mod tests {
         assert!(report
             .iter()
             .all(|r| r.len() == BUCKET_REPORT_HEADERS.len()));
+        gw.shutdown();
+    }
+
+    #[test]
+    fn causal_linear_sessions_ride_the_recurrent_cache_path() {
+        let gw = ServingGateway::start(
+            SHAPE,
+            vec![Bucket::native("linear", 32, 2)],
+            GatewayOptions {
+                max_wait: Duration::from_millis(2),
+                seed: 29,
+                causal: true,
+                ..GatewayOptions::default()
+            },
+        )
+        .unwrap();
+        // one session: prefill 10, steps to 16 and 22 — every causal
+        // reply must equal the autoregressive full-history recompute,
+        // and post-prefill steps must hit the recurrent-state entry
+        // (computed rows == the span only: O(1) decode)
+        let trace = synthetic_decode_trace(SHAPE, 10, 2, 6, 1, 44);
+        let kernel = kernel_by_name("linear").unwrap();
+        let mut prev_len = 0usize;
+        for (step, item) in trace.iter().enumerate() {
+            let rx = gw
+                .submit_session_blocking(item.q.clone(), item.k.clone(),
+                                         item.v.clone(), item.len, 0)
+                .unwrap();
+            let resp = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+            assert_eq!(resp.cache_hit, Some(step > 0),
+                       "prefill misses, steps hit the recurrent state");
+            let want = session_reference_causal(
+                kernel.as_ref(), SHAPE, 29, 0, &item.q, &item.k,
+                &item.v, item.len, prev_len);
+            assert!(same_bits(&resp.out, &want),
+                    "causal step {step} diverged from the \
+                     autoregressive recompute");
+            prev_len = item.len;
+        }
+        let m = &gw.bucket_metrics()[0];
+        assert_eq!(m.cache_hits.load(Ordering::Relaxed), 2);
+        assert_eq!(m.cache_misses.load(Ordering::Relaxed), 1);
+        // recurrent hits materialize only the span rows
+        assert_eq!(m.saved_rows.load(Ordering::Relaxed), (10 + 16) as u64);
+        // the recurrent entry's charge is constant and tiny — far below
+        // the 22 rows a panel entry for this history would pin
+        assert!(gw.cache().used_rows() > 0 && gw.cache().used_rows() < 22);
+        gw.end_session(0);
+        assert_eq!(gw.cache().used_rows(), 0);
+        gw.shutdown();
+    }
+
+    #[test]
+    fn causal_one_shot_requests_match_the_causal_unpadded_reference() {
+        let gw = ServingGateway::start(
+            SHAPE,
+            vec![Bucket::native("linear", 32, 2)],
+            GatewayOptions {
+                max_wait: Duration::from_secs(10),
+                workers: 4,
+                seed: 13,
+                causal: true,
+                ..GatewayOptions::default()
+            },
+        )
+        .unwrap();
+        let (l0, l1) = (20, 32);
+        let (q0, k0, v0) =
+            (block(l0, 8, 1), block(l0, 8, 2), block(l0, 8, 3));
+        let (q1, k1, v1) =
+            (block(l1, 8, 4), block(l1, 8, 5), block(l1, 8, 6));
+        let rx0 = gw
+            .submit_blocking(q0.clone(), k0.clone(), v0.clone(), l0)
+            .unwrap();
+        let rx1 = gw
+            .submit_blocking(q1.clone(), k1.clone(), v1.clone(), l1)
+            .unwrap();
+        let r0 = rx0.recv_timeout(Duration::from_secs(30)).unwrap();
+        let r1 = rx1.recv_timeout(Duration::from_secs(30)).unwrap();
+        let kernel = kernel_by_name("linear").unwrap();
+        let u0 = unpadded_reference_causal(kernel.as_ref(), SHAPE, 13, 0,
+                                           &q0, &k0, &v0, l0);
+        let u1 = unpadded_reference_causal(kernel.as_ref(), SHAPE, 13, 1,
+                                           &q1, &k1, &v1, l1);
+        assert!(same_bits(&r0.out, &u0),
+                "causal masked response != causal unpadded (slot 0)");
+        assert!(same_bits(&r1.out, &u1),
+                "causal masked response != causal unpadded (slot 1)");
         gw.shutdown();
     }
 

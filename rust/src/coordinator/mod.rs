@@ -38,11 +38,12 @@ pub mod trainer;
 pub use batcher::{BatchPolicy, Batcher};
 pub use datafeed::DataFeed;
 pub use gateway::{bucket_report, pad_batch, replay_blocking,
-                  session_reference, span_rows, synthetic_decode_trace,
-                  synthetic_trace, unpadded_reference, valid_rows,
-                  BucketMetrics, GatewayOptions, GatewayRequest,
-                  GatewayResponse, GatewayShape, ServingGateway,
-                  TraceItem, BUCKET_REPORT_HEADERS};
+                  session_reference, session_reference_causal, span_rows,
+                  synthetic_decode_trace, synthetic_trace,
+                  unpadded_reference, unpadded_reference_causal,
+                  valid_rows, BucketMetrics, GatewayOptions,
+                  GatewayRequest, GatewayResponse, GatewayShape,
+                  ServingGateway, TraceItem, BUCKET_REPORT_HEADERS};
 pub use ring::HashRing;
 pub use router::{Bucket, Router};
 pub use serve::{AttnRequest, AttnResponse, AttnShape, InferenceEngine,

@@ -21,7 +21,8 @@
 //! - [`attention::AttnProblem`] / [`attention::AttnBatch`] — the
 //!   request descriptors every kernel entry point takes: Q/K/V views
 //!   plus per-request options (valid-length masks, seeding, the
-//!   incremental `query_span`, and KV-cache handles
+//!   incremental `query_span`, the autoregressive `causal` flag, and
+//!   KV-cache handles
 //!   [`attention::CacheRef`] / [`attention::SessionRef`]).  The
 //!   **masking contract**: solving bucket-padded inputs with
 //!   `valid_len`/`lens` set is bit-identical to solving the unpadded
@@ -29,15 +30,22 @@
 //!   `query_span = s` emits rows `s..valid` bit-identical to the
 //!   spanless solve — the incremental-decode primitive.
 //! - [`attention::AttentionKernel`] — one algorithm (full, clustered,
-//!   improved-clustered, oracle-top, LSH), one file per family under
-//!   `attention/`, resolvable by paper-notation name through the
+//!   improved-clustered, oracle-top, LSH, linear), one file per family
+//!   under `attention/`, resolvable by paper-notation name through the
 //!   name-keyed [`attention::REGISTRY`] (e.g. `"i-clustered-100"`).
+//!   The kernelized [`attention::LinearAttention`] family is the only
+//!   one that accepts causal problems: causal linear attention is an
+//!   RNN whose constant-size hidden state
+//!   ([`attention::RecurrentState`], one `(S: Dk×Dv, z: Dk)`
+//!   accumulator per head) the cache layer persists per session, so a
+//!   decode step costs O(m·D²) *independent of history length*.
 //! - [`attention::AttentionBackend`] — the execution seam over
 //!   descriptors: [`attention::NativeBackend`] plus
 //!   [`attention::CachingBackend`], which wraps any backend with a
 //!   per-session [`attention::KvCache`] so decode steps solve only
 //!   their new rows — bit-identical to the full unpadded recompute of
-//!   the history, hits and misses alike; and
+//!   the history, hits and misses alike (causal linear sessions pin a
+//!   `RecurrentState` accumulator instead of O(len) panels); and
 //!   [`attention::ShardedBackend`], the multi-host fan-out that splits
 //!   a descriptor across TCP shard workers (`ct shard-worker`), routes
 //!   decode sessions by consistent hash ([`coordinator::HashRing`])

@@ -267,6 +267,10 @@ fn cmd_gateway(rest: &[String]) -> Result<()> {
         .flag("no-mask",
               "disable valid-length masking: padded rows participate in \
                the compute (pre-masking static-shape semantics)")
+        .flag("causal",
+              "autoregressive attention: row i attends keys j <= i; \
+               needs a causal-capable kernel (--kernel linear) and \
+               decode sessions take the O(1) recurrent-state cache path")
         .opt("session-ttl-ms", Some("0"),
              "evict decode sessions idle this long (0 = never); \
               releases their cache capacity and table entries")
@@ -326,6 +330,7 @@ fn cmd_gateway(rest: &[String]) -> Result<()> {
         session_ttl: if ttl_ms == 0 { None } else {
             Some(std::time::Duration::from_millis(ttl_ms))
         },
+        causal: args.flag("causal"),
         shards,
         shard_opts: attention::ShardOptions::default(),
     };

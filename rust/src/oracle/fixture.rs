@@ -246,6 +246,12 @@ pub struct FixtureSpec {
     pub seed: u64,
     /// Valid-length masking (`GatewayOptions::mask`).
     pub masked: bool,
+    /// Autoregressive serving (`GatewayOptions::causal`): needs a
+    /// causal-capable kernel (the linear family); decode sessions then
+    /// pin the O(1) recurrent-state cache path.  Emitted in the header
+    /// only when true and parsed leniently, so pre-causal fixture
+    /// files load unchanged.
+    pub causal: bool,
     /// 0 = single-host native serving; N = fan out over N local
     /// `ct shard-worker` instances spawned for the run (the multi-host
     /// path, exercised hermetically).
@@ -274,7 +280,7 @@ impl FixtureSpec {
     }
 
     pub fn to_value(&self) -> Value {
-        obj(vec![
+        let mut fields = vec![
             ("name", self.name.as_str().into()),
             ("kernel", self.kernel.as_str().into()),
             ("heads", self.heads.into()),
@@ -284,9 +290,14 @@ impl FixtureSpec {
                 self.buckets.iter().map(|&n| n.into()).collect())),
             ("seed", hex_u64(self.seed).into()),
             ("masked", self.masked.into()),
-            ("shards", self.shards.into()),
-            ("trace", self.trace.to_value()),
-        ])
+        ];
+        // emitted only when true: pre-causal headers stay byte-stable
+        if self.causal {
+            fields.push(("causal", true.into()));
+        }
+        fields.push(("shards", self.shards.into()));
+        fields.push(("trace", self.trace.to_value()));
+        obj(fields)
     }
 
     pub fn from_value(v: &Value) -> Result<Self> {
@@ -318,6 +329,8 @@ impl FixtureSpec {
             masked: v.get("masked")
                 .as_bool()
                 .ok_or_else(|| anyhow!("fixture spec: missing masked"))?,
+            // lenient: absent in pre-causal headers means false
+            causal: v.get("causal").as_bool().unwrap_or(false),
             shards: field("shards")?,
             trace: TraceSpec::from_value(v.get("trace"))?,
         };
@@ -702,6 +715,7 @@ mod tests {
             buckets: vec![8, 16],
             seed: 0xDEAD_BEEF_0000_0001,
             masked: true,
+            causal: false,
             shards: 0,
             trace: TraceSpec::Mixed {
                 min_len: 2, max_len: 12, count: 5,
@@ -713,9 +727,17 @@ mod tests {
     #[test]
     fn spec_roundtrips_through_json() {
         let spec = demo_spec();
-        let v = jsonio::parse(&jsonio::to_string(&spec.to_value()))
-            .unwrap();
+        let text = jsonio::to_string(&spec.to_value());
+        let v = jsonio::parse(&text).unwrap();
         assert_eq!(FixtureSpec::from_value(&v).unwrap(), spec);
+        // causal is emitted only when true, so pre-causal headers stay
+        // byte-stable — and absent parses as false
+        assert!(!text.contains("causal"));
+        let causal = FixtureSpec { causal: true, ..demo_spec() };
+        let text = jsonio::to_string(&causal.to_value());
+        assert!(text.contains("\"causal\":true"));
+        let v = jsonio::parse(&text).unwrap();
+        assert_eq!(FixtureSpec::from_value(&v).unwrap(), causal);
     }
 
     #[test]

@@ -109,12 +109,13 @@ pub fn default_baseline_dir() -> PathBuf {
 // ---------------------------------------------------------------------------
 
 /// The checked-in fixture suite `ct oracle record`/`replay`/`bless`
-/// operate on by default.  Kept deliberately small — six fixtures
+/// operate on by default.  Kept deliberately small — seven fixtures
 /// covering the serving matrix: identity (hand-auditable), ragged
 /// masked, ragged *unmasked* (static-shape semantics: padded keys
 /// participate, still deterministic at batch 1), a clustered kernel,
-/// decode sessions (masking required there), and sharded fan-out with
-/// a mixed trace.
+/// decode sessions (masking required there), sharded fan-out with a
+/// mixed trace, and causal linear decode sessions (pinning the O(1)
+/// recurrent-state cache path bit-for-bit).
 pub fn standard_suite() -> Vec<FixtureSpec> {
     vec![
         FixtureSpec {
@@ -126,6 +127,7 @@ pub fn standard_suite() -> Vec<FixtureSpec> {
             buckets: vec![8],
             seed: 7,
             masked: true,
+            causal: false,
             shards: 0,
             trace: TraceSpec::IdentityLen1 { count: 6 },
         },
@@ -138,6 +140,7 @@ pub fn standard_suite() -> Vec<FixtureSpec> {
             buckets: vec![8, 16, 32, 64],
             seed: 11,
             masked: true,
+            causal: false,
             shards: 0,
             trace: TraceSpec::Ragged {
                 min_len: 3, max_len: 48, count: 24,
@@ -152,6 +155,7 @@ pub fn standard_suite() -> Vec<FixtureSpec> {
             buckets: vec![8, 16, 32, 64],
             seed: 19,
             masked: false,
+            causal: false,
             shards: 0,
             trace: TraceSpec::Ragged {
                 min_len: 3, max_len: 48, count: 12,
@@ -166,6 +170,7 @@ pub fn standard_suite() -> Vec<FixtureSpec> {
             buckets: vec![8, 16, 32, 64],
             seed: 13,
             masked: true,
+            causal: false,
             shards: 0,
             trace: TraceSpec::Ragged {
                 min_len: 8, max_len: 64, count: 16,
@@ -180,6 +185,7 @@ pub fn standard_suite() -> Vec<FixtureSpec> {
             buckets: vec![8, 16, 32],
             seed: 17,
             masked: true,
+            causal: false,
             shards: 0,
             trace: TraceSpec::Decode {
                 prefill: 6, steps: 3, step_len: 2, sessions: 3,
@@ -194,10 +200,26 @@ pub fn standard_suite() -> Vec<FixtureSpec> {
             buckets: vec![8, 16, 32],
             seed: 23,
             masked: true,
+            causal: false,
             shards: 2,
             trace: TraceSpec::Mixed {
                 min_len: 3, max_len: 24, count: 10,
                 prefill: 5, steps: 2, step_len: 2, sessions: 2,
+            },
+        },
+        FixtureSpec {
+            name: "linear-causal-decode".into(),
+            kernel: "linear".into(),
+            heads: 2,
+            dk: 8,
+            dv: 8,
+            buckets: vec![8, 16, 32],
+            seed: 29,
+            masked: true,
+            causal: true,
+            shards: 0,
+            trace: TraceSpec::Decode {
+                prefill: 6, steps: 3, step_len: 2, sessions: 2,
             },
         },
     ]
@@ -281,6 +303,7 @@ pub fn run_spec(spec: &FixtureSpec, lanes: usize) -> Result<RecordedRun> {
         max_wait: Duration::from_millis(1),
         seed: spec.seed,
         mask: spec.masked,
+        causal: spec.causal,
         shards: shard_addrs,
         ..GatewayOptions::default()
     };
@@ -495,6 +518,7 @@ mod tests {
             buckets: vec![8, 16],
             seed: 41,
             masked: true,
+            causal: false,
             shards: 0,
             trace: TraceSpec::Mixed {
                 min_len: 2, max_len: 12, count: 6,
@@ -514,6 +538,26 @@ mod tests {
             replay_fixture(&fx, &TolerancePolicy::default(), false);
         assert!(res.passed, "failures: {:?}", res.failures);
         assert_eq!(res.checked_responses, fx.responses.len());
+        assert_eq!(res.mismatched_elems, 0);
+    }
+
+    #[test]
+    fn causal_linear_fixture_records_recurrent_hits_and_replays() {
+        let spec = FixtureSpec {
+            kernel: "linear".into(),
+            causal: true,
+            trace: TraceSpec::Decode {
+                prefill: 4, steps: 2, step_len: 1, sessions: 2,
+            },
+            ..small_spec("unit-causal")
+        };
+        let fx = record_spec(&spec).unwrap();
+        // the decode steps hit the recurrent-state cache entries
+        assert!(fx.responses.iter().any(|r| r.cache_hit == Some(true)));
+        assert!(fx.metrics.cache_hits >= 4);
+        let res =
+            replay_fixture(&fx, &TolerancePolicy::default(), false);
+        assert!(res.passed, "failures: {:?}", res.failures);
         assert_eq!(res.mismatched_elems, 0);
     }
 

@@ -55,6 +55,19 @@
 //!     requests get composed into batches can never move bits.  This
 //!     is the invariant the golden-trace oracle leans on — fixtures
 //!     recorded at one lane count must replay bit-exactly at another.
+//! 12. **Causal linear ≡ naive kernelized reference** — the linear
+//!     family's O(N·D²) prefix-accumulator causal solve equals, bit for
+//!     bit, a naive O(N²·D) reference that rebuilds row `i`'s `(S, z)`
+//!     from scratch over keys `0..=i` in the pinned elementary order —
+//!     across ragged valid lengths, spans and worker counts.
+//! 13. **Recurrent decode contract** — a causal linear decode session
+//!     through a `CachingBackend` (the O(1) `RecurrentState` cache
+//!     path) produces, at every step, span rows bit-identical to the
+//!     full causal recompute of the history on the session streams —
+//!     across eviction points (a zero-capacity cache turns every hit
+//!     into an equally-exact miss) and through a `ShardedBackend` at
+//!     shard counts {1, 3}, where sessions stick to their
+//!     consistent-hash owner.
 
 use std::sync::Arc;
 use std::time::Duration;
@@ -88,6 +101,7 @@ fn all_variants() -> Vec<Variant> {
                                      topk: 8 },
         Variant::OracleTop { topk: 8 },
         Variant::Lsh { rounds: 2, chunk: 16 },
+        Variant::Linear,
     ]
 }
 
@@ -369,8 +383,8 @@ fn decode_prefix(t: &BatchMatrix, len: usize) -> BatchMatrix {
 #[allow(clippy::too_many_arguments)]
 fn run_session(kernel: &str, growth: f64, capacity: usize,
                q: &BatchMatrix, k: &BatchMatrix, v: &BatchMatrix,
-               lens: &[usize], workers: usize, seed: u64, sid: u64)
-               -> Vec<(Vec<f32>, SeqOutcome)> {
+               lens: &[usize], workers: usize, seed: u64, sid: u64,
+               causal: bool) -> Vec<(Vec<f32>, SeqOutcome)> {
     let cache = Arc::new(KvCache::new(KvCacheOptions {
         capacity_rows: capacity,
         growth,
@@ -396,7 +410,8 @@ fn run_session(kernel: &str, growth: f64, capacity: usize,
         })];
         let batch = AttnBatch::new(&qp, &kp, &vp, seed)
             .with_lens(&blens)
-            .with_sessions(&sessions);
+            .with_sessions(&sessions)
+            .with_causal(causal);
         let (out, rep) = backend.execute_with_report(&batch, &ctx);
         let mut rows = Vec::with_capacity(heads * (len - span) * dv);
         for h in 0..heads {
@@ -429,6 +444,27 @@ fn recompute_span(kernel: &str, q: &BatchMatrix, k: &BatchMatrix,
     rows
 }
 
+/// The causal decode oracle: per head, the full *causal* recompute of
+/// the history on the session streams, sliced to the span.
+fn recompute_causal_span(kernel: &str, q: &BatchMatrix, k: &BatchMatrix,
+                         v: &BatchMatrix, len: usize, span: usize,
+                         seed: u64, sid: u64) -> Vec<f32> {
+    let kern = kernel_by_name(kernel).expect("kernel");
+    let seed2 = session_seed(seed, sid);
+    let dv = v.cols;
+    let mut rows = Vec::new();
+    for h in 0..q.heads {
+        let (qh, kh, vh) = (q.slice_valid(h, len), k.slice_valid(h, len),
+                            v.slice_valid(h, len));
+        let mut rng = slice_stream(seed2, h as u64);
+        let o = kern.solve(
+            &AttnProblem::new(&qh, &kh, &vh).with_causal(true), &mut rng,
+            &ExecCtx::sequential());
+        rows.extend_from_slice(&o.data[span * dv..len * dv]);
+    }
+    rows
+}
+
 fn same_bits(a: &[f32], b: &[f32]) -> bool {
     a.len() == b.len()
         && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
@@ -437,7 +473,7 @@ fn same_bits(a: &[f32], b: &[f32]) -> bool {
 #[test]
 fn prop_cached_decode_is_bit_identical_to_full_recompute() {
     let families = ["full", "shared-full", "oracle-top-4", "clustered-3",
-                    "i-clustered-3", "lsh-1"];
+                    "i-clustered-3", "lsh-1", "linear"];
     forall(
         "CachingBackend decode ≡ full unpadded recompute, all families, \
          ragged histories × eviction points × worker counts",
@@ -468,7 +504,7 @@ fn prop_cached_decode_is_bit_identical_to_full_recompute() {
             let (q, k, v, lens, capacity, workers, seed) = case;
             for kernel in families {
                 let steps = run_session(kernel, 1.0, *capacity, q, k, v,
-                                        lens, *workers, *seed, 77);
+                                        lens, *workers, *seed, 77, false);
                 let mut span = 0usize;
                 for (i, ((rows, outcome), &len)) in
                     steps.iter().zip(lens).enumerate()
@@ -534,9 +570,9 @@ fn prop_recluster_threshold_keeps_exact_steps_exact() {
         |(q, k, v, lens, growth, seed)| {
             for kernel in ["clustered-3", "i-clustered-3"] {
                 let a = run_session(kernel, *growth, usize::MAX, q, k, v,
-                                    lens, 1, *seed, 5);
+                                    lens, 1, *seed, 5, false);
                 let b = run_session(kernel, *growth, usize::MAX, q, k, v,
-                                    lens, 3, *seed, 5);
+                                    lens, 3, *seed, 5, false);
                 let mut span = 0usize;
                 let mut saw_reuse = false;
                 for (i, (((rows_a, out_a), (rows_b, out_b)), &len)) in
@@ -987,6 +1023,212 @@ fn prop_gateway_replay_is_invariant_to_client_lane_count() {
                                  {:?})", meta(got), meta(want)));
                         }
                     }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_causal_linear_solve_matches_the_naive_quadratic_reference() {
+    // Property 12.  The reference rebuilds row i's (S, z) from zero
+    // over keys 0..=i with plain scalar loops in the pinned elementary
+    // order (`a` ascending, `c` ascending within `a`, then the
+    // `1/den.max(1e-30)` emit) — an O(N²·D) computation sharing no code
+    // path with the O(N·D²) prefix-accumulator solve, yet required to
+    // match it bit for bit.
+    use crate::attention::linear::feature_map;
+    forall(
+        "causal linear solve ≡ naive per-row kernelized reference, \
+         ragged lens × spans × worker counts",
+        0x11EA_C001,
+        6,
+        |rng| {
+            let n = 16 + rng.below(49); // 16..=64
+            let l = 1 + rng.below(n); // 1..=n, ragged
+            let s = rng.below(l); // 0..l
+            let dk = 4 + rng.below(9); // 4..=12
+            let dv = 4 + rng.below(9); // 4..=12
+            // fully random padding rows — a causal solve that peeks
+            // past the valid prefix gets caught
+            let q = Matrix::randn(n, dk, rng);
+            let k = Matrix::randn(n, dk, rng);
+            let v = Matrix::randn(n, dv, rng);
+            let workers = 1 + rng.below(4); // 1..=4
+            (q, k, v, l, s, workers)
+        },
+        |(q, k, v, l, s, workers)| {
+            let (l, s, dk, dv) = (*l, *s, q.cols, v.cols);
+            let ctx = if *workers <= 1 {
+                ExecCtx::sequential()
+            } else {
+                ExecCtx::with_par_rows(WorkerPool::new(*workers), 1)
+            };
+            let kernel = kernel_by_name("linear").expect("registered");
+            let mut rng_k = Xoshiro256::new(9);
+            let got = kernel.solve(
+                &AttnProblem::new(q, k, v)
+                    .with_valid_len(l)
+                    .with_query_span(s)
+                    .with_causal(true),
+                &mut rng_k, &ctx);
+            for i in s..l {
+                let mut sm = vec![0.0f32; dk * dv];
+                let mut z = vec![0.0f32; dk];
+                for j in 0..=i {
+                    let (kj, vj) = (k.row(j), v.row(j));
+                    for a in 0..dk {
+                        let f = feature_map(kj[a]);
+                        z[a] += f;
+                        for c in 0..dv {
+                            sm[a * dv + c] += f * vj[c];
+                        }
+                    }
+                }
+                let qi = q.row(i);
+                let mut den = 0.0f32;
+                let mut want = vec![0.0f32; dv];
+                for a in 0..dk {
+                    let f = feature_map(qi[a]);
+                    den += f * z[a];
+                    for c in 0..dv {
+                        want[c] += f * sm[a * dv + c];
+                    }
+                }
+                let inv = 1.0 / den.max(1e-30);
+                for w in want.iter_mut() {
+                    *w *= inv;
+                }
+                if !same_bits(&got.data[i * dv..(i + 1) * dv], &want) {
+                    return Err(format!(
+                        "row {i} (N={}, l={l}, s={s}, dk={dk}, dv={dv}, \
+                         workers={workers}) diverged from the naive \
+                         reference", q.rows));
+                }
+            }
+            if got.data[..s * dv].iter().any(|&x| x != 0.0)
+                || got.data[l * dv..].iter().any(|&x| x != 0.0)
+            {
+                return Err(format!(
+                    "non-zero rows outside the span (l={l}, s={s})"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_recurrent_decode_matches_the_full_causal_recompute() {
+    // Property 13.  The O(1) recurrent-state cache path: a causal
+    // linear decode session must reproduce the full causal recompute of
+    // its history bit-for-bit at every step — when the state is pinned
+    // (unbounded cache: post-prefill steps Hit and only touch the
+    // accumulator), when it never is (zero capacity: every step Misses
+    // and replays the prefix), and through a sharded backend at shard
+    // counts {1, 3}, where the session sticks to its consistent-hash
+    // owner.
+    forall(
+        "linear causal decode ≡ full causal recompute, eviction points \
+         × worker counts × shard counts",
+        0xDEC0_DE03,
+        4,
+        |rng| {
+            let heads = 1 + rng.below(2); // 1..=2
+            let prefill = 6 + rng.below(11); // 6..=16
+            let steps = 1 + rng.below(3); // 1..=3 decode steps
+            let mut lens = vec![prefill];
+            for _ in 0..steps {
+                lens.push(lens.last().unwrap() + 1 + rng.below(5));
+            }
+            let total = *lens.last().unwrap();
+            let q = BatchMatrix::randn(1, heads, total, 8, rng);
+            let k = BatchMatrix::randn(1, heads, total, 8, rng);
+            let v = BatchMatrix::randn(1, heads, total, 8, rng);
+            // a recurrent entry's charge is constant, so it never
+            // self-evicts mid-session — the eviction point to exercise
+            // is capacity 0, where the state is never pinned at all
+            let capacity =
+                if rng.coin(0.5) { usize::MAX } else { 0 };
+            let workers = 1 + rng.below(3); // 1..=3
+            (q, k, v, lens, capacity, workers, rng.next_u64())
+        },
+        |case: &DecodeCase| {
+            let (q, k, v, lens, capacity, workers, seed) = case;
+            // single-host CachingBackend across the eviction point
+            let steps = run_session("linear", 1.0, *capacity, q, k, v,
+                                    lens, *workers, *seed, 91, true);
+            let mut span = 0usize;
+            for (i, ((rows, outcome), &len)) in
+                steps.iter().zip(lens).enumerate()
+            {
+                let want = recompute_causal_span("linear", q, k, v, len,
+                                                 span, *seed, 91);
+                if !same_bits(rows, &want) {
+                    return Err(format!(
+                        "step {i} (span {span}..{len}, cap {capacity}, \
+                         workers {workers}) diverged from the full \
+                         causal recompute"));
+                }
+                let want_hit = i > 0 && *capacity == usize::MAX;
+                if want_hit != matches!(outcome, SeqOutcome::Hit { .. }) {
+                    return Err(format!(
+                        "step {i} (cap {capacity}) reported {outcome:?}"));
+                }
+                span = len;
+            }
+            // sharded: the recurrent path holds across shard counts and
+            // the session sticks to one owner (post-prefill Hits)
+            let ctx = ExecCtx::sequential();
+            for shards in [1usize, 3] {
+                let sharded =
+                    ShardedBackend::in_process("linear", shards, 1)
+                        .expect("kernel");
+                let mut span = 0usize;
+                for (i, &len) in lens.iter().enumerate() {
+                    let qp = decode_prefix(q, len);
+                    let kp = decode_prefix(k, len);
+                    let vp = decode_prefix(v, len);
+                    let blens = [len];
+                    let sessions = [Some(SessionRef {
+                        cache: CacheRef { session: 91, generation: 0 },
+                        span_start: span,
+                    })];
+                    let batch = AttnBatch::new(&qp, &kp, &vp, *seed)
+                        .with_lens(&blens)
+                        .with_sessions(&sessions)
+                        .with_causal(true);
+                    let (out, rep) =
+                        sharded.execute_with_report(&batch, &ctx);
+                    let dv = v.cols;
+                    let mut rows = Vec::new();
+                    for h in 0..q.heads {
+                        rows.extend_from_slice(
+                            &out.view(h).data[span * dv..len * dv]);
+                    }
+                    let want = recompute_causal_span(
+                        "linear", q, k, v, len, span, *seed, 91);
+                    if !same_bits(&rows, &want) {
+                        return Err(format!(
+                            "{shards} shards, step {i} (span \
+                             {span}..{len}) diverged from the full \
+                             causal recompute"));
+                    }
+                    if i == 0
+                        && !matches!(rep[0], SeqOutcome::Miss { .. })
+                    {
+                        return Err(format!(
+                            "{shards} shards: prefill reported {:?}",
+                            rep[0]));
+                    }
+                    if i > 0 && !matches!(rep[0], SeqOutcome::Hit { .. })
+                    {
+                        return Err(format!(
+                            "{shards} shards, step {i} reported {:?} — \
+                             session did not stick to its owning shard",
+                            rep[0]));
+                    }
+                    span = len;
                 }
             }
             Ok(())

@@ -264,6 +264,7 @@ fn shard_conn_loop(stream: TcpStream, engine: &Arc<ShardEngine>)
                     seed: hdr.seed,
                     slice_base: hdr.slice_base,
                     lens: hdr.lens.clone(),
+                    causal: hdr.causal,
                     session: hdr.session,
                 };
                 match engine.solve(&shard_req) {
