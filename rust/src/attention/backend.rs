@@ -1,3 +1,5 @@
+//! ct-contract: bit-exact
+//!
 //! The attention backend seam: anything that can execute an
 //! [`AttnBatch`] descriptor.
 //!

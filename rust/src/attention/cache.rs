@@ -1,3 +1,5 @@
+//! ct-contract: bit-exact
+//!
 //! The incremental-decode subsystem: a per-session KV-panel store
 //! ([`KvCache`]) and a [`CachingBackend`] that wraps any
 //! [`AttentionBackend`] with cross-request KV caching.
@@ -71,7 +73,7 @@
 //! always-miss degenerate that the fallback contract keeps
 //! bit-identical.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
@@ -243,7 +245,7 @@ pub(crate) fn recurrent_rows_equiv(dk: usize, dv: usize) -> usize {
 }
 
 struct Store {
-    sessions: HashMap<u64, SessionEntry>,
+    sessions: BTreeMap<u64, SessionEntry>,
     used_rows: usize,
     clock: u64,
 }
@@ -274,7 +276,7 @@ impl KvCache {
         Self {
             opts,
             store: Mutex::new(Store {
-                sessions: HashMap::new(),
+                sessions: BTreeMap::new(),
                 used_rows: 0,
                 clock: 0,
             }),
@@ -1057,8 +1059,8 @@ fn improved_reuse(cent: &Matrix, topk: usize, groups: &[u32],
     affected.sort_unstable();
     affected.dedup();
     // per affected cluster: top-k keys, captured mass, complement basis
-    let mut per_cluster: HashMap<usize, (Vec<usize>, f32, Vec<f32>)> =
-        HashMap::new();
+    let mut per_cluster: BTreeMap<usize, (Vec<usize>, f32, Vec<f32>)> =
+        BTreeMap::new();
     let mut arow = vec![0f32; n];
     for &j in &affected {
         for (l, a) in arow.iter_mut().enumerate() {
@@ -1066,6 +1068,7 @@ fn improved_reuse(cent: &Matrix, topk: usize, groups: &[u32],
         }
         softmax_inplace(&mut arow);
         let idx = topk_indices(&arow, topk);
+        // ct-lint: allow(det-float-reduce, reason = "ordered sum over the top-k index list; iteration order is fixed by topk_indices, so the reduction order is deterministic")
         let mhat: f32 = idx.iter().map(|&l| arow[l]).sum();
         let mut vb = vec![0f32; dv];
         for (l, &a) in arow.iter().enumerate() {

@@ -1,3 +1,5 @@
+//! ct-contract: bit-exact
+//!
 //! Clustered attention (paper eqs. 3–6): queries are grouped by the LSH +
 //! Hamming-K-Means substrate, each cluster attends once through its
 //! centroid, and members copy the centroid's result — O(N·C·D).

@@ -1,3 +1,5 @@
+//! ct-contract: bit-exact
+//!
 //! Full softmax attention (paper eqs. 1–2) — the exact baseline every
 //! approximation is measured against — plus the shared-QK variant the
 //! Reformer comparison uses.
@@ -85,6 +87,7 @@ pub fn streaming_softmax_attention(q: &Matrix, k: &Matrix, v: &Matrix,
                         let arow = &mut acc[r * dv..(r + 1) * dv];
                         for (jj, &sv) in srow.iter().enumerate() {
                             let w = (sv - mrow[r]).exp();
+                            // ct-lint: allow(det-float-accum, reason = "streaming softmax row normaliser; keys are visited in ascending order, which IS the pinned elementary order")
                             lrow[r] += w;
                             axpy(arow, w, v.row(j0 + jj));
                         }

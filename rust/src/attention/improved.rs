@@ -1,3 +1,5 @@
+//! ct-contract: bit-exact
+//!
 //! Improved clustered attention (paper eqs. 9–11 / suppl. 15–17): each
 //! cluster keeps exact attention on its top-k keys and falls back to the
 //! centroid approximation on the complement.
@@ -48,6 +50,7 @@ pub fn improved_clustered_attention_ctx(q: &Matrix, k: &Matrix, v: &Matrix,
     let mut v_b = Matrix::zeros(c, dv);
     for j in 0..c {
         let idx = &top[j];
+        // ct-lint: allow(det-float-reduce, reason = "ordered sum over the top-k index list produced by topk_indices; reduction order is fixed")
         mhat[j] = idx.iter().map(|&l| a_c.at(j, l)).sum();
         let row = v_b.row_mut(j);
         row.copy_from_slice(v_full.row(j));
@@ -91,6 +94,7 @@ pub fn improved_clustered_attention_matrix(q: &Matrix, k: &Matrix,
     for i in 0..n {
         let j = cl.groups[i] as usize;
         let idx = topk_indices(a_c.row(j), topk);
+        // ct-lint: allow(det-float-reduce, reason = "ordered sum over the top-k index list produced by topk_indices; reduction order is fixed")
         let mhat: f32 = idx.iter().map(|&l| a_c.at(j, l)).sum();
         out.row_mut(i).copy_from_slice(a_c.row(j));
         for (slot, &l) in idx.iter().enumerate() {

@@ -1,3 +1,5 @@
+//! ct-contract: bit-exact
+//!
 //! Reformer-style LSH attention baseline: shared-QK, angular LSH
 //! bucketing, chunked local attention, rounds combined with logsumexp
 //! weights.
@@ -96,6 +98,7 @@ pub fn reformer_attention_ctx(x: &Matrix, v: &Matrix, rounds: usize,
                 let mut sum = 0f32;
                 for l in &mut logits {
                     *l = (*l - m).exp();
+                    // ct-lint: allow(det-float-accum, reason = "softmax normaliser accumulated over a bucket in ascending key order; the elementary order is the pinned contract")
                     sum += *l;
                 }
                 lse[qi] = m + sum.max(1e-30).ln();
@@ -120,6 +123,7 @@ pub fn reformer_attention_ctx(x: &Matrix, v: &Matrix, rounds: usize,
             .fold(f32::NEG_INFINITY, f32::max);
         let ws: Vec<f32> = (0..rounds).map(|r| (lses[r][i] - m).exp())
             .collect();
+        // ct-lint: allow(det-float-reduce, reason = "round-weight sum over the fixed rounds vector, ascending; reduction order is pinned")
         let tot: f32 = ws.iter().sum();
         let orow = combined.row_mut(i);
         for r in 0..rounds {

@@ -1,3 +1,5 @@
+//! ct-contract: bit-exact
+//!
 //! Pure-Rust reference attention — all paper variants behind one
 //! trait-based, batched, multi-head engine addressed by request
 //! descriptors.

@@ -1,3 +1,5 @@
+//! ct-contract: bit-exact
+//!
 //! Oracle top-k baseline (paper §4.1): exact logits, keep only the k
 //! largest per query — the upper bound any top-k approximation can reach.
 //!

@@ -1,3 +1,5 @@
+//! ct-contract: bit-exact
+//!
 //! Request descriptors for the attention engine: [`AttnProblem`] (one
 //! slice) and [`AttnBatch`] (a (B, H, N, D) workload), the structs every
 //! kernel entry point now takes instead of growing positional argument

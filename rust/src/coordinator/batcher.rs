@@ -1,3 +1,5 @@
+//! ct-contract: panic-free
+//!
 //! Deadline-based dynamic batcher.
 //!
 //! Collects requests until either the bucket's batch size is full or the

@@ -1,3 +1,5 @@
+//! ct-contract: panic-free
+//!
 //! Layer-3 coordinator — the serving/training control plane.
 //!
 //! The paper's contribution is an attention approximation, so L3 is the

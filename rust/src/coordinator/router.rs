@@ -1,3 +1,5 @@
+//! ct-contract: panic-free
+//!
 //! Length-bucket router: serving programs have static shapes, so requests
 //! are routed to the smallest bucket that fits, then padded.
 //!

@@ -1,3 +1,5 @@
+//! ct-contract: bit-exact
+//!
 //! Intra-op execution context: a pool handle plus the parallelism
 //! threshold every row-partitioned primitive consults.
 //!

@@ -1,3 +1,6 @@
+//! ct-contract: bit-exact
+//! ct-lint: allow(det-entropy, reason = "Instant::now implements recv_timeout deadlines; timing never reaches kernel outputs")
+//!
 //! Concurrency substrate (tokio is unavailable offline — DESIGN.md §5).
 //!
 //! A bounded MPMC channel (mutex + condvars, honest backpressure) and a
@@ -14,6 +17,19 @@ pub mod pool;
 
 pub use ctx::{par_rows, ExecCtx, DEFAULT_PAR_ROWS};
 pub use pool::{PoolLease, SharedWorkerPool, WorkerPool};
+
+/// Lock a mutex, recovering from poison instead of panicking.
+///
+/// The serving surface promised graceful degradation (`ct lint`
+/// enforces `panic-unwrap` there): a worker that panicked while
+/// holding a metrics or session lock must not take the dispatcher
+/// down with it.  The protected state in those paths is always valid
+/// at rest (counters, histograms, session tables with per-entry
+/// invariants), so continuing with the inner value is strictly better
+/// than cascading the panic.
+pub fn lock_unpoisoned<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
 
 /// Bounded multi-producer multi-consumer channel.
 pub struct Channel<T> {
@@ -266,6 +282,23 @@ mod tests {
         let got = ch.drain_up_to(4);
         assert_eq!(got, vec![0, 1, 2, 3]);
         assert_eq!(ch.len(), 2);
+    }
+
+    #[test]
+    fn lock_unpoisoned_recovers_inner_value() {
+        let m = Arc::new(Mutex::new(7usize));
+        let m2 = m.clone();
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison the lock");
+        })
+        .join();
+        assert!(m.is_poisoned());
+        let mut g = lock_unpoisoned(&m);
+        assert_eq!(*g, 7);
+        *g += 1;
+        drop(g);
+        assert_eq!(*lock_unpoisoned(&m), 8);
     }
 
     #[test]

@@ -1,3 +1,5 @@
+//! ct-contract: bit-exact
+//!
 //! Scoped data-parallel worker pool for the batched attention engine.
 //!
 //! Std-only (`std::thread::scope`), no queues or long-lived threads: a

@@ -120,9 +120,24 @@
 //! to the std-only shims under `vendor/`; swapping `vendor/xla` for the
 //! real xla_extension bindings re-enables PJRT execution unchanged.
 //!
+//! - [`lint`] — `ct lint`, the contract-aware static-analysis pass:
+//!   a std-only source scanner that mechanically enforces the
+//!   invariants above (bit-determinism in `attention`/`tensor`/`exec`,
+//!   panic-free serving paths, the wire-field allowlist, registry/doc
+//!   agreement), with reasoned `// ct-lint: allow(…)` suppressions and
+//!   a byte-stable `lint-report.json` (see `docs/TESTING.md`).
+//!
 //! See `README.md` for the quickstart and doc map, `DESIGN.md` for the
 //! system inventory and experiment index and `EXPERIMENTS.md` for
 //! paper-vs-measured results.
+
+// The serving/kernel contracts are machine-checked by `ct lint`
+// (release-blocking in CI); the compiler surface backs it up: no
+// unsafe anywhere in the crate, and public items are expected to be
+// documented (warn-level while the pre-attr surface is back-filled —
+// the docs CI job ratchets it).
+#![deny(unsafe_code)]
+#![warn(missing_docs)]
 
 pub mod attention;
 pub mod benchlib;
@@ -133,6 +148,7 @@ pub mod coordinator;
 pub mod data;
 pub mod exec;
 pub mod jsonio;
+pub mod lint;
 pub mod metrics;
 pub mod oracle;
 pub mod prng;

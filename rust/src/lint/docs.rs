@@ -1,0 +1,87 @@
+//! `doc-family-drift`: the kernel registry vs. the documentation.
+//!
+//! `attention/mod.rs` is the single source of truth for which kernel
+//! families exist (`REGISTRY`, keyed by paper-notation name).  The
+//! README quickstart and `docs/ARCHITECTURE.md` both carry family
+//! lists a newcomer reads first — and nothing kept them honest when a
+//! family landed (PRs 4/5/8 each added one).  This rule extracts
+//! every `key: "…"` from the registry and requires the key string to
+//! appear in both documents.
+
+use super::rules::Hit;
+
+/// Extract `(key, line)` pairs from `key: "…"` bindings in the
+/// registry source.
+pub fn registry_keys(mod_src: &str) -> Vec<(String, usize)> {
+    let mut out = Vec::new();
+    for (i, line) in mod_src.split('\n').enumerate() {
+        let Some(p) = line.find("key:") else { continue };
+        let rest = line[p + 4..].trim_start();
+        let Some(rest) = rest.strip_prefix('"') else { continue };
+        let Some(end) = rest.find('"') else { continue };
+        let key = &rest[..end];
+        if !key.is_empty() {
+            out.push((key.to_string(), i + 1));
+        }
+    }
+    out
+}
+
+/// Check every registry key against the named documents.  `docs` is
+/// `(display-name, contents)`; a key missing from any document is one
+/// violation anchored at its registry line.
+pub fn family_drift(mod_src: &str, docs: &[(&str, &str)]) -> Vec<Hit> {
+    let mut hits = Vec::new();
+    for (key, line) in registry_keys(mod_src) {
+        let missing: Vec<&str> = docs
+            .iter()
+            .filter(|(_, text)| !text.contains(key.as_str()))
+            .map(|(name, _)| *name)
+            .collect();
+        if !missing.is_empty() {
+            hits.push(Hit {
+                rule: "doc-family-drift",
+                line,
+                msg: format!("kernel family `{key}` missing from {}",
+                             missing.join(", ")),
+            });
+        }
+    }
+    hits
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const REG: &str = "\
+        KernelFamily { key: \"full\", parse: parse_full },\n\
+        KernelFamily { key: \"lsh\", parse: parse_lsh },\n";
+
+    #[test]
+    fn extracts_keys_with_lines() {
+        assert_eq!(registry_keys(REG),
+                   vec![("full".to_string(), 1),
+                        ("lsh".to_string(), 2)]);
+    }
+
+    #[test]
+    fn missing_key_is_flagged_per_document() {
+        let hits = family_drift(
+            REG,
+            &[("README.md", "full attention and lsh hashing"),
+              ("docs/ARCHITECTURE.md", "only full here")]);
+        assert_eq!(hits.len(), 1);
+        assert_eq!(hits[0].line, 2);
+        assert!(hits[0].msg.contains("lsh"));
+        assert!(hits[0].msg.contains("ARCHITECTURE"));
+        assert!(!hits[0].msg.contains("README"));
+    }
+
+    #[test]
+    fn present_everywhere_is_clean() {
+        let hits = family_drift(
+            REG, &[("README.md", "full, lsh"), ("A.md", "lsh full")]);
+        assert!(hits.is_empty());
+    }
+}

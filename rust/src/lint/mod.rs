@@ -1,0 +1,516 @@
+//! `ct lint` — the contract-aware static-analysis pass.
+//!
+//! Every subsystem in this crate rests on hand-maintained invariants:
+//! the "partition rows, never split reductions" bit-determinism
+//! contract, all randomness flowing through `prng`, panic-free
+//! serving paths that degrade instead of crash, and byte-stable JSON
+//! wire formats.  This module makes those contracts machine-checked
+//! artifacts instead of tribal knowledge: a std-only, source-level
+//! pass (lightweight lexical scanner, no syn/proc-macro) over the
+//! crate's own sources, run as `ct lint` and gated release-blocking
+//! in CI next to the golden-trace oracle.
+//!
+//! Layout:
+//! - [`scan`] — position-preserving lexical scanner (strings/comments
+//!   blanked, test/loop scope, suppression directives).
+//! - [`rules`] — the per-line rule catalog (determinism, panic-safety
+//!   families) with stable machine-readable ids.
+//! - [`wire`] — the wire-field allowlist check over the JSON protocol
+//!   surface (`lint/wire-fields.json`).
+//! - [`docs`] — kernel-registry vs. README/ARCHITECTURE drift.
+//! - [`report`] — the byte-stable `lint-report.json` artifact.
+//!
+//! Scopes are path-based and spelled out in [`bit_scope`],
+//! [`panic_scope`], [`entropy_scope`] and [`wire_scope`]; a file can
+//! additionally opt in to a contract with a `//! ct-contract:` header
+//! (mandatory in the scoped directories — `contract-header` enforces
+//! that, so deleting the header is itself a violation).  Suppressions
+//! require a reason:
+//!
+//! ```text
+//! // ct-lint: allow(panic-index, reason = "idx < lanes checked above")
+//! ```
+//!
+//! The rule catalog with rationale and suppression etiquette lives in
+//! `docs/TESTING.md`.
+
+pub mod docs;
+pub mod report;
+pub mod rules;
+pub mod scan;
+pub mod wire;
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use report::{LintReport, Suppression, Violation};
+use rules::Hit;
+use scan::FileScan;
+
+/// Everything one lint pass consumes, decoupled from the filesystem
+/// so tests and the self-check can feed synthetic trees.
+pub struct SourceSet {
+    /// `(path, contents)` with paths relative to `rust/src/`, forward
+    /// slashes.  Order does not matter — the report sorts.
+    pub files: Vec<(String, String)>,
+    /// `(display-name, contents)` of the documents the doc-drift rule
+    /// checks (README.md, docs/ARCHITECTURE.md).
+    pub docs: Vec<(String, String)>,
+    /// The wire-field allowlist (field names).
+    pub wire_allow: Vec<String>,
+}
+
+/// Files under the bit-determinism contract: the kernel, tensor and
+/// execution layers.  These must carry `//! ct-contract: bit-exact`
+/// and pass the `det-float-*` / `det-map-iter` rules.
+pub fn bit_scope(path: &str) -> bool {
+    path.starts_with("attention/")
+        || path.starts_with("tensor/")
+        || path.starts_with("exec/")
+}
+
+/// The serving surface that promised graceful degradation (PR 6/7):
+/// wire server, coordinator (minus the offline training/data paths),
+/// the sharded fan-out, and the oracle harness that replays against
+/// them.  These must carry `//! ct-contract: panic-free` and pass the
+/// `panic-*` rules.
+pub fn panic_scope(path: &str) -> bool {
+    if path.starts_with("server/") || path.starts_with("oracle/") {
+        return true;
+    }
+    if path == "attention/sharded.rs" {
+        return true;
+    }
+    // trainer/datafeed are the offline training loop — they may
+    // assert on programmer error; everything else in coordinator/
+    // is on a request path
+    path.starts_with("coordinator/")
+        && !path.ends_with("trainer.rs")
+        && !path.ends_with("datafeed.rs")
+}
+
+/// Everywhere except the sanctioned randomness/timing homes.
+pub fn entropy_scope(path: &str) -> bool {
+    !path.starts_with("prng/") && !path.starts_with("benchlib/")
+}
+
+/// The JSON wire surface the `wire-field` allowlist covers: the
+/// gateway JSON-lines protocol and the shard wire header.
+pub fn wire_scope(path: &str) -> bool {
+    path.starts_with("server/") || path == "attention/sharded.rs"
+}
+
+/// Run the full pass over a [`SourceSet`].  Pure: no filesystem, no
+/// clock — the report is a deterministic function of the inputs.
+pub fn analyze(set: &SourceSet) -> LintReport {
+    let mut rep = LintReport {
+        files_scanned: set.files.len(),
+        ..LintReport::default()
+    };
+    for (path, text) in &set.files {
+        let fs = FileScan::new(path, text);
+        analyze_file(&fs, set, &mut rep);
+    }
+    // registry vs docs drift (anchored in attention/mod.rs)
+    if let Some((path, text)) =
+        set.files.iter().find(|(p, _)| p == "attention/mod.rs")
+    {
+        let doc_refs: Vec<(&str, &str)> = set
+            .docs
+            .iter()
+            .map(|(n, t)| (n.as_str(), t.as_str()))
+            .collect();
+        let fs = FileScan::new(path, text);
+        for h in docs::family_drift(text, &doc_refs) {
+            file_hit(&fs, h, &mut rep);
+        }
+    }
+    rep.sort();
+    rep
+}
+
+/// All per-line rules plus directive hygiene for one scanned file.
+fn analyze_file(fs: &FileScan, set: &SourceSet, rep: &mut LintReport) {
+    // directive hygiene first: a reasonless or unknown allow is a
+    // violation in its own right and never suppresses anything
+    for a in &fs.allows {
+        if !rules::known_rule(&a.rule) {
+            rep.violations.push(Violation {
+                file: report_path(&fs.path),
+                line: a.line,
+                rule: "lint-unknown-rule".to_string(),
+                msg: format!("allow({}) names an unknown rule", a.rule),
+            });
+        } else if a.reason.is_empty() {
+            rep.violations.push(Violation {
+                file: report_path(&fs.path),
+                line: a.line,
+                rule: "lint-no-reason".to_string(),
+                msg: format!("allow({}) must carry \
+                              `reason = \"…\"`", a.rule),
+            });
+        }
+    }
+
+    // contract headers are mandatory inside the scoped directories
+    if bit_scope(&fs.path) && !fs.has_contract("bit-exact") {
+        file_hit(fs, Hit {
+            rule: "contract-header",
+            line: 1,
+            msg: "missing `//! ct-contract: bit-exact` header"
+                .to_string(),
+        }, rep);
+    }
+    if panic_scope(&fs.path) && !fs.has_contract("panic-free") {
+        file_hit(fs, Hit {
+            rule: "contract-header",
+            line: 1,
+            msg: "missing `//! ct-contract: panic-free` header"
+                .to_string(),
+        }, rep);
+    }
+
+    let bit = fs.has_contract("bit-exact");
+    let panics = panic_scope(&fs.path) || fs.has_contract("panic-free");
+    let entropy = entropy_scope(&fs.path);
+    let wire = wire_scope(&fs.path);
+
+    for i in 0..fs.code_lines.len() {
+        if fs.in_test[i] {
+            continue;
+        }
+        let mut hits: Vec<Hit> = Vec::new();
+        if bit {
+            hits.extend(rules::det_float_reduce(fs, i));
+            hits.extend(rules::det_float_accum(fs, i));
+            hits.extend(rules::det_map_iter(fs, i));
+        }
+        if entropy {
+            hits.extend(rules::det_entropy(fs, i));
+            hits.extend(rules::det_seed_arith(fs, i));
+        }
+        if panics {
+            hits.extend(rules::panic_unwrap(fs, i));
+            hits.extend(rules::panic_expect(fs, i));
+            hits.extend(rules::panic_macro(fs, i));
+            hits.extend(rules::panic_index(fs, i));
+        }
+        if wire {
+            hits.extend(wire::wire_field(fs, i, &set.wire_allow));
+        }
+        for h in hits {
+            file_hit(fs, h, rep);
+        }
+    }
+}
+
+/// Route one hit through suppression resolution into the report.
+fn file_hit(fs: &FileScan, h: Hit, rep: &mut LintReport) {
+    match fs.suppression(h.rule, h.line) {
+        Some(reason) => rep.suppressions.push(Suppression {
+            file: report_path(&fs.path),
+            line: h.line,
+            rule: h.rule.to_string(),
+            reason: reason.to_string(),
+        }),
+        None => rep.violations.push(Violation {
+            file: report_path(&fs.path),
+            line: h.line,
+            rule: h.rule.to_string(),
+            msg: h.msg,
+        }),
+    }
+}
+
+/// Report paths are repo-relative: `rust/src/` + the scan-relative
+/// path (synthetic self-check probes keep their marker prefix).
+fn report_path(path: &str) -> String {
+    if path.starts_with("__lint_probe") || path.contains("__lint_probe") {
+        path.to_string()
+    } else {
+        format!("rust/src/{path}")
+    }
+}
+
+/// Collect the real tree under `<root>/rust/src` into a
+/// [`SourceSet`], reading the wire allowlist embedded at compile time
+/// and the drift documents from disk.
+pub fn source_set(root: &Path) -> Result<SourceSet> {
+    let src = root.join("rust").join("src");
+    let mut files = Vec::new();
+    collect_rs(&src, &src, &mut files)?;
+    files.sort();
+    let mut docs = Vec::new();
+    for name in ["README.md", "docs/ARCHITECTURE.md"] {
+        let p = root.join(name);
+        let text = std::fs::read_to_string(&p)
+            .with_context(|| format!("reading {}", p.display()))?;
+        docs.push((name.to_string(), text));
+    }
+    let wire_allow = wire::parse_allowlist(wire::WIRE_FIELDS_JSON)
+        .context("lint/wire-fields.json is malformed")?;
+    Ok(SourceSet { files, docs, wire_allow })
+}
+
+/// Recursively gather `*.rs` under `dir`, paths relative to `base`.
+fn collect_rs(base: &Path, dir: &Path,
+              out: &mut Vec<(String, String)>) -> Result<()> {
+    let rd = std::fs::read_dir(dir)
+        .with_context(|| format!("reading {}", dir.display()))?;
+    let mut entries: Vec<PathBuf> =
+        rd.filter_map(|e| e.ok().map(|e| e.path())).collect();
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            collect_rs(base, &p, out)?;
+        } else if p.extension().and_then(|e| e.to_str()) == Some("rs") {
+            let rel = p
+                .strip_prefix(base)
+                .unwrap_or(&p)
+                .components()
+                .map(|c| c.as_os_str().to_string_lossy())
+                .collect::<Vec<_>>()
+                .join("/");
+            let text = std::fs::read_to_string(&p)
+                .with_context(|| format!("reading {}", p.display()))?;
+            out.push((rel, text));
+        }
+    }
+    Ok(())
+}
+
+/// Run the pass over the repo at `root`.
+pub fn run(root: &Path) -> Result<LintReport> {
+    Ok(analyze(&source_set(root)?))
+}
+
+/// Default report path: `<repo>/lint-report.json`, next to the oracle
+/// and bench reports.
+pub fn default_report_path() -> PathBuf {
+    crate::config::find_repo_root().join("lint-report.json")
+}
+
+/// Outcome of [`self_check`].
+pub struct SelfCheck {
+    /// Rule ids that failed to fire on the injected probes — empty
+    /// when the red path is healthy.
+    pub missed: Vec<&'static str>,
+    /// How many injected violations were detected.
+    pub injected: usize,
+    /// The combined report (real tree + probes).
+    pub report: LintReport,
+}
+
+/// Prove the red path: inject synthetic probe files carrying one
+/// violation per rule into the real tree and require every rule to
+/// fire.  Mirrors the oracle's perturbation self-test — a healthy
+/// linter makes the combined run red, and CI asserts exactly that
+/// (`if ct lint --self-check; then fail`).
+pub fn self_check(root: &Path) -> Result<SelfCheck> {
+    let mut set = source_set(root)?;
+    for (path, text) in probe_files() {
+        set.files.push((path.to_string(), text.to_string()));
+    }
+    let report = analyze(&set);
+    let mut missed = Vec::new();
+    for rule in rules::RULE_IDS {
+        if *rule == "doc-family-drift" {
+            // probed directly: a synthetic registry key that no
+            // document mentions must be flagged
+            let drift = docs::family_drift(
+                "key: \"__lint_probe_family__\",",
+                &[("README.md", "no such family here")]);
+            if drift.len() != 1 {
+                missed.push(*rule);
+            }
+            continue;
+        }
+        let fired = report.violations.iter().any(|v| {
+            v.rule == *rule && v.file.contains("__lint_probe")
+        });
+        if !fired {
+            missed.push(*rule);
+        }
+    }
+    let injected = report
+        .violations
+        .iter()
+        .filter(|v| v.file.contains("__lint_probe"))
+        .count();
+    Ok(SelfCheck { missed, injected, report })
+}
+
+/// The synthetic probe sources, one violation per rule family.  Paths
+/// place them inside the real scopes; the `__lint_probe` marker keeps
+/// them distinguishable in the combined report.
+fn probe_files() -> Vec<(&'static str, &'static str)> {
+    vec![
+        // bit-exact + entropy scope probe (carries the header so the
+        // det-* rules run; contract-header is probed separately)
+        ("attention/__lint_probe_det__.rs", "\
+//! ct-contract: bit-exact
+use std::collections::HashMap;
+fn probe(xs: &[f32], seed: u64) -> f32 {
+    let _t = std::time::Instant::now();
+    let _s = seed ^ 0x9E37;
+    let mut acc = vec![0.0f32; 4];
+    for (i, x) in xs.iter().enumerate() {
+        acc[i % 4] += x * 2.0;
+    }
+    xs.iter().sum()
+}
+// ct-lint: allow(det-entropy)
+// ct-lint: allow(no-such-rule, reason = \"probe\")
+"),
+        // header probe: in bit scope, no header
+        ("attention/__lint_probe_header__.rs",
+         "fn probe_header() {}\n"),
+        // panic + wire scope probe
+        ("server/__lint_probe_panic__.rs", "\
+fn probe(v: Vec<u64>, i: usize) -> u64 {
+    let a = v.first().unwrap();
+    let b = v.iter().next().expect(\"probe\");
+    if *a > *b {
+        panic!(\"probe\");
+    }
+    v[i]
+}
+fn probe_wire() -> Vec<(&'static str, u64)> {
+    vec![(\"__lint_probe_field__\", 1)]
+}
+"),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_set(files: Vec<(&str, &str)>) -> SourceSet {
+        SourceSet {
+            files: files
+                .into_iter()
+                .map(|(p, t)| (p.to_string(), t.to_string()))
+                .collect(),
+            docs: vec![("README.md".to_string(), String::new()),
+                       ("docs/ARCHITECTURE.md".to_string(),
+                        String::new())],
+            wire_allow: vec!["id".to_string()],
+        }
+    }
+
+    #[test]
+    fn scopes() {
+        assert!(bit_scope("attention/full.rs"));
+        assert!(bit_scope("tensor/gemm.rs"));
+        assert!(!bit_scope("coordinator/gateway.rs"));
+        assert!(panic_scope("server/mod.rs"));
+        assert!(panic_scope("attention/sharded.rs"));
+        assert!(panic_scope("coordinator/gateway.rs"));
+        assert!(!panic_scope("coordinator/trainer.rs"));
+        assert!(!panic_scope("attention/full.rs"));
+        assert!(!entropy_scope("prng/mod.rs"));
+        assert!(entropy_scope("main.rs"));
+        assert!(wire_scope("server/mod.rs"));
+        assert!(!wire_scope("coordinator/gateway.rs"));
+    }
+
+    #[test]
+    fn bit_rules_need_the_header() {
+        // without the header only contract-header fires; the det
+        // rules activate once the file opts in
+        let bare = tiny_set(vec![(
+            "attention/k.rs",
+            "fn f(xs: &[f32]) -> f32 { xs.iter().sum() }\n")]);
+        let rep = analyze(&bare);
+        assert_eq!(rep.violations.len(), 1);
+        assert_eq!(rep.violations[0].rule, "contract-header");
+
+        let opted = tiny_set(vec![(
+            "attention/k.rs",
+            "//! ct-contract: bit-exact\n\
+             fn f(xs: &[f32]) -> f32 { xs.iter().sum() }\n")]);
+        let rep = analyze(&opted);
+        assert_eq!(rep.violations.len(), 1);
+        assert_eq!(rep.violations[0].rule, "det-float-reduce");
+        assert_eq!(rep.violations[0].file, "rust/src/attention/k.rs");
+    }
+
+    #[test]
+    fn suppression_with_reason_moves_to_suppressed() {
+        let set = tiny_set(vec![(
+            "attention/k.rs",
+            "//! ct-contract: bit-exact\n\
+             fn f(xs: &[f32]) -> f32 {\n\
+                 // ct-lint: allow(det-float-reduce, reason = \"pinned\")\n\
+                 xs.iter().sum()\n\
+             }\n")]);
+        let rep = analyze(&set);
+        assert!(rep.passed(), "violations: {:?}", rep.violations);
+        assert_eq!(rep.suppressions.len(), 1);
+        assert_eq!(rep.suppressions[0].reason, "pinned");
+    }
+
+    #[test]
+    fn reasonless_suppression_is_itself_a_violation() {
+        let set = tiny_set(vec![(
+            "server/x.rs",
+            "//! ct-contract: panic-free\n\
+             fn f(v: Vec<u8>) -> u8 {\n\
+                 // ct-lint: allow(panic-unwrap)\n\
+                 *v.first().unwrap()\n\
+             }\n")]);
+        let rep = analyze(&set);
+        let rules: Vec<&str> =
+            rep.violations.iter().map(|v| v.rule.as_str()).collect();
+        // the directive is flagged AND the unwrap still fires
+        assert!(rules.contains(&"lint-no-reason"));
+        assert!(rules.contains(&"panic-unwrap"));
+    }
+
+    #[test]
+    fn unknown_rule_in_directive() {
+        let set = tiny_set(vec![(
+            "server/x.rs",
+            "//! ct-contract: panic-free\n\
+             // ct-lint: allow(made-up, reason = \"x\")\n\
+             fn f() {}\n")]);
+        let rep = analyze(&set);
+        assert!(rep.violations.iter()
+                .any(|v| v.rule == "lint-unknown-rule"));
+    }
+
+    #[test]
+    fn wire_rule_uses_allowlist() {
+        let set = tiny_set(vec![(
+            "server/x.rs",
+            "//! ct-contract: panic-free\n\
+             fn f() { emit(vec![(\"id\", 1), (\"rogue\", 2)]); }\n")]);
+        let rep = analyze(&set);
+        let wire: Vec<_> = rep.violations.iter()
+            .filter(|v| v.rule == "wire-field").collect();
+        assert_eq!(wire.len(), 1);
+        assert!(wire[0].msg.contains("rogue"));
+    }
+
+    #[test]
+    fn probes_trip_every_rule() {
+        // the self-check's probe files, analyzed standalone, cover the
+        // whole catalog except doc-family-drift (probed directly)
+        let mut set = tiny_set(vec![]);
+        set.files = probe_files()
+            .into_iter()
+            .map(|(p, t)| (p.to_string(), t.to_string()))
+            .collect();
+        set.wire_allow = vec!["id".to_string()];
+        let rep = analyze(&set);
+        for rule in rules::RULE_IDS {
+            if *rule == "doc-family-drift" {
+                continue;
+            }
+            assert!(rep.violations.iter().any(|v| v.rule == *rule),
+                    "probe did not trip {rule}");
+        }
+    }
+}

@@ -1,0 +1,178 @@
+//! The byte-stable `lint-report.json` artifact.
+//!
+//! The report is a deterministic function of the scanned sources:
+//! violations and suppressions are sorted by `(file, line, rule,
+//! msg)`, paths are repo-relative with forward slashes, and there are
+//! no timestamps, hostnames or absolute paths — two runs over the
+//! same tree produce identical bytes (tested in
+//! `tests/integration_lint.rs`), so the CI artifact diffs cleanly
+//! between commits, the same property the oracle and bench reports
+//! already have.
+
+use crate::jsonio::{self, obj, Value};
+
+use super::rules::RULE_IDS;
+
+/// One unsuppressed rule violation.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Violation {
+    /// Repo-relative file path (forward slashes).
+    pub file: String,
+    /// 1-based line.
+    pub line: usize,
+    /// Rule id.
+    pub rule: String,
+    /// What fired, specifically.
+    pub msg: String,
+}
+
+/// One suppressed hit — kept in the report so suppressions are
+/// auditable without grepping the tree.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Suppression {
+    /// Repo-relative file path (forward slashes).
+    pub file: String,
+    /// 1-based line of the suppressed hit.
+    pub line: usize,
+    /// Rule id.
+    pub rule: String,
+    /// The mandatory justification from the `allow(…)` directive.
+    pub reason: String,
+}
+
+/// The full result of one lint pass.
+#[derive(Debug, Clone, Default)]
+pub struct LintReport {
+    /// How many files the pass scanned.
+    pub files_scanned: usize,
+    /// Unsuppressed violations, sorted.
+    pub violations: Vec<Violation>,
+    /// Suppressed hits, sorted.
+    pub suppressions: Vec<Suppression>,
+}
+
+impl LintReport {
+    /// Green iff nothing unsuppressed fired.
+    pub fn passed(&self) -> bool {
+        self.violations.is_empty()
+    }
+
+    /// Canonicalise ordering (called once by the engine before the
+    /// report is rendered or returned).
+    pub fn sort(&mut self) {
+        self.violations.sort();
+        self.violations.dedup();
+        self.suppressions.sort();
+        self.suppressions.dedup();
+    }
+
+    /// Render as a `jsonio` document.
+    pub fn to_value(&self) -> Value {
+        let rules: Vec<Value> =
+            RULE_IDS.iter().map(|r| Value::from(*r)).collect();
+        let violations: Vec<Value> = self
+            .violations
+            .iter()
+            .map(|v| obj(vec![
+                ("rule", v.rule.as_str().into()),
+                ("file", v.file.as_str().into()),
+                ("line", v.line.into()),
+                ("msg", v.msg.as_str().into()),
+            ]))
+            .collect();
+        let suppressions: Vec<Value> = self
+            .suppressions
+            .iter()
+            .map(|s| obj(vec![
+                ("rule", s.rule.as_str().into()),
+                ("file", s.file.as_str().into()),
+                ("line", s.line.into()),
+                ("reason", s.reason.as_str().into()),
+            ]))
+            .collect();
+        obj(vec![
+            ("version", 1i64.into()),
+            ("tool", "ct lint".into()),
+            ("files_scanned", self.files_scanned.into()),
+            ("rules", Value::Arr(rules)),
+            ("violation_count", self.violations.len().into()),
+            ("violations", Value::Arr(violations)),
+            ("suppressed_count", self.suppressions.len().into()),
+            ("suppressions", Value::Arr(suppressions)),
+            ("passed", self.passed().into()),
+        ])
+    }
+
+    /// The byte-stable pretty rendering written to
+    /// `lint-report.json`.
+    pub fn render(&self) -> String {
+        jsonio::to_string_pretty(&self.to_value())
+    }
+
+    /// Human console summary (one line per violation, `file:line`
+    /// first so terminals link them).
+    pub fn console(&self) -> String {
+        let mut out = String::new();
+        for v in &self.violations {
+            out.push_str(&format!("{}:{}: [{}] {}\n",
+                                  v.file, v.line, v.rule, v.msg));
+        }
+        out.push_str(&format!(
+            "ct lint: {} file(s), {} violation(s), {} suppressed — {}\n",
+            self.files_scanned,
+            self.violations.len(),
+            self.suppressions.len(),
+            if self.passed() { "PASS" } else { "FAIL" }));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> LintReport {
+        let mut r = LintReport {
+            files_scanned: 2,
+            violations: vec![
+                Violation { file: "b.rs".into(), line: 9,
+                            rule: "panic-unwrap".into(),
+                            msg: "x".into() },
+                Violation { file: "a.rs".into(), line: 3,
+                            rule: "det-entropy".into(),
+                            msg: "y".into() },
+            ],
+            suppressions: vec![Suppression {
+                file: "a.rs".into(), line: 7,
+                rule: "det-seed-arith".into(),
+                reason: "because".into(),
+            }],
+        };
+        r.sort();
+        r
+    }
+
+    #[test]
+    fn sorted_and_deterministic() {
+        let r = sample();
+        assert_eq!(r.violations[0].file, "a.rs");
+        assert_eq!(r.render(), sample().render());
+        assert!(r.render().ends_with('\n'));
+    }
+
+    #[test]
+    fn roundtrips_through_jsonio() {
+        let r = sample();
+        let doc = crate::jsonio::parse(&r.render()).expect("parses");
+        assert_eq!(doc.get("violation_count").as_usize(), Some(2));
+        assert_eq!(doc.get("passed").as_bool(), Some(false));
+        assert_eq!(doc.get("suppressed_count").as_usize(), Some(1));
+    }
+
+    #[test]
+    fn empty_report_passes() {
+        let r = LintReport::default();
+        assert!(r.passed());
+        assert!(r.console().contains("PASS"));
+    }
+}

@@ -1,0 +1,425 @@
+//! The rule catalog: every per-line contract check `ct lint` ships.
+//!
+//! Each rule has a machine-readable id (stable — suppressions and CI
+//! greps key on it), a scope (which files it applies to, decided by
+//! `lint::mod`), and a matcher over one scanned line.  Matchers run on
+//! the *code view* of a line (strings/comments blanked, positions
+//! preserved — see `scan`), so a pattern inside a string literal or a
+//! comment can never fire.
+//!
+//! The determinism family encodes the repo's "partition rows, never
+//! split reductions" bit-contract; the panic family encodes the
+//! PR 6/7 graceful-degradation promise on the serving surface; the
+//! wire/doc families make the byte-stable protocol and the kernel
+//! registry's documentation reviewable diffs instead of tribal
+//! knowledge.  The full catalog with rationale and suppression
+//! etiquette lives in `docs/TESTING.md`.
+
+use super::scan::FileScan;
+
+/// Every rule id the engine knows.  `allow(...)` directives naming
+/// anything else raise `lint-unknown-rule`.
+pub const RULE_IDS: &[&str] = &[
+    "det-float-reduce",
+    "det-float-accum",
+    "det-map-iter",
+    "det-entropy",
+    "det-seed-arith",
+    "panic-unwrap",
+    "panic-expect",
+    "panic-macro",
+    "panic-index",
+    "wire-field",
+    "doc-family-drift",
+    "contract-header",
+    "lint-no-reason",
+    "lint-unknown-rule",
+];
+
+/// Is `rule` a known rule id?
+pub fn known_rule(rule: &str) -> bool {
+    RULE_IDS.contains(&rule)
+}
+
+/// A raw rule hit before suppression resolution.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Hit {
+    /// Rule id (one of [`RULE_IDS`]).
+    pub rule: &'static str,
+    /// 1-based line.
+    pub line: usize,
+    /// Human-readable description of the specific hit.
+    pub msg: String,
+}
+
+fn hit(rule: &'static str, line: usize, msg: impl Into<String>) -> Hit {
+    Hit { rule, line, msg: msg.into() }
+}
+
+/// `det-float-reduce`: `.sum()` / `.product()` / `.fold(` /
+/// `.reduce(` in a bit-exact file.  Iterator reductions hide their
+/// association order behind the adapter chain; the bit-contract
+/// requires the order to be visible and pinned.  Exemption: folds
+/// whose combiner is `f32::max` / `f32::min` (order-insensitive over
+/// the finite inputs these kernels produce) — detected by looking at
+/// the text following `.fold(` on this and the next raw line.
+pub fn det_float_reduce(fs: &FileScan, i: usize) -> Vec<Hit> {
+    let lt = &fs.code_lines[i];
+    let mut hits = Vec::new();
+    for pat in [".sum()", ".sum::", ".product()"] {
+        if let Some(p) = lt.find(pat) {
+            hits.push(hit("det-float-reduce", i + 1,
+                          format!("iterator reduction `{}` hides its \
+                                   association order",
+                                  &lt[p + 1..p + pat.len()])));
+        }
+    }
+    for pat in [".fold(", ".reduce("] {
+        let Some(p) = lt.find(pat) else { continue };
+        // look ahead on the raw view for a max/min combiner
+        let mut look = fs.raw_lines[i][(p + pat.len()).min(
+            fs.raw_lines[i].len())..].to_string();
+        if let Some(next) = fs.raw_lines.get(i + 1) {
+            look.push(' ');
+            look.push_str(next);
+        }
+        let look: String = look.chars().take(120).collect();
+        if look.contains("f32::max") || look.contains("f32::min") {
+            continue;
+        }
+        hits.push(hit("det-float-reduce", i + 1,
+                      format!("`{}` reduction without a pinned order",
+                              pat.trim_end_matches('('))));
+    }
+    hits
+}
+
+/// `det-float-accum`: compound `+=` accumulation inside a loop body
+/// in a bit-exact file — the shape of a float reduction written by
+/// hand.  Plain counter bumps are exempt: a hit needs an indexed
+/// left-hand side or a right-hand side with a product, call or index
+/// (`s0 += n` passes, `acc[c] += a * b` does not), and `+= 1` never
+/// fires.  Files that *are* the pinned elementary order (`tensor/`
+/// dot/axpy, the GEMM microkernel) carry file-scope allows saying so.
+pub fn det_float_accum(fs: &FileScan, i: usize) -> Vec<Hit> {
+    if !fs.in_loop[i] {
+        return Vec::new();
+    }
+    let lt = &fs.code_lines[i];
+    let mut hits = Vec::new();
+    let mut from = 0usize;
+    while let Some(p) = lt[from..].find("+=") {
+        let p = from + p;
+        from = p + 2;
+        let left = &lt[..p];
+        let left = left
+            .rfind([';', '{', '('])
+            .map_or(left, |c| &left[c + 1..]);
+        let right = &lt[p + 2..];
+        let right = right.split(';').next().unwrap_or(right);
+        let rt = right.trim();
+        if rt == "1" || rt == "1.0" {
+            continue;
+        }
+        if left.contains('[')
+            || right.contains('*')
+            || right.contains('(')
+            || right.contains('[')
+        {
+            hits.push(hit("det-float-accum", i + 1,
+                          "compound `+=` accumulation in a loop body"));
+        }
+    }
+    hits
+}
+
+/// `det-map-iter`: `HashMap` / `HashSet` in a bit-exact file.  Their
+/// iteration order is randomized per process; anything order-dependent
+/// (eviction tie-breaks, output assembly) must use `BTreeMap` or sort
+/// explicitly.  Presence (not just iteration) is flagged: keyed-only
+/// use is one refactor away from an ordered walk, and `BTreeMap` costs
+/// nothing at these sizes.
+pub fn det_map_iter(fs: &FileScan, i: usize) -> Vec<Hit> {
+    let lt = &fs.code_lines[i];
+    let mut hits = Vec::new();
+    for pat in ["HashMap", "HashSet"] {
+        if find_word(lt, pat).is_some() {
+            hits.push(hit("det-map-iter", i + 1,
+                          format!("`{pat}` in a bit-exact file \
+                                   (iteration order is randomized; \
+                                   use BTreeMap/BTreeSet or sort)")));
+        }
+    }
+    hits
+}
+
+/// `det-entropy`: ambient entropy or clock sources outside `prng/`
+/// and `benchlib/`.  Wall-clock reads are fine for latency metrics —
+/// files doing only that carry a file-scope allow saying so — but a
+/// clock or RNG feeding the math breaks replay.
+pub fn det_entropy(fs: &FileScan, i: usize) -> Vec<Hit> {
+    let lt = &fs.code_lines[i];
+    let mut hits = Vec::new();
+    for pat in ["thread_rng", "rand::", "Instant::now",
+                "SystemTime::now", "from_entropy"] {
+        if lt.contains(pat) {
+            hits.push(hit("det-entropy", i + 1,
+                          format!("ambient entropy/clock source `{pat}`")));
+        }
+    }
+    hits
+}
+
+/// `det-seed-arith`: raw arithmetic on a value named `seed` (xor,
+/// `wrapping_*`) outside `prng/` and `benchlib/`.  Ad-hoc seed
+/// splitting collides streams; `prng::slice_stream` /
+/// `prng::session_seed` are the sanctioned derivations.
+pub fn det_seed_arith(fs: &FileScan, i: usize) -> Vec<Hit> {
+    let lt = &fs.code_lines[i];
+    let mut hits = Vec::new();
+    let found = seed_xor(lt)
+        || lt.contains("seed.wrapping_add")
+        || lt.contains("seed.wrapping_mul")
+        || lt.contains("seed.wrapping_sub")
+        || lt.contains("seed.wrapping_shl");
+    if found {
+        hits.push(hit("det-seed-arith", i + 1,
+                      "raw seed arithmetic (use prng::slice_stream / \
+                       prng::session_seed)"));
+    }
+    hits
+}
+
+/// Whole-word `seed` adjacent to a `^` operator.
+fn seed_xor(lt: &str) -> bool {
+    let mut from = 0usize;
+    while let Some(p) = find_word(&lt[from..], "seed") {
+        let p = from + p;
+        let after = lt[p + 4..].trim_start();
+        if after.starts_with('^') && !after.starts_with("^=") {
+            return true;
+        }
+        let before = lt[..p].trim_end();
+        if before.ends_with('^') {
+            return true;
+        }
+        from = p + 4;
+    }
+    false
+}
+
+/// `panic-unwrap`: `.unwrap()` on the serving surface.  These paths
+/// promised graceful degradation (PR 6/7): errors come back on the
+/// wire or fall back to local compute, they never kill a dispatcher
+/// thread.  `exec::lock_unpoisoned` is the sanctioned replacement for
+/// mutex guards.
+pub fn panic_unwrap(fs: &FileScan, i: usize) -> Vec<Hit> {
+    if fs.code_lines[i].contains(".unwrap()") {
+        vec![hit("panic-unwrap", i + 1,
+                 "`.unwrap()` on the serving surface")]
+    } else {
+        Vec::new()
+    }
+}
+
+/// `panic-expect`: `.expect(` on the serving surface (same contract
+/// as `panic-unwrap`).
+pub fn panic_expect(fs: &FileScan, i: usize) -> Vec<Hit> {
+    if fs.code_lines[i].contains(".expect(") {
+        vec![hit("panic-expect", i + 1,
+                 "`.expect(…)` on the serving surface")]
+    } else {
+        Vec::new()
+    }
+}
+
+/// `panic-macro`: `panic!` / `unreachable!` / `todo!` /
+/// `unimplemented!` on the serving surface.
+pub fn panic_macro(fs: &FileScan, i: usize) -> Vec<Hit> {
+    let lt = &fs.code_lines[i];
+    let mut hits = Vec::new();
+    for pat in ["panic!", "unreachable!", "todo!", "unimplemented!"] {
+        if find_word(lt, pat.trim_end_matches('!'))
+            .map(|p| lt[p..].starts_with(pat))
+            .unwrap_or(false)
+        {
+            hits.push(hit("panic-macro", i + 1,
+                          format!("`{pat}` on the serving surface")));
+        }
+    }
+    hits
+}
+
+/// `panic-index`: unguarded slice/array indexing on the serving
+/// surface.  Ranges (`a[s..e]`) and pure integer literals (`c[0]`)
+/// are exempt — the former are the panel-view idiom whose bounds the
+/// shape checks established, the latter are fixed-arity destructuring.
+/// Everything else should be `get()`-guarded or carry an allow whose
+/// reason names the invariant making the index safe.
+pub fn panic_index(fs: &FileScan, i: usize) -> Vec<Hit> {
+    let lt = fs.code_lines[i].as_bytes();
+    let mut hits = Vec::new();
+    let mut j = 1usize;
+    while j < lt.len() {
+        if lt[j] != b'[' {
+            j += 1;
+            continue;
+        }
+        let prev = lt[j - 1];
+        let indexes = prev.is_ascii_alphanumeric()
+            || prev == b'_'
+            || prev == b')'
+            || prev == b']';
+        if !indexes {
+            j += 1;
+            continue;
+        }
+        // matching close bracket
+        let mut depth = 1usize;
+        let mut k = j + 1;
+        while k < lt.len() && depth > 0 {
+            match lt[k] {
+                b'[' => depth += 1,
+                b']' => depth -= 1,
+                _ => {}
+            }
+            k += 1;
+        }
+        let inner =
+            &fs.code_lines[i][j + 1..(k - 1).max(j + 1).min(lt.len())];
+        let trimmed = inner.trim();
+        let literal = !trimmed.is_empty()
+            && trimmed.chars().all(|c| c.is_ascii_digit() || c == '_');
+        if !inner.contains("..") && !literal && !trimmed.is_empty() {
+            hits.push(hit("panic-index", i + 1,
+                          format!("unguarded index `[{trimmed}]`")));
+        }
+        j = k.max(j + 1);
+    }
+    hits
+}
+
+/// Find `word` at an identifier boundary; returns the byte offset.
+fn find_word(hay: &str, word: &str) -> Option<usize> {
+    let mut from = 0usize;
+    while let Some(p) = hay[from..].find(word) {
+        let p = from + p;
+        let before_ok = p == 0
+            || !hay.as_bytes()[p - 1].is_ascii_alphanumeric()
+                && hay.as_bytes()[p - 1] != b'_';
+        let end = p + word.len();
+        let after_ok = end >= hay.len()
+            || !hay.as_bytes()[end].is_ascii_alphanumeric()
+                && hay.as_bytes()[end] != b'_';
+        if before_ok && after_ok {
+            return Some(p);
+        }
+        from = p + word.len();
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scan(src: &str) -> FileScan {
+        FileScan::new("t.rs", src)
+    }
+
+    #[test]
+    fn float_reduce_flags_sum_not_maxfold() {
+        let fs = scan("fn f() {\n\
+                       let a: f32 = xs.iter().sum();\n\
+                       let m = xs.iter().fold(f32::NEG_INFINITY, f32::max);\n\
+                       let t = xs.iter().fold(0.0, |a, b| a + b);\n\
+                       }");
+        assert_eq!(det_float_reduce(&fs, 1).len(), 1);
+        assert!(det_float_reduce(&fs, 2).is_empty());
+        assert_eq!(det_float_reduce(&fs, 3).len(), 1);
+    }
+
+    #[test]
+    fn float_reduce_maxfold_combiner_on_next_line() {
+        let fs = scan("let m = xs.iter().copied().fold(f32::NEG_INFINITY,\n\
+                       f32::max);");
+        assert!(det_float_reduce(&fs, 0).is_empty());
+    }
+
+    #[test]
+    fn float_accum_skips_counters() {
+        let src = "fn f() {\nfor x in xs {\n\
+                   total += 1;\n\
+                   off += n;\n\
+                   acc[c] += a * b;\n\
+                   s += a[i];\n\
+                   }\n}";
+        let fs = scan(src);
+        assert!(det_float_accum(&fs, 2).is_empty());
+        assert!(det_float_accum(&fs, 3).is_empty());
+        assert_eq!(det_float_accum(&fs, 4).len(), 1);
+        assert_eq!(det_float_accum(&fs, 5).len(), 1);
+    }
+
+    #[test]
+    fn float_accum_outside_loop_is_fine() {
+        let fs = scan("fn f() {\nacc[c] += a * b;\n}");
+        assert!(det_float_accum(&fs, 1).is_empty());
+    }
+
+    #[test]
+    fn map_iter_flags_hashmap() {
+        let fs = scan("use std::collections::HashMap;\nlet m: BTreeMap<u8, u8>;");
+        assert_eq!(det_map_iter(&fs, 0).len(), 1);
+        assert!(det_map_iter(&fs, 1).is_empty());
+    }
+
+    #[test]
+    fn entropy_and_seed_arith() {
+        let fs = scan("let t = Instant::now();\n\
+                       let s = seed ^ 0xDEC0;\n\
+                       let u = prng::session_seed(seed, id);\n\
+                       let w = reseed ^ 1;");
+        assert_eq!(det_entropy(&fs, 0).len(), 1);
+        assert_eq!(det_seed_arith(&fs, 1).len(), 1);
+        assert!(det_seed_arith(&fs, 2).is_empty());
+        assert!(det_seed_arith(&fs, 3).is_empty()); // not the word `seed`
+    }
+
+    #[test]
+    fn panic_family() {
+        let fs = scan("a.unwrap();\nb.expect(\"x\");\npanic!(\"y\");\n\
+                       c.unwrap_or_default();");
+        assert_eq!(panic_unwrap(&fs, 0).len(), 1);
+        assert_eq!(panic_expect(&fs, 1).len(), 1);
+        assert_eq!(panic_macro(&fs, 2).len(), 1);
+        assert!(panic_unwrap(&fs, 3).is_empty());
+    }
+
+    #[test]
+    fn index_rule_exemptions() {
+        let fs = scan("let a = xs[i];\n\
+                       let b = xs[s..e];\n\
+                       let c = xs[0];\n\
+                       let d = vec![0.0; n];\n\
+                       #[cfg(feature = \"x\")] fn g() {}\n\
+                       let e = m[k % m.len()];");
+        assert_eq!(panic_index(&fs, 0).len(), 1);
+        assert!(panic_index(&fs, 1).is_empty());
+        assert!(panic_index(&fs, 2).is_empty());
+        assert!(panic_index(&fs, 3).is_empty());
+        assert!(panic_index(&fs, 4).is_empty());
+        assert_eq!(panic_index(&fs, 5).len(), 1);
+    }
+
+    #[test]
+    fn strings_and_comments_never_fire() {
+        let fs = scan("let s = \"a.unwrap() Instant::now HashMap\";\n\
+                       // xs[i].unwrap() in a comment\n\
+                       let t = 1;");
+        assert!(panic_unwrap(&fs, 0).is_empty());
+        assert!(det_entropy(&fs, 0).is_empty());
+        assert!(det_map_iter(&fs, 0).is_empty());
+        assert!(panic_index(&fs, 1).is_empty());
+    }
+}

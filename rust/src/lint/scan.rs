@@ -1,0 +1,551 @@
+//! Source scanner: the lexical substrate every lint rule runs on.
+//!
+//! `ct lint` deliberately does not parse Rust — a full grammar (syn,
+//! proc-macro) would be a heavyweight dependency for what the contract
+//! rules actually need, which is *lexical* truth: where strings and
+//! comments are (so patterns never fire inside them), which lines sit
+//! under `#[cfg(test)]` / `#[test]` scope, which lines are inside a
+//! loop body, and which suppression directives are in force.  The
+//! scanner produces exactly that, position-preserving, so rule
+//! matchers index the original text by the same offsets.
+//!
+//! Position preservation is the load-bearing property: every blanked
+//! region (string contents, comment bodies) is replaced byte-for-byte
+//! with spaces, newlines kept, so `code_lines[i]` and `raw_lines[i]`
+//! always have identical lengths and column offsets.  A matcher finds
+//! a span in the code view and reads its text from the raw view.
+
+use std::fmt;
+
+/// A suppression directive parsed from a comment:
+/// `ct-lint: allow(<rule>, reason = "...")`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Allow {
+    /// 1-based line the directive was written on.
+    pub line: usize,
+    /// Rule id being suppressed.
+    pub rule: String,
+    /// Mandatory justification (empty string when the author omitted
+    /// it — the engine turns that into a `lint-no-reason` violation).
+    pub reason: String,
+    /// `true` for `//!` (file-scope) directives, `false` for `//`
+    /// (line-scope) directives.
+    pub file_scope: bool,
+}
+
+/// One scanned source file, ready for rule matching.
+pub struct FileScan {
+    /// Repo-relative path with forward slashes (stable across hosts).
+    pub path: String,
+    /// Original text, split into lines.
+    pub raw_lines: Vec<String>,
+    /// Code view: same shape as `raw_lines` with string contents,
+    /// comments and char literals blanked to spaces (delimiting quotes
+    /// kept, so `("` patterns survive).
+    pub code_lines: Vec<String>,
+    /// `in_test[i]` — line `i+1` is inside a `#[cfg(test)]` or
+    /// `#[test]` brace scope (including the attribute lines).
+    pub in_test: Vec<bool>,
+    /// `in_loop[i]` — line `i+1` is inside a `for`/`while`/`loop`
+    /// body.
+    pub in_loop: Vec<bool>,
+    /// Every suppression directive in the file, in source order.
+    pub allows: Vec<Allow>,
+    /// Contract names declared by `//! ct-contract:` header lines
+    /// (first 40 lines), e.g. `bit-exact`, `panic-free`.
+    pub contracts: Vec<String>,
+}
+
+impl fmt::Debug for FileScan {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "FileScan({}, {} lines)", self.path, self.raw_lines.len())
+    }
+}
+
+impl FileScan {
+    /// Scan one file.  `path` must already be repo-relative with
+    /// forward slashes.
+    pub fn new(path: &str, text: &str) -> Self {
+        let (code, comments) = blank_noncode(text);
+        let raw_lines: Vec<String> =
+            text.split('\n').map(str::to_string).collect();
+        let code_lines: Vec<String> =
+            code.split('\n').map(str::to_string).collect();
+        let in_test = test_scope(&code_lines);
+        let in_loop = loop_scope(&code_lines);
+        let allows = parse_allows(&comments);
+        let contracts = parse_contracts(&raw_lines);
+        FileScan { path: path.to_string(), raw_lines, code_lines,
+                   in_test, in_loop, allows, contracts }
+    }
+
+    /// Does this file declare the named contract in its header?
+    pub fn has_contract(&self, name: &str) -> bool {
+        self.contracts.iter().any(|c| c == name)
+    }
+
+    /// The reason of an in-force suppression for `rule` at 1-based
+    /// `line`, if any.  A directive applies to its own line (trailing
+    /// form) or, when written on a comment-only line, to the next line
+    /// that carries code (standalone form; consecutive standalone
+    /// directives stack).  File-scope (`//!`) directives apply
+    /// everywhere in the file.  Directives without a reason never
+    /// suppress — they are themselves violations.
+    pub fn suppression(&self, rule: &str, line: usize) -> Option<&str> {
+        for a in &self.allows {
+            if a.rule != rule || a.reason.is_empty() {
+                continue;
+            }
+            if a.file_scope {
+                return Some(&a.reason);
+            }
+            if a.line == line {
+                return Some(&a.reason);
+            }
+            // standalone: directive on a codeless line covers the next
+            // code line; anything codeless in between is transparent
+            if a.line < line && self.codeless(a.line) {
+                let covers = (a.line + 1..line)
+                    .all(|l| self.codeless(l));
+                if covers {
+                    return Some(&a.reason);
+                }
+            }
+        }
+        None
+    }
+
+    /// Line carries no code (blank, or comment-only).
+    fn codeless(&self, line: usize) -> bool {
+        self.code_lines
+            .get(line - 1)
+            .is_none_or(|l| l.trim().is_empty())
+    }
+}
+
+/// Blank string/char-literal contents and comments out of `text`,
+/// preserving byte positions; returns the code view plus every line
+/// comment keyed by 1-based line.
+///
+/// Handles nested block comments, escaped quotes, raw strings
+/// (`r"…"`, `r#"…"#`), and distinguishes char literals from
+/// lifetimes.  Delimiting `"` quotes are kept so tuple-literal
+/// patterns like `("name",` remain matchable in the code view.
+pub fn blank_noncode(text: &str) -> (String, Vec<(usize, String)>) {
+    let b = text.as_bytes();
+    let n = b.len();
+    let mut out = String::with_capacity(n);
+    let mut comments: Vec<(usize, String)> = Vec::new();
+    let mut line = 1usize;
+    let mut i = 0usize;
+    while i < n {
+        let c = b[i];
+        if c == b'\n' {
+            out.push('\n');
+            line += 1;
+            i += 1;
+        } else if c == b'/' && i + 1 < n && b[i + 1] == b'/' {
+            let mut j = i;
+            while j < n && b[j] != b'\n' {
+                j += 1;
+            }
+            comments.push((line, text[i..j].to_string()));
+            for _ in i..j {
+                out.push(' ');
+            }
+            i = j;
+        } else if c == b'/' && i + 1 < n && b[i + 1] == b'*' {
+            let mut depth = 1usize;
+            let mut j = i + 2;
+            while j < n && depth > 0 {
+                if b[j] == b'/' && j + 1 < n && b[j + 1] == b'*' {
+                    depth += 1;
+                    j += 2;
+                } else if b[j] == b'*' && j + 1 < n && b[j + 1] == b'/' {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    j += 1;
+                }
+            }
+            for k in i..j {
+                if b[k] == b'\n' {
+                    out.push('\n');
+                    line += 1;
+                } else {
+                    out.push(' ');
+                }
+            }
+            i = j;
+        } else if c == b'"' {
+            let mut j = i + 1;
+            while j < n {
+                if b[j] == b'\\' {
+                    j += 2;
+                } else if b[j] == b'"' {
+                    j += 1;
+                    break;
+                } else {
+                    j += 1;
+                }
+            }
+            out.push('"');
+            let body_end = j.saturating_sub(1).max(i + 1);
+            for k in i + 1..body_end {
+                if b[k] == b'\n' {
+                    out.push('\n');
+                    line += 1;
+                } else {
+                    out.push(' ');
+                }
+            }
+            if j > i + 1 {
+                out.push('"');
+            }
+            i = j.min(n);
+        } else if c == b'r'
+            && i + 1 < n
+            && (b[i + 1] == b'"' || b[i + 1] == b'#')
+        {
+            // raw string r"…" / r#"…"# — blank it entirely
+            let mut hashes = 0usize;
+            let mut j = i + 1;
+            while j < n && b[j] == b'#' {
+                hashes += 1;
+                j += 1;
+            }
+            if j < n && b[j] == b'"' {
+                j += 1;
+                let close: String =
+                    std::iter::once('"')
+                        .chain(std::iter::repeat_n('#', hashes))
+                        .collect();
+                let end = text[j..]
+                    .find(&close)
+                    .map_or(n, |p| j + p + close.len());
+                for k in i..end {
+                    if b[k] == b'\n' {
+                        out.push('\n');
+                        line += 1;
+                    } else {
+                        out.push(' ');
+                    }
+                }
+                i = end;
+            } else {
+                out.push(c as char);
+                i += 1;
+            }
+        } else if c == b'\'' {
+            // char literal vs lifetime: a literal closes within a few
+            // bytes with a matching quote
+            let lit_len = char_literal_len(&b[i..]);
+            if let Some(len) = lit_len {
+                out.push('\'');
+                for _ in 0..len - 2 {
+                    out.push(' ');
+                }
+                out.push('\'');
+                i += len;
+            } else {
+                out.push('\'');
+                i += 1;
+            }
+        } else {
+            out.push(c as char);
+            i += 1;
+        }
+    }
+    (out, comments)
+}
+
+/// Length of a char literal starting at `b[0] == b'\''`, or `None`
+/// when it is a lifetime.
+fn char_literal_len(b: &[u8]) -> Option<usize> {
+    if b.len() < 3 {
+        return None;
+    }
+    if b[1] == b'\\' {
+        // escaped: scan to the closing quote (covers \n, \x7f, \u{…})
+        for (j, &c) in b.iter().enumerate().skip(2) {
+            if c == b'\'' {
+                return Some(j + 1);
+            }
+            if c == b'\n' || j > 12 {
+                break;
+            }
+        }
+        None
+    } else if b[2] == b'\'' && b[1] != b'\'' {
+        Some(3)
+    } else {
+        None
+    }
+}
+
+/// Mark every line inside a `#[cfg(test)]` / `#[test]` brace scope.
+///
+/// Brace depth is tracked over the code view; seeing a test attribute
+/// arms a pending flag that transfers to the next `{` opened (the item
+/// body).  A `;` at the attribute's depth disarms it (`mod tests;`
+/// out-of-line form).  Attribute lines themselves count as test scope
+/// so signatures between attribute and body are excluded too.
+fn test_scope(code_lines: &[String]) -> Vec<bool> {
+    let mut res = vec![false; code_lines.len()];
+    let mut stack: Vec<bool> = Vec::new();
+    let mut pending = false;
+    for (idx, lt) in code_lines.iter().enumerate() {
+        let start_test = stack.iter().any(|&t| t);
+        let mut became = false;
+        if is_test_attr_line(lt) {
+            pending = true;
+        }
+        for ch in lt.chars() {
+            match ch {
+                '{' => {
+                    stack.push(pending);
+                    pending = false;
+                    if stack.iter().any(|&t| t) {
+                        became = true;
+                    }
+                }
+                '}' => {
+                    stack.pop();
+                }
+                ';' if pending && stack.is_empty() => pending = false,
+                _ => {}
+            }
+        }
+        res[idx] = start_test || became || pending;
+    }
+    res
+}
+
+/// Does this code line carry a `#[cfg(test)]` or `#[test]` attribute?
+fn is_test_attr_line(lt: &str) -> bool {
+    let squished: String =
+        lt.chars().filter(|c| !c.is_whitespace()).collect();
+    squished.contains("#[cfg(test)]") || squished.contains("#[test]")
+}
+
+/// Mark every line inside a `for` / `while` / `loop` body, by tagging
+/// each opened brace with whether the code chunk since the last
+/// `{`/`}`/`;` contained a loop keyword.
+fn loop_scope(code_lines: &[String]) -> Vec<bool> {
+    let mut res = vec![false; code_lines.len()];
+    let mut stack: Vec<bool> = Vec::new();
+    let mut chunk = String::new();
+    for (idx, lt) in code_lines.iter().enumerate() {
+        if stack.iter().any(|&l| l) {
+            res[idx] = true;
+        }
+        for ch in lt.chars() {
+            match ch {
+                '{' => {
+                    stack.push(has_loop_keyword(&chunk));
+                    chunk.clear();
+                    if stack.iter().any(|&l| l) {
+                        res[idx] = true;
+                    }
+                }
+                '}' => {
+                    stack.pop();
+                    chunk.clear();
+                }
+                ';' => chunk.clear(),
+                c => chunk.push(c),
+            }
+        }
+        chunk.push(' ');
+    }
+    res
+}
+
+/// Whole-word `for` / `while` / `loop` in a code chunk.
+fn has_loop_keyword(chunk: &str) -> bool {
+    let mut word = String::new();
+    for c in chunk.chars().chain(std::iter::once(' ')) {
+        if c.is_alphanumeric() || c == '_' {
+            word.push(c);
+        } else {
+            if word == "for" || word == "while" || word == "loop" {
+                return true;
+            }
+            word.clear();
+        }
+    }
+    false
+}
+
+/// Parse every `ct-lint: allow(rule, reason = "…")` directive out of
+/// the file's comments.  Only `//` and `//!` comments carry
+/// directives; `///` doc comments never do, so rule documentation can
+/// show the syntax without activating it.
+fn parse_allows(comments: &[(usize, String)]) -> Vec<Allow> {
+    let mut out = Vec::new();
+    for (line, c) in comments {
+        let body = c.trim_start();
+        let (file_scope, rest) = if let Some(r) = body.strip_prefix("//!")
+        {
+            (true, r)
+        } else if body.starts_with("///") {
+            continue;
+        } else if let Some(r) = body.strip_prefix("//") {
+            (false, r)
+        } else {
+            continue;
+        };
+        let rest = rest.trim_start();
+        let Some(args) = rest
+            .strip_prefix("ct-lint:")
+            .map(str::trim_start)
+            .and_then(|r| r.strip_prefix("allow("))
+        else {
+            continue;
+        };
+        let Some(close) = args.rfind(')') else { continue };
+        let args = &args[..close];
+        let (rule, reason) = match args.find(',') {
+            None => (args.trim(), String::new()),
+            Some(comma) => {
+                let rule = args[..comma].trim();
+                let tail = args[comma + 1..].trim();
+                let reason = tail
+                    .strip_prefix("reason")
+                    .map(str::trim_start)
+                    .and_then(|t| t.strip_prefix('='))
+                    .map(str::trim)
+                    .and_then(|t| {
+                        t.strip_prefix('"')
+                            .and_then(|t| t.strip_suffix('"'))
+                    })
+                    .unwrap_or("")
+                    .to_string();
+                (rule, reason)
+            }
+        };
+        out.push(Allow {
+            line: *line,
+            rule: rule.to_string(),
+            reason,
+            file_scope,
+        });
+    }
+    out
+}
+
+/// Contract names from `//! ct-contract: a, b` header lines (scanned
+/// over the first 40 lines).
+fn parse_contracts(raw_lines: &[String]) -> Vec<String> {
+    let mut out = Vec::new();
+    for l in raw_lines.iter().take(40) {
+        let t = l.trim_start();
+        if let Some(rest) = t
+            .strip_prefix("//!")
+            .map(str::trim_start)
+            .and_then(|r| r.strip_prefix("ct-contract:"))
+        {
+            for name in rest.split(',') {
+                let name = name.trim();
+                if !name.is_empty() {
+                    out.push(name.to_string());
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn blanking_preserves_positions() {
+        let src = "let a = \"hi // not a comment\"; // real\nlet b = 1;";
+        let (code, comments) = blank_noncode(src);
+        assert_eq!(code.len(), src.len());
+        assert!(code.contains("let a = \"                  \";"));
+        assert!(!code.contains("real"));
+        assert_eq!(comments.len(), 1);
+        assert_eq!(comments[0].0, 1);
+        assert!(comments[0].1.contains("real"));
+    }
+
+    #[test]
+    fn nested_block_comments_and_raw_strings() {
+        let src = "a /* x /* y */ z */ b\nlet r = r#\"un\"closed\"#;";
+        let (code, _) = blank_noncode(src);
+        assert!(code.starts_with("a "));
+        assert!(code.contains(" b"));
+        assert!(!code.contains('y'));
+        assert!(!code.contains("un"));
+    }
+
+    #[test]
+    fn char_literal_vs_lifetime() {
+        let (code, _) = blank_noncode("let c = 'x'; fn f<'a>(v: &'a u8) {}");
+        assert!(!code.contains('x'));
+        assert!(code.contains("<'a>"));
+        let (code2, _) = blank_noncode("let nl = '\\n';");
+        assert!(!code2.contains('n') || code2.contains("nl"));
+    }
+
+    #[test]
+    fn test_scope_covers_cfg_test_mod() {
+        let src = "fn live() {}\n#[cfg(test)]\nmod tests {\n    fn t() {}\n}\nfn live2() {}";
+        let fs = FileScan::new("x.rs", src);
+        assert!(!fs.in_test[0]);
+        assert!(fs.in_test[1] && fs.in_test[2] && fs.in_test[3]
+                && fs.in_test[4]);
+        assert!(!fs.in_test[5]);
+    }
+
+    #[test]
+    fn test_scope_covers_test_fn_items() {
+        let src = "#[test]\nfn prop() {\n    body();\n}\nfn live() {}";
+        let fs = FileScan::new("x.rs", src);
+        assert!(fs.in_test[0] && fs.in_test[1] && fs.in_test[2]);
+        assert!(!fs.in_test[4]);
+    }
+
+    #[test]
+    fn loop_scope_tracks_bodies() {
+        let src = "fn f() {\n    for i in 0..3 {\n        x += y * 2.0;\n    }\n    x += 1;\n}";
+        let fs = FileScan::new("x.rs", src);
+        assert!(fs.in_loop[2]);
+        assert!(!fs.in_loop[4]);
+    }
+
+    #[test]
+    fn allow_directive_forms() {
+        let src = "\
+//! ct-contract: bit-exact
+//! ct-lint: allow(det-entropy, reason = \"file-wide ok\")
+fn f() {
+    // ct-lint: allow(panic-unwrap, reason = \"standalone\")
+    a.unwrap();
+    b.unwrap(); // ct-lint: allow(panic-unwrap, reason = \"trailing\")
+    // ct-lint: allow(panic-expect)
+    c.expect(\"no reason given\");
+}";
+        let fs = FileScan::new("x.rs", src);
+        assert!(fs.has_contract("bit-exact"));
+        assert_eq!(fs.suppression("det-entropy", 5), Some("file-wide ok"));
+        assert_eq!(fs.suppression("panic-unwrap", 5), Some("standalone"));
+        assert_eq!(fs.suppression("panic-unwrap", 6), Some("trailing"));
+        // reasonless directive must not suppress
+        assert_eq!(fs.suppression("panic-expect", 8), None);
+        let no_reason: Vec<_> =
+            fs.allows.iter().filter(|a| a.reason.is_empty()).collect();
+        assert_eq!(no_reason.len(), 1);
+        assert_eq!(no_reason[0].rule, "panic-expect");
+    }
+
+    #[test]
+    fn doc_comment_examples_are_inert() {
+        let src = "/// ct-lint: allow(panic-unwrap, reason = \"doc\")\nfn f() { a.unwrap(); }";
+        let fs = FileScan::new("x.rs", src);
+        assert!(fs.allows.is_empty());
+    }
+}

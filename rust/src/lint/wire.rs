@@ -1,0 +1,180 @@
+//! `wire-field`: the JSON wire surface as a reviewed allowlist.
+//!
+//! PR 8 settled the protocol discipline — byte-stable field names,
+//! optional fields emitted only when true, lenient parse on the read
+//! side.  This rule makes the *write* side checkable: every field name
+//! emitted as a `("name", value)` tuple in `server/` (the gateway
+//! JSON-lines protocol) or `attention/sharded.rs` (the shard wire
+//! header) must appear in the checked-in `lint/wire-fields.json`
+//! allowlist.  Adding or renaming a protocol field therefore shows up
+//! as an explicit allowlist diff a reviewer has to approve — and a
+//! typo'd field name fails CI instead of silently forking the
+//! protocol.
+//!
+//! The matcher keys on the `jsonio` emission idiom: a `("name",`
+//! tuple opener whose `(` is not a call (preceded by start-of-line,
+//! whitespace, `[`, `(`, `,` or `=`), so `obj(vec![("id", …)])` and
+//! `fields.push(("lens", …))` match while `format!("…")`, `get("id")`
+//! and `anyhow!("…")` do not.
+
+use super::rules::Hit;
+use super::scan::FileScan;
+use crate::jsonio;
+
+/// The checked-in allowlist, embedded at compile time so the binary
+/// and the reviewed file can never diverge.
+pub const WIRE_FIELDS_JSON: &str = include_str!("wire-fields.json");
+
+/// Parse an allowlist document (`{"version": 1, "fields": [...]}`)
+/// into its field names.  Returns `None` on a malformed document.
+pub fn parse_allowlist(text: &str) -> Option<Vec<String>> {
+    let doc = jsonio::parse(text).ok()?;
+    let fields = doc.get("fields").as_arr()?;
+    let mut out = Vec::with_capacity(fields.len());
+    for f in fields {
+        out.push(f.as_str()?.to_string());
+    }
+    Some(out)
+}
+
+/// Extract every emitted wire field name from one line.  Returns
+/// `(name, column)` pairs; the caller checks them against the
+/// allowlist.
+pub fn emitted_fields(fs: &FileScan, i: usize) -> Vec<(String, usize)> {
+    let code = fs.code_lines[i].as_bytes();
+    let raw = &fs.raw_lines[i];
+    let mut out = Vec::new();
+    let mut j = 0usize;
+    while j < code.len() {
+        if code[j] != b'(' {
+            j += 1;
+            continue;
+        }
+        // predecessor must not be a call target or macro bang
+        let pred = fs.code_lines[i][..j]
+            .trim_end()
+            .bytes()
+            .last();
+        let callish = matches!(pred,
+            Some(b) if b.is_ascii_alphanumeric() || b == b'_'
+                || b == b'!' || b == b'"' || b == b'>' || b == b')');
+        if callish {
+            j += 1;
+            continue;
+        }
+        // expect: ( ws* " … " ws* ,
+        let mut k = j + 1;
+        while k < code.len() && code[k].is_ascii_whitespace() {
+            k += 1;
+        }
+        if k >= code.len() || code[k] != b'"' {
+            j += 1;
+            continue;
+        }
+        let open = k;
+        let mut close = open + 1;
+        while close < code.len() && code[close] != b'"' {
+            close += 1;
+        }
+        if close >= code.len() {
+            j += 1;
+            continue;
+        }
+        let mut after = close + 1;
+        while after < code.len() && code[after].is_ascii_whitespace() {
+            after += 1;
+        }
+        if after >= code.len() || code[after] != b',' {
+            j = close + 1;
+            continue;
+        }
+        // positions are preserved between code and raw views, so the
+        // blanked string contents can be read back from the raw line
+        let name = raw
+            .get(open + 1..close)
+            .unwrap_or("")
+            .to_string();
+        if is_ident(&name) {
+            out.push((name, open + 1));
+        }
+        j = close + 1;
+    }
+    out
+}
+
+/// `[A-Za-z_][A-Za-z0-9_]*` — field-name shaped.
+fn is_ident(s: &str) -> bool {
+    let mut chars = s.chars();
+    match chars.next() {
+        Some(c) if c.is_ascii_alphabetic() || c == '_' => {}
+        _ => return false,
+    }
+    chars.all(|c| c.is_ascii_alphanumeric() || c == '_')
+}
+
+/// Run the wire-field rule over one line of a wire-surface file.
+pub fn wire_field(fs: &FileScan, i: usize, allow: &[String]) -> Vec<Hit> {
+    emitted_fields(fs, i)
+        .into_iter()
+        .filter(|(name, _)| !allow.iter().any(|a| a == name))
+        .map(|(name, _)| Hit {
+            rule: "wire-field",
+            line: i + 1,
+            msg: format!("wire field `{name}` is not in \
+                          lint/wire-fields.json (protocol fields are \
+                          reviewed diffs)"),
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scan(src: &str) -> FileScan {
+        FileScan::new("server/mod.rs", src)
+    }
+
+    #[test]
+    fn embedded_allowlist_parses() {
+        let fields = parse_allowlist(WIRE_FIELDS_JSON)
+            .unwrap_or_default();
+        assert!(fields.iter().any(|f| f == "id"));
+        assert!(fields.iter().any(|f| f == "session"));
+        // sorted and unique — the file is a reviewed artifact
+        let mut sorted = fields.clone();
+        sorted.sort();
+        sorted.dedup();
+        assert_eq!(fields, sorted);
+    }
+
+    #[test]
+    fn extracts_tuple_fields_not_calls() {
+        let fs = scan("let v = obj(vec![\n\
+                       (\"id\", id.into()),\n\
+                       (\"error\", format!(\"bad: {e}\").into()),\n\
+                       ]);\n\
+                       fields.push((\"lens\", lens.into()));\n\
+                       let x = req.get(\"id\");\n\
+                       let m = anyhow!(\"no {name:?}\");");
+        assert_eq!(emitted_fields(&fs, 1),
+                   vec![("id".to_string(), 2)]);
+        assert_eq!(emitted_fields(&fs, 2).len(), 1);
+        assert_eq!(emitted_fields(&fs, 4),
+                   vec![("lens".to_string(), 14)]);
+        assert!(emitted_fields(&fs, 5).is_empty());
+        assert!(emitted_fields(&fs, 6).is_empty());
+    }
+
+    #[test]
+    fn unlisted_field_is_a_hit() {
+        let fs = scan("(\"brand_new_field\", 1.into()),");
+        let allow = vec!["id".to_string()];
+        let hits = wire_field(&fs, 0, &allow);
+        assert_eq!(hits.len(), 1);
+        assert!(hits[0].msg.contains("brand_new_field"));
+        let ok = wire_field(&fs, 0,
+                            &["brand_new_field".to_string()]);
+        assert!(ok.is_empty());
+    }
+}

@@ -1,5 +1,7 @@
 //! `ct` — the clustered-transformers launcher.
 //!
+//! ct-lint: allow(det-entropy, reason = "the CLI shell times benches and stamps reports; kernel math never sees the clock")
+//!
 //! Subcommands:
 //!   list        show manifest programs
 //!   train       train one model via compiled train-step HLO
@@ -11,6 +13,11 @@
 //!               for a multi-host gateway's sharded fan-out backend
 //!   oracle      golden-trace regression harness: record / replay /
 //!               bless fixtures, run the bench perf gate
+//!               (see docs/TESTING.md)
+//!   lint        contract-aware static analysis over the crate's own
+//!               sources: determinism, panic-safety, wire-stability
+//!               and doc-drift rules with reasoned suppressions,
+//!               emitting a byte-stable lint-report.json
 //!               (see docs/TESTING.md)
 //!   validate    run every *.forward program once (artifact smoke test)
 //!   bench-attn  quick native attention timing (see benches for full runs)
@@ -47,13 +54,14 @@ fn dispatch(argv: &[String]) -> Result<()> {
         "gateway" => cmd_gateway(rest),
         "shard-worker" => cmd_shard_worker(rest),
         "oracle" => cmd_oracle(rest),
+        "lint" => cmd_lint(rest),
         "validate" => cmd_validate(rest),
         "bench-attn" => cmd_bench_attn(rest),
         _ => {
             println!(
                 "ct — Fast Transformers with Clustered Attention (repro)\n\
                  subcommands: list | train | eval | serve | gateway | \
-                 shard-worker | oracle | validate | bench-attn\n\
+                 shard-worker | oracle | lint | validate | bench-attn\n\
                  run `ct <subcommand> --help` conceptually via source; \
                  common options: --artifacts DIR --steps N --model NAME"
             );
@@ -385,6 +393,7 @@ fn cmd_gateway(rest: &[String]) -> Result<()> {
                  bucket ({max_n})", prefill + steps * step_len));
         }
         trace.extend(coordinator::synthetic_decode_trace(
+            // ct-lint: allow(det-seed-arith, reason = "bench-trace decorrelation constant; bench baselines were recorded under this derivation")
             shape, prefill, steps, step_len, sessions, seed ^ 0xDEC0));
     }
     let total_items = trace.len();
@@ -651,6 +660,62 @@ fn cmd_oracle_perf_gate(rest: &[String]) -> Result<()> {
                      {:.0}% (see {})",
                     policy.max_bench_regression * 100.0,
                     report_path.display()))
+    }
+}
+
+fn cmd_lint(rest: &[String]) -> Result<()> {
+    use clustered_transformers::lint;
+    let cmd = Command::new(
+        "lint",
+        "contract-aware static analysis over the crate's own sources \
+         (determinism, panic-safety, wire-stability, doc drift)")
+        .opt("root", None, "repo root (default: discovered)")
+        .opt("report", None,
+             "report output path (default <repo>/lint-report.json)")
+        .flag("json", "print the full JSON report to stdout")
+        .flag("self-check",
+              "inject synthetic probe violations and require every \
+               rule to fire — a healthy linter exits nonzero (CI \
+               asserts that, mirroring the oracle perturbation test)");
+    let args = cmd.parse(rest)?;
+    init_logging(false);
+    let root = args.get("root")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(find_repo_root);
+    let report_path = args.get("report")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(lint::default_report_path);
+
+    if args.flag("self-check") {
+        let sc = lint::self_check(&root)?;
+        if !sc.missed.is_empty() {
+            // broken scanner: report success (exit 0) so the inverted
+            // CI assertion `if ct lint --self-check; then fail` trips
+            println!("lint self-check FAILED — rules that did not \
+                      fire on the injected probes: {}",
+                     sc.missed.join(", "));
+            return Ok(());
+        }
+        println!("{}", sc.report.console());
+        return Err(anyhow!(
+            "lint self-check: red path verified — {} injected \
+             violation(s) detected across every rule", sc.injected));
+    }
+
+    let report = lint::run(&root)?;
+    std::fs::write(&report_path, report.render())?;
+    if args.flag("json") {
+        print!("{}", report.render());
+    } else {
+        print!("{}", report.console());
+    }
+    println!("report: {}", report_path.display());
+    if report.passed() {
+        Ok(())
+    } else {
+        Err(anyhow!("ct lint: {} violation(s) — fix them or add a \
+                     reasoned `ct-lint: allow(...)` (see \
+                     docs/TESTING.md)", report.violations.len()))
     }
 }
 

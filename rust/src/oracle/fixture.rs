@@ -1,3 +1,5 @@
+//! ct-contract: panic-free
+//!
 //! Golden-trace fixture model and on-disk format.
 //!
 //! A fixture is a *regenerable* recording of the serving gateway over a
@@ -108,6 +110,7 @@ impl TraceSpec {
                     synthetic_trace(shape, min_len, max_len, count, seed);
                 let decode = synthetic_decode_trace(
                     shape, prefill, steps, step_len, sessions,
+                    // ct-lint: allow(det-seed-arith, reason = "recorded fixture seed derivation: changing it invalidates every checked-in golden fixture")
                     seed.wrapping_add(1));
                 interleave(shots, decode)
             }
@@ -510,6 +513,7 @@ pub fn fnv1a64(bytes: &[u8]) -> u64 {
 /// Frame stream → the raw little-endian bytes of the `.bin` file.
 pub fn frames_to_bytes(frames: &[f32]) -> Vec<u8> {
     let mut buf = Vec::with_capacity(frames.len() * 4);
+    // ct-lint: allow(panic-expect, reason = "io::Write to a Vec cannot fail; threading a Result through every fixture caller for an infallible write hides real errors")
     write_f32s(&mut buf, frames).expect("Vec write is infallible");
     buf
 }

@@ -1,3 +1,5 @@
+//! ct-contract: panic-free
+//!
 //! Golden-trace oracle harness: record/replay parity for the serving
 //! stack, plus the perf-regression gate.
 //!
@@ -390,6 +392,7 @@ fn diff_run(fx: &Fixture, run: &RecordedRun, policy: &TolerancePolicy)
     let n = run.responses.len().min(fx.responses.len());
     let mut frames_comparable = run.frames.len() == fx.frames.len();
     for i in 0..n {
+        // ct-lint: allow(panic-index, reason = "i < n = min of both lengths by the loop bound")
         let (got, want) = (&run.responses[i], &fx.responses[i]);
         if got.len != want.len
             || got.span_start != want.span_start

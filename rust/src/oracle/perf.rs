@@ -1,3 +1,5 @@
+//! ct-contract: panic-free
+//!
 //! Perf-regression gate: fresh `BENCH_*.json` files vs checked-in
 //! baselines.
 //!

@@ -1,3 +1,5 @@
+//! ct-contract: panic-free
+//!
 //! Tolerance policy: what the replay diff and the perf gate are
 //! allowed to forgive.
 //!

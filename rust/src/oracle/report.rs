@@ -1,3 +1,5 @@
+//! ct-contract: panic-free
+//!
 //! `oracle-report.json`: the machine-readable verdict of a replay (and
 //! optionally a perf-gate) run.
 //!

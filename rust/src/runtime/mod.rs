@@ -6,6 +6,8 @@
 //! lazily and caches them, so benches and the coordinator share compiled
 //! modules.  Interchange is HLO *text* because the pinned xla_extension
 //! 0.5.1 rejects jax ≥ 0.5 serialized protos (64-bit instruction ids).
+//!
+//! ct-lint: allow(det-entropy, reason = "Instant::now measures compile/execute latency for metrics; program outputs are pure functions of their inputs")
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};

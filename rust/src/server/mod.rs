@@ -1,3 +1,5 @@
+//! ct-contract: panic-free
+//!
 //! JSON-lines-over-TCP inference server + client.
 //!
 //! Protocol: one JSON object per line.  Two endpoints share the framing:
@@ -52,6 +54,10 @@
 //! (the frame boundary is unknowable), while an engine error *after*
 //! the frames were consumed replies `{"id", "error"}` and keeps
 //! serving.  See `attention::sharded` for the full wire grammar.
+
+// The panic-free serving contract, compiler-side: `ct lint` scans the
+// source, clippy guards what the scanner cannot see through macros.
+#![deny(clippy::unwrap_used, clippy::expect_used)]
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};

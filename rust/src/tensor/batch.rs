@@ -1,3 +1,5 @@
+//! ct-contract: bit-exact
+//!
 //! Batched (B, H, N, D) tensor layer for the multi-head attention engine.
 //!
 //! A [`BatchMatrix`] stacks `B·H` row-major `(N × D)` slices contiguously

@@ -1,3 +1,6 @@
+//! ct-contract: bit-exact
+//! ct-lint: allow(det-float-accum, reason = "the GEMM microkernel IS the pinned elementary order: k ascending within a fixed tile schedule, bit-stable for any worker count")
+//!
 //! Cache-blocked, panel-packed f32 GEMM — the compute core every
 //! attention kernel's matmuls run on.
 //!

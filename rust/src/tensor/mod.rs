@@ -1,3 +1,6 @@
+//! ct-contract: bit-exact
+//! ct-lint: allow(det-float-accum, reason = "this file defines the pinned elementary accumulation order the det-float-accum rule protects everywhere else")
+//!
 //! Row-major f32 matrix substrate for the Rust reference attention and the
 //! benchmark harness.  Deliberately minimal: contiguous `Vec<f32>`, blocked
 //! matmul, row softmax, top-k, argsort — everything `attention/` needs.

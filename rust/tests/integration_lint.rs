@@ -1,0 +1,358 @@
+//! End-to-end tests of the `ct lint` static-analysis pass through its
+//! public API: known-good and known-bad fixtures per rule family, the
+//! suppression contract (a reason is mandatory), the red-path
+//! self-check probes, and byte-stability of the report over the real
+//! tree (two runs must produce identical bytes — the property that
+//! makes `lint-report.json` diffable in review).
+
+use std::path::PathBuf;
+
+use clustered_transformers::lint::{self, SourceSet};
+
+/// Assemble a [`SourceSet`] from literal files, with empty drift docs
+/// and a minimal wire allowlist.
+fn set(files: &[(&str, &str)]) -> SourceSet {
+    SourceSet {
+        files: files
+            .iter()
+            .map(|(p, t)| (p.to_string(), t.to_string()))
+            .collect(),
+        docs: vec![
+            ("README.md".to_string(), String::new()),
+            ("docs/ARCHITECTURE.md".to_string(), String::new()),
+        ],
+        wire_allow: vec!["id".to_string(), "ok".to_string()],
+    }
+}
+
+fn rules_fired(rep: &lint::report::LintReport) -> Vec<String> {
+    rep.violations.iter().map(|v| v.rule.clone()).collect()
+}
+
+/// Repo root: the parent of the crate dir (`rust/`).
+fn repo_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("crate dir has a parent")
+        .to_path_buf()
+}
+
+// ---------------------------------------------------------------------------
+// per-rule good/bad fixtures
+// ---------------------------------------------------------------------------
+
+#[test]
+fn det_float_reduce_bad_and_good() {
+    let bad = set(&[(
+        "attention/k.rs",
+        "//! ct-contract: bit-exact\n\
+         fn f(xs: &[f32]) -> f32 { xs.iter().sum() }\n",
+    )]);
+    assert!(rules_fired(&lint::analyze(&bad))
+        .contains(&"det-float-reduce".to_string()));
+
+    // max/min folds are order-insensitive and exempt
+    let good = set(&[(
+        "attention/k.rs",
+        "//! ct-contract: bit-exact\n\
+         fn f(xs: &[f32]) -> f32 {\n\
+             xs.iter().fold(f32::NEG_INFINITY, f32::max)\n\
+         }\n",
+    )]);
+    let rep = lint::analyze(&good);
+    assert!(rep.passed(), "violations: {:?}", rep.violations);
+}
+
+#[test]
+fn det_float_accum_flags_loops_not_counters() {
+    let bad = set(&[(
+        "tensor/k.rs",
+        "//! ct-contract: bit-exact\n\
+         fn f(xs: &[f32], acc: &mut [f32]) {\n\
+             for (i, x) in xs.iter().enumerate() {\n\
+                 acc[i % 2] += x * 2.0;\n\
+             }\n\
+         }\n",
+    )]);
+    assert!(rules_fired(&lint::analyze(&bad))
+        .contains(&"det-float-accum".to_string()));
+
+    // integer counters in loops are not float accumulation
+    let good = set(&[(
+        "tensor/k.rs",
+        "//! ct-contract: bit-exact\n\
+         fn f(xs: &[f32]) -> usize {\n\
+             let mut n = 0usize;\n\
+             for _x in xs {\n\
+                 n += 1;\n\
+             }\n\
+             n\n\
+         }\n",
+    )]);
+    let rep = lint::analyze(&good);
+    assert!(rep.passed(), "violations: {:?}", rep.violations);
+}
+
+#[test]
+fn det_map_iter_flags_hash_containers() {
+    let bad = set(&[(
+        "exec/k.rs",
+        "//! ct-contract: bit-exact\n\
+         use std::collections::HashMap;\n\
+         fn f() { let _m: HashMap<u32, u32> = HashMap::new(); }\n",
+    )]);
+    assert!(rules_fired(&lint::analyze(&bad))
+        .contains(&"det-map-iter".to_string()));
+
+    let good = set(&[(
+        "exec/k.rs",
+        "//! ct-contract: bit-exact\n\
+         use std::collections::BTreeMap;\n\
+         fn f() { let _m: BTreeMap<u32, u32> = BTreeMap::new(); }\n",
+    )]);
+    let rep = lint::analyze(&good);
+    assert!(rep.passed(), "violations: {:?}", rep.violations);
+}
+
+#[test]
+fn det_entropy_scope_excludes_prng() {
+    let src = "fn f() { let _t = std::time::Instant::now(); }\n";
+    let bad = set(&[("clustering/k.rs", src)]);
+    assert!(rules_fired(&lint::analyze(&bad))
+        .contains(&"det-entropy".to_string()));
+
+    // prng/ and benchlib/ are the sanctioned homes
+    let good = set(&[("prng/k.rs", src), ("benchlib/k.rs", src)]);
+    let rep = lint::analyze(&good);
+    assert!(rep.passed(), "violations: {:?}", rep.violations);
+}
+
+#[test]
+fn det_seed_arith_wants_prng_helpers() {
+    let bad = set(&[(
+        "clustering/k.rs",
+        "fn f(seed: u64) -> u64 { seed ^ 0x9E37 }\n",
+    )]);
+    assert!(rules_fired(&lint::analyze(&bad))
+        .contains(&"det-seed-arith".to_string()));
+
+    let good = set(&[(
+        "clustering/k.rs",
+        "fn f(seed: u64, s: u64) -> u64 { slice_stream(seed, s).next() }\n",
+    )]);
+    let rep = lint::analyze(&good);
+    assert!(rep.passed(), "violations: {:?}", rep.violations);
+}
+
+#[test]
+fn panic_rules_cover_the_serving_surface() {
+    let bad = set(&[(
+        "server/k.rs",
+        "//! ct-contract: panic-free\n\
+         fn f(v: Vec<u64>, i: usize) -> u64 {\n\
+             let a = v.first().unwrap();\n\
+             let b = v.last().expect(\"b\");\n\
+             if a > b { panic!(\"nope\"); }\n\
+             v[i]\n\
+         }\n",
+    )]);
+    let fired = rules_fired(&lint::analyze(&bad));
+    for rule in ["panic-unwrap", "panic-expect", "panic-macro",
+                 "panic-index"] {
+        assert!(fired.contains(&rule.to_string()), "missing {rule}");
+    }
+
+    // error-return idiom passes; test code is exempt entirely
+    let good = set(&[(
+        "server/k.rs",
+        "//! ct-contract: panic-free\n\
+         fn f(v: &[u64], i: usize) -> Option<u64> {\n\
+             v.get(i).copied()\n\
+         }\n\
+         #[cfg(test)]\n\
+         mod tests {\n\
+             #[test]\n\
+             fn t() { assert_eq!(super::f(&[3], 0).unwrap(), 3); }\n\
+         }\n",
+    )]);
+    let rep = lint::analyze(&good);
+    assert!(rep.passed(), "violations: {:?}", rep.violations);
+}
+
+#[test]
+fn panic_rules_skip_files_outside_the_surface() {
+    // attention/full.rs-style kernel files may unwrap on programmer
+    // error — panic rules are scoped, not global
+    let kernel = set(&[(
+        "attention/k.rs",
+        "//! ct-contract: bit-exact\n\
+         fn f(v: Vec<u64>) -> u64 { *v.first().unwrap() }\n",
+    )]);
+    let rep = lint::analyze(&kernel);
+    assert!(rep.passed(), "violations: {:?}", rep.violations);
+}
+
+#[test]
+fn wire_field_allowlist() {
+    let bad = set(&[(
+        "server/k.rs",
+        "//! ct-contract: panic-free\n\
+         fn f() { emit(vec![(\"id\", 1), (\"rogue\", 2)]); }\n",
+    )]);
+    let rep = lint::analyze(&bad);
+    let wire: Vec<_> = rep
+        .violations
+        .iter()
+        .filter(|v| v.rule == "wire-field")
+        .collect();
+    assert_eq!(wire.len(), 1);
+    assert!(wire[0].msg.contains("rogue"));
+
+    // allowlisted fields pass, and non-wire files are never checked
+    let good = set(&[
+        ("server/k.rs",
+         "//! ct-contract: panic-free\n\
+          fn f() { emit(vec![(\"id\", 1), (\"ok\", 2)]); }\n"),
+        ("oracle/k.rs",
+         "//! ct-contract: panic-free\n\
+          fn f() { emit(vec![(\"not_wire\", 1)]); }\n"),
+    ]);
+    let rep = lint::analyze(&good);
+    assert!(rep.passed(), "violations: {:?}", rep.violations);
+}
+
+#[test]
+fn contract_header_is_mandatory_in_bit_dirs() {
+    let bad = set(&[("tensor/k.rs", "fn f() {}\n")]);
+    assert!(rules_fired(&lint::analyze(&bad))
+        .contains(&"contract-header".to_string()));
+
+    let good = set(&[(
+        "tensor/k.rs",
+        "//! ct-contract: bit-exact\nfn f() {}\n",
+    )]);
+    let rep = lint::analyze(&good);
+    assert!(rep.passed(), "violations: {:?}", rep.violations);
+}
+
+#[test]
+fn doc_family_drift_requires_both_docs() {
+    let registry =
+        "//! ct-contract: bit-exact\n\
+         pub static REGISTRY: &[KernelFamily] = &[\n\
+             KernelFamily { key: \"full\", parse: parse_full },\n\
+         ];\n";
+    let mut missing = set(&[("attention/mod.rs", registry)]);
+    missing.docs = vec![
+        ("README.md".to_string(), "mentions `full` here".to_string()),
+        ("docs/ARCHITECTURE.md".to_string(), String::new()),
+    ];
+    let rep = lint::analyze(&missing);
+    let drift: Vec<_> = rep
+        .violations
+        .iter()
+        .filter(|v| v.rule == "doc-family-drift")
+        .collect();
+    assert_eq!(drift.len(), 1);
+    assert!(drift[0].msg.contains("ARCHITECTURE"));
+
+    let mut both = set(&[("attention/mod.rs", registry)]);
+    both.docs = vec![
+        ("README.md".to_string(), "the `full` kernel".to_string()),
+        ("docs/ARCHITECTURE.md".to_string(), "full".to_string()),
+    ];
+    let rep = lint::analyze(&both);
+    assert!(rep.passed(), "violations: {:?}", rep.violations);
+}
+
+// ---------------------------------------------------------------------------
+// the suppression contract
+// ---------------------------------------------------------------------------
+
+#[test]
+fn suppression_requires_a_reason() {
+    // reasonless: the directive itself is a violation AND the
+    // underlying hit still fires
+    let bad = set(&[(
+        "server/k.rs",
+        "//! ct-contract: panic-free\n\
+         fn f(v: Vec<u8>) -> u8 {\n\
+             // ct-lint: allow(panic-unwrap)\n\
+             *v.first().unwrap()\n\
+         }\n",
+    )]);
+    let fired = rules_fired(&lint::analyze(&bad));
+    assert!(fired.contains(&"lint-no-reason".to_string()));
+    assert!(fired.contains(&"panic-unwrap".to_string()));
+
+    // with a reason the hit moves to the suppressions section
+    let good = set(&[(
+        "server/k.rs",
+        "//! ct-contract: panic-free\n\
+         fn f(v: Vec<u8>) -> u8 {\n\
+             // ct-lint: allow(panic-unwrap, reason = \"v non-empty by caller contract\")\n\
+             *v.first().unwrap()\n\
+         }\n",
+    )]);
+    let rep = lint::analyze(&good);
+    assert!(rep.passed(), "violations: {:?}", rep.violations);
+    assert_eq!(rep.suppressions.len(), 1);
+    assert_eq!(rep.suppressions[0].rule, "panic-unwrap");
+    assert_eq!(rep.suppressions[0].reason,
+               "v non-empty by caller contract");
+}
+
+#[test]
+fn unknown_rule_in_directive_is_flagged() {
+    let setb = set(&[(
+        "server/k.rs",
+        "//! ct-contract: panic-free\n\
+         // ct-lint: allow(no-such-rule, reason = \"typo\")\n\
+         fn f() {}\n",
+    )]);
+    assert!(rules_fired(&lint::analyze(&setb))
+        .contains(&"lint-unknown-rule".to_string()));
+}
+
+#[test]
+fn file_scope_suppression_covers_the_whole_file() {
+    let setb = set(&[(
+        "coordinator/k.rs",
+        "//! ct-contract: panic-free\n\
+         //! ct-lint: allow(det-entropy, reason = \"timing metrics only\")\n\
+         fn f() { let _a = std::time::Instant::now(); }\n\
+         fn g() { let _b = std::time::Instant::now(); }\n",
+    )]);
+    let rep = lint::analyze(&setb);
+    assert!(rep.passed(), "violations: {:?}", rep.violations);
+    assert_eq!(rep.suppressions.len(), 2);
+}
+
+// ---------------------------------------------------------------------------
+// the real tree: self-check red path + byte stability
+// ---------------------------------------------------------------------------
+
+#[test]
+fn self_check_probes_trip_every_rule_on_the_real_tree() {
+    let sc = lint::self_check(&repo_root()).expect("self-check runs");
+    assert!(sc.missed.is_empty(),
+            "rules that missed their probe: {:?}", sc.missed);
+    assert!(sc.injected >= lint::rules::RULE_IDS.len() - 1,
+            "only {} injected violations detected", sc.injected);
+}
+
+#[test]
+fn report_is_byte_stable_across_runs() {
+    let root = repo_root();
+    let a = lint::run(&root).expect("first run");
+    let b = lint::run(&root).expect("second run");
+    assert_eq!(a.render(), b.render(),
+               "two lint runs over the same tree must render \
+                identical bytes");
+    // and the render round-trips through the jsonio parser
+    let v = clustered_transformers::jsonio::parse(&a.render())
+        .expect("report parses");
+    assert_eq!(v.get("version").as_usize(), Some(1));
+    assert_eq!(v.get("files_scanned").as_usize(),
+               Some(a.files_scanned));
+}
