@@ -72,6 +72,24 @@
 //! zero-capacity store caches nothing, so every step recomputes — the
 //! always-miss degenerate that the fallback contract keeps
 //! bit-identical.
+//!
+//! ## Quantized panels (opt-in, tolerance-gated)
+//!
+//! With [`KvCacheOptions::quant`] set to a [`CacheQuant`] i8 mode, the
+//! store keeps panels as symmetric-i8 codes ([`crate::tensor::quant`])
+//! instead of f32 rows and charges them their true byte cost —
+//! [`quant_rows_equiv`]`(len) = ceil(len / 4)` rows, i.e. ≥4× more
+//! live sessions in the same budget.  A hit dequantizes the panels
+//! into plain [`Matrix`] scratch before the solve, so no kernel
+//! family changes its math; the miss/prefill path still computes from
+//! the caller's raw f32 inputs and stays bit-exact.  Because the
+//! quantize→dequantize round trip is lossy, *post-prefill hit steps*
+//! are the repo's first sanctioned departure from the bit-identity
+//! contract: they are gated by the numeric tolerance policy
+//! (`oracle/policy.rs`, `output_bits: {abs_tol, rel_tol}`) instead,
+//! and stay bit-exact whenever `quant` is `Off` (the default).
+//! Recurrent (linear-causal) entries are never quantized — their
+//! charge is already O(1) in history length.
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -81,6 +99,7 @@ use crate::clustering::{assign_nearest, hamming_kmeans_model_ctx, Lsh};
 use crate::exec::ExecCtx;
 use crate::prng::{session_seed, slice_stream};
 use crate::tensor::batch::BatchMatrix;
+use crate::tensor::quant::QuantPanel;
 use crate::tensor::{axpy, dot, softmax_inplace, topk_indices, Matrix};
 
 use super::backend::{AttentionBackend, NativeBackend};
@@ -90,7 +109,45 @@ use super::linear::RecurrentState;
 use super::problem::{AttnBatch, AttnProblem, CacheRef, SessionRef};
 use super::{kernel_for, AttentionKernel, Variant};
 
-/// KV-cache sizing and re-cluster policy.
+/// K/V panel storage mode: exact f32 (the default, bit-identical) or
+/// symmetric-i8 quantized panels (tolerance-gated — see
+/// [`crate::tensor::quant`] and the module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum CacheQuant {
+    /// Full-precision f32 panels: cached decode is bit-identical to
+    /// the full recompute.
+    #[default]
+    Off,
+    /// i8 codes under one scale per (session, head) panel, frozen at
+    /// the session's populate; later appends reuse it and saturate.
+    I8PerHead,
+    /// i8 codes with a fresh absmax scale per appended segment.
+    I8PerPanel,
+}
+
+impl CacheQuant {
+    /// Parse the CLI / wire spelling: `off` | `i8-head` | `i8-panel`.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "off" => Some(Self::Off),
+            "i8-head" => Some(Self::I8PerHead),
+            "i8-panel" => Some(Self::I8PerPanel),
+            _ => None,
+        }
+    }
+
+    /// The stable CLI / wire spelling ([`Self::parse`] round-trips
+    /// it).
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Off => "off",
+            Self::I8PerHead => "i8-head",
+            Self::I8PerPanel => "i8-panel",
+        }
+    }
+}
+
+/// KV-cache sizing, re-cluster and storage-precision policy.
 #[derive(Debug, Clone, Copy)]
 pub struct KvCacheOptions {
     /// Maximum cached sequence rows summed over sessions (`Σ len`).
@@ -101,11 +158,19 @@ pub struct KvCacheOptions {
     /// default) re-clusters every step — exact everywhere; values
     /// above 1.0 trade exactness between re-clusters for O(m) steps.
     pub growth: f64,
+    /// Panel storage precision.  [`CacheQuant::Off`] (the default)
+    /// keeps the bit-identity contract; the i8 modes store 4× denser
+    /// panels and gate hit outputs by the declared numeric tolerance.
+    pub quant: CacheQuant,
 }
 
 impl Default for KvCacheOptions {
     fn default() -> Self {
-        Self { capacity_rows: usize::MAX, growth: 1.0 }
+        Self {
+            capacity_rows: usize::MAX,
+            growth: 1.0,
+            quant: CacheQuant::Off,
+        }
     }
 }
 
@@ -196,6 +261,53 @@ impl Panel {
     }
 }
 
+/// One head's cached panel in whichever precision the store runs:
+/// exact f32 segments ([`Panel`]) or symmetric-i8 segments
+/// ([`QuantPanel`]).  Both are Arc-shared append-only segment lists,
+/// so hit snapshots stay O(#segments) pointer clones either way; the
+/// only difference is that [`StoredPanel::to_matrix`] dequantizes the
+/// i8 codes into the plain f32 scratch the solve runs over.
+#[derive(Debug, Clone)]
+pub(crate) enum StoredPanel {
+    Exact(Panel),
+    Quant(QuantPanel),
+}
+
+impl StoredPanel {
+    fn from_matrix(m: Matrix, quant: CacheQuant) -> Self {
+        match quant {
+            CacheQuant::Off => Self::Exact(Panel::from_matrix(m)),
+            CacheQuant::I8PerHead => {
+                Self::Quant(QuantPanel::from_matrix(&m, true))
+            }
+            CacheQuant::I8PerPanel => {
+                Self::Quant(QuantPanel::from_matrix(&m, false))
+            }
+        }
+    }
+
+    fn append(&mut self, m: &Matrix) {
+        match self {
+            Self::Exact(p) => p.append(m),
+            Self::Quant(p) => p.append(m),
+        }
+    }
+
+    /// Contiguous f32 view of the whole panel (dequantized when the
+    /// store is an i8 mode) — the matrix kernel code actually sees,
+    /// assembled outside the store lock.
+    pub(crate) fn to_matrix(&self) -> Matrix {
+        match self {
+            Self::Exact(p) => p.to_matrix(),
+            Self::Quant(p) => p.to_matrix(),
+        }
+    }
+
+    fn quantized(&self) -> bool {
+        matches!(self, Self::Quant(_))
+    }
+}
+
 /// One session's cached state: per-head appended Q/K/V panels (the Q
 /// panel is the key history of shared-QK families and the re-cluster
 /// input of the clustered ones) plus the optional frozen clustering —
@@ -210,9 +322,9 @@ struct SessionEntry {
     /// for a recurrent entry, the rows absorbed so far).
     len: usize,
     last_used: u64,
-    q: Vec<Panel>,
-    k: Vec<Panel>,
-    v: Vec<Panel>,
+    q: Vec<StoredPanel>,
+    k: Vec<StoredPanel>,
+    v: Vec<StoredPanel>,
     model: Option<Vec<HeadModel>>,
     /// History length at the last re-cluster (0 = never clustered).
     clustered_len: usize,
@@ -223,16 +335,27 @@ struct SessionEntry {
 }
 
 impl SessionEntry {
-    /// Capacity charge in cached sequence rows: panel entries charge
-    /// their length, recurrent entries the constant row-equivalent of
-    /// their accumulator floats.
+    /// Capacity charge in cached sequence rows: exact panel entries
+    /// charge their length, quantized ones their true byte cost
+    /// ([`quant_rows_equiv`]), recurrent entries the constant
+    /// row-equivalent of their accumulator floats.
     fn charged_rows(&self) -> usize {
         if self.recurrent.is_some() {
             recurrent_rows_equiv(self.dk, self.dv)
+        } else if self.q.first().is_some_and(StoredPanel::quantized) {
+            quant_rows_equiv(self.len)
         } else {
             self.len
         }
     }
+}
+
+/// A quantized panel entry's capacity charge: i8 codes are a quarter
+/// of the f32 row bytes (the per-segment f32 scales amortize to
+/// nothing), so `len` history rows charge `ceil(len / 4)` budget rows
+/// — the ≥4×-sessions-per-GB density the quantized mode exists for.
+pub(crate) fn quant_rows_equiv(len: usize) -> usize {
+    len.div_ceil(4)
 }
 
 /// A recurrent entry's capacity charge: its per-head float count
@@ -255,9 +378,9 @@ struct Store {
 /// lock) and the frozen model when this step may reuse it.  The backend
 /// materializes contiguous matrices from the snapshots lock-free.
 pub(crate) struct HitData {
-    pub q: Vec<Panel>,
-    pub k: Vec<Panel>,
-    pub v: Vec<Panel>,
+    pub q: Vec<StoredPanel>,
+    pub k: Vec<StoredPanel>,
+    pub v: Vec<StoredPanel>,
     pub model: Option<Vec<HeadModel>>,
     pub reuse: bool,
 }
@@ -297,6 +420,12 @@ impl KvCache {
 
     pub fn options(&self) -> KvCacheOptions {
         self.opts
+    }
+
+    /// Panel storage precision ([`CacheQuant::Off`] = exact f32, the
+    /// default).
+    pub fn quant(&self) -> CacheQuant {
+        self.opts.quant
     }
 
     pub fn counters(&self) -> &CacheCounters {
@@ -387,6 +516,9 @@ impl KvCache {
         }
         let m = new_q[0].rows;
         let e = store.sessions.get_mut(&r.session).unwrap();
+        // charge by delta so quantized entries (whose charge is
+        // ceil(len/4), not len) stay consistent under appends
+        let charge_before = e.charged_rows();
         for h in 0..heads {
             e.q[h].append(&new_q[h]);
             e.k[h].append(&new_k[h]);
@@ -403,7 +535,7 @@ impl KvCache {
             model: if reuse { e.model.clone() } else { None },
             reuse,
         };
-        store.used_rows += m;
+        store.used_rows += e.charged_rows() - charge_before;
         self.counters.hits.fetch_add(1, Ordering::Relaxed);
         self.counters
             .appended_rows
@@ -423,21 +555,31 @@ impl KvCache {
             return;
         }
         let len = q[0].rows;
+        let quant = self.opts.quant;
+        let charge = match quant {
+            CacheQuant::Off => len,
+            _ => quant_rows_equiv(len),
+        };
+        // seed (and, in the i8 modes, encode — O(len·D)) the panels
+        // before the store lock, like the recurrent absorption path
+        let panels = |ms: Vec<Matrix>| {
+            ms.into_iter()
+                .map(|m| StoredPanel::from_matrix(m, quant))
+                .collect::<Vec<StoredPanel>>()
+        };
+        let (qp, kp, vp) = (panels(q), panels(k), panels(v));
         let mut store = self.store.lock().unwrap();
         store.clock += 1;
         let tick = store.clock;
         if let Some(e) = store.sessions.remove(&r.session) {
             store.used_rows -= e.charged_rows();
         }
-        if len > self.opts.capacity_rows {
+        if charge > self.opts.capacity_rows {
             // the session alone exceeds the store: cannot cache it
             self.counters.evictions.fetch_add(1, Ordering::Relaxed);
             return;
         }
-        store.used_rows += len;
-        let panels =
-            |ms: Vec<Matrix>| ms.into_iter().map(Panel::from_matrix)
-                                .collect::<Vec<Panel>>();
+        store.used_rows += charge;
         store.sessions.insert(r.session, SessionEntry {
             generation: r.generation,
             heads,
@@ -445,9 +587,9 @@ impl KvCache {
             dv,
             len,
             last_used: tick,
-            q: panels(q),
-            k: panels(k),
-            v: panels(v),
+            q: qp,
+            k: kp,
+            v: vp,
             model: None,
             clustered_len: 0,
             recurrent: None,
@@ -607,9 +749,9 @@ pub enum SeqOutcome {
 enum FamilyPlan {
     /// The kernel's own `query_span` path is exact.  `full_recompute`
     /// is `false` for the genuinely incremental families (full,
-    /// shared-full, oracle-top: O(m·N) per step) and `true` for lsh,
-    /// whose span is a full solve with extraction — the honest
-    /// accounting behind [`SeqOutcome::Hit::computed_rows`].
+    /// shared-full, oracle-top: O(m·N) per step) and `true` for the
+    /// lsh families, whose span is a full solve with extraction — the
+    /// honest accounting behind [`SeqOutcome::Hit::computed_rows`].
     Span { full_recompute: bool },
     /// Clustered families: the backend owns the clustering so it can
     /// freeze and reuse it across steps.
@@ -637,7 +779,9 @@ fn plan_for(variant: &Variant) -> FamilyPlan {
             FamilyPlan::ClusterModel { clusters, bits, iters,
                                        topk: Some(topk) }
         }
-        Variant::Lsh { .. } => FamilyPlan::Span { full_recompute: true },
+        Variant::Lsh { .. } | Variant::LshHam { .. } => {
+            FamilyPlan::Span { full_recompute: true }
+        }
         Variant::Linear => FamilyPlan::Recurrent,
         _ => FamilyPlan::Span { full_recompute: false },
     }
@@ -1407,8 +1551,8 @@ mod tests {
         let (q, k, v) = history(n, 8);
         for kernel in ["clustered-3", "i-clustered-3"] {
             let cache = Arc::new(KvCache::new(KvCacheOptions {
-                capacity_rows: usize::MAX,
                 growth: 1.5,
+                ..KvCacheOptions::default()
             }));
             let backend =
                 CachingBackend::native(kernel, cache.clone()).unwrap();
@@ -1439,8 +1583,8 @@ mod tests {
             // reused steps are deterministic across worker counts...
             for workers in [2, 4] {
                 let cache_b = Arc::new(KvCache::new(KvCacheOptions {
-                    capacity_rows: usize::MAX,
                     growth: 1.5,
+                    ..KvCacheOptions::default()
                 }));
                 let backend_b =
                     CachingBackend::native(kernel, cache_b).unwrap();
@@ -1666,5 +1810,220 @@ mod tests {
                                                 4),
                             12, 16, "panel-to-recurrent flip");
         assert_eq!(cache.used_rows(), recurrent_rows_equiv(D, D));
+    }
+
+    // ---- quantized-panel edge cases (tolerance-gated mode) ----
+
+    fn quant_cache(capacity_rows: usize, quant: CacheQuant)
+                   -> Arc<KvCache> {
+        Arc::new(KvCache::new(KvCacheOptions {
+            capacity_rows,
+            quant,
+            ..KvCacheOptions::default()
+        }))
+    }
+
+    /// Max-abs error of the span rows against the exact f32 oracle.
+    fn span_error(out: &BatchMatrix, want: &[Matrix], span: usize,
+                  len: usize) -> f32 {
+        want.iter()
+            .enumerate()
+            .map(|(h, w)| seq_rows(out, h, span, len).max_abs_diff(w))
+            .fold(0.0, f32::max)
+    }
+
+    /// The natural error scale of an attention output: outputs are
+    /// convex combinations of V rows, so max|v| bounds their range.
+    fn vmax(v: &BatchMatrix) -> f32 {
+        v.data.iter().fold(0.0f32, |a, &x| f32::max(a, x.abs()))
+    }
+
+    #[test]
+    fn quantized_steps_stay_within_tolerance_and_charge_quarter_rows() {
+        let n = 24;
+        let (q, k, v) = history(n, 31);
+        let tol = 0.1 + 0.1 * vmax(&v);
+        for quant in [CacheQuant::I8PerHead, CacheQuant::I8PerPanel] {
+            let cache = quant_cache(usize::MAX, quant);
+            let backend =
+                CachingBackend::native("full", cache.clone()).unwrap();
+            let plan = [(10usize, 0usize), (17, 10), (24, 17)];
+            let mut last = None;
+            for (i, &(len, span)) in plan.iter().enumerate() {
+                let (out, outcome) = run_step(&backend, &q, &k, &v, len,
+                                              span, 7, 42, 0, 1);
+                let want = oracle_span("full", &q, &k, &v, len, span, 7,
+                                       42);
+                if i == 0 {
+                    // the miss/prefill path computes from the caller's
+                    // raw f32 inputs: bit-exact even with quant on
+                    assert!(matches!(outcome, SeqOutcome::Miss { .. }));
+                    assert_span_matches(&out, &want, span, len,
+                                        "quant prefill");
+                } else {
+                    assert!(matches!(outcome,
+                                     SeqOutcome::Hit { reused_rows, .. }
+                                     if reused_rows == span),
+                            "{quant:?}: step should hit, got {outcome:?}");
+                    let err = span_error(&out, &want, span, len);
+                    assert!(err <= tol,
+                            "{quant:?}: err {err} beyond tolerance {tol}");
+                    assert!(seq_rows(&out, 0, span, len)
+                                .data.iter().all(|x| x.is_finite()));
+                }
+                last = Some(out);
+            }
+            // the lossy hit path is still deterministic: replaying the
+            // same plan at another worker count is bit-identical
+            let cache_b = quant_cache(usize::MAX, quant);
+            let backend_b =
+                CachingBackend::native("full", cache_b).unwrap();
+            let mut last_b = None;
+            for &(len, span) in &plan {
+                let (out, _) = run_step(&backend_b, &q, &k, &v, len,
+                                        span, 7, 42, 0, 3);
+                last_b = Some(out);
+            }
+            assert!(last.unwrap().bit_identical(&last_b.unwrap()),
+                    "{quant:?}: quantized decode diverged across \
+                     worker counts");
+            // the 24-row session charges its true byte cost: ⌈24/4⌉
+            assert_eq!(cache.used_rows(), quant_rows_equiv(n));
+            assert_eq!(cache.used_rows(), 6);
+        }
+    }
+
+    #[test]
+    fn quantized_capacity_zero_store_always_misses_but_stays_exact() {
+        let (q, k, v) = history(16, 32);
+        let cache = quant_cache(0, CacheQuant::I8PerPanel);
+        let backend =
+            CachingBackend::native("full", cache.clone()).unwrap();
+        for &(len, span) in &[(8usize, 0usize), (12, 8), (16, 12)] {
+            let (out, outcome) =
+                run_step(&backend, &q, &k, &v, len, span, 3, 5, 0, 1);
+            // nothing is ever stored, so nothing is ever dequantized:
+            // every step recomputes from raw f32, bit-identically
+            let want = oracle_span("full", &q, &k, &v, len, span, 3, 5);
+            assert_span_matches(&out, &want, span, len, "quant-cap0");
+            assert!(matches!(outcome, SeqOutcome::Miss { .. }));
+        }
+        assert_eq!(cache.used_rows(), 0);
+        assert_eq!(cache.counters().hits.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn quantized_stale_generation_misses_and_never_aliases() {
+        let (q, k, v) = history(16, 33);
+        let cache = quant_cache(usize::MAX, CacheQuant::I8PerHead);
+        let backend =
+            CachingBackend::native("full", cache.clone()).unwrap();
+        let _ = run_step(&backend, &q, &k, &v, 8, 0, 9, 1, 0, 1);
+        assert_eq!(cache.session_len(
+            CacheRef { session: 1, generation: 0 }), Some(8));
+        let (q2, k2, v2) = history(16, 34);
+        let (out, outcome) =
+            run_step(&backend, &q2, &k2, &v2, 12, 8, 9, 1, 1, 1);
+        assert!(matches!(outcome, SeqOutcome::Miss { .. }),
+                "stale generation must miss");
+        // the miss recomputes from raw f32: bit-exact despite quant
+        let want = oracle_span("full", &q2, &k2, &v2, 12, 8, 9, 1);
+        assert_span_matches(&out, &want, 8, 12, "quant-gen-bump");
+        assert_eq!(cache.session_len(
+            CacheRef { session: 1, generation: 0 }), None);
+        assert_eq!(cache.session_len(
+            CacheRef { session: 1, generation: 1 }), Some(12));
+        assert_eq!(cache.used_rows(), quant_rows_equiv(12));
+    }
+
+    #[test]
+    fn quantized_eviction_mid_session_falls_back_to_exact_recompute() {
+        let (q, k, v) = history(20, 35);
+        // capacity of exactly the prefill's quantized charge ⌈10/4⌉:
+        // the first step's append outgrows it and evicts the session
+        let cache = quant_cache(quant_rows_equiv(10),
+                                CacheQuant::I8PerPanel);
+        let backend =
+            CachingBackend::native("full", cache.clone()).unwrap();
+        let (_, o0) = run_step(&backend, &q, &k, &v, 10, 0, 11, 7, 0, 1);
+        assert!(matches!(o0, SeqOutcome::Miss { .. }));
+        assert_eq!(cache.used_rows(), quant_rows_equiv(10));
+        let (out1, o1) =
+            run_step(&backend, &q, &k, &v, 14, 10, 11, 7, 0, 1);
+        assert!(matches!(o1, SeqOutcome::Hit { reused_rows: 10, .. }));
+        let tol = 0.1 + 0.1 * vmax(&v);
+        let err = span_error(&out1,
+                             &oracle_span("full", &q, &k, &v, 14, 10, 11,
+                                          7),
+                             10, 14);
+        assert!(err <= tol, "pre-evict step err {err} beyond {tol}");
+        assert_eq!(cache.used_rows(), 0, "over-capacity entry evicted");
+        assert!(cache.counters().evictions.load(Ordering::Relaxed) >= 1);
+        // the post-eviction step misses and recomputes from raw f32 —
+        // the fall-back to the exact path is bit-identical
+        let (out2, o2) =
+            run_step(&backend, &q, &k, &v, 18, 14, 11, 7, 0, 1);
+        assert!(matches!(o2, SeqOutcome::Miss { recomputed_rows: 18 }));
+        assert_span_matches(&out2,
+                            &oracle_span("full", &q, &k, &v, 18, 14, 11,
+                                         7),
+                            14, 18, "post-evict quant step");
+    }
+
+    #[test]
+    fn quantized_and_recurrent_entries_share_one_lru_budget() {
+        // the store's quant mode covers panel entries only; recurrent
+        // accumulators stay exact f32 — both kinds still compete in
+        // the same row budget and LRU order
+        let charge_r = recurrent_rows_equiv(D, D);
+        let cache = KvCache::new(KvCacheOptions {
+            capacity_rows: quant_rows_equiv(8) + charge_r,
+            quant: CacheQuant::I8PerPanel,
+            ..KvCacheOptions::default()
+        });
+        let panels = |n: usize, seed: u64| -> Vec<Matrix> {
+            let mut rng = Xoshiro256::new(seed);
+            (0..H).map(|_| Matrix::randn(n, D, &mut rng)).collect()
+        };
+        let r = |sid: u64| CacheRef { session: sid, generation: 0 };
+        cache.populate(r(1), H, D, D, panels(8, 1), panels(8, 2),
+                       panels(8, 3));
+        cache.populate_recurrent(r(2), H, D, D, &panels(8, 4),
+                                 &panels(8, 5));
+        assert_eq!(cache.used_rows(), quant_rows_equiv(8) + charge_r);
+        // touching the recurrent session makes the quantized panel
+        // entry the LRU victim of the next populate
+        assert!(cache.step_recurrent(r(2), H, D, D, 8, &panels(2, 6),
+                                     &panels(2, 7)).is_some());
+        cache.populate(r(3), H, D, D, panels(8, 8), panels(8, 9),
+                       panels(8, 10));
+        assert_eq!(cache.session_len(r(1)), None,
+                   "quantized panel entry was the LRU victim");
+        assert_eq!(cache.session_len(r(2)), Some(10));
+        assert_eq!(cache.session_len(r(3)), Some(8));
+        assert_eq!(cache.used_rows(), quant_rows_equiv(8) + charge_r);
+    }
+
+    #[test]
+    fn quantized_all_zero_history_round_trips_bit_exactly() {
+        // absmax == 0 pins every scale to 0.0: the dequantized panels
+        // are exact zeros, so even the lossy hit path reproduces the
+        // exact recompute bit-for-bit
+        let zeros = || BatchMatrix::zeros(1, H, 16, D);
+        let (q, k, v) = (zeros(), zeros(), zeros());
+        for quant in [CacheQuant::I8PerHead, CacheQuant::I8PerPanel] {
+            let cache = quant_cache(usize::MAX, quant);
+            let backend =
+                CachingBackend::native("full", cache.clone()).unwrap();
+            let (_, o0) =
+                run_step(&backend, &q, &k, &v, 8, 0, 9, 6, 0, 1);
+            assert!(matches!(o0, SeqOutcome::Miss { .. }));
+            let (out, o1) =
+                run_step(&backend, &q, &k, &v, 12, 8, 9, 6, 0, 1);
+            assert!(matches!(o1, SeqOutcome::Hit { .. }),
+                    "{quant:?}: got {o1:?}");
+            let want = oracle_span("full", &q, &k, &v, 12, 8, 9, 6);
+            assert_span_matches(&out, &want, 8, 12, "quant-zeros");
+        }
     }
 }

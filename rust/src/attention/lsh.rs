@@ -11,6 +11,22 @@
 //! unpadded lengths.  For chunk-divisible `N` the blocking — and
 //! therefore every output bit — is identical to the historical
 //! divisible-only path.
+//!
+//! ## Sign-bit Hamming fast path (`lsh-ham`)
+//!
+//! The bucketing pass already computes every rotation dot product, so
+//! each position gets a free 8-bit **sign code** (one bit per rotation
+//! row).  The [`LshHamAttention`] variant ranks a query's same-bucket
+//! candidates by Hamming distance between sign codes — an XNOR/popcount
+//! stand-in for the f32 dot products — and keeps only the `topk`
+//! closest (plus the position itself) before running the exact softmax
+//! over the survivors.  Ranking is deterministic (ties broken by
+//! candidate slot, ascending) and the kept logits are computed in f32
+//! exactly as the dense path computes them, so the fast path is
+//! bit-reproducible; it is *approximate* relative to `lsh-*` only in
+//! which candidates survive.  With `topk >= 2·chunk` every same-bucket
+//! candidate survives and the output is bit-identical to the exact
+//! kernel — the degenerate case the tests pin.
 
 use crate::exec::ExecCtx;
 use crate::prng::Xoshiro256;
@@ -32,6 +48,19 @@ pub fn reformer_attention(x: &Matrix, v: &Matrix, rounds: usize,
 pub fn reformer_attention_ctx(x: &Matrix, v: &Matrix, rounds: usize,
                               chunk: usize, rng: &mut Xoshiro256,
                               ctx: &ExecCtx) -> Matrix {
+    reformer_attention_ham_ctx(x, v, rounds, chunk, None, rng, ctx)
+}
+
+/// [`reformer_attention_ctx`] with an optional sign-bit Hamming
+/// candidate pre-filter: `ham_topk = Some(t)` keeps, per query, only
+/// the `t` same-bucket candidates whose 8-bit sign codes are closest in
+/// Hamming distance (plus the query's own position), masking the rest
+/// before the f32 softmax.  `None` is the exact dense-candidate path,
+/// bit-identical to the historical kernel.
+pub fn reformer_attention_ham_ctx(x: &Matrix, v: &Matrix, rounds: usize,
+                                  chunk: usize, ham_topk: Option<usize>,
+                                  rng: &mut Xoshiro256,
+                                  ctx: &ExecCtx) -> Matrix {
     let n = x.rows;
     assert!(chunk >= 1, "chunk must be >= 1");
     if n == 0 {
@@ -44,12 +73,20 @@ pub fn reformer_attention_ctx(x: &Matrix, v: &Matrix, rounds: usize,
     let mut lses: Vec<Vec<f32>> = Vec::with_capacity(rounds);
 
     for _ in 0..rounds {
-        // angular LSH: argmax over [xR; -xR]
+        // angular LSH: argmax over [xR; -xR].  The same pass packs the
+        // free 8-bit sign code (bit b = sign of rotation row b's dot)
+        // above the bucket id — no extra RNG draws or dot products, so
+        // the bucket half of the pass is byte-for-byte the historical
+        // computation whether or not the Hamming filter is on.
         let rot = Matrix::randn(n_buckets / 2, x.cols, rng);
-        let bucket_of = |i: usize| {
+        let code_of = |i: usize| {
             let (mut best_v, mut best_b) = (f32::NEG_INFINITY, 0usize);
+            let mut code = 0usize;
             for b in 0..n_buckets / 2 {
                 let h = dot(x.row(i), rot.row(b));
+                if h > 0.0 {
+                    code |= 1 << b;
+                }
                 if h > best_v {
                     best_v = h;
                     best_b = b;
@@ -59,9 +96,13 @@ pub fn reformer_attention_ctx(x: &Matrix, v: &Matrix, rounds: usize,
                     best_b = b + n_buckets / 2;
                 }
             }
-            best_b
+            (best_b << 8) | code
         };
-        let buckets: Vec<usize> = ctx.map_indexed(n, bucket_of);
+        let packed: Vec<usize> = ctx.map_indexed(n, code_of);
+        let buckets: Vec<usize> =
+            packed.iter().map(|&p| p >> 8).collect();
+        let codes: Vec<usize> =
+            packed.iter().map(|&p| p & 0xFF).collect();
         // stable sort by bucket
         let mut order: Vec<usize> = (0..n).collect();
         order.sort_by_key(|&i| (buckets[i], i));
@@ -82,9 +123,42 @@ pub fn reformer_attention_ctx(x: &Matrix, v: &Matrix, rounds: usize,
                 .copied()
                 .collect();
             for &qi in &order[c0..c1] {
+                // Hamming pre-filter: rank same-bucket candidates by
+                // sign-code distance, keep the topk closest (ties by
+                // candidate slot, ascending — a pinned order) plus the
+                // query's own position.  None = keep everything, the
+                // exact historical path.
+                let keep: Option<Vec<bool>> = ham_topk.map(|t| {
+                    let mut ranked: Vec<(u32, usize)> = cand
+                        .iter()
+                        .enumerate()
+                        .filter(|&(_, &kj)| {
+                            buckets[kj] == buckets[qi] && kj != qi
+                        })
+                        .map(|(slot, &kj)| {
+                            let d = (codes[kj] ^ codes[qi]) as u32;
+                            (d.count_ones(), slot)
+                        })
+                        .collect();
+                    ranked.sort_unstable();
+                    let mut keep = vec![false; cand.len()];
+                    for &(_, slot) in ranked.iter().take(t) {
+                        keep[slot] = true;
+                    }
+                    for (slot, &kj) in cand.iter().enumerate() {
+                        if kj == qi {
+                            keep[slot] = true;
+                        }
+                    }
+                    keep
+                });
                 let mut logits = Vec::with_capacity(cand.len());
-                for &kj in &cand {
-                    let l = if buckets[kj] != buckets[qi] {
+                for (slot, &kj) in cand.iter().enumerate() {
+                    let pruned = keep
+                        .as_ref()
+                        .map(|ks| !ks[slot])
+                        .unwrap_or(false);
+                    let l = if buckets[kj] != buckets[qi] || pruned {
                         f32::NEG_INFINITY
                     } else if kj == qi {
                         -5e8 // self only as a fallback
@@ -180,6 +254,58 @@ impl AttentionKernel for LshAttention {
     }
 }
 
+/// LSH attention with the sign-bit Hamming candidate pre-filter: per
+/// query, only the `topk` same-bucket candidates closest in sign-code
+/// Hamming distance get f32 logits (XNOR-style reduced-precision
+/// ranking); the rest are masked before the softmax.  Approximate
+/// relative to [`LshAttention`] — tolerance-gated at the policy layer —
+/// but fully deterministic, and bit-identical to the exact kernel when
+/// `topk` covers every candidate (`topk >= 2·chunk`).
+#[derive(Debug, Clone, Copy)]
+pub struct LshHamAttention {
+    pub rounds: usize,
+    pub chunk: usize,
+    /// Candidates kept per query after Hamming ranking.
+    pub topk: usize,
+}
+
+impl AttentionKernel for LshHamAttention {
+    fn name(&self) -> String {
+        format!("lsh-ham-{}", self.rounds)
+    }
+
+    /// Masking and span behave exactly as [`LshAttention::solve`]: the
+    /// valid-prefix sub-problem is solved jointly (sign codes are
+    /// computed only over valid rows), then the span rows are emitted.
+    fn solve(&self, p: &AttnProblem<'_>, rng: &mut Xoshiro256,
+             ctx: &ExecCtx) -> Matrix {
+        assert!(!p.causal, "lsh-ham does not support causal attention");
+        let (q, _, v) = p.valid_qkv();
+        let out = reformer_attention_ham_ctx(&q, &v, self.rounds,
+                                             self.chunk, Some(self.topk),
+                                             rng, ctx);
+        if p.is_spanned() {
+            return p.restore_span(out.row_span(p.span_start(), out.rows));
+        }
+        p.restore_rows(out)
+    }
+
+    /// The candidate window shrinks from `2·chunk` to `topk` f32 dot
+    /// products per query; the bucketing pass (and its 8 rotation dots
+    /// per position) is unchanged, and the Hamming ranking itself is
+    /// XNOR/popcount noise next to the GEMV work.
+    fn cost(&self, n: usize, dk: usize, dv: usize) -> Cost {
+        let (n64, dk64, dv64) = (n as u64, dk as u64, dv as u64);
+        let (r, c) = (self.rounds as u64, self.chunk as u64);
+        let kept = (self.topk as u64).min(2 * c);
+        Cost {
+            flops: r * n64 * kept * (dk64 + dv64)
+                + r * n64 * dk64 * 8,
+            bytes: 4 * r * n64 * 2 * c,
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -216,5 +342,67 @@ mod tests {
         let a = reformer_attention(&x, &v, 2, 16, &mut r1);
         let b = reformer_attention(&x, &v, 2, 16, &mut r2);
         assert!(a.bit_identical(&b));
+    }
+
+    #[test]
+    fn ham_keep_all_is_bit_identical_to_the_exact_kernel() {
+        // topk >= 2·chunk keeps every same-bucket candidate, so the
+        // Hamming filter is a no-op and the two paths must agree bit
+        // for bit — including the shared bucketing RNG draws
+        let mut rng = Xoshiro256::new(17);
+        let x = Matrix::randn(53, 8, &mut rng);
+        let v = Matrix::randn(53, 8, &mut rng);
+        let ctx = ExecCtx::sequential();
+        let mut r1 = Xoshiro256::new(9);
+        let mut r2 = Xoshiro256::new(9);
+        let exact = reformer_attention_ctx(&x, &v, 2, 16, &mut r1, &ctx);
+        let ham = reformer_attention_ham_ctx(&x, &v, 2, 16, Some(32),
+                                             &mut r2, &ctx);
+        assert!(ham.bit_identical(&exact));
+    }
+
+    #[test]
+    fn ham_pruned_output_is_deterministic_and_finite() {
+        let mut rng = Xoshiro256::new(19);
+        let x = Matrix::randn(64, 8, &mut rng);
+        let v = Matrix::randn(64, 8, &mut rng);
+        let ctx = ExecCtx::sequential();
+        let mut r1 = Xoshiro256::new(5);
+        let mut r2 = Xoshiro256::new(5);
+        let a = reformer_attention_ham_ctx(&x, &v, 2, 16, Some(4),
+                                           &mut r1, &ctx);
+        let b = reformer_attention_ham_ctx(&x, &v, 2, 16, Some(4),
+                                           &mut r2, &ctx);
+        assert_eq!((a.rows, a.cols), (64, 8));
+        assert!(a.data.iter().all(|f| f.is_finite()));
+        assert!(a.bit_identical(&b));
+        // topk = 0 degenerates to the self-fallback only — still
+        // well-defined (each row is some v row, never NaN)
+        let mut r3 = Xoshiro256::new(5);
+        let z = reformer_attention_ham_ctx(&x, &v, 2, 16, Some(0),
+                                           &mut r3, &ctx);
+        assert!(z.data.iter().all(|f| f.is_finite()));
+    }
+
+    #[test]
+    fn ham_kernel_keep_all_matches_the_lsh_kernel() {
+        let mut rng = Xoshiro256::new(23);
+        let q = Matrix::randn(48, 8, &mut rng);
+        let k = Matrix::randn(48, 8, &mut rng);
+        let v = Matrix::randn(48, 8, &mut rng);
+        let ctx = ExecCtx::sequential();
+        let p = AttnProblem::new(&q, &k, &v);
+        let mut r1 = Xoshiro256::new(3);
+        let mut r2 = Xoshiro256::new(3);
+        let exact = LshAttention { rounds: 2, chunk: 16 }
+            .solve(&p, &mut r1, &ctx);
+        let ham = LshHamAttention { rounds: 2, chunk: 16, topk: 32 }
+            .solve(&p, &mut r2, &ctx);
+        assert!(ham.bit_identical(&exact));
+        // and the pruned cost model is strictly cheaper
+        let full = LshAttention { rounds: 2, chunk: 16 }.cost(1024, 64, 64);
+        let cut = LshHamAttention { rounds: 2, chunk: 16, topk: 8 }
+            .cost(1024, 64, 64);
+        assert!(cut.flops < full.flops);
     }
 }

@@ -84,8 +84,8 @@ pub mod problem;
 pub mod sharded;
 
 pub use backend::{AttentionBackend, NativeBackend};
-pub use cache::{CacheCounters, CachingBackend, KvCache, KvCacheOptions,
-                SeqOutcome};
+pub use cache::{CacheCounters, CacheQuant, CachingBackend, KvCache,
+                KvCacheOptions, SeqOutcome};
 pub use clustered::{centroids, clustered_attention,
                     clustered_attention_matrix,
                     clustered_span_attention_ctx, ClusteredAttention};
@@ -97,12 +97,14 @@ pub use improved::{improved_clustered_attention,
                    ImprovedClusteredAttention};
 pub use linear::{causal_linear_attention_span_ctx, linear_attention_ctx,
                  LinearAttention, RecurrentState};
-pub use lsh::{reformer_attention, LshAttention};
+pub use lsh::{reformer_attention, reformer_attention_ham_ctx,
+              LshAttention, LshHamAttention};
 pub use oracle::{oracle_top_attention, OracleTopAttention};
 pub use problem::{AttnBatch, AttnProblem, CacheRef, SessionRef};
-pub use sharded::{solve_batch_offset, InProcessShard, ShardEngine,
-                  ShardOptions, ShardReply, ShardRequest, ShardSession,
-                  ShardTransport, ShardedBackend, TcpShard};
+pub use sharded::{solve_batch_offset, InProcessShard, ShardCacheStats,
+                  ShardEngine, ShardOptions, ShardReply, ShardRequest,
+                  ShardSession, ShardTransport, ShardedBackend,
+                  TcpShard};
 
 use crate::exec::ExecCtx;
 use crate::prng::{slice_stream, Xoshiro256};
@@ -114,6 +116,9 @@ pub const DEFAULT_BITS: usize = 63;
 pub const DEFAULT_ITERS: usize = 10;
 pub const DEFAULT_TOPK: usize = 32;
 pub const DEFAULT_CHUNK: usize = 32;
+/// Same-bucket candidates kept per query by the `lsh-ham` sign-bit
+/// Hamming pre-filter (see [`lsh::LshHamAttention`]).
+pub const DEFAULT_HAM_TOPK: usize = 16;
 
 /// Which attention variant to run — mirrors `AttentionConfig` in L2.
 #[derive(Debug, Clone, PartialEq)]
@@ -125,6 +130,9 @@ pub enum Variant {
                         topk: usize },
     OracleTop { topk: usize },
     Lsh { rounds: usize, chunk: usize },
+    /// LSH with the sign-bit Hamming candidate pre-filter
+    /// (tolerance-gated: approximate relative to [`Variant::Lsh`]).
+    LshHam { rounds: usize, chunk: usize, topk: usize },
     Linear,
 }
 
@@ -141,6 +149,7 @@ impl Variant {
             }
             Variant::OracleTop { topk } => format!("oracle-top-{topk}"),
             Variant::Lsh { rounds, .. } => format!("lsh-{rounds}"),
+            Variant::LshHam { rounds, .. } => format!("lsh-ham-{rounds}"),
             Variant::Linear => "linear".into(),
         }
     }
@@ -317,6 +326,12 @@ fn parse_lsh(name: &str) -> Option<Variant> {
     Some(Variant::Lsh { rounds, chunk: DEFAULT_CHUNK })
 }
 
+fn parse_lsh_ham(name: &str) -> Option<Variant> {
+    let rounds: usize = name.strip_prefix("lsh-ham-")?.parse().ok()?;
+    Some(Variant::LshHam { rounds, chunk: DEFAULT_CHUNK,
+                           topk: DEFAULT_HAM_TOPK })
+}
+
 fn parse_linear(name: &str) -> Option<Variant> {
     (name == "linear").then_some(Variant::Linear)
 }
@@ -326,6 +341,7 @@ pub static REGISTRY: &[KernelFamily] = &[
     KernelFamily { key: "i-clustered", parse: parse_improved },
     KernelFamily { key: "clustered", parse: parse_clustered },
     KernelFamily { key: "oracle-top", parse: parse_oracle },
+    KernelFamily { key: "lsh-ham", parse: parse_lsh_ham },
     KernelFamily { key: "lsh", parse: parse_lsh },
     KernelFamily { key: "linear", parse: parse_linear },
     KernelFamily { key: "shared-full", parse: parse_shared_full },
@@ -356,6 +372,10 @@ pub fn kernel_for(variant: &Variant) -> Box<dyn AttentionKernel> {
         }
         Variant::Lsh { rounds, chunk } => {
             Box::new(LshAttention { rounds: *rounds, chunk: *chunk })
+        }
+        Variant::LshHam { rounds, chunk, topk } => {
+            Box::new(LshHamAttention { rounds: *rounds, chunk: *chunk,
+                                       topk: *topk })
         }
         Variant::Linear => Box::new(LinearAttention),
     }
@@ -504,6 +524,9 @@ mod tests {
             "clustered-100"
         );
         assert_eq!(Variant::Lsh { rounds: 4, chunk: 32 }.name(), "lsh-4");
+        assert_eq!(Variant::LshHam { rounds: 4, chunk: 32, topk: 16 }
+                       .name(),
+                   "lsh-ham-4");
     }
 
     // --- trait / registry / batch ------------------------------------
@@ -517,6 +540,7 @@ mod tests {
                                          topk: 8 },
             Variant::OracleTop { topk: 8 },
             Variant::Lsh { rounds: 2, chunk: 16 },
+            Variant::LshHam { rounds: 2, chunk: 16, topk: 8 },
             Variant::Linear,
         ]
     }
@@ -525,14 +549,14 @@ mod tests {
     fn registry_resolves_every_paper_name() {
         for name in ["full", "shared-full", "clustered-100",
                      "i-clustered-100", "oracle-top-32", "lsh-4",
-                     "linear"] {
+                     "lsh-ham-4", "linear"] {
             let kernel = kernel_by_name(name)
                 .unwrap_or_else(|| panic!("registry missed {name}"));
             assert_eq!(kernel.name(), name);
             assert_eq!(Variant::parse(name).unwrap().name(), name);
         }
         for bad in ["", "fullx", "clustered-", "i-clustered-x",
-                    "oracle-top--3", "lshx-1", "linear-4"] {
+                    "oracle-top--3", "lshx-1", "lsh-ham-", "linear-4"] {
             assert!(kernel_by_name(bad).is_none(), "{bad:?} resolved");
         }
         assert_eq!(kernel_families().len(), REGISTRY.len());

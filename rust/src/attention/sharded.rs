@@ -57,24 +57,33 @@
 //! ```text
 //! {"id":1,"op":"solve","kernel":"full","batch":2,"heads":4,"rows":128,
 //!  "dk":32,"dv":32,"seed":"00..0f","slice_base":"0..8",
-//!  "lens":[100,128]?,"causal":true?,
+//!  "lens":[100,128]?,"causal":true?,"cache_quant":"i8-panel"?,
 //!  "session":{"id":"..","generation":"..","span_start":96}?}\n
 //! <q: B·H·N·Dk f32s> <k: B·H·N·Dk f32s> <v: B·H·N·Dv f32s>
 //! ```
 //!
 //! `causal` is emitted only when `true` and parsed leniently (absent =
 //! `false`), so pre-causal gateways and workers interoperate
-//! unchanged.  Tensor frames are streamed through a fixed-size chunk
-//! buffer ([`write_f32s`]) rather than materialised as one
-//! frame-sized byte vector per tensor.
+//! unchanged.  `cache_quant` follows the same discipline: emitted only
+//! when the gateway's cache policy is quantized (absent = `"off"`), so
+//! pre-quantization headers stay byte-stable.  The field is
+//! *declarative* — each worker's own `--cache-quant` governs what its
+//! cache actually stores; a mismatch is logged, never an error.
+//! Tensor frames are streamed through a fixed-size chunk buffer
+//! ([`write_f32s`]) rather than materialised as one frame-sized byte
+//! vector per tensor.
 //!
 //! reply: `{"id":1,"ok":true,"batch":..,"heads":..,"rows":..,"cols":..,
-//! "outcome":{..}?}\n` followed by the output frame, or `{"id",
-//! "error"}` with no frame.  `{"op":"ping"}` → `{"ok":true}` and
-//! `{"op":"end","session":"<hex>"}` → `{"ok":true}` share the framing.
-//! Seeds, session ids and generations travel as 16-hex-digit strings:
-//! JSON numbers are f64 and silently round u64s above 2^53, which
-//! would break bit-identity.
+//! "outcome":{..}?,"cache":{"hits":..,"misses":..,"saved_rows":..}?}\n`
+//! followed by the output frame, or `{"id", "error"}` with no frame.
+//! `cache` rides session replies only: a cumulative snapshot of the
+//! worker's cache counters ([`ShardCacheStats`]), parsed leniently so
+//! pre-counter workers interoperate unchanged.  `{"op":"ping"}` →
+//! `{"ok":true}` and `{"op":"end","session":"<hex>"}` → `{"ok":true}`
+//! share the framing.  Seeds, session ids and generations travel as
+//! 16-hex-digit strings: JSON numbers are f64 and silently round u64s
+//! above 2^53, which would break bit-identity.  (Cache counters *are*
+//! plain numbers — they are telemetry, not part of the bit contract.)
 
 // The panic-free serving contract, compiler-side: `ct lint` scans the
 // source, clippy guards what the scanner cannot see through macros.
@@ -96,7 +105,8 @@ use crate::prng::slice_stream;
 use crate::tensor::batch::BatchMatrix;
 
 use super::backend::AttentionBackend;
-use super::cache::{CachingBackend, KvCache, SeqOutcome};
+use super::cache::{CacheQuant, CachingBackend, KvCache, KvCacheOptions,
+                   SeqOutcome};
 use super::problem::{AttnBatch, AttnProblem, CacheRef, SessionRef};
 use super::{kernel_for, AttentionKernel, Variant};
 
@@ -163,14 +173,31 @@ pub struct ShardRequest {
     /// Autoregressive masking — only causal-capable kernels (the linear
     /// family) accept it; the engine rejects the rest with an error.
     pub causal: bool,
+    /// The gateway's panel storage policy, declared for observability.
+    /// Each worker's own cache policy governs what it actually stores;
+    /// a mismatch is logged, never an error (module docs).
+    pub cache_quant: CacheQuant,
     pub session: Option<ShardSession>,
 }
 
-/// A shard's answer: the sub-batch output, plus the cache outcome when
-/// the request was a session step.
+/// Cumulative snapshot of a shard worker's cache counters, returned on
+/// session replies (the optional `"cache"` reply field).  Telemetry
+/// only — the gateway aggregates these into its bucket report; they
+/// never influence an output bit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct ShardCacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    /// Prefix rows the worker did *not* recompute thanks to hits.
+    pub saved_rows: u64,
+}
+
+/// A shard's answer: the sub-batch output, plus the cache outcome (and
+/// a counter snapshot) when the request was a session step.
 pub struct ShardReply {
     pub out: BatchMatrix,
     pub outcome: Option<SeqOutcome>,
+    pub cache: Option<ShardCacheStats>,
 }
 
 /// How [`ShardedBackend`] reaches one shard — in-process for tests and
@@ -222,6 +249,17 @@ impl ShardEngine {
 
     pub fn cache(&self) -> &Arc<KvCache> {
         &self.cache
+    }
+
+    /// Cumulative cache counters in wire form — the `"cache"` field of
+    /// session replies.
+    pub fn cache_stats(&self) -> ShardCacheStats {
+        let c = self.cache.counters();
+        ShardCacheStats {
+            hits: c.hits.load(Ordering::Relaxed),
+            misses: c.misses.load(Ordering::Relaxed),
+            saved_rows: c.reused_rows.load(Ordering::Relaxed),
+        }
     }
 
     fn ctx(&self) -> ExecCtx {
@@ -286,12 +324,21 @@ impl ShardEngine {
                     out: solve_batch_offset(entry.kernel.as_ref(), &batch,
                                             req.slice_base, &ctx),
                     outcome: None,
+                    cache: None,
                 })
             }
             Some(s) => {
                 if q.batch != 1 {
                     return Err(anyhow!("session request must carry \
                                         exactly one sequence"));
+                }
+                if req.cache_quant != self.cache.quant() {
+                    // declarative field (module docs): the worker's own
+                    // policy wins; the mismatch is only worth a log line
+                    log::debug!("request declares cache-quant {} but \
+                                 this worker stores {}",
+                                req.cache_quant.name(),
+                                self.cache.quant().name());
                 }
                 let valid = req.lens.as_ref().map_or(q.rows, |l| l[0]);
                 if s.span_start >= valid {
@@ -310,7 +357,8 @@ impl ShardEngine {
                     .with_causal(req.causal);
                 let (out, outcomes) =
                     entry.cached.execute_with_report(&batch, &ctx);
-                Ok(ShardReply { out, outcome: Some(outcomes[0]) })
+                Ok(ShardReply { out, outcome: Some(outcomes[0]),
+                                cache: Some(self.cache_stats()) })
             }
         }
     }
@@ -423,6 +471,11 @@ fn solve_header(id: i64, req: &ShardRequest) -> Value {
         // to the pre-causal protocol
         fields.push(("causal", true.into()));
     }
+    if req.cache_quant != CacheQuant::Off {
+        // same discipline: an unquantized header is byte-identical to
+        // the pre-quantization protocol
+        fields.push(("cache_quant", req.cache_quant.name().into()));
+    }
     if let Some(s) = &req.session {
         fields.push(("session", obj(vec![
             ("id", hex_u64(s.session).into()),
@@ -446,6 +499,7 @@ pub(crate) struct SolveHeader {
     pub slice_base: u64,
     pub lens: Option<Vec<usize>>,
     pub causal: bool,
+    pub cache_quant: CacheQuant,
     pub session: Option<ShardSession>,
 }
 
@@ -487,6 +541,13 @@ impl SolveHeader {
             lens,
             // lenient: absent (pre-causal peers) means false
             causal: req.get("causal").as_bool().unwrap_or(false),
+            // lenient: absent (pre-quantization peers) means off; a
+            // peer that *does* declare a mode must be understood
+            cache_quant: match req.get("cache_quant") {
+                Value::Null => CacheQuant::Off,
+                v => v.as_str().and_then(CacheQuant::parse)
+                    .ok_or_else(|| anyhow!("bad cache_quant"))?,
+            },
             session,
         })
     }
@@ -519,6 +580,28 @@ pub(crate) fn outcome_to_value(o: &SeqOutcome) -> Value {
             ("kind", "miss".into()),
             ("recomputed_rows", (*recomputed_rows).into()),
         ]),
+    }
+}
+
+/// JSON form of a [`ShardCacheStats`] (the `"cache"` reply field).
+/// Plain numbers, not hex strings: counters are telemetry, and a
+/// decode fleet retires the sun long before one crosses 2^53.
+pub(crate) fn cache_stats_to_value(c: &ShardCacheStats) -> Value {
+    obj(vec![
+        ("hits", (c.hits as usize).into()),
+        ("misses", (c.misses as usize).into()),
+        ("saved_rows", (c.saved_rows as usize).into()),
+    ])
+}
+
+/// Lenient inverse of [`cache_stats_to_value`]: missing or malformed
+/// counters read as zero rather than failing the reply.
+pub(crate) fn cache_stats_from_value(v: &Value) -> ShardCacheStats {
+    let field = |k: &str| v.get(k).as_usize().unwrap_or(0) as u64;
+    ShardCacheStats {
+        hits: field("hits"),
+        misses: field("misses"),
+        saved_rows: field("saved_rows"),
     }
 }
 
@@ -653,10 +736,16 @@ impl ShardTransport for TcpShard {
                 Value::Null => None,
                 v => Some(outcome_from_value(v)?),
             };
+            // lenient: pre-counter workers simply omit the field
+            let cache = match reply.get("cache") {
+                Value::Null => None,
+                c => Some(cache_stats_from_value(c)),
+            };
             Ok(ShardReply {
                 out: BatchMatrix::from_vec(got.0, got.1, got.2, got.3,
                                            data),
                 outcome,
+                cache,
             })
         })
     }
@@ -700,6 +789,11 @@ pub struct ShardOptions {
     pub backoff: Duration,
     /// Virtual nodes per shard on the session-routing ring.
     pub vnodes: usize,
+    /// Panel storage policy declared on every dispatched request and
+    /// applied to the gateway's own degraded-mode cache.  Workers run
+    /// whatever their `--cache-quant` says (module docs); keeping the
+    /// fleet and the gateway on one setting is a deployment concern.
+    pub cache_quant: CacheQuant,
 }
 
 impl Default for ShardOptions {
@@ -708,6 +802,7 @@ impl Default for ShardOptions {
             retries: 2,
             backoff: Duration::from_millis(10),
             vnodes: HashRing::DEFAULT_VNODES,
+            cache_quant: CacheQuant::Off,
         }
     }
 }
@@ -807,6 +902,9 @@ pub struct ShardedBackend {
     /// Liveness map, transport order; flips down after exhausted
     /// retries, back up on success or a good health-check ping.
     down: Vec<AtomicBool>,
+    /// Latest counter snapshot per shard, transport order — refreshed
+    /// whenever a session reply carries one.
+    stats: Vec<Mutex<ShardCacheStats>>,
     ring: HashRing,
     opts: ShardOptions,
 }
@@ -823,13 +921,22 @@ impl ShardedBackend {
         let variant = Variant::parse(kernel)?;
         let ids: Vec<String> =
             transports.iter().map(|t| t.shard_id()).collect();
-        let local =
-            CachingBackend::native(kernel, Arc::new(KvCache::unbounded()))?;
+        // the degraded-mode cache follows the fleet's storage policy so
+        // a session falling back locally sees the same numerics
+        let local = CachingBackend::native(
+            kernel,
+            Arc::new(KvCache::new(KvCacheOptions {
+                quant: opts.cache_quant,
+                ..KvCacheOptions::default()
+            })))?;
         Some(Self {
             kernel_name: kernel.to_string(),
             kernel: kernel_for(&variant),
             local,
             down: transports.iter().map(|_| AtomicBool::new(false))
+                .collect(),
+            stats: transports.iter()
+                .map(|_| Mutex::new(ShardCacheStats::default()))
                 .collect(),
             ring: HashRing::new(&ids, opts.vnodes.max(1)),
             ids,
@@ -842,15 +949,30 @@ impl ShardedBackend {
     /// and cache — the test/bench topology.
     pub fn in_process(kernel: &str, shards: usize,
                       workers_per_shard: usize) -> Option<Self> {
+        Self::in_process_with(kernel, shards, workers_per_shard,
+                              ShardOptions::default())
+    }
+
+    /// [`Self::in_process`] under explicit options; each loopback
+    /// engine's cache follows `opts.cache_quant`, mirroring a fleet of
+    /// workers started with the matching `--cache-quant`.
+    pub fn in_process_with(kernel: &str, shards: usize,
+                           workers_per_shard: usize, opts: ShardOptions)
+                           -> Option<Self> {
         let transports: Vec<Box<dyn ShardTransport>> = (0..shards.max(1))
             .map(|i| {
+                let cache = Arc::new(KvCache::new(KvCacheOptions {
+                    quant: opts.cache_quant,
+                    ..KvCacheOptions::default()
+                }));
                 Box::new(InProcessShard::new(
                     &format!("local-{i}"),
-                    Arc::new(ShardEngine::new(workers_per_shard)),
+                    Arc::new(ShardEngine::with_cache(workers_per_shard,
+                                                     cache)),
                 )) as Box<dyn ShardTransport>
             })
             .collect();
-        Self::from_transports(kernel, transports, ShardOptions::default())
+        Self::from_transports(kernel, transports, opts)
     }
 
     /// Fan out over `ct shard-worker` hosts.
@@ -875,6 +997,25 @@ impl ShardedBackend {
 
     pub fn options(&self) -> ShardOptions {
         self.opts
+    }
+
+    /// Fleet-wide cache counters: the latest per-shard reply snapshot
+    /// summed with the gateway's local degraded-mode cache.  Snapshots
+    /// ride session replies (satellite telemetry, not a synchronous
+    /// poll), so the figures can trail in-flight work by one step.
+    pub fn cache_stats(&self) -> ShardCacheStats {
+        let mut total = ShardCacheStats::default();
+        for s in &self.stats {
+            let s = crate::exec::lock_unpoisoned(s);
+            total.hits += s.hits;
+            total.misses += s.misses;
+            total.saved_rows += s.saved_rows;
+        }
+        let c = self.local.cache().counters();
+        total.hits += c.hits.load(Ordering::Relaxed);
+        total.misses += c.misses.load(Ordering::Relaxed);
+        total.saved_rows += c.reused_rows.load(Ordering::Relaxed);
+        total
     }
 
     /// Ping every shard and refresh the liveness map; returns per-shard
@@ -953,6 +1094,7 @@ impl ShardedBackend {
                 slice_base: (part.seq0 * heads + part.head0) as u64,
                 lens,
                 causal: batch.causal,
+                cache_quant: self.opts.cache_quant,
                 session: None,
             };
             // one part per healthy shard (the planner emits at most
@@ -978,6 +1120,7 @@ impl ShardedBackend {
                     slice_base: 0,
                     lens: Some(vec![valid]),
                     causal: batch.causal,
+                    cache_quant: self.opts.cache_quant,
                     session: Some(ShardSession {
                         session: sref.cache.session,
                         generation: sref.cache.generation,
@@ -1055,6 +1198,10 @@ impl ShardedBackend {
                                 || rep.outcome.is_some());
                         if complete {
                             self.down[si].store(false, Ordering::Relaxed);
+                            if let Some(c) = rep.cache {
+                                *crate::exec::lock_unpoisoned(
+                                    &self.stats[si]) = c;
+                            }
                             return rep;
                         }
                         log::warn!("shard {} returned a malformed reply",
@@ -1091,6 +1238,7 @@ impl ShardedBackend {
                     out: solve_batch_offset(self.kernel.as_ref(), &b,
                                             req.slice_base, ctx),
                     outcome: None,
+                    cache: None,
                 }
             }
             Some(s) => {
@@ -1107,7 +1255,10 @@ impl ShardedBackend {
                     .with_causal(req.causal);
                 let (out, outcomes) =
                     self.local.execute_with_report(&b, ctx);
-                ShardReply { out, outcome: Some(outcomes[0]) }
+                // no stats snapshot: the local cache's counters are
+                // read directly by cache_stats()
+                ShardReply { out, outcome: Some(outcomes[0]),
+                             cache: None }
             }
         }
     }
@@ -1251,6 +1402,68 @@ mod tests {
             if step > 0 {
                 assert!(matches!(got_oc[1], SeqOutcome::Hit { .. }),
                         "step {step} should hit the owning shard's cache");
+            }
+        }
+    }
+
+    #[test]
+    fn quantized_sharded_sessions_match_the_single_host_quant_cache() {
+        // quantization is deterministic, so routing a quantized session
+        // through the fleet must reproduce the single-host quantized
+        // CachingBackend bit for bit — the sharded twin of the cache's
+        // own tolerance contract
+        let (q, k, v) = qkv(3, 2, 24, 8, 55);
+        for quant in [CacheQuant::I8PerHead, CacheQuant::I8PerPanel] {
+            for shards in [1usize, 3] {
+                let opts = ShardOptions { cache_quant: quant,
+                                          ..ShardOptions::default() };
+                let sharded = ShardedBackend::in_process_with(
+                    "i-clustered-4", shards, 1, opts).unwrap();
+                let reference = CachingBackend::native(
+                    "i-clustered-4",
+                    Arc::new(KvCache::new(KvCacheOptions {
+                        quant,
+                        ..KvCacheOptions::default()
+                    }))).unwrap();
+                let ctx = ExecCtx::sequential();
+                let sid = 47u64;
+                let steps = [(12usize, 0usize), (18, 12), (24, 18)];
+                for (step, &(len, span)) in steps.iter().enumerate() {
+                    let lens = [20usize, len, 24];
+                    let sessions = [
+                        None,
+                        Some(SessionRef {
+                            cache: CacheRef { session: sid,
+                                              generation: 2 },
+                            span_start: span,
+                        }),
+                        None,
+                    ];
+                    let batch = AttnBatch::new(&q, &k, &v, 9)
+                        .with_lens(&lens)
+                        .with_sessions(&sessions);
+                    let (got, got_oc) =
+                        sharded.execute_with_report(&batch, &ctx);
+                    let (want, want_oc) =
+                        reference.execute_with_report(&batch, &ctx);
+                    assert!(got.bit_identical(&want),
+                            "{} shards={shards} step {step} diverged",
+                            quant.name());
+                    assert_eq!(got_oc, want_oc,
+                               "{} shards={shards} step {step} outcomes",
+                               quant.name());
+                }
+                // satellite telemetry: the owning shard's counter
+                // snapshots rode the session replies back and
+                // aggregate fleet-wide (one miss at prefill, hits on
+                // the two decode steps that reused cached prefixes)
+                let stats = sharded.cache_stats();
+                assert!(stats.misses >= 1,
+                        "{} shards={shards}: {stats:?}", quant.name());
+                assert!(stats.hits >= 2,
+                        "{} shards={shards}: {stats:?}", quant.name());
+                assert!(stats.saved_rows >= 12 + 18,
+                        "{} shards={shards}: {stats:?}", quant.name());
             }
         }
     }
@@ -1427,6 +1640,7 @@ mod tests {
             slice_base: (1u64 << 60) | 7,
             lens: Some(vec![3]),
             causal: true,
+            cache_quant: CacheQuant::I8PerPanel,
             session: Some(ShardSession {
                 session: (1u64 << 63) | 5,
                 generation: u64::MAX,
@@ -1441,6 +1655,7 @@ mod tests {
         assert_eq!(hdr.slice_base, (1u64 << 60) | 7);
         assert_eq!(hdr.lens.as_deref(), Some(&[3usize][..]));
         assert!(hdr.causal);
+        assert_eq!(hdr.cache_quant, CacheQuant::I8PerPanel);
         let s = hdr.session.unwrap();
         assert_eq!((s.session, s.generation, s.span_start),
                    ((1u64 << 63) | 5, u64::MAX, 2));
@@ -1450,6 +1665,51 @@ mod tests {
         let legacy = line.replace("\"causal\":true,", "");
         let hdr2 = SolveHeader::parse(&parse(&legacy).unwrap()).unwrap();
         assert!(!hdr2.causal);
+        // and a quant-less header (pre-quantization peer) parses as off
+        let legacy =
+            line.replace("\"cache_quant\":\"i8-panel\",", "");
+        let hdr3 = SolveHeader::parse(&parse(&legacy).unwrap()).unwrap();
+        assert_eq!(hdr3.cache_quant, CacheQuant::Off);
+        // an unknown declared mode is an error, not a silent default
+        let bad = line.replace("\"cache_quant\":\"i8-panel\"",
+                               "\"cache_quant\":\"fp4\"");
+        assert!(SolveHeader::parse(&parse(&bad).unwrap()).is_err());
+    }
+
+    #[test]
+    fn default_headers_stay_byte_stable_without_quant_fields() {
+        // the wire-stability contract: a request under the default
+        // policy must not mention cache_quant at all
+        let (q, k, v) = qkv(1, 1, 4, 3, 2);
+        let req = ShardRequest {
+            kernel: "full".into(),
+            q,
+            k,
+            v,
+            seed: 7,
+            slice_base: 0,
+            lens: None,
+            causal: false,
+            cache_quant: CacheQuant::Off,
+            session: None,
+        };
+        let line = solve_header(1, &req).to_string();
+        assert!(!line.contains("cache_quant"), "leaked field: {line}");
+    }
+
+    #[test]
+    fn cache_stats_round_trip_and_parse_leniently() {
+        let stats = ShardCacheStats { hits: 12, misses: 3,
+                                      saved_rows: 480 };
+        let v =
+            parse(&cache_stats_to_value(&stats).to_string()).unwrap();
+        assert_eq!(cache_stats_from_value(&v), stats);
+        // lenient: a reply from a worker that predates some counter
+        // reads as zero for that counter, never as an error
+        let sparse = parse("{\"hits\": 2}").unwrap();
+        assert_eq!(cache_stats_from_value(&sparse),
+                   ShardCacheStats { hits: 2, misses: 0,
+                                     saved_rows: 0 });
     }
 
     #[test]
@@ -1476,6 +1736,7 @@ mod tests {
             slice_base: 0,
             lens: None,
             causal: false,
+            cache_quant: CacheQuant::Off,
             session,
         };
         assert!(engine.solve(&ShardRequest {

@@ -99,9 +99,10 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, bail, Result};
 
 use crate::attention::{AttentionBackend, AttentionKernel, AttnBatch,
-                       AttnProblem, CacheRef, CachingBackend, KvCache,
-                       KvCacheOptions, NativeBackend, SeqOutcome,
-                       SessionRef, ShardOptions, ShardedBackend};
+                       AttnProblem, CacheQuant, CacheRef, CachingBackend,
+                       KvCache, KvCacheOptions, NativeBackend,
+                       SeqOutcome, SessionRef, ShardCacheStats,
+                       ShardOptions, ShardedBackend};
 use crate::exec::{Channel, ExecCtx, SharedWorkerPool};
 use crate::metrics::{LatencyHistogram, PaddingWaste};
 use crate::prng::Xoshiro256;
@@ -213,6 +214,14 @@ pub struct GatewayOptions {
     /// step (exact everywhere); above 1.0 reuses the frozen clustering
     /// between re-clusters.
     pub cache_growth: f64,
+    /// KV-panel storage precision ([`KvCacheOptions::quant`]):
+    /// [`CacheQuant::Off`] (default) keeps decode bit-identical to the
+    /// full recompute; the i8 modes store ~4× more live sessions per
+    /// byte of cache budget and gate hit outputs by the declared
+    /// numeric tolerance instead.  With multi-host serving the same
+    /// setting is declared on every dispatched shard request and
+    /// applied to the degraded-mode local cache.
+    pub cache_quant: CacheQuant,
     /// Evict decode sessions idle longer than this (`None` = never):
     /// the table entry and cached panels are released exactly as if
     /// the client had sent `"end"`.  Swept opportunistically on every
@@ -246,6 +255,7 @@ impl Default for GatewayOptions {
             mask: true,
             cache_capacity_rows: usize::MAX,
             cache_growth: 1.0,
+            cache_quant: CacheQuant::Off,
             session_ttl: None,
             causal: false,
             shards: Vec::new(),
@@ -420,7 +430,14 @@ impl ServingGateway {
         let cache = Arc::new(KvCache::new(KvCacheOptions {
             capacity_rows: opts.cache_capacity_rows,
             growth: opts.cache_growth,
+            quant: opts.cache_quant,
         }));
+        // one knob governs the gateway cache and the fleet: the shard
+        // backends declare the same storage policy on every request
+        let shard_opts = ShardOptions {
+            cache_quant: opts.cache_quant,
+            ..opts.shard_opts
+        };
 
         let mut ingress = Vec::new();
         let mut metrics = Vec::new();
@@ -444,7 +461,7 @@ impl ServingGateway {
                 // between buckets still lands on its owning shard
                 let sb = Arc::new(
                     ShardedBackend::over_tcp(&bucket.kernel, &opts.shards,
-                                             opts.shard_opts)
+                                             shard_opts)
                         .ok_or_else(|| anyhow!(
                             "bucket kernel {:?} not in the attention \
                              registry", bucket.kernel))?);
@@ -735,6 +752,14 @@ impl ServingGateway {
     /// The gateway-global KV cache (counters, capacity introspection).
     pub fn cache(&self) -> &Arc<KvCache> {
         &self.cache
+    }
+
+    /// Per-bucket shard-side cache counters, bucket order — aggregated
+    /// from the snapshots workers return on session replies (satellite
+    /// telemetry; see [`ShardedBackend::cache_stats`]).  Empty for
+    /// single-host gateways.
+    pub fn shard_cache_stats(&self) -> Vec<ShardCacheStats> {
+        self.sharded.iter().map(|sb| sb.cache_stats()).collect()
     }
 
     /// Fail-fast submit with route-up admission control: try the
@@ -1328,11 +1353,14 @@ pub fn replay_blocking(gw: &ServingGateway, trace: Vec<TraceItem>,
 /// `hit %` is the KV-cache hit rate over decode steps and
 /// `saved %` the fraction of decode history rows the cache kept out of
 /// the kernels ([`BucketMetrics::recompute_saved`]) — both 0.0 for
-/// buckets that served no sessions.
-pub const BUCKET_REPORT_HEADERS: [&str; 13] =
+/// buckets that served no sessions.  `shard hit %` is the same hit
+/// rate measured *worker-side* from the counter snapshots shard
+/// replies carry ([`ServingGateway::shard_cache_stats`]); `-` for
+/// single-host gateways.
+pub const BUCKET_REPORT_HEADERS: [&str; 14] =
     ["N", "kernel", "done", "routed-up", "rejected", "occupancy",
      "p50 ms", "p99 ms", "rows/s", "mem waste %", "cmp waste %",
-     "hit %", "saved %"];
+     "hit %", "saved %", "shard hit %"];
 
 /// Per-bucket serving report, one row of strings per bucket (ascending
 /// seq_len), ready for a `benchlib::Table` with
@@ -1340,12 +1368,23 @@ pub const BUCKET_REPORT_HEADERS: [&str; 13] =
 /// for rows/sec (valid rows only — padding rows are reported as waste,
 /// not throughput).
 pub fn bucket_report(gw: &ServingGateway, wall_s: f64) -> Vec<Vec<String>> {
+    let shard_stats = gw.shard_cache_stats(); // empty for single-host
     gw.router()
         .buckets()
         .iter()
         .zip(gw.bucket_metrics())
-        .map(|(b, m)| {
+        .enumerate()
+        .map(|(i, (b, m))| {
             let rows = m.valid_rows.load(Ordering::Relaxed);
+            let shard_hit = match shard_stats.get(i) {
+                None => "-".to_string(),
+                Some(s) => {
+                    let lookups = (s.hits + s.misses) as f64;
+                    format!("{:.1}", if lookups == 0.0 { 0.0 } else {
+                        100.0 * s.hits as f64 / lookups
+                    })
+                }
+            };
             vec![
                 b.seq_len.to_string(),
                 b.kernel.clone(),
@@ -1362,6 +1401,7 @@ pub fn bucket_report(gw: &ServingGateway, wall_s: f64) -> Vec<Vec<String>> {
                 format!("{:.1}", 100.0 * m.compute_waste()),
                 format!("{:.1}", 100.0 * m.cache_hit_rate()),
                 format!("{:.1}", 100.0 * m.recompute_saved()),
+                shard_hit,
             ]
         })
         .collect()
@@ -1682,6 +1722,62 @@ mod tests {
         assert_eq!(gw.cache().session_len(
             CacheRef { session: 0, generation: 0 }), None);
         gw.shutdown();
+    }
+
+    #[test]
+    fn quantized_gateway_decode_is_deterministic_and_within_tolerance() {
+        // i8 panels give up bit-identity by design: a hit dequantizes
+        // the stored history, so its output may drift from the exact
+        // recompute — but only within the tolerance band, and
+        // deterministically (two identically configured gateways agree
+        // bit for bit).  Misses compute on exact request tensors and
+        // stay bit-identical.
+        let mk = || {
+            ServingGateway::start(
+                SHAPE,
+                vec![Bucket::native("full", 32, 2)],
+                GatewayOptions {
+                    max_wait: Duration::from_millis(2),
+                    seed: 23,
+                    cache_quant: CacheQuant::I8PerPanel,
+                    ..GatewayOptions::default()
+                },
+            )
+            .unwrap()
+        };
+        let (gw, gw2) = (mk(), mk());
+        let trace = synthetic_decode_trace(SHAPE, 10, 2, 6, 1, 40);
+        let kernel = kernel_by_name("full").unwrap();
+        let mut prev_len = 0usize;
+        for (step, item) in trace.iter().enumerate() {
+            let run = |g: &ServingGateway| {
+                g.submit_session_blocking(item.q.clone(), item.k.clone(),
+                                          item.v.clone(), item.len, 0)
+                    .unwrap()
+                    .recv_timeout(Duration::from_secs(30))
+                    .unwrap()
+            };
+            let (resp, resp2) = (run(&gw), run(&gw2));
+            assert!(same_bits(&resp.out, &resp2.out),
+                    "step {step}: quantized decode must be deterministic");
+            assert_eq!(resp.cache_hit, Some(step > 0));
+            let want = session_reference(kernel.as_ref(), SHAPE, 23, 0,
+                                         &item.q, &item.k, &item.v,
+                                         item.len, prev_len);
+            assert_eq!(resp.out.len(), want.len());
+            for (a, b) in resp.out.iter().zip(&want) {
+                let err = (f64::from(*a) - f64::from(*b)).abs();
+                assert!(err <= 0.1 + 0.1 * f64::from(*b).abs(),
+                        "step {step}: err {err} vs reference {b}");
+            }
+            if step == 0 {
+                assert!(same_bits(&resp.out, &want),
+                        "the prefill miss computes on exact inputs");
+            }
+            prev_len = item.len;
+        }
+        gw.shutdown();
+        gw2.shutdown();
     }
 
     #[test]

@@ -443,17 +443,30 @@ fn write_escaped(s: &str, out: &mut String) {
     out.push('"');
 }
 
+/// Emit a number so that re-parsing the text recovers the exact f64
+/// bits: integers in i64 range print without a fraction, and every
+/// other finite value uses Rust's shortest-round-trip f64 display —
+/// tolerance knobs like `"rel_tol": 0.15` must survive a report
+/// rewrite byte-stably (`docs/TESTING.md`).  JSON has no non-finite
+/// literals, so NaN/±inf degrade to `null` instead of emitting
+/// unparseable text, and negative zero keeps its sign bit.
+fn write_num(n: f64, out: &mut String) {
+    if !n.is_finite() {
+        out.push_str("null");
+    } else if n == 0.0 && n.is_sign_negative() {
+        out.push_str("-0.0");
+    } else if n.fract() == 0.0 && n.abs() < 9e15 {
+        out.push_str(&format!("{}", n as i64));
+    } else {
+        out.push_str(&format!("{n}"));
+    }
+}
+
 fn write_value(v: &Value, out: &mut String) {
     match v {
         Value::Null => out.push_str("null"),
         Value::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
-        Value::Num(n) => {
-            if n.fract() == 0.0 && n.abs() < 9e15 {
-                out.push_str(&format!("{}", *n as i64));
-            } else {
-                out.push_str(&format!("{n}"));
-            }
-        }
+        Value::Num(n) => write_num(*n, out),
         Value::Str(s) => write_escaped(s, out),
         Value::Arr(a) => {
             out.push('[');
@@ -579,6 +592,36 @@ mod tests {
     #[test]
     fn unicode_escape() {
         assert_eq!(parse(r#""A""#).unwrap(), Value::Str("A".into()));
+    }
+
+    #[test]
+    fn floats_round_trip_byte_stably_at_full_precision() {
+        // tolerance knobs (abs_tol/rel_tol) must survive a
+        // parse→rewrite cycle byte-for-byte: the emitter uses f64
+        // shortest-round-trip display, so text → bits → text is a
+        // fixed point for any finite decimal
+        for src in ["0.15", "0.05", "1e-5", "0.00345",
+                    "0.1000000000000001", "2.2250738585072014e-308",
+                    "-0.0"] {
+            let v = parse(src).unwrap();
+            let emitted = to_string(&v);
+            let back = parse(&emitted).unwrap();
+            assert_eq!(to_string(&back), emitted, "{src}");
+            // and the f64 bits themselves are preserved
+            let (a, b) = (v.as_f64().unwrap(), back.as_f64().unwrap());
+            assert_eq!(a.to_bits(), b.to_bits(), "{src}");
+        }
+    }
+
+    #[test]
+    fn non_finite_floats_degrade_to_null() {
+        // JSON has no NaN/inf literals; emitting them would poison the
+        // document for every parser (ours included)
+        for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let text = to_string(&Value::Num(bad));
+            assert_eq!(text, "null");
+            assert_eq!(parse(&text).unwrap(), Value::Null);
+        }
     }
 
     #[test]

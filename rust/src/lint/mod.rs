@@ -63,7 +63,11 @@ pub struct SourceSet {
 
 /// Files under the bit-determinism contract: the kernel, tensor and
 /// execution layers.  These must carry `//! ct-contract: bit-exact`
-/// and pass the `det-float-*` / `det-map-iter` rules.
+/// and pass the `det-float-*` / `det-map-iter` rules — or declare
+/// `//! ct-contract: tolerance-gated` (sanctioned lossy code such as
+/// `tensor/quant.rs`), which trades the bit-identity rules for the
+/// numeric tolerance policy while keeping `det-map-iter` and the full
+/// panic family.
 pub fn bit_scope(path: &str) -> bool {
     path.starts_with("attention/")
         || path.starts_with("tensor/")
@@ -153,12 +157,30 @@ fn analyze_file(fs: &FileScan, set: &SourceSet, rep: &mut LintReport) {
         }
     }
 
-    // contract headers are mandatory inside the scoped directories
-    if bit_scope(&fs.path) && !fs.has_contract("bit-exact") {
+    // a header naming an unknown contract is a violation in its own
+    // right — a typo must fail loudly, not silently exempt the file
+    for c in &fs.contracts {
+        if !rules::known_contract(c) {
+            file_hit(fs, Hit {
+                rule: "contract-header",
+                line: 1,
+                msg: format!("unknown contract {c:?} (known: {})",
+                             rules::CONTRACTS.join(", ")),
+            }, rep);
+        }
+    }
+
+    // contract headers are mandatory inside the scoped directories.
+    // bit scope accepts `tolerance-gated` in place of `bit-exact`:
+    // quantized/reduced-precision files trade the bit-identity rules
+    // for the numeric tolerance policy (and keep the panic family).
+    let tol = fs.has_contract("tolerance-gated");
+    if bit_scope(&fs.path) && !fs.has_contract("bit-exact") && !tol {
         file_hit(fs, Hit {
             rule: "contract-header",
             line: 1,
-            msg: "missing `//! ct-contract: bit-exact` header"
+            msg: "missing `//! ct-contract: bit-exact` header (or \
+                  `tolerance-gated` for sanctioned lossy code)"
                 .to_string(),
         }, rep);
     }
@@ -172,7 +194,10 @@ fn analyze_file(fs: &FileScan, set: &SourceSet, rep: &mut LintReport) {
     }
 
     let bit = fs.has_contract("bit-exact");
-    let panics = panic_scope(&fs.path) || fs.has_contract("panic-free");
+    // tolerance-gated implies panic-free: lossy storage must degrade,
+    // never crash, so the panic family stays on
+    let panics = panic_scope(&fs.path) || fs.has_contract("panic-free")
+        || tol;
     let entropy = entropy_scope(&fs.path);
     let wire = wire_scope(&fs.path);
 
@@ -184,6 +209,10 @@ fn analyze_file(fs: &FileScan, set: &SourceSet, rep: &mut LintReport) {
         if bit {
             hits.extend(rules::det_float_reduce(fs, i));
             hits.extend(rules::det_float_accum(fs, i));
+        }
+        if bit || tol {
+            // map-iteration order is a structural hazard, not a
+            // rounding one — tolerance-gated files don't get it back
             hits.extend(rules::det_map_iter(fs, i));
         }
         if entropy {
@@ -333,6 +362,22 @@ pub fn self_check(root: &Path) -> Result<SelfCheck> {
             missed.push(*rule);
         }
     }
+    // the tolerance-gated contract has two directions, probed on
+    // tensor/__lint_probe_tolerance__.rs: the header must exempt the
+    // file from the bit-identity rules (det-float-* firing means the
+    // exemption is broken) while the panic family stays on
+    // (panic-unwrap NOT firing means lossy code escaped panic-safety)
+    let tol_probe = |rule: &str| {
+        report.violations.iter().any(|v| {
+            v.rule == rule && v.file.contains("__lint_probe_tolerance__")
+        })
+    };
+    if tol_probe("det-float-reduce") || tol_probe("det-float-accum") {
+        missed.push("tolerance-gated-exemption");
+    }
+    if !tol_probe("panic-unwrap") {
+        missed.push("tolerance-gated-panic-free");
+    }
     let injected = report
         .violations
         .iter()
@@ -366,6 +411,16 @@ fn probe(xs: &[f32], seed: u64) -> f32 {
         // header probe: in bit scope, no header
         ("attention/__lint_probe_header__.rs",
          "fn probe_header() {}\n"),
+        // tolerance-gated probe: the header must exempt the float
+        // reduction from det-float-reduce, but the unwrap must still
+        // fire panic-unwrap (tolerance-gated implies panic-free)
+        ("tensor/__lint_probe_tolerance__.rs", "\
+//! ct-contract: tolerance-gated
+fn probe(xs: &[f32]) -> f32 {
+    let t: f32 = xs.iter().sum();
+    t + xs.first().unwrap()
+}
+"),
         // panic + wire scope probe
         ("server/__lint_probe_panic__.rs", "\
 fn probe(v: Vec<u64>, i: usize) -> u64 {
@@ -435,6 +490,52 @@ mod tests {
         assert_eq!(rep.violations.len(), 1);
         assert_eq!(rep.violations[0].rule, "det-float-reduce");
         assert_eq!(rep.violations[0].file, "rust/src/attention/k.rs");
+    }
+
+    #[test]
+    fn tolerance_gated_header_satisfies_bit_scope() {
+        // the header is accepted in place of bit-exact, exempts the
+        // float reduction, and keeps the panic family on
+        let set = tiny_set(vec![(
+            "tensor/q.rs",
+            "//! ct-contract: tolerance-gated\n\
+             fn f(xs: &[f32]) -> f32 {\n\
+                 let t: f32 = xs.iter().sum();\n\
+                 t + xs.first().unwrap()\n\
+             }\n")]);
+        let rep = analyze(&set);
+        let rules: Vec<&str> =
+            rep.violations.iter().map(|v| v.rule.as_str()).collect();
+        assert!(!rules.contains(&"contract-header"), "{rules:?}");
+        assert!(!rules.contains(&"det-float-reduce"), "{rules:?}");
+        assert!(rules.contains(&"panic-unwrap"), "{rules:?}");
+    }
+
+    #[test]
+    fn unknown_contract_names_are_flagged() {
+        let set = tiny_set(vec![(
+            "tensor/q.rs",
+            "//! ct-contract: bit-exact, tollerance-gated\n\
+             fn f() {}\n")]);
+        let rep = analyze(&set);
+        let headers: Vec<_> = rep.violations.iter()
+            .filter(|v| v.rule == "contract-header").collect();
+        assert_eq!(headers.len(), 1);
+        assert!(headers[0].msg.contains("tollerance-gated"),
+                "{}", headers[0].msg);
+    }
+
+    #[test]
+    fn tolerance_gated_does_not_satisfy_panic_scope() {
+        // in server/ the panic-free header is still mandatory — the
+        // bit-scope alternative doesn't leak into the serving scope
+        let set = tiny_set(vec![(
+            "server/x.rs",
+            "//! ct-contract: tolerance-gated\n\
+             fn f() {}\n")]);
+        let rep = analyze(&set);
+        assert!(rep.violations.iter()
+                .any(|v| v.rule == "contract-header"));
     }
 
     #[test]

@@ -41,6 +41,29 @@ pub fn known_rule(rule: &str) -> bool {
     RULE_IDS.contains(&rule)
 }
 
+/// Every contract a `//! ct-contract:` header may declare.
+///
+/// - `bit-exact` — outputs are a bit-deterministic function of the
+///   inputs AND bit-identical to the reference schedule; the
+///   `det-float-*` / `det-map-iter` rules enforce it.
+/// - `panic-free` — the file is on a serving path and must degrade
+///   instead of crash; the `panic-*` rules enforce it.
+/// - `tolerance-gated` — quantized/reduced-precision code: exempt
+///   from the bit-identity rules (its outputs are gated by the
+///   numeric tolerance in `oracle/tolerance-policy.json` instead),
+///   but still deterministic in structure and held to the full
+///   `panic-*` family — lossy storage must never become lossy
+///   control flow.
+pub const CONTRACTS: &[&str] = &["bit-exact", "panic-free",
+                                 "tolerance-gated"];
+
+/// Is `name` a contract the engine knows?  Headers naming anything
+/// else raise `contract-header` — a typoed contract must fail loudly,
+/// not silently exempt a file.
+pub fn known_contract(name: &str) -> bool {
+    CONTRACTS.contains(&name)
+}
+
 /// A raw rule hit before suppression resolution.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Hit {
@@ -325,6 +348,16 @@ mod tests {
 
     fn scan(src: &str) -> FileScan {
         FileScan::new("t.rs", src)
+    }
+
+    #[test]
+    fn contract_catalog_matches_known_contract() {
+        for c in CONTRACTS {
+            assert!(known_contract(c));
+        }
+        assert!(known_contract("tolerance-gated"));
+        assert!(!known_contract("bit-exactt"));
+        assert!(!known_contract(""));
     }
 
     #[test]

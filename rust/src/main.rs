@@ -70,6 +70,15 @@ fn dispatch(argv: &[String]) -> Result<()> {
     }
 }
 
+/// Parse `--cache-quant` (shared by `gateway` and `shard-worker`),
+/// rejecting unknown spellings loudly.
+fn parse_cache_quant(args: &clustered_transformers::cli::Args)
+                     -> Result<attention::CacheQuant> {
+    let s = args.get_or("cache-quant", "off");
+    attention::CacheQuant::parse(&s).ok_or_else(|| anyhow!(
+        "--cache-quant expects off | i8-head | i8-panel, got {s:?}"))
+}
+
 fn open_runtime(args: &clustered_transformers::cli::Args) -> Result<Runtime> {
     let root = find_repo_root();
     let dir = args.get_or("artifacts",
@@ -265,6 +274,10 @@ fn cmd_gateway(rest: &[String]) -> Result<()> {
              "KV-cache capacity in cached sequence rows (0 = unbounded)")
         .opt("cache-growth", Some("1.0"),
              "clustered re-cluster threshold (1.0 = exact every step)")
+        .opt("cache-quant", Some("off"),
+             "KV-panel storage: off | i8-head | i8-panel (i8 packs \
+              ~4x more live sessions per cached byte; decode is \
+              tolerance-gated instead of bit-identical)")
         .opt("max-wait-ms", Some("2"), "batcher deadline")
         .opt("queue", Some("64"), "per-bucket ingress queue capacity")
         .opt("workers", Some("0"), "shared worker budget (0 = auto)")
@@ -313,6 +326,7 @@ fn cmd_gateway(rest: &[String]) -> Result<()> {
     let seed = args.get_u64("seed", 0)?;
     let mask = !args.flag("no-mask");
     let cache_rows = args.get_usize("cache-rows", 0)?;
+    let cache_quant = parse_cache_quant(&args)?;
     let ttl_ms = args.get_u64("session-ttl-ms", 0)?;
     let shards: Vec<String> = args
         .get("shards")
@@ -335,6 +349,7 @@ fn cmd_gateway(rest: &[String]) -> Result<()> {
         cache_capacity_rows: if cache_rows == 0 { usize::MAX }
                              else { cache_rows },
         cache_growth: args.get_f64("cache-growth", 1.0)?,
+        cache_quant,
         session_ttl: if ttl_ms == 0 { None } else {
             Some(std::time::Duration::from_millis(ttl_ms))
         },
@@ -439,7 +454,11 @@ fn cmd_shard_worker(rest: &[String]) -> Result<()> {
         .opt("cache-rows", Some("0"),
              "KV-cache capacity in cached sequence rows (0 = unbounded)")
         .opt("cache-growth", Some("1.0"),
-             "clustered re-cluster threshold (1.0 = exact every step)");
+             "clustered re-cluster threshold (1.0 = exact every step)")
+        .opt("cache-quant", Some("off"),
+             "KV-panel storage: off | i8-head | i8-panel (i8 packs \
+              ~4x more live sessions per cached byte; must match the \
+              gateway's --cache-quant for uniform fleet numerics)");
     let args = cmd.parse(rest)?;
     init_logging(true);
     let cache_rows = args.get_usize("cache-rows", 0)?;
@@ -448,6 +467,7 @@ fn cmd_shard_worker(rest: &[String]) -> Result<()> {
             capacity_rows: if cache_rows == 0 { usize::MAX }
                            else { cache_rows },
             growth: args.get_f64("cache-growth", 1.0)?,
+            quant: parse_cache_quant(&args)?,
         }));
     let engine = Arc::new(attention::ShardEngine::with_cache(
         args.get_usize("workers", 0)?, cache));
@@ -617,7 +637,10 @@ fn cmd_oracle_perf_gate(rest: &[String]) -> Result<()> {
               <repo>/oracle-report.json)")
         .flag("self-check",
               "first prove the gate can fail on fabricated numbers, \
-               then run it for real");
+               then run it for real")
+        .flag("strict",
+              "exit nonzero when any suite was skipped on a bootstrap \
+               baseline — refuse to green-light an un-armed gate");
     let args = cmd.parse(rest)?;
     init_logging(true);
     let policy_path = args.get("policy")
@@ -642,6 +665,12 @@ fn cmd_oracle_perf_gate(rest: &[String]) -> Result<()> {
             println!("      {note}");
         }
     }
+    // bootstrap baselines gate nothing: say so loudly, one line per
+    // suite, so a quietly un-armed gate can't pass for a real one
+    let boots = gate.bootstrap_skips();
+    for file in &boots {
+        println!("SKIPPED (bootstrap baseline): {file}");
+    }
     let report_path = args.get("report")
         .map(std::path::PathBuf::from)
         .unwrap_or_else(oracle::default_report_path);
@@ -651,10 +680,18 @@ fn cmd_oracle_perf_gate(rest: &[String]) -> Result<()> {
     if gate.passed() {
         println!("perf gate: pass (tolerance {:.0}%)",
                  policy.max_bench_regression * 100.0);
-        if ok { Ok(()) } else {
-            Err(anyhow!("perf gate passed but {} is red from the \
-                         replay phase", report_path.display()))
+        if !ok {
+            return Err(anyhow!("perf gate passed but {} is red from \
+                                the replay phase",
+                               report_path.display()));
         }
+        if args.flag("strict") && !boots.is_empty() {
+            return Err(anyhow!(
+                "perf gate (--strict): {} suite(s) skipped on \
+                 bootstrap baselines — record real baselines to arm \
+                 the gate", boots.len()));
+        }
+        Ok(())
     } else {
         Err(anyhow!("perf gate: FAIL — rows/sec regressed more than \
                      {:.0}% (see {})",

@@ -59,7 +59,7 @@ pub use fixture::{fnv1a64, frames_to_bytes, identity_expected_frames,
                   MetricsSnapshot, RespMeta, TraceSpec, FORMAT_VERSION};
 pub use perf::{bench_doc, compare_records, run_perf_gate, self_check,
                BenchGate, PerfGateResult, RowGate, RowStatus};
-pub use policy::TolerancePolicy;
+pub use policy::{OutputBits, TolerancePolicy};
 pub use report::{FixtureResult, FrameDiff, OracleReport};
 
 use std::path::PathBuf;

@@ -128,6 +128,19 @@ impl PerfGateResult {
         !self.benches.iter().any(BenchGate::failed)
     }
 
+    /// Suites whose baseline is still a bootstrap placeholder: the
+    /// gate compared nothing for them.  `ct oracle perf-gate` prints
+    /// one loud `SKIPPED (bootstrap baseline)` line per entry, and its
+    /// `--strict` mode turns a non-empty list into a failure so CI can
+    /// flag baselines that were never blessed.
+    pub fn bootstrap_skips(&self) -> Vec<&str> {
+        self.benches
+            .iter()
+            .filter(|b| b.status == "skipped-bootstrap")
+            .map(|b| b.file.as_str())
+            .collect()
+    }
+
     pub fn to_value(&self) -> Value {
         obj(vec![
             ("status",
@@ -391,6 +404,19 @@ mod tests {
         let gate = gate_one("BENCH_x.json", &doc, &fresh, 0.15).unwrap();
         assert_eq!(gate.status, "skipped-bootstrap");
         assert!(!gate.failed());
+        // ...but never silently: the skip is enumerable for the CLI's
+        // loud per-suite line and the --strict failure mode
+        let result = PerfGateResult { max_regression: 0.15,
+                                      benches: vec![gate] };
+        assert!(result.passed());
+        assert_eq!(result.bootstrap_skips(), vec!["BENCH_x.json"]);
+        // other skip flavors are not bootstrap skips
+        let other = PerfGateResult {
+            max_regression: 0.15,
+            benches: vec![BenchGate::skipped(
+                "BENCH_y.json", "skipped-no-fresh", "n/a".into())],
+        };
+        assert!(other.bootstrap_skips().is_empty());
     }
 
     #[test]

@@ -20,12 +20,24 @@
 //! }
 //! ```
 //!
-//! `output_bits` is declarative on purpose: `"exact"` is the only mode
-//! this build implements (the gateway's parity contract is bit-exact),
-//! but the field keeps the file forward-compatible with an approximate
-//! mode should a future kernel need ULP bands.  Unknown keys are
-//! rejected — a typoed knob must fail loudly, not silently gate
-//! nothing.
+//! `output_bits` declares how outputs are compared.  `"exact"` (the
+//! default, and what the checked-in policy pins) is the bit-identity
+//! contract: fixture replay and every determinism property hold bits
+//! equal.  The quantized KV cache (`--cache-quant`) is the repo's
+//! first sanctioned departure from bit-identity, so `output_bits` also
+//! accepts a numeric-tolerance object:
+//!
+//! ```json
+//! { "output_bits": { "abs_tol": 0.05, "rel_tol": 0.15 } }
+//! ```
+//!
+//! which admits `|got − want| ≤ abs_tol + rel_tol · |want|` per
+//! element ([`OutputBits::allows`]).  The tolerance mode gates the
+//! quantized proptests and the bench error column; the checked-in
+//! fixture corpus was recorded unquantized and still replays
+//! bit-exactly.  Any other string (e.g. `"ulp-2"`) is rejected.
+//! Unknown keys are rejected — a typoed knob must fail loudly, not
+//! silently gate nothing.
 
 use std::path::Path;
 
@@ -33,9 +45,38 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::jsonio::{self, obj, Value};
 
+/// How outputs are compared: bit-exact (the default contract) or
+/// within a declared numeric tolerance (the quantized-cache mode).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub enum OutputBits {
+    /// Outputs must be bit-identical to the reference.
+    #[default]
+    Exact,
+    /// Outputs must satisfy `|got − want| ≤ abs_tol + rel_tol·|want|`
+    /// per element — the band quantized decode is held to.
+    Tolerance { abs_tol: f64, rel_tol: f64 },
+}
+
+impl OutputBits {
+    /// Does an observed absolute error pass, given the magnitude of
+    /// the reference value it was measured against?  `Exact` admits
+    /// only zero error.
+    pub fn allows(&self, err: f64, ref_mag: f64) -> bool {
+        match *self {
+            OutputBits::Exact => err == 0.0,
+            OutputBits::Tolerance { abs_tol, rel_tol } => {
+                err <= abs_tol + rel_tol * ref_mag.abs()
+            }
+        }
+    }
+}
+
 /// Parsed tolerance policy; see the module docs for field meaning.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TolerancePolicy {
+    /// Output comparison mode: bit-exact, or a numeric tolerance band
+    /// for quantized decode.
+    pub output_bits: OutputBits,
     /// Fail a fixture whose response lands in a different bucket.
     pub require_bucket_match: bool,
     /// Fail a fixture whose decode steps change cache-hit/miss flags.
@@ -50,6 +91,7 @@ pub struct TolerancePolicy {
 impl Default for TolerancePolicy {
     fn default() -> Self {
         Self {
+            output_bits: OutputBits::Exact,
             require_bucket_match: true,
             require_cache_hit_match: true,
             require_counter_match: true,
@@ -84,10 +126,7 @@ impl TolerancePolicy {
                     }
                 }
                 "output_bits" => {
-                    if val.as_str() != Some("exact") {
-                        bail!("output_bits {val:?} unsupported — this \
-                               build only implements \"exact\"");
-                    }
+                    policy.output_bits = parse_output_bits(val)?;
                 }
                 "require_bucket_match" => {
                     policy.require_bucket_match = val.as_bool()
@@ -127,9 +166,16 @@ impl TolerancePolicy {
     /// The canonical serialized form (what `docs/TESTING.md` tells
     /// operators to check in).
     pub fn to_value(&self) -> Value {
+        let bits = match self.output_bits {
+            OutputBits::Exact => "exact".into(),
+            OutputBits::Tolerance { abs_tol, rel_tol } => obj(vec![
+                ("abs_tol", abs_tol.into()),
+                ("rel_tol", rel_tol.into()),
+            ]),
+        };
         obj(vec![
             ("version", 1usize.into()),
-            ("output_bits", "exact".into()),
+            ("output_bits", bits),
             ("require_bucket_match", self.require_bucket_match.into()),
             ("require_cache_hit_match",
              self.require_cache_hit_match.into()),
@@ -137,6 +183,44 @@ impl TolerancePolicy {
              self.require_counter_match.into()),
             ("max_bench_regression", self.max_bench_regression.into()),
         ])
+    }
+}
+
+/// Parse the `output_bits` field: the string `"exact"`, or an object
+/// `{"abs_tol": a, "rel_tol": r}` with both keys present, finite and
+/// non-negative.  Anything else — including other strings such as
+/// `"ulp-2"` — is rejected loudly.
+fn parse_output_bits(val: &Value) -> Result<OutputBits> {
+    if let Some(s) = val.as_str() {
+        if s == "exact" {
+            return Ok(OutputBits::Exact);
+        }
+        bail!("output_bits {s:?} unsupported — use \"exact\" or \
+               {{\"abs_tol\", \"rel_tol\"}}");
+    }
+    let o = val.as_obj().ok_or_else(
+        || anyhow!("output_bits must be \"exact\" or an object with \
+                    abs_tol and rel_tol"))?;
+    let mut abs_tol = None;
+    let mut rel_tol = None;
+    for (key, v) in o {
+        let f = v.as_f64().ok_or_else(
+            || anyhow!("output_bits.{key} must be a number"))?;
+        if !f.is_finite() || f < 0.0 {
+            bail!("output_bits.{key} {f} must be finite and >= 0");
+        }
+        match key.as_str() {
+            "abs_tol" => abs_tol = Some(f),
+            "rel_tol" => rel_tol = Some(f),
+            other => bail!("unknown output_bits key {other:?} (known \
+                            keys: abs_tol, rel_tol)"),
+        }
+    }
+    match (abs_tol, rel_tol) {
+        (Some(abs_tol), Some(rel_tol)) => {
+            Ok(OutputBits::Tolerance { abs_tol, rel_tol })
+        }
+        _ => bail!("output_bits object needs both abs_tol and rel_tol"),
     }
 }
 
@@ -178,5 +262,42 @@ mod tests {
         let v = jsonio::parse(
             r#"{"max_bench_regression": 1.5}"#).unwrap();
         assert!(TolerancePolicy::from_value(&v).is_err());
+    }
+
+    #[test]
+    fn tolerance_mode_parses_allows_and_roundtrips() {
+        let v = jsonio::parse(
+            r#"{"output_bits": {"abs_tol": 0.05, "rel_tol": 0.15}}"#)
+            .unwrap();
+        let policy = TolerancePolicy::from_value(&v).unwrap();
+        let bits = policy.output_bits;
+        assert_eq!(bits, OutputBits::Tolerance { abs_tol: 0.05,
+                                                 rel_tol: 0.15 });
+        // the band is abs + rel·|ref|
+        assert!(bits.allows(0.04, 0.0));
+        assert!(bits.allows(0.19, 1.0));
+        assert!(!bits.allows(0.21, 1.0));
+        assert!(bits.allows(0.19, -1.0)); // magnitude, not sign
+        // exact admits only zero error
+        assert!(OutputBits::Exact.allows(0.0, 3.0));
+        assert!(!OutputBits::Exact.allows(1e-9, 3.0));
+        // canonical form round-trips through jsonio byte-stably
+        let text = jsonio::to_string_pretty(&policy.to_value());
+        let back = TolerancePolicy::from_value(
+            &jsonio::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, policy);
+        assert_eq!(jsonio::to_string_pretty(&back.to_value()), text);
+    }
+
+    #[test]
+    fn malformed_tolerance_objects_are_rejected() {
+        for bad in [r#"{"output_bits": {"abs_tol": 0.05}}"#,
+                    r#"{"output_bits": {"abs_tol": 0.1, "rel": 0.1}}"#,
+                    r#"{"output_bits": {"abs_tol": -0.1, "rel_tol": 0}}"#,
+                    r#"{"output_bits": {"abs_tol": true, "rel_tol": 0}}"#,
+                    r#"{"output_bits": 3}"#] {
+            let v = jsonio::parse(bad).unwrap();
+            assert!(TolerancePolicy::from_value(&v).is_err(), "{bad}");
+        }
     }
 }

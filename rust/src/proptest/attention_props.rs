@@ -68,6 +68,24 @@
 //!     into an equally-exact miss) and through a `ShardedBackend` at
 //!     shard counts {1, 3}, where sessions stick to their
 //!     consistent-hash owner.
+//! 14. **Quantized-cache mechanism contract** — with `quant != Off`,
+//!     every post-prefill hit step is bit-identical to an oracle that
+//!     re-quantizes the raw history *by hand* (one `QuantSeg` per step
+//!     boundary, exactly mirroring the panel store) and solves over
+//!     the dequantized panels: quantization is deterministic, so the
+//!     only thing it may change is the panel bytes, never the solve.
+//! 15. **Quantized tolerance contract** — quantized decode stays
+//!     within the declared `OutputBits` tolerance of the exact f32
+//!     recompute across panel families × eviction points × worker
+//!     counts, with per-family bands (smooth families tight; the
+//!     discrete families bounded by the convex-hull envelope of the
+//!     value rows), and collapses to `OutputBits::Exact` on every
+//!     miss step and whenever `quant` is `Off` (the default).
+//! 16. **Sharded quantization invariance** — a quantized decode
+//!     session through a `ShardedBackend` (workers running i8 caches)
+//!     is bit-for-bit the single-host quantized `CachingBackend`
+//!     trajectory at shard counts {1, 3}: sharding cannot move bits
+//!     even in the tolerance-gated storage mode.
 
 use std::sync::Arc;
 use std::time::Duration;
@@ -75,18 +93,21 @@ use std::time::Duration;
 use crate::attention::{clustered_attention_matrix,
                        improved_clustered_attention_matrix, kernel_by_name,
                        kernel_for, solve_batch_seq, AttentionBackend,
-                       AttnBatch, AttnProblem, CacheRef, CachingBackend,
-                       KvCache, KvCacheOptions, NativeBackend, SeqOutcome,
-                       SessionRef, ShardedBackend, Variant};
+                       AttnBatch, AttnProblem, CacheQuant, CacheRef,
+                       CachingBackend, KvCache, KvCacheOptions,
+                       NativeBackend, SeqOutcome, SessionRef, ShardOptions,
+                       ShardedBackend, Variant};
 use crate::clustering::{cluster_queries, Clustering};
 use crate::coordinator::{pad_batch, replay_blocking, synthetic_decode_trace,
                          synthetic_trace, unpadded_reference, valid_rows,
                          Bucket, GatewayOptions, GatewayShape,
                          ServingGateway};
 use crate::exec::{ExecCtx, WorkerPool};
+use crate::oracle::OutputBits;
 use crate::prng::{session_seed, slice_stream, Xoshiro256};
 use crate::proptest::forall;
 use crate::tensor::batch::BatchMatrix;
+use crate::tensor::quant::QuantPanel;
 use crate::tensor::{gemm, Matrix};
 
 /// Small-hyperparameter instances of every kernel family.  The LSH
@@ -101,6 +122,8 @@ fn all_variants() -> Vec<Variant> {
                                      topk: 8 },
         Variant::OracleTop { topk: 8 },
         Variant::Lsh { rounds: 2, chunk: 16 },
+        // topk 8 < 2·chunk: the Hamming pre-filter genuinely prunes
+        Variant::LshHam { rounds: 2, chunk: 16, topk: 8 },
         Variant::Linear,
     ]
 }
@@ -382,12 +405,13 @@ fn decode_prefix(t: &BatchMatrix, len: usize) -> BatchMatrix {
 /// the concatenated per-head span rows and the outcome.
 #[allow(clippy::too_many_arguments)]
 fn run_session(kernel: &str, growth: f64, capacity: usize,
-               q: &BatchMatrix, k: &BatchMatrix, v: &BatchMatrix,
-               lens: &[usize], workers: usize, seed: u64, sid: u64,
-               causal: bool) -> Vec<(Vec<f32>, SeqOutcome)> {
+               quant: CacheQuant, q: &BatchMatrix, k: &BatchMatrix,
+               v: &BatchMatrix, lens: &[usize], workers: usize, seed: u64,
+               sid: u64, causal: bool) -> Vec<(Vec<f32>, SeqOutcome)> {
     let cache = Arc::new(KvCache::new(KvCacheOptions {
         capacity_rows: capacity,
         growth,
+        quant,
     }));
     let backend = CachingBackend::native(kernel, cache).expect("kernel");
     let ctx = if workers <= 1 {
@@ -503,8 +527,9 @@ fn prop_cached_decode_is_bit_identical_to_full_recompute() {
         |case: &DecodeCase| {
             let (q, k, v, lens, capacity, workers, seed) = case;
             for kernel in families {
-                let steps = run_session(kernel, 1.0, *capacity, q, k, v,
-                                        lens, *workers, *seed, 77, false);
+                let steps = run_session(kernel, 1.0, *capacity,
+                                        CacheQuant::Off, q, k, v, lens,
+                                        *workers, *seed, 77, false);
                 let mut span = 0usize;
                 for (i, ((rows, outcome), &len)) in
                     steps.iter().zip(lens).enumerate()
@@ -569,10 +594,12 @@ fn prop_recluster_threshold_keeps_exact_steps_exact() {
         },
         |(q, k, v, lens, growth, seed)| {
             for kernel in ["clustered-3", "i-clustered-3"] {
-                let a = run_session(kernel, *growth, usize::MAX, q, k, v,
-                                    lens, 1, *seed, 5, false);
-                let b = run_session(kernel, *growth, usize::MAX, q, k, v,
-                                    lens, 3, *seed, 5, false);
+                let a = run_session(kernel, *growth, usize::MAX,
+                                    CacheQuant::Off, q, k, v, lens, 1,
+                                    *seed, 5, false);
+                let b = run_session(kernel, *growth, usize::MAX,
+                                    CacheQuant::Off, q, k, v, lens, 3,
+                                    *seed, 5, false);
                 let mut span = 0usize;
                 let mut saw_reuse = false;
                 for (i, (((rows_a, out_a), (rows_b, out_b)), &len)) in
@@ -1156,8 +1183,9 @@ fn prop_recurrent_decode_matches_the_full_causal_recompute() {
         |case: &DecodeCase| {
             let (q, k, v, lens, capacity, workers, seed) = case;
             // single-host CachingBackend across the eviction point
-            let steps = run_session("linear", 1.0, *capacity, q, k, v,
-                                    lens, *workers, *seed, 91, true);
+            let steps = run_session("linear", 1.0, *capacity,
+                                    CacheQuant::Off, q, k, v, lens,
+                                    *workers, *seed, 91, true);
             let mut span = 0usize;
             for (i, ((rows, outcome), &len)) in
                 steps.iter().zip(lens).enumerate()
@@ -1229,6 +1257,334 @@ fn prop_recurrent_decode_matches_the_full_causal_recompute() {
                             rep[0]));
                     }
                     span = len;
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Owned copy of rows `lo..hi` of head `h` — the per-head matrix the
+/// cache stores for one populate/append segment.
+fn head_rows(t: &BatchMatrix, h: usize, lo: usize, hi: usize) -> Matrix {
+    Matrix::from_vec(hi - lo, t.cols,
+                     t.view(h).data[lo * t.cols..hi * t.cols].to_vec())
+}
+
+/// The hand-built quantized-history oracle input: re-quantize the raw
+/// history exactly the way the unbounded panel store does — one
+/// [`QuantPanel`] segment per step boundary (the prefill populate,
+/// then one append per decode step up to `lens[upto]`) — and hand back
+/// the dequantized f32 tensor a hit's solve actually sees.
+fn quant_history(t: &BatchMatrix, lens: &[usize], upto: usize,
+                 per_head: bool) -> BatchMatrix {
+    let len = lens[upto];
+    let mut out = BatchMatrix::zeros(1, t.heads, len, t.cols);
+    for h in 0..t.heads {
+        let mut panel =
+            QuantPanel::from_matrix(&head_rows(t, h, 0, lens[0]),
+                                    per_head);
+        for w in lens[..=upto].windows(2) {
+            panel.append(&head_rows(t, h, w[0], w[1]));
+        }
+        out.slice_mut(h).copy_from_slice(&panel.to_matrix().data);
+    }
+    out
+}
+
+/// One quantized-decode case: history tensors, step lens, workers,
+/// batch seed.
+type QuantCase = (BatchMatrix, BatchMatrix, BatchMatrix, Vec<usize>,
+                  usize, u64);
+
+#[test]
+fn prop_quantized_decode_matches_the_hand_quantized_history_oracle() {
+    // Property 14.  Quantization is deterministic, so the i8 cache may
+    // only change the panel *bytes*, never the solve: every
+    // post-prefill hit step must be bit-identical to an oracle that
+    // re-quantizes the raw history by hand (one segment per step
+    // boundary, mirroring the store) and runs the full unpadded solve
+    // over the dequantized panels on the session streams.  The prefill
+    // miss computes on the raw f32 request tensors and stays bit-exact
+    // even with quantization on.
+    let families = ["full", "shared-full", "oracle-top-4", "clustered-3",
+                    "i-clustered-3", "lsh-1", "lsh-ham-1"];
+    forall(
+        "quantized decode ≡ hand-quantized-history oracle, all panel \
+         families × i8 modes × worker counts",
+        0xDEC0_DE04,
+        3,
+        |rng| {
+            let heads = 1 + rng.below(2); // 1..=2
+            let prefill = 6 + rng.below(11); // 6..=16
+            let steps = 1 + rng.below(3); // 1..=3
+            let mut lens = vec![prefill];
+            for _ in 0..steps {
+                lens.push(lens.last().unwrap() + 1 + rng.below(5));
+            }
+            let total = *lens.last().unwrap();
+            let q = BatchMatrix::randn(1, heads, total, 8, rng);
+            let k = BatchMatrix::randn(1, heads, total, 8, rng);
+            let v = BatchMatrix::randn(1, heads, total, 8, rng);
+            let workers = 1 + rng.below(3); // 1..=3
+            (q, k, v, lens, workers, rng.next_u64())
+        },
+        |case: &QuantCase| {
+            let (q, k, v, lens, workers, seed) = case;
+            for kernel in families {
+                for (quant, per_head) in
+                    [(CacheQuant::I8PerHead, true),
+                     (CacheQuant::I8PerPanel, false)]
+                {
+                    let steps = run_session(kernel, 1.0, usize::MAX,
+                                            quant, q, k, v, lens,
+                                            *workers, *seed, 41, false);
+                    let mut span = 0usize;
+                    for (i, ((rows, outcome), &len)) in
+                        steps.iter().zip(lens).enumerate()
+                    {
+                        let want = if i == 0 {
+                            recompute_span(kernel, q, k, v, len, 0,
+                                           *seed, 41)
+                        } else {
+                            let qd = quant_history(q, lens, i, per_head);
+                            let kd = quant_history(k, lens, i, per_head);
+                            let vd = quant_history(v, lens, i, per_head);
+                            recompute_span(kernel, &qd, &kd, &vd, len,
+                                           span, *seed, 41)
+                        };
+                        if !same_bits(rows, &want) {
+                            return Err(format!(
+                                "{kernel} ({quant:?}): step {i} (span \
+                                 {span}..{len}, workers {workers}) \
+                                 diverged from the hand-quantized \
+                                 history oracle"));
+                        }
+                        let hit = matches!(outcome,
+                                           SeqOutcome::Hit { .. });
+                        if hit != (i > 0) {
+                            return Err(format!(
+                                "{kernel} ({quant:?}): step {i} \
+                                 reported {outcome:?}"));
+                        }
+                        span = len;
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// One tolerance case: history tensors, step lens, the mid-session
+/// eviction coin, workers, batch seed.
+type QuantTolCase = (BatchMatrix, BatchMatrix, BatchMatrix, Vec<usize>,
+                     bool, usize, u64);
+
+#[test]
+fn prop_quantized_decode_stays_within_the_declared_tolerance() {
+    // Property 15.  The tolerance the policy layer declares
+    // (`OutputBits`) actually holds: quantized hit steps stay within a
+    // per-family band of the exact f32 recompute, and everything else
+    // — every miss step (computed on raw request tensors) and every
+    // step with quant Off — collapses to `OutputBits::Exact`.
+    //
+    // Band rationale: the smooth families (full, shared-full, linear)
+    // move continuously with the ≤ scale/2 input perturbation, so a
+    // small fixed band suffices.  The discrete families (clustered,
+    // i-clustered, oracle-top, lsh, lsh-ham) can flip an assignment /
+    // top-k pick / bucket under the same perturbation, swapping one
+    // near-convex combination of value rows for another — the sound
+    // envelope is the convex-hull diameter `2·max|V|` (both outputs
+    // live in `[-max|V|, max|V|]` elementwise), plus slack for the
+    // improved-clustered path's ~1e-6 negative mass.
+    let smooth = ["full", "shared-full", "linear"];
+    let discrete = ["clustered-3", "i-clustered-3", "oracle-top-4",
+                    "lsh-1", "lsh-ham-1"];
+    forall(
+        "quantized decode within declared OutputBits of the exact \
+         recompute; Exact on misses and with quant Off",
+        0xDEC0_DE05,
+        3,
+        |rng| {
+            let heads = 1 + rng.below(2); // 1..=2
+            let prefill = 8 + rng.below(9); // 8..=16
+            let steps = 1 + rng.below(2); // 1..=2
+            let mut lens = vec![prefill];
+            for _ in 0..steps {
+                lens.push(lens.last().unwrap() + 1 + rng.below(5));
+            }
+            let total = *lens.last().unwrap();
+            let q = BatchMatrix::randn(1, heads, total, 8, rng);
+            let k = BatchMatrix::randn(1, heads, total, 8, rng);
+            let v = BatchMatrix::randn(1, heads, total, 8, rng);
+            // eviction point: a capacity of exactly the prefill's
+            // quantized charge ⌈prefill/4⌉ lets the populate land but
+            // makes the first append overflow — the hit that appends
+            // is tolerance-gated, every later step misses and must be
+            // bit-exact again
+            let evict = rng.coin(0.5);
+            let workers = 1 + rng.below(3); // 1..=3
+            (q, k, v, lens, evict, workers, rng.next_u64())
+        },
+        |case: &QuantTolCase| {
+            let (q, k, v, lens, evict, workers, seed) = case;
+            let vmax = f64::from(
+                (0..v.slices())
+                    .flat_map(|s| v.view(s).data.iter())
+                    .fold(0.0f32, |a, &x| f32::max(a, x.abs())));
+            let tight = OutputBits::Tolerance { abs_tol: 0.3,
+                                                rel_tol: 0.3 };
+            let hull = OutputBits::Tolerance {
+                abs_tol: 2.0 * vmax + 0.05,
+                rel_tol: 0.05,
+            };
+            let banded = smooth
+                .iter()
+                .map(|&f| (f, tight))
+                .chain(discrete.iter().map(|&f| (f, hull)));
+            let capacity = if *evict {
+                lens[0].div_ceil(4)
+            } else {
+                usize::MAX
+            };
+            for (kernel, band) in banded {
+                for quant in [CacheQuant::Off, CacheQuant::I8PerHead,
+                              CacheQuant::I8PerPanel]
+                {
+                    let steps = run_session(kernel, 1.0, capacity, quant,
+                                            q, k, v, lens, *workers,
+                                            *seed, 57, false);
+                    let mut span = 0usize;
+                    for (i, ((rows, outcome), &len)) in
+                        steps.iter().zip(lens).enumerate()
+                    {
+                        if !evict
+                            && i > 0
+                            && !matches!(outcome, SeqOutcome::Hit { .. })
+                        {
+                            return Err(format!(
+                                "{kernel} ({quant:?}): unbounded step \
+                                 {i} reported {outcome:?} — the \
+                                 tolerance path went unexercised"));
+                        }
+                        let want = recompute_span(kernel, q, k, v, len,
+                                                  span, *seed, 57);
+                        let exact = quant == CacheQuant::Off
+                            || matches!(outcome,
+                                        SeqOutcome::Miss { .. });
+                        let bits =
+                            if exact { OutputBits::Exact } else { band };
+                        for (j, (a, b)) in
+                            rows.iter().zip(&want).enumerate()
+                        {
+                            let err = (f64::from(*a) - f64::from(*b))
+                                .abs();
+                            if !bits.allows(err, f64::from(*b)) {
+                                return Err(format!(
+                                    "{kernel} ({quant:?}): step {i} \
+                                     element {j} err {err} vs ref {b} \
+                                     outside {bits:?} (cap {capacity}, \
+                                     workers {workers})"));
+                            }
+                        }
+                        span = len;
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// One sharded-quantization case: history tensors, step lens, the
+/// per-head-mode coin, session id, batch seed.
+type ShardQuantCase = (BatchMatrix, BatchMatrix, BatchMatrix, Vec<usize>,
+                       bool, u64, u64);
+
+#[test]
+fn prop_sharded_quantized_decode_is_bit_identical_to_single_host() {
+    // Property 16.  Deterministic quantization means sharding cannot
+    // move bits even in the tolerance-gated storage mode: the same
+    // decode session through a ShardedBackend whose workers run i8
+    // caches reproduces the single-host quantized CachingBackend
+    // trajectory — outputs *and* outcomes — at shard counts {1, 3}.
+    forall(
+        "sharded quantized decode ≡ single-host quantized cache, shard \
+         counts {1, 3}",
+        0xDEC0_DE06,
+        3,
+        |rng| {
+            let heads = 1 + rng.below(2); // 1..=2
+            let prefill = 6 + rng.below(9); // 6..=14
+            let steps = 1 + rng.below(2); // 1..=2
+            let mut lens = vec![prefill];
+            for _ in 0..steps {
+                lens.push(lens.last().unwrap() + 1 + rng.below(4));
+            }
+            let total = *lens.last().unwrap();
+            let q = BatchMatrix::randn(1, heads, total, 8, rng);
+            let k = BatchMatrix::randn(1, heads, total, 8, rng);
+            let v = BatchMatrix::randn(1, heads, total, 8, rng);
+            (q, k, v, lens, rng.coin(0.5), rng.next_u64(),
+             rng.next_u64())
+        },
+        |case: &ShardQuantCase| {
+            let (q, k, v, lens, per_head, sid, seed) = case;
+            let quant = if *per_head {
+                CacheQuant::I8PerHead
+            } else {
+                CacheQuant::I8PerPanel
+            };
+            let ctx = ExecCtx::sequential();
+            for kernel in ["full", "i-clustered-3", "lsh-ham-1"] {
+                let base = run_session(kernel, 1.0, usize::MAX, quant, q,
+                                       k, v, lens, 1, *seed, *sid,
+                                       false);
+                for shards in [1usize, 3] {
+                    let sharded = ShardedBackend::in_process_with(
+                        kernel, shards, 1,
+                        ShardOptions { cache_quant: quant,
+                                       ..ShardOptions::default() })
+                        .expect("kernel");
+                    let mut span = 0usize;
+                    for (i, &len) in lens.iter().enumerate() {
+                        let qp = decode_prefix(q, len);
+                        let kp = decode_prefix(k, len);
+                        let vp = decode_prefix(v, len);
+                        let blens = [len];
+                        let sessions = [Some(SessionRef {
+                            cache: CacheRef { session: *sid,
+                                              generation: 0 },
+                            span_start: span,
+                        })];
+                        let batch = AttnBatch::new(&qp, &kp, &vp, *seed)
+                            .with_lens(&blens)
+                            .with_sessions(&sessions);
+                        let (out, rep) =
+                            sharded.execute_with_report(&batch, &ctx);
+                        let dv = v.cols;
+                        let mut rows = Vec::new();
+                        for h in 0..q.heads {
+                            rows.extend_from_slice(
+                                &out.view(h).data[span * dv..len * dv]);
+                        }
+                        let (want, want_outcome) = &base[i];
+                        if !same_bits(&rows, want) {
+                            return Err(format!(
+                                "{kernel} ({quant:?}): {shards} shards, \
+                                 step {i} (span {span}..{len}) moved \
+                                 bits vs the single-host quantized \
+                                 cache"));
+                        }
+                        if rep[0] != *want_outcome {
+                            return Err(format!(
+                                "{kernel} ({quant:?}): {shards} shards, \
+                                 step {i} reported {:?}, single-host \
+                                 said {want_outcome:?}", rep[0]));
+                        }
+                        span = len;
+                    }
                 }
             }
             Ok(())

@@ -66,9 +66,9 @@ use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
 
-use crate::attention::sharded::{outcome_to_value, parse_hex_u64,
-                                read_f32s, write_f32s, ShardEngine,
-                                ShardRequest, SolveHeader};
+use crate::attention::sharded::{cache_stats_to_value, outcome_to_value,
+                                parse_hex_u64, read_f32s, write_f32s,
+                                ShardEngine, ShardRequest, SolveHeader};
 use crate::coordinator::{InferenceEngine, ServingGateway};
 use crate::data::asr::ctc_greedy_decode;
 use crate::jsonio::{obj, parse, Value};
@@ -271,6 +271,7 @@ fn shard_conn_loop(stream: TcpStream, engine: &Arc<ShardEngine>)
                     slice_base: hdr.slice_base,
                     lens: hdr.lens.clone(),
                     causal: hdr.causal,
+                    cache_quant: hdr.cache_quant,
                     session: hdr.session,
                 };
                 match engine.solve(&shard_req) {
@@ -285,6 +286,12 @@ fn shard_conn_loop(stream: TcpStream, engine: &Arc<ShardEngine>)
                         ];
                         if let Some(oc) = &rep.outcome {
                             fields.push(("outcome", outcome_to_value(oc)));
+                        }
+                        if let Some(c) = &rep.cache {
+                            // optional counter snapshot: plain replies
+                            // omit it and stay byte-stable
+                            fields.push(("cache",
+                                         cache_stats_to_value(c)));
                         }
                         reply_line(&mut writer, obj(fields))?;
                         write_f32s(&mut writer, &rep.out.data)?;

@@ -6,12 +6,15 @@
 //! matmul, row softmax, top-k, argsort — everything `attention/` needs.
 //! The [`batch`] submodule adds the (B, H, N, D) stacked layout the
 //! batched multi-head engine runs over; [`gemm`] is the cache-blocked,
-//! panel-packed compute core `matmul`/`matmul_nt` delegate to.
+//! panel-packed compute core `matmul`/`matmul_nt` delegate to;
+//! [`quant`] is the symmetric-i8 panel storage behind the quantized
+//! (tolerance-gated) KV-cache mode.
 
 use crate::prng::Xoshiro256;
 
 pub mod batch;
 pub mod gemm;
+pub mod quant;
 
 pub use batch::{BatchMatrix, MatrixView};
 

@@ -1,0 +1,270 @@
+//! ct-contract: tolerance-gated
+//!
+//! Symmetric i8 quantization for cached K/V panels — the storage side
+//! of the quantized KV cache ([`crate::attention::KvCache`] with
+//! `quant != Off`).
+//!
+//! ## Scaling scheme
+//!
+//! Every quantized segment stores `round(x / scale)` clamped to
+//! `[-127, 127]` as `i8`, plus one `f32` scale.  The scale is the
+//! symmetric absmax step `max|x| / 127`, chosen either per segment
+//! (*per-panel* mode: each append re-measures its own rows) or frozen
+//! at the first segment (*per-head* mode: later appends reuse the
+//! frozen scale and saturate at ±127 if they outgrow it).
+//! Dequantization is `code as f32 * scale`.  An all-zero input has
+//! `absmax == 0`; its scale is pinned to `0.0` so the round trip is
+//! exactly zero (never `0/0 = NaN`).
+//!
+//! ## Why this file is tolerance-gated
+//!
+//! The quantize→dequantize round trip is lossy (per-element error is
+//! at most `scale / 2`), so code built on these panels cannot promise
+//! the repo's bit-identity contract.  It is the first sanctioned
+//! departure: outputs computed from dequantized panels are gated by
+//! the numeric tolerance declared in `oracle/policy.rs`
+//! (`output_bits: {abs_tol, rel_tol}`) instead.  Everything here is
+//! still deterministic (same input bytes → same codes) and panic-free
+//! on the non-test paths, which is what the `tolerance-gated` lint
+//! contract continues to enforce.
+//!
+//! ## Density math
+//!
+//! An f32 panel row of `D` columns is `4·D` bytes; the same row
+//! quantized is `D` bytes plus an amortized 4-byte scale per segment —
+//! ≥4× as many live rows (and therefore sessions) per byte of budget,
+//! which is why the cache charges a quantized entry
+//! `ceil(len / 4)` rows against the same LRU budget.
+
+use std::sync::Arc;
+
+use super::Matrix;
+
+/// The symmetric i8 code range: codes live in `[-127, 127]` (−128 is
+/// unused so the range is symmetric and negation is exact).
+pub const QUANT_MAX: f32 = 127.0;
+
+/// Symmetric absmax quantization step for one slice: `max|x| / 127`,
+/// or `0.0` for an all-zero (or empty, or non-finite-free degenerate)
+/// input so dequantization reproduces exact zeros instead of NaN.
+pub fn symmetric_scale(xs: &[f32]) -> f32 {
+    let absmax = xs.iter().fold(0.0f32, |a, &x| f32::max(a, x.abs()));
+    if absmax > 0.0 && absmax.is_finite() {
+        absmax / QUANT_MAX
+    } else {
+        0.0
+    }
+}
+
+#[inline]
+fn encode(x: f32, inv: f32) -> i8 {
+    // NaN casts to 0, infinities clamp: the encoder never panics on
+    // hostile floats, it degrades to the nearest representable code
+    (x * inv).round().clamp(-QUANT_MAX, QUANT_MAX) as i8
+}
+
+/// One quantized panel segment: the i8 codes of one populate/append,
+/// with the f32 scale they were encoded under.
+#[derive(Debug)]
+pub struct QuantSeg {
+    rows: usize,
+    cols: usize,
+    scale: f32,
+    codes: Vec<i8>,
+}
+
+impl QuantSeg {
+    /// Quantize a matrix with its own symmetric absmax scale
+    /// (per-panel mode).
+    pub fn quantize(m: &Matrix) -> Self {
+        Self::quantize_with(m, symmetric_scale(&m.data))
+    }
+
+    /// Quantize a matrix under a caller-pinned scale (per-head mode:
+    /// the scale frozen at the first segment).  Values beyond
+    /// `scale · 127` saturate.
+    pub fn quantize_with(m: &Matrix, scale: f32) -> Self {
+        let inv = if scale > 0.0 { 1.0 / scale } else { 0.0 };
+        Self {
+            rows: m.rows,
+            cols: m.cols,
+            scale,
+            codes: m.data.iter().map(|&x| encode(x, inv)).collect(),
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn scale(&self) -> f32 {
+        self.scale
+    }
+
+    /// Append the dequantized f32 values (`code · scale`) to `out`.
+    pub fn dequantize_into(&self, out: &mut Vec<f32>) {
+        out.extend(self.codes.iter().map(|&c| f32::from(c) * self.scale));
+    }
+
+    /// True stored bytes: one byte per element plus the f32 scale.
+    pub fn quant_bytes(&self) -> usize {
+        self.codes.len() + std::mem::size_of::<f32>()
+    }
+}
+
+/// One head's quantized cached panel: the i8 sibling of the cache's
+/// f32 `Panel` — immutable, Arc-shared, append-only segments (one per
+/// populate/step), dequantized on solve into a plain [`Matrix`] so no
+/// kernel changes its math.
+#[derive(Debug, Clone)]
+pub struct QuantPanel {
+    rows: usize,
+    cols: usize,
+    segs: Vec<Arc<QuantSeg>>,
+    /// Per-head mode: the scale frozen at the first segment (every
+    /// later append reuses it).  `None` = per-panel mode (each segment
+    /// carries its own absmax scale).
+    frozen: Option<f32>,
+}
+
+impl QuantPanel {
+    /// Seed a quantized panel from a freshly recomputed history.
+    /// `per_head` freezes this first segment's scale for every later
+    /// append; otherwise each append re-measures its own scale.
+    pub fn from_matrix(m: &Matrix, per_head: bool) -> Self {
+        let seg = QuantSeg::quantize(m);
+        let frozen = if per_head { Some(seg.scale) } else { None };
+        Self {
+            rows: m.rows,
+            cols: m.cols,
+            segs: vec![Arc::new(seg)],
+            frozen,
+        }
+    }
+
+    /// Append a step's new rows as one fresh quantized segment (the
+    /// history segments stay shared and untouched).
+    pub fn append(&mut self, m: &Matrix) {
+        debug_assert_eq!(m.cols, self.cols, "quant panel column mismatch");
+        let seg = match self.frozen {
+            Some(s) => QuantSeg::quantize_with(m, s),
+            None => QuantSeg::quantize(m),
+        };
+        self.rows += m.rows;
+        self.segs.push(Arc::new(seg));
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Dequantize the whole panel into a contiguous f32 matrix — the
+    /// "reusable scratch" a hit's solve runs over.  Called outside the
+    /// store lock; the Arcs keep every segment alive for as long as
+    /// any snapshot does, exactly like the f32 panel path.
+    pub fn to_matrix(&self) -> Matrix {
+        let mut data = Vec::with_capacity(self.rows * self.cols);
+        for seg in &self.segs {
+            seg.dequantize_into(&mut data);
+        }
+        debug_assert_eq!(data.len(), self.rows * self.cols);
+        Matrix { rows: self.rows, cols: self.cols, data }
+    }
+
+    /// True stored bytes across all segments.
+    pub fn quant_bytes(&self) -> usize {
+        self.segs.iter().map(|s| s.quant_bytes()).fold(0, |a, b| a + b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Xoshiro256;
+
+    #[test]
+    fn round_trip_error_is_bounded_by_half_a_step() {
+        let mut rng = Xoshiro256::new(0xDEC1);
+        let m = Matrix::randn(13, 7, &mut rng);
+        let p = QuantPanel::from_matrix(&m, false);
+        let back = p.to_matrix();
+        assert_eq!((back.rows, back.cols), (13, 7));
+        let scale = symmetric_scale(&m.data);
+        assert!(scale > 0.0);
+        let bound = scale * 0.5 + scale * 1e-3;
+        for (a, b) in m.data.iter().zip(&back.data) {
+            assert!((a - b).abs() <= bound,
+                    "{a} vs {b} beyond half-step {bound}");
+        }
+    }
+
+    #[test]
+    fn all_zero_panel_round_trips_exactly() {
+        // absmax == 0 pins the scale to 0.0: no NaN, exact zeros back
+        let m = Matrix::zeros(5, 4);
+        assert_eq!(symmetric_scale(&m.data), 0.0);
+        for per_head in [false, true] {
+            let mut p = QuantPanel::from_matrix(&m, per_head);
+            p.append(&Matrix::zeros(2, 4));
+            let back = p.to_matrix();
+            assert!(back.bit_identical(&Matrix::zeros(7, 4)),
+                    "per_head={per_head}");
+        }
+    }
+
+    #[test]
+    fn per_head_mode_freezes_the_first_scale_and_saturates() {
+        let m0 = Matrix::from_vec(1, 2, vec![1.0, -1.0]);
+        let mut p = QuantPanel::from_matrix(&m0, true);
+        // the frozen step is 1/127; rows appended later that outgrow
+        // it clamp at ±127 · (1/127) = ±1
+        p.append(&Matrix::from_vec(1, 2, vec![50.0, -50.0]));
+        let back = p.to_matrix();
+        assert_eq!(back.data, vec![1.0, -1.0, 1.0, -1.0]);
+    }
+
+    #[test]
+    fn per_panel_mode_rescales_every_append() {
+        let m0 = Matrix::from_vec(1, 2, vec![1.0, -1.0]);
+        let mut p = QuantPanel::from_matrix(&m0, false);
+        p.append(&Matrix::from_vec(1, 2, vec![50.0, -50.0]));
+        let back = p.to_matrix();
+        // each segment used its own absmax: large rows survive
+        assert_eq!(back.data, vec![1.0, -1.0, 50.0, -50.0]);
+    }
+
+    #[test]
+    fn quantization_is_deterministic() {
+        let mut rng = Xoshiro256::new(0xDEC2);
+        let m = Matrix::randn(9, 5, &mut rng);
+        let a = QuantPanel::from_matrix(&m, false).to_matrix();
+        let b = QuantPanel::from_matrix(&m, false).to_matrix();
+        assert!(a.bit_identical(&b));
+    }
+
+    #[test]
+    fn stored_bytes_are_one_per_element_plus_scales() {
+        let mut rng = Xoshiro256::new(0xDEC3);
+        let m = Matrix::randn(8, 6, &mut rng);
+        let mut p = QuantPanel::from_matrix(&m, false);
+        p.append(&Matrix::randn(2, 6, &mut rng));
+        // 10 rows × 6 cols bytes + two 4-byte segment scales
+        assert_eq!(p.quant_bytes(), 60 + 8);
+        // ~4× denser than the f32 panel (240 bytes of rows)
+        assert!(4 * p.quant_bytes() < 2 * 10 * 6 * 4);
+    }
+
+    #[test]
+    fn hostile_floats_degrade_instead_of_panicking() {
+        let m = Matrix::from_vec(1, 3,
+                                 vec![f32::NAN, f32::INFINITY, 1.0]);
+        // non-finite absmax pins the scale to 0.0: all codes decode to
+        // exact zero rather than poisoning the panel with NaN
+        let back = QuantPanel::from_matrix(&m, false).to_matrix();
+        assert!(back.data.iter().all(|x| x.is_finite()));
+    }
+}
